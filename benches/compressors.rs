@@ -1,0 +1,53 @@
+//! Micro-benchmarks: compressor selection + application over large vectors.
+//!
+//! Perf targets (EXPERIMENTS.md §Perf, L3): GRBS selection must be O(B)
+//! (independent of d) and applying a selection O(d/R); the paper's
+//! "less computation overhead" claim for GRBS vs top-k is quantified here.
+
+use cser::compressor::{Compressor, Ctx, Grbs, RandK, TopK};
+use cser::util::bench::{black_box, Bench};
+use cser::util::rng::Rng;
+
+fn main() {
+    let d = 1 << 22; // 4M params, WRN-scale order of magnitude
+    let mut rng = Rng::new(1);
+    let mut v = vec![0.0f32; d];
+    rng.fill_normal(&mut v, 1.0);
+    let ctx = Ctx { round: 7, worker: 0 };
+    let mut b = Bench::new();
+
+    let grbs = Grbs::new(256.0, d / 1024, 3);
+    let topk = TopK::new(256.0);
+    let randk = RandK::new(256.0);
+
+    let mut round = 0u64;
+    b.run("grbs_select_d4M_R256", || {
+        round += 1;
+        black_box(grbs.select(Ctx { round, worker: 0 }, &v));
+    });
+    b.run("randk_select_d4M_R256", || {
+        round += 1;
+        black_box(randk.select(Ctx { round, worker: 0 }, &v));
+    });
+    b.run("topk_select_d4M_R256", || {
+        black_box(topk.select(ctx, &v));
+    });
+
+    let sel = grbs.select(ctx, &v);
+    let mut kept = vec![0.0f32; d];
+    b.run("grbs_apply_d4M_R256", || {
+        sel.apply(&v, &mut kept);
+        black_box(kept[0]);
+    });
+
+    let sel_dense = Grbs::new(2.0, d / 1024, 3).select(ctx, &v);
+    b.run("grbs_apply_d4M_R2", || {
+        sel_dense.apply(&v, &mut kept);
+        black_box(kept[0]);
+    });
+
+    // headline ratio: GRBS selection vs top-k selection cost
+    let g = b.results.iter().find(|r| r.name.starts_with("grbs_select")).unwrap().median_ns;
+    let t = b.results.iter().find(|r| r.name.starts_with("topk_select")).unwrap().median_ns;
+    println!("\ntopk/grbs selection cost ratio: {:.0}x (paper: GRBS has 'less computation overhead')", t / g);
+}

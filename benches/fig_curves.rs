@@ -1,0 +1,66 @@
+//! Bench target regenerating the per-epoch curve figures:
+//! Figures 1/3 (CIFAR test-acc vs epoch), 6 (CIFAR train-loss vs epoch),
+//! 2/7 (ImageNet test-acc vs epoch), 10 (ImageNet train-loss vs epoch),
+//! at R_C ∈ {32, 256, 1024}, plus (same runs) the time/bits tables and
+//! speedups of Figures 4/5/8/9.
+//!
+//! Protocol note (paper §5.2): ImageNet configurations are NOT re-tuned —
+//! the lrs tuned on the (cheap) CIFAR suite are transferred.
+//!
+//! Full run: `cargo bench --bench fig_curves`; smoke: `-- --quick`;
+//! one suite only: `-- --suite cifar`.
+
+use cser::config::{table3_for, Suite};
+use cser::harness::{curves, timecomm, tune_lr};
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let only: Option<String> = args
+        .iter()
+        .position(|a| a == "--suite")
+        .and_then(|i| args.get(i + 1).cloned());
+
+    let suites: Vec<Suite> = match only.as_deref() {
+        Some(s) => vec![Suite::by_name(s).expect("unknown suite")],
+        None => vec![Suite::cifar(), Suite::imagenet()],
+    };
+    let cifar = Suite::cifar();
+    for suite in suites {
+        for rc in curves::FIGURE_RATIOS {
+            let t0 = std::time::Instant::now();
+            // transfer lrs from the cheap suite when running the expensive one
+            let tuned: Option<Vec<(String, f64)>> = if suite.name == "imagenet" {
+                Some(
+                    ["EF-SGD", "QSparse", "CSEA", "CSER", "CSER-PL"]
+                        .iter()
+                        .filter_map(|fam| {
+                            table3_for(fam, rc)
+                                .map(|spec| (fam.to_string(), tune_lr(&cifar, &spec, true)))
+                        })
+                        .collect(),
+                )
+            } else {
+                None
+            };
+            let set = curves::curves_at(&suite, rc, quick, tuned.as_deref());
+            println!("{}", set.render());
+            // train-loss series (figures 6/10)
+            println!("-- train loss by epoch --");
+            for r in &set.runs {
+                let series: Vec<String> = r
+                    .points
+                    .iter()
+                    .step_by((r.points.len() / 8).max(1))
+                    .map(|p| format!("{:.2}", p.train_loss))
+                    .collect();
+                println!("{:<10} {}", r.optimizer, series.join(" "));
+            }
+            println!("{}", timecomm::render_timecomm(&set));
+            let sp = timecomm::speedups(&set, 0.98);
+            println!("{}", timecomm::render_speedups(&sp, suite.paper_speedup));
+            println!("[{} rc={rc}] elapsed {:.1}s\n", suite.name, t0.elapsed().as_secs_f64());
+            let _ = set.write();
+        }
+    }
+}

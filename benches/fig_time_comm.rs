@@ -1,0 +1,23 @@
+//! Bench target regenerating the time/communication figures:
+//! Figures 4/8 (test-acc vs simulated training time) and 5/9 (test-acc vs
+//! communicated bits), plus the §5.3 headline time-to-accuracy speedups
+//! (~10x CIFAR-100, ~4.5x ImageNet).
+//!
+//! Defaults to reduced runs (fig_curves is the full regenerator of the
+//! same cells); pass `-- --full` for full-length runs.
+
+use cser::config::Suite;
+use cser::harness::{curves, timecomm};
+
+fn main() {
+    let quick = !std::env::args().any(|a| a == "--full");
+    for suite in [Suite::cifar(), Suite::imagenet()] {
+        for rc in curves::FIGURE_RATIOS {
+            let set = curves::curves_at(&suite, rc, quick, None);
+            println!("{}", timecomm::render_timecomm(&set));
+            let sp = timecomm::speedups(&set, 0.98);
+            println!("{}", timecomm::render_speedups(&sp, suite.paper_speedup));
+            let _ = set.write();
+        }
+    }
+}

@@ -1,0 +1,48 @@
+//! Micro-benchmarks: one full optimizer step per algorithm at WRN-scale d.
+//!
+//! This is the L3 hot path the paper's wall-clock claims depend on: with the
+//! gradient given, the optimizer step must be bandwidth-bound elementwise
+//! work (O(n·d)) plus the O(n·d/R) sync — never more.  Divergence between
+//! CSER and CSER implementation II here quantifies the memory-traffic cost
+//! of the e_i bookkeeping (Appendix A.4).
+
+use cser::config::OptSpec;
+use cser::util::bench::{black_box, Bench};
+use cser::util::rng::Rng;
+
+fn main() {
+    let d = 1 << 20; // 1M params per step benchmark
+    let n = 8;
+    let mut rng = Rng::new(3);
+    let init = vec![0.0f32; d];
+    let grads: Vec<Vec<f32>> = (0..n)
+        .map(|_| {
+            let mut g = vec![0.0f32; d];
+            rng.fill_normal(&mut g, 1.0);
+            g
+        })
+        .collect();
+
+    let mut b = Bench::new();
+    for (name, spec) in [
+        ("sgd", OptSpec::Sgd),
+        ("ef_sgd_R256", OptSpec::EfSgd { rc1: 256.0 }),
+        ("qsparse_R256", OptSpec::Qsparse { rc1: 128.0, h: 2 }),
+        ("cser_R256", OptSpec::Cser { rc1: 16.0, rc2: 512.0, h: 32 }),
+        ("cser2_R256", OptSpec::Cser2 { rc1: 16.0, rc2: 512.0, h: 32 }),
+        ("cser_pl_R256", OptSpec::CserPl { rc1: 16.0, h: 16 }),
+        ("csea_R256", OptSpec::Csea { rc1: 256.0 }),
+    ] {
+        let mut opt = spec.build(&init, n, 0.9, 7);
+        b.run(&format!("step_{name}_n8_d1M"), || {
+            black_box(opt.step(&grads, 0.01));
+        });
+    }
+
+    // per-element cost summary
+    println!();
+    for r in &b.results {
+        let per = r.median_ns / (n as f64 * d as f64);
+        println!("{:<28} {:.3} ns per worker-element", r.name, per);
+    }
+}

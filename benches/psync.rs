@@ -1,0 +1,52 @@
+//! Micro-benchmarks: PSync rounds (the communication-path hot spot).
+//!
+//! Perf target (EXPERIMENTS.md §Perf, L3): the GRBS fast path must scale
+//! with the *selected* volume O(n·d/R), not O(n·d); at R = 256 a PSync
+//! round over 8 workers × 4M params should sit well under a millisecond.
+
+use cser::collective::psync;
+use cser::compressor::{Grbs, RandK};
+use cser::util::bench::{black_box, Bench};
+use cser::util::rng::Rng;
+
+fn main() {
+    let d = 1 << 22;
+    let n = 8;
+    let mut rng = Rng::new(2);
+    let base: Vec<Vec<f32>> = (0..n)
+        .map(|_| {
+            let mut v = vec![0.0f32; d];
+            rng.fill_normal(&mut v, 1.0);
+            v
+        })
+        .collect();
+
+    let mut b = Bench::new();
+    let mut round = 0u64;
+
+    for r in [16.0, 256.0, 1024.0] {
+        let c = Grbs::new(r, d / 1024, 5);
+        let mut vs = base.clone();
+        b.run(&format!("psync_grbs_n8_d4M_R{r}"), || {
+            round += 1;
+            black_box(psync(&mut vs, None, &c, round));
+        });
+    }
+
+    // generic (per-worker support) path for contrast
+    let c = RandK::new(1024.0);
+    let mut vs = base.clone();
+    b.run("psync_randk_n8_d4M_R1024", || {
+        round += 1;
+        black_box(psync(&mut vs, None, &c, round));
+    });
+
+    // residual-tracking variant used by CSER implementation I
+    let c = Grbs::new(256.0, d / 1024, 5);
+    let mut vs = base.clone();
+    let mut res: Vec<Vec<f32>> = vec![vec![0.0; d]; n];
+    b.run("psync_grbs_with_residuals_R256", || {
+        round += 1;
+        black_box(psync(&mut vs, Some(&mut res), &c, round));
+    });
+}

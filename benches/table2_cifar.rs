@@ -1,0 +1,26 @@
+//! Bench target regenerating paper Table 2 (CIFAR-100 substitute).
+//!
+//! `cargo bench --bench table2_cifar` prints the full table (SGD, EF-SGD,
+//! QSparse-local-SGD, CSER at R_C ∈ {16..1024}, Table 3 configs, 3 seeds)
+//! and the shape verdict.  Pass `-- --quick` for a reduced smoke run.
+
+use cser::config::Suite;
+use cser::harness::sweep::SweepCfg;
+use cser::harness::tables;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let suite = Suite::cifar();
+    let cfg = SweepCfg {
+        seeds: if quick { 1 } else { 3 },
+        quick,
+        threads: cser::util::pool::default_threads(),
+    };
+    let t0 = std::time::Instant::now();
+    let t = tables::run_table(&suite, &tables::TABLE2_FAMILIES, &tables::TABLE2_RATIOS, &cfg);
+    println!("\n=== Table 2 (CIFAR-100 substitute) ===");
+    println!("{}", t.render(&tables::TABLE2_FAMILIES, &tables::TABLE2_RATIOS));
+    println!("{}", t.shape_report());
+    println!("elapsed {:.1}s", t0.elapsed().as_secs_f64());
+    let _ = t.write("bench_table2_cifar");
+}

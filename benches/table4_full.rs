@@ -1,0 +1,25 @@
+//! Bench target regenerating paper Table 4 (Appendix D: extended table with
+//! CSEA and CSER-PL and small ratios R_C ∈ {2..1024}).
+//!
+//! `cargo bench --bench table4_full` — pass `-- --quick` for a smoke run.
+
+use cser::config::Suite;
+use cser::harness::sweep::SweepCfg;
+use cser::harness::tables;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let suite = Suite::cifar();
+    let cfg = SweepCfg {
+        seeds: if quick { 1 } else { 2 },
+        quick,
+        threads: cser::util::pool::default_threads(),
+    };
+    let t0 = std::time::Instant::now();
+    let t = tables::run_table(&suite, &tables::TABLE4_FAMILIES, &tables::TABLE4_RATIOS, &cfg);
+    println!("\n=== Table 4 (extended, CIFAR-100 substitute) ===");
+    println!("{}", t.render(&tables::TABLE4_FAMILIES, &tables::TABLE4_RATIOS));
+    println!("{}", t.shape_report());
+    println!("elapsed {:.1}s", t0.elapsed().as_secs_f64());
+    let _ = t.write("bench_table4_cifar");
+}

@@ -1,0 +1,27 @@
+//! CIFAR-100-substitute compression sweep (paper Table 2, reduced).
+//!
+//! Runs SGD, EF-SGD, QSparse-local-SGD and CSER at R_C ∈ {32, 256, 1024}
+//! with the paper's Table 3 compressor configurations on the synthetic
+//! 100-class workload, and prints a Table-2-style summary plus the shape
+//! verdict (does CSER sustain more compression than the baselines?).
+//!
+//! The full table is `cser table2`; this example keeps runtime ~ minutes.
+//!
+//! Run with:  cargo run --release --example cifar100_sweep
+
+use cser::config::Suite;
+use cser::harness::sweep::SweepCfg;
+use cser::harness::tables;
+
+fn main() {
+    let suite = Suite::cifar();
+    let cfg = SweepCfg { seeds: 2, quick: false, threads: cser::util::pool::default_threads() };
+    let ratios = [32usize, 256, 1024];
+    let fams = ["EF-SGD", "QSparse", "CSER"];
+    let t = tables::run_table(&suite, &fams, &ratios, &cfg);
+    println!("{}", t.render(&fams, &ratios));
+    println!("{}", t.shape_report());
+    if let Ok(p) = t.write("example_cifar100_sweep") {
+        println!("records -> {p}");
+    }
+}

@@ -1,0 +1,32 @@
+//! Budget-split ablation (paper §4 Remark 1 + our ABL experiment).
+//!
+//! At a fixed overall compression ratio, CSER can spend the budget on the
+//! gradient path (C2) or the model/error path (C1, H).  The paper's Remark 1
+//! example shows the balanced split has a strictly smaller error constant.
+//! This example sweeps the splits at R_C = 128 on the CIFAR substitute,
+//! prints the theoretical constant next to the measured accuracy, and runs
+//! the GRBS global-seed ablation and the Lemma-3 H-scaling check.
+//!
+//! Run with:  cargo run --release --example comm_budget
+
+use cser::config::Suite;
+use cser::harness::ablation;
+
+fn main() {
+    let suite = Suite::cifar();
+    println!("theory: error constant C(δ1, δ2, H) = [4(1-δ1)/δ1² + 1]·2(1-δ2)·H²\n");
+    let cells = ablation::budget_split(&suite, 128, false);
+    println!("{}", ablation::render_budget(&cells));
+
+    let (grbs, pw) = ablation::global_seed_ablation(&suite, false);
+    println!(
+        "global-seed ablation @R=8,H=8: GRBS {:.2}%  vs per-worker random blocks {:.2}%",
+        grbs * 100.0,
+        pw * 100.0
+    );
+
+    println!("\nLemma-3 H-scaling on the quadratic (E||e||² entering reset, should grow ~H²):");
+    for (h, floor) in ablation::h_scaling_quadratic(&[2, 4, 8, 16, 32], 2000) {
+        println!("  H={h:<4} {floor:.4e}");
+    }
+}

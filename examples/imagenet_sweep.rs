@@ -1,0 +1,35 @@
+//! ImageNet-substitute curves (paper Figures 2/8/9, reduced).
+//!
+//! Mirrors the paper's §5.2 protocol: configurations are NOT re-tuned on the
+//! expensive suite — the learning rates tuned on the CIFAR substitute are
+//! transferred.  Prints accuracy-vs-epoch curves, the simulated-time and
+//! communication tables, and the headline time-to-accuracy speedup
+//! (paper: ~4.5x on ImageNet at matched accuracy).
+//!
+//! Run with:  cargo run --release --example imagenet_sweep
+
+use cser::config::Suite;
+use cser::harness::{curves, timecomm, tune_lr};
+
+fn main() {
+    let cifar = Suite::cifar();
+    let imagenet = Suite::imagenet();
+    for rc in [256usize] {
+        // transfer lrs tuned on the cheap suite (paper protocol)
+        let tuned: Vec<(String, f64)> = ["EF-SGD", "QSparse", "CSEA", "CSER", "CSER-PL"]
+            .iter()
+            .filter_map(|fam| {
+                cser::config::table3_for(fam, rc)
+                    .map(|spec| (fam.to_string(), tune_lr(&cifar, &spec, true)))
+            })
+            .collect();
+        let set = curves::curves_at(&imagenet, rc, false, Some(&tuned));
+        println!("{}", set.render());
+        println!("{}", timecomm::render_timecomm(&set));
+        let sp = timecomm::speedups(&set, 0.98);
+        println!("{}", timecomm::render_speedups(&sp, imagenet.paper_speedup));
+        if let Ok(p) = set.write() {
+            println!("records -> {p}");
+        }
+    }
+}

@@ -1,0 +1,156 @@
+"""AOT pipeline: lower the L2/L1 computations to HLO text for the Rust runtime.
+
+Interchange format is HLO TEXT, not a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (what the
+published `xla` 0.1.6 crate links) rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs, per model preset <cfg> (default: tiny, tiny_pallas, small):
+
+    artifacts/train_step_<cfg>.hlo.txt   (flat[P], tok[B,S]i32, tgt[B,S]i32)
+                                         -> (loss f32[], grad f32[P])
+    artifacts/eval_loss_<cfg>.hlo.txt    same inputs -> loss f32[]
+    artifacts/init_<cfg>.bin             little-endian f32 init params
+
+plus the standalone Layer-1 kernel artifacts (runnable from Rust as an
+alternate compute path and cross-checked against the Rust implementations):
+
+    artifacts/fused_update_<d>.hlo.txt   (eta[1], x[d], e[d], g[d], r[d])
+                                         -> (x'[d], e'[d])
+    artifacts/block_mask_<d>_<bs>.hlo.txt (v[d], mask[B] f32) -> (kept, resid)
+
+and artifacts/manifest.json describing all of the above for the Rust side.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts \
+            [--configs tiny,small] [--kernel-d 65536] [--block-size 1024]
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels.fused_update import fused_update
+from .kernels.grbs import block_mask
+
+BATCH = {"tiny": 4, "tiny_pallas": 4, "small": 8, "medium": 8, "base": 8}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _write(path: str, text: str) -> None:
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text)/1e6:.2f} MB)")
+
+
+def emit_model(cfg_name: str, out_dir: str, manifest: dict) -> None:
+    cfg = M.PRESETS[cfg_name]
+    batch = BATCH[cfg_name]
+    p = M.num_params(cfg)
+    flat_spec = jax.ShapeDtypeStruct((p,), jnp.float32)
+    tok_spec = jax.ShapeDtypeStruct((batch, cfg.seq_len), jnp.int32)
+    print(f"[{cfg_name}] P={p} ({p*4/1e6:.1f} MB f32), B={batch}, S={cfg.seq_len}")
+
+    t0 = time.time()
+    step = functools.partial(M.train_step, cfg=cfg)
+    lowered = jax.jit(step).lower(flat_spec, tok_spec, tok_spec)
+    _write(os.path.join(out_dir, f"train_step_{cfg_name}.hlo.txt"), to_hlo_text(lowered))
+
+    ev = functools.partial(M.eval_loss, cfg=cfg)
+    lowered = jax.jit(ev).lower(flat_spec, tok_spec, tok_spec)
+    _write(os.path.join(out_dir, f"eval_loss_{cfg_name}.hlo.txt"), to_hlo_text(lowered))
+
+    init = M.init_flat(cfg, jax.random.PRNGKey(0))
+    init_path = os.path.join(out_dir, f"init_{cfg_name}.bin")
+    with open(init_path, "wb") as f:
+        f.write(bytes(jnp.asarray(init, jnp.float32).tobytes()))
+    print(f"  wrote {init_path}; lowering took {time.time()-t0:.1f}s")
+
+    manifest["models"][cfg_name] = {
+        "params": int(p),
+        "batch": int(batch),
+        "seq_len": int(cfg.seq_len),
+        "vocab": int(cfg.vocab),
+        "d_model": int(cfg.d_model),
+        "n_layers": int(cfg.n_layers),
+        "n_heads": int(cfg.n_heads),
+        "use_pallas": bool(cfg.use_pallas),
+        "train_step": f"train_step_{cfg_name}.hlo.txt",
+        "eval_loss": f"eval_loss_{cfg_name}.hlo.txt",
+        "init": f"init_{cfg_name}.bin",
+        "param_table": [
+            {"name": n, "shape": list(s)} for n, s in M.param_spec(cfg)
+        ],
+    }
+
+
+def emit_kernels(d: int, block_size: int, out_dir: str, manifest: dict) -> None:
+    assert d % block_size == 0
+    nb = d // block_size
+    vec = jax.ShapeDtypeStruct((d,), jnp.float32)
+    one = jax.ShapeDtypeStruct((1,), jnp.float32)
+    maskspec = jax.ShapeDtypeStruct((nb,), jnp.float32)
+
+    tile = min(4096, d)
+    fu = lambda eta, x, e, g, r: fused_update(x, e, g, r, eta, tile=tile)
+    lowered = jax.jit(fu).lower(one, vec, vec, vec, vec)
+    name = f"fused_update_{d}.hlo.txt"
+    _write(os.path.join(out_dir, name), to_hlo_text(lowered))
+    manifest["kernels"]["fused_update"] = {"d": d, "tile": tile, "file": name}
+
+    bm = lambda v, m: block_mask(v, m, block_size=block_size)
+    lowered = jax.jit(bm).lower(vec, maskspec)
+    name = f"block_mask_{d}_{block_size}.hlo.txt"
+    _write(os.path.join(out_dir, name), to_hlo_text(lowered))
+    manifest["kernels"]["block_mask"] = {
+        "d": d,
+        "block_size": block_size,
+        "num_blocks": nb,
+        "file": name,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--configs", default="tiny,tiny_pallas,small")
+    ap.add_argument("--kernel-d", type=int, default=65536)
+    ap.add_argument("--block-size", type=int, default=1024)
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest: dict = {"models": {}, "kernels": {}}
+    for cfg_name in args.configs.split(","):
+        cfg_name = cfg_name.strip()
+        if cfg_name:
+            emit_model(cfg_name, args.out_dir, manifest)
+    emit_kernels(args.kernel_d, args.block_size, args.out_dir, manifest)
+
+    # cross-language golden trajectory (see golden.py / rust/tests/golden.rs)
+    from . import golden
+    golden.emit(os.path.join(args.out_dir, "golden_cser.json"))
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Cross-language golden trajectories for the CSER algebra.
+
+A small numpy implementation of M-CSER (Algorithm 4, implementation I) with
+an *explicit block-mask schedule* (so no RNG has to match across languages)
+generates a full trajectory; the Rust test
+(`rust/tests/golden.rs`) replays the same gradients through
+`optimizer::Cser` with a scheduled compressor and asserts the models match
+step-by-step.  This pins the Rust hot path to an independent implementation
+of the paper's equations.
+
+Emitted by `make artifacts` into artifacts/golden_cser.json.
+"""
+
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+
+def simulate(d=32, n=3, h=3, beta=0.9, eta=0.05, steps=9, block=8, seed=1234):
+    """Run M-CSER impl I; returns everything the Rust side needs."""
+    assert d % block == 0
+    nb = d // block
+    rng = np.random.default_rng(seed)
+    init = rng.standard_normal(d).astype(np.float32)
+    grads = rng.standard_normal((steps, n, d)).astype(np.float32)
+    # mask schedules, indexed by 1-based round t (entry 0 unused)
+    mask2 = (rng.random((steps + 1, nb)) < 0.5).astype(np.float32)
+    mask1 = (rng.random((steps + 1, nb)) < 0.5).astype(np.float32)
+    # guarantee at least one block selected per round (Rust sparsifiers
+    # always keep >= 1 block)
+    for m in (mask1, mask2):
+        for t in range(steps + 1):
+            if m[t].sum() == 0:
+                m[t][t % nb] = 1.0
+
+    x = np.tile(init, (n, 1)).astype(np.float32)
+    e = np.zeros((n, d), np.float32)
+    mom = np.zeros((n, d), np.float32)
+    traj = []
+    for t in range(1, steps + 1):
+        g = grads[t - 1]
+        mom[:] = beta * mom + g
+        p = (eta * (beta * mom + g)).astype(np.float32)
+        m2 = np.repeat(mask2[t], block)[None, :]
+        kept = p * m2
+        pbar = kept.mean(axis=0, keepdims=True)
+        p_prime = pbar + (p - kept)
+        x = (x - p_prime).astype(np.float32)
+        e = (e - (p - kept)).astype(np.float32)
+        if t % h == 0:
+            m1 = np.repeat(mask1[t], block)[None, :]
+            kept1 = e * m1
+            ebar = kept1.mean(axis=0, keepdims=True)
+            e_prime = ebar + (e - kept1)
+            x = (x - e + e_prime).astype(np.float32)
+            e = (e - kept1).astype(np.float32)
+        traj.append(x.copy())
+
+    return {
+        "d": d,
+        "n": n,
+        "h": h,
+        "beta": beta,
+        "eta": eta,
+        "steps": steps,
+        "block": block,
+        "init": init.tolist(),
+        "grads": grads.reshape(steps * n * d).tolist(),
+        "mask1": mask1.reshape(-1).tolist(),
+        "mask2": mask2.reshape(-1).tolist(),
+        "x_final": x.reshape(-1).tolist(),
+        "x_mid": traj[len(traj) // 2].reshape(-1).tolist(),
+        "mid_step": len(traj) // 2 + 1,
+    }
+
+
+def emit(out_path: str) -> None:
+    with open(out_path, "w") as f:
+        json.dump(simulate(), f)
+    print(f"  wrote {out_path}")
+
+
+if __name__ == "__main__":
+    import sys
+
+    emit(sys.argv[1] if len(sys.argv) > 1 else "../artifacts/golden_cser.json")

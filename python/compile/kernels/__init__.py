@@ -1,0 +1,13 @@
+"""Layer-1 Pallas kernels + pure-jnp reference oracles.
+
+Kernels are always invoked with interpret=True in this repo (CPU PJRT cannot
+execute Mosaic custom-calls); the BlockSpecs still encode the real-TPU
+HBM<->VMEM schedule, which DESIGN.md documents under Hardware-Adaptation.
+"""
+
+from .grbs import block_mask
+from .fused_update import fused_update
+from .attention import flash_attention, mha
+from . import ref
+
+__all__ = ["block_mask", "fused_update", "flash_attention", "mha", "ref"]

@@ -1,0 +1,225 @@
+"""Flash-style causal attention as Pallas kernels (Layer 1), fwd + bwd.
+
+This is the L2 transformer's compute hot-spot.  The paper's experiments run
+WRN/ResNet on V100s; our end-to-end driver trains a transformer LM, so the
+hot kernel we own is attention.  The GPU flash-attention insight (tile the
+score matrix so it never materializes in HBM; keep a running max/denominator)
+maps to TPU as (DESIGN.md §Hardware-Adaptation):
+
+  * grid over query tiles (``bq`` rows each) — one VMEM-resident output tile;
+  * inner loop over key tiles (``bk``) with an online-softmax carry
+    (m, l, acc) — the role threadblock-local shared memory plays on GPU is
+    played by VMEM here;
+  * tiles shaped for the MXU: bq, bk and the head dim are multiples of 8/128
+    in the real-TPU configuration (the interpret-mode tests also sweep odd
+    shapes since the CPU path has no alignment constraint).
+
+jax 0.8's ``pallas_call`` has no reverse-mode rule, and the L2 train_step
+differentiates through attention, so the kernel is wrapped in a
+``jax.custom_vjp`` whose backward pass is itself two Pallas kernels (the
+standard flash backward): the forward saves (q, k, v, o, L) where L is the
+row logsumexp; the backward recomputes P tile-by-tile and accumulates
+
+    D  = rowsum(dO * O)
+    dS = P * (dO V^T - D)
+    dQ = dS K * scale          (grid over query tiles)
+    dK = dS^T Q * scale        (grid over key tiles)
+    dV = P^T dO                (grid over key tiles)
+
+interpret=True for CPU-PJRT execution; real-TPU lowering would emit a Mosaic
+custom-call the CPU plugin cannot run.  VMEM/MXU estimates are recorded in
+EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, l_ref, *, bq, bk, seq, causal):
+    qi = pl.program_id(0)
+    q = q_ref[...].astype(jnp.float32)
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    nkb = seq // bk
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+
+    m = jnp.full((bq,), NEG_INF, jnp.float32)
+    l = jnp.zeros((bq,), jnp.float32)
+    acc = jnp.zeros((bq, d), jnp.float32)
+    for j in range(nkb):  # static unroll; nkb is small in our configs
+        k = k_ref[...][j * bk : (j + 1) * bk].astype(jnp.float32)
+        v = v_ref[...][j * bk : (j + 1) * bk].astype(jnp.float32)
+        s = (q @ k.T) * scale
+        if causal:
+            k_pos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m, m_cur)
+        p = jnp.exp(s - m_new[:, None])
+        if causal:
+            p = jnp.where(s <= NEG_INF / 2, 0.0, p)  # fully-masked entries
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + p @ v
+        m = m_new
+    lse = m + jnp.log(jnp.where(l == 0.0, 1.0, l))
+    l = jnp.where(l == 0.0, 1.0, l)
+    o_ref[...] = (acc / l[:, None]).astype(o_ref.dtype)
+    l_ref[...] = lse
+
+
+def _bwd_dq_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, do_ref, dq_ref, *, bq, bk, seq, causal):
+    qi = pl.program_id(0)
+    q = q_ref[...].astype(jnp.float32)
+    do = do_ref[...].astype(jnp.float32)
+    o = o_ref[...].astype(jnp.float32)
+    lse = lse_ref[...]
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    nkb = seq // bk
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    dvec = jnp.sum(do * o, axis=-1)  # D [bq]
+
+    dq = jnp.zeros((bq, d), jnp.float32)
+    for j in range(nkb):
+        k = k_ref[...][j * bk : (j + 1) * bk].astype(jnp.float32)
+        v = v_ref[...][j * bk : (j + 1) * bk].astype(jnp.float32)
+        s = (q @ k.T) * scale
+        if causal:
+            k_pos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+        p = jnp.exp(s - lse[:, None])
+        dp = do @ v.T
+        ds = p * (dp - dvec[:, None])
+        dq = dq + ds @ k * scale
+    dq_ref[...] = dq.astype(dq_ref.dtype)
+
+
+def _bwd_dkv_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, do_ref, dk_ref, dv_ref, *, bq, bk, seq, causal):
+    ki = pl.program_id(0)
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    d = k.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    nqb = seq // bq
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+
+    dk = jnp.zeros((bk, d), jnp.float32)
+    dv = jnp.zeros((bk, d), jnp.float32)
+    for j in range(nqb):
+        q = q_ref[...][j * bq : (j + 1) * bq].astype(jnp.float32)
+        do = do_ref[...][j * bq : (j + 1) * bq].astype(jnp.float32)
+        o = o_ref[...][j * bq : (j + 1) * bq].astype(jnp.float32)
+        lse = lse_ref[...][j * bq : (j + 1) * bq]
+        s = (q @ k.T) * scale  # [bq, bk]
+        if causal:
+            q_pos = j * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+        p = jnp.exp(s - lse[:, None])
+        dvec = jnp.sum(do * o, axis=-1)
+        dp = do @ v.T
+        ds = p * (dp - dvec[:, None])
+        dk = dk + ds.T @ q * scale
+        dv = dv + p.T @ do
+    dk_ref[...] = dk.astype(dk_ref.dtype)
+    dv_ref[...] = dv.astype(dv_ref.dtype)
+
+
+def _fwd_call(q, k, v, bq, bk, causal, interpret):
+    s, d = q.shape
+    kernel = functools.partial(_fwd_kernel, bq=bq, bk=bk, seq=s, causal=causal)
+    return pl.pallas_call(
+        kernel,
+        grid=(s // bq,),
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i: (i, 0)),
+            pl.BlockSpec((s, d), lambda i: (0, 0)),
+            pl.BlockSpec((s, d), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, d), lambda i: (i, 0)),
+            pl.BlockSpec((bq,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((s, d), q.dtype),
+            jax.ShapeDtypeStruct((s,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash(q, k, v, bq, bk, causal, interpret):
+    o, _ = _fwd_call(q, k, v, bq, bk, causal, interpret)
+    return o
+
+
+def _flash_fwd(q, k, v, bq, bk, causal, interpret):
+    o, lse = _fwd_call(q, k, v, bq, bk, causal, interpret)
+    return o, (q, k, v, o, lse)
+
+
+def _flash_bwd(bq, bk, causal, interpret, res, do):
+    q, k, v, o, lse = res
+    s, d = q.shape
+    full = pl.BlockSpec((s, d), lambda i: (0, 0))
+    full1 = pl.BlockSpec((s,), lambda i: (0,))
+    qtile = pl.BlockSpec((bq, d), lambda i: (i, 0))
+    ktile = pl.BlockSpec((bk, d), lambda i: (i, 0))
+
+    dq = pl.pallas_call(
+        functools.partial(_bwd_dq_kernel, bq=bq, bk=bk, seq=s, causal=causal),
+        grid=(s // bq,),
+        in_specs=[qtile, full, full, qtile, pl.BlockSpec((bq,), lambda i: (i,)), qtile],
+        out_specs=qtile,
+        out_shape=jax.ShapeDtypeStruct((s, d), q.dtype),
+        interpret=interpret,
+    )(q, k, v, o, lse, do)
+
+    dk, dv = pl.pallas_call(
+        functools.partial(_bwd_dkv_kernel, bq=bq, bk=bk, seq=s, causal=causal),
+        grid=(s // bk,),
+        in_specs=[full, ktile, ktile, full, full1, full],
+        out_specs=[ktile, ktile],
+        out_shape=[
+            jax.ShapeDtypeStruct((s, d), k.dtype),
+            jax.ShapeDtypeStruct((s, d), v.dtype),
+        ],
+        interpret=interpret,
+    )(q, k, v, o, lse, do)
+    return dq, dk, dv
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bk", "causal", "interpret"))
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    bq: int = 64,
+    bk: int = 64,
+    causal: bool = True,
+    interpret: bool = True,
+):
+    """Single-head attention over [S, D] tensors; S divisible by bq and bk."""
+    s, _ = q.shape
+    assert s % bq == 0 and s % bk == 0, (s, bq, bk)
+    return _flash(q, k, v, bq, bk, causal, interpret)
+
+
+def mha(q, k, v, *, causal: bool = True, bq: int = 64, bk: int = 64, interpret: bool = True):
+    """Multi-head wrapper: q,k,v are [H, S, D]; vmaps the Pallas kernel."""
+    f = functools.partial(
+        flash_attention, bq=bq, bk=bk, causal=causal, interpret=interpret
+    )
+    return jax.vmap(f)(q, k, v)

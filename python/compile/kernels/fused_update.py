@@ -1,0 +1,64 @@
+"""Fused CSER inner step as a Pallas kernel (Layer 1).
+
+Algorithm 2 lines 6-7 (and the M-CSER analogue, Algorithm 4 line 9) apply
+
+    x <- x - eta * (gbar + r)        # model takes synced grad + own residual
+    e <- e - eta * r                 # error accumulates the residual
+
+to the flat parameter vector every iteration.  Done naively this is four
+elementwise HLO ops and six HBM round-trips over 4*d floats; fused it is one
+pass reading 4 streams and writing 2.  VMEM footprint per grid step is
+6 * tile * 4 bytes (default tile 4096 -> 96 KiB), well under a TPU core's
+~16 MiB VMEM, leaving room for double-buffering by the pipeline emitter.
+
+interpret=True for CPU-PJRT execution (see grbs.py note).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fused_update_kernel(eta_ref, x_ref, e_ref, g_ref, r_ref, xo_ref, eo_ref):
+    eta = eta_ref[0].astype(x_ref.dtype)
+    r = r_ref[...]
+    xo_ref[...] = x_ref[...] - eta * (g_ref[...] + r)
+    eo_ref[...] = e_ref[...] - eta * r
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def fused_update(
+    x: jax.Array,
+    e: jax.Array,
+    gbar: jax.Array,
+    r: jax.Array,
+    eta: jax.Array,
+    *,
+    tile: int = 4096,
+    interpret: bool = True,
+):
+    """Apply the fused CSER inner step; all vector args share shape [d].
+
+    ``d`` must be a multiple of ``tile`` (the AOT pipeline pads the flat
+    parameter vector up to the tile size; see python/compile/aot.py).
+    ``eta`` is a scalar (passed as shape-[1] array to stay a runtime input).
+    """
+    d = x.shape[0]
+    assert d % tile == 0, (d, tile)
+    eta = jnp.asarray(eta, x.dtype).reshape((1,))
+    out = jax.ShapeDtypeStruct((d,), x.dtype)
+    vec = pl.BlockSpec((tile,), lambda i: (i,))
+    scalar = pl.BlockSpec((1,), lambda i: (0,))
+    xo, eo = pl.pallas_call(
+        _fused_update_kernel,
+        grid=(d // tile,),
+        in_specs=[scalar, vec, vec, vec, vec],
+        out_specs=[vec, vec],
+        out_shape=[out, out],
+        interpret=interpret,
+    )(eta, x, e, gbar, r)
+    return xo, eo

@@ -1,0 +1,61 @@
+"""GRBS block-mask compressor as a Pallas kernel (Layer 1).
+
+The Globally-Randomized Blockwise Sparsifier (paper §3.3, Definition 2)
+partitions a flat tensor into B blocks and keeps B/R of them, with the *same*
+blocks chosen on every worker (shared seed).  On the wire this means the
+compressed message is a set of contiguous blocks — directly AllReduce-able.
+On-device the compressor itself is a single streaming pass: each grid step
+loads one block of `v` plus one mask scalar into VMEM, writes the kept block
+and the residual block.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): one grid step = one VMEM tile
+(block_size * 4 bytes in, 2x out); no gather/scatter is needed because GRBS
+selects *blocks*, not elements — the same property that removes index
+metadata from the network messages removes it from the HBM<->VMEM schedule.
+
+Run with interpret=True everywhere in this repo: the CPU PJRT plugin cannot
+execute Mosaic custom-calls (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _block_mask_kernel(v_ref, m_ref, kept_ref, resid_ref):
+    m = m_ref[0].astype(v_ref.dtype)
+    v = v_ref[...]
+    kept = v * m
+    kept_ref[...] = kept
+    resid_ref[...] = v - kept
+
+
+@functools.partial(jax.jit, static_argnames=("block_size", "interpret"))
+def block_mask(v: jax.Array, mask: jax.Array, *, block_size: int, interpret: bool = True):
+    """Split ``v`` into (kept, residual) under a per-block 0/1 ``mask``.
+
+    v: [B * block_size]; mask: [B] (0/1, any integer or float dtype).
+    Returns (C(v), v - C(v)) with the same dtype as v.
+    """
+    b = mask.shape[0]
+    assert v.shape == (b * block_size,), (v.shape, b, block_size)
+    out = jax.ShapeDtypeStruct(v.shape, v.dtype)
+    kept, resid = pl.pallas_call(
+        _block_mask_kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((block_size,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_size,), lambda i: (i,)),
+            pl.BlockSpec((block_size,), lambda i: (i,)),
+        ],
+        out_shape=[out, out],
+        interpret=interpret,
+    )(v, mask)
+    return kept, resid

@@ -1,0 +1,64 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness).
+
+Every Pallas kernel in this package has an exact (up to dtype rounding)
+reference implementation here. pytest (python/tests/test_kernels.py) sweeps
+shapes/dtypes with hypothesis and asserts allclose between the two.
+
+These references are also the mathematical definitions used by the Rust
+coordinator's unit tests (golden vectors are generated from them).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def block_mask_ref(v: jax.Array, mask: jax.Array, block_size: int):
+    """GRBS compressor split: keep masked blocks, return (kept, residual).
+
+    ``v`` has shape ``[B * block_size]``; ``mask`` has shape ``[B]`` with
+    entries in {0, 1} (1 = block selected for synchronization, identical on
+    every worker because the GRBS seed is global).  Returns ``(v', r)`` with
+    ``v' = C(v)`` (selected blocks, zeros elsewhere) and ``r = v - v'``.
+    """
+    b = mask.shape[0]
+    assert v.shape[0] == b * block_size
+    m = jnp.repeat(mask.astype(v.dtype), block_size)
+    kept = v * m
+    return kept, v - kept
+
+
+def fused_update_ref(
+    x: jax.Array, e: jax.Array, gbar: jax.Array, r: jax.Array, eta: jax.Array
+):
+    """CSER inner step (Algorithm 2, lines 6-7), fused.
+
+    x' = x - eta * (gbar + r)       (local model takes sync'd grad + residual)
+    e' = e - eta * r                (local error accumulates the residual)
+    """
+    eta = jnp.asarray(eta, x.dtype)
+    return x - eta * (gbar + r), e - eta * r
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, causal: bool = True):
+    """Scaled dot-product attention, one head: q,k,v are [S, D]."""
+    s, d = q.shape
+    scores = (q @ k.T) / jnp.sqrt(jnp.asarray(d, jnp.float32)).astype(q.dtype)
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        scores = jnp.where(mask, scores, jnp.asarray(-1e30, scores.dtype))
+    p = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    return p @ v
+
+
+def psync_ref(vs: jax.Array, mask: jax.Array, block_size: int):
+    """Partial synchronization (Algorithm 3 / 6) under the GRBS compressor.
+
+    ``vs`` is [n, d] (one row per worker).  Returns (v_primes [n, d],
+    residuals [n, d]) where v'_i = mean_j C(v_j) + r_i and r_i = v_i - C(v_i).
+    Mean preservation: mean_i v'_i == mean_i v_i.
+    """
+    kept, resid = jax.vmap(lambda v: block_mask_ref(v, mask, block_size))(vs)
+    vbar = jnp.mean(kept, axis=0, keepdims=True)
+    return vbar + resid, resid

@@ -1,0 +1,200 @@
+"""Layer-2: transformer language model, fwd/bwd in JAX (build-time only).
+
+The model is expressed over a SINGLE FLAT f32 parameter vector.  That is the
+contract with the Rust coordinator: CSER, PSync and the GRBS compressor all
+operate on flat views of the model (paper §3.3 — GRBS partitions the flat
+tensor into B blocks), so the AOT artifact's signature is
+
+    train_step(flat_params[P], tokens[B,S] i32, targets[B,S] i32)
+        -> (loss f32[], flat_grad[P])
+
+and the entire optimizer state in Rust is a handful of Vec<f32> of length P.
+
+Architecture: decoder-only pre-LN transformer — embeddings (+learned
+positional), n_layers x (LN -> causal MHA -> residual, LN -> GELU MLP ->
+residual), final LN, tied output head, mean token cross-entropy.
+
+Attention goes through the Layer-1 Pallas flash kernel when
+``use_pallas=True`` (lowered with interpret=True so the resulting HLO runs on
+the CPU PJRT client); the pure-jnp path is the reference the pytest suite
+checks against.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import mha as pallas_mha
+from .kernels.ref import attention_ref
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Transformer hyper-parameters. d_ff defaults to 4*d_model."""
+
+    vocab: int = 512
+    d_model: int = 64
+    n_layers: int = 2
+    n_heads: int = 2
+    seq_len: int = 64
+    d_ff: int = 0
+    use_pallas: bool = False
+
+    def __post_init__(self):
+        if self.d_ff == 0:
+            object.__setattr__(self, "d_ff", 4 * self.d_model)
+        assert self.d_model % self.n_heads == 0
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+
+# Named presets used by aot.py and the Rust launcher.  `tiny` keeps the test
+# suite fast; `small` is the recorded end-to-end run; `base` is a ~100M
+# configuration (emitted on demand; CPU step time makes long runs impractical
+# in this environment — see EXPERIMENTS.md).
+PRESETS: Dict[str, "ModelConfig"] = {
+    "tiny": ModelConfig(vocab=512, d_model=64, n_layers=2, n_heads=2, seq_len=64),
+    "tiny_pallas": ModelConfig(
+        vocab=512, d_model=64, n_layers=2, n_heads=2, seq_len=64, use_pallas=True
+    ),
+    "small": ModelConfig(vocab=4096, d_model=256, n_layers=4, n_heads=8, seq_len=128),
+    "medium": ModelConfig(vocab=8192, d_model=512, n_layers=8, n_heads=8, seq_len=128),
+    "base": ModelConfig(vocab=32768, d_model=768, n_layers=12, n_heads=12, seq_len=256),
+}
+
+
+def param_spec(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) table defining the flat-vector layout."""
+    d, f = cfg.d_model, cfg.d_ff
+    spec: List[Tuple[str, Tuple[int, ...]]] = [
+        ("embed", (cfg.vocab, d)),
+        ("pos_embed", (cfg.seq_len, d)),
+    ]
+    for l in range(cfg.n_layers):
+        p = f"layer{l}."
+        spec += [
+            (p + "ln1.scale", (d,)),
+            (p + "ln1.bias", (d,)),
+            (p + "attn.wqkv", (d, 3 * d)),
+            (p + "attn.wo", (d, d)),
+            (p + "ln2.scale", (d,)),
+            (p + "ln2.bias", (d,)),
+            (p + "mlp.w1", (d, f)),
+            (p + "mlp.b1", (f,)),
+            (p + "mlp.w2", (f, d)),
+            (p + "mlp.b2", (d,)),
+        ]
+    spec += [("ln_f.scale", (d,)), ("ln_f.bias", (d,))]
+    return spec
+
+
+def num_params(cfg: ModelConfig) -> int:
+    total = 0
+    for _, shape in param_spec(cfg):
+        n = 1
+        for s in shape:
+            n *= s
+        total += n
+    return total
+
+
+def unflatten(flat: jax.Array, cfg: ModelConfig) -> Dict[str, jax.Array]:
+    """Static slicing of the flat vector into named tensors (free for XLA)."""
+    params = {}
+    off = 0
+    for name, shape in param_spec(cfg):
+        n = 1
+        for s in shape:
+            n *= s
+        params[name] = flat[off : off + n].reshape(shape)
+        off += n
+    assert off == flat.shape[0], (off, flat.shape)
+    return params
+
+
+def init_flat(cfg: ModelConfig, key: jax.Array) -> jax.Array:
+    """Scaled-normal init, emitted as one flat vector (matches param_spec)."""
+    chunks = []
+    for name, shape in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith((".bias", ".b1", ".b2")):
+            chunks.append(jnp.zeros(shape, jnp.float32).ravel())
+        elif name.endswith(".scale"):
+            chunks.append(jnp.ones(shape, jnp.float32).ravel())
+        else:
+            fan_in = shape[0] if len(shape) > 1 else 1
+            std = 0.02 if "embed" in name else float(1.0 / (fan_in ** 0.5))
+            chunks.append((std * jax.random.normal(sub, shape, jnp.float32)).ravel())
+    return jnp.concatenate(chunks)
+
+
+def _layer_norm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * scale + bias
+
+
+def _attention(x, p, prefix, cfg: ModelConfig):
+    b, s, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    qkv = x @ p[prefix + "attn.wqkv"]  # [b, s, 3d]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads(t):  # [b, s, d] -> [b, h, s, dh]
+        return t.reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+
+    q, k, v = heads(q), heads(k), heads(v)
+    if cfg.use_pallas:
+        # Collapse batch*heads into the single vmap dim: nested vmaps of an
+        # interpret-mode pallas_call trip the grid-context assertion.
+        bq = bk = min(64, s)
+        fold = lambda t: t.reshape(b * h, s, dh)
+        o = pallas_mha(
+            fold(q), fold(k), fold(v), causal=True, bq=bq, bk=bk, interpret=True
+        ).reshape(b, h, s, dh)
+    else:
+        o = jax.vmap(jax.vmap(functools.partial(attention_ref, causal=True)))(q, k, v)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, d)
+    return o @ p[prefix + "attn.wo"]
+
+
+def forward(flat: jax.Array, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Logits [B, S, vocab] from token ids [B, S]."""
+    p = unflatten(flat, cfg)
+    b, s = tokens.shape
+    x = p["embed"][tokens] + p["pos_embed"][None, :s, :]
+    for l in range(cfg.n_layers):
+        pre = f"layer{l}."
+        h = _layer_norm(x, p[pre + "ln1.scale"], p[pre + "ln1.bias"])
+        x = x + _attention(h, p, pre, cfg)
+        h = _layer_norm(x, p[pre + "ln2.scale"], p[pre + "ln2.bias"])
+        h = jax.nn.gelu(h @ p[pre + "mlp.w1"] + p[pre + "mlp.b1"])
+        x = x + h @ p[pre + "mlp.w2"] + p[pre + "mlp.b2"]
+    x = _layer_norm(x, p["ln_f.scale"], p["ln_f.bias"])
+    return x @ p["embed"].T  # tied head
+
+
+def loss_fn(flat: jax.Array, tokens: jax.Array, targets: jax.Array, cfg: ModelConfig):
+    """Mean next-token cross-entropy."""
+    logits = forward(flat, tokens, cfg)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+def train_step(flat: jax.Array, tokens: jax.Array, targets: jax.Array, cfg: ModelConfig):
+    """The AOT entry point: (loss, flat_grad)."""
+    loss, grad = jax.value_and_grad(loss_fn)(flat, tokens, targets, cfg)
+    return loss, grad
+
+
+def eval_loss(flat: jax.Array, tokens: jax.Array, targets: jax.Array, cfg: ModelConfig):
+    """Forward-only loss (second AOT entry point, used for eval curves)."""
+    return loss_fn(flat, tokens, targets, cfg)

@@ -1,0 +1,54 @@
+"""AOT pipeline: HLO text emission + manifest consistency."""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_hlo_text_emission_tiny(tmp_path):
+    manifest = {"models": {}, "kernels": {}}
+    aot.emit_model("tiny", str(tmp_path), manifest)
+    hlo = (tmp_path / "train_step_tiny.hlo.txt").read_text()
+    assert "ENTRY" in hlo and "HloModule" in hlo
+    m = manifest["models"]["tiny"]
+    assert m["params"] == M.num_params(M.PRESETS["tiny"])
+    init = np.fromfile(tmp_path / "init_tiny.bin", dtype="<f4")
+    assert init.shape[0] == m["params"]
+    # param_table covers the whole flat vector
+    total = sum(int(np.prod(e["shape"])) for e in m["param_table"])
+    assert total == m["params"]
+
+
+def test_kernel_artifacts(tmp_path):
+    manifest = {"models": {}, "kernels": {}}
+    aot.emit_kernels(4096, 256, str(tmp_path), manifest)
+    for k in ("fused_update", "block_mask"):
+        f = tmp_path / manifest["kernels"][k]["file"]
+        assert f.exists()
+        assert "ENTRY" in f.read_text()
+    assert manifest["kernels"]["block_mask"]["num_blocks"] == 16
+
+
+def test_hlo_text_is_parseable_ids():
+    """The text must not contain ids that overflow 32 bits (0.5.1 gate)."""
+    cfg = M.PRESETS["tiny"]
+    p = M.num_params(cfg)
+    import functools
+    step = functools.partial(M.train_step, cfg=cfg)
+    lowered = jax.jit(step).lower(
+        jax.ShapeDtypeStruct((p,), jnp.float32),
+        jax.ShapeDtypeStruct((2, cfg.seq_len), jnp.int32),
+        jax.ShapeDtypeStruct((2, cfg.seq_len), jnp.int32),
+    )
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")

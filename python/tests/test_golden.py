@@ -1,0 +1,54 @@
+"""Sanity checks on the numpy golden simulator itself."""
+
+import numpy as np
+
+from compile import golden
+
+
+def test_simulation_is_deterministic_and_finite():
+    a = golden.simulate(seed=7)
+    b = golden.simulate(seed=7)
+    assert a["x_final"] == b["x_final"]
+    assert np.isfinite(np.asarray(a["x_final"])).all()
+
+
+def test_lemma1_in_numpy_sim():
+    """Even the independent simulator must satisfy Lemma 1 — compute x - e
+    at the end of a re-run and check worker agreement."""
+    d, n, h, beta, eta, steps, block = 16, 3, 2, 0.9, 0.1, 6, 4
+    out = golden.simulate(d=d, n=n, h=h, beta=beta, eta=eta, steps=steps, block=block, seed=3)
+    # re-run retaining e
+    rng = np.random.default_rng(3)
+    init = rng.standard_normal(d).astype(np.float32)
+    grads = rng.standard_normal((steps, n, d)).astype(np.float32)
+    nb = d // block
+    mask2 = (rng.random((steps + 1, nb)) < 0.5).astype(np.float32)
+    mask1 = (rng.random((steps + 1, nb)) < 0.5).astype(np.float32)
+    for m in (mask1, mask2):
+        for t in range(steps + 1):
+            if m[t].sum() == 0:
+                m[t][t % nb] = 1.0
+    x = np.tile(init, (n, 1)).astype(np.float32)
+    e = np.zeros((n, d), np.float32)
+    mom = np.zeros((n, d), np.float32)
+    for t in range(1, steps + 1):
+        g = grads[t - 1]
+        mom[:] = beta * mom + g
+        p = (eta * (beta * mom + g)).astype(np.float32)
+        m2 = np.repeat(mask2[t], block)[None, :]
+        kept = p * m2
+        p_prime = kept.mean(axis=0, keepdims=True) + (p - kept)
+        x = x - p_prime
+        e = e - (p - kept)
+        if t % h == 0:
+            m1 = np.repeat(mask1[t], block)[None, :]
+            kept1 = e * m1
+            e_prime = kept1.mean(axis=0, keepdims=True) + (e - kept1)
+            x = x - e + e_prime
+            e = e - kept1
+        consensus = x - e
+        np.testing.assert_allclose(
+            consensus, np.broadcast_to(consensus[0:1], consensus.shape), rtol=1e-4, atol=1e-5
+        )
+    # matches the packaged simulate() as well
+    np.testing.assert_allclose(np.asarray(out["x_final"]).reshape(n, d), x, rtol=1e-5, atol=1e-6)

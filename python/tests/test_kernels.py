@@ -1,0 +1,184 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (hypothesis sweeps)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import block_mask, flash_attention, fused_update, mha
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------- block_mask
+@settings(max_examples=25, deadline=None)
+@given(
+    nb=st.integers(1, 16),
+    bs=st.sampled_from([1, 2, 7, 32, 128]),
+    seed=st.integers(0, 2**31 - 1),
+    dtype=st.sampled_from([np.float32, np.float16]),
+)
+def test_block_mask_matches_ref(nb, bs, seed, dtype):
+    r = _rng(seed)
+    v = r.standard_normal(nb * bs).astype(dtype)
+    mask = (r.random(nb) < 0.5).astype(np.float32)
+    kept, resid = block_mask(jnp.asarray(v), jnp.asarray(mask), block_size=bs)
+    kept_r, resid_r = ref.block_mask_ref(jnp.asarray(v), jnp.asarray(mask), bs)
+    np.testing.assert_allclose(kept, kept_r, rtol=0, atol=0)
+    np.testing.assert_allclose(resid, resid_r, rtol=0, atol=0)
+
+
+def test_block_mask_partition_identity():
+    """kept + resid == v exactly, any mask."""
+    r = _rng(0)
+    v = r.standard_normal(64 * 8).astype(np.float32)
+    mask = (r.random(64) < 0.25).astype(np.float32)
+    kept, resid = block_mask(jnp.asarray(v), jnp.asarray(mask), block_size=8)
+    np.testing.assert_array_equal(np.asarray(kept) + np.asarray(resid), v)
+
+
+def test_block_mask_contraction():
+    """delta-approximate compressor property: ||C(v)-v||^2 <= ||v||^2."""
+    r = _rng(1)
+    v = r.standard_normal(32 * 16).astype(np.float32)
+    mask = (r.random(32) < 0.1).astype(np.float32)
+    _, resid = block_mask(jnp.asarray(v), jnp.asarray(mask), block_size=16)
+    assert float(jnp.sum(resid**2)) <= float(jnp.sum(jnp.asarray(v) ** 2)) + 1e-6
+
+
+# -------------------------------------------------------------- fused_update
+@settings(max_examples=25, deadline=None)
+@given(
+    logd=st.integers(0, 4),
+    tile_pow=st.integers(0, 3),
+    eta=st.floats(1e-4, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_update_matches_ref(logd, tile_pow, eta, seed):
+    tile = 2**tile_pow * 8
+    d = tile * (2**logd)
+    r = _rng(seed)
+    x, e, g, rr = (r.standard_normal(d).astype(np.float32) for _ in range(4))
+    xo, eo = fused_update(
+        jnp.asarray(x), jnp.asarray(e), jnp.asarray(g), jnp.asarray(rr),
+        jnp.float32(eta), tile=tile,
+    )
+    xr, er = ref.fused_update_ref(
+        jnp.asarray(x), jnp.asarray(e), jnp.asarray(g), jnp.asarray(rr), eta
+    )
+    np.testing.assert_allclose(xo, xr, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(eo, er, rtol=1e-6, atol=1e-6)
+
+
+def test_fused_update_zero_eta_is_identity():
+    r = _rng(3)
+    d = 256
+    x, e, g, rr = (r.standard_normal(d).astype(np.float32) for _ in range(4))
+    xo, eo = fused_update(
+        jnp.asarray(x), jnp.asarray(e), jnp.asarray(g), jnp.asarray(rr),
+        jnp.float32(0.0), tile=64,
+    )
+    np.testing.assert_array_equal(xo, x)
+    np.testing.assert_array_equal(eo, e)
+
+
+# ----------------------------------------------------------- flash attention
+@settings(max_examples=15, deadline=None)
+@given(
+    s=st.sampled_from([64, 128, 192]),
+    d=st.sampled_from([16, 32, 64]),
+    bq=st.sampled_from([32, 64]),
+    causal=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_flash_attention_matches_ref(s, d, bq, causal, seed):
+    if s % bq != 0:
+        bq = 32
+    r = _rng(seed)
+    q, k, v = (r.standard_normal((s, d)).astype(np.float32) * 0.5 for _ in range(3))
+    out = flash_attention(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), bq=bq, bk=bq, causal=causal
+    )
+    expect = ref.attention_ref(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), causal)
+    np.testing.assert_allclose(out, expect, rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_online_softmax_stability():
+    """Large score magnitudes must not overflow (online max subtraction)."""
+    r = _rng(7)
+    q = (r.standard_normal((64, 32)) * 30).astype(np.float32)
+    k = (r.standard_normal((64, 32)) * 30).astype(np.float32)
+    v = r.standard_normal((64, 32)).astype(np.float32)
+    out = flash_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v))
+    assert np.isfinite(np.asarray(out)).all()
+    expect = ref.attention_ref(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v))
+    np.testing.assert_allclose(out, expect, rtol=1e-4, atol=1e-4)
+
+
+def test_mha_vmap_heads():
+    r = _rng(11)
+    h, s, d = 4, 64, 16
+    q, k, v = (r.standard_normal((h, s, d)).astype(np.float32) for _ in range(3))
+    out = mha(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), bq=32, bk=32)
+    for i in range(h):
+        expect = ref.attention_ref(jnp.asarray(q[i]), jnp.asarray(k[i]), jnp.asarray(v[i]))
+        np.testing.assert_allclose(out[i], expect, rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_causality():
+    """Perturbing a future key/value must not change earlier outputs."""
+    r = _rng(13)
+    s, d = 64, 16
+    q, k, v = (r.standard_normal((s, d)).astype(np.float32) for _ in range(3))
+    out1 = np.asarray(flash_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), bq=32, bk=32))
+    k2, v2 = k.copy(), v.copy()
+    k2[-1] += 100.0
+    v2[-1] -= 100.0
+    out2 = np.asarray(flash_attention(jnp.asarray(q), jnp.asarray(k2), jnp.asarray(v2), bq=32, bk=32))
+    np.testing.assert_allclose(out1[:-1], out2[:-1], rtol=1e-6, atol=1e-6)
+    assert not np.allclose(out1[-1], out2[-1])
+
+
+# ------------------------------------------------------------------ psync ref
+def test_psync_ref_mean_preservation():
+    r = _rng(17)
+    n, nb, bs = 4, 16, 8
+    vs = r.standard_normal((n, nb * bs)).astype(np.float32)
+    mask = (r.random(nb) < 0.5).astype(np.float32)
+    vps, _ = ref.psync_ref(jnp.asarray(vs), jnp.asarray(mask), bs)
+    np.testing.assert_allclose(
+        np.mean(np.asarray(vps), axis=0), np.mean(vs, axis=0), rtol=1e-5, atol=1e-6
+    )
+
+
+# ------------------------------------------------------- flash attention bwd
+@settings(max_examples=10, deadline=None)
+@given(
+    s=st.sampled_from([64, 128]),
+    d=st.sampled_from([16, 32]),
+    causal=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_flash_attention_grad_matches_ref(s, d, causal, seed):
+    """custom_vjp Pallas backward kernels vs jax.grad of the jnp oracle."""
+    r = _rng(seed)
+    q, k, v = (jnp.asarray(r.standard_normal((s, d)).astype(np.float32) * 0.5)
+               for _ in range(3))
+    w = jnp.asarray(r.standard_normal((s, d)).astype(np.float32))
+
+    def loss_pallas(q, k, v):
+        return jnp.sum(flash_attention(q, k, v, bq=32, bk=32, causal=causal) * w)
+
+    def loss_ref(q, k, v):
+        return jnp.sum(ref.attention_ref(q, k, v, causal) * w)
+
+    gp = jax.grad(loss_pallas, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b, name in zip(gp, gr, "qkv"):
+        np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-4, err_msg=f"d{name}")

@@ -1,0 +1,95 @@
+//! In-process collective primitives + wire-cost formulas.
+//!
+//! The paper's cluster runs NCCL/Horovod-style ring AllReduce over 10 Gb/s
+//! links.  We execute collectives in-process (the workers are threads/slices
+//! of one address space) but account bytes/time with the standard models:
+//!
+//!   * ring all-reduce of m bytes, n workers: each worker sends
+//!     2(n−1)·m/n bytes in 2(n−1) steps;
+//!   * parameter-server gather+broadcast: each worker uploads m and
+//!     downloads m' (the aggregated support can be larger for per-worker
+//!     sparsifiers — the union of supports).
+//!
+//! GRBS's AllReduce-compatibility (same support everywhere, no indices) is
+//! what lets its wire cost be the ring formula on d/R values; random-k and
+//! top-k must ship indices and use the PS model.
+
+/// Dense mean over equal-length worker vectors (the in-process "collective").
+pub fn allreduce_mean(vs: &mut [Vec<f32>]) {
+    let n = vs.len();
+    let d = vs[0].len();
+    let inv = 1.0 / n as f32;
+    let (first, rest) = vs.split_first_mut().unwrap();
+    for x in first.iter_mut() {
+        *x *= inv;
+    }
+    for w in rest.iter() {
+        for (a, b) in first.iter_mut().zip(w.iter()) {
+            *a += inv * *b;
+        }
+    }
+    let proto = first.clone();
+    for w in rest.iter_mut() {
+        w.copy_from_slice(&proto);
+    }
+    let _ = d;
+}
+
+/// Wire traffic (bits through each worker's NIC, up + down) for one
+/// synchronization round.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WireCost {
+    pub up_bits: u64,
+    pub down_bits: u64,
+    pub steps: u32,
+}
+
+impl WireCost {
+    pub fn total_bits(&self) -> u64 {
+        self.up_bits + self.down_bits
+    }
+}
+
+/// Ring all-reduce of `payload_bits` per worker (reduce-scatter+all-gather).
+pub fn ring_allreduce_cost(payload_bits: u64, n: usize) -> WireCost {
+    if n <= 1 {
+        return WireCost { up_bits: 0, down_bits: 0, steps: 0 };
+    }
+    let per_dir = payload_bits * (n as u64 - 1) / n as u64;
+    WireCost { up_bits: per_dir, down_bits: per_dir, steps: 2 * (n as u32 - 1) }
+}
+
+/// Parameter-server: upload own message, download the aggregate.
+/// `agg_bits` is the size of the aggregated (union-support) message.
+pub fn param_server_cost(payload_bits: u64, agg_bits: u64, _n: usize) -> WireCost {
+    WireCost { up_bits: payload_bits, down_bits: agg_bits, steps: 2 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allreduce_mean_basic() {
+        let mut vs = vec![vec![1.0f32, 4.0], vec![3.0, 0.0]];
+        allreduce_mean(&mut vs);
+        assert_eq!(vs[0], vec![2.0, 2.0]);
+        assert_eq!(vs[1], vec![2.0, 2.0]);
+    }
+
+    #[test]
+    fn ring_cost_formula() {
+        let c = ring_allreduce_cost(8000, 8);
+        assert_eq!(c.up_bits, 7000);
+        assert_eq!(c.down_bits, 7000);
+        assert_eq!(c.steps, 14);
+        assert_eq!(ring_allreduce_cost(8000, 1).total_bits(), 0);
+    }
+
+    #[test]
+    fn ps_cost_formula() {
+        let c = param_server_cost(100, 250, 8);
+        assert_eq!(c.up_bits, 100);
+        assert_eq!(c.down_bits, 250);
+    }
+}

@@ -1,0 +1,8 @@
+//! Collectives: PSync (the paper's Algorithm 3/6) and the aggregation
+//! primitives/wire-cost models underneath it.
+
+pub mod allreduce;
+pub mod psync;
+
+pub use allreduce::{allreduce_mean, param_server_cost, ring_allreduce_cost, WireCost};
+pub use psync::{psync, PsyncRound};

@@ -1,0 +1,269 @@
+//! Partial synchronization — PSync (paper Algorithm 3 / Algorithm 6).
+//!
+//! Given per-worker vectors v_i and a compressor C:
+//!
+//!   v'_i  =  (1/n) Σ_j C(v_j)  +  (v_i − C(v_i))
+//!
+//! i.e. only the compressed part is averaged; each worker keeps its own
+//! residual.  Key invariant (tested below): the *mean* over workers is
+//! preserved exactly, mean_i v'_i = mean_i v_i — PSync redistributes
+//! agreement, it never loses mass.
+//!
+//! Fast path: when `C` is globally synchronized (GRBS), every worker selects
+//! the same support, so only the selected ranges are touched — O(n·d/R) work
+//! and zero allocation (the unselected part of v_i already equals v'_i there
+//! because C(v_j) is zero outside the common support).
+
+use crate::compressor::{payload_bits, Compressor, Ctx, Selection};
+
+/// What one PSync round did — enough for exact bit accounting and for
+/// optimizers to update error state without dense residual buffers.
+#[derive(Debug, Clone)]
+pub struct PsyncRound {
+    /// Selection per worker (length 1 if the compressor is global).
+    pub selections: Vec<Selection>,
+    /// Payload+index bits each worker uploads.
+    pub upload_bits_per_worker: u64,
+    /// True if the messages could be AllReduced (global support).
+    pub allreduce_compatible: bool,
+}
+
+impl PsyncRound {
+    pub fn selection_for(&self, worker: usize) -> &Selection {
+        if self.selections.len() == 1 {
+            &self.selections[0]
+        } else {
+            &self.selections[worker]
+        }
+    }
+
+    /// Visit the complement of worker `w`'s selection as (start,end) ranges.
+    pub fn for_each_unselected<F: FnMut(usize, usize)>(&self, worker: usize, d: usize, mut f: F) {
+        let sel = self.selection_for(worker);
+        match sel {
+            Selection::All => {}
+            Selection::Nothing => f(0, d),
+            _ => {
+                let mut cursor = 0usize;
+                sel.for_each_range(d, |s, e| {
+                    if s > cursor {
+                        f(cursor, s);
+                    }
+                    cursor = cursor.max(e);
+                });
+                if cursor < d {
+                    f(cursor, d);
+                }
+            }
+        }
+    }
+}
+
+/// In-place PSync over `vs` (one Vec per worker, all same length).
+///
+/// On return `vs[i] == v'_i`.  If `resid_out` is provided (same shapes),
+/// `resid_out[i] == r_i = v_i − C(v_i)` (computed before mutation).
+pub fn psync(
+    vs: &mut [Vec<f32>],
+    mut resid_out: Option<&mut [Vec<f32>]>,
+    c: &dyn Compressor,
+    round: u64,
+) -> PsyncRound {
+    let n = vs.len();
+    assert!(n > 0);
+    let d = vs[0].len();
+    debug_assert!(vs.iter().all(|v| v.len() == d));
+
+    if c.globally_synchronized() {
+        let sel = c.select(Ctx { round, worker: 0 }, &vs[0]);
+        // residuals: r_i = v_i off support, 0 on support
+        if let Some(res) = resid_out.as_deref_mut() {
+            for (i, v) in vs.iter().enumerate() {
+                res[i].copy_from_slice(v);
+                sel.for_each_range(d, |s, e| res[i][s..e].iter_mut().for_each(|x| *x = 0.0));
+            }
+        }
+        // average selected ranges in place
+        let inv = 1.0 / n as f32;
+        sel.for_each_range(d, |s, e| {
+            // compute the mean into worker 0's slice, then broadcast
+            let (first, rest) = vs.split_first_mut().unwrap();
+            let acc = &mut first[s..e];
+            acc.iter_mut().for_each(|x| *x *= inv);
+            for w in rest.iter() {
+                for (a, b) in acc.iter_mut().zip(&w[s..e]) {
+                    *a += inv * *b;
+                }
+            }
+            let proto = first[s..e].to_vec(); // small: one range
+            for w in rest.iter_mut() {
+                w[s..e].copy_from_slice(&proto);
+            }
+        });
+        let bits = payload_bits(&sel, d);
+        return PsyncRound { selections: vec![sel], upload_bits_per_worker: bits, allreduce_compatible: true };
+    }
+
+    // Generic path: per-worker supports or dense quantizers.  Two passes
+    // with one shared `kept` buffer (no n×d scratch): first turn each v_i
+    // into its residual r_i = v_i − C(v_i) while accumulating
+    // vbar = mean C(v_i); then v'_i = vbar + r_i.
+    let mut selections = Vec::with_capacity(n);
+    let mut vbar = vec![0.0f32; d];
+    let mut kept = vec![0.0f32; d];
+    let inv = 1.0 / n as f32;
+    let mut bits_total = 0u64;
+    for (w, v) in vs.iter_mut().enumerate() {
+        let ctx = Ctx { round, worker: w as u32 };
+        bits_total += c.compress_into(ctx, v, &mut kept);
+        selections.push(c.select(ctx, v));
+        for ((vj, kj), bj) in v.iter_mut().zip(&kept).zip(vbar.iter_mut()) {
+            *bj += inv * *kj;
+            *vj -= *kj; // v now holds the residual
+        }
+        if let Some(res) = resid_out.as_deref_mut() {
+            res[w].copy_from_slice(v);
+        }
+    }
+    for v in vs.iter_mut() {
+        crate::util::math::axpy(1.0, &vbar, v);
+    }
+    PsyncRound {
+        selections,
+        upload_bits_per_worker: bits_total / n as u64,
+        allreduce_compatible: false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressor::{Grbs, Identity, RandK, TopK, Zero};
+    use crate::util::prop::{forall, slices_close, Gen};
+
+    fn mean_of(vs: &[Vec<f32>]) -> Vec<f32> {
+        let d = vs[0].len();
+        let mut m = vec![0.0f32; d];
+        for v in vs {
+            for (a, b) in m.iter_mut().zip(v) {
+                *a += b / vs.len() as f32;
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn prop_mean_preservation_all_compressors() {
+        forall(40, 0x5111C, |g: &mut Gen| {
+            let n = g.usize_in(1, 9);
+            let d = g.usize_in(8, 200);
+            let mut vs = g.worker_vecs(n, d);
+            let before = mean_of(&vs);
+            let comps: Vec<Box<dyn Compressor>> = vec![
+                Box::new(Grbs::new(4.0, (d / 4).max(1), 77)),
+                Box::new(RandK::new(4.0)),
+                Box::new(TopK::new(4.0)),
+                Box::new(Identity),
+                Box::new(Zero),
+            ];
+            for c in comps {
+                let mut copy = vs.clone();
+                psync(&mut copy, None, c.as_ref(), g.case);
+                let after = mean_of(&copy);
+                slices_close(&before, &after, 1e-4)
+                    .map_err(|e| format!("{}: mean not preserved: {e}", c.name()))?;
+            }
+            // keep vs binding used
+            vs[0][0] += 0.0;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_global_psync_agrees_with_generic_definition() {
+        // fast path (ranges) == direct formula v' = mean(C(v)) + v - C(v)
+        forall(40, 0x5112, |g: &mut Gen| {
+            let n = g.usize_in(2, 6);
+            let d = g.usize_in(16, 128);
+            let vs = g.worker_vecs(n, d);
+            let c = Grbs::new(2.0, (d / 8).max(2), 13);
+            let round = g.case;
+
+            let mut fast = vs.clone();
+            let info = psync(&mut fast, None, &c, round);
+            assert!(info.allreduce_compatible);
+
+            // direct dense computation
+            let sel = c.select(Ctx { round, worker: 0 }, &vs[0]);
+            let mut kept = vec![vec![0.0f32; d]; n];
+            for i in 0..n {
+                sel.apply(&vs[i], &mut kept[i]);
+            }
+            let kbar = mean_of(&kept);
+            for i in 0..n {
+                let expect: Vec<f32> = (0..d).map(|j| kbar[j] + (vs[i][j] - kept[i][j])).collect();
+                slices_close(&fast[i], &expect, 1e-5)
+                    .map_err(|e| format!("worker {i}: {e}"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn residuals_match_definition() {
+        forall(30, 0x5113, |g: &mut Gen| {
+            let n = g.usize_in(2, 5);
+            let d = g.usize_in(8, 100);
+            let vs = g.worker_vecs(n, d);
+            for c in [
+                Box::new(Grbs::new(2.0, (d / 4).max(2), 5)) as Box<dyn Compressor>,
+                Box::new(RandK::new(2.0)),
+            ] {
+                let mut work = vs.clone();
+                let mut res = vec![vec![0.0f32; d]; n];
+                let info = psync(&mut work, Some(&mut res), c.as_ref(), g.case);
+                for i in 0..n {
+                    let sel = info.selection_for(i);
+                    let mut kept = vec![0.0f32; d];
+                    sel.apply(&vs[i], &mut kept);
+                    let expect: Vec<f32> = vs[i].iter().zip(&kept).map(|(a, b)| a - b).collect();
+                    slices_close(&res[i], &expect, 0.0)
+                        .map_err(|e| format!("{} w{i}: {e}", c.name()))?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn identity_fully_syncs_zero_is_noop() {
+        let mut vs = vec![vec![1.0f32, 2.0], vec![3.0, 6.0]];
+        let orig = vs.clone();
+        psync(&mut vs, None, &Zero, 0);
+        assert_eq!(vs, orig);
+        psync(&mut vs, None, &Identity, 0);
+        assert_eq!(vs[0], vec![2.0, 4.0]);
+        assert_eq!(vs[0], vs[1]);
+    }
+
+    #[test]
+    fn unselected_range_iteration_covers_complement() {
+        let info = PsyncRound {
+            selections: vec![Selection::Blocks { block_size: 4, blocks: vec![1, 3] }],
+            upload_bits_per_worker: 0,
+            allreduce_compatible: true,
+        };
+        let mut got = vec![];
+        info.for_each_unselected(0, 18, |s, e| got.push((s, e)));
+        assert_eq!(got, vec![(0, 4), (8, 12), (16, 18)]);
+    }
+
+    #[test]
+    fn single_worker_psync_is_compress_decompress() {
+        // n=1: v' = C(v) + (v - C(v)) = v
+        let mut vs = vec![vec![1.0f32, -2.0, 3.0, -4.0, 5.0, -6.0, 7.0, -8.0]];
+        let orig = vs.clone();
+        psync(&mut vs, None, &Grbs::new(2.0, 4, 3), 12);
+        assert_eq!(vs, orig);
+    }
+}

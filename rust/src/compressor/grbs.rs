@@ -1,0 +1,174 @@
+//! Globally-Randomized Blockwise Sparsifier (paper §3.3, Definition 2).
+//!
+//! GRBS partitions a flat tensor into `num_blocks` blocks and, each round,
+//! picks `num_blocks / R` blocks uniformly at random using a seed schedule
+//! shared by all workers.  Consequences (paper's two bullets):
+//!
+//!   * **AllReduce / parameter-server compatibility** — every worker selects
+//!     the *same* blocks, so compressed messages can be summed directly and
+//!     no index metadata travels on the wire;
+//!   * **`1/R`-approximate in expectation** — E‖C(v)−v‖² = (1−k/B)‖v‖² for
+//!     uniformly chosen k-of-B blocks (verified by a property test below).
+//!
+//! The draw for round `t` is `Rng::stream(seed, t)`, a pure function of the
+//! shared `(seed, round)` pair — the Rust equivalent of the paper's
+//! "synchronized random seed".
+
+use super::{Compressor, Ctx, Selection};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct Grbs {
+    ratio: f64,
+    num_blocks: usize,
+    keep: usize,
+    seed: u64,
+}
+
+impl Grbs {
+    /// `ratio` = R_C (keep B/R blocks); `num_blocks` = B; `seed` shared by
+    /// all workers. `keep` is rounded to at least 1 block so R ≤ B.
+    pub fn new(ratio: f64, num_blocks: usize, seed: u64) -> Self {
+        assert!(ratio >= 1.0, "compression ratio must be >= 1");
+        assert!(num_blocks >= 1);
+        let keep = ((num_blocks as f64 / ratio).round() as usize).clamp(1, num_blocks);
+        Grbs { ratio, num_blocks, keep, seed }
+    }
+
+    /// Convenience: pick a block count so each block is ~`target_block` long.
+    pub fn with_block_len(ratio: f64, d: usize, target_block: usize, seed: u64) -> Self {
+        let nb = (d + target_block - 1) / target_block.max(1);
+        // Need at least `ratio` blocks so that keep=1 is a valid R:1 draw.
+        let nb = nb.max(ratio.ceil() as usize).max(1);
+        Self::new(ratio, nb, seed)
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.num_blocks
+    }
+    pub fn keep(&self) -> usize {
+        self.keep
+    }
+
+    /// Effective ratio after rounding keep to an integer block count.
+    pub fn effective_ratio(&self) -> f64 {
+        self.num_blocks as f64 / self.keep as f64
+    }
+}
+
+impl Compressor for Grbs {
+    fn select(&self, ctx: Ctx, v: &[f32]) -> Selection {
+        let block_size = (v.len() + self.num_blocks - 1) / self.num_blocks;
+        let mut rng = Rng::stream(self.seed, ctx.round); // worker-independent
+        let mut blocks = rng.choose_k(self.num_blocks, self.keep);
+        blocks.sort_unstable();
+        Selection::Blocks { block_size, blocks }
+    }
+
+    fn ratio(&self) -> f64 {
+        self.ratio
+    }
+
+    fn delta(&self) -> f64 {
+        self.keep as f64 / self.num_blocks as f64
+    }
+
+    fn globally_synchronized(&self) -> bool {
+        true
+    }
+
+    fn name(&self) -> String {
+        format!("grbs(R={}, B={})", self.ratio, self.num_blocks)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::math::norm2;
+    use crate::util::prop::{forall, Gen};
+
+    #[test]
+    fn keeps_expected_block_count() {
+        let g = Grbs::new(4.0, 64, 1);
+        assert_eq!(g.keep(), 16);
+        let g = Grbs::new(1024.0, 1024, 1);
+        assert_eq!(g.keep(), 1);
+        // rounding: R larger than B clamps to 1 block
+        let g = Grbs::new(256.0, 64, 1);
+        assert_eq!(g.keep(), 1);
+    }
+
+    #[test]
+    fn same_selection_on_all_workers_and_rounds_vary() {
+        let g = Grbs::new(8.0, 32, 42);
+        let v = vec![1.0f32; 320];
+        let s0 = g.select(Ctx { round: 7, worker: 0 }, &v);
+        let s1 = g.select(Ctx { round: 7, worker: 3 }, &v);
+        assert_eq!(s0, s1);
+        let s2 = g.select(Ctx { round: 8, worker: 0 }, &v);
+        assert_ne!(s0, s2, "different rounds should (generically) differ");
+    }
+
+    #[test]
+    fn prop_expected_contraction_is_one_minus_delta() {
+        // E||C(v)-v||^2 = (1 - k/B) ||v||^2 averaged over rounds.
+        forall(5, 0x6EB5, |g: &mut Gen| {
+            let nb = 32;
+            let bs = 8;
+            let d = nb * bs;
+            let v = g.vec(d);
+            let c = Grbs::new(4.0, nb, g.rng.next_u64());
+            let rounds = 3000;
+            let mut acc = 0.0f64;
+            let mut kept = vec![0.0f32; d];
+            for t in 0..rounds {
+                let sel = c.select(Ctx { round: t, worker: 0 }, &v);
+                sel.apply(&v, &mut kept);
+                let resid2: f64 = v
+                    .iter()
+                    .zip(&kept)
+                    .map(|(a, b)| ((a - b) as f64) * ((a - b) as f64))
+                    .sum();
+                acc += resid2;
+            }
+            let mean = acc / rounds as f64;
+            let expect = (1.0 - c.delta()) * norm2(&v);
+            crate::prop_assert!(
+                (mean - expect).abs() < 0.05 * expect.max(1e-9),
+                "E resid^2 = {mean}, expected {expect}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn blocks_uniformly_covered() {
+        let c = Grbs::new(8.0, 64, 9);
+        let v = vec![0.0f32; 64 * 4];
+        let mut counts = vec![0u32; 64];
+        let rounds = 8000;
+        for t in 0..rounds {
+            if let Selection::Blocks { blocks, .. } = c.select(Ctx { round: t, worker: 0 }, &v) {
+                for b in blocks {
+                    counts[b as usize] += 1;
+                }
+            }
+        }
+        let p_expect = c.keep() as f64 / 64.0;
+        for (b, &cnt) in counts.iter().enumerate() {
+            let p = cnt as f64 / rounds as f64;
+            assert!((p - p_expect).abs() < 0.03, "block {b}: p={p} vs {p_expect}");
+        }
+    }
+
+    #[test]
+    fn with_block_len_handles_small_d() {
+        let c = Grbs::with_block_len(1024.0, 512, 1024, 7);
+        // d smaller than a block: must still have >= ratio blocks
+        assert!(c.num_blocks() >= 1024);
+        let v = vec![1.0f32; 512];
+        let sel = c.select(Ctx { round: 0, worker: 0 }, &v);
+        assert!(sel.count(512) <= 1); // many blocks are empty past d
+    }
+}

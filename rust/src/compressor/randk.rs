@@ -1,0 +1,139 @@
+//! Random-k element sparsifier and per-worker random-block sparsifier.
+//!
+//! `RandK` is the classic random sparsifier the paper contrasts GRBS with:
+//! each *worker* draws its own k random coordinates (decorrelated via the
+//! worker id), so messages carry index metadata and cannot be AllReduced
+//! without decompression.  Used in ablations (DESIGN.md ABL).
+
+use super::{Compressor, Ctx, Selection};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct RandK {
+    ratio: f64,
+    seed: u64,
+}
+
+impl RandK {
+    pub fn new(ratio: f64) -> Self {
+        Self::with_seed(ratio, 0x7A4D)
+    }
+    pub fn with_seed(ratio: f64, seed: u64) -> Self {
+        assert!(ratio >= 1.0);
+        RandK { ratio, seed }
+    }
+}
+
+impl Compressor for RandK {
+    fn select(&self, ctx: Ctx, v: &[f32]) -> Selection {
+        let d = v.len();
+        let k = ((d as f64 / self.ratio).round() as usize).clamp(1, d);
+        let mut rng = Rng::stream(self.seed ^ ((ctx.worker as u64) << 32), ctx.round);
+        let mut ix = rng.choose_k(d, k);
+        ix.sort_unstable();
+        Selection::Indices(ix)
+    }
+
+    fn ratio(&self) -> f64 {
+        self.ratio
+    }
+
+    fn globally_synchronized(&self) -> bool {
+        false
+    }
+
+    fn name(&self) -> String {
+        format!("randk(R={})", self.ratio)
+    }
+}
+
+/// Per-worker random *block* sparsifier: like GRBS but the draw also depends
+/// on the worker id.  Isolates the value of GRBS's "globally synchronized"
+/// property in ablations: same blockwise structure, no shared seed.
+#[derive(Clone, Debug)]
+pub struct RandBlock {
+    ratio: f64,
+    num_blocks: usize,
+    keep: usize,
+    seed: u64,
+}
+
+impl RandBlock {
+    pub fn new(ratio: f64, num_blocks: usize) -> Self {
+        assert!(ratio >= 1.0);
+        let keep = ((num_blocks as f64 / ratio).round() as usize).clamp(1, num_blocks);
+        RandBlock { ratio, num_blocks, keep, seed: 0xB10C }
+    }
+}
+
+impl Compressor for RandBlock {
+    fn select(&self, ctx: Ctx, v: &[f32]) -> Selection {
+        let block_size = (v.len() + self.num_blocks - 1) / self.num_blocks;
+        let mut rng = Rng::stream(self.seed ^ ((ctx.worker as u64) << 32), ctx.round);
+        let mut blocks = rng.choose_k(self.num_blocks, self.keep);
+        blocks.sort_unstable();
+        Selection::Blocks { block_size, blocks }
+    }
+
+    fn ratio(&self) -> f64 {
+        self.ratio
+    }
+
+    fn delta(&self) -> f64 {
+        self.keep as f64 / self.num_blocks as f64
+    }
+
+    fn globally_synchronized(&self) -> bool {
+        false
+    }
+
+    fn name(&self) -> String {
+        format!("randblock(R={}, B={})", self.ratio, self.num_blocks)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn randk_selects_k_unique_sorted() {
+        let c = RandK::new(8.0);
+        let v = vec![0.5f32; 256];
+        if let Selection::Indices(ix) = c.select(Ctx { round: 1, worker: 2 }, &v) {
+            assert_eq!(ix.len(), 32);
+            let mut s = ix.clone();
+            s.dedup();
+            assert_eq!(s.len(), 32);
+            assert!(ix.windows(2).all(|w| w[0] < w[1]));
+        } else {
+            panic!("expected indices");
+        }
+    }
+
+    #[test]
+    fn randk_workers_decorrelated() {
+        let c = RandK::new(8.0);
+        let v = vec![0.5f32; 256];
+        let a = c.select(Ctx { round: 1, worker: 0 }, &v);
+        let b = c.select(Ctx { round: 1, worker: 1 }, &v);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn randblock_workers_decorrelated() {
+        let c = RandBlock::new(4.0, 32);
+        let v = vec![0.5f32; 320];
+        let a = c.select(Ctx { round: 9, worker: 0 }, &v);
+        let b = c.select(Ctx { round: 9, worker: 1 }, &v);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn randk_deterministic_per_ctx() {
+        let c = RandK::new(4.0);
+        let v = vec![0.5f32; 64];
+        let ctx = Ctx { round: 5, worker: 3 };
+        assert_eq!(c.select(ctx, &v), c.select(ctx, &v));
+    }
+}

@@ -1,0 +1,137 @@
+//! Experiment configuration: optimizer specs, the paper's Table 3 compressor
+//! configurations, and the two workload suites (CIFAR-100-like and
+//! ImageNet-like substitutes, DESIGN.md §3).
+
+pub mod suite;
+pub mod table3;
+
+pub use suite::{LrSchedule, Suite};
+pub use table3::{table3, table3_for, Table3Row};
+
+use crate::compressor::{Grbs, Identity, Zero};
+use crate::optimizer::{Cser, CserImpl2, DistOptimizer, EfSgd, FullSgd, QsparseLocalSgd};
+
+/// Target length for GRBS blocks, in elements.  The paper uses blockwise
+/// sparsification so messages stay contiguous; we fix the block length and
+/// derive the block count per model size.
+pub const GRBS_BLOCK_LEN: usize = 64;
+
+/// A fully-specified distributed optimizer (algorithm + compressor config).
+#[derive(Clone, Debug, PartialEq)]
+pub enum OptSpec {
+    Sgd,
+    EfSgd { rc1: f64 },
+    Qsparse { rc1: f64, h: u64 },
+    LocalSgd { h: u64 },
+    Csea { rc1: f64 },
+    CserPl { rc1: f64, h: u64 },
+    Cser { rc1: f64, rc2: f64, h: u64 },
+    /// CSER implementation II (Appendix A.4): same config as `Cser`,
+    /// memory-light GRBS-only implementation.
+    Cser2 { rc1: f64, rc2: f64, h: u64 },
+}
+
+impl OptSpec {
+    /// Overall compression ratio R_C (paper §5.1):
+    ///   CSER: 1 / (1/R_C2 + 1/(R_C1 · H));   QSparse/PL: R_C1 · H;
+    ///   EF-SGD/CSEA: R_C1;   SGD: 1.
+    pub fn overall_rc(&self) -> f64 {
+        match *self {
+            OptSpec::Sgd => 1.0,
+            OptSpec::EfSgd { rc1 } | OptSpec::Csea { rc1 } => rc1,
+            OptSpec::Qsparse { rc1, h } | OptSpec::CserPl { rc1, h } => rc1 * h as f64,
+            OptSpec::LocalSgd { h } => h as f64,
+            OptSpec::Cser { rc1, rc2, h } | OptSpec::Cser2 { rc1, rc2, h } => {
+                1.0 / (1.0 / rc2 + 1.0 / (rc1 * h as f64))
+            }
+        }
+    }
+
+    /// Family name as used in the paper's tables.
+    pub fn family(&self) -> &'static str {
+        match self {
+            OptSpec::Sgd => "SGD",
+            OptSpec::EfSgd { .. } => "EF-SGD",
+            OptSpec::Qsparse { .. } => "QSparse",
+            OptSpec::LocalSgd { .. } => "local-SGD",
+            OptSpec::Csea { .. } => "CSEA",
+            OptSpec::CserPl { .. } => "CSER-PL",
+            OptSpec::Cser { .. } => "CSER",
+            OptSpec::Cser2 { .. } => "CSER(II)",
+        }
+    }
+
+    /// Instantiate for a d-dimensional model, n workers, momentum beta.
+    /// `seed` decorrelates the GRBS streams of C1 and C2.
+    pub fn build(&self, init: &[f32], n: usize, beta: f32, seed: u64) -> Box<dyn DistOptimizer> {
+        let d = init.len();
+        let grbs = |r: f64, salt: u64| {
+            Box::new(Grbs::with_block_len(r, d, GRBS_BLOCK_LEN, seed ^ salt))
+        };
+        match *self {
+            OptSpec::Sgd => Box::new(FullSgd::new(init, n, beta)),
+            OptSpec::EfSgd { rc1 } => Box::new(EfSgd::new(init, n, beta, grbs(rc1, 0x1))),
+            OptSpec::Qsparse { rc1, h } => {
+                if rc1 <= 1.0 {
+                    Box::new(QsparseLocalSgd::new(init, n, beta, Box::new(Identity), h))
+                } else {
+                    Box::new(QsparseLocalSgd::new(init, n, beta, grbs(rc1, 0x2), h))
+                }
+            }
+            OptSpec::LocalSgd { h } => Box::new(QsparseLocalSgd::local_sgd(init, n, beta, h)),
+            OptSpec::Csea { rc1 } => Box::new(Cser::csea(init, n, beta, grbs(rc1, 0x3))),
+            OptSpec::CserPl { rc1, h } => {
+                Box::new(Cser::cser_pl(init, n, beta, grbs(rc1, 0x4), h))
+            }
+            OptSpec::Cser { rc1, rc2, h } => {
+                Box::new(Cser::new(init, n, beta, grbs(rc1, 0x5), grbs(rc2, 0x6), h))
+            }
+            OptSpec::Cser2 { rc1, rc2, h } => {
+                let c2: Box<dyn crate::compressor::Compressor> =
+                    if rc2.is_infinite() { Box::new(Zero) } else { grbs(rc2, 0x6) };
+                Box::new(CserImpl2::new(init, n, beta, grbs(rc1, 0x5), c2, h))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overall_rc_formulas() {
+        assert_eq!(OptSpec::Sgd.overall_rc(), 1.0);
+        assert_eq!(OptSpec::EfSgd { rc1: 64.0 }.overall_rc(), 64.0);
+        assert_eq!(OptSpec::Qsparse { rc1: 16.0, h: 8 }.overall_rc(), 128.0);
+        let c = OptSpec::Cser { rc1: 16.0, rc2: 512.0, h: 32 };
+        assert!((c.overall_rc() - 256.0).abs() < 1e-9);
+        assert_eq!(OptSpec::CserPl { rc1: 32.0, h: 32 }.overall_rc(), 1024.0);
+    }
+
+    #[test]
+    fn build_produces_working_optimizers() {
+        let init = vec![0.1f32; 256];
+        for spec in [
+            OptSpec::Sgd,
+            OptSpec::EfSgd { rc1: 4.0 },
+            OptSpec::Qsparse { rc1: 2.0, h: 2 },
+            OptSpec::LocalSgd { h: 2 },
+            OptSpec::Csea { rc1: 4.0 },
+            OptSpec::CserPl { rc1: 2.0, h: 2 },
+            OptSpec::Cser { rc1: 2.0, rc2: 4.0, h: 2 },
+            OptSpec::Cser2 { rc1: 2.0, rc2: 4.0, h: 2 },
+        ] {
+            let mut o = spec.build(&init, 4, 0.9, 42);
+            let grads = vec![vec![0.01f32; 256]; 4];
+            for _ in 0..4 {
+                o.step(&grads, 0.1);
+            }
+            let mut xbar = vec![0.0f32; 256];
+            o.mean_model(&mut xbar);
+            assert!(xbar.iter().all(|v| v.is_finite()), "{}", o.name());
+            let mean: f32 = xbar.iter().sum::<f32>() / 256.0;
+            assert!(mean < 0.1, "{} did not descend (mean {mean})", o.name());
+        }
+    }
+}

@@ -1,0 +1,164 @@
+//! Workload suites: the CIFAR-100 and ImageNet substitutes with the paper's
+//! §5.1 protocol (lr grids, schedules, momentum, 8 workers) scaled to the
+//! synthetic models, plus the paper-scale constants used by the simulated
+//! timeline (Figures 4/5/8/9).
+
+use crate::data::ClassDataset;
+use crate::models::Mlp;
+use crate::network::CostModel;
+
+/// Learning-rate schedule.
+#[derive(Clone, Debug)]
+pub enum LrSchedule {
+    /// Multiply by `factor` at each fraction-of-training milestone
+    /// (paper CIFAR-100: ×0.2 at epochs 60/120/160 of 200).
+    StepDecay { milestones: Vec<f64>, factor: f64 },
+    /// Linear warmup over `warmup` fraction then cosine to zero
+    /// (paper ImageNet: 5 warmup epochs + cosine over 120).
+    WarmupCosine { warmup: f64 },
+}
+
+impl LrSchedule {
+    /// lr multiplier at training progress `frac` in [0, 1].
+    pub fn multiplier(&self, frac: f64) -> f64 {
+        match self {
+            LrSchedule::StepDecay { milestones, factor } => {
+                let hits = milestones.iter().filter(|&&m| frac >= m).count();
+                factor.powi(hits as i32)
+            }
+            LrSchedule::WarmupCosine { warmup } => {
+                if frac < *warmup {
+                    (frac / warmup).max(1e-3)
+                } else {
+                    let t = (frac - warmup) / (1.0 - warmup);
+                    0.5 * (1.0 + (std::f64::consts::PI * t).cos())
+                }
+            }
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Suite {
+    pub name: &'static str,
+    /// Synthetic substitute model dims.
+    pub input: usize,
+    pub hidden: usize,
+    pub classes: usize,
+    pub epochs: usize,
+    pub batch_per_worker: usize,
+    pub workers: usize,
+    pub beta: f32,
+    pub lr_grid: Vec<f64>,
+    pub schedule: LrSchedule,
+    /// Paper-scale parameter count for the timeline/bits axes
+    /// (WRN-40-8 ≈ 35.7M; ResNet-50 ≈ 25.6M).
+    pub paper_d: usize,
+    /// Paper-scale per-step compute seconds (V100, from the paper's epoch
+    /// times; see EXPERIMENTS.md).
+    pub paper_compute_step: f64,
+    /// Paper's reported best-config time-to-accuracy speedup (for the
+    /// headline comparison printout).
+    pub paper_speedup: f64,
+}
+
+impl Suite {
+    pub fn cifar() -> Self {
+        Suite {
+            name: "cifar100",
+            input: 64,
+            hidden: 64,
+            classes: 100,
+            epochs: 20,
+            batch_per_worker: 16,
+            workers: 8,
+            beta: 0.9,
+            lr_grid: vec![0.05, 0.1, 0.5, 1.0],
+            schedule: LrSchedule::StepDecay { milestones: vec![0.3, 0.6, 0.8], factor: 0.2 },
+            paper_d: 35_700_000,
+            paper_compute_step: 0.11,
+            paper_speedup: 10.0,
+        }
+    }
+
+    pub fn imagenet() -> Self {
+        Suite {
+            name: "imagenet",
+            input: 128,
+            hidden: 96,
+            classes: 1000,
+            epochs: 16,
+            batch_per_worker: 32,
+            workers: 8,
+            beta: 0.9,
+            lr_grid: vec![0.025, 0.05, 0.1, 0.5],
+            schedule: LrSchedule::WarmupCosine { warmup: 5.0 / 120.0 },
+            paper_d: 25_600_000,
+            paper_compute_step: 0.30,
+            paper_speedup: 4.5,
+        }
+    }
+
+    /// Reduced variants for smoke tests and quick examples.
+    pub fn smoke(mut self) -> Self {
+        self.epochs = 4;
+        self.lr_grid = vec![0.1];
+        self
+    }
+
+    pub fn model(&self) -> Mlp {
+        Mlp::new(self.input, self.hidden, self.classes)
+    }
+
+    pub fn data(&self, seed: u64) -> (ClassDataset, ClassDataset) {
+        match self.name {
+            "cifar100" => ClassDataset::cifar100_like(seed),
+            "imagenet" => ClassDataset::imagenet_like(seed),
+            _ => ClassDataset::gaussian_mixture(
+                self.classes, self.input, 4096, 1024, 1.0, 2.0, 0.02, seed,
+            ),
+        }
+    }
+
+    pub fn cost_model(&self) -> CostModel {
+        CostModel { n: self.workers, compute_step: self.paper_compute_step, ..Default::default() }
+    }
+
+    pub fn by_name(name: &str) -> Option<Suite> {
+        match name {
+            "cifar100" | "cifar" => Some(Suite::cifar()),
+            "imagenet" => Some(Suite::imagenet()),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn step_decay_multipliers() {
+        let s = LrSchedule::StepDecay { milestones: vec![0.3, 0.6, 0.8], factor: 0.2 };
+        assert_eq!(s.multiplier(0.0), 1.0);
+        assert!((s.multiplier(0.35) - 0.2).abs() < 1e-12);
+        assert!((s.multiplier(0.7) - 0.04).abs() < 1e-12);
+        assert!((s.multiplier(0.9) - 0.008).abs() < 1e-12);
+    }
+
+    #[test]
+    fn warmup_cosine_shape() {
+        let s = LrSchedule::WarmupCosine { warmup: 0.1 };
+        assert!(s.multiplier(0.01) < 0.2);
+        assert!((s.multiplier(0.1) - 1.0).abs() < 1e-9);
+        assert!(s.multiplier(0.55) < 1.0);
+        assert!(s.multiplier(0.999) < 0.01);
+    }
+
+    #[test]
+    fn suites_resolve() {
+        assert_eq!(Suite::by_name("cifar").unwrap().classes, 100);
+        assert_eq!(Suite::by_name("imagenet").unwrap().classes, 1000);
+        assert!(Suite::by_name("nope").is_none());
+    }
+}

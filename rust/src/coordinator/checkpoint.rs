@@ -1,0 +1,190 @@
+//! Checkpointing: save/restore the flat training state.
+//!
+//! Long training runs (the paper's ImageNet runs take days) need restartable
+//! state.  Because the whole optimizer state lives in flat f32 vectors, a
+//! checkpoint is a tiny header + raw little-endian payloads:
+//!
+//! ```text
+//! magic "CSERCKPT" | version u32 | step u64 | n u32 | d u64 |
+//! n × d f32 (models) | flags u32 (bit0: has errors) | [n × d f32 errors]
+//! ```
+//!
+//! Integrity is protected by a FNV-1a checksum trailer; truncated or
+//! corrupted files fail loudly.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"CSERCKPT";
+const VERSION: u32 = 1;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    pub step: u64,
+    pub models: Vec<Vec<f32>>,
+    pub errors: Option<Vec<Vec<f32>>>,
+}
+
+fn fnv1a(data: &[u8], mut h: u64) -> u64 {
+    for &b in data {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+impl Checkpoint {
+    /// Capture from a running optimizer.
+    pub fn capture(opt: &dyn crate::optimizer::DistOptimizer, step: u64) -> Self {
+        let n = opt.n();
+        let models = (0..n).map(|i| opt.worker_model(i).to_vec()).collect();
+        let errors = if opt.local_error(0).is_some() {
+            Some((0..n).map(|i| opt.local_error(i).unwrap().to_vec()).collect())
+        } else {
+            None
+        };
+        Checkpoint { step, models, errors }
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&VERSION.to_le_bytes());
+        buf.extend_from_slice(&self.step.to_le_bytes());
+        let n = self.models.len() as u32;
+        let d = self.models[0].len() as u64;
+        buf.extend_from_slice(&n.to_le_bytes());
+        buf.extend_from_slice(&d.to_le_bytes());
+        for m in &self.models {
+            for v in m {
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        let flags: u32 = self.errors.is_some() as u32;
+        buf.extend_from_slice(&flags.to_le_bytes());
+        if let Some(es) = &self.errors {
+            for e in es {
+                for v in e {
+                    buf.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+        }
+        let sum = fnv1a(&buf, 0xcbf29ce484222325);
+        buf.extend_from_slice(&sum.to_le_bytes());
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(&buf)
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint, String> {
+        let mut buf = Vec::new();
+        std::fs::File::open(path.as_ref())
+            .and_then(|mut f| f.read_to_end(&mut buf))
+            .map_err(|e| format!("reading checkpoint: {e}"))?;
+        if buf.len() < 8 + 4 + 8 + 4 + 8 + 4 + 8 {
+            return Err("checkpoint truncated".into());
+        }
+        let (body, trailer) = buf.split_at(buf.len() - 8);
+        let want = u64::from_le_bytes(trailer.try_into().unwrap());
+        let got = fnv1a(body, 0xcbf29ce484222325);
+        if want != got {
+            return Err("checkpoint checksum mismatch".into());
+        }
+        let mut off = 0usize;
+        let take = |off: &mut usize, k: usize| -> &[u8] {
+            let s = &body[*off..*off + k];
+            *off += k;
+            s
+        };
+        if take(&mut off, 8) != MAGIC {
+            return Err("bad magic".into());
+        }
+        let version = u32::from_le_bytes(take(&mut off, 4).try_into().unwrap());
+        if version != VERSION {
+            return Err(format!("unsupported checkpoint version {version}"));
+        }
+        let step = u64::from_le_bytes(take(&mut off, 8).try_into().unwrap());
+        let n = u32::from_le_bytes(take(&mut off, 4).try_into().unwrap()) as usize;
+        let d = u64::from_le_bytes(take(&mut off, 8).try_into().unwrap()) as usize;
+        let need = n * d * 4;
+        if body.len() < off + need + 4 {
+            return Err("checkpoint truncated (models)".into());
+        }
+        let read_mat = |off: &mut usize| -> Vec<Vec<f32>> {
+            (0..n)
+                .map(|_| {
+                    let bytes = &body[*off..*off + d * 4];
+                    *off += d * 4;
+                    bytes
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect()
+                })
+                .collect()
+        };
+        let models = read_mat(&mut off);
+        let flags = u32::from_le_bytes(take(&mut off, 4).try_into().unwrap());
+        let errors = if flags & 1 != 0 {
+            if body.len() < off + need {
+                return Err("checkpoint truncated (errors)".into());
+            }
+            Some(read_mat(&mut off))
+        } else {
+            None
+        };
+        Ok(Checkpoint { step, models, errors })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressor::Grbs;
+    use crate::optimizer::{Cser, DistOptimizer};
+
+    #[test]
+    fn roundtrip_with_errors() {
+        let init = vec![0.5f32; 24];
+        let mut opt = Cser::cser_pl(&init, 3, 0.9, Box::new(Grbs::new(2.0, 4, 1)), 2);
+        let grads = vec![vec![0.1f32; 24]; 3];
+        for _ in 0..5 {
+            opt.step(&grads, 0.1);
+        }
+        let ck = Checkpoint::capture(&opt, 5);
+        let dir = std::env::temp_dir().join("cser_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("a.ckpt");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back, ck);
+        assert_eq!(back.step, 5);
+        assert_eq!(back.models.len(), 3);
+        assert!(back.errors.is_some());
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let ck = Checkpoint { step: 1, models: vec![vec![1.0, 2.0]], errors: None };
+        let dir = std::env::temp_dir().join("cser_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("b.ckpt");
+        ck.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err();
+        assert!(err.contains("checksum"), "{err}");
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let ck = Checkpoint { step: 2, models: vec![vec![0.0; 64]; 2], errors: None };
+        let dir = std::env::temp_dir().join("cser_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c.ckpt");
+        ck.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+    }
+}

@@ -1,0 +1,175 @@
+//! Run records: per-epoch curves + summary, with JSON/CSV emission.
+
+use crate::util::json::JsonWriter;
+use std::io::Write as _;
+use std::path::Path;
+
+/// One evaluation point (end of epoch).
+#[derive(Debug, Clone, Copy)]
+pub struct EpochPoint {
+    pub epoch: usize,
+    pub train_loss: f64,
+    pub test_acc: f64,
+    /// Cumulative per-worker upload bits at *paper scale* (see
+    /// `sim_trainer::Timeline`); the x-axis of Figures 5/9.
+    pub cum_bits: f64,
+    /// Cumulative simulated wall-clock seconds; the x-axis of Figures 4/8.
+    pub cum_seconds: f64,
+}
+
+/// A full training run.
+#[derive(Debug, Clone)]
+pub struct RunRecord {
+    pub name: String,
+    pub optimizer: String,
+    pub overall_rc: f64,
+    pub lr: f64,
+    pub seed: u64,
+    pub points: Vec<EpochPoint>,
+    pub diverged: bool,
+}
+
+impl RunRecord {
+    pub fn final_acc(&self) -> f64 {
+        if self.diverged {
+            f64::NAN
+        } else {
+            self.points.last().map(|p| p.test_acc).unwrap_or(f64::NAN)
+        }
+    }
+
+    pub fn best_acc(&self) -> f64 {
+        self.points.iter().map(|p| p.test_acc).fold(f64::NAN, f64::max)
+    }
+
+    pub fn final_train_loss(&self) -> f64 {
+        if self.diverged {
+            f64::INFINITY
+        } else {
+            self.points.last().map(|p| p.train_loss).unwrap_or(f64::INFINITY)
+        }
+    }
+
+    /// First simulated time at which test accuracy reached `target`
+    /// (time-to-accuracy; the headline speedup metric).
+    pub fn time_to_acc(&self, target: f64) -> Option<f64> {
+        self.points.iter().find(|p| p.test_acc >= target).map(|p| p.cum_seconds)
+    }
+
+    pub fn to_json(&self) -> String {
+        let mut w = JsonWriter::new();
+        w.begin_obj();
+        w.key("name").str(&self.name);
+        w.key("optimizer").str(&self.optimizer);
+        w.key("overall_rc").num(self.overall_rc);
+        w.key("lr").num(self.lr);
+        w.key("seed").int(self.seed as i64);
+        w.key("diverged").bool(self.diverged);
+        w.key("final_acc").num(self.final_acc());
+        for (key, f) in [
+            ("epoch", (|p: &EpochPoint| p.epoch as f64) as fn(&EpochPoint) -> f64),
+            ("train_loss", |p| p.train_loss),
+            ("test_acc", |p| p.test_acc),
+            ("cum_bits", |p| p.cum_bits),
+            ("cum_seconds", |p| p.cum_seconds),
+        ] {
+            w.key(key).nums(&self.points.iter().map(f).collect::<Vec<_>>());
+        }
+        w.end_obj();
+        w.finish()
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("epoch,train_loss,test_acc,cum_bits,cum_seconds\n");
+        for p in &self.points {
+            s.push_str(&format!(
+                "{},{},{},{},{}\n",
+                p.epoch, p.train_loss, p.test_acc, p.cum_bits, p.cum_seconds
+            ));
+        }
+        s
+    }
+}
+
+/// Write a collection of runs as a JSON array into `results/<name>.json`.
+pub fn write_results(dir: &str, name: &str, runs: &[RunRecord]) -> std::io::Result<String> {
+    std::fs::create_dir_all(dir)?;
+    let path = Path::new(dir).join(format!("{name}.json"));
+    let mut f = std::fs::File::create(&path)?;
+    f.write_all(b"[")?;
+    for (i, r) in runs.iter().enumerate() {
+        if i > 0 {
+            f.write_all(b",\n")?;
+        }
+        f.write_all(r.to_json().as_bytes())?;
+    }
+    f.write_all(b"]\n")?;
+    Ok(path.to_string_lossy().into_owned())
+}
+
+/// mean ± std over a slice (ignoring NaN entries; returns NaN if all NaN).
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    let clean: Vec<f64> = xs.iter().cloned().filter(|x| x.is_finite()).collect();
+    if clean.is_empty() {
+        return (f64::NAN, f64::NAN);
+    }
+    let m = clean.iter().sum::<f64>() / clean.len() as f64;
+    let v = clean.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / clean.len() as f64;
+    (m, v.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn record() -> RunRecord {
+        RunRecord {
+            name: "t".into(),
+            optimizer: "cser".into(),
+            overall_rc: 32.0,
+            lr: 0.1,
+            seed: 1,
+            diverged: false,
+            points: (0..3)
+                .map(|e| EpochPoint {
+                    epoch: e,
+                    train_loss: 2.0 - e as f64 * 0.5,
+                    test_acc: 0.3 * (e + 1) as f64,
+                    cum_bits: 1e6 * (e + 1) as f64,
+                    cum_seconds: 10.0 * (e + 1) as f64,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let r = record();
+        let j = Json::parse(&r.to_json()).unwrap();
+        assert_eq!(j.get("optimizer").unwrap().as_str(), Some("cser"));
+        assert_eq!(j.get("test_acc").unwrap().as_arr().unwrap().len(), 3);
+        assert!((j.get("final_acc").unwrap().as_f64().unwrap() - 0.9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn time_to_acc_finds_first_crossing() {
+        let r = record();
+        assert_eq!(r.time_to_acc(0.5), Some(20.0));
+        assert_eq!(r.time_to_acc(0.95), None);
+    }
+
+    #[test]
+    fn mean_std_ignores_nan() {
+        let (m, s) = mean_std(&[1.0, f64::NAN, 3.0]);
+        assert_eq!(m, 2.0);
+        assert_eq!(s, 1.0);
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let csv = record().to_csv();
+        assert_eq!(csv.lines().count(), 4);
+        assert!(csv.starts_with("epoch,"));
+    }
+}

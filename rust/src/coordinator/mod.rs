@@ -1,0 +1,19 @@
+//! The training coordinator: leader loop over simulated workers.
+//!
+//! * [`sim_trainer`] — fast path: pure-Rust models (the sweeps behind every
+//!   paper table/figure).  Per-worker gradients run on a scoped thread pool;
+//!   the optimizer step is the paper's synchronous algorithm; the timeline
+//!   and bit accounting use `network::CostModel` at paper scale.
+//! * [`lm_trainer`] — full-stack path: per-worker gradients come from the
+//!   AOT-compiled JAX/Pallas artifact through PJRT (`runtime`), everything
+//!   else identical.  This is the end-to-end driver's engine.
+//! * [`metrics`] — run records and results-file output (JSON/CSV).
+
+pub mod checkpoint;
+pub mod lm_trainer;
+pub mod metrics;
+pub mod plot;
+pub mod sim_trainer;
+
+pub use metrics::{EpochPoint, RunRecord};
+pub use sim_trainer::{train_classifier, TrainCfg};

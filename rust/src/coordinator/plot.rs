@@ -1,0 +1,369 @@
+//! SVG line-chart writer: turns run records into actual figures.
+//!
+//! The paper's artifacts are *figures*; `cser plot` regenerates them as SVG
+//! from the results/*.json run records (no plotting library offline).  One
+//! chart = one (x-metric, y-metric) pair over a set of runs, with axes,
+//! ticks, a legend, and log-x support for the bits axis.
+
+use super::metrics::{EpochPoint, RunRecord};
+use std::fmt::Write as _;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Axis {
+    Epoch,
+    Seconds,
+    Bits,
+    TestAcc,
+    TrainLoss,
+}
+
+impl Axis {
+    pub fn value(&self, p: &EpochPoint) -> f64 {
+        match self {
+            Axis::Epoch => p.epoch as f64,
+            Axis::Seconds => p.cum_seconds,
+            Axis::Bits => p.cum_bits,
+            Axis::TestAcc => p.test_acc * 100.0,
+            Axis::TrainLoss => p.train_loss,
+        }
+    }
+    pub fn label(&self) -> &'static str {
+        match self {
+            Axis::Epoch => "epoch",
+            Axis::Seconds => "simulated training time (s)",
+            Axis::Bits => "communicated bits (per worker)",
+            Axis::TestAcc => "test accuracy (%)",
+            Axis::TrainLoss => "training loss",
+        }
+    }
+    pub fn log_scale(&self) -> bool {
+        matches!(self, Axis::Bits)
+    }
+    pub fn parse(s: &str) -> Option<Axis> {
+        Some(match s {
+            "epoch" => Axis::Epoch,
+            "seconds" | "time" => Axis::Seconds,
+            "bits" | "comm" => Axis::Bits,
+            "acc" | "test_acc" => Axis::TestAcc,
+            "loss" | "train_loss" => Axis::TrainLoss,
+            _ => return None,
+        })
+    }
+}
+
+const PALETTE: [&str; 8] =
+    ["#1f77b4", "#d62728", "#2ca02c", "#ff7f0e", "#9467bd", "#8c564b", "#17becf", "#7f7f7f"];
+const W: f64 = 640.0;
+const H: f64 = 420.0;
+const ML: f64 = 64.0; // margins
+const MR: f64 = 16.0;
+const MT: f64 = 34.0;
+const MB: f64 = 48.0;
+
+fn nice_ticks(lo: f64, hi: f64, n: usize) -> Vec<f64> {
+    if !(hi > lo) {
+        return vec![lo];
+    }
+    let span = hi - lo;
+    let raw = span / n as f64;
+    let mag = 10f64.powf(raw.log10().floor());
+    let step = [1.0, 2.0, 5.0, 10.0]
+        .iter()
+        .map(|m| m * mag)
+        .find(|s| span / s <= n as f64)
+        .unwrap_or(mag * 10.0);
+    let start = (lo / step).ceil() * step;
+    let mut t = vec![];
+    let mut v = start;
+    while v <= hi + 1e-9 * span {
+        t.push(v);
+        v += step;
+    }
+    t
+}
+
+fn fmt_tick(v: f64) -> String {
+    if v == 0.0 {
+        "0".into()
+    } else if v.abs() >= 1e9 {
+        format!("{:.0}G", v / 1e9)
+    } else if v.abs() >= 1e6 {
+        format!("{:.0}M", v / 1e6)
+    } else if v.abs() >= 1e4 {
+        format!("{:.0}k", v / 1e3)
+    } else if v.abs() < 0.01 {
+        format!("{v:.0e}")
+    } else {
+        let s = format!("{v:.2}");
+        s.trim_end_matches('0').trim_end_matches('.').to_string()
+    }
+}
+
+/// Render one SVG chart of `runs` with the given axes.
+pub fn svg_chart(title: &str, runs: &[RunRecord], x: Axis, y: Axis) -> String {
+    let xt = |v: f64| if x.log_scale() { v.max(1.0).log10() } else { v };
+    // data ranges
+    let (mut xlo, mut xhi) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut ylo, mut yhi) = (f64::INFINITY, f64::NEG_INFINITY);
+    for r in runs {
+        for p in &r.points {
+            let (xv, yv) = (xt(x.value(p)), y.value(p));
+            if xv.is_finite() && yv.is_finite() {
+                xlo = xlo.min(xv);
+                xhi = xhi.max(xv);
+                ylo = ylo.min(yv);
+                yhi = yhi.max(yv);
+            }
+        }
+    }
+    if !xlo.is_finite() {
+        xlo = 0.0;
+        xhi = 1.0;
+        ylo = 0.0;
+        yhi = 1.0;
+    }
+    if yhi - ylo < 1e-12 {
+        yhi = ylo + 1.0;
+    }
+    if xhi - xlo < 1e-12 {
+        xhi = xlo + 1.0;
+    }
+    let px = |v: f64| ML + (xt(v) - xlo) / (xhi - xlo) * (W - ML - MR);
+    let py = |v: f64| H - MB - (v - ylo) / (yhi - ylo) * (H - MT - MB);
+
+    let mut s = String::new();
+    let _ = write!(
+        s,
+        r##"<svg xmlns="http://www.w3.org/2000/svg" width="{W}" height="{H}" viewBox="0 0 {W} {H}" font-family="sans-serif" font-size="11">"##
+    );
+    let _ = write!(s, r##"<rect width="{W}" height="{H}" fill="white"/>"##);
+    let _ = write!(
+        s,
+        r##"<text x="{}" y="18" text-anchor="middle" font-size="14">{}</text>"##,
+        W / 2.0,
+        title
+    );
+    // axes box
+    let _ = write!(
+        s,
+        r##"<rect x="{ML}" y="{MT}" width="{}" height="{}" fill="none" stroke="#999"/>"##,
+        W - ML - MR,
+        H - MT - MB
+    );
+    // y ticks + gridlines
+    for t in nice_ticks(ylo, yhi, 6) {
+        let yy = py(t);
+        let _ = write!(
+            s,
+            r##"<line x1="{ML}" y1="{yy:.1}" x2="{:.1}" y2="{yy:.1}" stroke="#eee"/>"##,
+            W - MR
+        );
+        let _ = write!(
+            s,
+            r##"<text x="{:.1}" y="{:.1}" text-anchor="end">{}</text>"##,
+            ML - 6.0,
+            yy + 4.0,
+            fmt_tick(t)
+        );
+    }
+    // x ticks (log: powers of 10)
+    let xticks: Vec<f64> = if x.log_scale() {
+        let lo = xlo.floor() as i32;
+        let hi = xhi.ceil() as i32;
+        (lo..=hi).map(|e| 10f64.powi(e)).collect()
+    } else {
+        nice_ticks(xlo, xhi, 7)
+    };
+    for t in xticks {
+        let xv = if x.log_scale() { t } else { t };
+        let xx = px(xv);
+        if xx < ML - 0.5 || xx > W - MR + 0.5 {
+            continue;
+        }
+        let _ = write!(
+            s,
+            r##"<line x1="{xx:.1}" y1="{MT}" x2="{xx:.1}" y2="{:.1}" stroke="#eee"/>"##,
+            H - MB
+        );
+        let _ = write!(
+            s,
+            r##"<text x="{xx:.1}" y="{:.1}" text-anchor="middle">{}</text>"##,
+            H - MB + 16.0,
+            fmt_tick(t)
+        );
+    }
+    // axis labels
+    let _ = write!(
+        s,
+        r##"<text x="{}" y="{}" text-anchor="middle">{}</text>"##,
+        W / 2.0,
+        H - 10.0,
+        x.label()
+    );
+    let _ = write!(
+        s,
+        r##"<text x="14" y="{}" text-anchor="middle" transform="rotate(-90 14 {})">{}</text>"##,
+        H / 2.0,
+        H / 2.0,
+        y.label()
+    );
+    // series
+    for (i, r) in runs.iter().enumerate() {
+        let color = PALETTE[i % PALETTE.len()];
+        let mut path = String::new();
+        let mut first = true;
+        for p in &r.points {
+            let (xv, yv) = (x.value(p), y.value(p));
+            if !xv.is_finite() || !yv.is_finite() {
+                continue;
+            }
+            let _ = write!(path, "{}{:.1},{:.1} ", if first { "M" } else { "L" }, px(xv), py(yv));
+            first = false;
+        }
+        let _ = write!(
+            s,
+            r##"<path d="{}" fill="none" stroke="{color}" stroke-width="1.8"/>"##,
+            path.trim_end()
+        );
+        // legend
+        let ly = MT + 14.0 + i as f64 * 15.0;
+        let _ = write!(
+            s,
+            r##"<line x1="{:.1}" y1="{ly:.1}" x2="{:.1}" y2="{ly:.1}" stroke="{color}" stroke-width="2"/>"##,
+            ML + 8.0,
+            ML + 28.0
+        );
+        let label = if r.diverged {
+            format!("{} (diverged)", r.optimizer)
+        } else {
+            r.optimizer.clone()
+        };
+        let _ = write!(
+            s,
+            r##"<text x="{:.1}" y="{:.1}">{}</text>"##,
+            ML + 33.0,
+            ly + 4.0,
+            label
+        );
+    }
+    s.push_str("</svg>");
+    s
+}
+
+/// Parse run records back from a results/*.json file (written by
+/// `metrics::write_results`).
+pub fn load_records(path: &str) -> Result<Vec<RunRecord>, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+    let j = crate::util::json::Json::parse(&text)?;
+    let arr = j.as_arr().ok_or("expected a JSON array of runs")?;
+    arr.iter()
+        .map(|r| {
+            let f = |k: &str| -> Result<Vec<f64>, String> {
+                Ok(r.get(k)
+                    .and_then(|v| v.as_arr())
+                    .ok_or_else(|| format!("missing {k}"))?
+                    .iter()
+                    .map(|x| x.as_f64().unwrap_or(f64::NAN))
+                    .collect())
+            };
+            let (ep, tl, ta, cb, cs) = (
+                f("epoch")?,
+                f("train_loss")?,
+                f("test_acc")?,
+                f("cum_bits")?,
+                f("cum_seconds")?,
+            );
+            let points = (0..ep.len())
+                .map(|i| EpochPoint {
+                    epoch: ep[i] as usize,
+                    train_loss: tl[i],
+                    test_acc: ta[i],
+                    cum_bits: cb[i],
+                    cum_seconds: cs[i],
+                })
+                .collect();
+            Ok(RunRecord {
+                name: r.get("name").and_then(|v| v.as_str()).unwrap_or("").to_string(),
+                optimizer: r
+                    .get("optimizer")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("?")
+                    .to_string(),
+                overall_rc: r.get("overall_rc").and_then(|v| v.as_f64()).unwrap_or(f64::NAN),
+                lr: r.get("lr").and_then(|v| v.as_f64()).unwrap_or(f64::NAN),
+                seed: r.get("seed").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64,
+                diverged: r.get("diverged").and_then(|v| v.as_bool()).unwrap_or(false),
+                points,
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake(name: &str) -> RunRecord {
+        RunRecord {
+            name: name.into(),
+            optimizer: name.into(),
+            overall_rc: 32.0,
+            lr: 0.1,
+            seed: 1,
+            diverged: false,
+            points: (1..=10)
+                .map(|e| EpochPoint {
+                    epoch: e,
+                    train_loss: 2.0 / e as f64,
+                    test_acc: 0.08 * e as f64,
+                    cum_bits: 1e7 * e as f64,
+                    cum_seconds: 3.0 * e as f64,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn svg_is_well_formed_and_has_series() {
+        let runs = vec![fake("SGD"), fake("CSER")];
+        let svg = svg_chart("acc vs epoch", &runs, Axis::Epoch, Axis::TestAcc);
+        assert!(svg.starts_with("<svg"));
+        assert!(svg.ends_with("</svg>"));
+        assert_eq!(svg.matches("<path").count(), 2);
+        assert!(svg.contains("CSER"));
+        assert!(svg.contains("epoch"));
+    }
+
+    #[test]
+    fn log_bits_axis() {
+        let runs = vec![fake("CSER")];
+        let svg = svg_chart("acc vs comm", &runs, Axis::Bits, Axis::TestAcc);
+        assert!(svg.contains("communicated bits"));
+        // power-of-ten tick labels like 10M/100M present
+        assert!(svg.contains('M') || svg.contains('G'));
+    }
+
+    #[test]
+    fn roundtrip_via_results_file() {
+        let runs = vec![fake("SGD")];
+        let dir = std::env::temp_dir().join("cser_plot_test");
+        let p = crate::coordinator::metrics::write_results(
+            dir.to_str().unwrap(),
+            "plot_roundtrip",
+            &runs,
+        )
+        .unwrap();
+        let loaded = load_records(&p).unwrap();
+        assert_eq!(loaded.len(), 1);
+        assert_eq!(loaded[0].optimizer, "SGD");
+        assert_eq!(loaded[0].points.len(), 10);
+        assert!((loaded[0].points[4].test_acc - 0.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn nice_ticks_cover_range() {
+        let t = nice_ticks(0.0, 87.3, 6);
+        assert!(t.len() >= 3 && t.len() <= 8);
+        assert!(t[0] >= 0.0 && *t.last().unwrap() <= 87.3 + 1e-9);
+    }
+}

@@ -1,0 +1,236 @@
+//! Fast-path distributed training loop over the pure-Rust model zoo.
+//!
+//! One iteration = every worker samples a minibatch from its own shard,
+//! computes a gradient at its *local* model (the optimizers maintain
+//! bifurcated models — worker i's gradient must be evaluated at x_{i,t-1},
+//! paper Algorithm 2 line 5), then one synchronous optimizer step.
+//!
+//! Timeline semantics (DESIGN.md §3): bits/time are accounted at *paper
+//! scale* — the optimizer reports its upload bits for our model's dimension
+//! d; we convert to the paper's model size via the per-step compressed
+//! fraction, then price the round with the alpha-beta cost model.  The
+//! resulting curves are the substitutes for Figures 4/5/8/9.
+
+use super::metrics::{EpochPoint, RunRecord};
+use crate::data::{ClassDataset, Shard};
+use crate::models::GradModel;
+use crate::network::CostModel;
+use crate::optimizer::DistOptimizer;
+use crate::util::pool::scope_map;
+
+#[derive(Clone, Debug)]
+pub struct TrainCfg {
+    pub epochs: usize,
+    pub batch_per_worker: usize,
+    pub seed: u64,
+    /// Base learning rate; multiplied by `lr_multiplier(progress)`.
+    pub lr: f64,
+    pub lr_multiplier: fn(&crate::config::LrSchedule, f64) -> f64,
+    pub schedule: crate::config::LrSchedule,
+    /// Paper-scale parameter count for bit/time accounting.
+    pub paper_d: usize,
+    pub cost: CostModel,
+    /// Gradient-computation threads (<= workers).
+    pub threads: usize,
+    /// Stop early and mark diverged when train loss exceeds
+    /// `divergence_factor * initial_loss` or becomes non-finite.
+    pub divergence_factor: f64,
+}
+
+impl TrainCfg {
+    pub fn new(epochs: usize, batch_per_worker: usize, lr: f64, seed: u64) -> Self {
+        TrainCfg {
+            epochs,
+            batch_per_worker,
+            seed,
+            lr,
+            lr_multiplier: |s, f| s.multiplier(f),
+            schedule: crate::config::LrSchedule::StepDecay { milestones: vec![], factor: 1.0 },
+            paper_d: 1,
+            cost: CostModel::default(),
+            threads: crate::util::pool::default_threads(),
+            divergence_factor: 5.0,
+        }
+    }
+}
+
+/// Train `opt` on `(train, test)`; returns the full run record.
+pub fn train_classifier(
+    model: &dyn GradModel,
+    train: &ClassDataset,
+    test: &ClassDataset,
+    opt: &mut dyn DistOptimizer,
+    cfg: &TrainCfg,
+) -> RunRecord {
+    let n = opt.n();
+    let d = opt.dim();
+    assert_eq!(d, model.dim());
+    let mut shards = Shard::split(train.len(), n, cfg.seed);
+    let iters_per_epoch = (train.len() / (cfg.batch_per_worker * n)).max(1);
+
+    let mut grads: Vec<Vec<f32>> = vec![vec![0.0; d]; n];
+    let mut batches: Vec<Vec<u32>> = vec![Vec::new(); n];
+    let mut xbar = vec![0.0f32; d];
+    let mut points = Vec::with_capacity(cfg.epochs);
+    let mut diverged = false;
+    let mut initial_loss = f64::NAN;
+    let mut cum_bits = 0.0f64;
+    let mut cum_seconds = 0.0f64;
+    let scale = cfg.paper_d as f64 / d as f64;
+
+    'outer: for epoch in 0..cfg.epochs {
+        let frac = epoch as f64 / cfg.epochs as f64;
+        let eta = (cfg.lr * (cfg.lr_multiplier)(&cfg.schedule, frac)) as f32;
+        let mut loss_sum = 0.0f64;
+        for _ in 0..iters_per_epoch {
+            for (w, shard) in shards.iter_mut().enumerate() {
+                shard.sample_batch(cfg.batch_per_worker, &mut batches[w]);
+            }
+            // parallel per-worker gradients at each worker's local model
+            let worker_out: Vec<(Vec<f32>, f32)> = {
+                let opt_ref: &dyn DistOptimizer = opt;
+                let batches_ref = &batches;
+                scope_map(n, cfg.threads, move |w| {
+                    let mut g = vec![0.0f32; d];
+                    let loss = model.loss_grad(
+                        opt_ref.worker_model(w),
+                        train,
+                        &batches_ref[w],
+                        &mut g,
+                    );
+                    (g, loss)
+                })
+            };
+            let mut step_loss = 0.0f64;
+            for (w, (g, l)) in worker_out.into_iter().enumerate() {
+                grads[w] = g;
+                step_loss += l as f64 / n as f64;
+            }
+            loss_sum += step_loss;
+            if initial_loss.is_nan() {
+                initial_loss = step_loss;
+            }
+            if !step_loss.is_finite() || step_loss > cfg.divergence_factor * initial_loss {
+                diverged = true;
+            }
+
+            let stats = opt.step(&grads, eta);
+            // paper-scale accounting
+            cum_seconds += cfg.cost.compute_step;
+            if stats.grad_bits > 0 {
+                let bits = stats.grad_bits as f64 * scale;
+                let rt = cfg.cost.sync_round(bits as u64, stats.grad_allreduce, cfg.cost.n.min(8) as f64);
+                cum_bits += rt.wire.total_bits() as f64;
+                cum_seconds += rt.seconds;
+            }
+            if stats.model_bits > 0 {
+                let bits = stats.model_bits as f64 * scale;
+                let rt = cfg.cost.sync_round(bits as u64, stats.model_allreduce, cfg.cost.n.min(8) as f64);
+                cum_bits += rt.wire.total_bits() as f64;
+                cum_seconds += rt.seconds;
+            }
+            if diverged {
+                break;
+            }
+        }
+        let train_loss = loss_sum / iters_per_epoch as f64;
+        opt.mean_model(&mut xbar);
+        let test_acc = if xbar.iter().all(|v| v.is_finite()) {
+            model.accuracy(&xbar, test) as f64
+        } else {
+            diverged = true;
+            f64::NAN
+        };
+        points.push(EpochPoint { epoch, train_loss, test_acc, cum_bits, cum_seconds });
+        if diverged {
+            break 'outer;
+        }
+    }
+
+    RunRecord {
+        name: String::new(),
+        optimizer: opt.name(),
+        overall_rc: f64::NAN,
+        lr: cfg.lr,
+        seed: cfg.seed,
+        points,
+        diverged,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{LrSchedule, OptSpec};
+    use crate::models::Mlp;
+
+    fn quick_cfg(epochs: usize, lr: f64, seed: u64) -> TrainCfg {
+        let mut c = TrainCfg::new(epochs, 16, lr, seed);
+        c.schedule = LrSchedule::StepDecay { milestones: vec![0.5], factor: 0.2 };
+        c.paper_d = 1_000_000;
+        c.threads = 4;
+        c
+    }
+
+    #[test]
+    fn sgd_learns_the_synthetic_mixture() {
+        let (tr, te) = ClassDataset::gaussian_mixture(10, 16, 2048, 512, 1.2, 0.8, 0.0, 3);
+        let m = Mlp::new(16, 32, 10);
+        let init = m.init(1);
+        let mut opt = OptSpec::Sgd.build(&init, 4, 0.9, 7);
+        let rec = train_classifier(&m, &tr, &te, opt.as_mut(), &quick_cfg(8, 0.1, 3));
+        assert!(!rec.diverged);
+        assert!(rec.final_acc() > 0.8, "acc={}", rec.final_acc());
+        // curves monotone-ish: bits and seconds strictly increasing
+        for w in rec.points.windows(2) {
+            assert!(w[1].cum_bits > w[0].cum_bits);
+            assert!(w[1].cum_seconds > w[0].cum_seconds);
+        }
+    }
+
+    #[test]
+    fn cser_matches_sgd_accuracy_at_moderate_compression() {
+        let (tr, te) = ClassDataset::gaussian_mixture(10, 16, 2048, 512, 1.2, 0.8, 0.0, 4);
+        let m = Mlp::new(16, 32, 10);
+        let init = m.init(2);
+        let cfg = quick_cfg(8, 0.1, 4);
+        let mut sgd = OptSpec::Sgd.build(&init, 4, 0.9, 7);
+        let acc_sgd = train_classifier(&m, &tr, &te, sgd.as_mut(), &cfg).final_acc();
+        let mut cser = OptSpec::Cser { rc1: 2.0, rc2: 4.0, h: 2 }.build(&init, 4, 0.9, 7);
+        let acc_cser = train_classifier(&m, &tr, &te, cser.as_mut(), &cfg).final_acc();
+        assert!(acc_cser > acc_sgd - 0.08, "sgd={acc_sgd} cser={acc_cser}");
+    }
+
+    #[test]
+    fn cser_communicates_fewer_bits_than_sgd() {
+        let (tr, te) = ClassDataset::gaussian_mixture(10, 16, 1024, 256, 1.2, 0.8, 0.0, 5);
+        let m = Mlp::new(16, 32, 10);
+        let init = m.init(2);
+        let cfg = quick_cfg(3, 0.1, 5);
+        let mut sgd = OptSpec::Sgd.build(&init, 4, 0.9, 7);
+        let bits_sgd = train_classifier(&m, &tr, &te, sgd.as_mut(), &cfg)
+            .points
+            .last()
+            .unwrap()
+            .cum_bits;
+        let mut cser = OptSpec::Cser { rc1: 8.0, rc2: 64.0, h: 8 }.build(&init, 4, 0.9, 7);
+        let bits_cser = train_classifier(&m, &tr, &te, cser.as_mut(), &cfg)
+            .points
+            .last()
+            .unwrap()
+            .cum_bits;
+        let ratio = bits_sgd / bits_cser;
+        assert!(ratio > 16.0, "only {ratio:.1}x fewer bits");
+    }
+
+    #[test]
+    fn divergence_is_detected() {
+        let (tr, te) = ClassDataset::gaussian_mixture(10, 16, 512, 128, 1.2, 0.8, 0.0, 6);
+        let m = Mlp::new(16, 32, 10);
+        let init = m.init(3);
+        let mut opt = OptSpec::Sgd.build(&init, 2, 0.9, 7);
+        let rec = train_classifier(&m, &tr, &te, opt.as_mut(), &quick_cfg(10, 50.0, 6));
+        assert!(rec.diverged);
+        assert!(rec.final_acc().is_nan());
+    }
+}

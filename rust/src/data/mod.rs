@@ -1,0 +1,16 @@
+//! Synthetic workloads standing in for the paper's datasets (DESIGN.md §3).
+//!
+//! * [`synth_class`] — Gaussian-mixture classification ("CIFAR-100-like" and
+//!   "ImageNet-like" presets) for the optimizer tables/figures;
+//! * [`lm_corpus`] — a Markov-chain token stream for the end-to-end
+//!   transformer run through the PJRT artifacts;
+//! * [`shard`] — disjoint per-worker splits (the paper's workers each sample
+//!   from their own local data D_i).
+
+pub mod lm_corpus;
+pub mod shard;
+pub mod synth_class;
+
+pub use lm_corpus::LmCorpus;
+pub use shard::Shard;
+pub use synth_class::ClassDataset;

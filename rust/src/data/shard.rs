@@ -1,0 +1,86 @@
+//! Per-worker data sharding.
+//!
+//! The paper's objective is F(x) = (1/n) Σ_i E_{z~D_i} f(x; z): each worker
+//! samples from its own shard.  We split the training set into n disjoint
+//! contiguous ranges after a seeded permutation, and give each worker an
+//! independent minibatch sampler over its shard.
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct Shard {
+    /// Global sample indices owned by this worker.
+    pub indices: Vec<u32>,
+    rng: Rng,
+}
+
+impl Shard {
+    /// Split `n_samples` into `n_workers` near-equal disjoint shards.
+    pub fn split(n_samples: usize, n_workers: usize, seed: u64) -> Vec<Shard> {
+        let mut perm: Vec<u32> = (0..n_samples as u32).collect();
+        let mut rng = Rng::stream(seed, 0x5AAD);
+        for i in (1..n_samples).rev() {
+            let j = rng.below(i + 1);
+            perm.swap(i, j);
+        }
+        (0..n_workers)
+            .map(|w| {
+                let lo = w * n_samples / n_workers;
+                let hi = (w + 1) * n_samples / n_workers;
+                Shard {
+                    indices: perm[lo..hi].to_vec(),
+                    rng: Rng::stream(seed ^ 0xBA7C4, w as u64),
+                }
+            })
+            .collect()
+    }
+
+    /// Sample a minibatch (with replacement) of global indices.
+    pub fn sample_batch(&mut self, batch: usize, out: &mut Vec<u32>) {
+        out.clear();
+        for _ in 0..batch {
+            out.push(self.indices[self.rng.below(self.indices.len())]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn shards_are_disjoint_and_cover() {
+        let shards = Shard::split(103, 8, 42);
+        assert_eq!(shards.len(), 8);
+        let mut all = HashSet::new();
+        for s in &shards {
+            for &i in &s.indices {
+                assert!(all.insert(i), "duplicate index {i}");
+            }
+        }
+        assert_eq!(all.len(), 103);
+        let sizes: Vec<usize> = shards.iter().map(|s| s.indices.len()).collect();
+        assert!(sizes.iter().all(|&s| s == 12 || s == 13), "{sizes:?}");
+    }
+
+    #[test]
+    fn batches_stay_in_shard() {
+        let mut shards = Shard::split(64, 4, 1);
+        let own: HashSet<u32> = shards[2].indices.iter().cloned().collect();
+        let mut b = Vec::new();
+        shards[2].sample_batch(32, &mut b);
+        assert_eq!(b.len(), 32);
+        assert!(b.iter().all(|i| own.contains(i)));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Shard::split(50, 2, 9);
+        let mut b = Shard::split(50, 2, 9);
+        let (mut ba, mut bb) = (Vec::new(), Vec::new());
+        a[0].sample_batch(8, &mut ba);
+        b[0].sample_batch(8, &mut bb);
+        assert_eq!(ba, bb);
+    }
+}

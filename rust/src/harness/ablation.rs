@@ -1,0 +1,203 @@
+//! Design-choice ablations called out in DESIGN.md (experiment id ABL).
+//!
+//! 1. **Budget split (Remark 1 / §4)** — at a fixed overall R_C, move budget
+//!    between the gradient path (C2) and the error-reset path (C1, H).  The
+//!    paper's example: at equal budget, (H=12, δ1=7/8, δ2=1/96) has a lower
+//!    error constant than (H=4, δ1=1/3, δ2=0).  We sweep configurations with
+//!    identical overall R_C, report the theoretical constant
+//!    C(δ1, δ2, H) = [4(1−δ1)/δ1² + 1]·2(1−δ2)·H² and the measured accuracy.
+//! 2. **Global seed (GRBS vs per-worker random blocks)** — isolates the
+//!    AllReduce-compatibility property; per-worker blocks also change the
+//!    PSync fixed point.
+//! 3. **Theorem-1 H-scaling** — on the quadratic model (known L), the
+//!    stationary ‖∇F(x̄)‖² floor should grow with H per the O(η²H²L²V₂) term.
+
+use crate::compressor::{Grbs, RandBlock, Zero};
+use crate::config::{OptSpec, Suite};
+use crate::coordinator::{train_classifier, TrainCfg};
+use crate::data::{ClassDataset, Shard};
+use crate::models::{GradModel, Quadratic};
+use crate::optimizer::{Cser, DistOptimizer};
+
+/// Theoretical compression-error constant from Theorem 1 (up to η²L²V₂).
+pub fn error_constant(delta1: f64, delta2: f64, h: f64) -> f64 {
+    (4.0 * (1.0 - delta1) / (delta1 * delta1) + 1.0) * 2.0 * (1.0 - delta2) * h * h
+}
+
+pub struct BudgetCell {
+    pub spec: OptSpec,
+    pub constant: f64,
+    pub acc: f64,
+    pub diverged: bool,
+}
+
+/// Budget-split sweep at fixed overall R_C.
+pub fn budget_split(suite: &Suite, rc: usize, quick: bool) -> Vec<BudgetCell> {
+    // all (rc1, rc2, h) power-of-two combos with the target overall rc
+    let mut specs: Vec<OptSpec> = Vec::new();
+    for e1 in 0..=10u32 {
+        for eh in 1..=10u32 {
+            let rc1 = (1u64 << e1) as f64;
+            let h = 1u64 << eh;
+            let denom = 1.0 / rc as f64 - 1.0 / (rc1 * h as f64);
+            if denom > 0.0 {
+                let rc2 = 1.0 / denom;
+                if rc2 >= 4.0 && rc2.log2().fract().abs() < 1e-9 && rc2 <= 4096.0 {
+                    specs.push(OptSpec::Cser { rc1, rc2, h });
+                }
+            }
+            // pure model budget: C2 = 0 (CSER-PL) when rc1*h == rc
+            if (rc1 * h as f64 - rc as f64).abs() < 1e-9 && rc1 >= 2.0 {
+                specs.push(OptSpec::CserPl { rc1, h });
+            }
+        }
+    }
+    // order by H and keep a diverse spread (extreme-H splits at the end
+    // otherwise dominate the truncation and all diverge)
+    specs.sort_by_key(|s| match *s {
+        OptSpec::Cser { h, .. } | OptSpec::CserPl { h, .. } => h,
+        _ => 0,
+    });
+    specs.dedup();
+    if specs.len() > 8 {
+        let stride = specs.len() as f64 / 8.0;
+        specs = (0..8).map(|i| specs[(i as f64 * stride) as usize].clone()).collect();
+    }
+    specs
+        .into_iter()
+        .map(|spec| {
+            let (d1, d2, h) = match spec {
+                OptSpec::Cser { rc1, rc2, h } => (1.0 / rc1, 1.0 / rc2, h as f64),
+                OptSpec::CserPl { rc1, h } => (1.0 / rc1, 0.0, h as f64),
+                _ => unreachable!(),
+            };
+            // fixed conservative lr: the comparison is *between splits*,
+            // not against a tuned baseline
+            let rec = super::sweep::run_cell(suite, &spec, 0.05, 1, quick);
+            BudgetCell {
+                constant: error_constant(d1, d2, h),
+                acc: rec.final_acc(),
+                diverged: rec.diverged,
+                spec,
+            }
+        })
+        .collect()
+}
+
+pub fn render_budget(cells: &[BudgetCell]) -> String {
+    let mut s = String::from(
+        "budget-split ablation (fixed overall R_C): theory constant vs measured acc\n",
+    );
+    for c in cells {
+        s.push_str(&format!(
+            "{:<40} C={:>10.1}  acc={}\n",
+            format!("{:?}", c.spec),
+            c.constant,
+            if c.diverged { "diverge".into() } else { format!("{:.2}%", c.acc * 100.0) }
+        ));
+    }
+    s
+}
+
+/// GRBS (shared seed) vs per-worker random blocks at the same ratio.
+pub fn global_seed_ablation(suite: &Suite, quick: bool) -> (f64, f64) {
+    let model = suite.model();
+    let (train, test) = suite.data(11);
+    let init = model.init(0x5EED);
+    let d = init.len();
+    let nb = (d / crate::config::GRBS_BLOCK_LEN).max(16);
+    let mut cfg = TrainCfg::new(if quick { 4 } else { suite.epochs }, suite.batch_per_worker, 0.05, 11);
+    cfg.schedule = suite.schedule.clone();
+    cfg.paper_d = suite.paper_d;
+    cfg.cost = suite.cost_model();
+
+    let mut grbs = Cser::new(
+        &init, suite.workers, suite.beta,
+        Box::new(Grbs::new(8.0, nb, 1)), Box::new(Zero), 8,
+    );
+    let acc_grbs =
+        train_classifier(&model, &train, &test, &mut grbs, &cfg).final_acc();
+    let mut perworker = Cser::new(
+        &init, suite.workers, suite.beta,
+        Box::new(RandBlock::new(8.0, nb)), Box::new(Zero), 8,
+    );
+    let acc_pw =
+        train_classifier(&model, &train, &test, &mut perworker, &cfg).final_acc();
+    (acc_grbs, acc_pw)
+}
+
+/// Theorem-1 H-scaling on the quadratic: returns (H, stationary ‖∇F‖²) pairs.
+pub fn h_scaling_quadratic(hs: &[u64], steps: usize) -> Vec<(u64, f64)> {
+    let (data, _) = ClassDataset::gaussian_mixture(2, 32, 1024, 16, 1.0, 1.0, 0.0, 21);
+    let (quad, _) = Quadratic::from_features(&data, 0.3, 22);
+    let n = 4;
+    let init = quad.init(1);
+    let d = init.len();
+    hs.iter()
+        .map(|&h| {
+            let mut opt = Cser::new(
+                &init, n, 0.0,
+                Box::new(Grbs::new(4.0, 8, 3)), Box::new(Zero), h,
+            );
+            let mut shards = Shard::split(data.len(), n, 5);
+            let mut grads = vec![vec![0.0f32; d]; n];
+            let mut batch = Vec::new();
+            let mut err_acc = 0.0f64;
+            let mut count = 0usize;
+            for step in 1..=steps as u64 {
+                for (w, g) in grads.iter_mut().enumerate() {
+                    shards[w].sample_batch(16, &mut batch);
+                    quad.loss_grad(opt.worker_model(w), &data, &batch, g);
+                }
+                // measure the accumulated error mass entering a reset round
+                if step % h == 0 && step > steps as u64 / 2 {
+                    let mass: f64 = (0..n)
+                        .map(|i| crate::util::math::norm2(opt.local_error(i).unwrap()))
+                        .sum::<f64>()
+                        / n as f64;
+                    err_acc += mass;
+                    count += 1;
+                }
+                opt.step(&grads, 0.05);
+            }
+            (h, err_acc / count.max(1) as f64)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_constant_matches_paper_examples() {
+        // paper §4: H=4, δ1=1/3, δ2=0 -> [4(2/3)/(1/9)+1]*2*16 = 25*32 = 800?
+        // The paper quotes 400 η²L²V₂ as [4(1-δ1)/δ1²+1] H² (without the 2);
+        // our constant keeps Theorem 1's factor 2: check proportionality.
+        let c_model_only = error_constant(1.0 / 3.0, 0.0, 4.0);
+        assert!((c_model_only - 800.0).abs() < 1e-9);
+        let c_balanced = error_constant(7.0 / 8.0, 1.0 / 96.0, 12.0);
+        // paper: < 236 η²L²V₂ in the H²[...](1-δ2) form × our factor 2
+        assert!(c_balanced < c_model_only, "{c_balanced} vs {c_model_only}");
+    }
+
+    #[test]
+    fn budget_split_produces_varied_constants() {
+        let suite = Suite::cifar().smoke();
+        let cells = budget_split(&suite, 32, true);
+        assert!(cells.len() >= 2, "need at least two budget splits");
+        let cs: Vec<f64> = cells.iter().map(|c| c.constant).collect();
+        assert!(cs.iter().cloned().fold(f64::MIN, f64::max) > cs.iter().cloned().fold(f64::MAX, f64::min));
+    }
+
+    #[test]
+    fn h_scaling_error_mass_grows_with_h() {
+        let pairs = h_scaling_quadratic(&[2, 16], 600);
+        // between random-walk (~H) and worst-case (~H^2) growth; at 8x H
+        // require at least ~2.5x mass and strict monotonicity
+        assert!(
+            pairs[1].1 > pairs[0].1 * 2.5,
+            "error mass should grow with H: {pairs:?}"
+        );
+    }
+}

@@ -1,0 +1,87 @@
+//! Figures 1/3 (CIFAR test-acc vs epoch), 6 (train-loss vs epoch) and the
+//! ImageNet twins 2/7/10: per-epoch curves for all optimizers at
+//! R_C ∈ {32, 256, 1024}.
+//!
+//! ImageNet protocol note (paper §5.2): configurations are NOT re-tuned per
+//! ratio on the expensive suite — the best CIFAR configurations are reused;
+//! we mirror that by accepting a pre-tuned lr table.
+
+use super::sweep::{run_cell, tune_lr};
+use crate::config::{table3_for, OptSpec, Suite};
+use crate::coordinator::metrics::{write_results, RunRecord};
+use crate::util::pool::scope_map;
+
+pub const FIGURE_RATIOS: [usize; 3] = [32, 256, 1024];
+
+pub struct CurveSet {
+    pub suite: String,
+    pub rc: usize,
+    pub runs: Vec<RunRecord>,
+}
+
+/// All families + the SGD reference at one ratio, one seed, full curves.
+pub fn curves_at(suite: &Suite, rc: usize, quick: bool, tuned: Option<&[(String, f64)]>) -> CurveSet {
+    let mut jobs: Vec<(OptSpec, f64)> = vec![(OptSpec::Sgd, suite.lr_grid.get(1).copied().unwrap_or(suite.lr_grid[0]))];
+    for fam in ["EF-SGD", "QSparse", "CSEA", "CSER", "CSER-PL"] {
+        if let Some(spec) = table3_for(fam, rc) {
+            let lr = tuned
+                .and_then(|t| t.iter().find(|(f, _)| f == fam).map(|(_, lr)| *lr))
+                .unwrap_or_else(|| tune_lr(suite, &spec, quick));
+            jobs.push((spec, lr));
+        }
+    }
+    let runs = scope_map(jobs.len(), jobs.len(), |i| {
+        let (spec, lr) = &jobs[i];
+        run_cell(suite, spec, *lr, 1, quick)
+    });
+    CurveSet { suite: suite.name.to_string(), rc, runs }
+}
+
+impl CurveSet {
+    pub fn write(&self) -> std::io::Result<String> {
+        write_results("results", &format!("curves_{}_rc{}", self.suite, self.rc), &self.runs)
+    }
+
+    /// Terminal rendering: accuracy-vs-epoch series per optimizer.
+    pub fn render(&self) -> String {
+        let mut s = format!("== {} @ R_C={} : test acc by epoch ==\n", self.suite, self.rc);
+        for r in &self.runs {
+            let series: Vec<String> = r
+                .points
+                .iter()
+                .step_by((r.points.len() / 8).max(1))
+                .map(|p| format!("{:.1}", p.test_acc * 100.0))
+                .collect();
+            s.push_str(&format!(
+                "{:<10} lr={:<5} {}  final={}\n",
+                r.optimizer,
+                r.lr,
+                series.join(" "),
+                if r.diverged { "diverge".into() } else { format!("{:.2}", r.final_acc() * 100.0) }
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_curves_have_epochwise_points() {
+        let suite = Suite::cifar().smoke();
+        let set = curves_at(&suite, 32, true, Some(&[
+            ("EF-SGD".into(), 0.1),
+            ("QSparse".into(), 0.1),
+            ("CSEA".into(), 0.1),
+            ("CSER".into(), 0.1),
+            ("CSER-PL".into(), 0.1),
+        ]));
+        assert!(set.runs.len() >= 5);
+        for r in &set.runs {
+            assert!(!r.points.is_empty(), "{} has no points", r.optimizer);
+        }
+        assert!(set.render().contains("final="));
+    }
+}

@@ -1,0 +1,23 @@
+//! Experiment harness: one module per paper artifact (DESIGN.md §6).
+//!
+//! * [`sweep`]    — shared machinery: lr tuning + seeded repetitions per
+//!   (optimizer, R_C) cell, parallel across cells.
+//! * [`tables`]   — Table 2 (CIFAR main) and Table 4 (extended, + CSEA /
+//!   CSER-PL / small ratios).
+//! * [`curves`]   — Figures 1/3 (test-acc vs epoch), 6 (train-loss vs
+//!   epoch), and their ImageNet twins 2/7/10.
+//! * [`timecomm`] — Figures 4/8 (acc vs simulated time), 5/9 (acc vs bits),
+//!   and the §5.3 headline time-to-accuracy speedups.
+//! * [`ablation`] — Remark-1 budget-split ablation, the GRBS global-seed
+//!   ablation, and the Lemma-3 H-scaling check on the quadratic model.
+//! * [`theory`]   — §4 validation: measured L/V₁/V₂, the Theorem-1 bound,
+//!   Corollary-1 linear speedup, sparsifier-family comparison.
+
+pub mod ablation;
+pub mod curves;
+pub mod sweep;
+pub mod tables;
+pub mod theory;
+pub mod timecomm;
+
+pub use sweep::{run_cell, tune_lr, CellResult, SweepCfg};

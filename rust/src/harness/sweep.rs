@@ -1,0 +1,146 @@
+//! Shared sweep machinery: one "cell" = (workload suite, optimizer spec,
+//! learning rate, seed) → one training run.
+//!
+//! Protocol mirrors the paper's §5.1: for each (optimizer, R_C) the lr is
+//! chosen from the suite's grid by best final *training loss* (divergent lrs
+//! lose automatically), then the chosen configuration is re-run over several
+//! seeds and reported mean±std — "diverge" if every seed diverged.
+
+use crate::config::{OptSpec, Suite};
+use crate::coordinator::metrics::{mean_std, RunRecord};
+use crate::coordinator::{train_classifier, TrainCfg};
+use crate::models::GradModel;
+use crate::util::pool::scope_map;
+
+#[derive(Clone, Debug)]
+pub struct SweepCfg {
+    pub seeds: u64,
+    /// Shrink epochs/data for smoke tests.
+    pub quick: bool,
+    /// Cells run in parallel; per-cell gradient computation stays
+    /// single-threaded to avoid oversubscription.
+    pub threads: usize,
+}
+
+impl Default for SweepCfg {
+    fn default() -> Self {
+        SweepCfg { seeds: 3, quick: false, threads: crate::util::pool::default_threads() }
+    }
+}
+
+fn train_cfg(suite: &Suite, lr: f64, seed: u64, quick: bool) -> TrainCfg {
+    let mut cfg = TrainCfg::new(
+        if quick { 6 } else { suite.epochs },
+        suite.batch_per_worker,
+        lr,
+        seed,
+    );
+    cfg.schedule = suite.schedule.clone();
+    cfg.paper_d = suite.paper_d;
+    cfg.cost = suite.cost_model();
+    cfg.threads = 1;
+    cfg
+}
+
+/// Run one full training run for `spec` at `lr` with `seed`.
+pub fn run_cell(suite: &Suite, spec: &OptSpec, lr: f64, seed: u64, quick: bool) -> RunRecord {
+    let model = suite.model();
+    let (train, test) = suite.data(seed);
+    let init = model.init(seed ^ 0x1717);
+    let mut opt = spec.build(&init, suite.workers, suite.beta, seed ^ 0xC0DE);
+    let cfg = train_cfg(suite, lr, seed, quick);
+    let mut rec = train_classifier(&model, &train, &test, opt.as_mut(), &cfg);
+    rec.name = format!("{}_{}_rc{}", suite.name, spec.family(), spec.overall_rc());
+    rec.optimizer = format!("{}", spec.family());
+    rec.overall_rc = spec.overall_rc();
+    rec
+}
+
+/// Pick the best lr from the suite grid by final training loss (seed 0).
+pub fn tune_lr(suite: &Suite, spec: &OptSpec, quick: bool) -> f64 {
+    let mut best = (f64::INFINITY, suite.lr_grid[0]);
+    let runs: Vec<(f64, f64)> = scope_map(suite.lr_grid.len(), suite.lr_grid.len(), |i| {
+        let lr = suite.lr_grid[i];
+        let rec = run_cell(suite, spec, lr, 0, quick);
+        (lr, rec.final_train_loss())
+    });
+    for (lr, loss) in runs {
+        if loss < best.0 {
+            best = (loss, lr);
+        }
+    }
+    best.1
+}
+
+/// Aggregated result of one (optimizer, R_C) cell.
+#[derive(Debug, Clone)]
+pub struct CellResult {
+    pub family: String,
+    pub overall_rc: f64,
+    pub lr: f64,
+    pub mean_acc: f64,
+    pub std_acc: f64,
+    pub diverged: bool,
+    pub records: Vec<RunRecord>,
+}
+
+impl CellResult {
+    /// Paper-table style string: "86.78 ±0.11" or "diverge".
+    pub fn display(&self) -> String {
+        if self.diverged {
+            "diverge".to_string()
+        } else {
+            format!("{:.2} ±{:.2}", 100.0 * self.mean_acc, 100.0 * self.std_acc)
+        }
+    }
+}
+
+/// Tune lr, then run `seeds` seeded repetitions of `spec`.
+pub fn run_spec(suite: &Suite, spec: &OptSpec, cfg: &SweepCfg) -> CellResult {
+    // lr tuning runs at the same length as the final runs: shortened tuning
+    // systematically over-selects aggressive lrs for high-R_C cells (the
+    // instability only shows after more error-reset rounds).
+    let lr = tune_lr(suite, spec, cfg.quick);
+    let records: Vec<RunRecord> = scope_map(cfg.seeds as usize, cfg.threads, |s| {
+        run_cell(suite, spec, lr, s as u64 + 1, cfg.quick)
+    });
+    let accs: Vec<f64> = records.iter().map(|r| r.final_acc()).collect();
+    let (mean, std) = mean_std(&accs);
+    CellResult {
+        family: spec.family().to_string(),
+        overall_rc: spec.overall_rc(),
+        lr,
+        mean_acc: mean,
+        std_acc: std,
+        diverged: accs.iter().all(|a| !a.is_finite()),
+        records,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_cell_produces_sane_record() {
+        let suite = Suite::cifar().smoke();
+        let rec = run_cell(&suite, &OptSpec::Sgd, 0.1, 1, true);
+        assert!(!rec.points.is_empty());
+        assert!(rec.final_acc() > 1.0 / 100.0, "better than chance");
+        assert_eq!(rec.optimizer, "SGD");
+    }
+
+    #[test]
+    fn run_spec_aggregates_seeds() {
+        let suite = Suite::cifar().smoke();
+        let cell = run_spec(
+            &suite,
+            &OptSpec::Cser { rc1: 2.0, rc2: 4.0, h: 2 },
+            &SweepCfg { seeds: 2, quick: true, threads: 2 },
+        );
+        assert_eq!(cell.records.len(), 2);
+        assert!(!cell.diverged);
+        assert!(cell.mean_acc.is_finite());
+        assert!(cell.display().contains('±'));
+    }
+}

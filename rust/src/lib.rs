@@ -1,0 +1,33 @@
+//! # cser — Communication-efficient SGD with Error Reset
+//!
+//! Full-system reproduction of *CSER: Communication-efficient SGD with Error
+//! Reset* (Xie, Zheng, Koyejo, Gupta, Li, Lin — NeurIPS 2020) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the distributed-training coordinator: the
+//!   paper's algorithms ([`optimizer`]), the GRBS compressor family
+//!   ([`compressor`]), partial synchronization ([`collective`]), the network
+//!   cost/accounting substrate ([`network`]), data sharding ([`data`]), a
+//!   fast pure-Rust model zoo for the paper's sweeps ([`models`]), the PJRT
+//!   runtime that executes AOT-compiled JAX/Pallas artifacts ([`runtime`]),
+//!   the training loop ([`coordinator`]) and one harness per paper
+//!   table/figure ([`harness`]).
+//! * **Layer 2** — `python/compile/model.py`: transformer LM fwd/bwd over a
+//!   flat parameter vector, AOT-lowered to HLO text (build-time only).
+//! * **Layer 1** — `python/compile/kernels/`: Pallas kernels (GRBS block
+//!   masking, fused CSER update, flash attention fwd+bwd).
+//!
+//! See DESIGN.md for the system inventory and the per-experiment index, and
+//! EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod collective;
+pub mod compressor;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod harness;
+pub mod models;
+pub mod network;
+pub mod optimizer;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,294 @@
+//! `cser` — launcher CLI for the CSER reproduction.
+//!
+//! Subcommands map 1:1 to DESIGN.md's experiment index:
+//!
+//! ```text
+//! cser quickstart                         tiny end-to-end smoke (PJRT + CSER)
+//! cser table2   [--suite cifar] [--seeds N] [--quick]
+//! cser table4   [--suite cifar] [--seeds N] [--quick]
+//! cser curves   [--suite cifar|imagenet] [--rc 32,256,1024] [--quick]
+//! cser timecomm [--suite ...] [--rc ...]  figures 4/5/8/9 + speedups
+//! cser ablation [--rc 128] [--quick]      budget split / global seed / H-scaling
+//! cser theory   [--quick]                 Theorem-1 bound, Corollary-1 speedup,
+//!                                          sparsifier families
+//! cser train-lm [--preset tiny|small] [--opt cser|sgd|...] [--steps N] ...
+//! cser kernel-check                       run L1 kernel artifacts vs Rust impls
+//! cser plot results/<file>.json [--x epoch|time|bits] [--y acc|loss]
+//!                                          render run records as an SVG figure
+//! ```
+
+use cser::config::{table3_for, OptSpec, Suite};
+use cser::coordinator::lm_trainer::{train_lm, LmCfg};
+use cser::coordinator::metrics::write_results;
+use cser::harness::{ablation, curves, sweep::SweepCfg, tables, theory, timecomm};
+use cser::runtime::{Manifest, Runtime};
+use cser::util::cli::Args;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        eprintln!("usage: cser <quickstart|table2|table4|curves|timecomm|ablation|train-lm|kernel-check> [flags]");
+        std::process::exit(2);
+    }
+    let known = [
+        "suite", "seeds", "quick", "rc", "preset", "opt", "steps", "workers", "lr", "beta",
+        "eval-every", "seed", "artifacts", "h", "rc1", "rc2", "x", "y", "out",
+    ];
+    let args = match Args::parse(argv, &known) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    let cmd = args.positional().first().cloned().unwrap_or_default();
+    if let Err(e) = run(&cmd, &args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn suite_of(args: &Args) -> anyhow::Result<Suite> {
+    let name = args.str("suite", "cifar");
+    Suite::by_name(&name).ok_or_else(|| anyhow::anyhow!("unknown suite '{name}'"))
+}
+
+fn sweep_cfg(args: &Args) -> anyhow::Result<SweepCfg> {
+    Ok(SweepCfg {
+        seeds: args.u64("seeds", 3)?,
+        quick: args.bool("quick", false)?,
+        threads: cser::util::pool::default_threads(),
+    })
+}
+
+fn opt_spec(args: &Args) -> anyhow::Result<OptSpec> {
+    let name = args.str("opt", "cser");
+    let rc1 = args.f64("rc1", 8.0)?;
+    let rc2 = args.f64("rc2", 64.0)?;
+    let h = args.u64("h", 8)?;
+    Ok(match name.as_str() {
+        "sgd" => OptSpec::Sgd,
+        "ef-sgd" | "efsgd" => OptSpec::EfSgd { rc1 },
+        "qsparse" => OptSpec::Qsparse { rc1, h },
+        "local-sgd" | "localsgd" => OptSpec::LocalSgd { h },
+        "csea" => OptSpec::Csea { rc1 },
+        "cser-pl" | "cserpl" => OptSpec::CserPl { rc1, h },
+        "cser" => OptSpec::Cser { rc1, rc2, h },
+        "cser2" => OptSpec::Cser2 { rc1, rc2, h },
+        other => anyhow::bail!("unknown optimizer '{other}'"),
+    })
+}
+
+fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
+    match cmd {
+        "quickstart" => quickstart(args),
+        "table2" => {
+            let suite = suite_of(args)?;
+            let cfg = sweep_cfg(args)?;
+            let t = tables::run_table(&suite, &tables::TABLE2_FAMILIES, &tables::TABLE2_RATIOS, &cfg);
+            println!("{}", t.render(&tables::TABLE2_FAMILIES, &tables::TABLE2_RATIOS));
+            println!("{}", t.shape_report());
+            let p = t.write(&format!("table2_{}", suite.name))?;
+            println!("records -> {p}");
+            Ok(())
+        }
+        "table4" => {
+            let suite = suite_of(args)?;
+            let cfg = sweep_cfg(args)?;
+            let t = tables::run_table(&suite, &tables::TABLE4_FAMILIES, &tables::TABLE4_RATIOS, &cfg);
+            println!("{}", t.render(&tables::TABLE4_FAMILIES, &tables::TABLE4_RATIOS));
+            println!("{}", t.shape_report());
+            let p = t.write(&format!("table4_{}", suite.name))?;
+            println!("records -> {p}");
+            Ok(())
+        }
+        "curves" | "timecomm" => {
+            let suite = suite_of(args)?;
+            let quick = args.bool("quick", false)?;
+            let rcs = args.usize_list("rc", &curves::FIGURE_RATIOS.to_vec())?;
+            for rc in rcs {
+                let set = curves::curves_at(&suite, rc, quick, None);
+                if cmd == "curves" {
+                    println!("{}", set.render());
+                } else {
+                    println!("{}", timecomm::render_timecomm(&set));
+                    let sp = timecomm::speedups(&set, 0.98);
+                    println!("{}", timecomm::render_speedups(&sp, suite.paper_speedup));
+                }
+                let p = set.write()?;
+                println!("records -> {p}");
+            }
+            Ok(())
+        }
+        "ablation" => {
+            let suite = suite_of(args)?;
+            let quick = args.bool("quick", false)?;
+            let rc = args.usize("rc", 128)?;
+            let cells = ablation::budget_split(&suite, rc, quick);
+            println!("{}", ablation::render_budget(&cells));
+            let (g, pw) = ablation::global_seed_ablation(&suite, quick);
+            println!(
+                "global-seed ablation: GRBS acc={:.2}%  per-worker random blocks acc={:.2}%",
+                g * 100.0,
+                pw * 100.0
+            );
+            let pairs = ablation::h_scaling_quadratic(&[2, 8, 32], if quick { 400 } else { 2000 });
+            println!("Lemma-3 H-scaling (quadratic, E||e||^2 entering reset):");
+            for (h, floor) in pairs {
+                println!("  H={h:<4} floor={floor:.3e}");
+            }
+            Ok(())
+        }
+        "train-lm" => {
+            let manifest = Manifest::load(args.str("artifacts", "artifacts"))?;
+            let rt = Runtime::cpu()?;
+            println!("PJRT platform: {}", rt.platform());
+            let preset = args.str("preset", "tiny");
+            let info = manifest.model(&preset)?;
+            println!(
+                "model {}: P={} ({:.1} MB f32), B={}, S={}, pallas={}",
+                info.name, info.params,
+                info.params as f64 * 4.0 / 1e6,
+                info.batch, info.seq_len, info.use_pallas
+            );
+            let cfg = LmCfg {
+                workers: args.usize("workers", 4)?,
+                steps: args.usize("steps", 200)?,
+                eval_every: args.usize("eval-every", 20)?,
+                lr: args.f64("lr", 0.25)?,
+                beta: args.f64("beta", 0.9)? as f32,
+                seed: args.u64("seed", 0)?,
+                warmup_frac: 0.05,
+                verbose: true,
+            };
+            let spec = opt_spec(args)?;
+            println!("optimizer: {:?} (overall R_C = {:.1})", spec, spec.overall_rc());
+            let run = train_lm(&rt, &manifest, info, &spec, &cfg)?;
+            println!(
+                "done: final eval loss {:.4} (log-vocab = {:.2}); {:.3}s/step; {}",
+                run.final_eval_loss,
+                (info.vocab as f64).ln(),
+                run.step_seconds,
+                if run.record.diverged { "DIVERGED" } else { "converged" }
+            );
+            let p = write_results("results", &format!("lm_{}_{}", preset, args.str("opt", "cser")), &[run.record])?;
+            println!("records -> {p}");
+            Ok(())
+        }
+        "theory" => {
+            let quick = args.bool("quick", false)?;
+            let steps = if quick { 300 } else { 1200 };
+            let r = theory::theorem1_check(4, 0.02, 4, 2.0, steps);
+            println!("Theorem 1 on the quadratic (n=4, eta=0.02, H=4, R_C1=2):");
+            println!("  measured L={:.3}  V1={:.3}  V2={:.3}", r.l, r.v1, r.v2);
+            println!(
+                "  avg ||grad F(xbar)||^2 = {:.4e}   Theorem-1 bound = {:.4e}   ({})",
+                r.measured_avg_grad2,
+                r.bound,
+                if r.measured_avg_grad2 < r.bound { "bound HOLDS" } else { "VIOLATED" }
+            );
+            println!("Corollary 1 (linear speedup; eta ~ sqrt(n)): avg grad^2 floor");
+            for (n, floor) in theory::linear_speedup(&[1, 2, 4, 8], steps) {
+                println!("  n={n:<3} {floor:.4e}");
+            }
+            println!("C1 sparsifier families in CSER (R=8, H=8, CIFAR substitute):");
+            let suite = suite_of(args)?;
+            for (name, acc) in theory::compressor_families(&suite, 8.0, quick) {
+                println!("  {name:<26} acc={:.2}%", acc * 100.0);
+            }
+            Ok(())
+        }
+        "kernel-check" => kernel_check(args),
+        "plot" => plot(args),
+        other => anyhow::bail!("unknown command '{other}'"),
+    }
+}
+
+/// Tiny end-to-end smoke: artifacts + PJRT + CSER in a few seconds.
+fn quickstart(args: &Args) -> anyhow::Result<()> {
+    let manifest = Manifest::load(args.str("artifacts", "artifacts"))?;
+    let rt = Runtime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+    let info = manifest.model("tiny")?;
+    let cfg = LmCfg { workers: 2, steps: 40, eval_every: 10, lr: 0.3, ..Default::default() };
+    let spec = table3_for("CSER", 16).unwrap();
+    println!("quickstart: tiny transformer, 2 workers, {:?}", spec);
+    let run = train_lm(&rt, &manifest, info, &spec, &cfg)?;
+    anyhow::ensure!(!run.record.diverged, "quickstart diverged");
+    println!("OK — loss fell to {:.3}", run.final_eval_loss);
+    Ok(())
+}
+
+/// Render results/*.json run records as an SVG line chart.
+fn plot(args: &Args) -> anyhow::Result<()> {
+    use cser::coordinator::plot::{load_records, svg_chart, Axis};
+    let input = args
+        .positional()
+        .get(1)
+        .cloned()
+        .ok_or_else(|| anyhow::anyhow!("usage: cser plot <results.json> [--x ...] [--y ...]"))?;
+    let x = Axis::parse(&args.str("x", "epoch")).ok_or_else(|| anyhow::anyhow!("bad --x"))?;
+    let y = Axis::parse(&args.str("y", "acc")).ok_or_else(|| anyhow::anyhow!("bad --y"))?;
+    let runs = load_records(&input).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let stem = std::path::Path::new(&input)
+        .file_stem()
+        .unwrap_or_default()
+        .to_string_lossy()
+        .into_owned();
+    let title = format!("{stem}: {} vs {}", y.label(), x.label());
+    let svg = svg_chart(&title, &runs, x, y);
+    let out = args.str("out", &format!("results/{stem}_{:?}_{:?}.svg", x, y).to_lowercase());
+    std::fs::write(&out, svg)?;
+    println!("wrote {out} ({} runs)", runs.len());
+    Ok(())
+}
+
+/// Execute the standalone L1 kernel artifacts and compare against the Rust
+/// implementations (block_mask vs compressor::Selection; fused_update vs the
+//  optimizer inner step).
+fn kernel_check(args: &Args) -> anyhow::Result<()> {
+    use cser::compressor::Selection;
+    use cser::runtime::artifact::Input;
+    let manifest = Manifest::load(args.str("artifacts", "artifacts"))?;
+    let rt = Runtime::cpu()?;
+
+    let bm = manifest.block_mask.clone().ok_or_else(|| anyhow::anyhow!("no block_mask artifact"))?;
+    let exe = rt.load(&bm.file)?;
+    let d = bm.d;
+    let nb = d / bm.block_size;
+    let v: Vec<f32> = (0..d).map(|i| ((i * 2654435761) % 1000) as f32 / 500.0 - 1.0).collect();
+    let mask: Vec<f32> = (0..nb).map(|b| ((b * 7) % 4 == 0) as u8 as f32).collect();
+    let out = exe.run(&[Input::F32(&v, vec![d as i64]), Input::F32(&mask, vec![nb as i64])])?;
+    let kept = out[0].to_vec::<f32>()?;
+    let blocks: Vec<u32> = (0..nb as u32).filter(|b| (b * 7) % 4 == 0).collect();
+    let sel = Selection::Blocks { block_size: bm.block_size, blocks };
+    let mut kept_rs = vec![0.0f32; d];
+    sel.apply(&v, &mut kept_rs);
+    anyhow::ensure!(kept == kept_rs, "block_mask kernel != Rust GRBS semantics");
+    println!("block_mask artifact == Rust GRBS selection semantics over d={d} ✓");
+
+    let fu = manifest.fused_update.clone().ok_or_else(|| anyhow::anyhow!("no fused_update artifact"))?;
+    let exe = rt.load(&fu.file)?;
+    let d = fu.d;
+    let x: Vec<f32> = (0..d).map(|i| (i as f32 * 0.301).sin()).collect();
+    let e: Vec<f32> = (0..d).map(|i| (i as f32 * 0.507).cos()).collect();
+    let g: Vec<f32> = (0..d).map(|i| ((i % 13) as f32 - 6.0) / 6.0).collect();
+    let r: Vec<f32> = (0..d).map(|i| ((i % 7) as f32 - 3.0) / 3.0).collect();
+    let eta = [0.05f32];
+    let out = exe.run(&[
+        Input::F32(&eta, vec![1]),
+        Input::F32(&x, vec![d as i64]),
+        Input::F32(&e, vec![d as i64]),
+        Input::F32(&g, vec![d as i64]),
+        Input::F32(&r, vec![d as i64]),
+    ])?;
+    let xo = out[0].to_vec::<f32>()?;
+    let eo = out[1].to_vec::<f32>()?;
+    for i in 0..d {
+        let xe = x[i] - 0.05 * (g[i] + r[i]);
+        let ee = e[i] - 0.05 * r[i];
+        anyhow::ensure!((xo[i] - xe).abs() < 1e-6 && (eo[i] - ee).abs() < 1e-6, "mismatch at {i}");
+    }
+    println!("fused_update artifact == CSER inner-step formula over d={d} ✓");
+    Ok(())
+}

@@ -1,0 +1,138 @@
+//! Multinomial logistic regression (softmax linear model).
+//!
+//! The convex member of the model zoo: used in ablations where we want the
+//! optimization landscape to be benign so that *only* the compression noise
+//! differentiates the optimizers, and in fast smoke tests.
+//!
+//! Flat layout: [W (in×c) | b (c)], row-major.
+
+use super::GradModel;
+use crate::data::ClassDataset;
+use crate::util::math::{argmax, logsumexp};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct Logistic {
+    pub input: usize,
+    pub classes: usize,
+}
+
+impl Logistic {
+    pub fn new(input: usize, classes: usize) -> Self {
+        Logistic { input, classes }
+    }
+
+    fn logits(&self, p: &[f32], x: &[f32], out: &mut [f32]) {
+        let (i, c) = (self.input, self.classes);
+        out.copy_from_slice(&p[i * c..]);
+        for j in 0..i {
+            let xj = x[j];
+            if xj != 0.0 {
+                let row = &p[j * c..(j + 1) * c];
+                for m in 0..c {
+                    out[m] += xj * row[m];
+                }
+            }
+        }
+    }
+}
+
+impl GradModel for Logistic {
+    fn dim(&self) -> usize {
+        self.input * self.classes + self.classes
+    }
+
+    fn init(&self, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::stream(seed, 0x109);
+        let mut p = vec![0.0f32; self.dim()];
+        let s = (1.0 / self.input as f32).sqrt();
+        for v in &mut p[..self.input * self.classes] {
+            *v = rng.normal() * s * 0.1;
+        }
+        p
+    }
+
+    fn loss_grad(&self, params: &[f32], data: &ClassDataset, idxs: &[u32], grad: &mut [f32]) -> f32 {
+        grad.iter_mut().for_each(|g| *g = 0.0);
+        let (i, c) = (self.input, self.classes);
+        let mut logits = vec![0.0f32; c];
+        let inv = 1.0 / idxs.len() as f32;
+        let mut loss = 0.0f32;
+        for &gi in idxs {
+            let x = data.feat(gi as usize);
+            let y = data.y[gi as usize] as usize;
+            self.logits(params, x, &mut logits);
+            let lse = logsumexp(&logits);
+            loss += (lse - logits[y]) * inv;
+            for m in 0..c {
+                logits[m] = (logits[m] - lse).exp();
+            }
+            logits[y] -= 1.0;
+            for j in 0..i {
+                let xj = x[j] * inv;
+                if xj != 0.0 {
+                    let row = &mut grad[j * c..(j + 1) * c];
+                    for m in 0..c {
+                        row[m] += xj * logits[m];
+                    }
+                }
+            }
+            let brow = &mut grad[i * c..];
+            for m in 0..c {
+                brow[m] += inv * logits[m];
+            }
+        }
+        loss
+    }
+
+    fn loss(&self, params: &[f32], data: &ClassDataset) -> f32 {
+        let mut logits = vec![0.0f32; self.classes];
+        let mut loss = 0.0f32;
+        for idx in 0..data.len() {
+            self.logits(params, data.feat(idx), &mut logits);
+            loss += logsumexp(&logits) - logits[data.y[idx] as usize];
+        }
+        loss / data.len() as f32
+    }
+
+    fn accuracy(&self, params: &[f32], data: &ClassDataset) -> f32 {
+        let mut logits = vec![0.0f32; self.classes];
+        let mut correct = 0usize;
+        for idx in 0..data.len() {
+            self.logits(params, data.feat(idx), &mut logits);
+            if argmax(&logits) == data.y[idx] as usize {
+                correct += 1;
+            }
+        }
+        correct as f32 / data.len() as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grad_matches_finite_differences() {
+        let (tr, _) = ClassDataset::gaussian_mixture(4, 5, 12, 8, 1.0, 0.5, 0.0, 2);
+        let m = Logistic::new(5, 4);
+        super::super::fd_check(&m, &tr, 1e-2);
+    }
+
+    #[test]
+    fn learns_linear_problem() {
+        let (tr, te) = ClassDataset::gaussian_mixture(5, 10, 600, 150, 2.0, 0.4, 0.0, 6);
+        let m = Logistic::new(10, 5);
+        let mut p = m.init(1);
+        let mut g = vec![0.0f32; m.dim()];
+        let mut rng = Rng::new(2);
+        for _ in 0..600 {
+            let idxs: Vec<u32> = (0..16).map(|_| rng.below(tr.len()) as u32).collect();
+            m.loss_grad(&p, &tr, &idxs, &mut g);
+            for (pj, gj) in p.iter_mut().zip(&g) {
+                *pj -= 0.5 * gj;
+            }
+        }
+        assert!(m.accuracy(&p, &te) > 0.95);
+    }
+}

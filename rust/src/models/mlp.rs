@@ -1,0 +1,210 @@
+//! Two-layer MLP (ReLU, softmax cross-entropy) with manual backprop.
+//!
+//! The non-convex stand-in for WRN-40-8 / ResNet-50 in the sweeps
+//! (DESIGN.md §3): small enough that a full Table-4 sweep (6 optimizers ×
+//! 11 ratios × lr grid × seeds) finishes in minutes, non-convex enough that
+//! aggressive compression noise visibly hurts/destroys convergence.
+//!
+//! Flat layout: [W1 (in×h) | b1 (h) | W2 (h×c) | b2 (c)], row-major W.
+
+use super::GradModel;
+use crate::data::ClassDataset;
+use crate::util::math::{argmax, logsumexp};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct Mlp {
+    pub input: usize,
+    pub hidden: usize,
+    pub classes: usize,
+}
+
+impl Mlp {
+    pub fn new(input: usize, hidden: usize, classes: usize) -> Self {
+        Mlp { input, hidden, classes }
+    }
+
+    fn split<'a>(&self, p: &'a [f32]) -> (&'a [f32], &'a [f32], &'a [f32], &'a [f32]) {
+        let (i, h, c) = (self.input, self.hidden, self.classes);
+        let w1 = &p[..i * h];
+        let b1 = &p[i * h..i * h + h];
+        let w2 = &p[i * h + h..i * h + h + h * c];
+        let b2 = &p[i * h + h + h * c..];
+        (w1, b1, w2, b2)
+    }
+
+    /// logits for one sample into `logits`; returns hidden activations in `a`.
+    fn forward(&self, p: &[f32], x: &[f32], a: &mut [f32], logits: &mut [f32]) {
+        let (w1, b1, w2, b2) = self.split(p);
+        let (i, h, c) = (self.input, self.hidden, self.classes);
+        for k in 0..h {
+            // W1 row-major [in, h]: column k
+            let mut z = b1[k];
+            for j in 0..i {
+                z += w1[j * h + k] * x[j];
+            }
+            a[k] = z.max(0.0);
+        }
+        for m in 0..c {
+            let mut z = b2[m];
+            for k in 0..h {
+                z += w2[k * c + m] * a[k];
+            }
+            logits[m] = z;
+        }
+    }
+}
+
+impl GradModel for Mlp {
+    fn dim(&self) -> usize {
+        self.input * self.hidden + self.hidden + self.hidden * self.classes + self.classes
+    }
+
+    fn init(&self, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::stream(seed, 0x317);
+        let mut p = vec![0.0f32; self.dim()];
+        let (i, h, c) = (self.input, self.hidden, self.classes);
+        let s1 = (2.0 / i as f32).sqrt();
+        // damp the output layer so initial logits stay near uniform
+        // (loss ~ ln(classes) at init, like the usual zero-init head)
+        let s2 = (2.0 / h as f32).sqrt() * 0.1;
+        for v in &mut p[..i * h] {
+            *v = rng.normal() * s1;
+        }
+        for v in &mut p[i * h + h..i * h + h + h * c] {
+            *v = rng.normal() * s2;
+        }
+        p
+    }
+
+    fn loss_grad(&self, params: &[f32], data: &ClassDataset, idxs: &[u32], grad: &mut [f32]) -> f32 {
+        debug_assert_eq!(grad.len(), self.dim());
+        grad.iter_mut().for_each(|g| *g = 0.0);
+        let (i, h, c) = (self.input, self.hidden, self.classes);
+        let (w1o, _b1o, w2o, _b2o) = (0, i * h, i * h + h, i * h + h + h * c);
+        let b1o = i * h;
+        let b2o = i * h + h + h * c;
+        let w2 = {
+            let (_, _, w2, _) = self.split(params);
+            w2.to_vec() // copy: avoids borrow conflict with grad writes
+        };
+        let mut a = vec![0.0f32; h];
+        let mut logits = vec![0.0f32; c];
+        let mut dz1 = vec![0.0f32; h];
+        let inv = 1.0 / idxs.len() as f32;
+        let mut loss = 0.0f32;
+        for &gi in idxs {
+            let x = data.feat(gi as usize);
+            let y = data.y[gi as usize] as usize;
+            self.forward(params, x, &mut a, &mut logits);
+            let lse = logsumexp(&logits);
+            loss += (lse - logits[y]) * inv;
+            // dlogits = softmax - onehot
+            for m in 0..c {
+                logits[m] = (logits[m] - lse).exp();
+            }
+            logits[y] -= 1.0;
+            // W2/b2 grads + backprop into hidden
+            for k in 0..h {
+                let ak = a[k];
+                let mut acc = 0.0f32;
+                if ak > 0.0 {
+                    for m in 0..c {
+                        let dl = logits[m];
+                        grad[w2o + k * c + m] += inv * ak * dl;
+                        acc += w2[k * c + m] * dl;
+                    }
+                    dz1[k] = acc;
+                } else {
+                    for m in 0..c {
+                        grad[w2o + k * c + m] += inv * ak * logits[m];
+                    }
+                    dz1[k] = 0.0;
+                }
+            }
+            for m in 0..c {
+                grad[b2o + m] += inv * logits[m];
+            }
+            // W1/b1 grads
+            for j in 0..i {
+                let xj = x[j] * inv;
+                if xj != 0.0 {
+                    let row = &mut grad[w1o + j * h..w1o + j * h + h];
+                    for k in 0..h {
+                        row[k] += xj * dz1[k];
+                    }
+                }
+            }
+            for k in 0..h {
+                grad[b1o + k] += inv * dz1[k];
+            }
+        }
+        loss
+    }
+
+    fn loss(&self, params: &[f32], data: &ClassDataset) -> f32 {
+        let (h, c) = (self.hidden, self.classes);
+        let mut a = vec![0.0f32; h];
+        let mut logits = vec![0.0f32; c];
+        let mut loss = 0.0f32;
+        for idx in 0..data.len() {
+            self.forward(params, data.feat(idx), &mut a, &mut logits);
+            let lse = logsumexp(&logits);
+            loss += lse - logits[data.y[idx] as usize];
+        }
+        loss / data.len() as f32
+    }
+
+    fn accuracy(&self, params: &[f32], data: &ClassDataset) -> f32 {
+        let (h, c) = (self.hidden, self.classes);
+        let mut a = vec![0.0f32; h];
+        let mut logits = vec![0.0f32; c];
+        let mut correct = 0usize;
+        for idx in 0..data.len() {
+            self.forward(params, data.feat(idx), &mut a, &mut logits);
+            if argmax(&logits) == data.y[idx] as usize {
+                correct += 1;
+            }
+        }
+        correct as f32 / data.len() as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grad_matches_finite_differences() {
+        let (tr, _) = ClassDataset::gaussian_mixture(5, 6, 16, 8, 1.0, 0.5, 0.0, 3);
+        let m = Mlp::new(6, 7, 5);
+        super::super::fd_check(&m, &tr, 2e-2);
+    }
+
+    #[test]
+    fn init_loss_near_uniform() {
+        let (tr, _) = ClassDataset::gaussian_mixture(10, 8, 64, 8, 1.0, 0.5, 0.0, 4);
+        let m = Mlp::new(8, 16, 10);
+        let p = m.init(1);
+        let l = m.loss(&p, &tr);
+        assert!((l - (10f32).ln()).abs() < 0.8, "loss={l}");
+    }
+
+    #[test]
+    fn sgd_learns_separable_mixture() {
+        let (tr, te) = ClassDataset::gaussian_mixture(6, 8, 512, 128, 1.5, 0.3, 0.0, 5);
+        let m = Mlp::new(8, 16, 6);
+        let mut p = m.init(2);
+        let mut g = vec![0.0f32; m.dim()];
+        let mut rng = Rng::new(1);
+        for _ in 0..800 {
+            let idxs: Vec<u32> = (0..16).map(|_| rng.below(tr.len()) as u32).collect();
+            m.loss_grad(&p, &tr, &idxs, &mut g);
+            for (pj, gj) in p.iter_mut().zip(&g) {
+                *pj -= 0.2 * gj;
+            }
+        }
+        let acc = m.accuracy(&p, &te);
+        assert!(acc > 0.9, "acc={acc}");
+    }
+}

@@ -1,0 +1,75 @@
+//! Pure-Rust training substrate: models with hand-written fwd/bwd over a
+//! flat parameter vector.
+//!
+//! These power the table/figure sweeps (hundreds of training runs), where
+//! going through the PJRT artifact per gradient would be needlessly slow and
+//! would measure XLA rather than the optimizers.  The transformer end-to-end
+//! path (examples/lm_e2e.rs) uses the real L2/L1 artifacts instead.
+//!
+//! All models implement [`GradModel`]: stochastic gradient of the minibatch
+//! loss at a given flat parameter vector, plus evaluation metrics.  Gradients
+//! are verified against central finite differences in each model's tests.
+
+pub mod logistic;
+pub mod mlp;
+pub mod quadratic;
+
+pub use logistic::Logistic;
+pub use mlp::Mlp;
+pub use quadratic::Quadratic;
+
+use crate::data::ClassDataset;
+
+/// A model trainable by the distributed optimizers.
+pub trait GradModel: Send + Sync {
+    /// Flat parameter dimension.
+    fn dim(&self) -> usize;
+
+    /// Initialize parameters (deterministic in `seed`).
+    fn init(&self, seed: u64) -> Vec<f32>;
+
+    /// Minibatch loss + gradient at `params` over `idxs` into `grad`
+    /// (overwritten). Returns the minibatch mean loss.
+    fn loss_grad(&self, params: &[f32], data: &ClassDataset, idxs: &[u32], grad: &mut [f32]) -> f32;
+
+    /// Mean loss over a whole dataset (no gradient).
+    fn loss(&self, params: &[f32], data: &ClassDataset) -> f32;
+
+    /// Top-1 accuracy over a dataset.
+    fn accuracy(&self, params: &[f32], data: &ClassDataset) -> f32;
+}
+
+/// Central finite-difference check used by each model's tests.
+#[cfg(test)]
+pub(crate) fn fd_check(model: &dyn GradModel, data: &ClassDataset, tol: f32) {
+    use crate::util::rng::Rng;
+    let mut params = model.init(7);
+    let d = model.dim();
+    let idxs: Vec<u32> = (0..data.len().min(8) as u32).collect();
+    let mut grad = vec![0.0f32; d];
+    model.loss_grad(&params, data, &idxs, &mut grad);
+    let mut rng = Rng::new(99);
+    // check a few random coordinates
+    let eps = 1e-3f32;
+    let sub = ClassDataset {
+        dim: data.dim,
+        classes: data.classes,
+        x: idxs.iter().flat_map(|&i| data.feat(i as usize).to_vec()).collect(),
+        y: idxs.iter().map(|&i| data.y[i as usize]).collect(),
+    };
+    for _ in 0..20 {
+        let j = rng.below(d);
+        let orig = params[j];
+        params[j] = orig + eps;
+        let lp = model.loss(&params, &sub);
+        params[j] = orig - eps;
+        let lm = model.loss(&params, &sub);
+        params[j] = orig;
+        let fd = (lp - lm) / (2.0 * eps);
+        assert!(
+            (fd - grad[j]).abs() < tol * (1.0 + fd.abs()),
+            "coord {j}: fd={fd} analytic={}",
+            grad[j]
+        );
+    }
+}

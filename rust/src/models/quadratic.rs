@@ -1,0 +1,125 @@
+//! Distributed least squares: f(x) = 0.5‖Ax − b‖²/m over row shards.
+//!
+//! The theory-validation model: L-smooth with known L = λ_max(AᵀA)/m, known
+//! minimizer, and exactly computable ‖∇F‖ — used by the ablation bench that
+//! checks Theorem 1's error-term scaling in η, H, δ1, δ2.
+//!
+//! Rows of A (and entries of b) are generated per "sample index", so it can
+//! reuse the ClassDataset sharding machinery: `data.feat(i)` is row a_i and
+//! the target is stored separately via `targets`.
+
+use super::GradModel;
+use crate::data::ClassDataset;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct Quadratic {
+    pub dim: usize,
+    /// b_i targets, one per dataset row (same length as data).
+    pub targets: Vec<f32>,
+}
+
+impl Quadratic {
+    /// Build a synthetic least-squares instance on top of `data`'s features:
+    /// picks a ground-truth x*, sets b_i = <a_i, x*> + noise.
+    pub fn from_features(data: &ClassDataset, noise: f32, seed: u64) -> (Self, Vec<f32>) {
+        let mut rng = Rng::stream(seed, 0x4A4);
+        let mut xstar = vec![0.0f32; data.dim];
+        rng.fill_normal(&mut xstar, 1.0);
+        let targets = (0..data.len())
+            .map(|i| {
+                let dot: f32 = data.feat(i).iter().zip(&xstar).map(|(a, x)| a * x).sum();
+                dot + rng.normal() * noise
+            })
+            .collect();
+        (Quadratic { dim: data.dim, targets }, xstar)
+    }
+}
+
+impl GradModel for Quadratic {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn init(&self, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::stream(seed, 0x4A5);
+        let mut p = vec![0.0f32; self.dim];
+        rng.fill_normal(&mut p, 1.0);
+        p
+    }
+
+    fn loss_grad(&self, params: &[f32], data: &ClassDataset, idxs: &[u32], grad: &mut [f32]) -> f32 {
+        grad.iter_mut().for_each(|g| *g = 0.0);
+        let inv = 1.0 / idxs.len() as f32;
+        let mut loss = 0.0f32;
+        for &gi in idxs {
+            let a = data.feat(gi as usize);
+            let r: f32 = a.iter().zip(params).map(|(ai, xi)| ai * xi).sum::<f32>()
+                - self.targets[gi as usize];
+            loss += 0.5 * r * r * inv;
+            for (gj, aj) in grad.iter_mut().zip(a) {
+                *gj += inv * r * aj;
+            }
+        }
+        loss
+    }
+
+    fn loss(&self, params: &[f32], data: &ClassDataset) -> f32 {
+        let mut loss = 0.0f32;
+        for i in 0..data.len() {
+            let a = data.feat(i);
+            let r: f32 =
+                a.iter().zip(params).map(|(ai, xi)| ai * xi).sum::<f32>() - self.targets[i];
+            loss += 0.5 * r * r;
+        }
+        loss / data.len() as f32
+    }
+
+    /// "Accuracy" for a regression model: fraction of residuals under 0.5
+    /// (keeps the GradModel interface uniform for the harness).
+    fn accuracy(&self, params: &[f32], data: &ClassDataset) -> f32 {
+        let mut ok = 0usize;
+        for i in 0..data.len() {
+            let a = data.feat(i);
+            let r: f32 =
+                a.iter().zip(params).map(|(ai, xi)| ai * xi).sum::<f32>() - self.targets[i];
+            if r.abs() < 0.5 {
+                ok += 1;
+            }
+        }
+        ok as f32 / data.len() as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn instance() -> (ClassDataset, Quadratic, Vec<f32>) {
+        let (tr, _) = ClassDataset::gaussian_mixture(2, 12, 256, 16, 1.0, 1.0, 0.0, 8);
+        let (q, xstar) = Quadratic::from_features(&tr, 0.0, 9);
+        (tr, q, xstar)
+    }
+
+    #[test]
+    fn grad_matches_finite_differences() {
+        let (tr, q, _) = instance();
+        super::super::fd_check(&q, &tr, 1e-2);
+    }
+
+    #[test]
+    fn gd_recovers_xstar_noiseless() {
+        let (tr, q, xstar) = instance();
+        let mut x = q.init(1);
+        let mut g = vec![0.0f32; q.dim()];
+        let idxs: Vec<u32> = (0..tr.len() as u32).collect();
+        for _ in 0..500 {
+            q.loss_grad(&x, &tr, &idxs, &mut g);
+            for (xj, gj) in x.iter_mut().zip(&g) {
+                *xj -= 0.02 * gj;
+            }
+        }
+        let err: f32 = x.iter().zip(&xstar).map(|(a, b)| (a - b).powi(2)).sum();
+        assert!(err < 1e-2, "err={err}");
+    }
+}

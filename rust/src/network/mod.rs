@@ -1,0 +1,56 @@
+//! Network substrate: analytic cost model + per-run communication accounting.
+//!
+//! The paper's time-axis results (Figures 4 and 8) and the headline 10×/4.5×
+//! speedups are communication-bound wall-clock numbers from an 8×V100,
+//! 10 Gb/s testbed we do not have.  DESIGN.md §3 substitutes a deterministic
+//! timeline: measured compute time per local step + the alpha-beta cost of
+//! each synchronization round.  Bit counts are *exact* (from the compressor
+//! selections), only their translation to seconds is modeled.
+
+pub mod cost_model;
+
+pub use cost_model::{CostModel, RoundTraffic};
+
+/// Running totals for a training run (one worker's perspective; the paper
+/// plots per-worker NIC traffic).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CommAccount {
+    pub up_bits: u64,
+    pub down_bits: u64,
+    pub sync_rounds: u64,
+    pub sim_seconds: f64,
+}
+
+impl CommAccount {
+    pub fn total_bits(&self) -> u64 {
+        self.up_bits + self.down_bits
+    }
+
+    pub fn add_round(&mut self, c: crate::collective::WireCost, seconds: f64) {
+        self.up_bits += c.up_bits;
+        self.down_bits += c.down_bits;
+        self.sync_rounds += 1;
+        self.sim_seconds += seconds;
+    }
+
+    pub fn add_compute(&mut self, seconds: f64) {
+        self.sim_seconds += seconds;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collective::WireCost;
+
+    #[test]
+    fn account_accumulates() {
+        let mut a = CommAccount::default();
+        a.add_round(WireCost { up_bits: 10, down_bits: 20, steps: 2 }, 0.5);
+        a.add_compute(1.0);
+        a.add_round(WireCost { up_bits: 1, down_bits: 2, steps: 2 }, 0.25);
+        assert_eq!(a.total_bits(), 33);
+        assert_eq!(a.sync_rounds, 2);
+        assert!((a.sim_seconds - 1.75).abs() < 1e-12);
+    }
+}

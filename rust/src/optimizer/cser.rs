@@ -1,0 +1,492 @@
+//! CSER — Communication-efficient SGD with Error Reset (paper Algorithm 2,
+//! momentum variant Algorithm 4 "implementation I").
+//!
+//! Each iteration (worker i):
+//!
+//!   p_i = η(β m_i + g_i)                       (Momentum; η g_i at β=0)
+//!   p'_i, r_i = PSync(p_i, C2)                 (partial GRADIENT sync)
+//!   x_i ← x_i − p'_i        e_i ← e_i − r_i    (residual applied to the
+//!                                               model IMMEDIATELY — the
+//!                                               "error reset" bifurcation)
+//!   every H steps:
+//!     e'_i, e_i ← PSync(e_half_i, C1)          (partial ERROR/model sync)
+//!     x_i ← x_half_i − e_half_i + e'_i
+//!
+//! Lemma 1 (tested as a property): x_{i,t} − e_{i,t} is identical across
+//! workers at every t — e_i is exactly each worker's private divergence from
+//! the consensus trajectory, and the C1 round (partially) resets it.
+//!
+//! Special cases (paper Appendix A):
+//!   * `Cser::csea`    — H = 1, C2 = 0  (Algorithm 7: "error assimilation")
+//!   * `Cser::cser_pl` — C2 = 0         (Algorithm 8: partial-local SGD)
+//!   * C1 = identity, C2 = 0            — local SGD (model averaging)
+//!   * C1 = C2 = identity               — fully-synchronous SGD
+
+use super::{DistOptimizer, Momentum, RoundStats};
+use crate::collective::psync;
+use crate::compressor::{Compressor, Zero};
+use crate::util::math;
+
+pub struct Cser {
+    n: usize,
+    h: u64,
+    x: Vec<Vec<f32>>,
+    e: Vec<Vec<f32>>,
+    momentum: Momentum,
+    c1: Box<dyn Compressor>,
+    c2: Box<dyn Compressor>,
+    t: u64,
+    // scratch (steady-state: zero allocations per step)
+    p: Vec<Vec<f32>>,
+    r: Vec<Vec<f32>>,
+    e_half: Vec<Vec<f32>>,
+}
+
+impl Cser {
+    /// Full CSER/M-CSER: gradient compressor `c2` every step, error-reset
+    /// compressor `c1` every `h` steps, momentum `beta` (0 disables).
+    pub fn new(
+        init: &[f32],
+        n: usize,
+        beta: f32,
+        c1: Box<dyn Compressor>,
+        c2: Box<dyn Compressor>,
+        h: u64,
+    ) -> Self {
+        assert!(h >= 1);
+        let d = init.len();
+        // Dense residual/e_half scratch is only needed on the general path
+        // (per-worker compressors); GRBS configs skip the 2×n×d allocation.
+        let needs_r = !c1.globally_synchronized() || !c2.globally_synchronized();
+        let needs_ehalf = !c1.globally_synchronized();
+        Cser {
+            n,
+            h,
+            x: vec![init.to_vec(); n],
+            e: vec![vec![0.0; d]; n],
+            momentum: Momentum::new(beta, n, d),
+            c1,
+            c2,
+            t: 0,
+            p: vec![vec![0.0; d]; n],
+            r: if needs_r { vec![vec![0.0; d]; n] } else { vec![] },
+            e_half: if needs_ehalf { vec![vec![0.0; d]; n] } else { vec![] },
+        }
+    }
+
+    /// CSEA (Algorithm 7): error assimilation — H=1, no gradient sync path.
+    pub fn csea(init: &[f32], n: usize, beta: f32, c1: Box<dyn Compressor>) -> Self {
+        Self::new(init, n, beta, c1, Box::new(Zero), 1)
+    }
+
+    /// CSER-PL (Algorithm 8): partial-local SGD — no gradient sync path.
+    pub fn cser_pl(init: &[f32], n: usize, beta: f32, c1: Box<dyn Compressor>, h: u64) -> Self {
+        Self::new(init, n, beta, c1, Box::new(Zero), h)
+    }
+}
+
+impl DistOptimizer for Cser {
+    fn step(&mut self, grads: &[Vec<f32>], eta: f32) -> RoundStats {
+        debug_assert_eq!(grads.len(), self.n);
+        self.t += 1;
+        let mut stats = RoundStats::default();
+
+        // p_i = η(β m_i + g_i)
+        for i in 0..self.n {
+            self.momentum.descent(i, &grads[i], eta, &mut self.p[i]);
+        }
+
+        // Partial gradient synchronization: p -> p' (in place).
+        //
+        // Fast path (globally-synchronized sparsifiers, §Perf): the residual
+        // r_i equals p'_i on the complement of the shared support (there
+        // PSync leaves p untouched), so e can be updated from the complement
+        // ranges directly — no dense residual buffers, no extra memcpy.
+        let global = self.c2.globally_synchronized();
+        let round = if global {
+            psync(&mut self.p, None, self.c2.as_ref(), self.t)
+        } else {
+            psync(&mut self.p, Some(&mut self.r), self.c2.as_ref(), self.t)
+        };
+        stats.grad_bits = round.upload_bits_per_worker;
+        stats.grad_allreduce = round.allreduce_compatible;
+
+        // x_i ← x_i − p'_i ;  e_i ← e_i − r_i   (error applied immediately)
+        for i in 0..self.n {
+            math::axpy(-1.0, &self.p[i], &mut self.x[i]);
+            if global {
+                let (p_i, e_i) = (&self.p[i], &mut self.e[i]);
+                round.for_each_unselected(i, p_i.len(), |s, t| {
+                    math::axpy(-1.0, &p_i[s..t], &mut e_i[s..t]);
+                });
+            } else {
+                math::axpy(-1.0, &self.r[i], &mut self.e[i]);
+            }
+        }
+
+        if self.t % self.h == 0 {
+            // error reset: e'_i, e_i ← PSync(e_half_i, C1);
+            //              x_i ← x_half_i − e_half_i + e'_i
+            stats.synced = true;
+            if self.c1.globally_synchronized() {
+                // Off the shared support e' == e_half, so x only changes on
+                // the selected ranges and the new residual zeroes there:
+                // O(n·d/R1) total work, zero copies (§Perf).
+                let sel = self.c1.select(
+                    crate::compressor::Ctx { round: self.t, worker: 0 },
+                    &self.e[0],
+                );
+                let d = self.x[0].len();
+                for i in 0..self.n {
+                    let (x_i, e_i) = (&mut self.x[i], &self.e[i]);
+                    sel.for_each_range(d, |s, t| {
+                        math::axpy(-1.0, &e_i[s..t], &mut x_i[s..t]);
+                    });
+                }
+                // psync draws the identical selection (same round, global).
+                let round = psync(&mut self.e, None, self.c1.as_ref(), self.t);
+                debug_assert_eq!(round.selections[0], sel);
+                stats.model_bits = round.upload_bits_per_worker;
+                stats.model_allreduce = true;
+                for i in 0..self.n {
+                    let (x_i, e_i) = (&mut self.x[i], &mut self.e[i]);
+                    sel.for_each_range(d, |s, t| {
+                        math::axpy(1.0, &e_i[s..t], &mut x_i[s..t]);
+                        math::fill(&mut e_i[s..t], 0.0);
+                    });
+                }
+            } else {
+                // General path (Algorithm 2 verbatim, any δ-approximate
+                // compressor): dense e_half copy + residual tracking.
+                for i in 0..self.n {
+                    self.e_half[i].copy_from_slice(&self.e[i]);
+                }
+                // after psync: e[i] holds e'_i, r[i] holds the new residual
+                let round = psync(&mut self.e, Some(&mut self.r), self.c1.as_ref(), self.t);
+                stats.model_bits = round.upload_bits_per_worker;
+                stats.model_allreduce = round.allreduce_compatible;
+                for i in 0..self.n {
+                    // x += e' − e_half
+                    math::axpy(1.0, &self.e[i], &mut self.x[i]);
+                    math::axpy(-1.0, &self.e_half[i], &mut self.x[i]);
+                    std::mem::swap(&mut self.e[i], &mut self.r[i]); // e ← new residual
+                }
+            }
+        }
+        stats
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+    fn dim(&self) -> usize {
+        self.x[0].len()
+    }
+    fn worker_model(&self, i: usize) -> &[f32] {
+        &self.x[i]
+    }
+    fn local_error(&self, i: usize) -> Option<&[f32]> {
+        Some(&self.e[i])
+    }
+    fn name(&self) -> String {
+        format!("cser[{},{},H={}]", self.c1.name(), self.c2.name(), self.h)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressor::{Grbs, Identity, RandK, TopK};
+    use crate::optimizer::{FullSgd, QsparseLocalSgd};
+    use crate::util::prop::{forall, slices_close, Gen};
+
+    fn random_grads(g: &mut Gen, n: usize, d: usize) -> Vec<Vec<f32>> {
+        // smooth vectors: the Lemma 1 identity is exact in real arithmetic;
+        // 1e6-scale outliers would only probe f32 cancellation noise.
+        g.worker_vecs_smooth(n, d)
+    }
+
+    #[test]
+    fn prop_lemma1_bifurcated_models() {
+        // x_{i,t} - e_{i,t} identical across workers, any compressors/H/beta.
+        forall(25, 0xCE5E, |g: &mut Gen| {
+            let n = g.usize_in(2, 6);
+            let d = g.usize_in(8, 64);
+            let h = g.usize_in(1, 5) as u64;
+            let beta = if g.bool() { 0.9 } else { 0.0 };
+            let c1: Box<dyn Compressor> = match g.usize_in(0, 3) {
+                0 => Box::new(Grbs::new(2.0, (d / 4).max(2), 7)),
+                1 => Box::new(RandK::new(4.0)),
+                _ => Box::new(TopK::new(4.0)),
+            };
+            let c2: Box<dyn Compressor> = match g.usize_in(0, 3) {
+                0 => Box::new(Zero),
+                1 => Box::new(Grbs::new(4.0, (d / 4).max(2), 11)),
+                _ => Box::new(RandK::new(8.0)),
+            };
+            let init = g.vec(d);
+            let mut o = Cser::new(&init, n, beta, c1, c2, h);
+            for _ in 0..(3 * h + 2) {
+                o.step(&random_grads(g, n, d), 0.05);
+                let base: Vec<f32> = o
+                    .worker_model(0)
+                    .iter()
+                    .zip(o.local_error(0).unwrap())
+                    .map(|(x, e)| x - e)
+                    .collect();
+                for i in 1..n {
+                    let xi: Vec<f32> = o
+                        .worker_model(i)
+                        .iter()
+                        .zip(o.local_error(i).unwrap())
+                        .map(|(x, e)| x - e)
+                        .collect();
+                    slices_close(&base, &xi, 1e-4)
+                        .map_err(|e| format!("worker {i}: {e}"))?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn identity_everything_reduces_to_sgd() {
+        let init = [0.3f32, -0.7, 0.1, 0.9];
+        let mut cs = Cser::new(&init, 3, 0.9, Box::new(Identity), Box::new(Identity), 2);
+        let mut s = FullSgd::new(&init, 3, 0.9);
+        for t in 0..12 {
+            let g: Vec<Vec<f32>> =
+                (0..3).map(|i| vec![0.1 * (t + i) as f32, -0.2, 0.05, 0.3]).collect();
+            cs.step(&g, 0.1);
+            s.step(&g, 0.1);
+            for i in 0..3 {
+                for (a, b) in cs.worker_model(i).iter().zip(s.worker_model(0)) {
+                    assert!((a - b).abs() < 1e-5, "t={t} {a} vs {b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn c1_identity_c2_zero_is_local_sgd() {
+        // CSER(δ1=1, C2=0, H) must match QsparseLocalSgd with identity C1
+        // (i.e. local SGD with model averaging every H).
+        let init = [0.0f32; 6];
+        let h = 3;
+        let mut cs = Cser::new(&init, 2, 0.9, Box::new(Identity), Box::new(Zero), h);
+        let mut ls = QsparseLocalSgd::local_sgd(&init, 2, 0.9, h);
+        let mut g = Gen::replay(42, 0);
+        for t in 0..12 {
+            let grads = vec![g.vec(6), g.vec(6)];
+            cs.step(&grads, 0.1);
+            ls.step(&grads, 0.1);
+            for i in 0..2 {
+                slices_close(cs.worker_model(i), ls.worker_model(i), 1e-4)
+                    .unwrap_or_else(|e| panic!("t={t} worker={i}: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn csea_matches_cser_h1() {
+        let init = [0.1f32; 8];
+        let c = || Box::new(Grbs::new(2.0, 4, 5));
+        let mut a = Cser::csea(&init, 2, 0.9, c());
+        let mut b = Cser::new(&init, 2, 0.9, c(), Box::new(Zero), 1);
+        let mut g = Gen::replay(7, 0);
+        for _ in 0..10 {
+            let grads = vec![g.vec(8), g.vec(8)];
+            a.step(&grads, 0.2);
+            b.step(&grads, 0.2);
+        }
+        assert_eq!(a.worker_model(0), b.worker_model(0));
+        assert_eq!(a.worker_model(1), b.worker_model(1));
+    }
+
+    #[test]
+    fn reset_round_reduces_error_mass() {
+        // after a C1 round with ratio R, E||e||^2 shrinks by ~(1-1/R)
+        let d = 4096;
+        let n = 4;
+        let mut o = Cser::new(
+            &vec![0.0; d],
+            n,
+            0.0,
+            Box::new(Grbs::new(2.0, 64, 3)),
+            Box::new(Zero),
+            4,
+        );
+        let mut g = Gen::replay(11, 1);
+        let mut before = 0.0;
+        for t in 1..=4 {
+            let grads: Vec<Vec<f32>> = (0..n).map(|_| g.vec(d)).collect();
+            if t == 4 {
+                // measure error mass entering the reset
+                before = (0..n)
+                    .map(|i| crate::util::math::norm2(o.local_error(i).unwrap()))
+                    .sum::<f64>();
+                assert!(before > 0.0);
+            }
+            o.step(&grads, 0.1);
+        }
+        let after: f64 = (0..n)
+            .map(|i| crate::util::math::norm2(o.local_error(i).unwrap()))
+            .sum();
+        // The reset round first accumulates one more gradient residual, then
+        // halves (R=2) in expectation; just require a strict decrease vs the
+        // pre-reset mass grown by one more step.
+        assert!(after < before * 1.5, "before={before} after={after}");
+        // errors on the synced blocks are exactly zero
+        let sel_zeroed = o.local_error(0).unwrap().iter().filter(|&&x| x == 0.0).count();
+        assert!(sel_zeroed >= d / 4, "zeroed={sel_zeroed}");
+    }
+
+    #[test]
+    fn quadratic_converges_aggressive_compression() {
+        // R_C = 256-ish: C2 ratio 512, C1 ratio 16, H 32
+        let d = 512;
+        let c = vec![1.0f32; d];
+        let mut o = Cser::new(
+            &vec![0.0; d],
+            4,
+            0.0,
+            Box::new(Grbs::new(16.0, 64, 3)),
+            Box::new(Grbs::new(512.0, 512, 5)),
+            32,
+        );
+        for _ in 0..6000 {
+            let g: Vec<Vec<f32>> = (0..4)
+                .map(|i| o.worker_model(i).iter().zip(&c).map(|(x, ci)| x - ci).collect())
+                .collect();
+            o.step(&g, 0.05);
+        }
+        let mut xbar = vec![0.0f32; d];
+        o.mean_model(&mut xbar);
+        let err: f64 =
+            xbar.iter().zip(&c).map(|(x, ci)| ((x - ci) as f64).powi(2)).sum::<f64>() / d as f64;
+        assert!(err < 1e-3, "err={err}");
+    }
+
+    #[test]
+    fn comm_bits_respect_budget_formula() {
+        // overall R_C = 1 / (1/R_C2 + 1/(R_C1 * H)): measured bits per step
+        // should equal d*32 / R_C within block-rounding slack.
+        let d = 1 << 14;
+        let (r1, r2, h) = (8.0, 64.0, 8u64);
+        let mut o = Cser::new(
+            &vec![0.0; d],
+            4,
+            0.0,
+            Box::new(Grbs::new(r1, 512, 3)),
+            Box::new(Grbs::new(r2, 1024, 5)),
+            h,
+        );
+        let mut g = Gen::replay(3, 0);
+        let steps = 64u64;
+        let mut bits = 0u64;
+        for _ in 0..steps {
+            let grads = vec![g.vec(d), g.vec(d), g.vec(d), g.vec(d)];
+            bits += o.step(&grads, 0.01).upload_bits();
+        }
+        let per_step = bits as f64 / steps as f64;
+        let rc = 1.0 / (1.0 / r2 + 1.0 / (r1 * h as f64));
+        let expect = d as f64 * 32.0 / rc;
+        assert!(
+            (per_step - expect).abs() < 0.05 * expect,
+            "per_step={per_step} expect={expect}"
+        );
+    }
+}
+
+#[cfg(test)]
+mod quantizer_tests {
+    //! "Arbitrary compressors" (paper abstract): CSER with dense value
+    //! quantizers — QSGD on the gradient path, sign-SGD on the error path.
+    use super::*;
+    use crate::compressor::{Qsgd, SignSgd};
+    use crate::optimizer::DistOptimizer;
+
+    #[test]
+    fn cser_converges_with_dense_quantizers() {
+        let d = 64;
+        let c = vec![1.0f32; d];
+        let mut o = Cser::new(
+            &vec![0.0; d],
+            4,
+            0.0,
+            Box::new(SignSgd),
+            Box::new(Qsgd::new(4)),
+            8,
+        );
+        for _ in 0..4000 {
+            let g: Vec<Vec<f32>> = (0..4)
+                .map(|i| o.worker_model(i).iter().zip(&c).map(|(x, ci)| x - ci).collect())
+                .collect();
+            o.step(&g, 0.05);
+        }
+        let mut xbar = vec![0.0f32; d];
+        o.mean_model(&mut xbar);
+        let err: f64 = xbar
+            .iter()
+            .zip(&c)
+            .map(|(x, ci)| ((x - ci) as f64).powi(2))
+            .sum::<f64>()
+            / d as f64;
+        assert!(err < 5e-2, "err={err}");
+    }
+
+    #[test]
+    fn lemma1_holds_with_quantizers_too() {
+        // The bifurcation identity is compressor-agnostic.
+        use crate::util::prop::Gen;
+        let d = 32;
+        let n = 3;
+        let mut o = Cser::new(
+            &vec![0.1; d],
+            n,
+            0.9,
+            Box::new(Qsgd::new(2)),
+            Box::new(SignSgd),
+            2,
+        );
+        let mut g = Gen::replay(0xABCD, 0);
+        for _ in 0..8 {
+            let grads = g.worker_vecs_smooth(n, d);
+            o.step(&grads, 0.05);
+            let base: Vec<f32> = o
+                .worker_model(0)
+                .iter()
+                .zip(o.local_error(0).unwrap())
+                .map(|(x, e)| x - e)
+                .collect();
+            for i in 1..n {
+                for (j, (x, e)) in o
+                    .worker_model(i)
+                    .iter()
+                    .zip(o.local_error(i).unwrap())
+                    .enumerate()
+                {
+                    assert!(((x - e) - base[j]).abs() < 1e-3, "worker {i} coord {j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quantizer_bits_reflect_quantization() {
+        let d = 1024;
+        let mut o = Cser::new(
+            &vec![0.0; d],
+            2,
+            0.0,
+            Box::new(SignSgd),
+            Box::new(Qsgd::new(4)),
+            4,
+        );
+        let grads = vec![vec![1.0f32; d]; 2];
+        let stats = o.step(&grads, 0.1);
+        // QSGD s=4: ~3.17 bits/coord << 32
+        assert!(stats.grad_bits < d as u64 * 8, "{}", stats.grad_bits);
+        assert!(stats.grad_bits > d as u64 * 2);
+    }
+}

@@ -1,0 +1,197 @@
+//! CSER "implementation II" (paper Algorithm 13; Appendix A.4).
+//!
+//! With randomized *sparsifiers* (GRBS), the residual bookkeeping of
+//! implementation I is redundant: for any block, its local residual either
+//! was already assimilated into the local model (unselected blocks) or was
+//! just reset to zero (selected blocks).  So PSync can run **directly on the
+//! local models** and the e_i vectors disappear:
+//!
+//!   p_i = η(β m_i + g_i)
+//!   p'_i ← PSync(p_i, C2);   x_i ← x_i − p'_i
+//!   every H steps:  x_i ← PSync(x_i, C1)
+//!
+//! Memory: 1×d state per worker instead of implementation I's 2×d (+2×d
+//! scratch) — the paper's "less memory footprint" claim for GRBS.  The
+//! equivalence with implementation I under globally-synchronized sparsifiers
+//! is verified by a property test below; it does NOT hold for per-worker
+//! compressors (rand-k/top-k), which is why the constructor asserts
+//! `globally_synchronized()`.
+
+use super::{DistOptimizer, Momentum, RoundStats};
+use crate::collective::psync;
+use crate::compressor::Compressor;
+use crate::util::math;
+
+pub struct CserImpl2 {
+    n: usize,
+    h: u64,
+    x: Vec<Vec<f32>>,
+    momentum: Momentum,
+    c1: Box<dyn Compressor>,
+    c2: Box<dyn Compressor>,
+    t: u64,
+    p: Vec<Vec<f32>>,
+}
+
+impl CserImpl2 {
+    pub fn new(
+        init: &[f32],
+        n: usize,
+        beta: f32,
+        c1: Box<dyn Compressor>,
+        c2: Box<dyn Compressor>,
+        h: u64,
+    ) -> Self {
+        assert!(h >= 1);
+        assert!(
+            c1.globally_synchronized() && c2.globally_synchronized(),
+            "implementation II requires globally-synchronized sparsifiers (Appendix A.4)"
+        );
+        let d = init.len();
+        CserImpl2 {
+            n,
+            h,
+            x: vec![init.to_vec(); n],
+            momentum: Momentum::new(beta, n, d),
+            c1,
+            c2,
+            t: 0,
+            p: vec![vec![0.0; d]; n],
+        }
+    }
+}
+
+impl DistOptimizer for CserImpl2 {
+    fn step(&mut self, grads: &[Vec<f32>], eta: f32) -> RoundStats {
+        debug_assert_eq!(grads.len(), self.n);
+        self.t += 1;
+        let mut stats = RoundStats::default();
+        for i in 0..self.n {
+            self.momentum.descent(i, &grads[i], eta, &mut self.p[i]);
+        }
+        let round = psync(&mut self.p, None, self.c2.as_ref(), self.t);
+        stats.grad_bits = round.upload_bits_per_worker;
+        stats.grad_allreduce = round.allreduce_compatible;
+        for i in 0..self.n {
+            math::axpy(-1.0, &self.p[i], &mut self.x[i]);
+        }
+        if self.t % self.h == 0 {
+            let round = psync(&mut self.x, None, self.c1.as_ref(), self.t);
+            stats.model_bits = round.upload_bits_per_worker;
+            stats.model_allreduce = round.allreduce_compatible;
+            stats.synced = true;
+        }
+        stats
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+    fn dim(&self) -> usize {
+        self.x[0].len()
+    }
+    fn worker_model(&self, i: usize) -> &[f32] {
+        &self.x[i]
+    }
+    fn name(&self) -> String {
+        format!("cser2[{},{},H={}]", self.c1.name(), self.c2.name(), self.h)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressor::{Grbs, Zero};
+    use crate::optimizer::Cser;
+    use crate::util::prop::{forall, slices_close, Gen};
+
+    #[test]
+    fn prop_impl2_equals_impl1_under_grbs() {
+        // Appendix A.4: with GRBS, implementation II (no e vectors) produces
+        // the same local models as implementation I at every step.
+        forall(20, 0x1317, |g: &mut Gen| {
+            let n = g.usize_in(2, 5);
+            let d = 8 * g.usize_in(2, 12);
+            let h = g.usize_in(1, 4) as u64;
+            let beta = if g.bool() { 0.9 } else { 0.0 };
+            let seed1 = g.rng.next_u64();
+            let seed2 = g.rng.next_u64();
+            let nb1 = (d / 4).max(2);
+            let nb2 = (d / 8).max(2);
+            let init = g.vec(d);
+            let mut a = Cser::new(
+                &init,
+                n,
+                beta,
+                Box::new(Grbs::new(2.0, nb1, seed1)),
+                Box::new(Grbs::new(4.0, nb2, seed2)),
+                h,
+            );
+            let mut b = CserImpl2::new(
+                &init,
+                n,
+                beta,
+                Box::new(Grbs::new(2.0, nb1, seed1)),
+                Box::new(Grbs::new(4.0, nb2, seed2)),
+                h,
+            );
+            for t in 0..(2 * h + 3) {
+                let grads = g.worker_vecs(n, d);
+                a.step(&grads, 0.1);
+                b.step(&grads, 0.1);
+                for i in 0..n {
+                    slices_close(a.worker_model(i), b.worker_model(i), 1e-4)
+                        .map_err(|e| format!("t={t} worker={i}: {e}"))?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn impl2_equals_impl1_for_cser_pl() {
+        // C2 = Zero is also globally synchronized; PL special case must agree.
+        let d = 32;
+        let init = vec![0.1f32; d];
+        let mut a = Cser::cser_pl(&init, 3, 0.9, Box::new(Grbs::new(4.0, 8, 2)), 3);
+        let mut b = CserImpl2::new(
+            &init,
+            3,
+            0.9,
+            Box::new(Grbs::new(4.0, 8, 2)),
+            Box::new(Zero),
+            3,
+        );
+        let mut g = Gen::replay(5, 0);
+        for _ in 0..9 {
+            let grads = g.worker_vecs(3, d);
+            a.step(&grads, 0.05);
+            b.step(&grads, 0.05);
+        }
+        for i in 0..3 {
+            slices_close(a.worker_model(i), b.worker_model(i), 1e-4).unwrap();
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "globally-synchronized")]
+    fn rejects_per_worker_compressors() {
+        let _ = CserImpl2::new(
+            &[0.0; 8],
+            2,
+            0.0,
+            Box::new(crate::compressor::RandK::new(2.0)),
+            Box::new(Zero),
+            2,
+        );
+    }
+
+    #[test]
+    fn memory_footprint_is_model_only() {
+        // structural check: impl2 owns n model vecs + n scratch, no e/e_half.
+        let d = 16;
+        let o = CserImpl2::new(&vec![0.0; d], 4, 0.0,
+            Box::new(Grbs::new(2.0, 4, 1)), Box::new(Zero), 2);
+        assert!(o.local_error(0).is_none());
+    }
+}

@@ -1,0 +1,145 @@
+//! Distributed optimizers: the paper's algorithms and its baselines.
+//!
+//! | Type                | Paper algorithm                | File        |
+//! |---------------------|--------------------------------|-------------|
+//! | `FullSgd`           | fully-synchronous SGD          | sgd.rs      |
+//! | `EfSgd`             | EF-SGD (Alg 10)                | ef_sgd.rs   |
+//! | `QsparseLocalSgd`   | QSparse-local-SGD (Alg 1/12)   | qsparse.rs  |
+//! | `QsparseLocalSgd::local_sgd` | local SGD (C1 = identity) | qsparse.rs |
+//! | `Cser`              | CSER / M-CSER (Alg 2 / Alg 4)  | cser.rs     |
+//! | `Cser::csea`        | CSEA (Alg 7, H = 1, C2 = 0)    | cser.rs     |
+//! | `Cser::cser_pl`     | CSER-PL (Alg 8, C2 = 0)        | cser.rs     |
+//! | `CserImpl2`         | CSER implementation II (Alg 13, GRBS) | cser_impl2.rs |
+//!
+//! All of them implement [`DistOptimizer`]: the trainer computes per-worker
+//! gradients on each worker's own local model and shard, then calls
+//! `step(grads, eta)`.  Momentum (paper §3.2, Nesterov in the Sutskever
+//! form) is uniform across algorithms via [`Momentum`]: every algorithm's
+//! per-worker descent message is p_i = η(β·m_i + g_i) with
+//! m_i ← β·m_i + g_i, reducing to p_i = η·g_i at β = 0.
+
+pub mod cser;
+pub mod cser_impl2;
+pub mod ef_sgd;
+pub mod qsparse;
+pub mod sgd;
+
+pub use cser::Cser;
+pub use cser_impl2::CserImpl2;
+pub use ef_sgd::EfSgd;
+pub use qsparse::QsparseLocalSgd;
+pub use sgd::FullSgd;
+
+/// Communication performed by one optimizer step (one worker's upload view;
+/// the trainer turns this into wire/time cost via `network::CostModel`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RoundStats {
+    /// Bits uploaded for gradient synchronization (C2 path or dense).
+    pub grad_bits: u64,
+    /// Bits uploaded for model/error synchronization (C1 path), nonzero only
+    /// on reset rounds.
+    pub model_bits: u64,
+    /// Whether each path could use AllReduce (global support).
+    pub grad_allreduce: bool,
+    pub model_allreduce: bool,
+    /// True if this step was an error-reset / model-sync round.
+    pub synced: bool,
+}
+
+impl RoundStats {
+    pub fn upload_bits(&self) -> u64 {
+        self.grad_bits + self.model_bits
+    }
+}
+
+/// A synchronous distributed optimizer over n workers and a flat d-vector.
+/// (`Sync` so the trainer can read per-worker models from gradient threads.)
+pub trait DistOptimizer: Send + Sync {
+    /// Apply one iteration. `grads[i]` is worker i's stochastic gradient
+    /// evaluated at `worker_model(i)`; `eta` is the current learning rate.
+    fn step(&mut self, grads: &[Vec<f32>], eta: f32) -> RoundStats;
+
+    fn n(&self) -> usize;
+    fn dim(&self) -> usize;
+
+    /// Worker i's current local model x_{i,t} (what its next gradient is
+    /// computed on).
+    fn worker_model(&self, i: usize) -> &[f32];
+
+    /// x̄_t = mean_i x_{i,t} — the iterate the paper's analysis tracks and
+    /// the model used for evaluation.
+    fn mean_model(&self, out: &mut [f32]) {
+        crate::util::math::fill(out, 0.0);
+        let inv = 1.0 / self.n() as f32;
+        for i in 0..self.n() {
+            crate::util::math::axpy(inv, self.worker_model(i), out);
+        }
+    }
+
+    /// Local residual error e_{i,t} if the algorithm maintains one
+    /// (for the Lemma 1 invariant test).
+    fn local_error(&self, _i: usize) -> Option<&[f32]> {
+        None
+    }
+
+    fn name(&self) -> String;
+}
+
+/// Nesterov momentum in the Sutskever form (paper §3.2):
+///   m_t = β m_{t-1} + g_t,   update direction = β m_t + g_t.
+#[derive(Debug, Clone)]
+pub struct Momentum {
+    pub beta: f32,
+    m: Vec<Vec<f32>>,
+}
+
+impl Momentum {
+    pub fn new(beta: f32, n: usize, d: usize) -> Self {
+        assert!((0.0..1.0).contains(&beta));
+        let m = if beta > 0.0 { vec![vec![0.0; d]; n] } else { vec![] };
+        Momentum { beta, m }
+    }
+
+    /// p_i = η(β m_i + g_i) written into `out`; updates m_i in place.
+    pub fn descent(&mut self, i: usize, g: &[f32], eta: f32, out: &mut [f32]) {
+        if self.beta == 0.0 {
+            for (o, gi) in out.iter_mut().zip(g) {
+                *o = eta * *gi;
+            }
+            return;
+        }
+        let m = &mut self.m[i];
+        for ((o, mi), gi) in out.iter_mut().zip(m.iter_mut()).zip(g) {
+            *mi = self.beta * *mi + *gi;
+            *o = eta * (self.beta * *mi + *gi);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn momentum_beta_zero_is_plain_sgd_direction() {
+        let mut mo = Momentum::new(0.0, 1, 3);
+        let mut p = vec![0.0; 3];
+        mo.descent(0, &[1.0, -2.0, 3.0], 0.1, &mut p);
+        assert_eq!(p, vec![0.1, -0.2, 0.3]);
+    }
+
+    #[test]
+    fn momentum_matches_sutskever_recursion() {
+        // hand-roll two steps of m_t = b m + g; p = eta (b m_t + g_t)
+        let beta = 0.9f32;
+        let eta = 0.5f32;
+        let mut mo = Momentum::new(beta, 1, 1);
+        let mut p = vec![0.0f32];
+        mo.descent(0, &[2.0], eta, &mut p);
+        // m1 = 2; p1 = eta*(0.9*2 + 2) = 0.5*3.8 = 1.9
+        assert!((p[0] - 1.9).abs() < 1e-6);
+        mo.descent(0, &[1.0], eta, &mut p);
+        // m2 = 0.9*2 + 1 = 2.8; p2 = 0.5*(0.9*2.8 + 1) = 0.5*3.52 = 1.76
+        assert!((p[0] - 1.76).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,220 @@
+//! QSparse-local-SGD (paper Algorithm 1 / Algorithm 12; Basu et al. 2019).
+//!
+//! Local models evolve independently for H steps.  On sync rounds each
+//! worker compresses (stale error + accumulated local progress):
+//!
+//!   q_i  = e_i + (x_{i,t-1/2} − x̂_{t-1})
+//!   q'_i = C1(q_i);   e_i ← q_i − q'_i
+//!   x̂_t  = x̂_{t-1} + mean_j q'_j;   x_i ← x̂_t      (full resync)
+//!
+//! The residual e_i is *set aside* between syncs — it enters neither the
+//! local model nor gradient computation for H steps.  That H-step staleness
+//! is exactly what CSER's error reset removes, and why QSparse degrades and
+//! then diverges as R_C = R_C1 × H grows (paper Table 2).
+//!
+//! `local_sgd` (C1 = identity) is the paper's local-SGD row.
+
+use super::{DistOptimizer, Momentum, RoundStats};
+use crate::compressor::{payload_bits, Compressor, Ctx, Identity};
+use crate::util::math;
+
+pub struct QsparseLocalSgd {
+    n: usize,
+    h: u64,
+    x: Vec<Vec<f32>>,
+    xhat: Vec<f32>,
+    e: Vec<Vec<f32>>,
+    momentum: Momentum,
+    c1: Box<dyn Compressor>,
+    t: u64,
+    // scratch
+    p: Vec<f32>,
+    q: Vec<f32>,
+    qbar: Vec<f32>,
+    kept: Vec<f32>,
+}
+
+impl QsparseLocalSgd {
+    pub fn new(init: &[f32], n: usize, beta: f32, c1: Box<dyn Compressor>, h: u64) -> Self {
+        assert!(h >= 1);
+        let d = init.len();
+        QsparseLocalSgd {
+            n,
+            h,
+            x: vec![init.to_vec(); n],
+            xhat: init.to_vec(),
+            e: vec![vec![0.0; d]; n],
+            momentum: Momentum::new(beta, n, d),
+            c1,
+            t: 0,
+            p: vec![0.0; d],
+            q: vec![0.0; d],
+            qbar: vec![0.0; d],
+            kept: vec![0.0; d],
+        }
+    }
+
+    /// Paper's local SGD row: identity compressor, sync every H steps.
+    pub fn local_sgd(init: &[f32], n: usize, beta: f32, h: u64) -> Self {
+        Self::new(init, n, beta, Box::new(Identity), h)
+    }
+}
+
+impl DistOptimizer for QsparseLocalSgd {
+    fn step(&mut self, grads: &[Vec<f32>], eta: f32) -> RoundStats {
+        debug_assert_eq!(grads.len(), self.n);
+        let d = self.xhat.len();
+        self.t += 1;
+        // local half-step on every worker
+        for i in 0..self.n {
+            self.momentum.descent(i, &grads[i], eta, &mut self.p);
+            math::axpy(-1.0, &self.p, &mut self.x[i]);
+        }
+        if self.t % self.h != 0 {
+            return RoundStats::default();
+        }
+        // synchronization round
+        math::fill(&mut self.qbar, 0.0);
+        let inv = 1.0 / self.n as f32;
+        let mut bits = 0u64;
+        for i in 0..self.n {
+            for j in 0..d {
+                self.q[j] = self.e[i][j] + self.x[i][j] - self.xhat[j];
+            }
+            let ctx = Ctx { round: self.t, worker: i as u32 };
+            if self.c1.is_dense() {
+                bits += self.c1.compress_into(ctx, &self.q, &mut self.kept);
+                math::axpy(inv, &self.kept, &mut self.qbar);
+                for ((ej, qj), kj) in self.e[i].iter_mut().zip(&self.q).zip(&self.kept) {
+                    *ej = qj - kj;
+                }
+            } else {
+                let sel = self.c1.select(ctx, &self.q);
+                bits += payload_bits(&sel, d);
+                // e_i = q_i off support; qbar accumulates the compressed part —
+                // range-wise (§Perf: no per-step d-sized mask allocation)
+                self.e[i].copy_from_slice(&self.q);
+                let (q, qbar, e) = (&self.q, &mut self.qbar, &mut self.e[i]);
+                sel.for_each_range(d, |s, t| {
+                    math::axpy(inv, &q[s..t], &mut qbar[s..t]);
+                    math::fill(&mut e[s..t], 0.0);
+                });
+            }
+        }
+        math::axpy(1.0, &self.qbar, &mut self.xhat);
+        for i in 0..self.n {
+            self.x[i].copy_from_slice(&self.xhat);
+        }
+        RoundStats {
+            grad_bits: 0,
+            model_bits: bits / self.n as u64,
+            grad_allreduce: true,
+            model_allreduce: self.c1.globally_synchronized(),
+            synced: true,
+        }
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+    fn dim(&self) -> usize {
+        self.xhat.len()
+    }
+    fn worker_model(&self, i: usize) -> &[f32] {
+        &self.x[i]
+    }
+    fn local_error(&self, i: usize) -> Option<&[f32]> {
+        Some(&self.e[i])
+    }
+    fn name(&self) -> String {
+        format!("qsparse[{},H={}]", self.c1.name(), self.h)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressor::Grbs;
+
+    #[test]
+    fn h1_identity_reduces_to_sgd() {
+        let init = [0.5f32, -0.5, 1.0];
+        let mut q = QsparseLocalSgd::new(&init, 3, 0.9, Box::new(Identity), 1);
+        let mut s = super::super::FullSgd::new(&init, 3, 0.9);
+        for t in 0..15 {
+            let g: Vec<Vec<f32>> =
+                (0..3).map(|i| vec![(t as f32 - i as f32) * 0.1; 3]).collect();
+            q.step(&g, 0.1);
+            s.step(&g, 0.1);
+        }
+        for (a, b) in q.worker_model(0).iter().zip(s.worker_model(0)) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn local_sgd_averages_on_sync() {
+        let mut q = QsparseLocalSgd::local_sgd(&[0.0, 0.0], 2, 0.0, 2);
+        // step 1 (no sync): workers diverge
+        q.step(&[vec![1.0, 0.0], vec![0.0, 1.0]], 1.0);
+        assert_ne!(q.worker_model(0), q.worker_model(1));
+        // step 2 (sync): full model averaging
+        q.step(&[vec![1.0, 0.0], vec![0.0, 1.0]], 1.0);
+        assert_eq!(q.worker_model(0), q.worker_model(1));
+        assert_eq!(q.worker_model(0), &[-1.0, -1.0]);
+    }
+
+    #[test]
+    fn models_fully_resynced_after_compressed_round() {
+        let d = 40;
+        let mut q = QsparseLocalSgd::new(
+            &vec![0.0; d],
+            4,
+            0.0,
+            Box::new(Grbs::new(4.0, 10, 5)),
+            4,
+        );
+        for t in 1..=8 {
+            let g: Vec<Vec<f32>> = (0..4).map(|i| vec![i as f32 * 0.1 + t as f32 * 0.01; d]).collect();
+            q.step(&g, 0.1);
+            if t % 4 == 0 {
+                for i in 1..4 {
+                    assert_eq!(q.worker_model(0), q.worker_model(i), "t={t}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn no_communication_between_syncs() {
+        let mut q =
+            QsparseLocalSgd::new(&[0.0; 8], 2, 0.0, Box::new(Grbs::new(2.0, 4, 1)), 4);
+        for t in 1..=8u64 {
+            let stats = q.step(&[vec![1.0; 8], vec![2.0; 8]], 0.1);
+            assert_eq!(stats.synced, t % 4 == 0);
+            if !stats.synced {
+                assert_eq!(stats.upload_bits(), 0);
+            } else {
+                assert!(stats.model_bits > 0);
+            }
+        }
+    }
+
+    #[test]
+    fn quadratic_converges_moderate_compression() {
+        let d = 64;
+        let c = vec![1.0f32; d];
+        let mut q =
+            QsparseLocalSgd::new(&vec![0.0; d], 4, 0.0, Box::new(Grbs::new(4.0, 16, 9)), 4);
+        for _ in 0..4000 {
+            let g: Vec<Vec<f32>> = (0..4)
+                .map(|i| q.worker_model(i).iter().zip(&c).map(|(x, ci)| x - ci).collect())
+                .collect();
+            q.step(&g, 0.05);
+        }
+        let mut xbar = vec![0.0f32; d];
+        q.mean_model(&mut xbar);
+        let err: f64 = xbar.iter().zip(&c).map(|(x, ci)| ((x - ci) as f64).powi(2)).sum();
+        assert!(err < 1e-2, "err={err}");
+    }
+}

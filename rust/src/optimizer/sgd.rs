@@ -1,0 +1,89 @@
+//! Fully-synchronous SGD with momentum — the R_C = 1 baseline in every table.
+//!
+//! Every worker holds the identical model; the gradient is dense-AllReduced
+//! each step; momentum is applied to the averaged gradient (equivalently,
+//! per-worker on identical state — they coincide).
+
+use super::{DistOptimizer, Momentum, RoundStats};
+use crate::util::math;
+
+pub struct FullSgd {
+    n: usize,
+    x: Vec<f32>,
+    momentum: Momentum,
+    gbar: Vec<f32>,
+    p: Vec<f32>,
+}
+
+impl FullSgd {
+    pub fn new(init: &[f32], n: usize, beta: f32) -> Self {
+        FullSgd {
+            n,
+            x: init.to_vec(),
+            momentum: Momentum::new(beta, 1, init.len()),
+            gbar: vec![0.0; init.len()],
+            p: vec![0.0; init.len()],
+        }
+    }
+}
+
+impl DistOptimizer for FullSgd {
+    fn step(&mut self, grads: &[Vec<f32>], eta: f32) -> RoundStats {
+        debug_assert_eq!(grads.len(), self.n);
+        let refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+        math::mean_rows(&refs, &mut self.gbar);
+        self.momentum.descent(0, &self.gbar, eta, &mut self.p);
+        math::axpy(-1.0, &self.p, &mut self.x);
+        RoundStats {
+            grad_bits: self.x.len() as u64 * 32,
+            model_bits: 0,
+            grad_allreduce: true,
+            model_allreduce: true,
+            synced: true,
+        }
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+    fn dim(&self) -> usize {
+        self.x.len()
+    }
+    fn worker_model(&self, _i: usize) -> &[f32] {
+        &self.x
+    }
+    fn mean_model(&self, out: &mut [f32]) {
+        out.copy_from_slice(&self.x);
+    }
+    fn name(&self) -> String {
+        "sgd".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn averages_gradients() {
+        let mut o = FullSgd::new(&[0.0, 0.0], 2, 0.0);
+        o.step(&[vec![1.0, 0.0], vec![3.0, 2.0]], 0.5);
+        // gbar = [2, 1]; x = -eta*gbar
+        assert_eq!(o.worker_model(0), &[-1.0, -0.5]);
+    }
+
+    #[test]
+    fn quadratic_converges() {
+        // f(x) = 0.5 ||x - c||^2, grad = x - c
+        let c = [3.0f32, -2.0];
+        let mut o = FullSgd::new(&[0.0, 0.0], 4, 0.9);
+        for _ in 0..200 {
+            let g: Vec<Vec<f32>> = (0..4)
+                .map(|_| o.worker_model(0).iter().zip(&c).map(|(x, ci)| x - ci).collect())
+                .collect();
+            o.step(&g, 0.05);
+        }
+        let x = o.worker_model(0);
+        assert!((x[0] - 3.0).abs() < 1e-2 && (x[1] + 2.0).abs() < 1e-2, "{x:?}");
+    }
+}

@@ -1,0 +1,238 @@
+//! Executable artifacts on the PJRT CPU client.
+//!
+//! Pattern (from /opt/xla-example/load_hlo): HLO *text* →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`.  Text is the interchange format because
+//! xla_extension 0.5.1 rejects jax≥0.5's 64-bit-id serialized protos.
+//!
+//! All artifacts in this repo are lowered with `return_tuple=True`, so every
+//! execution returns one tuple literal that we decompose.
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        Ok(Runtime { client: xla::PjRtClient::cpu().context("creating PJRT CPU client")? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO-text artifact.
+    pub fn load(&self, path: impl AsRef<Path>) -> Result<Executable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable {
+            exe,
+            name: path.file_name().unwrap_or_default().to_string_lossy().into_owned(),
+        })
+    }
+}
+
+/// Typed input for an execution.
+pub enum Input<'a> {
+    F32(&'a [f32], Vec<i64>),
+    I32(&'a [i32], Vec<i64>),
+}
+
+impl Executable {
+    /// Execute with typed host inputs; returns the decomposed output tuple.
+    pub fn run(&self, inputs: &[Input]) -> Result<Vec<xla::Literal>> {
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|inp| -> Result<xla::Literal> {
+                Ok(match inp {
+                    Input::F32(v, dims) => xla::Literal::vec1(v).reshape(dims)?,
+                    Input::I32(v, dims) => xla::Literal::vec1(v).reshape(dims)?,
+                })
+            })
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        Ok(result.to_tuple()?)
+    }
+
+    /// Convenience: (loss, grad) from a train_step artifact.
+    pub fn train_step(
+        &self,
+        flat: &[f32],
+        tokens: &[i32],
+        targets: &[i32],
+        batch: usize,
+        seq: usize,
+    ) -> Result<(f32, Vec<f32>)> {
+        let bs = [batch as i64, seq as i64];
+        let out = self.run(&[
+            Input::F32(flat, vec![flat.len() as i64]),
+            Input::I32(tokens, bs.to_vec()),
+            Input::I32(targets, bs.to_vec()),
+        ])?;
+        anyhow::ensure!(out.len() == 2, "train_step must return (loss, grad)");
+        let loss = out[0].get_first_element::<f32>()?;
+        let grad = out[1].to_vec::<f32>()?;
+        Ok((loss, grad))
+    }
+
+    /// Convenience: scalar loss from an eval_loss artifact.
+    pub fn eval_loss(
+        &self,
+        flat: &[f32],
+        tokens: &[i32],
+        targets: &[i32],
+        batch: usize,
+        seq: usize,
+    ) -> Result<f32> {
+        let bs = [batch as i64, seq as i64];
+        let out = self.run(&[
+            Input::F32(flat, vec![flat.len() as i64]),
+            Input::I32(tokens, bs.to_vec()),
+            Input::I32(targets, bs.to_vec()),
+        ])?;
+        Ok(out[0].get_first_element::<f32>()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+
+    fn runtime_and_manifest() -> Option<(Runtime, Manifest)> {
+        let m = Manifest::load("artifacts").ok()?;
+        let r = Runtime::cpu().ok()?;
+        Some((r, m))
+    }
+
+    #[test]
+    fn tiny_train_step_runs_and_descends() {
+        let Some((rt, m)) = runtime_and_manifest() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let info = m.model("tiny").unwrap();
+        let exe = rt.load(&info.train_step).unwrap();
+        let mut flat = m.load_init(info).unwrap();
+        let (b, s) = (info.batch, info.seq_len);
+        let tokens: Vec<i32> = (0..b * s).map(|i| (i % info.vocab) as i32).collect();
+        let targets: Vec<i32> = (0..b * s).map(|i| ((i + 1) % info.vocab) as i32).collect();
+        let (l0, g) = exe.train_step(&flat, &tokens, &targets, b, s).unwrap();
+        assert!(l0.is_finite() && l0 > 0.0);
+        assert_eq!(g.len(), info.params);
+        // one SGD step decreases this batch's loss
+        for (x, gi) in flat.iter_mut().zip(&g) {
+            *x -= 0.5 * gi;
+        }
+        let (l1, _) = exe.train_step(&flat, &tokens, &targets, b, s).unwrap();
+        assert!(l1 < l0, "loss did not decrease: {l0} -> {l1}");
+    }
+
+    #[test]
+    fn pallas_artifact_matches_jnp_artifact() {
+        // The tiny_pallas train_step (flash-attention Pallas kernels lowered
+        // into the HLO) must agree with the pure-jnp tiny artifact.
+        let Some((rt, m)) = runtime_and_manifest() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let (a, b) = (m.model("tiny").unwrap(), m.model("tiny_pallas").unwrap());
+        assert_eq!(a.params, b.params);
+        let flat = m.load_init(a).unwrap();
+        let (bt, s) = (a.batch, a.seq_len);
+        let tokens: Vec<i32> = (0..bt * s).map(|i| ((i * 7) % a.vocab) as i32).collect();
+        let targets: Vec<i32> = (0..bt * s).map(|i| ((i * 7 + 1) % a.vocab) as i32).collect();
+        let ea = rt.load(&a.train_step).unwrap();
+        let eb = rt.load(&b.train_step).unwrap();
+        let (la, ga) = ea.train_step(&flat, &tokens, &targets, bt, s).unwrap();
+        let (lb, gb) = eb.train_step(&flat, &tokens, &targets, bt, s).unwrap();
+        assert!((la - lb).abs() < 1e-3, "loss mismatch {la} vs {lb}");
+        let mut max_rel = 0f32;
+        for (x, y) in ga.iter().zip(&gb) {
+            let rel = (x - y).abs() / (1e-3 + x.abs().max(y.abs()));
+            max_rel = max_rel.max(rel);
+        }
+        assert!(max_rel < 0.05, "grad mismatch: max rel {max_rel}");
+    }
+
+    #[test]
+    fn block_mask_kernel_artifact_matches_rust_grbs_semantics() {
+        let Some((rt, m)) = runtime_and_manifest() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let info = m.block_mask.clone().unwrap();
+        let exe = rt.load(&info.file).unwrap();
+        let d = info.d;
+        let nb = d / info.block_size;
+        let v: Vec<f32> = (0..d).map(|i| (i as f32).sin()).collect();
+        let mask: Vec<f32> = (0..nb).map(|b| (b % 3 == 0) as u8 as f32).collect();
+        let out = exe
+            .run(&[
+                Input::F32(&v, vec![d as i64]),
+                Input::F32(&mask, vec![nb as i64]),
+            ])
+            .unwrap();
+        let kept = out[0].to_vec::<f32>().unwrap();
+        let resid = out[1].to_vec::<f32>().unwrap();
+        // Same semantics as compressor::Selection::apply with those blocks.
+        use crate::compressor::Selection;
+        let blocks: Vec<u32> = (0..nb as u32).filter(|b| b % 3 == 0).collect();
+        let sel = Selection::Blocks { block_size: info.block_size, blocks };
+        let mut kept_rs = vec![0.0f32; d];
+        sel.apply(&v, &mut kept_rs);
+        for i in 0..d {
+            assert_eq!(kept[i], kept_rs[i], "kept mismatch at {i}");
+            assert_eq!(resid[i], v[i] - kept_rs[i], "resid mismatch at {i}");
+        }
+    }
+
+    #[test]
+    fn fused_update_artifact_matches_formula() {
+        let Some((rt, m)) = runtime_and_manifest() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let info = m.fused_update.clone().unwrap();
+        let exe = rt.load(&info.file).unwrap();
+        let d = info.d;
+        let x: Vec<f32> = (0..d).map(|i| (i as f32 * 0.37).cos()).collect();
+        let e: Vec<f32> = (0..d).map(|i| (i as f32 * 0.11).sin()).collect();
+        let g: Vec<f32> = (0..d).map(|i| ((i % 17) as f32 - 8.0) / 8.0).collect();
+        let r: Vec<f32> = (0..d).map(|i| ((i % 5) as f32 - 2.0) / 2.0).collect();
+        let eta = [0.1f32];
+        let out = exe
+            .run(&[
+                Input::F32(&eta, vec![1]),
+                Input::F32(&x, vec![d as i64]),
+                Input::F32(&e, vec![d as i64]),
+                Input::F32(&g, vec![d as i64]),
+                Input::F32(&r, vec![d as i64]),
+            ])
+            .unwrap();
+        let xo = out[0].to_vec::<f32>().unwrap();
+        let eo = out[1].to_vec::<f32>().unwrap();
+        for i in 0..d {
+            let xe = x[i] - 0.1 * (g[i] + r[i]);
+            let ee = e[i] - 0.1 * r[i];
+            assert!((xo[i] - xe).abs() < 1e-6);
+            assert!((eo[i] - ee).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,172 @@
+//! artifacts/manifest.json — the contract between aot.py and the Rust side.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub name: String,
+    pub params: usize,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub use_pallas: bool,
+    pub train_step: PathBuf,
+    pub eval_loss: PathBuf,
+    pub init: PathBuf,
+    /// (name, element count) per parameter tensor, in flat order.
+    pub param_table: Vec<(String, usize)>,
+}
+
+#[derive(Debug, Clone)]
+pub struct KernelInfo {
+    pub d: usize,
+    pub block_size: usize,
+    pub file: PathBuf,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: Vec<ModelInfo>,
+    pub fused_update: Option<KernelInfo>,
+    pub block_mask: Option<KernelInfo>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json — run `make artifacts`", dir.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest parse error: {e}"))?;
+
+        let mut models = Vec::new();
+        let mobj = j.get("models").and_then(|m| m.as_obj()).ok_or_else(|| anyhow!("no models"))?;
+        for (name, m) in mobj {
+            let get = |k: &str| -> Result<usize> {
+                m.get(k).and_then(|v| v.as_usize()).ok_or_else(|| anyhow!("model {name}: missing {k}"))
+            };
+            let gets = |k: &str| -> Result<PathBuf> {
+                Ok(dir.join(
+                    m.get(k).and_then(|v| v.as_str()).ok_or_else(|| anyhow!("model {name}: missing {k}"))?,
+                ))
+            };
+            let param_table = m
+                .get("param_table")
+                .and_then(|t| t.as_arr())
+                .map(|arr| {
+                    arr.iter()
+                        .filter_map(|e| {
+                            let nm = e.get("name")?.as_str()?.to_string();
+                            let count: usize = e
+                                .get("shape")?
+                                .as_arr()?
+                                .iter()
+                                .map(|d| d.as_usize().unwrap_or(0))
+                                .product();
+                            Some((nm, count))
+                        })
+                        .collect()
+                })
+                .unwrap_or_default();
+            models.push(ModelInfo {
+                name: name.clone(),
+                params: get("params")?,
+                batch: get("batch")?,
+                seq_len: get("seq_len")?,
+                vocab: get("vocab")?,
+                d_model: get("d_model")?,
+                n_layers: get("n_layers")?,
+                use_pallas: m.get("use_pallas").and_then(|v| v.as_bool()).unwrap_or(false),
+                train_step: gets("train_step")?,
+                eval_loss: gets("eval_loss")?,
+                init: gets("init")?,
+                param_table,
+            });
+        }
+
+        let kernel = |key: &str| -> Option<KernelInfo> {
+            let k = j.get("kernels")?.get(key)?;
+            Some(KernelInfo {
+                d: k.get("d")?.as_usize()?,
+                block_size: k.get("block_size").and_then(|v| v.as_usize()).unwrap_or(0),
+                file: dir.join(k.get("file")?.as_str()?),
+            })
+        };
+
+        let fused_update = kernel("fused_update");
+        let block_mask = kernel("block_mask");
+        Ok(Manifest { dir, models, fused_update, block_mask })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelInfo> {
+        self.models
+            .iter()
+            .find(|m| m.name == name)
+            .ok_or_else(|| anyhow!("model preset '{name}' not in manifest (have: {:?})",
+                self.models.iter().map(|m| &m.name).collect::<Vec<_>>()))
+    }
+
+    /// Read the f32 init vector for a model.
+    pub fn load_init(&self, m: &ModelInfo) -> Result<Vec<f32>> {
+        let bytes = std::fs::read(&m.init)
+            .with_context(|| format!("reading {}", m.init.display()))?;
+        anyhow::ensure!(bytes.len() == m.params * 4, "init size mismatch");
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn repo_artifacts() -> Option<Manifest> {
+        // Tests run from the crate root; artifacts exist after `make artifacts`.
+        Manifest::load("artifacts").ok()
+    }
+
+    #[test]
+    fn parses_generated_manifest() {
+        let Some(m) = repo_artifacts() else {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        };
+        let tiny = m.model("tiny").unwrap();
+        assert!(tiny.params > 0);
+        assert!(tiny.train_step.exists());
+        assert!(tiny.eval_loss.exists());
+        let total: usize = tiny.param_table.iter().map(|(_, c)| c).sum();
+        assert_eq!(total, tiny.params, "param table must cover the flat vector");
+        let init = m.load_init(tiny).unwrap();
+        assert_eq!(init.len(), tiny.params);
+        assert!(init.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn kernel_entries_present() {
+        let Some(m) = repo_artifacts() else {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        };
+        let bm = m.block_mask.unwrap();
+        assert!(bm.file.exists());
+        assert!(bm.d % bm.block_size == 0);
+        assert!(m.fused_update.unwrap().file.exists());
+    }
+
+    #[test]
+    fn missing_model_is_a_clear_error() {
+        let Some(m) = repo_artifacts() else {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        };
+        let err = m.model("nope").unwrap_err().to_string();
+        assert!(err.contains("nope"));
+    }
+}

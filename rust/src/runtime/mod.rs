@@ -1,0 +1,9 @@
+//! PJRT runtime: load AOT artifacts (HLO text emitted by python/compile/aot.py)
+//! and execute them from the Rust hot path.  Python is never on this path —
+//! the artifacts are self-contained after `make artifacts`.
+
+pub mod artifact;
+pub mod manifest;
+
+pub use artifact::{Executable, Runtime};
+pub use manifest::{KernelInfo, Manifest, ModelInfo};

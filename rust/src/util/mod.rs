@@ -1,0 +1,10 @@
+//! In-tree replacements for the usual crates.io utilities (offline build) +
+//! shared numeric kernels.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod math;
+pub mod pool;
+pub mod prop;
+pub mod rng;

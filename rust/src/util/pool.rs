@@ -1,0 +1,73 @@
+//! Scoped worker thread pool (no `rayon`/`tokio` offline).
+//!
+//! The coordinator computes per-worker gradients in parallel; the experiment
+//! harness runs independent (optimizer, R_C, seed) cells in parallel.  Both
+//! only need a fork-join `scope_map` over indices, which `std::thread::scope`
+//! provides safely without unsafe code.
+
+/// Run `f(i)` for `i in 0..n` on up to `threads` OS threads; returns results
+/// in index order.  `f` must be `Sync` (it is shared by reference).
+pub fn scope_map<T: Send, F: Fn(usize) -> T + Sync>(n: usize, threads: usize, f: F) -> Vec<T> {
+    let threads = threads.max(1).min(n.max(1));
+    if n == 0 {
+        return vec![];
+    }
+    if threads == 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let slots: Vec<std::sync::Mutex<&mut Option<T>>> =
+        out.iter_mut().map(std::sync::Mutex::new).collect();
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let v = f(i);
+                **slots[i].lock().unwrap() = Some(v);
+            });
+        }
+    });
+    out.into_iter().map(|v| v.expect("worker finished")).collect()
+}
+
+/// Number of hardware threads (bounded to avoid oversubscription in benches).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_in_order() {
+        let out = scope_map(100, 8, |i| i * i);
+        assert_eq!(out.len(), 100);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn single_thread_path() {
+        assert_eq!(scope_map(5, 1, |i| i + 1), vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn empty() {
+        let v: Vec<usize> = scope_map(0, 4, |i| i);
+        assert!(v.is_empty());
+    }
+
+    #[test]
+    fn parallel_side_effects_visible() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let counter = AtomicUsize::new(0);
+        scope_map(64, 8, |_| counter.fetch_add(1, Ordering::SeqCst));
+        assert_eq!(counter.load(Ordering::SeqCst), 64);
+    }
+}

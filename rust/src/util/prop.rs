@@ -1,0 +1,158 @@
+//! Property-based testing mini-framework (no `proptest` offline).
+//!
+//! `forall(cases, seed, |g| ...)` runs a closure over `cases` independently
+//! seeded generator instances; on failure it reports the failing case seed so
+//! the case can be replayed deterministically:
+//!
+//! ```text
+//! property failed at case 17 (replay with Gen::replay(BASE_SEED, 17)): ...
+//! ```
+//!
+//! `Gen` wraps [`crate::util::rng::Rng`] with convenience draws shaped for
+//! this codebase (vectors, worker counts, compressor ratios...).
+
+use super::rng::Rng;
+
+pub struct Gen {
+    pub rng: Rng,
+    pub case: u64,
+}
+
+impl Gen {
+    pub fn replay(base_seed: u64, case: u64) -> Self {
+        Gen { rng: Rng::stream(base_seed, case), case }
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo < hi);
+        lo + self.rng.below(hi - lo)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.rng.f32() * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// Random normal vector of length `d` with occasional adversarial
+    /// entries (zeros, huge magnitudes) to poke edge cases.
+    pub fn vec(&mut self, d: usize) -> Vec<f32> {
+        let mut v = vec![0.0f32; d];
+        self.rng.fill_normal(&mut v, 1.0);
+        // sprinkle edge-case values
+        for _ in 0..(d / 16).max(1) {
+            let i = self.rng.below(d);
+            v[i] = match self.rng.below(4) {
+                0 => 0.0,
+                1 => 1e6,
+                2 => -1e-6,
+                _ => v[i],
+            };
+        }
+        v
+    }
+
+    /// Plain normal vector without adversarial magnitudes — for properties
+    /// that are exact in real arithmetic but accumulate fp error when fed
+    /// 1e6-scale outliers (e.g. the Lemma 1 invariant).
+    pub fn vec_smooth(&mut self, d: usize) -> Vec<f32> {
+        let mut v = vec![0.0f32; d];
+        self.rng.fill_normal(&mut v, 1.0);
+        v
+    }
+
+    /// `n` vectors of length `d` (one per simulated worker).
+    pub fn worker_vecs(&mut self, n: usize, d: usize) -> Vec<Vec<f32>> {
+        (0..n).map(|_| self.vec(d)).collect()
+    }
+
+    /// Smooth variant of [`Self::worker_vecs`].
+    pub fn worker_vecs_smooth(&mut self, n: usize, d: usize) -> Vec<Vec<f32>> {
+        (0..n).map(|_| self.vec_smooth(d)).collect()
+    }
+
+    /// A power of two in [1, max_pow2].
+    pub fn pow2(&mut self, max_exp: u32) -> usize {
+        1usize << self.rng.below(max_exp as usize + 1)
+    }
+}
+
+/// Run `f` for `cases` cases. Panics (with replay info) on the first failure.
+pub fn forall<F: FnMut(&mut Gen) -> Result<(), String>>(cases: u64, base_seed: u64, mut f: F) {
+    for case in 0..cases {
+        let mut g = Gen::replay(base_seed, case);
+        if let Err(msg) = f(&mut g) {
+            panic!("property failed at case {case} (replay with Gen::replay({base_seed}, {case})): {msg}");
+        }
+    }
+}
+
+/// Assert helper returning Result for use inside `forall` closures.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+/// Approximate equality with context for floating-point properties.
+pub fn close(a: f64, b: f64, tol: f64) -> bool {
+    (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+}
+
+pub fn slices_close(a: &[f32], b: &[f32], tol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let scale = 1.0 + x.abs().max(y.abs());
+        if (x - y).abs() > tol * scale {
+            return Err(format!("idx {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_runs_all_cases() {
+        let mut count = 0;
+        forall(25, 1, |_g| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed at case 3")]
+    fn forall_reports_case() {
+        forall(10, 1, |g| {
+            if g.case == 3 {
+                Err("boom".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let mut a = Gen::replay(9, 4);
+        let mut b = Gen::replay(9, 4);
+        assert_eq!(a.vec(32), b.vec(32));
+    }
+
+    #[test]
+    fn slices_close_detects_mismatch() {
+        assert!(slices_close(&[1.0, 2.0], &[1.0, 2.5], 1e-3).is_err());
+        assert!(slices_close(&[1.0, 2.0], &[1.0, 2.0 + 1e-7], 1e-5).is_ok());
+    }
+}

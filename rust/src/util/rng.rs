@@ -1,0 +1,189 @@
+//! Deterministic pseudo-random generators.
+//!
+//! The build environment is offline (no `rand` crate), and more importantly
+//! GRBS *requires* a deterministic generator with an explicit seed schedule:
+//! every worker must draw the identical block permutation in round `t`
+//! (paper §3.3 — "synchronized random seed").  We use SplitMix64 for seeding
+//! and xoshiro256++ for the stream; both are tiny, fast and well studied.
+
+/// SplitMix64 — used to expand a (seed, stream) pair into xoshiro state.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// xoshiro256++ PRNG.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Seed from a single u64 via SplitMix64.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        Self { s: [splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm)] }
+    }
+
+    /// Independent stream derived from (seed, stream id) — the GRBS schedule
+    /// uses `Rng::stream(global_seed, round)` so that selection depends only
+    /// on quantities all workers share.
+    pub fn stream(seed: u64, stream: u64) -> Self {
+        let mut sm = seed ^ stream.wrapping_mul(0xD2B74407B1CE6E93);
+        Self { s: [splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm)] }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[0]
+            .wrapping_add(self.s[3])
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform in [0, 1) with 53-bit precision.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n).  Uses Lemire's rejection-free-ish method.
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Standard normal via Box–Muller (cached second value dropped: simpler,
+    /// and gradient noise does not need the extra throughput).
+    pub fn normal(&mut self) -> f32 {
+        let u1 = (self.f64()).max(1e-300);
+        let u2 = self.f64();
+        ((-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()) as f32
+    }
+
+    /// Fill with standard normals.
+    pub fn fill_normal(&mut self, out: &mut [f32], std: f32) {
+        for v in out.iter_mut() {
+            *v = self.normal() * std;
+        }
+    }
+
+    /// Fisher–Yates partial shuffle: returns the first `k` entries of a
+    /// random permutation of 0..n (the GRBS block draw).
+    pub fn choose_k(&mut self, n: usize, k: usize) -> Vec<u32> {
+        debug_assert!(k <= n);
+        // For small k relative to n, do selection-sampling over a dense
+        // index vec only when n is small; use a partial shuffle otherwise.
+        let mut idx: Vec<u32> = (0..n as u32).collect();
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+
+    /// Sample from a categorical distribution given cumulative weights.
+    pub fn categorical(&mut self, cdf: &[f32]) -> usize {
+        let u = self.f32() * cdf[cdf.len() - 1];
+        match cdf.binary_search_by(|p| p.partial_cmp(&u).unwrap()) {
+            Ok(i) => i,
+            Err(i) => i.min(cdf.len() - 1),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn streams_differ() {
+        let mut a = Rng::stream(42, 0);
+        let mut b = Rng::stream(42, 1);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn uniform_range() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let x = r.f32();
+            assert!((0.0..1.0).contains(&x));
+            let n = r.below(13);
+            assert!(n < 13);
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(3);
+        let n = 200_000;
+        let (mut s, mut s2) = (0f64, 0f64);
+        for _ in 0..n {
+            let x = r.normal() as f64;
+            s += x;
+            s2 += x * x;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.01, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.02, "var={var}");
+    }
+
+    #[test]
+    fn choose_k_is_a_k_subset() {
+        let mut r = Rng::new(9);
+        let k = r.choose_k(100, 17);
+        assert_eq!(k.len(), 17);
+        let mut s = k.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 17);
+        assert!(s.iter().all(|&i| i < 100));
+    }
+
+    #[test]
+    fn choose_k_uniformity() {
+        // each of 10 blocks selected ~ k/n of the time
+        let mut counts = [0u32; 10];
+        for round in 0..5000 {
+            let mut r = Rng::stream(1, round);
+            for b in r.choose_k(10, 3) {
+                counts[b as usize] += 1;
+            }
+        }
+        for &c in &counts {
+            let p = c as f64 / 5000.0;
+            assert!((p - 0.3).abs() < 0.04, "p={p}");
+        }
+    }
+}

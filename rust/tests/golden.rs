@@ -1,0 +1,108 @@
+//! Cross-language golden test: the Rust CSER implementation must reproduce,
+//! step for step, the numpy M-CSER simulator (python/compile/golden.py).
+//!
+//! The golden uses an explicit block-mask schedule instead of a shared RNG,
+//! so the comparison pins the *algebra* (momentum, PSync, error reset) and
+//! not incidental generator details.
+
+use cser::compressor::{Compressor, Ctx, Selection};
+use cser::optimizer::{Cser, DistOptimizer};
+use cser::util::json::Json;
+
+/// Compressor whose selection comes from an explicit per-round mask table.
+struct Scheduled {
+    block: usize,
+    nb: usize,
+    /// masks[t][b] for 1-based round t.
+    masks: Vec<Vec<f32>>,
+}
+
+impl Compressor for Scheduled {
+    fn select(&self, ctx: Ctx, _v: &[f32]) -> Selection {
+        let m = &self.masks[ctx.round as usize];
+        let blocks: Vec<u32> =
+            (0..self.nb as u32).filter(|&b| m[b as usize] > 0.5).collect();
+        Selection::Blocks { block_size: self.block, blocks }
+    }
+    fn ratio(&self) -> f64 {
+        2.0
+    }
+    fn globally_synchronized(&self) -> bool {
+        true
+    }
+    fn name(&self) -> String {
+        "scheduled".into()
+    }
+}
+
+fn floats(j: &Json, key: &str) -> Vec<f32> {
+    j.get(key)
+        .and_then(|v| v.as_arr())
+        .unwrap_or_else(|| panic!("missing {key}"))
+        .iter()
+        .map(|x| x.as_f64().unwrap() as f32)
+        .collect()
+}
+
+#[test]
+fn rust_cser_matches_numpy_golden() {
+    let Ok(text) = std::fs::read_to_string("artifacts/golden_cser.json") else {
+        eprintln!("skipping: golden not built (make artifacts)");
+        return;
+    };
+    let j = Json::parse(&text).unwrap();
+    let d = j.get("d").unwrap().as_usize().unwrap();
+    let n = j.get("n").unwrap().as_usize().unwrap();
+    let h = j.get("h").unwrap().as_usize().unwrap() as u64;
+    let steps = j.get("steps").unwrap().as_usize().unwrap();
+    let block = j.get("block").unwrap().as_usize().unwrap();
+    let beta = j.get("beta").unwrap().as_f64().unwrap() as f32;
+    let eta = j.get("eta").unwrap().as_f64().unwrap() as f32;
+    let nb = d / block;
+    let init = floats(&j, "init");
+    let grads_flat = floats(&j, "grads");
+    let mask1_flat = floats(&j, "mask1");
+    let mask2_flat = floats(&j, "mask2");
+    let x_final = floats(&j, "x_final");
+    let x_mid = floats(&j, "x_mid");
+    let mid_step = j.get("mid_step").unwrap().as_usize().unwrap();
+
+    let to_masks = |flat: &[f32]| -> Vec<Vec<f32>> {
+        flat.chunks(nb).map(|c| c.to_vec()).collect()
+    };
+    let c1 = Scheduled { block, nb, masks: to_masks(&mask1_flat) };
+    let c2 = Scheduled { block, nb, masks: to_masks(&mask2_flat) };
+    let mut opt = Cser::new(&init, n, beta, Box::new(c1), Box::new(c2), h);
+
+    for t in 1..=steps {
+        let grads: Vec<Vec<f32>> = (0..n)
+            .map(|w| {
+                let off = ((t - 1) * n + w) * d;
+                grads_flat[off..off + d].to_vec()
+            })
+            .collect();
+        opt.step(&grads, eta);
+        if t == mid_step {
+            for w in 0..n {
+                for (jx, (a, b)) in
+                    opt.worker_model(w).iter().zip(&x_mid[w * d..(w + 1) * d]).enumerate()
+                {
+                    assert!(
+                        (a - b).abs() < 2e-5 * (1.0 + b.abs()),
+                        "mid step {t} worker {w} coord {jx}: rust={a} numpy={b}"
+                    );
+                }
+            }
+        }
+    }
+    for w in 0..n {
+        for (jx, (a, b)) in
+            opt.worker_model(w).iter().zip(&x_final[w * d..(w + 1) * d]).enumerate()
+        {
+            assert!(
+                (a - b).abs() < 5e-5 * (1.0 + b.abs()),
+                "final worker {w} coord {jx}: rust={a} numpy={b}"
+            );
+        }
+    }
+}

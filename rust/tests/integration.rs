@@ -1,0 +1,284 @@
+//! Cross-module integration tests: the full stack wired together.
+//!
+//! Heavier paper-shape checks live in the bench harnesses (they take
+//! minutes); these tests keep `cargo test` under a couple of minutes while
+//! still exercising every seam: data -> model -> optimizer -> trainer ->
+//! metrics, and artifacts -> PJRT -> optimizer.
+
+use cser::collective::psync;
+use cser::compressor::{Compressor, Ctx, Grbs};
+use cser::config::{table3, table3_for, OptSpec, Suite};
+use cser::coordinator::metrics::write_results;
+use cser::coordinator::{train_classifier, TrainCfg};
+use cser::data::ClassDataset;
+use cser::models::{GradModel, Mlp};
+use cser::util::json::Json;
+
+fn quick_cfg(suite: &Suite, lr: f64, seed: u64, epochs: usize) -> TrainCfg {
+    let mut cfg = TrainCfg::new(epochs, suite.batch_per_worker, lr, seed);
+    cfg.schedule = suite.schedule.clone();
+    cfg.paper_d = suite.paper_d;
+    cfg.cost = suite.cost_model();
+    cfg.threads = 4;
+    cfg
+}
+
+/// Paper Table 2 shape, miniature: at a moderate ratio CSER tracks SGD;
+/// at an extreme ratio CSER still trains while QSparse collapses.
+#[test]
+fn paper_shape_cser_beats_qsparse_at_high_compression() {
+    let suite = Suite::cifar();
+    let model = suite.model();
+    let (train, test) = suite.data(1);
+    let init = model.init(5);
+    let epochs = 10;
+
+    let acc_of = |spec: &OptSpec, lr: f64| -> f64 {
+        let mut opt = spec.build(&init, suite.workers, suite.beta, 9);
+        train_classifier(&model, &train, &test, opt.as_mut(), &quick_cfg(&suite, lr, 1, epochs))
+            .final_acc()
+    };
+
+    // lr per the suite grid: SGD tolerates 0.1; at R_C=1024 the tuned lr is
+    // smaller (the harness greedily tunes; here we fix the known-good one).
+    let sgd = acc_of(&OptSpec::Sgd, 0.1);
+    let cser_1024 = acc_of(&table3_for("CSER", 1024).unwrap(), 0.05);
+    let qsparse_1024 = acc_of(&table3_for("QSparse", 1024).unwrap(), 0.05);
+    assert!(sgd > 0.3, "baseline too weak: {sgd}");
+    assert!(
+        cser_1024 > qsparse_1024.max(0.05) || qsparse_1024.is_nan(),
+        "CSER@1024 ({cser_1024}) should beat QSparse@1024 ({qsparse_1024})"
+    );
+    assert!(cser_1024 > sgd * 0.5, "CSER@1024 collapsed: {cser_1024} vs sgd {sgd}");
+}
+
+/// Overall-R_C bit accounting across algorithm families on a real run.
+#[test]
+fn measured_compression_matches_advertised_rc() {
+    let suite = Suite::cifar();
+    let model = suite.model();
+    let (train, test) = suite.data(2);
+    let init = model.init(6);
+    let d = model.dim() as f64;
+
+    for rc in [16usize, 256] {
+        let spec = table3_for("CSER", rc).unwrap();
+        let mut opt = spec.build(&init, suite.workers, suite.beta, 3);
+        let mut cfg = quick_cfg(&suite, 0.05, 2, 2);
+        cfg.paper_d = model.dim(); // account at native scale for this check
+        let rec = train_classifier(&model, &train, &test, opt.as_mut(), &cfg);
+        let steps = 2.0 * (train.len() / (suite.batch_per_worker * suite.workers)) as f64;
+        let dense_ring = d * 32.0 * steps * 2.0 * (suite.workers as f64 - 1.0)
+            / suite.workers as f64;
+        let measured = rec.points.last().unwrap().cum_bits;
+        let measured_rc = dense_ring / measured;
+        assert!(
+            measured_rc > rc as f64 * 0.6 && measured_rc < rc as f64 * 1.7,
+            "advertised R_C={rc}, measured {measured_rc:.1}"
+        );
+    }
+}
+
+/// Lemma 1 through the *trainer* (not just the optimizer unit test):
+/// bifurcated models stay consistent while real gradients flow.
+#[test]
+fn lemma1_holds_during_real_training() {
+    let suite = Suite::cifar();
+    let model = suite.model();
+    let (train, _test) = suite.data(3);
+    let init = model.init(7);
+    let spec = table3_for("CSER", 64).unwrap();
+    let mut opt = spec.build(&init, 4, suite.beta, 11);
+
+    let mut shards = cser::data::Shard::split(train.len(), 4, 1);
+    let mut grads = vec![vec![0.0f32; model.dim()]; 4];
+    let mut batch = Vec::new();
+    for _ in 0..20 {
+        for w in 0..4 {
+            shards[w].sample_batch(8, &mut batch);
+            model.loss_grad(opt.worker_model(w), &train, &batch, &mut grads[w]);
+        }
+        opt.step(&grads, 0.05);
+        let e0 = opt.local_error(0).expect("cser tracks errors");
+        let x0 = opt.worker_model(0);
+        let base: Vec<f32> = x0.iter().zip(e0).map(|(x, e)| x - e).collect();
+        for i in 1..4 {
+            let xi = opt.worker_model(i);
+            let ei = opt.local_error(i).unwrap();
+            for (j, (x, e)) in xi.iter().zip(ei).enumerate() {
+                assert!(
+                    ((x - e) - base[j]).abs() < 1e-3,
+                    "Lemma 1 violated at worker {i} coord {j}"
+                );
+            }
+        }
+    }
+}
+
+/// results-file round trip: write JSON records, parse them back.
+#[test]
+fn results_files_roundtrip() {
+    let suite = Suite::cifar().smoke();
+    let model = suite.model();
+    let (train, test) = suite.data(4);
+    let init = model.init(8);
+    let mut opt = OptSpec::Sgd.build(&init, 2, 0.9, 1);
+    let rec = train_classifier(&model, &train, &test, opt.as_mut(), &quick_cfg(&suite, 0.1, 4, 3));
+    let dir = std::env::temp_dir().join("cser_test_results");
+    let path = write_results(dir.to_str().unwrap(), "roundtrip", &[rec.clone()]).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let j = Json::parse(&text).unwrap();
+    let arr = j.as_arr().unwrap();
+    assert_eq!(arr.len(), 1);
+    assert_eq!(
+        arr[0].get("test_acc").unwrap().as_arr().unwrap().len(),
+        rec.points.len()
+    );
+}
+
+/// Every Table 3 row must instantiate and survive a few steps on real
+/// gradients without NaNs (catches block-count/ratio rounding issues).
+#[test]
+fn all_table3_rows_instantiate_and_step() {
+    let (train, _) = ClassDataset::gaussian_mixture(10, 16, 256, 64, 1.0, 1.0, 0.0, 5);
+    let model = Mlp::new(16, 8, 10);
+    let init = model.init(9);
+    let mut grads = vec![vec![0.0f32; model.dim()]; 2];
+    let idxs: Vec<u32> = (0..16).collect();
+    for row in table3() {
+        let mut opt = row.spec.build(&init, 2, 0.9, 1);
+        for _ in 0..4 {
+            for w in 0..2 {
+                model.loss_grad(opt.worker_model(w), &train, &idxs, &mut grads[w]);
+            }
+            opt.step(&grads, 0.05);
+        }
+        let mut xbar = vec![0.0f32; model.dim()];
+        opt.mean_model(&mut xbar);
+        assert!(
+            xbar.iter().all(|v| v.is_finite()),
+            "{:?} produced non-finite params",
+            row.spec
+        );
+    }
+}
+
+/// PSync at scale (n=8, d=1M) preserves means exactly enough for training.
+#[test]
+fn psync_scale_mean_preservation() {
+    let d = 1 << 20;
+    let n = 8;
+    let mut rng = cser::util::rng::Rng::new(4);
+    let mut vs: Vec<Vec<f32>> = (0..n)
+        .map(|_| {
+            let mut v = vec![0.0f32; d];
+            rng.fill_normal(&mut v, 1.0);
+            v
+        })
+        .collect();
+    let mut before = vec![0.0f64; 16];
+    for (j, b) in before.iter_mut().enumerate() {
+        *b = vs.iter().map(|v| v[j * 1000] as f64).sum::<f64>() / n as f64;
+    }
+    let c = Grbs::new(256.0, d / 1024, 9);
+    let round = psync(&mut vs, None, &c, 17);
+    assert!(round.allreduce_compatible);
+    for (j, b) in before.iter().enumerate() {
+        let after = vs.iter().map(|v| v[j * 1000] as f64).sum::<f64>() / n as f64;
+        assert!((after - b).abs() < 1e-5, "{after} vs {b}");
+    }
+    // selected fraction ~ 1/256
+    let sel = c.select(Ctx { round: 17, worker: 0 }, &vs[0]);
+    let frac = sel.count(d) as f64 / d as f64;
+    assert!((frac - 1.0 / 256.0).abs() < 1.0 / 512.0, "frac={frac}");
+}
+
+/// Failure injection: corrupted artifacts must produce clean errors, not
+/// panics or silent garbage.
+#[test]
+fn corrupted_artifacts_fail_cleanly() {
+    use cser::runtime::Manifest;
+    let dir = std::env::temp_dir().join("cser_bad_artifacts");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // malformed JSON
+    std::fs::write(dir.join("manifest.json"), b"{ not json").unwrap();
+    let err = Manifest::load(&dir).unwrap_err().to_string();
+    assert!(err.contains("parse"), "unexpected error: {err}");
+
+    // valid manifest, truncated init.bin
+    std::fs::write(
+        dir.join("manifest.json"),
+        br#"{"models": {"t": {"params": 100, "batch": 1, "seq_len": 4,
+            "vocab": 8, "d_model": 4, "n_layers": 1, "n_heads": 1,
+            "use_pallas": false, "train_step": "ts.hlo.txt",
+            "eval_loss": "ev.hlo.txt", "init": "init.bin",
+            "param_table": []}}, "kernels": {}}"#,
+    )
+    .unwrap();
+    std::fs::write(dir.join("init.bin"), vec![0u8; 17]).unwrap(); // not 400 bytes
+    let m = Manifest::load(&dir).unwrap();
+    let info = m.model("t").unwrap();
+    let err = m.load_init(info).unwrap_err().to_string();
+    assert!(err.contains("size mismatch"), "unexpected error: {err}");
+
+    // missing manifest entirely
+    let err = Manifest::load(dir.join("nope")).unwrap_err().to_string();
+    assert!(err.contains("make artifacts"), "unexpected error: {err}");
+}
+
+/// M-CSER with identity compressors on a single worker must reproduce
+/// single-node Nesterov SGD (Sutskever form, paper §3.2) exactly.
+#[test]
+fn mcser_single_worker_identity_is_nesterov_sgd() {
+    use cser::compressor::Identity;
+    use cser::optimizer::{Cser, DistOptimizer};
+    let d = 5;
+    let (beta, eta) = (0.9f32, 0.1f32);
+    let init = vec![0.2f32; d];
+    let mut opt = Cser::new(&init, 1, beta, Box::new(Identity), Box::new(Identity), 2);
+    // hand-rolled reference
+    let mut x = init.clone();
+    let mut m = vec![0.0f32; d];
+    for t in 0..7 {
+        let g: Vec<f32> = (0..d).map(|j| ((t + j) as f32 * 0.3).sin()).collect();
+        opt.step(&[g.clone()], eta);
+        for j in 0..d {
+            m[j] = beta * m[j] + g[j];
+            x[j] -= eta * (beta * m[j] + g[j]);
+        }
+        for j in 0..d {
+            assert!(
+                (opt.worker_model(0)[j] - x[j]).abs() < 1e-5,
+                "t={t} j={j}: {} vs {}",
+                opt.worker_model(0)[j],
+                x[j]
+            );
+        }
+    }
+}
+
+/// With a single worker (n=1) CSER's compression error vanishes entirely
+/// (Remark 2: the error-reset bound comes from inter-worker variance) —
+/// CSER(n=1) must follow plain momentum SGD no matter the compressors.
+#[test]
+fn remark2_single_worker_cser_equals_sgd_regardless_of_compression() {
+    use cser::config::OptSpec;
+    use cser::optimizer::DistOptimizer;
+    let d = 64;
+    let init = vec![0.5f32; d];
+    let mut cser = OptSpec::Cser { rc1: 8.0, rc2: 64.0, h: 4 }.build(&init, 1, 0.9, 3);
+    let mut sgd = OptSpec::Sgd.build(&init, 1, 0.9, 3);
+    for t in 0..16 {
+        let g: Vec<f32> = (0..d).map(|j| ((t * d + j) as f32 * 0.01).cos()).collect();
+        cser.step(&[g.clone()], 0.05);
+        sgd.step(&[g], 0.05);
+    }
+    for j in 0..d {
+        assert!(
+            (cser.worker_model(0)[j] - sgd.worker_model(0)[j]).abs() < 1e-4,
+            "j={j}"
+        );
+    }
+}
