@@ -1,0 +1,109 @@
+//! Transport-backend benchmark: in-process reference vs the threaded wire
+//! layer (real serialized collectives), plus the serialization-accounting
+//! cross-check.
+//!
+//! What to look for:
+//! * the in-process path is the zero-copy upper bound; the threaded ring
+//!   pays thread spawn + encode/decode, which amortizes as d/R grows;
+//! * GRBS (ring) vs top-k (parameter server) shows the paper's systems
+//!   argument as wall-clock, not just accounted bits;
+//! * the final section asserts measured serialized traffic equals the
+//!   α-β cost model's formulas exactly — the wire layer moves precisely the
+//!   bits every figure has been charging.
+
+use cser::collective::ring_allreduce_cost;
+use cser::compressor::{payload_bits, Compressor, Ctx, Grbs, TopK};
+use cser::transport::{wire, Backend, Collective};
+use cser::util::bench::{black_box, Bench};
+use cser::util::rng::Rng;
+
+fn worker_vecs(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let mut v = vec![0.0f32; d];
+            rng.fill_normal(&mut v, 1.0);
+            v
+        })
+        .collect()
+}
+
+fn main() {
+    let d = 1 << 20;
+    let n = 8;
+    let base = worker_vecs(n, d, 2);
+    let mut b = Bench::new();
+    let mut round = 0u64;
+
+    for r in [16.0, 256.0] {
+        let c = Grbs::new(r, d / 1024, 5);
+        for backend in [Backend::InProcess, Backend::Threaded] {
+            let coll = backend.collective();
+            let mut vs = base.clone();
+            b.run(&format!("psync_grbs_R{r}_n8_d1M_{:?}", backend), || {
+                round += 1;
+                black_box(coll.psync(&mut vs, None, &c, round));
+            });
+        }
+    }
+
+    // Index-carrying compressor: the parameter-server path is the only
+    // option — this is the ring-vs-PS contrast the paper argues for GRBS.
+    let c = TopK::new(256.0);
+    for backend in [Backend::InProcess, Backend::Threaded] {
+        let coll = backend.collective();
+        let mut vs = base.clone();
+        b.run(&format!("psync_topk_R256_n8_d1M_{:?}", backend), || {
+            round += 1;
+            black_box(coll.psync(&mut vs, None, &c, round));
+        });
+    }
+
+    // ---- serialized bytes == accounted bits ----
+    // Ring (GRBS, chunk-aligned): measured per-worker traffic must equal the
+    // ring-allreduce formula exactly.
+    let c = Grbs::new(16.0, d / 1024, 5);
+    let mut vs = base.clone();
+    let info = Backend::Threaded.collective().psync(&mut vs, None, &c, 77);
+    let sel = info.selections[0].clone();
+    let m = sel.count(d) as u64;
+    assert_eq!(info.upload_bits_per_worker, payload_bits(&sel, d));
+    let wire_cost = info.wire.expect("threaded backend measures traffic");
+    let expect = ring_allreduce_cost(m * 32, n);
+    assert_eq!(
+        (wire_cost.up_bits, wire_cost.down_bits, wire_cost.steps),
+        (expect.up_bits, expect.down_bits, expect.steps),
+        "ring serialized traffic != cost-model formula"
+    );
+    println!(
+        "ring check: m={m} selected values, {} bits/worker serialized == formula ✓",
+        wire_cost.total_bits()
+    );
+
+    // Parameter server (top-k): the upload is exactly the accounted
+    // index+value payload; the download is the measured union aggregate.
+    let c = TopK::new(256.0);
+    let mut vs = base.clone();
+    let info = Backend::Threaded.collective().psync(&mut vs, None, &c, 78);
+    let ctx = Ctx { round: 78, worker: 0 };
+    let accounted = payload_bits(&c.select(ctx, &base[0]), d);
+    let wire_cost = info.wire.expect("threaded backend measures traffic");
+    assert_eq!(wire_cost.up_bits, accounted, "PS upload != accounted payload bits");
+    assert_eq!(info.upload_bits_per_worker, accounted);
+    println!(
+        "ps check: upload {} bits == payload_bits ✓; union download {} bits ({}x payload)",
+        wire_cost.up_bits,
+        wire_cost.down_bits,
+        wire_cost.down_bits as f64 / accounted as f64
+    );
+
+    // Codec throughput: encode+decode one GRBS message at R=16.
+    let c = Grbs::new(16.0, d / 1024, 5);
+    let ctx = Ctx { round: 9, worker: 0 };
+    let mut out = vec![0.0f32; d];
+    b.run("wire_encode_decode_grbs_R16_d1M", || {
+        let msg = wire::encode(&c, ctx, &base[0]);
+        wire::decode(&c, ctx, &msg, &mut out);
+        black_box(&out);
+    });
+}

@@ -17,7 +17,6 @@
 /// Dense mean over equal-length worker vectors (the in-process "collective").
 pub fn allreduce_mean(vs: &mut [Vec<f32>]) {
     let n = vs.len();
-    let d = vs[0].len();
     let inv = 1.0 / n as f32;
     let (first, rest) = vs.split_first_mut().unwrap();
     for x in first.iter_mut() {
@@ -32,7 +31,6 @@ pub fn allreduce_mean(vs: &mut [Vec<f32>]) {
     for w in rest.iter_mut() {
         w.copy_from_slice(&proto);
     }
-    let _ = d;
 }
 
 /// Wire traffic (bits through each worker's NIC, up + down) for one

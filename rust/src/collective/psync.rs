@@ -14,6 +14,7 @@
 //! and zero allocation (the unselected part of v_i already equals v'_i there
 //! because C(v_j) is zero outside the common support).
 
+use super::allreduce::WireCost;
 use crate::compressor::{payload_bits, Compressor, Ctx, Selection};
 
 /// What one PSync round did — enough for exact bit accounting and for
@@ -22,10 +23,15 @@ use crate::compressor::{payload_bits, Compressor, Ctx, Selection};
 pub struct PsyncRound {
     /// Selection per worker (length 1 if the compressor is global).
     pub selections: Vec<Selection>,
-    /// Payload+index bits each worker uploads.
+    /// Payload+index bits each worker uploads (ceiling of the per-worker
+    /// mean when message sizes differ across workers).
     pub upload_bits_per_worker: u64,
     /// True if the messages could be AllReduced (global support).
     pub allreduce_compatible: bool,
+    /// Bits a real transport backend actually moved through one worker's NIC
+    /// (up + down), measured from serialized messages.  `None` for the
+    /// in-process backend, which only accounts.
+    pub wire: Option<WireCost>,
 }
 
 impl PsyncRound {
@@ -74,50 +80,107 @@ pub fn psync(
     let d = vs[0].len();
     debug_assert!(vs.iter().all(|v| v.len() == d));
 
-    if c.globally_synchronized() {
+    if c.globally_synchronized() && !c.is_dense() {
         let sel = c.select(Ctx { round, worker: 0 }, &vs[0]);
-        // residuals: r_i = v_i off support, 0 on support
-        if let Some(res) = resid_out.as_deref_mut() {
-            for (i, v) in vs.iter().enumerate() {
-                res[i].copy_from_slice(v);
-                sel.for_each_range(d, |s, e| res[i][s..e].iter_mut().for_each(|x| *x = 0.0));
-            }
-        }
-        // average selected ranges in place
-        let inv = 1.0 / n as f32;
-        sel.for_each_range(d, |s, e| {
-            // compute the mean into worker 0's slice, then broadcast
-            let (first, rest) = vs.split_first_mut().unwrap();
-            let acc = &mut first[s..e];
-            acc.iter_mut().for_each(|x| *x *= inv);
-            for w in rest.iter() {
-                for (a, b) in acc.iter_mut().zip(&w[s..e]) {
-                    *a += inv * *b;
-                }
-            }
-            let proto = first[s..e].to_vec(); // small: one range
-            for w in rest.iter_mut() {
-                w[s..e].copy_from_slice(&proto);
-            }
-        });
+        average_shared_ranges(vs, &mut resid_out, &sel, d);
         let bits = payload_bits(&sel, d);
-        return PsyncRound { selections: vec![sel], upload_bits_per_worker: bits, allreduce_compatible: true };
+        return PsyncRound {
+            selections: vec![sel],
+            upload_bits_per_worker: bits,
+            allreduce_compatible: true,
+            wire: None,
+        };
     }
 
-    // Generic path: per-worker supports or dense quantizers.  Two passes
-    // with one shared `kept` buffer (no n×d scratch): first turn each v_i
-    // into its residual r_i = v_i − C(v_i) while accumulating
-    // vbar = mean C(v_i); then v'_i = vbar + r_i.
-    let mut selections = Vec::with_capacity(n);
+    // Generic path: per-worker supports or dense quantizers.
     let mut vbar = vec![0.0f32; d];
     let mut kept = vec![0.0f32; d];
+    let (selections, bits_total) =
+        residualize_accumulate(vs, &mut resid_out, c, round, &mut vbar, &mut kept);
+    for v in vs.iter_mut() {
+        crate::util::math::axpy(1.0, &vbar, v); // v'_i = vbar + r_i
+    }
+    PsyncRound {
+        selections,
+        // Ceiling division: flooring would under-report whenever the total is
+        // not a worker multiple (e.g. QSGD's 32-bit norm headers).
+        upload_bits_per_worker: bits_total.div_ceil(n as u64),
+        allreduce_compatible: false,
+        wire: None,
+    }
+}
+
+/// Shared fast-path core of [`psync`] and [`exchange_mean`] for
+/// globally-synchronized sparsifiers: capture residuals (`v_i` off the
+/// shared support, zero on it) and average the selected ranges in place —
+/// O(n·d/R) arithmetic, no dense scratch.  The reduction order here (scale
+/// worker 0, then accumulate `inv·v_j` in worker order) is what the
+/// threaded-backend equivalence tolerance is measured against; keep the two
+/// call sites on this single copy.
+fn average_shared_ranges(
+    vs: &mut [Vec<f32>],
+    resid_out: &mut Option<&mut [Vec<f32>]>,
+    sel: &Selection,
+    d: usize,
+) {
+    if let Some(res) = resid_out.as_deref_mut() {
+        for (r, v) in res.iter_mut().zip(vs.iter()) {
+            r.copy_from_slice(v);
+            sel.for_each_range(d, |s, e| crate::util::math::fill(&mut r[s..e], 0.0));
+        }
+    }
+    let inv = 1.0 / vs.len() as f32;
+    sel.for_each_range(d, |s, e| {
+        // compute the mean into worker 0's slice, then broadcast
+        let (first, rest) = vs.split_first_mut().unwrap();
+        let acc = &mut first[s..e];
+        acc.iter_mut().for_each(|x| *x *= inv);
+        for w in rest.iter() {
+            for (a, b) in acc.iter_mut().zip(&w[s..e]) {
+                *a += inv * *b;
+            }
+        }
+        let proto = first[s..e].to_vec(); // small: one range
+        for w in rest.iter_mut() {
+            w[s..e].copy_from_slice(&proto);
+        }
+    });
+}
+
+/// Shared generic-path core of [`psync`] and [`exchange_mean`]: turns each
+/// `v_i` into its residual `v_i − C(v_i)` (copied to `resid_out` if given)
+/// while accumulating `vbar = (1/n) Σ C(v_i)` into the caller's scratch.
+/// Returns the per-worker selections and the total payload bits.
+///
+/// `vbar`/`kept` are caller-provided so the two entry points share one
+/// allocation policy (one d-sized pair per round; cheap next to the O(n·d)
+/// arithmetic this path does anyway).
+fn residualize_accumulate(
+    vs: &mut [Vec<f32>],
+    resid_out: &mut Option<&mut [Vec<f32>]>,
+    c: &dyn Compressor,
+    round: u64,
+    vbar: &mut [f32],
+    kept: &mut [f32],
+) -> (Vec<Selection>, u64) {
+    let n = vs.len();
+    let d = vbar.len();
     let inv = 1.0 / n as f32;
+    let mut selections = Vec::with_capacity(n);
     let mut bits_total = 0u64;
     for (w, v) in vs.iter_mut().enumerate() {
         let ctx = Ctx { round, worker: w as u32 };
-        bits_total += c.compress_into(ctx, v, &mut kept);
-        selections.push(c.select(ctx, v));
-        for ((vj, kj), bj) in v.iter_mut().zip(&kept).zip(vbar.iter_mut()) {
+        let sel = c.select(ctx, v);
+        // For sparsifiers C(v) is v on the selection (one `select`, no second
+        // pass); dense quantizers materialize through compress_into.
+        bits_total += if c.is_dense() {
+            c.compress_into(ctx, v, kept)
+        } else {
+            sel.apply(v, kept);
+            payload_bits(&sel, d)
+        };
+        selections.push(sel);
+        for ((vj, kj), bj) in v.iter_mut().zip(kept.iter()).zip(vbar.iter_mut()) {
             *bj += inv * *kj;
             *vj -= *kj; // v now holds the residual
         }
@@ -125,13 +188,63 @@ pub fn psync(
             res[w].copy_from_slice(v);
         }
     }
-    for v in vs.iter_mut() {
-        crate::util::math::axpy(1.0, &vbar, v);
+    (selections, bits_total)
+}
+
+/// The communication primitive *under* PSync: on return every `qs[i]` holds
+/// the same mean-of-compressed vector `(1/n) Σ_j C(q_j)`, and (if requested)
+/// `resid_out[i] = q_i − C(q_i)`.
+///
+/// PSync is `exchange_mean` plus adding each worker's residual back; EF-SGD
+/// and QSparse-local-SGD consume the two parts separately, which is why the
+/// [`crate::transport::Collective`] trait exposes both.
+pub fn exchange_mean(
+    qs: &mut [Vec<f32>],
+    mut resid_out: Option<&mut [Vec<f32>]>,
+    c: &dyn Compressor,
+    round: u64,
+) -> PsyncRound {
+    let n = qs.len();
+    assert!(n > 0);
+    let d = qs[0].len();
+    debug_assert!(qs.iter().all(|q| q.len() == d));
+
+    // Fast path (globally-synchronized sparsifiers, mirroring psync's): the
+    // shared support is averaged range-wise — O(n·d/R) arithmetic, no dense
+    // `kept`/`vbar` scratch — and the complement (where the mean is exactly
+    // zero) is cleared directly.
+    if c.globally_synchronized() && !c.is_dense() {
+        let sel = c.select(Ctx { round, worker: 0 }, &qs[0]);
+        average_shared_ranges(qs, &mut resid_out, &sel, d);
+        let bits = payload_bits(&sel, d);
+        let info = PsyncRound {
+            selections: vec![sel],
+            upload_bits_per_worker: bits,
+            allreduce_compatible: true,
+            wire: None,
+        };
+        info.for_each_unselected(0, d, |s, e| {
+            for q in qs.iter_mut() {
+                crate::util::math::fill(&mut q[s..e], 0.0);
+            }
+        });
+        return info;
+    }
+
+    let mut vbar = vec![0.0f32; d];
+    let mut kept = vec![0.0f32; d];
+    let (selections, bits_total) =
+        residualize_accumulate(qs, &mut resid_out, c, round, &mut vbar, &mut kept);
+    for q in qs.iter_mut() {
+        q.copy_from_slice(&vbar);
     }
     PsyncRound {
         selections,
-        upload_bits_per_worker: bits_total / n as u64,
+        upload_bits_per_worker: bits_total.div_ceil(n as u64),
+        // Only non-global / dense compressors reach this path (the fast path
+        // above handled the AllReduce-compatible ones).
         allreduce_compatible: false,
+        wire: None,
     }
 }
 
@@ -252,10 +365,86 @@ mod tests {
             selections: vec![Selection::Blocks { block_size: 4, blocks: vec![1, 3] }],
             upload_bits_per_worker: 0,
             allreduce_compatible: true,
+            wire: None,
         };
         let mut got = vec![];
         info.for_each_unselected(0, 18, |s, e| got.push((s, e)));
         assert_eq!(got, vec![(0, 4), (8, 12), (16, 18)]);
+    }
+
+    /// Compressor with worker-dependent message sizes (worker w selects w+1
+    /// indices) — exercises the per-worker-mean rounding.
+    struct Lopsided;
+    impl Compressor for Lopsided {
+        fn select(&self, ctx: Ctx, v: &[f32]) -> Selection {
+            let k = (ctx.worker as usize + 1).min(v.len());
+            Selection::Indices((0..k as u32).collect())
+        }
+        fn ratio(&self) -> f64 {
+            4.0
+        }
+        fn globally_synchronized(&self) -> bool {
+            false
+        }
+        fn name(&self) -> String {
+            "lopsided".into()
+        }
+    }
+
+    #[test]
+    fn upload_bits_use_ceiling_division() {
+        // d = 17 → 5-bit indices → 37 bits per pair.  Worker 0 uploads one
+        // pair (37), worker 1 two (74): total 111, whose per-worker mean must
+        // round up to 56, not truncate to 55.
+        let d = 17;
+        let mut vs = vec![vec![1.0f32; d]; 2];
+        let info = psync(&mut vs, None, &Lopsided, 1);
+        assert_eq!(info.upload_bits_per_worker, 56, "ceil(111/2)");
+    }
+
+    #[test]
+    fn exchange_mean_matches_psync_decomposition() {
+        // psync == exchange_mean + residual add-back, for global and
+        // per-worker compressors alike.
+        forall(30, 0x00EC, |g: &mut Gen| {
+            let n = g.usize_in(2, 6);
+            let d = g.usize_in(8, 100);
+            let vs = g.worker_vecs(n, d);
+            for c in [
+                Box::new(Grbs::new(2.0, (d / 4).max(2), 5)) as Box<dyn Compressor>,
+                Box::new(RandK::new(2.0)),
+                Box::new(TopK::new(4.0)),
+                Box::new(Identity),
+                Box::new(Zero),
+            ] {
+                let mut via_psync = vs.clone();
+                psync(&mut via_psync, None, c.as_ref(), g.case);
+
+                let mut means = vs.clone();
+                let mut resid = vec![vec![0.0f32; d]; n];
+                let info = exchange_mean(&mut means, Some(&mut resid), c.as_ref(), g.case);
+                for i in 0..n {
+                    // all workers received the identical mean
+                    slices_close(&means[i], &means[0], 0.0)
+                        .map_err(|e| format!("{} mean differs: {e}", c.name()))?;
+                    let sum: Vec<f32> =
+                        means[i].iter().zip(&resid[i]).map(|(m, r)| m + r).collect();
+                    slices_close(&sum, &via_psync[i], 1e-5)
+                        .map_err(|e| format!("{} w{i}: {e}", c.name()))?;
+                    // residual definition: q - C(q)
+                    let sel = info.selection_for(i).clone();
+                    let mut kept = vec![0.0f32; d];
+                    sel.apply(&vs[i], &mut kept);
+                    if !c.is_dense() {
+                        let expect: Vec<f32> =
+                            vs[i].iter().zip(&kept).map(|(a, b)| a - b).collect();
+                        slices_close(&resid[i], &expect, 0.0)
+                            .map_err(|e| format!("{} resid w{i}: {e}", c.name()))?;
+                    }
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -106,6 +106,29 @@ impl Selection {
     }
 }
 
+/// How a compressed message is laid out on the wire (see `transport::wire`
+/// for the codecs).  The scheme determines both the exact bit layout and
+/// what the receiver needs in order to decode: `SharedSupport` messages are
+/// decodable from `(ctx, d)` alone (the selection is re-drawn from the seed
+/// schedule), everything else is self-describing given the transport frame
+/// length.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireScheme {
+    /// Selection re-derivable on the receiver from `(ctx, d)` alone — GRBS's
+    /// shared-seed draw and per-worker seeded block draws.  Only the selected
+    /// values travel; zero index metadata (the paper's §3.3 argument).
+    SharedSupport,
+    /// Explicit `(index, value)` pairs — value-dependent, per-worker supports
+    /// (top-k and friends) that must ship their indices.
+    IndexValue,
+    /// QSGD: 32-bit ℓ2 norm followed by the signed quantization levels packed
+    /// in radix `2·levels + 1` (a big-integer encoding, so the value block is
+    /// exactly `ceil(d · log2(2·levels+1))` bits — the accounted size).
+    QsgdLevels { levels: u32 },
+    /// Scaled sign-SGD: 32-bit scale + one sign bit per coordinate.
+    SignBitmap,
+}
+
 /// Payload + metadata bits one worker uploads for its compressed message.
 pub fn payload_bits(sel: &Selection, d: usize) -> u64 {
     let elems = sel.count(d) as u64;
@@ -157,6 +180,21 @@ pub trait Compressor: Send + Sync {
     /// True if `select` ignores `worker` and `v` (same support on every
     /// worker) — the precondition for AllReduce-style aggregation.
     fn globally_synchronized(&self) -> bool;
+
+    /// Wire layout for this compressor's messages (`transport::wire`).
+    ///
+    /// Default: globally-synchronized selections need no metadata
+    /// (`SharedSupport`); everything else ships explicit indices.  Seeded
+    /// per-worker draws whose support depends only on `(ctx, d)` (e.g.
+    /// `RandBlock`) override to `SharedSupport`; dense quantizers override to
+    /// their value-coded layouts.
+    fn wire_scheme(&self) -> WireScheme {
+        if self.globally_synchronized() {
+            WireScheme::SharedSupport
+        } else {
+            WireScheme::IndexValue
+        }
+    }
 
     fn name(&self) -> String;
 }

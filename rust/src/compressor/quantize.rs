@@ -19,7 +19,7 @@
 //! AllReduce-compatible in the value domain (sums of quantized values are
 //! not quantized), matching `globally_synchronized() == false`.
 
-use super::{Compressor, Ctx, Selection};
+use super::{Compressor, Ctx, Selection, WireScheme};
 use crate::util::rng::Rng;
 
 /// QSGD stochastic uniform quantizer with `s` levels.
@@ -81,6 +81,10 @@ impl Compressor for Qsgd {
         false
     }
 
+    fn wire_scheme(&self) -> WireScheme {
+        WireScheme::QsgdLevels { levels: self.levels }
+    }
+
     fn name(&self) -> String {
         format!("qsgd(s={})", self.levels)
     }
@@ -121,6 +125,10 @@ impl Compressor for SignSgd {
 
     fn globally_synchronized(&self) -> bool {
         false
+    }
+
+    fn wire_scheme(&self) -> WireScheme {
+        WireScheme::SignBitmap
     }
 
     fn name(&self) -> String {

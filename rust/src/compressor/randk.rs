@@ -5,7 +5,7 @@
 //! worker id), so messages carry index metadata and cannot be AllReduced
 //! without decompression.  Used in ablations (DESIGN.md ABL).
 
-use super::{Compressor, Ctx, Selection};
+use super::{Compressor, Ctx, Selection, WireScheme};
 use crate::util::rng::Rng;
 
 #[derive(Clone, Debug)]
@@ -85,6 +85,14 @@ impl Compressor for RandBlock {
 
     fn globally_synchronized(&self) -> bool {
         false
+    }
+
+    fn wire_scheme(&self) -> WireScheme {
+        // The block draw depends only on (seed, worker, round) — any receiver
+        // that knows the sender's rank can re-derive the support, so no index
+        // metadata travels (consistent with `payload_bits` counting zero
+        // index bits for `Selection::Blocks`).
+        WireScheme::SharedSupport
     }
 
     fn name(&self) -> String {

@@ -16,6 +16,7 @@ use crate::data::{ClassDataset, Shard};
 use crate::models::GradModel;
 use crate::network::CostModel;
 use crate::optimizer::DistOptimizer;
+use crate::transport::Backend;
 use crate::util::pool::scope_map;
 
 #[derive(Clone, Debug)]
@@ -35,6 +36,13 @@ pub struct TrainCfg {
     /// Stop early and mark diverged when train loss exceeds
     /// `divergence_factor * initial_loss` or becomes non-finite.
     pub divergence_factor: f64,
+    /// Communication backend for the optimizer's collectives: the default
+    /// in-process path, or `Backend::Threaded` for the parallel-trainer mode
+    /// (one OS thread per worker moving serialized messages).  This is the
+    /// sole source of truth: `train_classifier` installs it on the
+    /// optimizer, replacing any collective set earlier via
+    /// `DistOptimizer::set_collective`.
+    pub backend: Backend,
 }
 
 impl TrainCfg {
@@ -50,6 +58,7 @@ impl TrainCfg {
             cost: CostModel::default(),
             threads: crate::util::pool::default_threads(),
             divergence_factor: 5.0,
+            backend: Backend::default(),
         }
     }
 }
@@ -65,6 +74,7 @@ pub fn train_classifier(
     let n = opt.n();
     let d = opt.dim();
     assert_eq!(d, model.dim());
+    opt.set_collective(cfg.backend.collective());
     let mut shards = Shard::split(train.len(), n, cfg.seed);
     let iters_per_epoch = (train.len() / (cfg.batch_per_worker * n)).max(1);
 
@@ -221,6 +231,28 @@ mod tests {
             .cum_bits;
         let ratio = bits_sgd / bits_cser;
         assert!(ratio > 16.0, "only {ratio:.1}x fewer bits");
+    }
+
+    #[test]
+    fn threaded_backend_trains_like_in_process() {
+        // Parallel-trainer mode: the same CSER run over real threaded
+        // collectives must land within a small accuracy band of the
+        // in-process reference (GRBS rides the ring, so trajectories agree
+        // only up to f32 reduction order — not bit-exactly).
+        let (tr, te) = ClassDataset::gaussian_mixture(10, 16, 1024, 256, 1.2, 0.8, 0.0, 7);
+        let m = Mlp::new(16, 32, 10);
+        let init = m.init(4);
+        let spec = OptSpec::Cser { rc1: 2.0, rc2: 4.0, h: 2 };
+        let mut cfg = quick_cfg(4, 0.1, 7);
+        let mut opt = spec.build(&init, 4, 0.9, 7);
+        let acc_inproc = train_classifier(&m, &tr, &te, opt.as_mut(), &cfg).final_acc();
+        cfg.backend = crate::transport::Backend::Threaded;
+        let mut opt = spec.build(&init, 4, 0.9, 7);
+        let acc_threaded = train_classifier(&m, &tr, &te, opt.as_mut(), &cfg).final_acc();
+        assert!(
+            (acc_inproc - acc_threaded).abs() < 0.05,
+            "in-process {acc_inproc} vs threaded {acc_threaded}"
+        );
     }
 
     #[test]

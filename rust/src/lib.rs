@@ -6,12 +6,15 @@
 //!
 //! * **Layer 3 (this crate)** — the distributed-training coordinator: the
 //!   paper's algorithms ([`optimizer`]), the GRBS compressor family
-//!   ([`compressor`]), partial synchronization ([`collective`]), the network
-//!   cost/accounting substrate ([`network`]), data sharding ([`data`]), a
-//!   fast pure-Rust model zoo for the paper's sweeps ([`models`]), the PJRT
-//!   runtime that executes AOT-compiled JAX/Pallas artifacts ([`runtime`]),
-//!   the training loop ([`coordinator`]) and one harness per paper
-//!   table/figure ([`harness`]).
+//!   ([`compressor`]), partial synchronization ([`collective`]), the wire
+//!   layer ([`transport`]: bit-packed codecs for every compressor payload
+//!   plus swappable collective backends — the in-process reference and a
+//!   multi-threaded ring-allreduce/parameter-server backend moving real
+//!   serialized messages), the network cost/accounting substrate
+//!   ([`network`]), data sharding ([`data`]), a fast pure-Rust model zoo for
+//!   the paper's sweeps ([`models`]), the PJRT runtime that executes
+//!   AOT-compiled JAX/Pallas artifacts ([`runtime`]), the training loop
+//!   ([`coordinator`]) and one harness per paper table/figure ([`harness`]).
 //! * **Layer 2** — `python/compile/model.py`: transformer LM fwd/bwd over a
 //!   flat parameter vector, AOT-lowered to HLO text (build-time only).
 //! * **Layer 1** — `python/compile/kernels/`: Pallas kernels (GRBS block
@@ -30,4 +33,5 @@ pub mod models;
 pub mod network;
 pub mod optimizer;
 pub mod runtime;
+pub mod transport;
 pub mod util;

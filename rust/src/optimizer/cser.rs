@@ -23,9 +23,10 @@
 //!   * C1 = C2 = identity               — fully-synchronous SGD
 
 use super::{DistOptimizer, Momentum, RoundStats};
-use crate::collective::psync;
 use crate::compressor::{Compressor, Zero};
+use crate::transport::Collective;
 use crate::util::math;
+use std::sync::Arc;
 
 pub struct Cser {
     n: usize,
@@ -35,6 +36,7 @@ pub struct Cser {
     momentum: Momentum,
     c1: Box<dyn Compressor>,
     c2: Box<dyn Compressor>,
+    coll: Arc<dyn Collective>,
     t: u64,
     // scratch (steady-state: zero allocations per step)
     p: Vec<Vec<f32>>,
@@ -67,6 +69,7 @@ impl Cser {
             momentum: Momentum::new(beta, n, d),
             c1,
             c2,
+            coll: crate::transport::default_collective(),
             t: 0,
             p: vec![vec![0.0; d]; n],
             r: if needs_r { vec![vec![0.0; d]; n] } else { vec![] },
@@ -104,9 +107,9 @@ impl DistOptimizer for Cser {
         // ranges directly — no dense residual buffers, no extra memcpy.
         let global = self.c2.globally_synchronized();
         let round = if global {
-            psync(&mut self.p, None, self.c2.as_ref(), self.t)
+            self.coll.psync(&mut self.p, None, self.c2.as_ref(), self.t)
         } else {
-            psync(&mut self.p, Some(&mut self.r), self.c2.as_ref(), self.t)
+            self.coll.psync(&mut self.p, Some(&mut self.r), self.c2.as_ref(), self.t)
         };
         stats.grad_bits = round.upload_bits_per_worker;
         stats.grad_allreduce = round.allreduce_compatible;
@@ -144,7 +147,7 @@ impl DistOptimizer for Cser {
                     });
                 }
                 // psync draws the identical selection (same round, global).
-                let round = psync(&mut self.e, None, self.c1.as_ref(), self.t);
+                let round = self.coll.psync(&mut self.e, None, self.c1.as_ref(), self.t);
                 debug_assert_eq!(round.selections[0], sel);
                 stats.model_bits = round.upload_bits_per_worker;
                 stats.model_allreduce = true;
@@ -162,7 +165,8 @@ impl DistOptimizer for Cser {
                     self.e_half[i].copy_from_slice(&self.e[i]);
                 }
                 // after psync: e[i] holds e'_i, r[i] holds the new residual
-                let round = psync(&mut self.e, Some(&mut self.r), self.c1.as_ref(), self.t);
+                let round =
+                    self.coll.psync(&mut self.e, Some(&mut self.r), self.c1.as_ref(), self.t);
                 stats.model_bits = round.upload_bits_per_worker;
                 stats.model_allreduce = round.allreduce_compatible;
                 for i in 0..self.n {
@@ -174,6 +178,10 @@ impl DistOptimizer for Cser {
             }
         }
         stats
+    }
+
+    fn set_collective(&mut self, c: Arc<dyn Collective>) {
+        self.coll = c;
     }
 
     fn n(&self) -> usize {

@@ -18,9 +18,10 @@
 //! `globally_synchronized()`.
 
 use super::{DistOptimizer, Momentum, RoundStats};
-use crate::collective::psync;
 use crate::compressor::Compressor;
+use crate::transport::Collective;
 use crate::util::math;
+use std::sync::Arc;
 
 pub struct CserImpl2 {
     n: usize,
@@ -29,6 +30,7 @@ pub struct CserImpl2 {
     momentum: Momentum,
     c1: Box<dyn Compressor>,
     c2: Box<dyn Compressor>,
+    coll: Arc<dyn Collective>,
     t: u64,
     p: Vec<Vec<f32>>,
 }
@@ -55,6 +57,7 @@ impl CserImpl2 {
             momentum: Momentum::new(beta, n, d),
             c1,
             c2,
+            coll: crate::transport::default_collective(),
             t: 0,
             p: vec![vec![0.0; d]; n],
         }
@@ -69,19 +72,23 @@ impl DistOptimizer for CserImpl2 {
         for i in 0..self.n {
             self.momentum.descent(i, &grads[i], eta, &mut self.p[i]);
         }
-        let round = psync(&mut self.p, None, self.c2.as_ref(), self.t);
+        let round = self.coll.psync(&mut self.p, None, self.c2.as_ref(), self.t);
         stats.grad_bits = round.upload_bits_per_worker;
         stats.grad_allreduce = round.allreduce_compatible;
         for i in 0..self.n {
             math::axpy(-1.0, &self.p[i], &mut self.x[i]);
         }
         if self.t % self.h == 0 {
-            let round = psync(&mut self.x, None, self.c1.as_ref(), self.t);
+            let round = self.coll.psync(&mut self.x, None, self.c1.as_ref(), self.t);
             stats.model_bits = round.upload_bits_per_worker;
             stats.model_allreduce = round.allreduce_compatible;
             stats.synced = true;
         }
         stats
+    }
+
+    fn set_collective(&mut self, c: Arc<dyn Collective>) {
+        self.coll = c;
     }
 
     fn n(&self) -> usize {

@@ -5,10 +5,18 @@
 //! e_i ← q_i − q'_i;  x ← x + mean_j q'_j applied as descent (all local
 //! models stay identical — the residual is fed back with one step of delay,
 //! never applied to the model directly; contrast with CSEA's error reset).
+//!
+//! The `q'` aggregation runs over the [`Collective`] abstraction
+//! (`exchange_mean`): each worker's message q_i is materialized, the backend
+//! moves the compressed parts (in-process reference or real threaded
+//! collectives), and the residuals land back in `e` — the same wiring a
+//! physical EF-SGD deployment has.
 
 use super::{DistOptimizer, Momentum, RoundStats};
-use crate::compressor::{payload_bits, Compressor, Ctx};
+use crate::compressor::Compressor;
+use crate::transport::Collective;
 use crate::util::math;
+use std::sync::Arc;
 
 pub struct EfSgd {
     n: usize,
@@ -16,11 +24,10 @@ pub struct EfSgd {
     e: Vec<Vec<f32>>,
     momentum: Momentum,
     c1: Box<dyn Compressor>,
+    coll: Arc<dyn Collective>,
     t: u64,
-    // scratch
-    q: Vec<f32>,
-    qbar: Vec<f32>,
-    kept: Vec<f32>,
+    /// Per-worker message buffers (q_i), reused every step.
+    q: Vec<Vec<f32>>,
 }
 
 impl EfSgd {
@@ -32,10 +39,9 @@ impl EfSgd {
             e: vec![vec![0.0; d]; n],
             momentum: Momentum::new(beta, n, d),
             c1,
+            coll: crate::transport::default_collective(),
             t: 0,
-            q: vec![0.0; d],
-            qbar: vec![0.0; d],
-            kept: vec![0.0; d],
+            q: vec![vec![0.0; d]; n],
         }
     }
 }
@@ -43,46 +49,27 @@ impl EfSgd {
 impl DistOptimizer for EfSgd {
     fn step(&mut self, grads: &[Vec<f32>], eta: f32) -> RoundStats {
         debug_assert_eq!(grads.len(), self.n);
-        let d = self.x.len();
         self.t += 1;
-        math::fill(&mut self.qbar, 0.0);
-        let inv = 1.0 / self.n as f32;
-        let mut bits = 0u64;
+        // q_i = e_i + p_i
         for i in 0..self.n {
-            // q_i = e_i + p_i
-            self.momentum.descent(i, &grads[i], eta, &mut self.q);
-            for (qj, ej) in self.q.iter_mut().zip(&self.e[i]) {
-                *qj += *ej;
-            }
-            let ctx = Ctx { round: self.t, worker: i as u32 };
-            if self.c1.is_dense() {
-                // value quantizers (QSGD/sign-SGD): C(q) is dense
-                bits += self.c1.compress_into(ctx, &self.q, &mut self.kept);
-                math::axpy(inv, &self.kept, &mut self.qbar);
-                for ((ej, qj), kj) in self.e[i].iter_mut().zip(&self.q).zip(&self.kept) {
-                    *ej = qj - kj;
-                }
-            } else {
-                let sel = self.c1.select(ctx, &self.q);
-                bits += payload_bits(&sel, d);
-                // e_i = q_i - C1(q_i); qbar += C1(q_i)/n — range-wise (§Perf:
-                // no per-step d-sized mask allocation)
-                self.e[i].copy_from_slice(&self.q);
-                let (q, qbar, e) = (&self.q, &mut self.qbar, &mut self.e[i]);
-                sel.for_each_range(d, |s, t| {
-                    math::axpy(inv, &q[s..t], &mut qbar[s..t]);
-                    math::fill(&mut e[s..t], 0.0);
-                });
-            }
+            self.momentum.descent(i, &grads[i], eta, &mut self.q[i]);
+            math::axpy(1.0, &self.e[i], &mut self.q[i]);
         }
-        math::axpy(-1.0, &self.qbar, &mut self.x);
+        // q_i ← mean_j C1(q_j);  e_i ← q_i − C1(q_i)
+        let round =
+            self.coll.exchange_mean(&mut self.q, Some(&mut self.e), self.c1.as_ref(), self.t);
+        math::axpy(-1.0, &self.q[0], &mut self.x);
         RoundStats {
-            grad_bits: bits / self.n as u64,
+            grad_bits: round.upload_bits_per_worker,
             model_bits: 0,
-            grad_allreduce: self.c1.globally_synchronized(),
+            grad_allreduce: round.allreduce_compatible,
             model_allreduce: true,
             synced: true,
         }
+    }
+
+    fn set_collective(&mut self, c: Arc<dyn Collective>) {
+        self.coll = c;
     }
 
     fn n(&self) -> usize {

@@ -59,6 +59,12 @@ pub trait DistOptimizer: Send + Sync {
     /// evaluated at `worker_model(i)`; `eta` is the current learning rate.
     fn step(&mut self, grads: &[Vec<f32>], eta: f32) -> RoundStats;
 
+    /// Swap the communication backend (`transport::Collective`) this
+    /// optimizer synchronizes over.  Default: no-op — algorithms that never
+    /// communicate through PSync/exchange (plain SGD's dense mean is left on
+    /// the in-process path) ignore it.
+    fn set_collective(&mut self, _c: std::sync::Arc<dyn crate::transport::Collective>) {}
+
     fn n(&self) -> usize;
     fn dim(&self) -> usize;
 

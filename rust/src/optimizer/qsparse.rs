@@ -15,8 +15,10 @@
 //! `local_sgd` (C1 = identity) is the paper's local-SGD row.
 
 use super::{DistOptimizer, Momentum, RoundStats};
-use crate::compressor::{payload_bits, Compressor, Ctx, Identity};
+use crate::compressor::{Compressor, Identity};
+use crate::transport::Collective;
 use crate::util::math;
+use std::sync::Arc;
 
 pub struct QsparseLocalSgd {
     n: usize,
@@ -26,12 +28,12 @@ pub struct QsparseLocalSgd {
     e: Vec<Vec<f32>>,
     momentum: Momentum,
     c1: Box<dyn Compressor>,
+    coll: Arc<dyn Collective>,
     t: u64,
     // scratch
     p: Vec<f32>,
-    q: Vec<f32>,
-    qbar: Vec<f32>,
-    kept: Vec<f32>,
+    /// Per-worker sync messages q_i, reused every sync round.
+    q: Vec<Vec<f32>>,
 }
 
 impl QsparseLocalSgd {
@@ -46,11 +48,10 @@ impl QsparseLocalSgd {
             e: vec![vec![0.0; d]; n],
             momentum: Momentum::new(beta, n, d),
             c1,
+            coll: crate::transport::default_collective(),
             t: 0,
             p: vec![0.0; d],
-            q: vec![0.0; d],
-            qbar: vec![0.0; d],
-            kept: vec![0.0; d],
+            q: vec![vec![0.0; d]; n],
         }
     }
 
@@ -63,7 +64,6 @@ impl QsparseLocalSgd {
 impl DistOptimizer for QsparseLocalSgd {
     fn step(&mut self, grads: &[Vec<f32>], eta: f32) -> RoundStats {
         debug_assert_eq!(grads.len(), self.n);
-        let d = self.xhat.len();
         self.t += 1;
         // local half-step on every worker
         for i in 0..self.n {
@@ -73,45 +73,35 @@ impl DistOptimizer for QsparseLocalSgd {
         if self.t % self.h != 0 {
             return RoundStats::default();
         }
-        // synchronization round
-        math::fill(&mut self.qbar, 0.0);
-        let inv = 1.0 / self.n as f32;
-        let mut bits = 0u64;
+        // Synchronization round over the Collective: each worker's message is
+        // q_i = e_i + (x_i − x̂); the backend returns mean_j C1(q_j) in q and
+        // the new residuals in e.
         for i in 0..self.n {
-            for j in 0..d {
-                self.q[j] = self.e[i][j] + self.x[i][j] - self.xhat[j];
-            }
-            let ctx = Ctx { round: self.t, worker: i as u32 };
-            if self.c1.is_dense() {
-                bits += self.c1.compress_into(ctx, &self.q, &mut self.kept);
-                math::axpy(inv, &self.kept, &mut self.qbar);
-                for ((ej, qj), kj) in self.e[i].iter_mut().zip(&self.q).zip(&self.kept) {
-                    *ej = qj - kj;
-                }
-            } else {
-                let sel = self.c1.select(ctx, &self.q);
-                bits += payload_bits(&sel, d);
-                // e_i = q_i off support; qbar accumulates the compressed part —
-                // range-wise (§Perf: no per-step d-sized mask allocation)
-                self.e[i].copy_from_slice(&self.q);
-                let (q, qbar, e) = (&self.q, &mut self.qbar, &mut self.e[i]);
-                sel.for_each_range(d, |s, t| {
-                    math::axpy(inv, &q[s..t], &mut qbar[s..t]);
-                    math::fill(&mut e[s..t], 0.0);
-                });
+            for ((qj, ej), (xj, hj)) in self.q[i]
+                .iter_mut()
+                .zip(&self.e[i])
+                .zip(self.x[i].iter().zip(&self.xhat))
+            {
+                *qj = ej + xj - hj;
             }
         }
-        math::axpy(1.0, &self.qbar, &mut self.xhat);
+        let round =
+            self.coll.exchange_mean(&mut self.q, Some(&mut self.e), self.c1.as_ref(), self.t);
+        math::axpy(1.0, &self.q[0], &mut self.xhat);
         for i in 0..self.n {
             self.x[i].copy_from_slice(&self.xhat);
         }
         RoundStats {
             grad_bits: 0,
-            model_bits: bits / self.n as u64,
+            model_bits: round.upload_bits_per_worker,
             grad_allreduce: true,
-            model_allreduce: self.c1.globally_synchronized(),
+            model_allreduce: round.allreduce_compatible,
             synced: true,
         }
+    }
+
+    fn set_collective(&mut self, c: Arc<dyn Collective>) {
+        self.coll = c;
     }
 
     fn n(&self) -> usize {

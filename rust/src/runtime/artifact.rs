@@ -11,6 +11,11 @@
 use anyhow::{Context, Result};
 use std::path::Path;
 
+// Offline build: the PJRT binding is stubbed in-tree.  Swap this `use` for
+// the real `xla` extern crate when the environment provides it (see
+// xla_stub.rs module docs).
+use crate::runtime::xla_stub as xla;
+
 pub struct Runtime {
     client: xla::PjRtClient,
 }

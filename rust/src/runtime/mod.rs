@@ -4,6 +4,7 @@
 
 pub mod artifact;
 pub mod manifest;
+pub mod xla_stub;
 
 pub use artifact::{Executable, Runtime};
 pub use manifest::{KernelInfo, Manifest, ModelInfo};

@@ -1,0 +1,168 @@
+//! Transport-backend equivalence: the threaded wire layer must reproduce the
+//! in-process reference end-to-end through the optimizers.
+//!
+//! * Parameter-server-path compressors (per-worker supports, dense
+//!   quantizers) are **bit-identical**: messages decode to the exact
+//!   `C(q_i)` bits and the server accumulates in worker order.
+//! * Ring-path compressors (GRBS) agree up to f32 reduction-order error;
+//!   the trajectory tolerance below (1e-4 relative per coordinate on a
+//!   quadratic workload) is the documented bound.
+//! * CSER's Lemma 1 (`x_i − e_i` identical across workers) must hold under
+//!   the threaded backend exactly as it does in process.
+
+use cser::compressor::{Compressor, Grbs, Qsgd, RandK, SignSgd, TopK};
+use cser::optimizer::{Cser, DistOptimizer};
+use cser::transport::Backend;
+use cser::util::prop::slices_close;
+use cser::util::rng::Rng;
+
+/// Run CSER on the quadratic f(x) = ½‖x − c‖² with per-worker gradient
+/// noise; returns every worker's final model.
+fn quadratic_trajectory(
+    backend: Backend,
+    c1: Box<dyn Compressor>,
+    c2: Box<dyn Compressor>,
+    h: u64,
+    steps: usize,
+) -> Vec<Vec<f32>> {
+    let d = 96;
+    let n = 4;
+    let target = vec![1.0f32; d];
+    let mut opt = Cser::new(&vec![0.0; d], n, 0.9, c1, c2, h);
+    opt.set_collective(backend.collective());
+    let mut rng = Rng::new(0xE0);
+    let mut noise = vec![0.0f32; d];
+    for _ in 0..steps {
+        let grads: Vec<Vec<f32>> = (0..n)
+            .map(|i| {
+                rng.fill_normal(&mut noise, 0.05);
+                opt.worker_model(i)
+                    .iter()
+                    .zip(&target)
+                    .zip(&noise)
+                    .map(|((x, t), z)| x - t + z)
+                    .collect()
+            })
+            .collect();
+        opt.step(&grads, 0.05);
+    }
+    (0..n).map(|i| opt.worker_model(i).to_vec()).collect()
+}
+
+#[test]
+fn ring_path_matches_in_process_within_reduction_tolerance() {
+    let mk = || {
+        (
+            Box::new(Grbs::new(2.0, 12, 7)) as Box<dyn Compressor>,
+            Box::new(Grbs::new(4.0, 12, 11)) as Box<dyn Compressor>,
+        )
+    };
+    let (c1, c2) = mk();
+    let a = quadratic_trajectory(Backend::InProcess, c1, c2, 3, 60);
+    let (c1, c2) = mk();
+    let b = quadratic_trajectory(Backend::Threaded, c1, c2, 3, 60);
+    for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+        slices_close(x, y, 1e-4).unwrap_or_else(|e| panic!("worker {i}: {e}"));
+    }
+}
+
+#[test]
+fn ps_path_matches_in_process_bit_for_bit() {
+    for (name, mk) in [
+        (
+            "topk/randk",
+            (|| {
+                (
+                    Box::new(TopK::new(4.0)) as Box<dyn Compressor>,
+                    Box::new(RandK::new(8.0)) as Box<dyn Compressor>,
+                )
+            }) as fn() -> (Box<dyn Compressor>, Box<dyn Compressor>),
+        ),
+        ("signsgd/qsgd", || {
+            (
+                Box::new(SignSgd) as Box<dyn Compressor>,
+                Box::new(Qsgd::new(4)) as Box<dyn Compressor>,
+            )
+        }),
+    ] {
+        let (c1, c2) = mk();
+        let a = quadratic_trajectory(Backend::InProcess, c1, c2, 3, 40);
+        let (c1, c2) = mk();
+        let b = quadratic_trajectory(Backend::Threaded, c1, c2, 3, 40);
+        assert_eq!(a, b, "{name}: PS path must be bit-identical");
+    }
+}
+
+#[test]
+fn lemma1_holds_under_threaded_backend() {
+    // x_{i,t} − e_{i,t} identical across workers with real wire collectives,
+    // mixed ring (C2 = GRBS) and PS (C1 = TopK) paths in the same optimizer.
+    let d = 64;
+    let n = 4;
+    let mut opt = Cser::new(
+        &vec![0.1; d],
+        n,
+        0.9,
+        Box::new(TopK::new(4.0)),
+        Box::new(Grbs::new(4.0, 8, 5)),
+        2,
+    );
+    opt.set_collective(Backend::Threaded.collective());
+    let mut rng = Rng::new(3);
+    let mut g = vec![0.0f32; d];
+    for _ in 0..9 {
+        let grads: Vec<Vec<f32>> = (0..n)
+            .map(|_| {
+                rng.fill_normal(&mut g, 1.0);
+                g.clone()
+            })
+            .collect();
+        opt.step(&grads, 0.05);
+        let base: Vec<f32> = opt
+            .worker_model(0)
+            .iter()
+            .zip(opt.local_error(0).unwrap())
+            .map(|(x, e)| x - e)
+            .collect();
+        for i in 1..n {
+            let xi: Vec<f32> = opt
+                .worker_model(i)
+                .iter()
+                .zip(opt.local_error(i).unwrap())
+                .map(|(x, e)| x - e)
+                .collect();
+            slices_close(&base, &xi, 1e-4).unwrap_or_else(|e| panic!("worker {i}: {e}"));
+        }
+    }
+}
+
+#[test]
+fn threaded_psync_mean_preservation_at_scale() {
+    // The integration-scale analogue of the in-process test: n = 8 workers,
+    // d = 64k, GRBS R = 64 over the threaded ring.
+    use cser::transport::{Collective, Threaded};
+    let d = 1 << 16;
+    let n = 8;
+    let mut rng = Rng::new(9);
+    let mut vs: Vec<Vec<f32>> = (0..n)
+        .map(|_| {
+            let mut v = vec![0.0f32; d];
+            rng.fill_normal(&mut v, 1.0);
+            v
+        })
+        .collect();
+    let probes: Vec<usize> = (0..16).map(|j| j * (d / 16)).collect();
+    let before: Vec<f64> = probes
+        .iter()
+        .map(|&j| vs.iter().map(|v| v[j] as f64).sum::<f64>() / n as f64)
+        .collect();
+    let c = Grbs::new(64.0, d / 256, 13);
+    let round = Threaded.psync(&mut vs, None, &c, 21);
+    assert!(round.allreduce_compatible);
+    let wire = round.wire.expect("threaded measures traffic");
+    assert!(wire.total_bits() > 0);
+    for (&j, &b) in probes.iter().zip(&before) {
+        let after = vs.iter().map(|v| v[j] as f64).sum::<f64>() / n as f64;
+        assert!((after - b).abs() < 1e-5, "probe {j}: {after} vs {b}");
+    }
+}

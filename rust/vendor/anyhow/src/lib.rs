@@ -1,0 +1,181 @@
+//! Offline API-compatible subset of the `anyhow` crate.
+//!
+//! The repo builds in an environment without a crates.io registry, so this
+//! shim provides the exact surface the codebase uses:
+//!
+//! * [`Error`] — an error with a context *stack*; `Display` shows the top
+//!   message (most recent context), `{:#}` shows the full chain joined with
+//!   `": "`, matching real `anyhow`'s observable formatting.
+//! * [`Result<T>`] with the `Error` default.
+//! * [`anyhow!`], [`bail!`], [`ensure!`] macros.
+//! * [`Context`] on `Result<T, E: std::error::Error>` and `Option<T>`.
+//! * A blanket `From<E: std::error::Error + Send + Sync + 'static>` so `?`
+//!   converts std/io errors.  Like real `anyhow`, [`Error`] deliberately does
+//!   *not* implement `std::error::Error` (that would conflict with the
+//!   blanket `From`).
+
+use std::fmt;
+
+/// Error with a human-readable context stack (`stack[0]` is the newest).
+pub struct Error {
+    stack: Vec<String>,
+}
+
+impl Error {
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Error { stack: vec![m.to_string()] }
+    }
+
+    fn push_context<C: fmt::Display>(mut self, c: C) -> Self {
+        self.stack.insert(0, c.to_string());
+        self
+    }
+
+    /// Iterate the context chain, newest first (mirrors `Error::chain`).
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.stack.iter().map(|s| s.as_str())
+    }
+
+    /// The innermost (root-cause) message — the oldest entry in the chain.
+    pub fn root_cause_message(&self) -> &str {
+        self.stack.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: the whole chain, newest context first.
+            write!(f, "{}", self.stack.join(": "))
+        } else {
+            write!(f, "{}", self.stack.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Real anyhow's Debug prints the message plus a caused-by list; the
+        // joined chain carries the same information.
+        write!(f, "{}", self.stack.join(": "))
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut stack = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            stack.push(s.to_string());
+            src = s.source();
+        }
+        Error { stack }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to errors (and convert `Option` to `Result`).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().push_context(c))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into().push_context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => { $crate::Error::msg(format!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => { return Err($crate::anyhow!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!("Condition failed: `{}`", stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "no such file")
+    }
+
+    #[test]
+    fn display_shows_newest_context() {
+        let e: Error = Err::<(), _>(io_err()).context("reading manifest").unwrap_err();
+        assert_eq!(e.to_string(), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: no such file");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(inner().unwrap_err().to_string().contains("no such file"));
+    }
+
+    #[test]
+    fn ensure_without_message() {
+        fn f(x: i32) -> Result<()> {
+            ensure!(x > 0);
+            Ok(())
+        }
+        assert!(f(1).is_ok());
+        assert!(f(0).unwrap_err().to_string().contains("x > 0"));
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("bad value {}", 7);
+        assert_eq!(e.to_string(), "bad value 7");
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            if x > 10 {
+                bail!("too big");
+            }
+            Ok(x)
+        }
+        assert!(f(5).is_ok());
+        assert_eq!(f(-1).unwrap_err().to_string(), "x must be positive, got -1");
+        assert_eq!(f(11).unwrap_err().to_string(), "too big");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<i32> = None;
+        assert_eq!(v.context("missing").unwrap_err().to_string(), "missing");
+    }
+}
