@@ -7,6 +7,8 @@
 //! of the e_i bookkeeping (Appendix A.4).
 
 use cser::config::OptSpec;
+use cser::engine::ErrorResetEngine;
+use cser::optimizer::DistOptimizer;
 use cser::util::bench::{black_box, Bench};
 use cser::util::rng::Rng;
 
@@ -38,6 +40,38 @@ fn main() {
             black_box(opt.step(&grads, 0.01));
         });
     }
+
+    // Worker-resident mode vs the central loop at the same work: both
+    // variants run an 8-step burst per timed iteration (resident mode pays
+    // one thread spawn/join per `run_resident` call, so bursts amortize it
+    // the way the trainer's per-epoch calls do), with the same per-worker
+    // gradient oracle on both sides.  Central still computes the gradients
+    // serially before each step — that central-loop serialization is part of
+    // what the worker-resident mode removes, and thus part of the measured
+    // difference.
+    let d_res = 1 << 18;
+    let burst = 8;
+    let spec = OptSpec::Cser { rc1: 16.0, rc2: 512.0, h: 32 };
+    let grad = cser::engine::as_grad(|w, _x, out| {
+        let mut rng = Rng::new(w as u64 + 1);
+        rng.fill_normal(out, 1.0);
+        0.0
+    });
+    let init = vec![0.0f32; d_res];
+    let mut central = spec.build(&init, n, 0.9, 7);
+    let mut grads_res: Vec<Vec<f32>> = vec![vec![0.0f32; d_res]; n];
+    b.run("central_cser_R256_n8_d256k_x8", || {
+        for _ in 0..burst {
+            for (w, g) in grads_res.iter_mut().enumerate() {
+                grad(w, central.worker_model(w), g.as_mut_slice());
+            }
+            black_box(central.step(&grads_res, 0.01));
+        }
+    });
+    let mut resident = ErrorResetEngine::new(&init, n, 0.9, spec.plan(d_res, 7));
+    b.run("resident_cser_R256_n8_d256k_x8", || {
+        black_box(resident.run_resident(burst, 0.01, f64::INFINITY, &grad));
+    });
 
     // per-element cost summary
     println!();

@@ -15,7 +15,7 @@
 //! because C(v_j) is zero outside the common support).
 
 use super::allreduce::WireCost;
-use crate::compressor::{payload_bits, Compressor, Ctx, Selection};
+use crate::compressor::{payload_bits_wire, Compressor, Ctx, Selection};
 
 /// What one PSync round did — enough for exact bit accounting and for
 /// optimizers to update error state without dense residual buffers.
@@ -83,7 +83,7 @@ pub fn psync(
     if c.globally_synchronized() && !c.is_dense() {
         let sel = c.select(Ctx { round, worker: 0 }, &vs[0]);
         average_shared_ranges(vs, &mut resid_out, &sel, d);
-        let bits = payload_bits(&sel, d);
+        let bits = payload_bits_wire(c.wire_scheme(), &sel, d);
         return PsyncRound {
             selections: vec![sel],
             upload_bits_per_worker: bits,
@@ -177,7 +177,7 @@ fn residualize_accumulate(
             c.compress_into(ctx, v, kept)
         } else {
             sel.apply(v, kept);
-            payload_bits(&sel, d)
+            payload_bits_wire(c.wire_scheme(), &sel, d)
         };
         selections.push(sel);
         for ((vj, kj), bj) in v.iter_mut().zip(kept.iter()).zip(vbar.iter_mut()) {
@@ -216,7 +216,7 @@ pub fn exchange_mean(
     if c.globally_synchronized() && !c.is_dense() {
         let sel = c.select(Ctx { round, worker: 0 }, &qs[0]);
         average_shared_ranges(qs, &mut resid_out, &sel, d);
-        let bits = payload_bits(&sel, d);
+        let bits = payload_bits_wire(c.wire_scheme(), &sel, d);
         let info = PsyncRound {
             selections: vec![sel],
             upload_bits_per_worker: bits,

@@ -121,27 +121,73 @@ pub enum WireScheme {
     /// Explicit `(index, value)` pairs — value-dependent, per-worker supports
     /// (top-k and friends) that must ship their indices.
     IndexValue,
+    /// Value-dependent *block* selections (blockwise top-k): each selected
+    /// block ships its `ceil(log2 num_blocks)`-bit block id followed by that
+    /// block's values.  Cheaper than expanding to per-element pairs, but the
+    /// ids are real metadata — `payload_bits_wire` charges them (unlike the
+    /// seed-derivable `SharedSupport` blocks).
+    BlockIndex { num_blocks: u32 },
     /// QSGD: 32-bit ℓ2 norm followed by the signed quantization levels packed
-    /// in radix `2·levels + 1` (a big-integer encoding, so the value block is
-    /// exactly `ceil(d · log2(2·levels+1))` bits — the accounted size).
+    /// chunkwise in radix `2·levels + 1` (one u64 chunk of base-B digits per
+    /// `ceil(k·log2 B)`-bit group, ≤1 bit overhead per chunk — see
+    /// [`quantize::qsgd_level_bits`] for the exact accounted size).
     QsgdLevels { levels: u32 },
     /// Scaled sign-SGD: 32-bit scale + one sign bit per coordinate.
     SignBitmap,
 }
 
-/// Payload + metadata bits one worker uploads for its compressed message.
+/// Bits needed to address one of `count` items (the index width used by every
+/// explicit-index wire layout; `transport::wire::index_width` is this same
+/// expression, kept in one place so codec and accounting cannot drift).
+pub fn index_bits(count: usize) -> u32 {
+    usize::BITS - (count.max(2) - 1).leading_zeros()
+}
+
+/// Payload + metadata bits one worker uploads for its compressed message,
+/// assuming seed-derivable block supports (zero index metadata for
+/// `Selection::Blocks`).  This is the *shared-support* price; compressors
+/// whose wire layout ships real metadata are charged via
+/// [`payload_bits_wire`], which takes the layout into account.
 pub fn payload_bits(sel: &Selection, d: usize) -> u64 {
     let elems = sel.count(d) as u64;
     let value_bits = elems * 32;
-    let index_bits = match sel {
+    let index_bits_total = match sel {
         Selection::All | Selection::Nothing => 0,
         // Globally-seeded block choices are reproducible from the shared
         // seed: zero metadata. (This is GRBS's AllReduce-compatibility
         // argument, §3.3.)
         Selection::Blocks { .. } => 0,
-        Selection::Indices(ix) => ix.len() as u64 * (usize::BITS - (d.max(2) - 1).leading_zeros()) as u64,
+        Selection::Indices(ix) => ix.len() as u64 * index_bits(d) as u64,
     };
-    value_bits + index_bits
+    value_bits + index_bits_total
+}
+
+/// Exact bits of the wire message a sparsifier ships for `sel` under the
+/// given layout — the accounted size every harness prices, equal by
+/// construction to what `transport::wire::encode` emits (tested invariant).
+/// Dense value-coded schemes (QSGD, sign bitmap) don't go through selections;
+/// their sizes come from `Compressor::compress_into` directly.
+pub fn payload_bits_wire(scheme: WireScheme, sel: &Selection, d: usize) -> u64 {
+    match scheme {
+        WireScheme::SharedSupport => sel.count(d) as u64 * 32,
+        WireScheme::IndexValue => sel.count(d) as u64 * (32 + index_bits(d) as u64),
+        WireScheme::BlockIndex { num_blocks } => {
+            let ids = match sel {
+                Selection::Blocks { blocks, .. } => blocks.len() as u64,
+                // An empty message has a real (zero-bit) encoding; any other
+                // selection kind has no BlockIndex wire format, and pricing
+                // one would silently break the accounted == encoded
+                // invariant — fail exactly like the codec does.
+                Selection::Nothing => 0,
+                Selection::All | Selection::Indices(_) => {
+                    unreachable!("BlockIndex scheme requires block selections")
+                }
+            };
+            sel.count(d) as u64 * 32 + ids * index_bits(num_blocks as usize) as u64
+        }
+        WireScheme::QsgdLevels { levels } => 32 + quantize::qsgd_level_bits(d, levels),
+        WireScheme::SignBitmap => 32 + d as u64,
+    }
 }
 
 /// A δ-approximate compressor (Definition 1).
@@ -156,11 +202,12 @@ pub trait Compressor: Send + Sync {
     fn select(&self, ctx: Ctx, v: &[f32]) -> Selection;
 
     /// Materialize C(v) into `out` (fully overwritten); returns the payload
-    /// bits one worker uploads for this message.  Default: selection-based.
+    /// bits one worker uploads for this message — the exact size of the wire
+    /// message `transport::wire::encode` would emit for this compressor.
     fn compress_into(&self, ctx: Ctx, v: &[f32], out: &mut [f32]) -> u64 {
         let sel = self.select(ctx, v);
         sel.apply(v, out);
-        payload_bits(&sel, v.len())
+        payload_bits_wire(self.wire_scheme(), &sel, v.len())
     }
 
     /// True for value-quantizing compressors whose support is the whole

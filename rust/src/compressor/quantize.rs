@@ -22,6 +22,48 @@
 use super::{Compressor, Ctx, Selection, WireScheme};
 use crate::util::rng::Rng;
 
+/// Chunk geometry of the QSGD level codec (DESIGN.md §5): digits in radix
+/// `B = 2·levels + 1` are packed `k` at a time into one u64, where `k` is the
+/// largest group size with `B^k ≤ u64::MAX`.  Returns `(k, bits)` with `bits`
+/// the exact width of one full chunk.  Each chunk wastes
+/// `bits − k·log2 B < 1` bit, so the codec is within one bit per chunk of the
+/// information-theoretic size while staying O(d) (no big-integer radix
+/// conversion).
+pub fn qsgd_chunk(levels: u32) -> (usize, u32) {
+    let base = 2 * levels as u64 + 1;
+    let mut k = 1usize;
+    let mut pow = base as u128;
+    while pow * base as u128 <= u64::MAX as u128 {
+        pow *= base as u128;
+        k += 1;
+    }
+    (k, qsgd_chunk_bits(k, levels))
+}
+
+/// Exact bits needed for one chunk of `digits` radix-`2·levels+1` digits:
+/// the bit length of `B^digits − 1`, computed in integer arithmetic so the
+/// codec and the accounting can never disagree by a float-rounding ulp.
+pub fn qsgd_chunk_bits(digits: usize, levels: u32) -> u32 {
+    let base = 2 * levels as u64 + 1;
+    let mut max: u128 = 1;
+    for _ in 0..digits {
+        max = max.checked_mul(base as u128).expect("qsgd chunk exceeds one machine word");
+    }
+    debug_assert!(max - 1 <= u64::MAX as u128);
+    128 - (max - 1).leading_zeros()
+}
+
+/// Exact size in bits of the chunked QSGD level block for `d` coordinates —
+/// what `transport::wire` serializes and what `Qsgd::compress_into` accounts
+/// (on top of the 32-bit norm header).
+pub fn qsgd_level_bits(d: usize, levels: u32) -> u64 {
+    let (k, full_bits) = qsgd_chunk(levels);
+    let full = (d / k) as u64;
+    let rem = d % k;
+    full * full_bits as u64
+        + if rem > 0 { qsgd_chunk_bits(rem, levels) as u64 } else { 0 }
+}
+
 /// QSGD stochastic uniform quantizer with `s` levels.
 #[derive(Clone, Debug)]
 pub struct Qsgd {
@@ -61,7 +103,7 @@ impl Compressor for Qsgd {
             let level = if rng.f32() < u - l { l + 1.0 } else { l };
             *o = x.signum() * norm * level / s;
         }
-        32 + (v.len() as f64 * self.bits_per_coord()).ceil() as u64
+        32 + qsgd_level_bits(v.len(), self.levels)
     }
 
     fn ratio(&self) -> f64 {
@@ -198,6 +240,27 @@ mod tests {
         let l1: f64 = v.iter().map(|x| x.abs() as f64).sum();
         let expect = norm2(&v) - l1 * l1 / 32.0;
         assert!((resid2 - expect).abs() < 1e-6, "{resid2} vs {expect}");
+    }
+
+    #[test]
+    fn qsgd_level_bits_within_one_bit_per_chunk() {
+        // The chunked codec's promise: at most one wasted bit per chunk above
+        // the information-theoretic size d·log2(2s+1), never below it.
+        for levels in [1u32, 4, 7, 255, 1024] {
+            let base = (2 * levels + 1) as f64;
+            let (k, full_bits) = qsgd_chunk(levels);
+            assert!(full_bits <= 64);
+            for d in [1usize, 5, 63, 64, 1000, 12345] {
+                let bits = qsgd_level_bits(d, levels) as f64;
+                let info = d as f64 * base.log2();
+                let chunks = d.div_ceil(k) as f64;
+                assert!(bits >= info - 1e-6, "levels={levels} d={d}: {bits} < {info}");
+                assert!(
+                    bits < info + chunks + 1e-6,
+                    "levels={levels} d={d}: {bits} vs {info} + {chunks} chunks"
+                );
+            }
+        }
     }
 
     #[test]

@@ -8,7 +8,7 @@
 //! `BlockTopK` ranks whole blocks by their l2 mass — the deterministic cousin
 //! of GRBS used in ablations.
 
-use super::{Compressor, Ctx, Selection};
+use super::{Compressor, Ctx, Selection, WireScheme};
 
 #[derive(Clone, Debug)]
 pub struct TopK {
@@ -103,6 +103,13 @@ impl Compressor for BlockTopK {
         false
     }
 
+    fn wire_scheme(&self) -> WireScheme {
+        // The block choice is value-dependent, so unlike GRBS/RandBlock the
+        // ids must travel: one `ceil(log2 B)`-bit id per selected block, then
+        // that block's values.  `payload_bits_wire` charges exactly this.
+        WireScheme::BlockIndex { num_blocks: self.num_blocks as u32 }
+    }
+
     fn name(&self) -> String {
         format!("blocktopk(R={}, B={})", self.ratio, self.num_blocks)
     }
@@ -148,6 +155,25 @@ mod tests {
         } else {
             panic!();
         }
+    }
+
+    #[test]
+    fn blocktopk_accounting_charges_block_ids() {
+        // DESIGN.md §3 closure: the accounted size must include the block-id
+        // metadata the wire actually ships — strictly more than the
+        // seed-derivable (SharedSupport) price of the same selection.
+        use crate::compressor::{index_bits, payload_bits, payload_bits_wire};
+        let d = 128;
+        let v: Vec<f32> = (0..d).map(|i| ((i * 29 % 97) as f32 - 48.0) / 13.0).collect();
+        let c = BlockTopK::new(4.0, 16); // keep 4 of 16 blocks of 8
+        let ctx = Ctx { round: 1, worker: 0 };
+        let sel = c.select(ctx, &v);
+        let mut out = vec![0.0f32; d];
+        let accounted = c.compress_into(ctx, &v, &mut out);
+        let expect = sel.count(d) as u64 * 32 + 4 * index_bits(16) as u64;
+        assert_eq!(accounted, expect);
+        assert_eq!(accounted, payload_bits_wire(c.wire_scheme(), &sel, d));
+        assert!(accounted > payload_bits(&sel, d), "ids must be charged");
     }
 
     #[test]

@@ -8,8 +8,9 @@ pub mod table3;
 pub use suite::{LrSchedule, Suite};
 pub use table3::{table3, table3_for, Table3Row};
 
-use crate::compressor::{Grbs, Identity, Zero};
-use crate::optimizer::{Cser, CserImpl2, DistOptimizer, EfSgd, FullSgd, QsparseLocalSgd};
+use crate::compressor::{Compressor, Grbs, Identity, Zero};
+use crate::engine::{CommPlan, ErrorResetEngine};
+use crate::optimizer::DistOptimizer;
 
 /// Target length for GRBS blocks, in elements.  The paper uses blockwise
 /// sparsification so messages stay contiguous; we fix the block length and
@@ -61,37 +62,39 @@ impl OptSpec {
         }
     }
 
-    /// Instantiate for a d-dimensional model, n workers, momentum beta.
-    /// `seed` decorrelates the GRBS streams of C1 and C2.
-    pub fn build(&self, init: &[f32], n: usize, beta: f32, seed: u64) -> Box<dyn DistOptimizer> {
-        let d = init.len();
-        let grbs = |r: f64, salt: u64| {
+    /// Lower this spec to a declarative [`CommPlan`] for a d-dimensional
+    /// model.  `seed` decorrelates the GRBS streams of C1 and C2.  This is
+    /// the single config → engine lowering every harness and trainer goes
+    /// through; [`OptSpec::build`] wraps it in an [`ErrorResetEngine`].
+    pub fn plan(&self, d: usize, seed: u64) -> CommPlan {
+        let grbs = |r: f64, salt: u64| -> Box<dyn Compressor> {
             Box::new(Grbs::with_block_len(r, d, GRBS_BLOCK_LEN, seed ^ salt))
         };
         match *self {
-            OptSpec::Sgd => Box::new(FullSgd::new(init, n, beta)),
-            OptSpec::EfSgd { rc1 } => Box::new(EfSgd::new(init, n, beta, grbs(rc1, 0x1))),
+            OptSpec::Sgd => CommPlan::full_sgd(),
+            OptSpec::EfSgd { rc1 } => CommPlan::ef_sgd(grbs(rc1, 0x1)),
             OptSpec::Qsparse { rc1, h } => {
                 if rc1 <= 1.0 {
-                    Box::new(QsparseLocalSgd::new(init, n, beta, Box::new(Identity), h))
+                    CommPlan::qsparse(Box::new(Identity), h)
                 } else {
-                    Box::new(QsparseLocalSgd::new(init, n, beta, grbs(rc1, 0x2), h))
+                    CommPlan::qsparse(grbs(rc1, 0x2), h)
                 }
             }
-            OptSpec::LocalSgd { h } => Box::new(QsparseLocalSgd::local_sgd(init, n, beta, h)),
-            OptSpec::Csea { rc1 } => Box::new(Cser::csea(init, n, beta, grbs(rc1, 0x3))),
-            OptSpec::CserPl { rc1, h } => {
-                Box::new(Cser::cser_pl(init, n, beta, grbs(rc1, 0x4), h))
-            }
-            OptSpec::Cser { rc1, rc2, h } => {
-                Box::new(Cser::new(init, n, beta, grbs(rc1, 0x5), grbs(rc2, 0x6), h))
-            }
+            OptSpec::LocalSgd { h } => CommPlan::local_sgd(h),
+            OptSpec::Csea { rc1 } => CommPlan::csea(grbs(rc1, 0x3)),
+            OptSpec::CserPl { rc1, h } => CommPlan::cser_pl(grbs(rc1, 0x4), h),
+            OptSpec::Cser { rc1, rc2, h } => CommPlan::cser(grbs(rc1, 0x5), grbs(rc2, 0x6), h),
             OptSpec::Cser2 { rc1, rc2, h } => {
-                let c2: Box<dyn crate::compressor::Compressor> =
+                let c2: Box<dyn Compressor> =
                     if rc2.is_infinite() { Box::new(Zero) } else { grbs(rc2, 0x6) };
-                Box::new(CserImpl2::new(init, n, beta, grbs(rc1, 0x5), c2, h))
+                CommPlan::cser_impl2(grbs(rc1, 0x5), c2, h)
             }
         }
+    }
+
+    /// Instantiate for a d-dimensional model, n workers, momentum beta.
+    pub fn build(&self, init: &[f32], n: usize, beta: f32, seed: u64) -> Box<dyn DistOptimizer> {
+        Box::new(ErrorResetEngine::new(init, n, beta, self.plan(init.len(), seed)))
     }
 }
 
@@ -107,6 +110,23 @@ mod tests {
         let c = OptSpec::Cser { rc1: 16.0, rc2: 512.0, h: 32 };
         assert!((c.overall_rc() - 256.0).abs() < 1e-9);
         assert_eq!(OptSpec::CserPl { rc1: 32.0, h: 32 }.overall_rc(), 1024.0);
+    }
+
+    #[test]
+    fn plan_lowering_keeps_legacy_names() {
+        // result files/figures key on the optimizer name — the OptSpec →
+        // CommPlan lowering must preserve the seed formats
+        assert_eq!(OptSpec::Sgd.plan(64, 1).name(), "sgd");
+        assert!(OptSpec::EfSgd { rc1: 4.0 }.plan(64, 1).name().starts_with("ef-sgd["));
+        assert!(OptSpec::LocalSgd { h: 2 }.plan(64, 1).name().contains("identity,H=2"));
+        assert!(OptSpec::Cser { rc1: 2.0, rc2: 4.0, h: 2 }
+            .plan(64, 1)
+            .name()
+            .starts_with("cser["));
+        assert!(OptSpec::Cser2 { rc1: 2.0, rc2: 4.0, h: 2 }
+            .plan(64, 1)
+            .name()
+            .starts_with("cser2["));
     }
 
     #[test]

@@ -13,11 +13,13 @@
 
 use super::metrics::{EpochPoint, RunRecord};
 use crate::data::{ClassDataset, Shard};
+use crate::engine::ErrorResetEngine;
 use crate::models::GradModel;
 use crate::network::CostModel;
-use crate::optimizer::DistOptimizer;
+use crate::optimizer::{DistOptimizer, RoundStats};
 use crate::transport::Backend;
 use crate::util::pool::scope_map;
+use std::sync::Mutex;
 
 #[derive(Clone, Debug)]
 pub struct TrainCfg {
@@ -37,11 +39,14 @@ pub struct TrainCfg {
     /// `divergence_factor * initial_loss` or becomes non-finite.
     pub divergence_factor: f64,
     /// Communication backend for the optimizer's collectives: the default
-    /// in-process path, or `Backend::Threaded` for the parallel-trainer mode
-    /// (one OS thread per worker moving serialized messages).  This is the
-    /// sole source of truth: `train_classifier` installs it on the
-    /// optimizer, replacing any collective set earlier via
-    /// `DistOptimizer::set_collective`.
+    /// in-process path, `Backend::Threaded` for the parallel-trainer mode
+    /// (one OS thread per worker moving serialized messages per collective),
+    /// or `Backend::Resident` for the worker-resident mode (engine
+    /// optimizers only: persistent worker threads own their `WorkerState`
+    /// and run gradient → sync → apply end to end — no central gradients
+    /// array, no per-step barrier in this trainer).  This is the sole source
+    /// of truth: `train_classifier` installs it on the optimizer, replacing
+    /// any collective set earlier via `DistOptimizer::set_collective`.
     pub backend: Backend,
 }
 
@@ -63,7 +68,37 @@ impl TrainCfg {
     }
 }
 
+/// Price one optimizer step's communication at paper scale (DESIGN.md §3)
+/// into the cumulative wire-bit and wall-clock counters — shared by the
+/// central and worker-resident training loops.
+fn price_step(
+    cfg: &TrainCfg,
+    scale: f64,
+    stats: &RoundStats,
+    cum_bits: &mut f64,
+    cum_seconds: &mut f64,
+) {
+    *cum_seconds += cfg.cost.compute_step;
+    if stats.grad_bits > 0 {
+        let bits = stats.grad_bits as f64 * scale;
+        let rt = cfg.cost.sync_round(bits as u64, stats.grad_allreduce, cfg.cost.n.min(8) as f64);
+        *cum_bits += rt.wire.total_bits() as f64;
+        *cum_seconds += rt.seconds;
+    }
+    if stats.model_bits > 0 {
+        let bits = stats.model_bits as f64 * scale;
+        let rt = cfg.cost.sync_round(bits as u64, stats.model_allreduce, cfg.cost.n.min(8) as f64);
+        *cum_bits += rt.wire.total_bits() as f64;
+        *cum_seconds += rt.seconds;
+    }
+}
+
 /// Train `opt` on `(train, test)`; returns the full run record.
+///
+/// With `cfg.backend == Backend::Resident` and an engine-backed optimizer
+/// (all built-ins are), the step loop is handed to the worker threads via
+/// [`ErrorResetEngine::run_resident`]; otherwise the classic central loop
+/// below drives `step(grads, eta)` with `scope_map`-parallel gradients.
 pub fn train_classifier(
     model: &dyn GradModel,
     train: &ClassDataset,
@@ -71,6 +106,13 @@ pub fn train_classifier(
     opt: &mut dyn DistOptimizer,
     cfg: &TrainCfg,
 ) -> RunRecord {
+    if cfg.backend.worker_resident() {
+        if let Some(engine) = opt.as_engine() {
+            return train_classifier_resident(model, train, test, engine, cfg);
+        }
+        // non-engine optimizers fall through to the central loop (still over
+        // the threaded wire collectives `Backend::Resident` selects)
+    }
     let n = opt.n();
     let d = opt.dim();
     assert_eq!(d, model.dim());
@@ -126,19 +168,7 @@ pub fn train_classifier(
 
             let stats = opt.step(&grads, eta);
             // paper-scale accounting
-            cum_seconds += cfg.cost.compute_step;
-            if stats.grad_bits > 0 {
-                let bits = stats.grad_bits as f64 * scale;
-                let rt = cfg.cost.sync_round(bits as u64, stats.grad_allreduce, cfg.cost.n.min(8) as f64);
-                cum_bits += rt.wire.total_bits() as f64;
-                cum_seconds += rt.seconds;
-            }
-            if stats.model_bits > 0 {
-                let bits = stats.model_bits as f64 * scale;
-                let rt = cfg.cost.sync_round(bits as u64, stats.model_allreduce, cfg.cost.n.min(8) as f64);
-                cum_bits += rt.wire.total_bits() as f64;
-                cum_seconds += rt.seconds;
-            }
+            price_step(cfg, scale, &stats, &mut cum_bits, &mut cum_seconds);
             if diverged {
                 break;
             }
@@ -160,6 +190,88 @@ pub fn train_classifier(
     RunRecord {
         name: String::new(),
         optimizer: opt.name(),
+        overall_rc: f64::NAN,
+        lr: cfg.lr,
+        seed: cfg.seed,
+        points,
+        diverged,
+    }
+}
+
+/// Worker-resident training loop: the engine's worker threads own their
+/// state and drive the whole iteration; this function only schedules epochs,
+/// prices the per-step stats, and evaluates x̄ between epochs.  Each worker
+/// samples from its own mutex-wrapped shard — uncontended by construction
+/// (worker i is the only locker of shard i).
+fn train_classifier_resident(
+    model: &dyn GradModel,
+    train: &ClassDataset,
+    test: &ClassDataset,
+    engine: &mut ErrorResetEngine,
+    cfg: &TrainCfg,
+) -> RunRecord {
+    let n = engine.n();
+    let d = engine.dim();
+    assert_eq!(d, model.dim());
+    engine.set_collective(cfg.backend.collective());
+    let shards: Vec<Mutex<Shard>> =
+        Shard::split(train.len(), n, cfg.seed).into_iter().map(Mutex::new).collect();
+    let iters_per_epoch = (train.len() / (cfg.batch_per_worker * n)).max(1);
+    let grad_fn = crate::engine::as_grad(|w, xw, out| {
+        let mut batch = Vec::with_capacity(cfg.batch_per_worker);
+        shards[w].lock().unwrap().sample_batch(cfg.batch_per_worker, &mut batch);
+        model.loss_grad(xw, train, &batch, out)
+    });
+
+    let mut xbar = vec![0.0f32; d];
+    let mut points = Vec::with_capacity(cfg.epochs);
+    let mut diverged = false;
+    let mut initial_loss = f64::NAN;
+    let mut cum_bits = 0.0f64;
+    let mut cum_seconds = 0.0f64;
+    let scale = cfg.paper_d as f64 / d as f64;
+
+    for epoch in 0..cfg.epochs {
+        let frac = epoch as f64 / cfg.epochs as f64;
+        let eta = (cfg.lr * (cfg.lr_multiplier)(&cfg.schedule, frac)) as f32;
+        // In-flight divergence brake: the engine stops all workers on the
+        // same step when the mean loss trips this.  The first epoch has no
+        // reference loss yet and runs unguarded; the re-check below catches
+        // anything it let through.
+        let stop_loss = if initial_loss.is_finite() {
+            cfg.divergence_factor * initial_loss
+        } else {
+            f64::INFINITY
+        };
+        let reports = engine.run_resident(iters_per_epoch, eta, stop_loss, &grad_fn);
+        let mut loss_sum = 0.0f64;
+        for rep in &reports {
+            if initial_loss.is_nan() {
+                initial_loss = rep.loss;
+            }
+            loss_sum += rep.loss;
+            if !rep.loss.is_finite() || rep.loss > cfg.divergence_factor * initial_loss {
+                diverged = true;
+            }
+            price_step(cfg, scale, &rep.stats, &mut cum_bits, &mut cum_seconds);
+        }
+        let train_loss = loss_sum / reports.len().max(1) as f64;
+        engine.mean_model(&mut xbar);
+        let test_acc = if xbar.iter().all(|v| v.is_finite()) {
+            model.accuracy(&xbar, test) as f64
+        } else {
+            diverged = true;
+            f64::NAN
+        };
+        points.push(EpochPoint { epoch, train_loss, test_acc, cum_bits, cum_seconds });
+        if diverged {
+            break;
+        }
+    }
+
+    RunRecord {
+        name: String::new(),
+        optimizer: engine.name(),
         overall_rc: f64::NAN,
         lr: cfg.lr,
         seed: cfg.seed,
@@ -253,6 +365,35 @@ mod tests {
             (acc_inproc - acc_threaded).abs() < 0.05,
             "in-process {acc_inproc} vs threaded {acc_threaded}"
         );
+    }
+
+    #[test]
+    fn resident_backend_trains_like_in_process() {
+        // Worker-resident mode: persistent worker threads drive their own
+        // gradient→sync→apply loop over the threaded wire collectives; the
+        // run must land in the same accuracy band as the central reference,
+        // and communicate a comparable number of accounted bits.
+        let (tr, te) = ClassDataset::gaussian_mixture(10, 16, 1024, 256, 1.2, 0.8, 0.0, 9);
+        let m = Mlp::new(16, 32, 10);
+        let init = m.init(5);
+        let spec = OptSpec::Cser { rc1: 2.0, rc2: 4.0, h: 2 };
+        let mut cfg = quick_cfg(4, 0.1, 9);
+        let mut opt = spec.build(&init, 4, 0.9, 9);
+        let rec_central = train_classifier(&m, &tr, &te, opt.as_mut(), &cfg);
+        cfg.backend = crate::transport::Backend::Resident;
+        let mut opt = spec.build(&init, 4, 0.9, 9);
+        let rec_res = train_classifier(&m, &tr, &te, opt.as_mut(), &cfg);
+        assert!(!rec_res.diverged);
+        assert!(
+            (rec_central.final_acc() - rec_res.final_acc()).abs() < 0.06,
+            "central {} vs resident {}",
+            rec_central.final_acc(),
+            rec_res.final_acc()
+        );
+        let b_central = rec_central.points.last().unwrap().cum_bits;
+        let b_res = rec_res.points.last().unwrap().cum_bits;
+        let ratio = b_res / b_central;
+        assert!((0.5..2.0).contains(&ratio), "bit accounting drifted: {ratio}");
     }
 
     #[test]

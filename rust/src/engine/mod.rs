@@ -1,0 +1,775 @@
+//! The error-reset engine: one interpreter for every synchronization plan.
+//!
+//! Every algorithm in this repo — CSER/M-CSER, CSEA, CSER-PL, CSER impl. II,
+//! QSparse-local-SGD, local SGD, EF-SGD, fully-synchronous SGD — is the same
+//! skeleton: a per-worker local descent, a gradient sync through C2, and a
+//! periodic error/model reset through C1.  The seed repo implemented each as
+//! a separate struct against the omniscient `step(grads, eta)` interface;
+//! this module splits that into:
+//!
+//! * [`WorkerState`] — one worker's model/error/momentum/scratch, `Send`,
+//!   owned by its worker;
+//! * [`CommPlan`] — the declarative schedule (which compressor fires on
+//!   which cadence: C2 every step, C1 every H, dense fallback);
+//! * [`ErrorResetEngine`] — the single generic executor.  It implements
+//!   [`DistOptimizer`] for the classic central call path (bit-identical to
+//!   the seed implementations on the in-process/PS collectives; the parity
+//!   suite in `rust/tests/engine_parity.rs` pins this), and adds
+//!   [`ErrorResetEngine::run_resident`]: the worker-resident mode where each
+//!   OS thread owns its `WorkerState` and runs gradient → compress → sync →
+//!   apply end to end, meeting the other workers only at the collective — no
+//!   central gradients array, no lock-step barrier in the trainer.
+//!
+//! The legacy structs (`optimizer::{Cser, CserImpl2, EfSgd, QsparseLocalSgd,
+//! FullSgd}`) survive as thin deprecated wrappers over this engine.
+
+pub mod plan;
+pub mod resident;
+pub mod worker;
+
+pub use plan::{CommPlan, RoundRule, StepRule};
+pub use worker::{descent_into, WorkerState};
+
+use crate::compressor::{Ctx, Selection};
+use crate::optimizer::{DistOptimizer, RoundStats};
+use crate::transport::Collective;
+use crate::util::math;
+use resident::Rendezvous;
+use std::sync::Arc;
+use worker::{put_field, take_field};
+
+/// What one step produced under [`ErrorResetEngine::run_resident`]: the mean
+/// worker loss and the communication stats (identical on every worker).
+#[derive(Debug, Clone, Copy)]
+pub struct StepReport {
+    pub loss: f64,
+    pub stats: RoundStats,
+}
+
+/// Worker-resident gradient oracle: `grad(worker, model, out) -> loss`.
+/// Called from the worker's own thread with the worker's own model; `Sync`
+/// because all workers share one instance.
+pub type GradFn<'a> = &'a (dyn Fn(usize, &[f32], &mut [f32]) -> f32 + Sync);
+
+/// Identity helper that pins a closure to the higher-ranked `Fn` signature
+/// [`GradFn`] expects — plain inference can early-bind the reference
+/// lifetimes when the closure is stored in a variable before being passed.
+pub fn as_grad<F: Fn(usize, &[f32], &mut [f32]) -> f32 + Sync>(f: F) -> F {
+    f
+}
+
+/// The generic error-reset optimizer: `Vec<WorkerState>` driven by a
+/// [`CommPlan`] over a swappable [`Collective`].
+pub struct ErrorResetEngine {
+    plan: CommPlan,
+    beta: f32,
+    d: usize,
+    t: u64,
+    workers: Vec<WorkerState>,
+    coll: Arc<dyn Collective>,
+    /// Central-mode scratch for the dense gradient mean (`DenseAverage`).
+    gbar: Vec<f32>,
+}
+
+impl ErrorResetEngine {
+    pub fn new(init: &[f32], n: usize, beta: f32, plan: CommPlan) -> Self {
+        plan.validate();
+        assert!(n >= 1);
+        assert!((0.0..1.0).contains(&beta));
+        let d = init.len();
+        let track_e = plan.tracks_error();
+        let (needs_r, needs_ehalf) = plan.reset_scratch();
+        let needs_xhat = matches!(plan.round, RoundRule::Resync { .. });
+        let workers = (0..n)
+            .map(|id| WorkerState {
+                id,
+                x: init.to_vec(),
+                e: if track_e { vec![0.0; d] } else { Vec::new() },
+                m: if beta > 0.0 { vec![0.0; d] } else { Vec::new() },
+                xhat: if needs_xhat { init.to_vec() } else { Vec::new() },
+                p: vec![0.0; d],
+                r: if needs_r { vec![0.0; d] } else { Vec::new() },
+                e_half: if needs_ehalf { vec![0.0; d] } else { Vec::new() },
+                g: Vec::new(),
+            })
+            .collect();
+        let gbar =
+            if matches!(plan.step, StepRule::DenseAverage) { vec![0.0; d] } else { Vec::new() };
+        ErrorResetEngine {
+            plan,
+            beta,
+            d,
+            t: 0,
+            workers,
+            coll: crate::transport::default_collective(),
+            gbar,
+        }
+    }
+
+    /// The active schedule (read-only; useful for harness introspection).
+    pub fn comm_plan(&self) -> &CommPlan {
+        &self.plan
+    }
+
+    /// Worker-resident execution: run `steps` iterations with one OS thread
+    /// per worker.  Each thread owns its [`WorkerState`], computes its own
+    /// gradient via `grad(worker, model, out) -> loss`, performs the local
+    /// descent/apply phases independently, and meets the other workers only
+    /// at the plan's collectives (through whatever [`Collective`] backend is
+    /// installed — `set_collective(Backend::Threaded.collective())` gives
+    /// real serialized wire traffic under a worker-resident loop).
+    ///
+    /// On the in-process backend this is bit-identical to calling
+    /// [`DistOptimizer::step`] `steps` times with the same gradients (tested
+    /// below): the collectives see the same vectors in the same worker
+    /// order, and every other phase is worker-local arithmetic.
+    ///
+    /// `stop_loss` is a divergence brake: at each collective the leader
+    /// averages the deposited per-worker losses and, if the mean exceeds the
+    /// threshold (or is non-finite), every worker stops after the current
+    /// step — the same verdict on the same step, with no extra barrier.
+    pub fn run_resident(
+        &mut self,
+        steps: usize,
+        eta: f32,
+        stop_loss: f64,
+        grad: GradFn,
+    ) -> Vec<StepReport> {
+        let n = self.workers.len();
+        let d = self.d;
+        if n == 1 {
+            // Degenerate fleet: no threads, just the central loop in place.
+            let mut reports = Vec::with_capacity(steps);
+            let mut grads = vec![vec![0.0f32; d]];
+            for _ in 0..steps {
+                let loss = grad(0, &self.workers[0].x, &mut grads[0]) as f64;
+                let stats = DistOptimizer::step(self, &grads, eta);
+                reports.push(StepReport { loss, stats });
+                if !loss.is_finite() || loss > stop_loss {
+                    break;
+                }
+            }
+            return reports;
+        }
+
+        let rz = Rendezvous::new(n);
+        let plan = &self.plan;
+        let beta = self.beta;
+        let coll = &self.coll;
+        let t0 = self.t;
+        let mut per_worker: Vec<(u64, Vec<StepReport>)> = Vec::with_capacity(n);
+        std::thread::scope(|s| {
+            let mut handles = Vec::with_capacity(n);
+            for w in self.workers.iter_mut() {
+                let rz = &rz;
+                handles.push(s.spawn(move || {
+                    // if this thread unwinds (e.g. the user's gradient fn
+                    // panics), poison the rendezvous so the other workers
+                    // panic out of their waits instead of deadlocking
+                    let _poison = resident::PoisonGuard::new(rz);
+                    if w.g.len() != d {
+                        w.g = vec![0.0f32; d];
+                    }
+                    let mut t = t0;
+                    let mut reports = Vec::with_capacity(steps);
+                    for _ in 0..steps {
+                        t += 1;
+                        let loss = grad(w.id, &w.x, &mut w.g) as f64;
+                        let (stats, stop) =
+                            resident_step(plan, beta, coll, rz, w, t, eta, loss, stop_loss, d);
+                        reports.push(StepReport { loss, stats });
+                        if stop {
+                            break;
+                        }
+                    }
+                    (t, reports)
+                }));
+            }
+            for h in handles {
+                per_worker.push(h.join().expect("resident worker panicked"));
+            }
+        });
+
+        let t_end = per_worker[0].0;
+        debug_assert!(per_worker.iter().all(|(t, _)| *t == t_end), "workers desynchronized");
+        self.t = t_end;
+        let k = per_worker[0].1.len();
+        debug_assert!(per_worker.iter().all(|(_, r)| r.len() == k));
+        (0..k)
+            .map(|i| StepReport {
+                loss: per_worker.iter().map(|(_, r)| r[i].loss).sum::<f64>() / n as f64,
+                stats: per_worker[0].1[i].stats,
+            })
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-worker phases shared verbatim by the central and resident paths — the
+// numerical-equivalence guarantee lives in this sharing.
+// ---------------------------------------------------------------------------
+
+/// QSparse sync message: q_i = e_i + (x_i − x̂), built into the p buffer.
+fn qsparse_prepare(w: &mut WorkerState) {
+    let (p, e, x, xhat) = (&mut w.p, &w.e, &w.x, &w.xhat);
+    for ((qj, ej), (xj, hj)) in p.iter_mut().zip(e).zip(x.iter().zip(xhat)) {
+        *qj = ej + xj - hj;
+    }
+}
+
+/// QSparse resync: advance the anchor by the mean message, reset x to it.
+fn qsparse_apply(w: &mut WorkerState) {
+    math::axpy(1.0, &w.p, &mut w.xhat);
+    w.x.copy_from_slice(&w.xhat);
+}
+
+/// CSER gradient-path apply: x −= p′, and (impl. I) fold the residual into e
+/// — from the complement ranges on the global fast path, from the dense
+/// residual buffer otherwise.
+fn cser_apply_grad(
+    w: &mut WorkerState,
+    round: &crate::collective::PsyncRound,
+    track: bool,
+    global: bool,
+    d: usize,
+) {
+    math::axpy(-1.0, &w.p, &mut w.x);
+    if track {
+        if global {
+            let (p_i, e_i) = (&w.p, &mut w.e);
+            round.for_each_unselected(w.id, d, |s, e2| {
+                math::axpy(-1.0, &p_i[s..e2], &mut e_i[s..e2]);
+            });
+        } else {
+            math::axpy(-1.0, &w.r, &mut w.e);
+        }
+    }
+}
+
+/// Global-C1 reset, before PSync: x −= e on the shared support.
+fn cser_reset_pre_global(w: &mut WorkerState, sel: &Selection, d: usize) {
+    let (x_i, e_i) = (&mut w.x, &w.e);
+    sel.for_each_range(d, |s, e2| math::axpy(-1.0, &e_i[s..e2], &mut x_i[s..e2]));
+}
+
+/// Global-C1 reset, after PSync: x += e′ on the support, which then resets.
+fn cser_reset_post_global(w: &mut WorkerState, sel: &Selection, d: usize) {
+    let (x_i, e_i) = (&mut w.x, &mut w.e);
+    sel.for_each_range(d, |s, e2| {
+        math::axpy(1.0, &e_i[s..e2], &mut x_i[s..e2]);
+        math::fill(&mut e_i[s..e2], 0.0);
+    });
+}
+
+/// General-path reset, after PSync: x += e′ − e_half; e ← new residual.
+fn cser_reset_post_general(w: &mut WorkerState) {
+    math::axpy(1.0, &w.e, &mut w.x);
+    math::axpy(-1.0, &w.e_half, &mut w.x);
+    std::mem::swap(&mut w.e, &mut w.r);
+}
+
+impl DistOptimizer for ErrorResetEngine {
+    fn step(&mut self, grads: &[Vec<f32>], eta: f32) -> RoundStats {
+        debug_assert_eq!(grads.len(), self.workers.len());
+        self.t += 1;
+        let t = self.t;
+        let d = self.d;
+        let beta = self.beta;
+        match (&self.plan.step, &self.plan.round) {
+            (StepRule::DenseAverage, _) => {
+                let refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+                math::mean_rows(&refs, &mut self.gbar);
+                // All workers are bit-identical replicas: run the momentum
+                // descent once and memcpy the result, keeping the seed's
+                // single-model arithmetic cost (the resident path computes
+                // per worker instead — same bits either way).
+                let (w0, rest) = self.workers.split_first_mut().expect("n >= 1");
+                descent_into(beta, &mut w0.m, &self.gbar, eta, &mut w0.p);
+                math::axpy(-1.0, &w0.p, &mut w0.x);
+                for w in rest {
+                    if beta > 0.0 {
+                        w.m.copy_from_slice(&w0.m);
+                    }
+                    w.x.copy_from_slice(&w0.x);
+                }
+                RoundStats {
+                    grad_bits: d as u64 * 32,
+                    model_bits: 0,
+                    grad_allreduce: true,
+                    model_allreduce: true,
+                    synced: true,
+                }
+            }
+            (StepRule::ErrorFeedback { c }, _) => {
+                for (w, g) in self.workers.iter_mut().zip(grads) {
+                    descent_into(beta, &mut w.m, g, eta, &mut w.p);
+                    math::axpy(1.0, &w.e, &mut w.p);
+                }
+                let mut qs = take_field(&mut self.workers, |w| &mut w.p);
+                let mut es = take_field(&mut self.workers, |w| &mut w.e);
+                let round = self.coll.exchange_mean(&mut qs, Some(&mut es), c.as_ref(), t);
+                put_field(&mut self.workers, qs, |w| &mut w.p);
+                put_field(&mut self.workers, es, |w| &mut w.e);
+                for w in self.workers.iter_mut() {
+                    math::axpy(-1.0, &w.p, &mut w.x);
+                }
+                RoundStats {
+                    grad_bits: round.upload_bits_per_worker,
+                    model_bits: 0,
+                    grad_allreduce: round.allreduce_compatible,
+                    model_allreduce: true,
+                    synced: true,
+                }
+            }
+            (StepRule::LocalDescent, RoundRule::Resync { c1, h }) => {
+                for (w, g) in self.workers.iter_mut().zip(grads) {
+                    descent_into(beta, &mut w.m, g, eta, &mut w.p);
+                    math::axpy(-1.0, &w.p, &mut w.x);
+                }
+                if t % *h != 0 {
+                    return RoundStats::default();
+                }
+                for w in self.workers.iter_mut() {
+                    qsparse_prepare(w);
+                }
+                let mut qs = take_field(&mut self.workers, |w| &mut w.p);
+                let mut es = take_field(&mut self.workers, |w| &mut w.e);
+                let round = self.coll.exchange_mean(&mut qs, Some(&mut es), c1.as_ref(), t);
+                put_field(&mut self.workers, qs, |w| &mut w.p);
+                put_field(&mut self.workers, es, |w| &mut w.e);
+                for w in self.workers.iter_mut() {
+                    qsparse_apply(w);
+                }
+                RoundStats {
+                    grad_bits: 0,
+                    model_bits: round.upload_bits_per_worker,
+                    grad_allreduce: true,
+                    model_allreduce: round.allreduce_compatible,
+                    synced: true,
+                }
+            }
+            (StepRule::ErrorReset { c2, track_error }, round_rule) => {
+                let track = *track_error;
+                for (w, g) in self.workers.iter_mut().zip(grads) {
+                    descent_into(beta, &mut w.m, g, eta, &mut w.p);
+                }
+                let mut stats = RoundStats::default();
+                let global = c2.globally_synchronized();
+                let mut ps = take_field(&mut self.workers, |w| &mut w.p);
+                let round = if global || !track {
+                    self.coll.psync(&mut ps, None, c2.as_ref(), t)
+                } else {
+                    let mut rs = take_field(&mut self.workers, |w| &mut w.r);
+                    let round = self.coll.psync(&mut ps, Some(&mut rs), c2.as_ref(), t);
+                    put_field(&mut self.workers, rs, |w| &mut w.r);
+                    round
+                };
+                put_field(&mut self.workers, ps, |w| &mut w.p);
+                stats.grad_bits = round.upload_bits_per_worker;
+                stats.grad_allreduce = round.allreduce_compatible;
+                for w in self.workers.iter_mut() {
+                    cser_apply_grad(w, &round, track, global, d);
+                }
+                match round_rule {
+                    RoundRule::ErrorSync { c1, h } if t % *h == 0 => {
+                        stats.synced = true;
+                        if c1.globally_synchronized() {
+                            let sel =
+                                c1.select(Ctx { round: t, worker: 0 }, &self.workers[0].e);
+                            for w in self.workers.iter_mut() {
+                                cser_reset_pre_global(w, &sel, d);
+                            }
+                            let mut es = take_field(&mut self.workers, |w| &mut w.e);
+                            let round = self.coll.psync(&mut es, None, c1.as_ref(), t);
+                            debug_assert_eq!(round.selections[0], sel);
+                            put_field(&mut self.workers, es, |w| &mut w.e);
+                            stats.model_bits = round.upload_bits_per_worker;
+                            stats.model_allreduce = true;
+                            for w in self.workers.iter_mut() {
+                                cser_reset_post_global(w, &sel, d);
+                            }
+                        } else {
+                            for w in self.workers.iter_mut() {
+                                w.e_half.copy_from_slice(&w.e);
+                            }
+                            let mut es = take_field(&mut self.workers, |w| &mut w.e);
+                            let mut rs = take_field(&mut self.workers, |w| &mut w.r);
+                            let round = self.coll.psync(&mut es, Some(&mut rs), c1.as_ref(), t);
+                            put_field(&mut self.workers, es, |w| &mut w.e);
+                            put_field(&mut self.workers, rs, |w| &mut w.r);
+                            stats.model_bits = round.upload_bits_per_worker;
+                            stats.model_allreduce = round.allreduce_compatible;
+                            for w in self.workers.iter_mut() {
+                                cser_reset_post_general(w);
+                            }
+                        }
+                    }
+                    RoundRule::ModelSync { c1, h } if t % *h == 0 => {
+                        let mut xs = take_field(&mut self.workers, |w| &mut w.x);
+                        let round = self.coll.psync(&mut xs, None, c1.as_ref(), t);
+                        put_field(&mut self.workers, xs, |w| &mut w.x);
+                        stats.model_bits = round.upload_bits_per_worker;
+                        stats.model_allreduce = round.allreduce_compatible;
+                        stats.synced = true;
+                    }
+                    _ => {}
+                }
+                stats
+            }
+            _ => unreachable!("inconsistent CommPlan: local descent without a resync rule"),
+        }
+    }
+
+    fn set_collective(&mut self, c: Arc<dyn Collective>) {
+        self.coll = c;
+    }
+
+    fn n(&self) -> usize {
+        self.workers.len()
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn worker_model(&self, i: usize) -> &[f32] {
+        &self.workers[i].x
+    }
+
+    fn mean_model(&self, out: &mut [f32]) {
+        if self.plan.replicated() {
+            // every worker holds the identical model — copy, don't average
+            // (exactness: n·(x/n) re-rounds under f32)
+            out.copy_from_slice(&self.workers[0].x);
+        } else {
+            math::fill(out, 0.0);
+            let inv = 1.0 / self.workers.len() as f32;
+            for w in &self.workers {
+                math::axpy(inv, &w.x, out);
+            }
+        }
+    }
+
+    fn local_error(&self, i: usize) -> Option<&[f32]> {
+        if self.workers[i].e.is_empty() {
+            None
+        } else {
+            Some(&self.workers[i].e)
+        }
+    }
+
+    fn name(&self) -> String {
+        self.plan.name()
+    }
+
+    fn as_engine(&mut self) -> Option<&mut ErrorResetEngine> {
+        Some(self)
+    }
+}
+
+/// One worker-resident iteration (post-gradient): the same phase functions
+/// as the central path, with [`Rendezvous::collective`] standing in for the
+/// gathered collective calls.
+#[allow(clippy::too_many_arguments)]
+fn resident_step(
+    plan: &CommPlan,
+    beta: f32,
+    coll: &Arc<dyn Collective>,
+    rz: &Rendezvous,
+    w: &mut WorkerState,
+    t: u64,
+    eta: f32,
+    loss: f64,
+    stop_loss: f64,
+    d: usize,
+) -> (RoundStats, bool) {
+    match (&plan.step, &plan.round) {
+        (StepRule::DenseAverage, _) => {
+            let g = std::mem::take(&mut w.g);
+            let (g, _, out) = rz.collective(w.id, g, None, Some(loss), stop_loss, &|vs, _| {
+                // dense gradient mean, broadcast to every worker — identical
+                // arithmetic to the central path's `mean_rows`
+                let refs: Vec<&[f32]> = vs.iter().map(|v| v.as_slice()).collect();
+                let mut m = vec![0.0f32; d];
+                math::mean_rows(&refs, &mut m);
+                for v in vs.iter_mut() {
+                    v.copy_from_slice(&m);
+                }
+                None
+            });
+            w.g = g;
+            descent_into(beta, &mut w.m, &w.g, eta, &mut w.p);
+            math::axpy(-1.0, &w.p, &mut w.x);
+            let stats = RoundStats {
+                grad_bits: d as u64 * 32,
+                model_bits: 0,
+                grad_allreduce: true,
+                model_allreduce: true,
+                synced: true,
+            };
+            (stats, out.stop)
+        }
+        (StepRule::ErrorFeedback { c }, _) => {
+            descent_into(beta, &mut w.m, &w.g, eta, &mut w.p);
+            math::axpy(1.0, &w.e, &mut w.p);
+            let p = std::mem::take(&mut w.p);
+            let e = std::mem::take(&mut w.e);
+            let (p, e, out) = rz.collective(w.id, p, Some(e), Some(loss), stop_loss, &|vs, rs| {
+                Some(coll.exchange_mean(vs, rs, c.as_ref(), t))
+            });
+            w.p = p;
+            w.e = e.expect("residual slot");
+            math::axpy(-1.0, &w.p, &mut w.x);
+            let round = out.round.as_ref().expect("psync round");
+            let stats = RoundStats {
+                grad_bits: round.upload_bits_per_worker,
+                model_bits: 0,
+                grad_allreduce: round.allreduce_compatible,
+                model_allreduce: true,
+                synced: true,
+            };
+            (stats, out.stop)
+        }
+        (StepRule::LocalDescent, RoundRule::Resync { c1, h }) => {
+            descent_into(beta, &mut w.m, &w.g, eta, &mut w.p);
+            math::axpy(-1.0, &w.p, &mut w.x);
+            if t % *h != 0 {
+                // free-running local step: no rendezvous, no stop verdict
+                return (RoundStats::default(), false);
+            }
+            qsparse_prepare(w);
+            let p = std::mem::take(&mut w.p);
+            let e = std::mem::take(&mut w.e);
+            let (p, e, out) = rz.collective(w.id, p, Some(e), Some(loss), stop_loss, &|vs, rs| {
+                Some(coll.exchange_mean(vs, rs, c1.as_ref(), t))
+            });
+            w.p = p;
+            w.e = e.expect("residual slot");
+            qsparse_apply(w);
+            let round = out.round.as_ref().expect("psync round");
+            let stats = RoundStats {
+                grad_bits: 0,
+                model_bits: round.upload_bits_per_worker,
+                grad_allreduce: true,
+                model_allreduce: round.allreduce_compatible,
+                synced: true,
+            };
+            (stats, out.stop)
+        }
+        (StepRule::ErrorReset { c2, track_error }, round_rule) => {
+            let track = *track_error;
+            descent_into(beta, &mut w.m, &w.g, eta, &mut w.p);
+            let global = c2.globally_synchronized();
+            let mut stats = RoundStats::default();
+            let out = if global || !track {
+                let p = std::mem::take(&mut w.p);
+                let (p, _, out) = rz.collective(w.id, p, None, Some(loss), stop_loss, &|vs, _| {
+                    Some(coll.psync(vs, None, c2.as_ref(), t))
+                });
+                w.p = p;
+                out
+            } else {
+                let p = std::mem::take(&mut w.p);
+                let r = std::mem::take(&mut w.r);
+                let (p, r, out) = rz.collective(w.id, p, Some(r), Some(loss), stop_loss, &|vs, rs| {
+                    Some(coll.psync(vs, rs, c2.as_ref(), t))
+                });
+                w.p = p;
+                w.r = r.expect("residual slot");
+                out
+            };
+            {
+                let round = out.round.as_ref().expect("psync round");
+                stats.grad_bits = round.upload_bits_per_worker;
+                stats.grad_allreduce = round.allreduce_compatible;
+                cser_apply_grad(w, round, track, global, d);
+            }
+            let stop = out.stop;
+            match round_rule {
+                RoundRule::ErrorSync { c1, h } if t % *h == 0 => {
+                    stats.synced = true;
+                    if c1.globally_synchronized() {
+                        // a globally-synchronized selection ignores both the
+                        // vector and the worker id, so each worker derives
+                        // the identical shared support locally
+                        let sel = c1.select(Ctx { round: t, worker: 0 }, &w.e);
+                        cser_reset_pre_global(w, &sel, d);
+                        let e = std::mem::take(&mut w.e);
+                        let (e, _, out) =
+                            rz.collective(w.id, e, None, None, stop_loss, &|vs, _| {
+                                Some(coll.psync(vs, None, c1.as_ref(), t))
+                            });
+                        w.e = e;
+                        let round = out.round.as_ref().expect("psync round");
+                        debug_assert_eq!(*round.selection_for(w.id), sel);
+                        stats.model_bits = round.upload_bits_per_worker;
+                        stats.model_allreduce = true;
+                        cser_reset_post_global(w, &sel, d);
+                    } else {
+                        w.e_half.copy_from_slice(&w.e);
+                        let e = std::mem::take(&mut w.e);
+                        let r = std::mem::take(&mut w.r);
+                        let (e, r, out) =
+                            rz.collective(w.id, e, Some(r), None, stop_loss, &|vs, rs| {
+                                Some(coll.psync(vs, rs, c1.as_ref(), t))
+                            });
+                        w.e = e;
+                        w.r = r.expect("residual slot");
+                        let round = out.round.as_ref().expect("psync round");
+                        stats.model_bits = round.upload_bits_per_worker;
+                        stats.model_allreduce = round.allreduce_compatible;
+                        cser_reset_post_general(w);
+                    }
+                }
+                RoundRule::ModelSync { c1, h } if t % *h == 0 => {
+                    let x = std::mem::take(&mut w.x);
+                    let (x, _, out) = rz.collective(w.id, x, None, None, stop_loss, &|vs, _| {
+                        Some(coll.psync(vs, None, c1.as_ref(), t))
+                    });
+                    w.x = x;
+                    let round = out.round.as_ref().expect("psync round");
+                    stats.model_bits = round.upload_bits_per_worker;
+                    stats.model_allreduce = round.allreduce_compatible;
+                    stats.synced = true;
+                }
+                _ => {}
+            }
+            (stats, stop)
+        }
+        _ => unreachable!("inconsistent CommPlan: local descent without a resync rule"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressor::{Compressor, Grbs, RandK, TopK};
+
+    type PlanFactory = Box<dyn Fn() -> CommPlan>;
+
+    fn grbs(r: f64, nb: usize, seed: u64) -> Box<dyn Compressor> {
+        Box::new(Grbs::new(r, nb, seed))
+    }
+
+    fn plan_factories() -> Vec<(&'static str, PlanFactory)> {
+        vec![
+            ("sgd", Box::new(CommPlan::full_sgd)),
+            ("ef-grbs", Box::new(|| CommPlan::ef_sgd(grbs(4.0, 6, 3)))),
+            ("ef-topk", Box::new(|| CommPlan::ef_sgd(Box::new(TopK::new(4.0))))),
+            ("local-sgd", Box::new(|| CommPlan::local_sgd(2))),
+            ("qsparse", Box::new(|| CommPlan::qsparse(grbs(2.0, 6, 5), 3))),
+            ("cser", Box::new(|| CommPlan::cser(grbs(2.0, 6, 7), grbs(4.0, 6, 9), 2))),
+            (
+                "cser-perworker",
+                Box::new(|| {
+                    CommPlan::cser(Box::new(RandK::new(4.0)), Box::new(TopK::new(4.0)), 2)
+                }),
+            ),
+            ("csea", Box::new(|| CommPlan::csea(grbs(2.0, 6, 11)))),
+            ("cser-pl", Box::new(|| CommPlan::cser_pl(grbs(2.0, 6, 13), 3))),
+            ("cser2", Box::new(|| CommPlan::cser_impl2(grbs(2.0, 6, 7), grbs(4.0, 6, 9), 2))),
+        ]
+    }
+
+    /// Deterministic per-worker quadratic-with-bias gradient.
+    fn grad_fn(d: usize) -> impl Fn(usize, &[f32], &mut [f32]) -> f32 + Sync {
+        move |w: usize, x: &[f32], out: &mut [f32]| -> f32 {
+            let mut loss = 0.0f32;
+            for (j, (o, xi)) in out.iter_mut().zip(x).enumerate() {
+                *o = xi - 1.0 + 0.05 * ((w * 31 + j) % 7) as f32;
+                loss += *o * *o;
+            }
+            loss / d as f32
+        }
+    }
+
+    #[test]
+    fn resident_matches_central_bit_for_bit() {
+        // The tentpole equivalence: worker-resident execution over the
+        // in-process collective is the central step loop, exactly.
+        let (n, d, steps) = (4, 24, 7);
+        let init: Vec<f32> = (0..d).map(|j| (j as f32 * 0.37).sin()).collect();
+        let gf = grad_fn(d);
+        for (name, mk) in plan_factories() {
+            let mut central = ErrorResetEngine::new(&init, n, 0.9, mk());
+            let mut resident = ErrorResetEngine::new(&init, n, 0.9, mk());
+            let mut grads = vec![vec![0.0f32; d]; n];
+            for _ in 0..steps {
+                for w in 0..n {
+                    gf(w, central.worker_model(w), &mut grads[w]);
+                }
+                central.step(&grads, 0.05);
+            }
+            let reports = resident.run_resident(steps, 0.05, f64::INFINITY, &gf);
+            assert_eq!(reports.len(), steps, "{name}");
+            for i in 0..n {
+                assert_eq!(
+                    central.worker_model(i),
+                    resident.worker_model(i),
+                    "{name}: worker {i} diverged between central and resident"
+                );
+            }
+            // stats agree too (same collectives ran)
+            let mut grads2 = vec![vec![0.0f32; d]; n];
+            let mut central2 = ErrorResetEngine::new(&init, n, 0.9, mk());
+            for rep in &reports {
+                for w in 0..n {
+                    gf(w, central2.worker_model(w), &mut grads2[w]);
+                }
+                let s = central2.step(&grads2, 0.05);
+                assert_eq!(s.grad_bits, rep.stats.grad_bits, "{name}");
+                assert_eq!(s.model_bits, rep.stats.model_bits, "{name}");
+                assert_eq!(s.synced, rep.stats.synced, "{name}");
+            }
+        }
+    }
+
+    #[test]
+    fn resident_single_worker_falls_back_to_central() {
+        let d = 8;
+        let init = vec![0.5f32; d];
+        let gf = grad_fn(d);
+        let mut a = ErrorResetEngine::new(&init, 1, 0.9, CommPlan::full_sgd());
+        let reports = a.run_resident(5, 0.1, f64::INFINITY, &gf);
+        assert_eq!(reports.len(), 5);
+        assert!(reports[4].loss < reports[0].loss, "descends");
+    }
+
+    #[test]
+    fn resident_stop_loss_halts_all_workers_same_step() {
+        let d = 8;
+        let init = vec![0.0f32; d];
+        // gradient pushes loss up forever: loss = t-ish; use an exploding model
+        let gf = as_grad(move |_w: usize, x: &[f32], out: &mut [f32]| -> f32 {
+            for (o, xi) in out.iter_mut().zip(x) {
+                *o = -(xi.abs() + 1.0); // x grows every step
+            }
+            crate::util::math::norm2(x) as f32
+        });
+        let mut a = ErrorResetEngine::new(
+            &init,
+            3,
+            0.0,
+            CommPlan::ef_sgd(Box::new(Grbs::new(1.0, 2, 1))),
+        );
+        let reports = a.run_resident(50, 1.0, 10.0, &gf);
+        assert!(reports.len() < 50, "stop-loss should fire (got {} steps)", reports.len());
+    }
+
+    #[test]
+    fn engine_runs_every_plan_centrally() {
+        let (n, d) = (3, 16);
+        let init = vec![0.2f32; d];
+        for (name, mk) in plan_factories() {
+            let mut o = ErrorResetEngine::new(&init, n, 0.9, mk());
+            let grads = vec![vec![0.01f32; d]; n];
+            for _ in 0..5 {
+                o.step(&grads, 0.1);
+            }
+            let mut xbar = vec![0.0f32; d];
+            o.mean_model(&mut xbar);
+            assert!(xbar.iter().all(|v| v.is_finite()), "{name}");
+            assert!(xbar[0] < 0.2, "{name} did not descend");
+        }
+    }
+}

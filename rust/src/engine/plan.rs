@@ -1,0 +1,279 @@
+//! Declarative synchronization schedules: `CommPlan`.
+//!
+//! A plan says *what communicates when* — which compressor fires on the
+//! per-step gradient path, which fires on the every-H model/error path, and
+//! how the results fold into worker state.  The seven algorithm families the
+//! repo reproduces are all instances:
+//!
+//! | Constructor | Paper algorithm | Step rule | Round rule (every H) |
+//! |-------------|-----------------|-----------|----------------------|
+//! | [`CommPlan::full_sgd`]    | fully-synchronous SGD     | dense average     | — |
+//! | [`CommPlan::ef_sgd`]      | EF-SGD (Alg 10)           | error feedback    | — |
+//! | [`CommPlan::local_sgd`]   | local SGD                 | local descent     | resync (C1 = identity) |
+//! | [`CommPlan::qsparse`]     | QSparse-local-SGD (Alg 1/12) | local descent  | resync (C1) |
+//! | [`CommPlan::cser`]        | CSER / M-CSER (Alg 2/4)   | error reset (C2)  | error sync (C1) |
+//! | [`CommPlan::csea`]        | CSEA (Alg 7)              | error reset (C2=0)| error sync, H = 1 |
+//! | [`CommPlan::cser_pl`]     | CSER-PL (Alg 8)           | error reset (C2=0)| error sync (C1) |
+//! | [`CommPlan::cser_impl2`]  | CSER impl. II (Alg 13)    | error reset, no e | model psync (C1) |
+//!
+//! The plan is *data*; [`super::ErrorResetEngine`] is the single interpreter
+//! that executes any plan, centrally (`DistOptimizer::step`) or
+//! worker-resident (`run_resident`, one OS thread per worker).
+
+use crate::compressor::{Compressor, Zero};
+
+/// What happens on the gradient path, every step.
+pub enum StepRule {
+    /// Dense mean of the raw gradients; momentum applied to the mean; every
+    /// worker holds the identical model (fully-synchronous SGD).
+    DenseAverage,
+    /// Error feedback (Alg 10): q_i = e_i + p_i, exchange mean C(q), apply
+    /// the mean to the (replicated) model, keep the residual as e_i.
+    ErrorFeedback { c: Box<dyn Compressor> },
+    /// Pure local descent x_i ← x_i − p_i; no per-step communication
+    /// (QSparse-local-SGD / local SGD between sync rounds).
+    LocalDescent,
+    /// CSER's bifurcation (Alg 2 line 7–8): PSync(p, C2), apply the synced
+    /// part to x_i and the residual to e_i *immediately*.  With
+    /// `track_error == false` the residual folds into the model implicitly
+    /// (implementation II, Alg 13 — requires globally-synchronized
+    /// sparsifiers).
+    ErrorReset { c2: Box<dyn Compressor>, track_error: bool },
+}
+
+/// What happens on the model/error path, every `h` steps.
+pub enum RoundRule {
+    /// Never (the step rule syncs every step already).
+    None,
+    /// CSER implementation I error reset: PSync(e, C1), fold e′ − e into x.
+    ErrorSync { c1: Box<dyn Compressor>, h: u64 },
+    /// CSER implementation II: PSync the local models directly.
+    ModelSync { c1: Box<dyn Compressor>, h: u64 },
+    /// QSparse full resync: q_i = e_i + (x_i − x̂), exchange mean C1(q),
+    /// advance the shared anchor x̂ and reset every x_i to it.
+    Resync { c1: Box<dyn Compressor>, h: u64 },
+}
+
+/// A fully-specified synchronization schedule.  Build one with the family
+/// constructors below, or assemble the rules directly for new algorithms —
+/// the step/round pair must form one of the supported combinations
+/// ([`CommPlan::validate`], enforced by [`super::ErrorResetEngine::new`]),
+/// so a rule the engine would silently ignore is rejected up front.
+pub struct CommPlan {
+    pub step: StepRule,
+    pub round: RoundRule,
+}
+
+impl CommPlan {
+    /// Fully-synchronous SGD — the R_C = 1 baseline in every table.
+    pub fn full_sgd() -> Self {
+        CommPlan { step: StepRule::DenseAverage, round: RoundRule::None }
+    }
+
+    /// EF-SGD (Alg 10; Karimireddy et al. 2019): compressor `c1` every step.
+    pub fn ef_sgd(c1: Box<dyn Compressor>) -> Self {
+        CommPlan { step: StepRule::ErrorFeedback { c: c1 }, round: RoundRule::None }
+    }
+
+    /// Local SGD: model averaging every `h` steps (C1 = identity).
+    pub fn local_sgd(h: u64) -> Self {
+        Self::qsparse(Box::new(crate::compressor::Identity), h)
+    }
+
+    /// QSparse-local-SGD (Alg 1/12; Basu et al. 2019).
+    pub fn qsparse(c1: Box<dyn Compressor>, h: u64) -> Self {
+        assert!(h >= 1);
+        CommPlan { step: StepRule::LocalDescent, round: RoundRule::Resync { c1, h } }
+    }
+
+    /// Full CSER / M-CSER (Alg 2 / Alg 4, implementation I): gradient
+    /// compressor `c2` every step, error-reset compressor `c1` every `h`.
+    pub fn cser(c1: Box<dyn Compressor>, c2: Box<dyn Compressor>, h: u64) -> Self {
+        assert!(h >= 1);
+        CommPlan {
+            step: StepRule::ErrorReset { c2, track_error: true },
+            round: RoundRule::ErrorSync { c1, h },
+        }
+    }
+
+    /// CSEA (Alg 7): error assimilation — H = 1, no gradient sync path.
+    pub fn csea(c1: Box<dyn Compressor>) -> Self {
+        Self::cser(c1, Box::new(Zero), 1)
+    }
+
+    /// CSER-PL (Alg 8): partial-local SGD — no gradient sync path.
+    pub fn cser_pl(c1: Box<dyn Compressor>, h: u64) -> Self {
+        Self::cser(c1, Box::new(Zero), h)
+    }
+
+    /// CSER implementation II (Alg 13, Appendix A.4): PSync runs directly on
+    /// the local models, no e_i vectors.  Panics unless both compressors are
+    /// globally-synchronized sparsifiers (the equivalence with impl. I only
+    /// holds there).
+    pub fn cser_impl2(c1: Box<dyn Compressor>, c2: Box<dyn Compressor>, h: u64) -> Self {
+        assert!(h >= 1);
+        assert!(
+            c1.globally_synchronized() && c2.globally_synchronized(),
+            "implementation II requires globally-synchronized sparsifiers (Appendix A.4)"
+        );
+        CommPlan {
+            step: StepRule::ErrorReset { c2, track_error: false },
+            round: RoundRule::ModelSync { c1, h },
+        }
+    }
+
+    /// Panic unless the step/round pair is one the engine executes.  Every
+    /// family constructor above produces a valid pair by construction; this
+    /// guards directly-assembled plans against combinations the interpreter
+    /// would otherwise silently ignore (a round rule under `DenseAverage` /
+    /// `ErrorFeedback`) or hit `unreachable!` on (`LocalDescent` without a
+    /// resync rule).
+    pub fn validate(&self) {
+        let ok = matches!(
+            (&self.step, &self.round),
+            (StepRule::DenseAverage | StepRule::ErrorFeedback { .. }, RoundRule::None)
+                | (StepRule::LocalDescent, RoundRule::Resync { .. })
+                | (
+                    StepRule::ErrorReset { track_error: true, .. },
+                    RoundRule::ErrorSync { .. }
+                )
+                | (
+                    StepRule::ErrorReset { track_error: false, .. },
+                    RoundRule::ModelSync { .. }
+                )
+        );
+        assert!(
+            ok,
+            "inconsistent CommPlan: step and round rules do not form a supported schedule \
+             (use the family constructors, or pair DenseAverage/ErrorFeedback with None, \
+             LocalDescent with Resync, ErrorReset with ErrorSync/ModelSync)"
+        );
+    }
+
+    /// Reset cadence (1 when the plan has no round rule).
+    pub fn h(&self) -> u64 {
+        match &self.round {
+            RoundRule::None => 1,
+            RoundRule::ErrorSync { h, .. }
+            | RoundRule::ModelSync { h, .. }
+            | RoundRule::Resync { h, .. } => *h,
+        }
+    }
+
+    /// True when every worker's model is the same vector at every step (SGD,
+    /// EF-SGD) — the engine then reports `mean_model` as an exact copy.
+    pub fn replicated(&self) -> bool {
+        matches!(self.step, StepRule::DenseAverage | StepRule::ErrorFeedback { .. })
+    }
+
+    /// True when the plan maintains per-worker residual errors e_i.
+    pub fn tracks_error(&self) -> bool {
+        match &self.step {
+            StepRule::DenseAverage => false,
+            StepRule::ErrorFeedback { .. } => true,
+            StepRule::LocalDescent => true,
+            StepRule::ErrorReset { track_error, .. } => *track_error,
+        }
+    }
+
+    /// Scratch the CSER impl. I reset path needs: (dense residual buffer,
+    /// dense e_half buffer) — both avoidable when the compressors are
+    /// globally synchronized (the §Perf fast paths).
+    pub(crate) fn reset_scratch(&self) -> (bool, bool) {
+        match (&self.step, &self.round) {
+            (
+                StepRule::ErrorReset { c2, track_error: true },
+                RoundRule::ErrorSync { c1, .. },
+            ) => {
+                let needs_r = !c1.globally_synchronized() || !c2.globally_synchronized();
+                let needs_ehalf = !c1.globally_synchronized();
+                (needs_r, needs_ehalf)
+            }
+            _ => (false, false),
+        }
+    }
+
+    /// Legacy-compatible display name (what the result files and figures
+    /// carried before the engine refactor).
+    pub fn name(&self) -> String {
+        match (&self.step, &self.round) {
+            (StepRule::DenseAverage, _) => "sgd".into(),
+            (StepRule::ErrorFeedback { c }, _) => format!("ef-sgd[{}]", c.name()),
+            (StepRule::LocalDescent, RoundRule::Resync { c1, h }) => {
+                format!("qsparse[{},H={}]", c1.name(), h)
+            }
+            (StepRule::ErrorReset { c2, track_error: true }, RoundRule::ErrorSync { c1, h }) => {
+                format!("cser[{},{},H={}]", c1.name(), c2.name(), h)
+            }
+            (StepRule::ErrorReset { c2, track_error: false }, RoundRule::ModelSync { c1, h }) => {
+                format!("cser2[{},{},H={}]", c1.name(), c2.name(), h)
+            }
+            _ => "custom-plan".into(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressor::Grbs;
+
+    #[test]
+    fn names_match_legacy_formats() {
+        assert_eq!(CommPlan::full_sgd().name(), "sgd");
+        let p = CommPlan::cser(Box::new(Grbs::new(2.0, 4, 1)), Box::new(Grbs::new(4.0, 4, 2)), 3);
+        assert!(p.name().starts_with("cser[") && p.name().ends_with(",H=3]"));
+        assert!(CommPlan::local_sgd(4).name().contains("identity,H=4"));
+    }
+
+    #[test]
+    #[should_panic(expected = "globally-synchronized")]
+    fn impl2_rejects_per_worker_compressors() {
+        let _ = CommPlan::cser_impl2(
+            Box::new(crate::compressor::RandK::new(2.0)),
+            Box::new(Zero),
+            2,
+        );
+    }
+
+    #[test]
+    fn family_constructors_all_validate() {
+        CommPlan::full_sgd().validate();
+        CommPlan::ef_sgd(Box::new(Grbs::new(2.0, 4, 1))).validate();
+        CommPlan::local_sgd(2).validate();
+        CommPlan::qsparse(Box::new(Grbs::new(2.0, 4, 1)), 2).validate();
+        CommPlan::cser(Box::new(Grbs::new(2.0, 4, 1)), Box::new(Zero), 2).validate();
+        CommPlan::cser_impl2(Box::new(Grbs::new(2.0, 4, 1)), Box::new(Zero), 2).validate();
+    }
+
+    #[test]
+    #[should_panic(expected = "inconsistent CommPlan")]
+    fn validate_rejects_silently_ignored_round_rules() {
+        CommPlan {
+            step: StepRule::ErrorFeedback { c: Box::new(Grbs::new(2.0, 4, 1)) },
+            round: RoundRule::ModelSync { c1: Box::new(Grbs::new(2.0, 4, 1)), h: 2 },
+        }
+        .validate();
+    }
+
+    #[test]
+    fn plan_metadata() {
+        assert!(CommPlan::full_sgd().replicated());
+        assert!(!CommPlan::full_sgd().tracks_error());
+        let csea = CommPlan::csea(Box::new(Grbs::new(2.0, 4, 1)));
+        assert_eq!(csea.h(), 1);
+        assert!(csea.tracks_error() && !csea.replicated());
+        let q = CommPlan::qsparse(Box::new(Grbs::new(2.0, 4, 1)), 5);
+        assert_eq!(q.h(), 5);
+        // GRBS both sides → no dense reset scratch (the §Perf fast path)
+        let c = CommPlan::cser(Box::new(Grbs::new(2.0, 4, 1)), Box::new(Grbs::new(4.0, 4, 2)), 2);
+        assert_eq!(c.reset_scratch(), (false, false));
+        // per-worker C1 → both dense buffers
+        let c = CommPlan::cser(
+            Box::new(crate::compressor::RandK::new(2.0)),
+            Box::new(Grbs::new(4.0, 4, 2)),
+            2,
+        );
+        assert_eq!(c.reset_scratch(), (true, true));
+    }
+}

@@ -1,0 +1,289 @@
+//! The rendezvous: where worker-resident threads meet for a collective.
+//!
+//! In worker-resident mode every worker is a long-lived OS thread that owns
+//! its [`super::WorkerState`] and runs the whole iteration locally.  The only
+//! cross-worker interaction is the collective itself: each thread deposits
+//! ownership of its message vector(s) here, the **last thread to arrive runs
+//! the collective in place** (over whatever [`crate::transport::Collective`]
+//! backend is installed — the in-process reference or the threaded wire
+//! layer), and every thread picks its vectors back up together with the
+//! shared round outcome.  Between collectives the threads are completely
+//! uncoordinated — a worker three local steps ahead of a straggler is fine
+//! until the schedule says they must meet (no lock-step barrier anywhere in
+//! the trainer).
+//!
+//! Losses piggyback on the deposit: the leader folds them into a mean and a
+//! divergence-stop decision, so every worker leaves the same collective with
+//! the same verdict and the fleet stops on the same step — without any extra
+//! synchronization point.
+
+use crate::collective::PsyncRound;
+use std::sync::{Arc, Condvar, Mutex};
+
+/// The closure the arrival leader runs over all workers' deposited vectors
+/// (in worker order) — typically a [`crate::transport::Collective`] call.
+pub(crate) type LeaderOp<'a> =
+    &'a dyn Fn(&mut [Vec<f32>], Option<&mut [Vec<f32>]>) -> Option<PsyncRound>;
+
+/// What the leader publishes to every worker after running a collective.
+pub(crate) struct Outcome {
+    /// The round info (None for leader ops that don't run PSync, e.g. the
+    /// dense gradient mean).
+    pub round: Option<PsyncRound>,
+    /// True when the mean deposited loss tripped the divergence threshold —
+    /// all workers observe the same verdict and stop on the same step.
+    pub stop: bool,
+}
+
+struct State {
+    vs: Vec<Option<Vec<f32>>>,
+    rs: Vec<Option<Vec<f32>>>,
+    /// Per-worker loss votes for this round; `None` = not participating
+    /// (distinct from a genuine NaN loss, which must trip the brake).
+    losses: Vec<Option<f64>>,
+    arrived: usize,
+    picked: usize,
+    outcome: Option<Arc<Outcome>>,
+    /// Set when a worker thread unwinds outside a collective: waiters must
+    /// panic instead of blocking on a rendezvous that can never complete.
+    poisoned: bool,
+}
+
+pub(crate) struct Rendezvous {
+    n: usize,
+    state: Mutex<State>,
+    cv: Condvar,
+}
+
+impl Rendezvous {
+    pub fn new(n: usize) -> Self {
+        Rendezvous {
+            n,
+            state: Mutex::new(State {
+                vs: (0..n).map(|_| None).collect(),
+                rs: (0..n).map(|_| None).collect(),
+                losses: vec![None; n],
+                arrived: 0,
+                picked: 0,
+                outcome: None,
+                poisoned: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Mark the fleet as broken (a worker died) and wake every waiter so
+    /// they panic out of their `collective` calls instead of deadlocking;
+    /// `std::thread::scope` then propagates the original panic.
+    pub fn poison(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.poisoned = true;
+        self.cv.notify_all();
+    }
+
+    /// Deposit this worker's vectors and block until the collective has run.
+    ///
+    /// All `n` workers must call this the same number of times with the same
+    /// shape of arguments (`r` present or absent, equivalent `op`) — true by
+    /// construction since every worker executes the same `CommPlan` schedule
+    /// at the same local step count.  Only the leader's `op` closure is
+    /// invoked, over the vectors of **all** workers in worker order, exactly
+    /// like the central path.  `loss` is `None` for collectives that should
+    /// not participate in the stop decision (e.g. the second collective of a
+    /// reset step); a genuine non-finite loss — NaN included — trips the
+    /// brake.
+    pub fn collective(
+        &self,
+        worker: usize,
+        v: Vec<f32>,
+        r: Option<Vec<f32>>,
+        loss: Option<f64>,
+        stop_loss: f64,
+        op: LeaderOp,
+    ) -> (Vec<f32>, Option<Vec<f32>>, Arc<Outcome>) {
+        let with_resid = r.is_some();
+        let mut st = self.state.lock().unwrap();
+        // Wait for the previous round to fully drain before depositing.
+        while st.outcome.is_some() && !st.poisoned {
+            st = self.cv.wait(st).unwrap();
+        }
+        assert!(!st.poisoned, "resident fleet poisoned by a worker panic");
+        st.vs[worker] = Some(v);
+        st.rs[worker] = r;
+        st.losses[worker] = loss;
+        st.arrived += 1;
+        if st.arrived == self.n {
+            // Leader: every other worker is parked on the condvar, so running
+            // the collective while holding the lock serializes nothing that
+            // could have run concurrently.
+            let mut vs: Vec<Vec<f32>> =
+                st.vs.iter_mut().map(|s| s.take().expect("deposit")).collect();
+            let mut rs: Option<Vec<Vec<f32>>> = if with_resid {
+                Some(st.rs.iter_mut().map(|s| s.take().expect("resid deposit")).collect())
+            } else {
+                None
+            };
+            let round = op(&mut vs, rs.as_deref_mut());
+            for (slot, v) in st.vs.iter_mut().zip(vs) {
+                *slot = Some(v);
+            }
+            if let Some(rs) = rs {
+                for (slot, r) in st.rs.iter_mut().zip(rs) {
+                    *slot = Some(r);
+                }
+            }
+            let votes: Vec<f64> = st.losses.iter().filter_map(|l| *l).collect();
+            let stop = if votes.is_empty() {
+                false
+            } else {
+                let mean = votes.iter().sum::<f64>() / votes.len() as f64;
+                !mean.is_finite() || mean > stop_loss
+            };
+            st.outcome = Some(Arc::new(Outcome { round, stop }));
+            self.cv.notify_all();
+        } else {
+            while st.outcome.is_none() && !st.poisoned {
+                st = self.cv.wait(st).unwrap();
+            }
+            assert!(!st.poisoned, "resident fleet poisoned by a worker panic");
+        }
+        // Pickup: reclaim our vectors; the last to leave resets the round.
+        let v = st.vs[worker].take().expect("pickup");
+        let r = if with_resid { Some(st.rs[worker].take().expect("resid pickup")) } else { None };
+        let out = Arc::clone(st.outcome.as_ref().expect("outcome"));
+        st.picked += 1;
+        if st.picked == self.n {
+            st.arrived = 0;
+            st.picked = 0;
+            st.outcome = None;
+            for l in st.losses.iter_mut() {
+                *l = None;
+            }
+            self.cv.notify_all();
+        }
+        (v, r, out)
+    }
+}
+
+/// RAII poison trigger: lives on each worker thread's stack for the whole
+/// resident run; if the thread unwinds (user gradient panic, poisoned shard
+/// mutex, debug assert) the guard poisons the rendezvous on drop so the
+/// surviving workers panic out of their waits instead of deadlocking, and
+/// the scope join re-raises the original panic.
+pub(crate) struct PoisonGuard<'a>(&'a Rendezvous);
+
+impl<'a> PoisonGuard<'a> {
+    pub fn new(rz: &'a Rendezvous) -> Self {
+        PoisonGuard(rz)
+    }
+}
+
+impl Drop for PoisonGuard<'_> {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.0.poison();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn leader_sees_all_vectors_in_worker_order() {
+        let n = 4;
+        let rz = Rendezvous::new(n);
+        let outs: Vec<Vec<f32>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..n)
+                .map(|w| {
+                    let rz = &rz;
+                    s.spawn(move || {
+                        let v = vec![w as f32; 2];
+                        let op = |vs: &mut [Vec<f32>], _: Option<&mut [Vec<f32>]>| {
+                            // leader: sum all vectors into every slot
+                            let sum: f32 = vs.iter().map(|v| v[0]).sum();
+                            for (i, v) in vs.iter_mut().enumerate() {
+                                assert_eq!(v[0], i as f32, "slot order");
+                                v[0] = sum;
+                            }
+                            None::<PsyncRound>
+                        };
+                        let (v, _, _) =
+                            rz.collective(w, v, None, Some(0.0), f64::INFINITY, &op);
+                        v
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (w, v) in outs.iter().enumerate() {
+            assert_eq!(v[0], 6.0, "worker {w} got the aggregate");
+            assert_eq!(v[1], w as f32, "untouched coords stay worker-local");
+        }
+    }
+
+    #[test]
+    fn repeated_rounds_do_not_deadlock() {
+        let n = 3;
+        let rz = Rendezvous::new(n);
+        std::thread::scope(|s| {
+            for w in 0..n {
+                let rz = &rz;
+                s.spawn(move || {
+                    for round in 0..50 {
+                        let v = vec![round as f32];
+                        let (v, _, _) =
+                            rz.collective(w, v, None, Some(0.0), f64::INFINITY, &|_, _| None);
+                        assert_eq!(v[0], round as f32);
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn worker_panic_poisons_instead_of_deadlocking() {
+        let rz = Rendezvous::new(2);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            std::thread::scope(|s| {
+                s.spawn(|| {
+                    let _g = PoisonGuard::new(&rz);
+                    panic!("worker down");
+                });
+                s.spawn(|| {
+                    let _g = PoisonGuard::new(&rz);
+                    // would deadlock forever without the poison protocol
+                    let _ = rz.collective(1, vec![0.0], None, None, f64::INFINITY, &|_, _| None);
+                });
+            });
+        }));
+        assert!(result.is_err(), "worker panic must propagate, not deadlock");
+    }
+
+    #[test]
+    fn stop_verdict_is_uniform() {
+        let n = 2;
+        let rz = Rendezvous::new(n);
+        let stops: Vec<bool> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..n)
+                .map(|w| {
+                    let rz = &rz;
+                    s.spawn(move || {
+                        let (_, _, out) = rz.collective(
+                            w,
+                            vec![0.0],
+                            None,
+                            Some(10.0 + w as f64), // mean 10.5 > 5.0 threshold
+                            5.0,
+                            &|_, _| None,
+                        );
+                        out.stop
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(stops, vec![true, true]);
+    }
+}

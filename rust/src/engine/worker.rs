@@ -1,0 +1,128 @@
+//! Per-worker optimizer state: everything one worker owns.
+//!
+//! The seed implementations kept `Vec<Vec<f32>>` matrices inside each
+//! algorithm struct — an omniscient layout that forces the whole step through
+//! one `&mut self`.  `WorkerState` turns that inside out: one struct per
+//! worker holding *its* model, error, momentum and scratch.  It is `Send`, so
+//! in the worker-resident execution mode each OS thread takes `&mut` to its
+//! own state and runs gradient → compress → sync → apply end to end, meeting
+//! the other workers only at the collective.
+//!
+//! Replicated plans (SGD, EF-SGD) keep a copy of the logically-shared model
+//! in every worker: each worker applies the identical mean update, so the
+//! copies never diverge (bit-exactly — the collective hands every worker the
+//! same aggregate), and no cross-worker reads are ever needed.
+
+/// One worker's slice of the optimizer state.  Vectors the active
+/// [`super::CommPlan`] does not need are left empty (`e` for impl. II /
+/// plain SGD, `m` at β = 0, the reset scratch on the GRBS fast path).
+pub struct WorkerState {
+    pub id: usize,
+    /// Local model x_i — what this worker's next gradient is evaluated at.
+    pub x: Vec<f32>,
+    /// Residual error e_i (Lemma 1: x_i − e_i is the consensus trajectory).
+    pub e: Vec<f32>,
+    /// Momentum buffer m_i (Sutskever form, paper §3.2).
+    pub m: Vec<f32>,
+    /// Consensus anchor x̂ for QSparse resyncs (identical on every worker).
+    pub xhat: Vec<f32>,
+    /// Descent / message scratch p_i (the vector that travels).
+    pub p: Vec<f32>,
+    /// Residual scratch r_i (CSER impl. I with per-worker compressors).
+    pub r: Vec<f32>,
+    /// Pre-reset error copy (CSER impl. I general reset path).
+    pub e_half: Vec<f32>,
+    /// Gradient buffer (worker-resident mode computes gradients in-thread;
+    /// sized lazily so central-mode engines don't pay for it).
+    pub g: Vec<f32>,
+}
+
+impl WorkerState {
+    /// Nesterov momentum in the Sutskever form (identical arithmetic to the
+    /// seed `Momentum::descent`, per worker):
+    ///   m ← β m + g,   out = η(β m + g);   out = η g at β = 0.
+    pub fn descent(&mut self, beta: f32, g: &[f32], eta: f32) {
+        descent_into(beta, &mut self.m, g, eta, &mut self.p)
+    }
+}
+
+/// The momentum kernel shared by every plan (and by the deprecated
+/// `optimizer::Momentum` wrapper): p = η(β m + g), m updated in place.
+pub fn descent_into(beta: f32, m: &mut [f32], g: &[f32], eta: f32, out: &mut [f32]) {
+    if beta == 0.0 {
+        for (o, gi) in out.iter_mut().zip(g) {
+            *o = eta * *gi;
+        }
+        return;
+    }
+    for ((o, mi), gi) in out.iter_mut().zip(m.iter_mut()).zip(g) {
+        *mi = beta * *mi + *gi;
+        *o = eta * (beta * *mi + *gi);
+    }
+}
+
+/// Move one field's vector out of every worker (for a collective call over
+/// `&mut [Vec<f32>]`) without copying; restore with [`put_field`].
+pub(crate) fn take_field(
+    workers: &mut [WorkerState],
+    f: impl Fn(&mut WorkerState) -> &mut Vec<f32>,
+) -> Vec<Vec<f32>> {
+    workers.iter_mut().map(|w| std::mem::take(f(w))).collect()
+}
+
+pub(crate) fn put_field(
+    workers: &mut [WorkerState],
+    vecs: Vec<Vec<f32>>,
+    f: impl Fn(&mut WorkerState) -> &mut Vec<f32>,
+) {
+    debug_assert_eq!(workers.len(), vecs.len());
+    for (w, v) in workers.iter_mut().zip(vecs) {
+        *f(w) = v;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn descent_beta_zero_is_plain_direction() {
+        let mut m: Vec<f32> = vec![];
+        let mut p = vec![0.0f32; 3];
+        descent_into(0.0, &mut m, &[1.0, -2.0, 3.0], 0.1, &mut p);
+        assert_eq!(p, vec![0.1, -0.2, 0.3]);
+    }
+
+    #[test]
+    fn descent_matches_sutskever_recursion() {
+        let (beta, eta) = (0.9f32, 0.5f32);
+        let mut m = vec![0.0f32];
+        let mut p = vec![0.0f32];
+        descent_into(beta, &mut m, &[2.0], eta, &mut p);
+        assert!((p[0] - 1.9).abs() < 1e-6);
+        descent_into(beta, &mut m, &[1.0], eta, &mut p);
+        assert!((p[0] - 1.76).abs() < 1e-6);
+    }
+
+    #[test]
+    fn take_put_roundtrip_preserves_buffers() {
+        let mut ws: Vec<WorkerState> = (0..3)
+            .map(|id| WorkerState {
+                id,
+                x: vec![id as f32; 4],
+                e: vec![],
+                m: vec![],
+                xhat: vec![],
+                p: vec![id as f32 + 10.0; 4],
+                r: vec![],
+                e_half: vec![],
+                g: vec![],
+            })
+            .collect();
+        let ps = take_field(&mut ws, |w| &mut w.p);
+        assert!(ws.iter().all(|w| w.p.is_empty()));
+        assert_eq!(ps[2], vec![12.0; 4]);
+        put_field(&mut ws, ps, |w| &mut w.p);
+        assert_eq!(ws[1].p, vec![11.0; 4]);
+    }
+}

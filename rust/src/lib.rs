@@ -5,16 +5,22 @@
 //! three-layer Rust + JAX + Pallas stack:
 //!
 //! * **Layer 3 (this crate)** — the distributed-training coordinator: the
-//!   paper's algorithms ([`optimizer`]), the GRBS compressor family
-//!   ([`compressor`]), partial synchronization ([`collective`]), the wire
-//!   layer ([`transport`]: bit-packed codecs for every compressor payload
-//!   plus swappable collective backends — the in-process reference and a
+//!   worker-centric optimizer engine ([`engine`]: per-worker
+//!   `WorkerState` + declarative `CommPlan` sync schedules executed by one
+//!   generic `ErrorResetEngine`, centrally or as worker-resident threads
+//!   that meet only at the collective), the paper's algorithm families as
+//!   plan constructors with deprecated legacy wrappers ([`optimizer`]), the
+//!   GRBS compressor family ([`compressor`]), partial synchronization
+//!   ([`collective`]), the wire layer ([`transport`]: bit-packed codecs for
+//!   every compressor payload — encoded bits ≡ accounted bits — plus
+//!   swappable collective backends: the in-process reference, a
 //!   multi-threaded ring-allreduce/parameter-server backend moving real
-//!   serialized messages), the network cost/accounting substrate
-//!   ([`network`]), data sharding ([`data`]), a fast pure-Rust model zoo for
-//!   the paper's sweeps ([`models`]), the PJRT runtime that executes
-//!   AOT-compiled JAX/Pallas artifacts ([`runtime`]), the training loop
-//!   ([`coordinator`]) and one harness per paper table/figure ([`harness`]).
+//!   serialized messages, and its worker-resident mode), the network
+//!   cost/accounting substrate ([`network`]), data sharding ([`data`]), a
+//!   fast pure-Rust model zoo for the paper's sweeps ([`models`]), the PJRT
+//!   runtime that executes AOT-compiled JAX/Pallas artifacts ([`runtime`]),
+//!   the training loop ([`coordinator`]) and one harness per paper
+//!   table/figure ([`harness`]).
 //! * **Layer 2** — `python/compile/model.py`: transformer LM fwd/bwd over a
 //!   flat parameter vector, AOT-lowered to HLO text (build-time only).
 //! * **Layer 1** — `python/compile/kernels/`: Pallas kernels (GRBS block
@@ -27,6 +33,7 @@ pub mod collective;
 pub mod compressor;
 pub mod config;
 pub mod coordinator;
+pub mod engine;
 pub mod data;
 pub mod harness;
 pub mod models;

@@ -3,7 +3,7 @@
 //!
 //! Each iteration (worker i):
 //!
-//!   p_i = η(β m_i + g_i)                       (Momentum; η g_i at β=0)
+//!   p_i = η(β m_i + g_i)                       (momentum; η g_i at β=0)
 //!   p'_i, r_i = PSync(p_i, C2)                 (partial GRADIENT sync)
 //!   x_i ← x_i − p'_i        e_i ← e_i − r_i    (residual applied to the
 //!                                               model IMMEDIATELY — the
@@ -21,28 +21,15 @@
 //!   * `Cser::cser_pl` — C2 = 0         (Algorithm 8: partial-local SGD)
 //!   * C1 = identity, C2 = 0            — local SGD (model averaging)
 //!   * C1 = C2 = identity               — fully-synchronous SGD
+//!
+//! Deprecated thin wrapper over [`crate::engine::ErrorResetEngine`] with
+//! [`CommPlan::cser`] / [`CommPlan::csea`] / [`CommPlan::cser_pl`]; prefer
+//! building the plan directly.
 
-use super::{DistOptimizer, Momentum, RoundStats};
-use crate::compressor::{Compressor, Zero};
-use crate::transport::Collective;
-use crate::util::math;
-use std::sync::Arc;
+use crate::compressor::Compressor;
+use crate::engine::{CommPlan, ErrorResetEngine};
 
-pub struct Cser {
-    n: usize,
-    h: u64,
-    x: Vec<Vec<f32>>,
-    e: Vec<Vec<f32>>,
-    momentum: Momentum,
-    c1: Box<dyn Compressor>,
-    c2: Box<dyn Compressor>,
-    coll: Arc<dyn Collective>,
-    t: u64,
-    // scratch (steady-state: zero allocations per step)
-    p: Vec<Vec<f32>>,
-    r: Vec<Vec<f32>>,
-    e_half: Vec<Vec<f32>>,
-}
+pub struct Cser(ErrorResetEngine);
 
 impl Cser {
     /// Full CSER/M-CSER: gradient compressor `c2` every step, error-reset
@@ -55,157 +42,27 @@ impl Cser {
         c2: Box<dyn Compressor>,
         h: u64,
     ) -> Self {
-        assert!(h >= 1);
-        let d = init.len();
-        // Dense residual/e_half scratch is only needed on the general path
-        // (per-worker compressors); GRBS configs skip the 2×n×d allocation.
-        let needs_r = !c1.globally_synchronized() || !c2.globally_synchronized();
-        let needs_ehalf = !c1.globally_synchronized();
-        Cser {
-            n,
-            h,
-            x: vec![init.to_vec(); n],
-            e: vec![vec![0.0; d]; n],
-            momentum: Momentum::new(beta, n, d),
-            c1,
-            c2,
-            coll: crate::transport::default_collective(),
-            t: 0,
-            p: vec![vec![0.0; d]; n],
-            r: if needs_r { vec![vec![0.0; d]; n] } else { vec![] },
-            e_half: if needs_ehalf { vec![vec![0.0; d]; n] } else { vec![] },
-        }
+        Cser(ErrorResetEngine::new(init, n, beta, CommPlan::cser(c1, c2, h)))
     }
 
     /// CSEA (Algorithm 7): error assimilation — H=1, no gradient sync path.
     pub fn csea(init: &[f32], n: usize, beta: f32, c1: Box<dyn Compressor>) -> Self {
-        Self::new(init, n, beta, c1, Box::new(Zero), 1)
+        Cser(ErrorResetEngine::new(init, n, beta, CommPlan::csea(c1)))
     }
 
     /// CSER-PL (Algorithm 8): partial-local SGD — no gradient sync path.
     pub fn cser_pl(init: &[f32], n: usize, beta: f32, c1: Box<dyn Compressor>, h: u64) -> Self {
-        Self::new(init, n, beta, c1, Box::new(Zero), h)
+        Cser(ErrorResetEngine::new(init, n, beta, CommPlan::cser_pl(c1, h)))
     }
 }
 
-impl DistOptimizer for Cser {
-    fn step(&mut self, grads: &[Vec<f32>], eta: f32) -> RoundStats {
-        debug_assert_eq!(grads.len(), self.n);
-        self.t += 1;
-        let mut stats = RoundStats::default();
-
-        // p_i = η(β m_i + g_i)
-        for i in 0..self.n {
-            self.momentum.descent(i, &grads[i], eta, &mut self.p[i]);
-        }
-
-        // Partial gradient synchronization: p -> p' (in place).
-        //
-        // Fast path (globally-synchronized sparsifiers, §Perf): the residual
-        // r_i equals p'_i on the complement of the shared support (there
-        // PSync leaves p untouched), so e can be updated from the complement
-        // ranges directly — no dense residual buffers, no extra memcpy.
-        let global = self.c2.globally_synchronized();
-        let round = if global {
-            self.coll.psync(&mut self.p, None, self.c2.as_ref(), self.t)
-        } else {
-            self.coll.psync(&mut self.p, Some(&mut self.r), self.c2.as_ref(), self.t)
-        };
-        stats.grad_bits = round.upload_bits_per_worker;
-        stats.grad_allreduce = round.allreduce_compatible;
-
-        // x_i ← x_i − p'_i ;  e_i ← e_i − r_i   (error applied immediately)
-        for i in 0..self.n {
-            math::axpy(-1.0, &self.p[i], &mut self.x[i]);
-            if global {
-                let (p_i, e_i) = (&self.p[i], &mut self.e[i]);
-                round.for_each_unselected(i, p_i.len(), |s, t| {
-                    math::axpy(-1.0, &p_i[s..t], &mut e_i[s..t]);
-                });
-            } else {
-                math::axpy(-1.0, &self.r[i], &mut self.e[i]);
-            }
-        }
-
-        if self.t % self.h == 0 {
-            // error reset: e'_i, e_i ← PSync(e_half_i, C1);
-            //              x_i ← x_half_i − e_half_i + e'_i
-            stats.synced = true;
-            if self.c1.globally_synchronized() {
-                // Off the shared support e' == e_half, so x only changes on
-                // the selected ranges and the new residual zeroes there:
-                // O(n·d/R1) total work, zero copies (§Perf).
-                let sel = self.c1.select(
-                    crate::compressor::Ctx { round: self.t, worker: 0 },
-                    &self.e[0],
-                );
-                let d = self.x[0].len();
-                for i in 0..self.n {
-                    let (x_i, e_i) = (&mut self.x[i], &self.e[i]);
-                    sel.for_each_range(d, |s, t| {
-                        math::axpy(-1.0, &e_i[s..t], &mut x_i[s..t]);
-                    });
-                }
-                // psync draws the identical selection (same round, global).
-                let round = self.coll.psync(&mut self.e, None, self.c1.as_ref(), self.t);
-                debug_assert_eq!(round.selections[0], sel);
-                stats.model_bits = round.upload_bits_per_worker;
-                stats.model_allreduce = true;
-                for i in 0..self.n {
-                    let (x_i, e_i) = (&mut self.x[i], &mut self.e[i]);
-                    sel.for_each_range(d, |s, t| {
-                        math::axpy(1.0, &e_i[s..t], &mut x_i[s..t]);
-                        math::fill(&mut e_i[s..t], 0.0);
-                    });
-                }
-            } else {
-                // General path (Algorithm 2 verbatim, any δ-approximate
-                // compressor): dense e_half copy + residual tracking.
-                for i in 0..self.n {
-                    self.e_half[i].copy_from_slice(&self.e[i]);
-                }
-                // after psync: e[i] holds e'_i, r[i] holds the new residual
-                let round =
-                    self.coll.psync(&mut self.e, Some(&mut self.r), self.c1.as_ref(), self.t);
-                stats.model_bits = round.upload_bits_per_worker;
-                stats.model_allreduce = round.allreduce_compatible;
-                for i in 0..self.n {
-                    // x += e' − e_half
-                    math::axpy(1.0, &self.e[i], &mut self.x[i]);
-                    math::axpy(-1.0, &self.e_half[i], &mut self.x[i]);
-                    std::mem::swap(&mut self.e[i], &mut self.r[i]); // e ← new residual
-                }
-            }
-        }
-        stats
-    }
-
-    fn set_collective(&mut self, c: Arc<dyn Collective>) {
-        self.coll = c;
-    }
-
-    fn n(&self) -> usize {
-        self.n
-    }
-    fn dim(&self) -> usize {
-        self.x[0].len()
-    }
-    fn worker_model(&self, i: usize) -> &[f32] {
-        &self.x[i]
-    }
-    fn local_error(&self, i: usize) -> Option<&[f32]> {
-        Some(&self.e[i])
-    }
-    fn name(&self) -> String {
-        format!("cser[{},{},H={}]", self.c1.name(), self.c2.name(), self.h)
-    }
-}
+super::delegate_to_engine!(Cser);
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::compressor::{Grbs, Identity, RandK, TopK};
-    use crate::optimizer::{FullSgd, QsparseLocalSgd};
+    use crate::compressor::{Grbs, Identity, RandK, TopK, Zero};
+    use crate::optimizer::{DistOptimizer, FullSgd, QsparseLocalSgd};
     use crate::util::prop::{forall, slices_close, Gen};
 
     fn random_grads(g: &mut Gen, n: usize, d: usize) -> Vec<Vec<f32>> {

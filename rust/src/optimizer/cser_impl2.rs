@@ -14,26 +14,16 @@
 //! scratch) — the paper's "less memory footprint" claim for GRBS.  The
 //! equivalence with implementation I under globally-synchronized sparsifiers
 //! is verified by a property test below; it does NOT hold for per-worker
-//! compressors (rand-k/top-k), which is why the constructor asserts
+//! compressors (rand-k/top-k), which is why the plan constructor asserts
 //! `globally_synchronized()`.
+//!
+//! Deprecated thin wrapper over [`crate::engine::ErrorResetEngine`] with
+//! [`CommPlan::cser_impl2`]; prefer building the plan directly.
 
-use super::{DistOptimizer, Momentum, RoundStats};
 use crate::compressor::Compressor;
-use crate::transport::Collective;
-use crate::util::math;
-use std::sync::Arc;
+use crate::engine::{CommPlan, ErrorResetEngine};
 
-pub struct CserImpl2 {
-    n: usize,
-    h: u64,
-    x: Vec<Vec<f32>>,
-    momentum: Momentum,
-    c1: Box<dyn Compressor>,
-    c2: Box<dyn Compressor>,
-    coll: Arc<dyn Collective>,
-    t: u64,
-    p: Vec<Vec<f32>>,
-}
+pub struct CserImpl2(ErrorResetEngine);
 
 impl CserImpl2 {
     pub fn new(
@@ -44,72 +34,17 @@ impl CserImpl2 {
         c2: Box<dyn Compressor>,
         h: u64,
     ) -> Self {
-        assert!(h >= 1);
-        assert!(
-            c1.globally_synchronized() && c2.globally_synchronized(),
-            "implementation II requires globally-synchronized sparsifiers (Appendix A.4)"
-        );
-        let d = init.len();
-        CserImpl2 {
-            n,
-            h,
-            x: vec![init.to_vec(); n],
-            momentum: Momentum::new(beta, n, d),
-            c1,
-            c2,
-            coll: crate::transport::default_collective(),
-            t: 0,
-            p: vec![vec![0.0; d]; n],
-        }
+        CserImpl2(ErrorResetEngine::new(init, n, beta, CommPlan::cser_impl2(c1, c2, h)))
     }
 }
 
-impl DistOptimizer for CserImpl2 {
-    fn step(&mut self, grads: &[Vec<f32>], eta: f32) -> RoundStats {
-        debug_assert_eq!(grads.len(), self.n);
-        self.t += 1;
-        let mut stats = RoundStats::default();
-        for i in 0..self.n {
-            self.momentum.descent(i, &grads[i], eta, &mut self.p[i]);
-        }
-        let round = self.coll.psync(&mut self.p, None, self.c2.as_ref(), self.t);
-        stats.grad_bits = round.upload_bits_per_worker;
-        stats.grad_allreduce = round.allreduce_compatible;
-        for i in 0..self.n {
-            math::axpy(-1.0, &self.p[i], &mut self.x[i]);
-        }
-        if self.t % self.h == 0 {
-            let round = self.coll.psync(&mut self.x, None, self.c1.as_ref(), self.t);
-            stats.model_bits = round.upload_bits_per_worker;
-            stats.model_allreduce = round.allreduce_compatible;
-            stats.synced = true;
-        }
-        stats
-    }
-
-    fn set_collective(&mut self, c: Arc<dyn Collective>) {
-        self.coll = c;
-    }
-
-    fn n(&self) -> usize {
-        self.n
-    }
-    fn dim(&self) -> usize {
-        self.x[0].len()
-    }
-    fn worker_model(&self, i: usize) -> &[f32] {
-        &self.x[i]
-    }
-    fn name(&self) -> String {
-        format!("cser2[{},{},H={}]", self.c1.name(), self.c2.name(), self.h)
-    }
-}
+super::delegate_to_engine!(CserImpl2);
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::compressor::{Grbs, Zero};
-    use crate::optimizer::Cser;
+    use crate::optimizer::{Cser, DistOptimizer};
     use crate::util::prop::{forall, slices_close, Gen};
 
     #[test]

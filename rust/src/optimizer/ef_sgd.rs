@@ -6,96 +6,27 @@
 //! models stay identical — the residual is fed back with one step of delay,
 //! never applied to the model directly; contrast with CSEA's error reset).
 //!
-//! The `q'` aggregation runs over the [`Collective`] abstraction
-//! (`exchange_mean`): each worker's message q_i is materialized, the backend
-//! moves the compressed parts (in-process reference or real threaded
-//! collectives), and the residuals land back in `e` — the same wiring a
-//! physical EF-SGD deployment has.
+//! Deprecated thin wrapper over [`crate::engine::ErrorResetEngine`] with
+//! [`CommPlan::ef_sgd`]; prefer building the plan directly.
 
-use super::{DistOptimizer, Momentum, RoundStats};
 use crate::compressor::Compressor;
-use crate::transport::Collective;
-use crate::util::math;
-use std::sync::Arc;
+use crate::engine::{CommPlan, ErrorResetEngine};
 
-pub struct EfSgd {
-    n: usize,
-    x: Vec<f32>,
-    e: Vec<Vec<f32>>,
-    momentum: Momentum,
-    c1: Box<dyn Compressor>,
-    coll: Arc<dyn Collective>,
-    t: u64,
-    /// Per-worker message buffers (q_i), reused every step.
-    q: Vec<Vec<f32>>,
-}
+pub struct EfSgd(ErrorResetEngine);
 
 impl EfSgd {
     pub fn new(init: &[f32], n: usize, beta: f32, c1: Box<dyn Compressor>) -> Self {
-        let d = init.len();
-        EfSgd {
-            n,
-            x: init.to_vec(),
-            e: vec![vec![0.0; d]; n],
-            momentum: Momentum::new(beta, n, d),
-            c1,
-            coll: crate::transport::default_collective(),
-            t: 0,
-            q: vec![vec![0.0; d]; n],
-        }
+        EfSgd(ErrorResetEngine::new(init, n, beta, CommPlan::ef_sgd(c1)))
     }
 }
 
-impl DistOptimizer for EfSgd {
-    fn step(&mut self, grads: &[Vec<f32>], eta: f32) -> RoundStats {
-        debug_assert_eq!(grads.len(), self.n);
-        self.t += 1;
-        // q_i = e_i + p_i
-        for i in 0..self.n {
-            self.momentum.descent(i, &grads[i], eta, &mut self.q[i]);
-            math::axpy(1.0, &self.e[i], &mut self.q[i]);
-        }
-        // q_i ← mean_j C1(q_j);  e_i ← q_i − C1(q_i)
-        let round =
-            self.coll.exchange_mean(&mut self.q, Some(&mut self.e), self.c1.as_ref(), self.t);
-        math::axpy(-1.0, &self.q[0], &mut self.x);
-        RoundStats {
-            grad_bits: round.upload_bits_per_worker,
-            model_bits: 0,
-            grad_allreduce: round.allreduce_compatible,
-            model_allreduce: true,
-            synced: true,
-        }
-    }
-
-    fn set_collective(&mut self, c: Arc<dyn Collective>) {
-        self.coll = c;
-    }
-
-    fn n(&self) -> usize {
-        self.n
-    }
-    fn dim(&self) -> usize {
-        self.x.len()
-    }
-    fn worker_model(&self, _i: usize) -> &[f32] {
-        &self.x
-    }
-    fn mean_model(&self, out: &mut [f32]) {
-        out.copy_from_slice(&self.x);
-    }
-    fn local_error(&self, i: usize) -> Option<&[f32]> {
-        Some(&self.e[i])
-    }
-    fn name(&self) -> String {
-        format!("ef-sgd[{}]", self.c1.name())
-    }
-}
+super::delegate_to_engine!(EfSgd);
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::compressor::{Grbs, Identity};
+    use crate::optimizer::DistOptimizer;
 
     #[test]
     fn identity_compressor_reduces_to_sgd() {

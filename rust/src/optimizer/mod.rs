@@ -1,22 +1,33 @@
 //! Distributed optimizers: the paper's algorithms and its baselines.
 //!
-//! | Type                | Paper algorithm                | File        |
-//! |---------------------|--------------------------------|-------------|
-//! | `FullSgd`           | fully-synchronous SGD          | sgd.rs      |
-//! | `EfSgd`             | EF-SGD (Alg 10)                | ef_sgd.rs   |
-//! | `QsparseLocalSgd`   | QSparse-local-SGD (Alg 1/12)   | qsparse.rs  |
-//! | `QsparseLocalSgd::local_sgd` | local SGD (C1 = identity) | qsparse.rs |
-//! | `Cser`              | CSER / M-CSER (Alg 2 / Alg 4)  | cser.rs     |
-//! | `Cser::csea`        | CSEA (Alg 7, H = 1, C2 = 0)    | cser.rs     |
-//! | `Cser::cser_pl`     | CSER-PL (Alg 8, C2 = 0)        | cser.rs     |
-//! | `CserImpl2`         | CSER implementation II (Alg 13, GRBS) | cser_impl2.rs |
+//! Since the engine refactor every algorithm executes inside
+//! [`crate::engine::ErrorResetEngine`] driven by a declarative
+//! [`crate::engine::CommPlan`]; the types in this module are **thin
+//! deprecated wrappers** kept for source compatibility (constructor
+//! signatures unchanged, trajectories pinned bit-identical to the seed
+//! implementations by `rust/tests/engine_parity.rs`).  New code should build
+//! plans directly:
+//!
+//! | Legacy wrapper      | Paper algorithm                | `CommPlan` constructor |
+//! |---------------------|--------------------------------|------------------------|
+//! | `FullSgd`           | fully-synchronous SGD          | `CommPlan::full_sgd`   |
+//! | `EfSgd`             | EF-SGD (Alg 10)                | `CommPlan::ef_sgd`     |
+//! | `QsparseLocalSgd`   | QSparse-local-SGD (Alg 1/12)   | `CommPlan::qsparse`    |
+//! | `QsparseLocalSgd::local_sgd` | local SGD (C1 = identity) | `CommPlan::local_sgd` |
+//! | `Cser`              | CSER / M-CSER (Alg 2 / Alg 4)  | `CommPlan::cser`       |
+//! | `Cser::csea`        | CSEA (Alg 7, H = 1, C2 = 0)    | `CommPlan::csea`       |
+//! | `Cser::cser_pl`     | CSER-PL (Alg 8, C2 = 0)        | `CommPlan::cser_pl`    |
+//! | `CserImpl2`         | CSER implementation II (Alg 13, GRBS) | `CommPlan::cser_impl2` |
 //!
 //! All of them implement [`DistOptimizer`]: the trainer computes per-worker
 //! gradients on each worker's own local model and shard, then calls
-//! `step(grads, eta)`.  Momentum (paper §3.2, Nesterov in the Sutskever
-//! form) is uniform across algorithms via [`Momentum`]: every algorithm's
-//! per-worker descent message is p_i = η(β·m_i + g_i) with
-//! m_i ← β·m_i + g_i, reducing to p_i = η·g_i at β = 0.
+//! `step(grads, eta)` — or, in worker-resident mode, hands the engine a
+//! gradient oracle and lets each worker thread drive itself
+//! (`ErrorResetEngine::run_resident`).  Momentum (paper §3.2, Nesterov in
+//! the Sutskever form) is uniform across algorithms: every per-worker
+//! descent message is p_i = η(β·m_i + g_i) with m_i ← β·m_i + g_i, reducing
+//! to p_i = η·g_i at β = 0 (`engine::descent_into`; [`Momentum`] wraps it
+//! for the legacy API).
 
 pub mod cser;
 pub mod cser_impl2;
@@ -88,11 +99,21 @@ pub trait DistOptimizer: Send + Sync {
         None
     }
 
+    /// Downcast to the generic engine, when this optimizer is one (all the
+    /// built-in algorithms are).  The trainer uses this to route
+    /// `Backend::Resident` runs through the worker-resident execution mode.
+    fn as_engine(&mut self) -> Option<&mut crate::engine::ErrorResetEngine> {
+        None
+    }
+
     fn name(&self) -> String;
 }
 
 /// Nesterov momentum in the Sutskever form (paper §3.2):
 ///   m_t = β m_{t-1} + g_t,   update direction = β m_t + g_t.
+///
+/// Legacy API over [`crate::engine::descent_into`] (worker-centric code
+/// holds one momentum buffer per `WorkerState` instead of a matrix here).
 #[derive(Debug, Clone)]
 pub struct Momentum {
     pub beta: f32,
@@ -108,19 +129,56 @@ impl Momentum {
 
     /// p_i = η(β m_i + g_i) written into `out`; updates m_i in place.
     pub fn descent(&mut self, i: usize, g: &[f32], eta: f32, out: &mut [f32]) {
-        if self.beta == 0.0 {
-            for (o, gi) in out.iter_mut().zip(g) {
-                *o = eta * *gi;
-            }
-            return;
-        }
-        let m = &mut self.m[i];
-        for ((o, mi), gi) in out.iter_mut().zip(m.iter_mut()).zip(g) {
-            *mi = self.beta * *mi + *gi;
-            *o = eta * (self.beta * *mi + *gi);
-        }
+        let empty: &mut [f32] = &mut [];
+        let m = if self.beta == 0.0 { empty } else { self.m[i].as_mut_slice() };
+        crate::engine::descent_into(self.beta, m, g, eta, out);
     }
 }
+
+/// Implements [`DistOptimizer`] for a newtype wrapper whose field 0 is a
+/// [`crate::engine::ErrorResetEngine`] — the deprecated legacy algorithm
+/// structs are all such wrappers.
+macro_rules! delegate_to_engine {
+    ($ty:ty) => {
+        impl crate::optimizer::DistOptimizer for $ty {
+            fn step(
+                &mut self,
+                grads: &[Vec<f32>],
+                eta: f32,
+            ) -> crate::optimizer::RoundStats {
+                crate::optimizer::DistOptimizer::step(&mut self.0, grads, eta)
+            }
+            fn set_collective(
+                &mut self,
+                c: std::sync::Arc<dyn crate::transport::Collective>,
+            ) {
+                crate::optimizer::DistOptimizer::set_collective(&mut self.0, c)
+            }
+            fn n(&self) -> usize {
+                crate::optimizer::DistOptimizer::n(&self.0)
+            }
+            fn dim(&self) -> usize {
+                crate::optimizer::DistOptimizer::dim(&self.0)
+            }
+            fn worker_model(&self, i: usize) -> &[f32] {
+                crate::optimizer::DistOptimizer::worker_model(&self.0, i)
+            }
+            fn mean_model(&self, out: &mut [f32]) {
+                crate::optimizer::DistOptimizer::mean_model(&self.0, out)
+            }
+            fn local_error(&self, i: usize) -> Option<&[f32]> {
+                crate::optimizer::DistOptimizer::local_error(&self.0, i)
+            }
+            fn as_engine(&mut self) -> Option<&mut crate::engine::ErrorResetEngine> {
+                Some(&mut self.0)
+            }
+            fn name(&self) -> String {
+                crate::optimizer::DistOptimizer::name(&self.0)
+            }
+        }
+    };
+}
+pub(crate) use delegate_to_engine;
 
 #[cfg(test)]
 mod tests {

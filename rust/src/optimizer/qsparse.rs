@@ -13,118 +13,34 @@
 //! then diverges as R_C = R_C1 × H grows (paper Table 2).
 //!
 //! `local_sgd` (C1 = identity) is the paper's local-SGD row.
+//!
+//! Deprecated thin wrapper over [`crate::engine::ErrorResetEngine`] with
+//! [`CommPlan::qsparse`] / [`CommPlan::local_sgd`]; prefer building the plan
+//! directly.
 
-use super::{DistOptimizer, Momentum, RoundStats};
-use crate::compressor::{Compressor, Identity};
-use crate::transport::Collective;
-use crate::util::math;
-use std::sync::Arc;
+use crate::compressor::Compressor;
+use crate::engine::{CommPlan, ErrorResetEngine};
 
-pub struct QsparseLocalSgd {
-    n: usize,
-    h: u64,
-    x: Vec<Vec<f32>>,
-    xhat: Vec<f32>,
-    e: Vec<Vec<f32>>,
-    momentum: Momentum,
-    c1: Box<dyn Compressor>,
-    coll: Arc<dyn Collective>,
-    t: u64,
-    // scratch
-    p: Vec<f32>,
-    /// Per-worker sync messages q_i, reused every sync round.
-    q: Vec<Vec<f32>>,
-}
+pub struct QsparseLocalSgd(ErrorResetEngine);
 
 impl QsparseLocalSgd {
     pub fn new(init: &[f32], n: usize, beta: f32, c1: Box<dyn Compressor>, h: u64) -> Self {
-        assert!(h >= 1);
-        let d = init.len();
-        QsparseLocalSgd {
-            n,
-            h,
-            x: vec![init.to_vec(); n],
-            xhat: init.to_vec(),
-            e: vec![vec![0.0; d]; n],
-            momentum: Momentum::new(beta, n, d),
-            c1,
-            coll: crate::transport::default_collective(),
-            t: 0,
-            p: vec![0.0; d],
-            q: vec![vec![0.0; d]; n],
-        }
+        QsparseLocalSgd(ErrorResetEngine::new(init, n, beta, CommPlan::qsparse(c1, h)))
     }
 
     /// Paper's local SGD row: identity compressor, sync every H steps.
     pub fn local_sgd(init: &[f32], n: usize, beta: f32, h: u64) -> Self {
-        Self::new(init, n, beta, Box::new(Identity), h)
+        QsparseLocalSgd(ErrorResetEngine::new(init, n, beta, CommPlan::local_sgd(h)))
     }
 }
 
-impl DistOptimizer for QsparseLocalSgd {
-    fn step(&mut self, grads: &[Vec<f32>], eta: f32) -> RoundStats {
-        debug_assert_eq!(grads.len(), self.n);
-        self.t += 1;
-        // local half-step on every worker
-        for i in 0..self.n {
-            self.momentum.descent(i, &grads[i], eta, &mut self.p);
-            math::axpy(-1.0, &self.p, &mut self.x[i]);
-        }
-        if self.t % self.h != 0 {
-            return RoundStats::default();
-        }
-        // Synchronization round over the Collective: each worker's message is
-        // q_i = e_i + (x_i − x̂); the backend returns mean_j C1(q_j) in q and
-        // the new residuals in e.
-        for i in 0..self.n {
-            for ((qj, ej), (xj, hj)) in self.q[i]
-                .iter_mut()
-                .zip(&self.e[i])
-                .zip(self.x[i].iter().zip(&self.xhat))
-            {
-                *qj = ej + xj - hj;
-            }
-        }
-        let round =
-            self.coll.exchange_mean(&mut self.q, Some(&mut self.e), self.c1.as_ref(), self.t);
-        math::axpy(1.0, &self.q[0], &mut self.xhat);
-        for i in 0..self.n {
-            self.x[i].copy_from_slice(&self.xhat);
-        }
-        RoundStats {
-            grad_bits: 0,
-            model_bits: round.upload_bits_per_worker,
-            grad_allreduce: true,
-            model_allreduce: round.allreduce_compatible,
-            synced: true,
-        }
-    }
-
-    fn set_collective(&mut self, c: Arc<dyn Collective>) {
-        self.coll = c;
-    }
-
-    fn n(&self) -> usize {
-        self.n
-    }
-    fn dim(&self) -> usize {
-        self.xhat.len()
-    }
-    fn worker_model(&self, i: usize) -> &[f32] {
-        &self.x[i]
-    }
-    fn local_error(&self, i: usize) -> Option<&[f32]> {
-        Some(&self.e[i])
-    }
-    fn name(&self) -> String {
-        format!("qsparse[{},H={}]", self.c1.name(), self.h)
-    }
-}
+super::delegate_to_engine!(QsparseLocalSgd);
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::compressor::Grbs;
+    use crate::compressor::{Grbs, Identity};
+    use crate::optimizer::DistOptimizer;
 
     #[test]
     fn h1_identity_reduces_to_sgd() {

@@ -3,66 +3,26 @@
 //! Every worker holds the identical model; the gradient is dense-AllReduced
 //! each step; momentum is applied to the averaged gradient (equivalently,
 //! per-worker on identical state — they coincide).
+//!
+//! Deprecated thin wrapper over [`crate::engine::ErrorResetEngine`] with
+//! [`CommPlan::full_sgd`]; prefer building the plan directly.
 
-use super::{DistOptimizer, Momentum, RoundStats};
-use crate::util::math;
+use crate::engine::{CommPlan, ErrorResetEngine};
 
-pub struct FullSgd {
-    n: usize,
-    x: Vec<f32>,
-    momentum: Momentum,
-    gbar: Vec<f32>,
-    p: Vec<f32>,
-}
+pub struct FullSgd(ErrorResetEngine);
 
 impl FullSgd {
     pub fn new(init: &[f32], n: usize, beta: f32) -> Self {
-        FullSgd {
-            n,
-            x: init.to_vec(),
-            momentum: Momentum::new(beta, 1, init.len()),
-            gbar: vec![0.0; init.len()],
-            p: vec![0.0; init.len()],
-        }
+        FullSgd(ErrorResetEngine::new(init, n, beta, CommPlan::full_sgd()))
     }
 }
 
-impl DistOptimizer for FullSgd {
-    fn step(&mut self, grads: &[Vec<f32>], eta: f32) -> RoundStats {
-        debug_assert_eq!(grads.len(), self.n);
-        let refs: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
-        math::mean_rows(&refs, &mut self.gbar);
-        self.momentum.descent(0, &self.gbar, eta, &mut self.p);
-        math::axpy(-1.0, &self.p, &mut self.x);
-        RoundStats {
-            grad_bits: self.x.len() as u64 * 32,
-            model_bits: 0,
-            grad_allreduce: true,
-            model_allreduce: true,
-            synced: true,
-        }
-    }
-
-    fn n(&self) -> usize {
-        self.n
-    }
-    fn dim(&self) -> usize {
-        self.x.len()
-    }
-    fn worker_model(&self, _i: usize) -> &[f32] {
-        &self.x
-    }
-    fn mean_model(&self, out: &mut [f32]) {
-        out.copy_from_slice(&self.x);
-    }
-    fn name(&self) -> String {
-        "sgd".into()
-    }
-}
+super::delegate_to_engine!(FullSgd);
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::optimizer::DistOptimizer;
 
     #[test]
     fn averages_gradients() {
@@ -85,5 +45,19 @@ mod tests {
         }
         let x = o.worker_model(0);
         assert!((x[0] - 3.0).abs() < 1e-2 && (x[1] + 2.0).abs() < 1e-2, "{x:?}");
+    }
+
+    #[test]
+    fn all_worker_views_identical() {
+        // replicated plan: every worker's model is the same vector, and
+        // mean_model is an exact copy (not an n-way average re-rounding)
+        let mut o = FullSgd::new(&[0.1, 0.2, 0.3], 3, 0.9);
+        o.step(&[vec![1.0, 0.5, -0.5], vec![0.0, 1.0, 0.5], vec![-1.0, 0.5, 0.0]], 0.1);
+        let mut xbar = vec![0.0f32; 3];
+        o.mean_model(&mut xbar);
+        for i in 0..3 {
+            assert_eq!(o.worker_model(i), xbar.as_slice());
+        }
+        assert!(o.local_error(0).is_none());
     }
 }

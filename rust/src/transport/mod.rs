@@ -105,14 +105,28 @@ pub enum Backend {
     #[default]
     InProcess,
     Threaded,
+    /// The `Threaded` wire collectives driven in **worker-resident** mode:
+    /// each worker is a persistent OS thread owning its
+    /// `engine::WorkerState`, running gradient → compress → sync → apply end
+    /// to end and meeting the other workers only at the collective — no
+    /// central gradients array, no lock-step barrier in the trainer
+    /// (`coordinator::sim_trainer` routes engine optimizers through
+    /// `ErrorResetEngine::run_resident` when this backend is selected).
+    Resident,
 }
 
 impl Backend {
     pub fn collective(self) -> Arc<dyn Collective> {
         match self {
             Backend::InProcess => Arc::new(InProcess),
-            Backend::Threaded => Arc::new(Threaded::new()),
+            Backend::Threaded | Backend::Resident => Arc::new(Threaded::new()),
         }
+    }
+
+    /// True when the trainer should hand the step loop to the worker threads
+    /// (`ErrorResetEngine::run_resident`) instead of driving it centrally.
+    pub fn worker_resident(self) -> bool {
+        matches!(self, Backend::Resident)
     }
 }
 

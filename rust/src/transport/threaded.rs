@@ -25,7 +25,7 @@
 use super::wire::{self, WireMsg};
 use super::{Collective, InProcess};
 use crate::collective::{PsyncRound, WireCost};
-use crate::compressor::{payload_bits, Compressor, Ctx, Selection};
+use crate::compressor::{payload_bits_wire, Compressor, Ctx, Selection};
 use crate::util::math;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
@@ -120,7 +120,7 @@ fn ring_round(
     let n = vs.len();
     let d = vs[0].len();
     let sel = c.select(Ctx { round, worker: 0 }, &vs[0]);
-    let bits = payload_bits(&sel, d);
+    let bits = payload_bits_wire(c.wire_scheme(), &sel, d);
     let m = sel.count(d);
 
     if m == 0 {
@@ -360,7 +360,7 @@ fn ps_round(
 mod tests {
     use super::*;
     use crate::collective::ring_allreduce_cost;
-    use crate::compressor::{Grbs, Identity, Qsgd, RandK, SignSgd, TopK, Zero};
+    use crate::compressor::{BlockTopK, Grbs, Identity, Qsgd, RandK, SignSgd, TopK, Zero};
     use crate::util::prop::{forall, slices_close, Gen};
 
     fn mean_of(vs: &[Vec<f32>]) -> Vec<f32> {
@@ -379,6 +379,7 @@ mod tests {
             Box::new(Grbs::new(4.0, (d / 4).max(1), 77)),
             Box::new(RandK::new(4.0)),
             Box::new(TopK::new(4.0)),
+            Box::new(BlockTopK::new(4.0, (d / 8).max(1))),
             Box::new(Qsgd::new(4)),
             Box::new(SignSgd),
             Box::new(Identity),

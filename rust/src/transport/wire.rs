@@ -6,10 +6,11 @@
 //! [`WireMsg`] and [`decode`] reconstructs `C(v)` exactly on the receiver.
 //!
 //! **Invariant (tested):** `encode(c, ctx, v).bit_len` equals the bits the
-//! compressor reports via `compress_into` — i.e. `payload_bits(sel, d)` for
-//! sparsifiers, `32 + ceil(d·log2(2s+1))` for QSGD and `32 + d` for
-//! sign-SGD.  The accounting that drives every figure is therefore the
-//! *measured* size of a real message, not a formula that could drift.
+//! compressor reports via `compress_into` — i.e. `payload_bits_wire(scheme,
+//! sel, d)` for sparsifiers, `32 + qsgd_level_bits(d, s)` for QSGD and
+//! `32 + d` for sign-SGD.  The accounting that drives every figure is
+//! therefore the *measured* size of a real message, not a formula that could
+//! drift.
 //!
 //! Layouts by [`WireScheme`]:
 //!
@@ -20,15 +21,17 @@
 //! * `IndexValue` — `(ceil(log2 d)`-bit index, 32-bit value)` pairs for
 //!   value-dependent supports (top-k, rand-k accounting).  The pair count is
 //!   derived from the transport frame length (all pairs are equal width), so
-//!   no count header is spent.  Note: `BlockTopK` routes through this scheme
-//!   by expanding blocks to elements — its *wire* cost honestly includes the
-//!   index metadata that `payload_bits` (which prices `Selection::Blocks` at
-//!   zero index bits) does not charge it.
-//! * `QsgdLevels` — 32-bit ℓ2 norm, then the signed levels packed as one
-//!   big integer in radix `B = 2s+1`: exactly `ceil(d·log2 B)` bits, the
-//!   information-theoretic size the accounting already claimed.  (Radix
-//!   conversion is O(d²/64) in the worst case — fine at the message sizes
-//!   the parameter-server path carries; documented trade-off.)
+//!   no count header is spent.
+//! * `BlockIndex` — value-dependent *block* supports (`BlockTopK`): one
+//!   `ceil(log2 B)`-bit block id per selected block followed by that block's
+//!   values.  The ids are real metadata and `payload_bits_wire` charges them
+//!   — accounted == encoded here too, unlike the seed-derivable
+//!   `SharedSupport` blocks which ship zero index bits.
+//! * `QsgdLevels` — 32-bit ℓ2 norm, then the signed levels packed chunkwise
+//!   in radix `B = 2s+1`: `k` digits per u64 chunk (`B^k ≤ u64::MAX`),
+//!   wasting under one bit per chunk vs the information-theoretic size while
+//!   staying O(d) (`compressor::quantize::qsgd_level_bits` is the exact
+//!   accounted size).
 //! * `SignBitmap` — 32-bit scale + one sign bit per coordinate.
 //!
 //! Decoded values are **bit-identical** to `compress_into` output (the same
@@ -132,10 +135,11 @@ impl BitReader<'_> {
     }
 }
 
-/// Bits per explicit index in a d-vector — identical expression to
-/// `compressor::payload_bits` so the codec and the accounting cannot drift.
+/// Bits per explicit index in a d-vector — the same function the accounting
+/// (`compressor::payload_bits_wire`) uses, so codec and accounting cannot
+/// drift.
 pub fn index_width(d: usize) -> u32 {
-    usize::BITS - (d.max(2) - 1).leading_zeros()
+    crate::compressor::index_bits(d)
 }
 
 /// Encode `C(v)` for transmission.  `ctx` must be the sender's (round,
@@ -190,6 +194,33 @@ pub fn encode_with_selection(
                 }
             });
         }
+        WireScheme::BlockIndex { num_blocks } => {
+            debug_assert!(!c.is_dense());
+            let iw = index_width(num_blocks as usize);
+            let sel = match sel {
+                Some(s) => s,
+                None => {
+                    owned = c.select(ctx, v);
+                    &owned
+                }
+            };
+            match sel {
+                Selection::Blocks { block_size, blocks } => {
+                    for &b in blocks {
+                        w.write(b as u64, iw);
+                        let s = b as usize * block_size;
+                        if s < d {
+                            let e = (s + block_size).min(d);
+                            for &x in &v[s..e] {
+                                w.write_f32(x);
+                            }
+                        }
+                    }
+                }
+                Selection::Nothing => {}
+                _ => unreachable!("BlockIndex scheme requires block selections"),
+            }
+        }
         WireScheme::QsgdLevels { levels } => encode_qsgd(c, ctx, v, levels, &mut w),
         WireScheme::SignBitmap => {
             // Same scale expression as SignSgd::compress_into — bit-identical.
@@ -233,6 +264,28 @@ pub fn decode(c: &dyn Compressor, ctx: Ctx, msg: &WireMsg, out: &mut [f32]) {
                 out[i] = r.read_f32();
             }
         }
+        WireScheme::BlockIndex { num_blocks } => {
+            // Self-describing given the frame length: each entry is a block
+            // id followed by that block's values (the trailing block may be
+            // short, or empty when `num_blocks·block_size > d`).
+            let nb = num_blocks as usize;
+            let iw = index_width(nb);
+            let block_size = (d + nb - 1) / nb;
+            let mut consumed = 0u64;
+            while consumed < msg.bit_len {
+                let b = r.read(iw) as usize;
+                consumed += iw as u64;
+                let s = b * block_size;
+                if s < d {
+                    let e = (s + block_size).min(d);
+                    for x in &mut out[s..e] {
+                        *x = r.read_f32();
+                    }
+                    consumed += 32 * (e - s) as u64;
+                }
+            }
+            debug_assert_eq!(consumed, msg.bit_len, "BlockIndex frame misaligned");
+        }
         WireScheme::QsgdLevels { levels } => decode_qsgd(levels, &mut r, msg.bit_len, out),
         WireScheme::SignBitmap => {
             let scale = r.read_f32();
@@ -244,14 +297,16 @@ pub fn decode(c: &dyn Compressor, ctx: Ctx, msg: &WireMsg, out: &mut [f32]) {
 }
 
 // ---------------------------------------------------------------------------
-// QSGD: norm + radix-packed signed levels.
+// QSGD: norm + chunk-packed signed levels.
+//
+// Digits in radix B = 2s+1 are grouped k at a time (k the largest group with
+// B^k ≤ u64::MAX, `quantize::qsgd_chunk`) and each group is written as one
+// integer of exactly bit_length(B^k − 1) bits — at most one wasted bit per
+// chunk over the information-theoretic size, and O(d) end to end (the old
+// whole-message big-integer radix conversion was O(d²/64); DESIGN.md §5).
 // ---------------------------------------------------------------------------
 
-/// Exact bit count of the QSGD level block for d coordinates — the same
-/// float expression as `Qsgd::compress_into`'s accounting.
-fn qsgd_level_bits(d: usize, levels: u32) -> u64 {
-    (d as f64 * ((2 * levels + 1) as f64).log2()).ceil() as u64
-}
+use crate::compressor::quantize::{qsgd_chunk, qsgd_chunk_bits, qsgd_level_bits};
 
 fn encode_qsgd(c: &dyn Compressor, ctx: Ctx, v: &[f32], levels: u32, w: &mut BitWriter) {
     let d = v.len();
@@ -276,8 +331,17 @@ fn encode_qsgd(c: &dyn Compressor, ctx: Ctx, v: &[f32], levels: u32, w: &mut Bit
             (signed + levels as i64) as u64
         })
         .collect();
-    let limbs = radix_pack(&digits, base);
-    write_limbs(w, &limbs, qsgd_level_bits(d, levels));
+    let (k, full_bits) = qsgd_chunk(levels);
+    let start = w.bit_len();
+    for chunk in digits.chunks(k) {
+        let mut val = 0u64;
+        for &dg in chunk {
+            val = val * base + dg;
+        }
+        let bits = if chunk.len() == k { full_bits } else { qsgd_chunk_bits(chunk.len(), levels) };
+        w.write(val, bits);
+    }
+    debug_assert_eq!(w.bit_len() - start, qsgd_level_bits(d, levels));
 }
 
 fn decode_qsgd(levels: u32, r: &mut BitReader, bit_len: u64, out: &mut [f32]) {
@@ -289,129 +353,23 @@ fn decode_qsgd(levels: u32, r: &mut BitReader, bit_len: u64, out: &mut [f32]) {
     }
     let s = levels as f32;
     let base = (2 * levels + 1) as u64;
-    let limbs = read_limbs(r, qsgd_level_bits(d, levels));
-    let digits = radix_unpack(&limbs, d, base);
-    for (x, &dg) in out.iter_mut().zip(&digits) {
-        let signed = dg as i64 - levels as i64;
-        let sgn = if signed < 0 { -1.0f32 } else { 1.0f32 };
-        let level = signed.unsigned_abs() as f32;
-        // Same expression shape as Qsgd::compress_into — bit-identical.
-        *x = sgn * norm * level / s;
-    }
-}
-
-fn write_limbs(w: &mut BitWriter, limbs: &[u64], bits: u64) {
-    let need = bits.div_ceil(64) as usize;
-    assert!(limbs.len() <= need, "radix block overflow: {} limbs > {} bits", limbs.len(), bits);
-    if limbs.len() == need && bits % 64 != 0 {
-        assert!(limbs[need - 1] >> (bits % 64) == 0, "radix block overflow in top limb");
-    }
-    for i in 0..need {
-        let word = limbs.get(i).copied().unwrap_or(0);
-        let b = if (i as u64 + 1) * 64 <= bits { 64 } else { (bits - i as u64 * 64) as u32 };
-        w.write(word, b);
-    }
-}
-
-fn read_limbs(r: &mut BitReader, bits: u64) -> Vec<u64> {
-    let need = bits.div_ceil(64) as usize;
-    (0..need)
-        .map(|i| {
-            let b = if (i as u64 + 1) * 64 <= bits { 64 } else { (bits - i as u64 * 64) as u32 };
-            r.read(b)
-        })
-        .collect()
-}
-
-/// Largest (group size k, base^k) with base^k representable in u64.
-fn superdigit(base: u64) -> (usize, u64) {
-    let mut k = 1usize;
-    let mut sb = base as u128;
-    while sb * base as u128 <= u64::MAX as u128 {
-        sb *= base as u128;
-        k += 1;
-    }
-    (k, sb as u64)
-}
-
-/// Pack base-`base` digits (most-significant first) into a little-endian
-/// u64-limb big integer.  Exact: the result is the integer
-/// Σ digits[i]·base^(n-1-i), using ceil(n·log2 base) bits or fewer.
-fn radix_pack(digits: &[u64], base: u64) -> Vec<u64> {
-    let (k, sb) = superdigit(base);
-    let mut limbs: Vec<u64> = Vec::new();
-    // limbs = limbs * mul + add
-    fn mul_add(limbs: &mut Vec<u64>, mul: u64, add: u64) {
-        let mut carry = add as u128;
-        for l in limbs.iter_mut() {
-            let t = *l as u128 * mul as u128 + carry;
-            *l = t as u64;
-            carry = t >> 64;
+    let (k, full_bits) = qsgd_chunk(levels);
+    let mut idx = 0usize;
+    while idx < d {
+        let len = k.min(d - idx);
+        let bits = if len == k { full_bits } else { qsgd_chunk_bits(len, levels) };
+        let mut val = r.read(bits);
+        for j in (idx..idx + len).rev() {
+            let dg = val % base;
+            val /= base;
+            let signed = dg as i64 - levels as i64;
+            let sgn = if signed < 0 { -1.0f32 } else { 1.0f32 };
+            let level = signed.unsigned_abs() as f32;
+            // Same expression shape as Qsgd::compress_into — bit-identical.
+            out[j] = sgn * norm * level / s;
         }
-        if carry > 0 {
-            limbs.push(carry as u64);
-        }
+        idx += len;
     }
-    let r = digits.len() % k;
-    if r > 0 {
-        let mut val = 0u64;
-        for &dg in &digits[..r] {
-            val = val * base + dg;
-        }
-        mul_add(&mut limbs, 1, val);
-    }
-    let mut pos = r;
-    while pos < digits.len() {
-        let mut val = 0u64;
-        for &dg in &digits[pos..pos + k] {
-            val = val * base + dg;
-        }
-        mul_add(&mut limbs, sb, val);
-        pos += k;
-    }
-    limbs
-}
-
-/// Inverse of [`radix_pack`] for a known digit count.
-fn radix_unpack(limbs: &[u64], count: usize, base: u64) -> Vec<u64> {
-    let (k, sb) = superdigit(base);
-    let mut limbs: Vec<u64> = limbs.to_vec();
-    while limbs.last() == Some(&0) {
-        limbs.pop();
-    }
-    // big-int divmod by a u64: returns remainder, truncates quotient in place
-    fn div_rem_small(limbs: &mut Vec<u64>, div: u64) -> u64 {
-        let mut rem: u128 = 0;
-        for l in limbs.iter_mut().rev() {
-            let cur = (rem << 64) | *l as u128;
-            *l = (cur / div as u128) as u64;
-            rem = cur % div as u128;
-        }
-        while limbs.last() == Some(&0) {
-            limbs.pop();
-        }
-        rem as u64
-    }
-    let mut digits = vec![0u64; count];
-    let mut pos = count;
-    for _ in 0..count / k {
-        let mut v = div_rem_small(&mut limbs, sb);
-        for j in (pos - k..pos).rev() {
-            digits[j] = v % base;
-            v /= base;
-        }
-        pos -= k;
-    }
-    if pos > 0 {
-        // leading partial group: whatever remains is its value (< base^pos)
-        debug_assert!(limbs.len() <= 1);
-        let mut v = limbs.first().copied().unwrap_or(0);
-        for j in (0..pos).rev() {
-            digits[j] = v % base;
-            v /= base;
-        }
-    }
-    digits
 }
 
 // ---------------------------------------------------------------------------
@@ -481,7 +439,8 @@ pub fn decode_union(msg: &WireMsg, out: &mut [f32]) {
 mod tests {
     use super::*;
     use crate::compressor::{
-        payload_bits, BlockTopK, Grbs, Identity, Qsgd, RandBlock, RandK, SignSgd, TopK, Zero,
+        payload_bits, payload_bits_wire, BlockTopK, Grbs, Identity, Qsgd, RandBlock, RandK,
+        SignSgd, TopK, Zero,
     };
     use crate::util::prop::{forall, Gen};
 
@@ -518,39 +477,61 @@ mod tests {
         });
     }
 
+    /// The chunked level codec roundtrips arbitrary digit streams exactly
+    /// and its size is the accounted `qsgd_level_bits` (leading-zero digits
+    /// included — a digit stream is fixed-length, not a bare integer).
     #[test]
-    fn radix_roundtrip_property() {
+    fn chunked_digit_roundtrip_property() {
         forall(60, 0x4Ad1, |g: &mut Gen| {
-            let base = g.usize_in(2, 40) as u64;
+            let levels = g.usize_in(1, 600) as u32;
+            let base = 2 * levels as u64 + 1;
             let count = g.usize_in(1, 400);
-            let digits: Vec<u64> = (0..count).map(|_| g.rng.below(base as usize) as u64).collect();
-            let limbs = radix_pack(&digits, base);
-            // packed size within the information-theoretic bound
-            let max_bits = (count as f64 * (base as f64).log2()).ceil() as usize;
+            let mut digits: Vec<u64> =
+                (0..count).map(|_| g.rng.below(base as usize) as u64).collect();
+            if g.bool() {
+                // leading zeros must survive (they would vanish in a bare
+                // big-integer encoding)
+                digits[0] = 0;
+            }
+            let (k, full_bits) = qsgd_chunk(levels);
+            let mut w = BitWriter::new();
+            for chunk in digits.chunks(k) {
+                let mut val = 0u64;
+                for &dg in chunk {
+                    val = val * base + dg;
+                }
+                let bits =
+                    if chunk.len() == k { full_bits } else { qsgd_chunk_bits(chunk.len(), levels) };
+                w.write(val, bits);
+            }
+            let msg = w.finish();
             crate::prop_assert!(
-                limbs.len() <= max_bits.div_ceil(64),
-                "{} limbs for {max_bits} bits",
-                limbs.len()
+                msg.bit_len == qsgd_level_bits(count, levels),
+                "encoded {} bits, accounted {}",
+                msg.bit_len,
+                qsgd_level_bits(count, levels)
             );
-            let back = radix_unpack(&limbs, count, base);
-            crate::prop_assert!(back == digits, "radix roundtrip mismatch");
+            let mut r = msg.reader();
+            let mut back = vec![0u64; count];
+            let mut idx = 0usize;
+            while idx < count {
+                let len = k.min(count - idx);
+                let bits = if len == k { full_bits } else { qsgd_chunk_bits(len, levels) };
+                let mut val = r.read(bits);
+                for j in (idx..idx + len).rev() {
+                    back[j] = val % base;
+                    val /= base;
+                }
+                idx += len;
+            }
+            crate::prop_assert!(back == digits, "chunked roundtrip mismatch");
             Ok(())
         });
     }
 
-    #[test]
-    fn radix_leading_zero_digits_preserved() {
-        let digits = vec![0, 0, 0, 5, 0, 2];
-        let limbs = radix_pack(&digits, 9);
-        assert_eq!(radix_unpack(&limbs, 6, 9), digits);
-        // all-zero stream
-        let z = vec![0u64; 17];
-        assert_eq!(radix_unpack(&radix_pack(&z, 3), 17, 3), z);
-    }
-
     /// The tentpole invariant: decode∘encode == C(·) exactly, and the
     /// encoded length equals the bits the compressor reports (which for
-    /// sparsifiers is `payload_bits(sel, d)`).
+    /// sparsifiers is `payload_bits_wire(scheme, sel, d)`).
     #[test]
     fn prop_codec_roundtrip_and_exact_bits() {
         forall(40, 0xC0DEC, |g: &mut Gen| {
@@ -562,6 +543,7 @@ mod tests {
                 Box::new(RandBlock::new(4.0, (d / 8).max(1))),
                 Box::new(RandK::new(8.0)),
                 Box::new(TopK::new(8.0)),
+                Box::new(BlockTopK::new(4.0, (d / 8).max(1))),
                 Box::new(Qsgd::new(4)),
                 Box::new(SignSgd),
                 Box::new(Identity),
@@ -577,12 +559,12 @@ mod tests {
                     c.name(),
                     msg.bit_len
                 );
-                // For sparsifiers the accounted size is payload_bits(sel, d).
+                // For sparsifiers the accounted size is payload_bits_wire.
                 if !c.is_dense() {
                     let sel = c.select(ctx, &v);
                     crate::prop_assert!(
-                        msg.bit_len == payload_bits(&sel, d),
-                        "{}: wire {} != payload_bits",
+                        msg.bit_len == payload_bits_wire(c.wire_scheme(), &sel, d),
+                        "{}: wire {} != payload_bits_wire",
                         c.name(),
                         msg.bit_len
                     );
@@ -606,8 +588,9 @@ mod tests {
     #[test]
     fn blocktopk_wire_pays_for_its_indices() {
         // Value-dependent block selections cannot ride the shared-seed trick:
-        // the wire message expands to (index, value) pairs, strictly larger
-        // than payload_bits' zero-index-bit price for Selection::Blocks.
+        // the message ships one block id per selected block — strictly more
+        // than the zero-index-bit SharedSupport price of the same selection,
+        // and exactly what `compress_into` accounts (DESIGN.md §3 closure).
         let d = 128;
         let mut g = Gen::replay(0xB70, 0);
         let v = g.vec(d);
@@ -615,11 +598,51 @@ mod tests {
         let c = BlockTopK::new(4.0, 16);
         let sel = c.select(ctx, &v);
         let msg = encode(&c, ctx, &v);
-        let k = sel.count(d) as u64;
-        assert_eq!(msg.bit_len, k * (index_width(d) as u64 + 32));
+        let kept = sel.count(d) as u64; // 4 blocks of 8
+        assert_eq!(msg.bit_len, kept * 32 + 4 * index_width(16) as u64);
         assert!(msg.bit_len > payload_bits(&sel, d));
         let mut expect = vec![0.0f32; d];
-        c.compress_into(ctx, &v, &mut expect);
+        let accounted = c.compress_into(ctx, &v, &mut expect);
+        assert_eq!(msg.bit_len, accounted, "accounted bits must equal encoded bits");
+        let mut out = vec![0.0f32; d];
+        decode(&c, ctx, &msg, &mut out);
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn blocktopk_short_last_block_roundtrips() {
+        // d not a multiple of the block size: the trailing block is short and
+        // the frame stays self-describing.
+        // 16 blocks of ceil(45/16)=3: blocks 0..14 cover 45 coords exactly,
+        // so block 15 starts at 45 — an empty (id-only) trailing entry.
+        let d = 45;
+        let mut g = Gen::replay(0xB71, 1);
+        let v = g.vec(d);
+        let ctx = Ctx { round: 9, worker: 0 };
+        let c = BlockTopK::new(2.0, 16);
+        let mut expect = vec![0.0f32; d];
+        let accounted = c.compress_into(ctx, &v, &mut expect);
+        let msg = encode(&c, ctx, &v);
+        assert_eq!(msg.bit_len, accounted);
+        let mut out = vec![7.0f32; d];
+        decode(&c, ctx, &msg, &mut out);
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn qsgd_large_d_roundtrip_chunked() {
+        // The chunked codec is O(d): a WRN-scale message encodes/decodes in
+        // milliseconds (the old big-integer radix was O(d²/64) — minutes at
+        // this size) and stays exact.
+        let d = 1 << 17;
+        let mut g = Gen::replay(0x1A26E, 0);
+        let v = g.vec_smooth(d);
+        let c = Qsgd::new(4);
+        let ctx = Ctx { round: 2, worker: 1 };
+        let mut expect = vec![0.0f32; d];
+        let bits = c.compress_into(ctx, &v, &mut expect);
+        let msg = encode(&c, ctx, &v);
+        assert_eq!(msg.bit_len, bits);
         let mut out = vec![0.0f32; d];
         decode(&c, ctx, &msg, &mut out);
         assert_eq!(out, expect);

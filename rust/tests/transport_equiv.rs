@@ -137,6 +137,53 @@ fn lemma1_holds_under_threaded_backend() {
 }
 
 #[test]
+fn worker_resident_threaded_matches_central_trajectories() {
+    // The worker-resident mode drives the same wire collectives from
+    // persistent worker threads.  Ring-path compressors (GRBS) must stay
+    // within the documented f32 reduction tolerance of the central
+    // in-process reference; the collectives themselves are the ones the
+    // rest of this suite pins.
+    use cser::engine::{CommPlan, ErrorResetEngine};
+    let d = 96;
+    let n = 4;
+    let steps = 60;
+    let target = vec![1.0f32; d];
+    let mk = || {
+        CommPlan::cser(
+            Box::new(Grbs::new(2.0, 12, 7)) as Box<dyn Compressor>,
+            Box::new(Grbs::new(4.0, 12, 11)),
+            3,
+        )
+    };
+    // deterministic per-worker gradient of ½‖x − 1‖² with a worker bias
+    let gf = cser::engine::as_grad(move |w: usize, x: &[f32], out: &mut [f32]| -> f32 {
+        for (j, (o, (xi, ti))) in out.iter_mut().zip(x.iter().zip(&target)).enumerate() {
+            *o = xi - ti + 0.02 * ((w * 13 + j) % 5) as f32;
+        }
+        0.0
+    });
+
+    let mut central = ErrorResetEngine::new(&vec![0.0; d], n, 0.9, mk());
+    let mut grads = vec![vec![0.0f32; d]; n];
+    for _ in 0..steps {
+        for w in 0..n {
+            gf(w, central.worker_model(w), &mut grads[w]);
+        }
+        central.step(&grads, 0.05);
+    }
+
+    let mut res = ErrorResetEngine::new(&vec![0.0; d], n, 0.9, mk());
+    res.set_collective(Backend::Threaded.collective());
+    let reports = res.run_resident(steps, 0.05, f64::INFINITY, &gf);
+    assert_eq!(reports.len(), steps);
+
+    for i in 0..n {
+        slices_close(central.worker_model(i), res.worker_model(i), 1e-4)
+            .unwrap_or_else(|e| panic!("worker {i}: {e}"));
+    }
+}
+
+#[test]
 fn threaded_psync_mean_preservation_at_scale() {
     // The integration-scale analogue of the in-process test: n = 8 workers,
     // d = 64k, GRBS R = 64 over the threaded ring.
