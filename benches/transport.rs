@@ -1,21 +1,31 @@
-//! Transport-backend benchmark: in-process reference vs the threaded wire
-//! layer (real serialized collectives), plus the serialization-accounting
-//! cross-check.
+//! Transport-backend benchmark: in-process reference vs the persistent
+//! threaded pool vs real loopback TCP, plus the serialization-accounting
+//! cross-checks.
 //!
 //! What to look for:
-//! * the in-process path is the zero-copy upper bound; the threaded ring
-//!   pays thread spawn + encode/decode, which amortizes as d/R grows;
+//! * the in-process path is the zero-copy upper bound;
+//! * `Threaded_persistent` vs `Threaded_fresh_pool` is the before/after of
+//!   retiring the per-call thread spawns: the fresh-pool variant rebuilds
+//!   (and joins) the worker fleet every round, which is what every
+//!   collective used to pay — the persistent pool amortizes it away;
 //! * GRBS (ring) vs top-k (parameter server) shows the paper's systems
 //!   argument as wall-clock, not just accounted bits;
-//! * the final section asserts measured serialized traffic equals the
-//!   α-β cost model's formulas exactly — the wire layer moves precisely the
-//!   bits every figure has been charging.
+//! * `TcpLoopback` is the same peer-owned protocol over real sockets:
+//!   8 OS threads, 8 TCP connections each, kernel round trips per ring
+//!   step — the α-β cost model's α made audible;
+//! * the assertion sections check measured serialized traffic equals the
+//!   α-β cost model's formulas exactly, on the threaded pool **and** on
+//!   the TCP path — the wires move precisely the bits every figure has
+//!   been charging.
 
 use cser::collective::ring_allreduce_cost;
 use cser::compressor::{payload_bits, Compressor, Ctx, Grbs, TopK};
-use cser::transport::{wire, Backend, Collective};
+use cser::transport::rendezvous::free_loopback_addr;
+use cser::transport::{peer, wire, Backend, Collective, TcpTransport, Threaded};
 use cser::util::bench::{black_box, Bench};
 use cser::util::rng::Rng;
+use std::sync::mpsc::channel;
+use std::sync::Arc;
 
 fn worker_vecs(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
     let mut rng = Rng::new(seed);
@@ -36,12 +46,30 @@ fn main() {
     let mut round = 0u64;
 
     for r in [16.0, 256.0] {
-        let c = Grbs::new(r, d / 1024, 5);
-        for backend in [Backend::InProcess, Backend::Threaded] {
-            let coll = backend.collective();
+        let c: Arc<dyn Compressor> = Arc::new(Grbs::new(r, d / 1024, 5));
+        {
+            let coll = Backend::InProcess.collective();
             let mut vs = base.clone();
-            b.run(&format!("psync_grbs_R{r}_n8_d1M_{:?}", backend), || {
+            b.run(&format!("psync_grbs_R{r}_n8_d1M_InProcess"), || {
                 round += 1;
+                black_box(coll.psync(&mut vs, None, &c, round));
+            });
+        }
+        {
+            // one pool, built on the first round, reused for every other
+            let coll = Threaded::new();
+            let mut vs = base.clone();
+            b.run(&format!("psync_grbs_R{r}_n8_d1M_Threaded_persistent"), || {
+                round += 1;
+                black_box(coll.psync(&mut vs, None, &c, round));
+            });
+        }
+        {
+            // the retired design's cost: spawn + join the worker fleet per call
+            let mut vs = base.clone();
+            b.run(&format!("psync_grbs_R{r}_n8_d1M_Threaded_fresh_pool"), || {
+                round += 1;
+                let coll = Threaded::new();
                 black_box(coll.psync(&mut vs, None, &c, round));
             });
         }
@@ -49,22 +77,84 @@ fn main() {
 
     // Index-carrying compressor: the parameter-server path is the only
     // option — this is the ring-vs-PS contrast the paper argues for GRBS.
-    let c = TopK::new(256.0);
-    for backend in [Backend::InProcess, Backend::Threaded] {
-        let coll = backend.collective();
+    let c: Arc<dyn Compressor> = Arc::new(TopK::new(256.0));
+    for (label, coll) in [
+        ("InProcess", Backend::InProcess.collective()),
+        ("Threaded_persistent", Arc::new(Threaded::new()) as Arc<dyn Collective>),
+    ] {
         let mut vs = base.clone();
-        b.run(&format!("psync_topk_R256_n8_d1M_{:?}", backend), || {
+        b.run(&format!("psync_topk_R256_n8_d1M_{label}"), || {
             round += 1;
             black_box(coll.psync(&mut vs, None, &c, round));
         });
     }
 
-    // ---- serialized bytes == accounted bits ----
+    // ---- loopback TCP: the same peer-owned protocol over real sockets ----
+    // 8 worker threads stand in for 8 processes (same code path either
+    // way); the first round doubles as the accounting assertion.
+    {
+        let addr = free_loopback_addr().expect("loopback port");
+        let (done_tx, done_rx) = channel::<(u64, u64, u64)>();
+        let mut go_txs = Vec::with_capacity(n);
+        let mut handles = Vec::with_capacity(n);
+        for rank in 0..n {
+            let (go_tx, go_rx) = channel::<u64>();
+            go_txs.push(go_tx);
+            let addr = addr.clone();
+            let mut v = base[rank].clone();
+            let done = done_tx.clone();
+            handles.push(std::thread::spawn(move || {
+                let c = Grbs::new(16.0, d / 1024, 5);
+                let mut tp = TcpTransport::connect(&addr, rank, n).expect("tcp join");
+                while let Ok(round) = go_rx.recv() {
+                    if round == u64::MAX {
+                        break;
+                    }
+                    let info = peer::psync(&mut tp, &mut v, None, &c, round).expect("tcp psync");
+                    let wc = info.wire.expect("tcp measures traffic");
+                    done.send((wc.up_bits, wc.down_bits, info.upload_bits_per_worker))
+                        .expect("bench collector");
+                }
+            }));
+        }
+        round += 1;
+        // correctness round: measured socket traffic == ring formula
+        for tx in &go_txs {
+            tx.send(round).unwrap();
+        }
+        let c = Grbs::new(16.0, d / 1024, 5);
+        let m = c.select(Ctx { round, worker: 0 }, &base[0]).count(d) as u64;
+        assert_eq!(m % n as u64, 0, "bench setup: chunks divide evenly");
+        let expect = ring_allreduce_cost(m * 32, n);
+        for _ in 0..n {
+            let (up, down, acct) = done_rx.recv().unwrap();
+            assert_eq!((up, down), (expect.up_bits, expect.down_bits), "TCP ring != formula");
+            assert_eq!(acct, m * 32, "TCP accounted bits != payload");
+        }
+        println!("tcp ring check: m={m} values/peer, socket bits == ring formula ✓");
+        b.run("psync_grbs_R16_n8_d1M_TcpLoopback", || {
+            round += 1;
+            for tx in &go_txs {
+                tx.send(round).unwrap();
+            }
+            for _ in 0..n {
+                black_box(done_rx.recv().unwrap());
+            }
+        });
+        for tx in &go_txs {
+            tx.send(u64::MAX).unwrap();
+        }
+        for h in handles {
+            h.join().expect("tcp bench worker");
+        }
+    }
+
+    // ---- serialized bytes == accounted bits (threaded pool) ----
     // Ring (GRBS, chunk-aligned): measured per-worker traffic must equal the
     // ring-allreduce formula exactly.
-    let c = Grbs::new(16.0, d / 1024, 5);
+    let c: Arc<dyn Compressor> = Arc::new(Grbs::new(16.0, d / 1024, 5));
     let mut vs = base.clone();
-    let info = Backend::Threaded.collective().psync(&mut vs, None, &c, 77);
+    let info = Threaded::new().psync(&mut vs, None, &c, 77);
     let sel = info.selections[0].clone();
     let m = sel.count(d) as u64;
     assert_eq!(info.upload_bits_per_worker, payload_bits(&sel, d));
@@ -82,9 +172,9 @@ fn main() {
 
     // Parameter server (top-k): the upload is exactly the accounted
     // index+value payload; the download is the measured union aggregate.
-    let c = TopK::new(256.0);
+    let c: Arc<dyn Compressor> = Arc::new(TopK::new(256.0));
     let mut vs = base.clone();
-    let info = Backend::Threaded.collective().psync(&mut vs, None, &c, 78);
+    let info = Threaded::new().psync(&mut vs, None, &c, 78);
     let ctx = Ctx { round: 78, worker: 0 };
     let accounted = payload_bits(&c.select(ctx, &base[0]), d);
     let wire_cost = info.wire.expect("threaded backend measures traffic");
@@ -103,7 +193,7 @@ fn main() {
     let mut out = vec![0.0f32; d];
     b.run("wire_encode_decode_grbs_R16_d1M", || {
         let msg = wire::encode(&c, ctx, &base[0]);
-        wire::decode(&c, ctx, &msg, &mut out);
+        wire::decode(&c, ctx, &msg, &mut out).expect("valid frame");
         black_box(&out);
     });
 }

@@ -1,28 +1,54 @@
 //! Checkpointing: save/restore the flat training state.
 //!
 //! Long training runs (the paper's ImageNet runs take days) need restartable
-//! state.  Because the whole optimizer state lives in flat f32 vectors, a
-//! checkpoint is a tiny header + raw little-endian payloads:
+//! state; a distributed `cser worker` process additionally needs its rank's
+//! **complete** optimizer state, because the whole fleet restarts from the
+//! same step and must continue bit-identically.  Because that state lives in
+//! flat f32 vectors, a checkpoint is a tiny header + raw little-endian
+//! payloads:
 //!
 //! ```text
-//! magic "CSERCKPT" | version u32 | step u64 | n u32 | d u64 |
-//! n × d f32 (models) | flags u32 (bit0: has errors) | [n × d f32 errors]
+//! magic "CSERCKPT" | version u32 (=2) | step u64 | n u32 | d u64 |
+//! n × d f32 (models) |
+//! flags u32 (bit0: errors, bit1: momentum, bit2: anchors) |
+//! [n × d f32 errors] [n × d f32 momentum] [n × d f32 anchors]
 //! ```
+//!
+//! Version 1 captured only models + errors — everything visible through the
+//! `DistOptimizer` surface — which silently dropped the momentum buffers
+//! and QSparse anchors, so a "resumed" run diverged from the uninterrupted
+//! one on the first step.  [`Checkpoint::capture_engine`] reads the full
+//! `ErrorResetEngine` state (including the step counter the sync schedules
+//! key on) and [`Checkpoint::restore_engine`] puts it back, validated
+//! against the plan; the roundtrip is pinned **bit-identical** by the tests
+//! below (given the same gradient stream — the data pipeline is outside
+//! the checkpoint's scope, so a resumed trainer draws fresh minibatches).
 //!
 //! Integrity is protected by a FNV-1a checksum trailer; truncated or
 //! corrupted files fail loudly.
 
+use crate::engine::ErrorResetEngine;
+use crate::optimizer::DistOptimizer;
 use std::io::{Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"CSERCKPT";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
+
+const FLAG_ERRORS: u32 = 1;
+const FLAG_MOMENTUM: u32 = 2;
+const FLAG_ANCHORS: u32 = 4;
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct Checkpoint {
     pub step: u64,
     pub models: Vec<Vec<f32>>,
+    /// Per-worker residual errors e_i (plans that track them).
     pub errors: Option<Vec<Vec<f32>>>,
+    /// Per-worker momentum buffers m_i (β > 0).
+    pub momentum: Option<Vec<Vec<f32>>>,
+    /// Per-worker consensus anchors x̂ (QSparse/local-SGD resync plans).
+    pub anchors: Option<Vec<Vec<f32>>>,
 }
 
 fn fnv1a(data: &[u8], mut h: u64) -> u64 {
@@ -34,8 +60,12 @@ fn fnv1a(data: &[u8], mut h: u64) -> u64 {
 }
 
 impl Checkpoint {
-    /// Capture from a running optimizer.
-    pub fn capture(opt: &dyn crate::optimizer::DistOptimizer, step: u64) -> Self {
+    /// Capture what the `DistOptimizer` surface exposes: models + errors.
+    ///
+    /// **Insufficient for resume** whenever the optimizer carries momentum
+    /// or anchors — prefer [`Checkpoint::capture_engine`], which sees the
+    /// whole state (every built-in optimizer is an engine).
+    pub fn capture(opt: &dyn DistOptimizer, step: u64) -> Self {
         let n = opt.n();
         let models = (0..n).map(|i| opt.worker_model(i).to_vec()).collect();
         let errors = if opt.local_error(0).is_some() {
@@ -43,7 +73,37 @@ impl Checkpoint {
         } else {
             None
         };
-        Checkpoint { step, models, errors }
+        Checkpoint { step, models, errors, momentum: None, anchors: None }
+    }
+
+    /// Capture the complete engine state — models, errors, momentum,
+    /// anchors, and the step counter — everything a bit-identical resume
+    /// needs.
+    pub fn capture_engine(e: &ErrorResetEngine) -> Self {
+        let n = e.n();
+        let grab = |f: &dyn Fn(usize) -> Option<Vec<f32>>| -> Option<Vec<Vec<f32>>> {
+            f(0).is_some().then(|| (0..n).map(|i| f(i).unwrap()).collect())
+        };
+        Checkpoint {
+            step: e.step_count(),
+            models: (0..n).map(|i| e.worker_model(i).to_vec()).collect(),
+            errors: grab(&|i| e.local_error(i).map(|v| v.to_vec())),
+            momentum: grab(&|i| e.worker_momentum(i).map(|v| v.to_vec())),
+            anchors: grab(&|i| e.worker_anchor(i).map(|v| v.to_vec())),
+        }
+    }
+
+    /// Put a captured state back into a freshly-built engine (same plan,
+    /// same n, same d — validated).  The restored engine continues
+    /// bit-identically to the uninterrupted run.
+    pub fn restore_engine(&self, e: &mut ErrorResetEngine) -> Result<(), String> {
+        e.restore(
+            self.step,
+            &self.models,
+            self.errors.as_deref(),
+            self.momentum.as_deref(),
+            self.anchors.as_deref(),
+        )
     }
 
     pub fn save(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
@@ -55,19 +115,27 @@ impl Checkpoint {
         let d = self.models[0].len() as u64;
         buf.extend_from_slice(&n.to_le_bytes());
         buf.extend_from_slice(&d.to_le_bytes());
-        for m in &self.models {
-            for v in m {
-                buf.extend_from_slice(&v.to_le_bytes());
-            }
-        }
-        let flags: u32 = self.errors.is_some() as u32;
-        buf.extend_from_slice(&flags.to_le_bytes());
-        if let Some(es) = &self.errors {
-            for e in es {
-                for v in e {
+        let write_mat = |buf: &mut Vec<u8>, mat: &[Vec<f32>]| {
+            for row in mat {
+                for v in row {
                     buf.extend_from_slice(&v.to_le_bytes());
                 }
             }
+        };
+        write_mat(&mut buf, &self.models);
+        let mut flags = 0u32;
+        for (bit, mat) in [
+            (FLAG_ERRORS, &self.errors),
+            (FLAG_MOMENTUM, &self.momentum),
+            (FLAG_ANCHORS, &self.anchors),
+        ] {
+            if mat.is_some() {
+                flags |= bit;
+            }
+        }
+        buf.extend_from_slice(&flags.to_le_bytes());
+        for mat in [&self.errors, &self.momentum, &self.anchors].into_iter().flatten() {
+            write_mat(&mut buf, mat);
         }
         let sum = fnv1a(&buf, 0xcbf29ce484222325);
         buf.extend_from_slice(&sum.to_le_bytes());
@@ -105,8 +173,13 @@ impl Checkpoint {
         let step = u64::from_le_bytes(take(&mut off, 8).try_into().unwrap());
         let n = u32::from_le_bytes(take(&mut off, 4).try_into().unwrap()) as usize;
         let d = u64::from_le_bytes(take(&mut off, 8).try_into().unwrap()) as usize;
-        let need = n * d * 4;
-        if body.len() < off + need + 4 {
+        // Overflow-safe guards: a crafted header's n·d must stay on the Err
+        // path, not wrap into an out-of-bounds slice (or a debug panic).
+        let need = n
+            .checked_mul(d)
+            .and_then(|nd| nd.checked_mul(4))
+            .ok_or("implausible checkpoint dimensions")?;
+        if body.len().saturating_sub(off).saturating_sub(4) < need {
             return Err("checkpoint truncated (models)".into());
         }
         let read_mat = |off: &mut usize| -> Vec<Vec<f32>> {
@@ -123,23 +196,37 @@ impl Checkpoint {
         };
         let models = read_mat(&mut off);
         let flags = u32::from_le_bytes(take(&mut off, 4).try_into().unwrap());
-        let errors = if flags & 1 != 0 {
-            if body.len() < off + need {
-                return Err("checkpoint truncated (errors)".into());
+        if flags & !(FLAG_ERRORS | FLAG_MOMENTUM | FLAG_ANCHORS) != 0 {
+            return Err(format!("unknown checkpoint section flags {flags:#x}"));
+        }
+        let mut read_section = |bit: u32, what: &str| -> Result<Option<Vec<Vec<f32>>>, String> {
+            if flags & bit == 0 {
+                return Ok(None);
             }
-            Some(read_mat(&mut off))
-        } else {
-            None
+            if body.len().saturating_sub(off) < need {
+                return Err(format!("checkpoint truncated ({what})"));
+            }
+            Ok(Some(read_mat(&mut off)))
         };
-        Ok(Checkpoint { step, models, errors })
+        let errors = read_section(FLAG_ERRORS, "errors")?;
+        let momentum = read_section(FLAG_MOMENTUM, "momentum")?;
+        let anchors = read_section(FLAG_ANCHORS, "anchors")?;
+        Ok(Checkpoint { step, models, errors, momentum, anchors })
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::compressor::Grbs;
-    use crate::optimizer::{Cser, DistOptimizer};
+    use crate::compressor::{Compressor, Grbs, RandK, TopK};
+    use crate::engine::CommPlan;
+    use crate::optimizer::Cser;
+
+    fn ckpt_dir() -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("cser_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
 
     #[test]
     fn roundtrip_with_errors() {
@@ -150,23 +237,132 @@ mod tests {
             opt.step(&grads, 0.1);
         }
         let ck = Checkpoint::capture(&opt, 5);
-        let dir = std::env::temp_dir().join("cser_ckpt_test");
-        std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("a.ckpt");
+        let path = ckpt_dir().join("a.ckpt");
         ck.save(&path).unwrap();
         let back = Checkpoint::load(&path).unwrap();
         assert_eq!(back, ck);
         assert_eq!(back.step, 5);
         assert_eq!(back.models.len(), 3);
         assert!(back.errors.is_some());
+        assert!(back.momentum.is_none(), "the DistOptimizer surface cannot see momentum");
+    }
+
+    /// Deterministic per-worker gradient of a quadratic with a worker bias —
+    /// a pure function of (worker, model), so two runs that agree on models
+    /// agree on every subsequent gradient.
+    fn grads_at(o: &dyn DistOptimizer, n: usize, d: usize) -> Vec<Vec<f32>> {
+        (0..n)
+            .map(|w| {
+                o.worker_model(w)
+                    .iter()
+                    .enumerate()
+                    .map(|(j, x)| x - 1.0 + 0.04 * ((w * 29 + 5 * j) % 13) as f32)
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn killed_and_resumed_engine_is_bit_identical() {
+        // The distributed-run contract: capture mid-run (between resets, so
+        // errors, momentum, and anchors are all live), save to disk, rebuild
+        // a fresh engine, restore, continue — every worker's model and error
+        // must equal the uninterrupted run bit for bit.  V1 checkpoints
+        // dropped momentum/anchors and failed exactly this.
+        type MkPlan = fn() -> CommPlan;
+        let cases: [(&str, MkPlan); 3] = [
+            ("cser-grbs", || {
+                CommPlan::cser(Box::new(Grbs::new(2.0, 6, 7)), Box::new(Grbs::new(4.0, 6, 9)), 2)
+            }),
+            ("cser-perworker", || {
+                CommPlan::cser(Box::new(RandK::new(4.0)), Box::new(TopK::new(4.0)), 2)
+            }),
+            ("qsparse", || CommPlan::qsparse(Box::new(Grbs::new(2.0, 6, 5)) as Box<dyn Compressor>, 3)),
+        ];
+        let (n, d) = (3, 24);
+        let init: Vec<f32> = (0..d).map(|j| (j as f32 * 0.29).sin() * 0.3).collect();
+        for (name, mk) in cases {
+            let mut full = crate::engine::ErrorResetEngine::new(&init, n, 0.9, mk());
+            for _ in 0..7 {
+                let gs = grads_at(&full, n, d);
+                full.step(&gs, 0.05);
+            }
+            let ck = Checkpoint::capture_engine(&full);
+            assert_eq!(ck.step, 7, "{name}");
+            assert!(ck.momentum.is_some(), "{name}: β > 0 must capture momentum");
+            let path = ckpt_dir().join(format!("resume_{name}.ckpt"));
+            ck.save(&path).unwrap();
+            let back = Checkpoint::load(&path).unwrap();
+            assert_eq!(back, ck, "{name}: disk roundtrip");
+
+            let mut resumed = crate::engine::ErrorResetEngine::new(&init, n, 0.9, mk());
+            back.restore_engine(&mut resumed).unwrap();
+            assert_eq!(resumed.step_count(), 7, "{name}");
+            for _ in 0..5 {
+                let gs = grads_at(&full, n, d);
+                full.step(&gs, 0.05);
+                let gs = grads_at(&resumed, n, d);
+                resumed.step(&gs, 0.05);
+            }
+            for i in 0..n {
+                assert_eq!(
+                    full.worker_model(i),
+                    resumed.worker_model(i),
+                    "{name}: worker {i} model diverged after resume"
+                );
+                assert_eq!(full.local_error(i), resumed.local_error(i), "{name}: error {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn restore_into_wrong_plan_is_rejected() {
+        let init = vec![0.1f32; 16];
+        let mk_cser =
+            || CommPlan::cser(Box::new(Grbs::new(2.0, 4, 1)), Box::new(Grbs::new(2.0, 4, 2)), 2);
+        let mut e = crate::engine::ErrorResetEngine::new(&init, 2, 0.9, mk_cser());
+        let gs = grads_at(&e, 2, 16);
+        e.step(&gs, 0.1);
+        let ck = Checkpoint::capture_engine(&e);
+        // β = 0 engine has no momentum buffers → section mismatch
+        let mut other = crate::engine::ErrorResetEngine::new(&init, 2, 0.0, mk_cser());
+        assert!(ck.restore_engine(&mut other).is_err());
+        // different worker count
+        let mut other = crate::engine::ErrorResetEngine::new(&init, 3, 0.9, mk_cser());
+        assert!(ck.restore_engine(&mut other).is_err());
+    }
+
+    #[test]
+    fn hostile_dimensions_error_instead_of_panicking() {
+        // Checksum-valid files with absurd (n, d) headers must stay on the
+        // Err path: both the n·d·4 product overflow and the offset+need
+        // overflow the product check alone would miss.
+        for (n, d) in [(u32::MAX as u64, u64::MAX), (1u64, (usize::MAX / 8) as u64)] {
+            let mut buf = Vec::new();
+            buf.extend_from_slice(MAGIC);
+            buf.extend_from_slice(&VERSION.to_le_bytes());
+            buf.extend_from_slice(&7u64.to_le_bytes());
+            buf.extend_from_slice(&(n as u32).to_le_bytes());
+            buf.extend_from_slice(&d.to_le_bytes());
+            buf.extend_from_slice(&0u32.to_le_bytes());
+            let sum = fnv1a(&buf, 0xcbf29ce484222325);
+            buf.extend_from_slice(&sum.to_le_bytes());
+            let path = ckpt_dir().join("hostile.ckpt");
+            std::fs::write(&path, &buf).unwrap();
+            assert!(Checkpoint::load(&path).is_err(), "n={n} d={d}");
+        }
     }
 
     #[test]
     fn corruption_detected() {
-        let ck = Checkpoint { step: 1, models: vec![vec![1.0, 2.0]], errors: None };
-        let dir = std::env::temp_dir().join("cser_ckpt_test");
-        std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("b.ckpt");
+        let ck = Checkpoint {
+            step: 1,
+            models: vec![vec![1.0, 2.0]],
+            errors: None,
+            momentum: None,
+            anchors: None,
+        };
+        let path = ckpt_dir().join("b.ckpt");
         ck.save(&path).unwrap();
         let mut bytes = std::fs::read(&path).unwrap();
         let mid = bytes.len() / 2;
@@ -178,10 +374,14 @@ mod tests {
 
     #[test]
     fn truncation_detected() {
-        let ck = Checkpoint { step: 2, models: vec![vec![0.0; 64]; 2], errors: None };
-        let dir = std::env::temp_dir().join("cser_ckpt_test");
-        std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("c.ckpt");
+        let ck = Checkpoint {
+            step: 2,
+            models: vec![vec![0.0; 64]; 2],
+            errors: None,
+            momentum: None,
+            anchors: None,
+        };
+        let path = ckpt_dir().join("c.ckpt");
         ck.save(&path).unwrap();
         let bytes = std::fs::read(&path).unwrap();
         std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();

@@ -11,13 +11,14 @@
 //! fraction, then price the round with the alpha-beta cost model.  The
 //! resulting curves are the substitutes for Figures 4/5/8/9.
 
+use super::checkpoint::Checkpoint;
 use super::metrics::{EpochPoint, RunRecord};
 use crate::data::{ClassDataset, Shard};
 use crate::engine::ErrorResetEngine;
 use crate::models::GradModel;
 use crate::network::CostModel;
 use crate::optimizer::{DistOptimizer, RoundStats};
-use crate::transport::Backend;
+use crate::transport::{peer, Backend, TcpTransport};
 use crate::util::pool::scope_map;
 use std::sync::Mutex;
 
@@ -38,16 +39,25 @@ pub struct TrainCfg {
     /// Stop early and mark diverged when train loss exceeds
     /// `divergence_factor * initial_loss` or becomes non-finite.
     pub divergence_factor: f64,
-    /// Communication backend for the optimizer's collectives: the default
-    /// in-process path, `Backend::Threaded` for the parallel-trainer mode
-    /// (one OS thread per worker moving serialized messages per collective),
-    /// or `Backend::Resident` for the worker-resident mode (engine
-    /// optimizers only: persistent worker threads own their `WorkerState`
-    /// and run gradient → sync → apply end to end — no central gradients
-    /// array, no per-step barrier in this trainer).  This is the sole source
-    /// of truth: `train_classifier` installs it on the optimizer, replacing
-    /// any collective set earlier via `DistOptimizer::set_collective`.
+    /// Communication backend: the default in-process path or
+    /// `Backend::Threaded` for the parallel-trainer mode (central step loop
+    /// over the persistent serialized-message pool — `train_classifier`
+    /// installs it on the optimizer, replacing any collective set earlier
+    /// via `DistOptimizer::set_collective`); `Backend::Resident` for the
+    /// worker-resident mode (engine optimizers only: persistent worker
+    /// threads own their `WorkerState` and run gradient → compress → sync →
+    /// apply end to end over peer-owned mesh collectives — no central
+    /// gradients array, no per-step barrier, no installed `Collective`); or
+    /// `Backend::Tcp` for real multi-process training (this process is one
+    /// rank of a socket fleet; see `train_classifier_tcp`).
     pub backend: Backend,
+    /// Checkpoint path for distributed runs: saved after every epoch,
+    /// restored (and the run resumed) when the file already exists at
+    /// startup.  Per-rank — every rank of a job needs its own file, and the
+    /// whole fleet must restart together (validated at startup).  Restores
+    /// the exact optimizer state; shard sampling and the run record restart
+    /// (see `train_classifier_tcp`).
+    pub ckpt: Option<std::path::PathBuf>,
 }
 
 impl TrainCfg {
@@ -64,6 +74,7 @@ impl TrainCfg {
             threads: crate::util::pool::default_threads(),
             divergence_factor: 5.0,
             backend: Backend::default(),
+            ckpt: None,
         }
     }
 }
@@ -106,6 +117,11 @@ pub fn train_classifier(
     opt: &mut dyn DistOptimizer,
     cfg: &TrainCfg,
 ) -> RunRecord {
+    if let Backend::Tcp { bind, peers, rank } = &cfg.backend {
+        let (bind, peers, rank) = (bind.clone(), *peers, *rank);
+        let engine = opt.as_engine().expect("Backend::Tcp requires an engine optimizer");
+        return train_classifier_tcp(model, train, test, engine, cfg, &bind, peers, rank);
+    }
     if cfg.backend.worker_resident() {
         if let Some(engine) = opt.as_engine() {
             return train_classifier_resident(model, train, test, engine, cfg);
@@ -213,7 +229,9 @@ fn train_classifier_resident(
     let n = engine.n();
     let d = engine.dim();
     assert_eq!(d, model.dim());
-    engine.set_collective(cfg.backend.collective());
+    // No collective is installed: resident workers execute the peer-owned
+    // mesh collectives directly (`run_resident` never consults the central
+    // `Collective`).
     let shards: Vec<Mutex<Shard>> =
         Shard::split(train.len(), n, cfg.seed).into_iter().map(Mutex::new).collect();
     let iters_per_epoch = (train.len() / (cfg.batch_per_worker * n)).max(1);
@@ -264,6 +282,155 @@ fn train_classifier_resident(
             f64::NAN
         };
         points.push(EpochPoint { epoch, train_loss, test_acc, cum_bits, cum_seconds });
+        if diverged {
+            break;
+        }
+    }
+
+    RunRecord {
+        name: String::new(),
+        optimizer: engine.name(),
+        overall_rc: f64::NAN,
+        lr: cfg.lr,
+        seed: cfg.seed,
+        points,
+        diverged,
+    }
+}
+
+/// Real multi-process training: this process is worker `rank` of an
+/// `n_peers`-process job meeting at `rendezvous` (rank 0 hosts it).  The
+/// engine holds exactly the local rank's `WorkerState`; every collective is
+/// executed peer-owned over persistent TCP sockets
+/// (`ErrorResetEngine::run_distributed`).
+///
+/// Every rank computes the full epoch schedule from the same `cfg`, so the
+/// fleet stays on one control-flow path: the divergence brake rides the
+/// in-step loss vote, the epoch-level divergence verdict is agreed by a
+/// fleet-wide OR, and x̄ for evaluation is a dense (uncharged) mean across
+/// ranks — bit-identical to the central trainer's `mean_model`.  The
+/// returned `RunRecord` is therefore identical on every rank for plans that
+/// synchronize every step, and rank 0's record is the job's record.
+///
+/// With `cfg.ckpt` set, the complete engine state is checkpointed after
+/// every epoch and restored on startup when the file exists — a killed
+/// fleet restarts from the last epoch boundary with the exact optimizer
+/// state (models, errors, momentum, anchors, step counter).  Two scope
+/// limits, by design: the shard samplers are not part of the checkpoint,
+/// so post-resume minibatches are a fresh draw of the same distribution
+/// rather than a replay; and the emitted `RunRecord` (points, cumulative
+/// bit/time counters, divergence reference) covers only the post-resume
+/// epochs.
+#[allow(clippy::too_many_arguments)]
+fn train_classifier_tcp(
+    model: &dyn GradModel,
+    train: &ClassDataset,
+    test: &ClassDataset,
+    engine: &mut ErrorResetEngine,
+    cfg: &TrainCfg,
+    rendezvous: &str,
+    n_peers: usize,
+    rank: usize,
+) -> RunRecord {
+    assert_eq!(engine.n(), 1, "a Backend::Tcp engine holds exactly the local rank's worker");
+    let d = engine.dim();
+    assert_eq!(d, model.dim());
+    let n = n_peers;
+    let mut tp = TcpTransport::connect(rendezvous, rank, n)
+        .unwrap_or_else(|e| panic!("joining job at {rendezvous} as rank {rank}/{n}: {e}"));
+
+    // Deterministic sharding: every rank derives the same split from the
+    // shared seed and takes its own slice.
+    let shard = Mutex::new(Shard::split(train.len(), n, cfg.seed).swap_remove(rank));
+    let iters_per_epoch = (train.len() / (cfg.batch_per_worker * n)).max(1);
+    let grad_fn = crate::engine::as_grad(|_w, xw: &[f32], out: &mut [f32]| {
+        let mut batch = Vec::with_capacity(cfg.batch_per_worker);
+        shard.lock().unwrap().sample_batch(cfg.batch_per_worker, &mut batch);
+        model.loss_grad(xw, train, &batch, out)
+    });
+
+    let mut start_epoch = 0usize;
+    if let Some(path) = &cfg.ckpt {
+        if path.exists() {
+            let ck = Checkpoint::load(path)
+                .unwrap_or_else(|e| panic!("rank {rank}: loading checkpoint: {e}"));
+            ck.restore_engine(engine)
+                .unwrap_or_else(|e| panic!("rank {rank}: restoring checkpoint: {e}"));
+            start_epoch = (engine.step_count() / iters_per_epoch as u64) as usize;
+        }
+    }
+    // The fleet must resume from one step; a rank missing its checkpoint
+    // (or holding a stale one) would otherwise desynchronize the epoch
+    // loop and wedge every collective.  Integer agreement — a float mean
+    // would re-round and reject valid resumes at most fleet sizes.
+    let same = peer::all_equal(&mut tp, start_epoch as u64, 0)
+        .unwrap_or_else(|e| panic!("rank {rank}: start-epoch agreement: {e}"));
+    assert!(
+        same,
+        "rank {rank} resumed at epoch {start_epoch} but the fleet disagrees — \
+         restart all ranks from matching checkpoints"
+    );
+
+    let mut xbar = vec![0.0f32; d];
+    let mut points = Vec::with_capacity(cfg.epochs);
+    let mut diverged = false;
+    let mut initial_loss = f64::NAN;
+    let mut cum_bits = 0.0f64;
+    let mut cum_seconds = 0.0f64;
+    let scale = cfg.paper_d as f64 / d as f64;
+
+    for epoch in start_epoch..cfg.epochs {
+        let frac = epoch as f64 / cfg.epochs as f64;
+        let eta = (cfg.lr * (cfg.lr_multiplier)(&cfg.schedule, frac)) as f32;
+        // In-flight divergence brake: the loss vote at each syncing step
+        // broadcasts one verdict, so the fleet stops on the same step (only
+        // rank 0's threshold is consulted).  The first epoch has no
+        // reference loss yet and runs unguarded; the epoch-level check
+        // below catches anything it let through.
+        let stop_loss = if initial_loss.is_finite() {
+            cfg.divergence_factor * initial_loss
+        } else {
+            f64::INFINITY
+        };
+        let reports = engine
+            .run_distributed(&mut tp, iters_per_epoch, eta, stop_loss, &grad_fn)
+            .unwrap_or_else(|e| panic!("rank {rank}: epoch {epoch}: {e}"));
+        let mut loss_sum = 0.0f64;
+        for rep in &reports {
+            if initial_loss.is_nan() {
+                initial_loss = rep.loss;
+            }
+            loss_sum += rep.loss;
+            if !rep.loss.is_finite() || rep.loss > cfg.divergence_factor * initial_loss {
+                diverged = true;
+            }
+            price_step(cfg, scale, &rep.stats, &mut cum_bits, &mut cum_seconds);
+        }
+        let train_loss = loss_sum / reports.len().max(1) as f64;
+        // x̄ across the fleet, identical on every rank: replicated plans
+        // already agree bit-exactly; otherwise a dense, uncharged mean in
+        // rank order — the same arithmetic as the central `mean_model`.
+        xbar.copy_from_slice(engine.worker_model(0));
+        if !engine.comm_plan().replicated() {
+            peer::mean_dense(&mut tp, &mut xbar, engine.step_count())
+                .unwrap_or_else(|e| panic!("rank {rank}: evaluating mean model: {e}"));
+        }
+        let test_acc = if xbar.iter().all(|v| v.is_finite()) {
+            model.accuracy(&xbar, test) as f64
+        } else {
+            diverged = true;
+            f64::NAN
+        };
+        points.push(EpochPoint { epoch, train_loss, test_acc, cum_bits, cum_seconds });
+        if let Some(path) = &cfg.ckpt {
+            if let Err(e) = Checkpoint::capture_engine(engine).save(path) {
+                eprintln!("warning: rank {rank}: checkpoint save failed: {e}");
+            }
+        }
+        // Liveness: local losses can differ on barrier-free local steps, so
+        // the break must be a fleet-wide agreement, not a local decision.
+        diverged = peer::agree(&mut tp, diverged, engine.step_count())
+            .unwrap_or_else(|e| panic!("rank {rank}: divergence agreement: {e}"));
         if diverged {
             break;
         }

@@ -11,20 +11,32 @@
 //!   owned by its worker;
 //! * [`CommPlan`] — the declarative schedule (which compressor fires on
 //!   which cadence: C2 every step, C1 every H, dense fallback);
-//! * [`ErrorResetEngine`] — the single generic executor.  It implements
-//!   [`DistOptimizer`] for the classic central call path (bit-identical to
-//!   the seed implementations on the in-process/PS collectives; the parity
-//!   suite in `rust/tests/engine_parity.rs` pins this), and adds
-//!   [`ErrorResetEngine::run_resident`]: the worker-resident mode where each
-//!   OS thread owns its `WorkerState` and runs gradient → compress → sync →
-//!   apply end to end, meeting the other workers only at the collective — no
-//!   central gradients array, no lock-step barrier in the trainer.
+//! * [`ErrorResetEngine`] — the single generic executor, in three modes:
+//!   * **central** — the classic [`DistOptimizer::step`] call path over a
+//!     swappable [`Collective`] (bit-identical to the seed implementations
+//!     on the in-process/PS collectives; pinned by
+//!     `rust/tests/engine_parity.rs`);
+//!   * **worker-resident** ([`ErrorResetEngine::run_resident`]) — one
+//!     persistent OS thread per worker, each owning its `WorkerState` and a
+//!     `transport::mesh` endpoint, running gradient → compress → sync →
+//!     apply end to end and executing **its own side** of every collective
+//!     (`transport::peer`) — no central gradients array, no lock-step
+//!     barrier, no per-call thread spawns;
+//!   * **distributed** ([`ErrorResetEngine::run_distributed`]) — the same
+//!     per-worker loop, but the engine holds exactly one rank's state and
+//!     the peer transport is a real network (`transport::tcp`): N processes,
+//!     one training job.
+//!
+//! The resident and distributed modes share [`drive_worker`] verbatim, so
+//! whatever holds for n threads over channels holds for n processes over
+//! sockets.  The divergence brake rides [`peer::vote`]: each syncing step
+//! folds the per-worker losses into a mean at rank 0 and broadcasts one
+//! verdict, so the fleet stops on the same step with no extra barrier.
 //!
 //! The legacy structs (`optimizer::{Cser, CserImpl2, EfSgd, QsparseLocalSgd,
 //! FullSgd}`) survive as thin deprecated wrappers over this engine.
 
 pub mod plan;
-pub mod resident;
 pub mod worker;
 
 pub use plan::{CommPlan, RoundRule, StepRule};
@@ -32,14 +44,16 @@ pub use worker::{descent_into, WorkerState};
 
 use crate::compressor::{Ctx, Selection};
 use crate::optimizer::{DistOptimizer, RoundStats};
+use crate::transport::mesh::channel_mesh;
+use crate::transport::peer::{self, PeerTransport, TransportError};
 use crate::transport::Collective;
 use crate::util::math;
-use resident::Rendezvous;
 use std::sync::Arc;
 use worker::{put_field, take_field};
 
-/// What one step produced under [`ErrorResetEngine::run_resident`]: the mean
-/// worker loss and the communication stats (identical on every worker).
+/// What one step produced under the worker-resident / distributed modes:
+/// the fleet-mean worker loss (own loss on steps that never synchronized)
+/// and the communication stats (identical on every worker by protocol).
 #[derive(Debug, Clone, Copy)]
 pub struct StepReport {
     pub loss: f64,
@@ -111,23 +125,102 @@ impl ErrorResetEngine {
         &self.plan
     }
 
+    /// Steps executed so far (checkpoint metadata).
+    pub fn step_count(&self) -> u64 {
+        self.t
+    }
+
+    /// Worker i's momentum buffer, when the engine runs with β > 0.
+    pub fn worker_momentum(&self, i: usize) -> Option<&[f32]> {
+        if self.workers[i].m.is_empty() {
+            None
+        } else {
+            Some(&self.workers[i].m)
+        }
+    }
+
+    /// Worker i's consensus anchor x̂ (QSparse/local-SGD resync plans).
+    pub fn worker_anchor(&self, i: usize) -> Option<&[f32]> {
+        if self.workers[i].xhat.is_empty() {
+            None
+        } else {
+            Some(&self.workers[i].xhat)
+        }
+    }
+
+    /// Restore the full optimizer state a checkpoint captured: per-worker
+    /// models plus — when the plan maintains them — errors, momentum, and
+    /// anchors, and the step counter the schedules key on.  Every section's
+    /// presence and shape must match this engine's plan exactly; a restored
+    /// run then continues **bit-identically** to the uninterrupted one
+    /// (`coordinator::checkpoint` tests pin this).
+    pub fn restore(
+        &mut self,
+        step: u64,
+        models: &[Vec<f32>],
+        errors: Option<&[Vec<f32>]>,
+        momentum: Option<&[Vec<f32>]>,
+        anchors: Option<&[Vec<f32>]>,
+    ) -> Result<(), String> {
+        let n = self.workers.len();
+        let d = self.d;
+        let section = |name: &str,
+                       data: Option<&[Vec<f32>]>,
+                       needed: bool|
+         -> Result<(), String> {
+            match (data, needed) {
+                (None, false) => Ok(()),
+                (Some(rows), true) => {
+                    if rows.len() != n {
+                        return Err(format!("{name}: checkpoint has {} workers, engine has {n}", rows.len()));
+                    }
+                    if let Some(bad) = rows.iter().find(|r| r.len() != d) {
+                        return Err(format!("{name}: vector length {} != model dim {d}", bad.len()));
+                    }
+                    Ok(())
+                }
+                (None, true) => Err(format!("checkpoint is missing the {name} this plan maintains")),
+                (Some(_), false) => Err(format!("checkpoint carries {name} this plan does not use")),
+            }
+        };
+        section("models", Some(models), true)?;
+        section("errors", errors, self.plan.tracks_error())?;
+        section("momentum", momentum, self.beta > 0.0)?;
+        section("anchors", anchors, matches!(self.plan.round, RoundRule::Resync { .. }))?;
+        for (i, w) in self.workers.iter_mut().enumerate() {
+            w.x.copy_from_slice(&models[i]);
+            if let Some(es) = errors {
+                w.e.copy_from_slice(&es[i]);
+            }
+            if let Some(ms) = momentum {
+                w.m.copy_from_slice(&ms[i]);
+            }
+            if let Some(hs) = anchors {
+                w.xhat.copy_from_slice(&hs[i]);
+            }
+        }
+        self.t = step;
+        Ok(())
+    }
+
     /// Worker-resident execution: run `steps` iterations with one OS thread
-    /// per worker.  Each thread owns its [`WorkerState`], computes its own
-    /// gradient via `grad(worker, model, out) -> loss`, performs the local
-    /// descent/apply phases independently, and meets the other workers only
-    /// at the plan's collectives (through whatever [`Collective`] backend is
-    /// installed — `set_collective(Backend::Threaded.collective())` gives
-    /// real serialized wire traffic under a worker-resident loop).
+    /// per worker.  Each thread owns its [`WorkerState`] and a
+    /// `transport::mesh` channel endpoint, computes its own gradient via
+    /// `grad(worker, model, out) -> loss`, performs the local descent/apply
+    /// phases independently, and executes **its own side** of the plan's
+    /// collectives through `transport::peer` — serialized wire frames, ring
+    /// or parameter-server schedule, no runner threads spawned per call.
     ///
-    /// On the in-process backend this is bit-identical to calling
-    /// [`DistOptimizer::step`] `steps` times with the same gradients (tested
-    /// below): the collectives see the same vectors in the same worker
-    /// order, and every other phase is worker-local arithmetic.
+    /// Numerics vs the central loop: parameter-server-path collectives are
+    /// bit-identical; ring-path (shared-support) collectives agree within
+    /// the documented f32 reduction-order tolerance (the tests below pin
+    /// both).  If a worker thread dies, its mesh endpoint drops and every
+    /// peer's next collective errors instead of deadlocking; the panic then
+    /// propagates through the scope join.
     ///
-    /// `stop_loss` is a divergence brake: at each collective the leader
-    /// averages the deposited per-worker losses and, if the mean exceeds the
-    /// threshold (or is non-finite), every worker stops after the current
-    /// step — the same verdict on the same step, with no extra barrier.
+    /// `stop_loss` is a divergence brake: at each syncing step the losses
+    /// are folded into a mean at rank 0 ([`peer::vote`]) and one verdict is
+    /// broadcast, so every worker stops after the same step.
     pub fn run_resident(
         &mut self,
         steps: usize,
@@ -152,37 +245,18 @@ impl ErrorResetEngine {
             return reports;
         }
 
-        let rz = Rendezvous::new(n);
         let plan = &self.plan;
         let beta = self.beta;
-        let coll = &self.coll;
         let t0 = self.t;
         let mut per_worker: Vec<(u64, Vec<StepReport>)> = Vec::with_capacity(n);
+        let mesh = channel_mesh(n);
         std::thread::scope(|s| {
             let mut handles = Vec::with_capacity(n);
-            for w in self.workers.iter_mut() {
-                let rz = &rz;
+            for (w, mut tp) in self.workers.iter_mut().zip(mesh) {
                 handles.push(s.spawn(move || {
-                    // if this thread unwinds (e.g. the user's gradient fn
-                    // panics), poison the rendezvous so the other workers
-                    // panic out of their waits instead of deadlocking
-                    let _poison = resident::PoisonGuard::new(rz);
-                    if w.g.len() != d {
-                        w.g = vec![0.0f32; d];
-                    }
-                    let mut t = t0;
-                    let mut reports = Vec::with_capacity(steps);
-                    for _ in 0..steps {
-                        t += 1;
-                        let loss = grad(w.id, &w.x, &mut w.g) as f64;
-                        let (stats, stop) =
-                            resident_step(plan, beta, coll, rz, w, t, eta, loss, stop_loss, d);
-                        reports.push(StepReport { loss, stats });
-                        if stop {
-                            break;
-                        }
-                    }
-                    (t, reports)
+                    let wid = w.id;
+                    drive_worker(plan, beta, &mut tp, w, t0, steps, eta, stop_loss, d, grad)
+                        .unwrap_or_else(|e| panic!("resident worker {wid}: {e}"))
                 }));
             }
             for h in handles {
@@ -202,11 +276,40 @@ impl ErrorResetEngine {
             })
             .collect()
     }
+
+    /// Distributed execution: this engine holds exactly **one** worker — the
+    /// local rank's — and `tp` connects it to the other ranks (in practice a
+    /// [`crate::transport::TcpTransport`]; the resident mode's mesh endpoint
+    /// satisfies the same trait, which is what the equivalence tests drive).
+    /// Runs the identical per-worker loop as `run_resident`, so an N-process
+    /// job matches the N-thread and central references: bit-identically on
+    /// parameter-server paths, within the documented f32 ring tolerance on
+    /// shared-support paths.
+    pub fn run_distributed(
+        &mut self,
+        tp: &mut dyn PeerTransport,
+        steps: usize,
+        eta: f32,
+        stop_loss: f64,
+        grad: GradFn,
+    ) -> Result<Vec<StepReport>, TransportError> {
+        assert_eq!(
+            self.workers.len(),
+            1,
+            "a distributed engine holds exactly the local rank's worker (build with n = 1)"
+        );
+        let w = &mut self.workers[0];
+        w.id = tp.rank();
+        let (t, reports) =
+            drive_worker(&self.plan, self.beta, tp, w, self.t, steps, eta, stop_loss, self.d, grad)?;
+        self.t = t;
+        Ok(reports)
+    }
 }
 
 // ---------------------------------------------------------------------------
-// Per-worker phases shared verbatim by the central and resident paths — the
-// numerical-equivalence guarantee lives in this sharing.
+// Per-worker phases shared verbatim by the central and peer-driven paths —
+// the numerical-equivalence guarantee lives in this sharing.
 // ---------------------------------------------------------------------------
 
 /// QSparse sync message: q_i = e_i + (x_i − x̂), built into the p buffer.
@@ -307,7 +410,7 @@ impl DistOptimizer for ErrorResetEngine {
                 }
                 let mut qs = take_field(&mut self.workers, |w| &mut w.p);
                 let mut es = take_field(&mut self.workers, |w| &mut w.e);
-                let round = self.coll.exchange_mean(&mut qs, Some(&mut es), c.as_ref(), t);
+                let round = self.coll.exchange_mean(&mut qs, Some(&mut es), c, t);
                 put_field(&mut self.workers, qs, |w| &mut w.p);
                 put_field(&mut self.workers, es, |w| &mut w.e);
                 for w in self.workers.iter_mut() {
@@ -334,7 +437,7 @@ impl DistOptimizer for ErrorResetEngine {
                 }
                 let mut qs = take_field(&mut self.workers, |w| &mut w.p);
                 let mut es = take_field(&mut self.workers, |w| &mut w.e);
-                let round = self.coll.exchange_mean(&mut qs, Some(&mut es), c1.as_ref(), t);
+                let round = self.coll.exchange_mean(&mut qs, Some(&mut es), c1, t);
                 put_field(&mut self.workers, qs, |w| &mut w.p);
                 put_field(&mut self.workers, es, |w| &mut w.e);
                 for w in self.workers.iter_mut() {
@@ -357,10 +460,10 @@ impl DistOptimizer for ErrorResetEngine {
                 let global = c2.globally_synchronized();
                 let mut ps = take_field(&mut self.workers, |w| &mut w.p);
                 let round = if global || !track {
-                    self.coll.psync(&mut ps, None, c2.as_ref(), t)
+                    self.coll.psync(&mut ps, None, c2, t)
                 } else {
                     let mut rs = take_field(&mut self.workers, |w| &mut w.r);
-                    let round = self.coll.psync(&mut ps, Some(&mut rs), c2.as_ref(), t);
+                    let round = self.coll.psync(&mut ps, Some(&mut rs), c2, t);
                     put_field(&mut self.workers, rs, |w| &mut w.r);
                     round
                 };
@@ -380,7 +483,7 @@ impl DistOptimizer for ErrorResetEngine {
                                 cser_reset_pre_global(w, &sel, d);
                             }
                             let mut es = take_field(&mut self.workers, |w| &mut w.e);
-                            let round = self.coll.psync(&mut es, None, c1.as_ref(), t);
+                            let round = self.coll.psync(&mut es, None, c1, t);
                             debug_assert_eq!(round.selections[0], sel);
                             put_field(&mut self.workers, es, |w| &mut w.e);
                             stats.model_bits = round.upload_bits_per_worker;
@@ -394,7 +497,7 @@ impl DistOptimizer for ErrorResetEngine {
                             }
                             let mut es = take_field(&mut self.workers, |w| &mut w.e);
                             let mut rs = take_field(&mut self.workers, |w| &mut w.r);
-                            let round = self.coll.psync(&mut es, Some(&mut rs), c1.as_ref(), t);
+                            let round = self.coll.psync(&mut es, Some(&mut rs), c1, t);
                             put_field(&mut self.workers, es, |w| &mut w.e);
                             put_field(&mut self.workers, rs, |w| &mut w.r);
                             stats.model_bits = round.upload_bits_per_worker;
@@ -406,7 +509,7 @@ impl DistOptimizer for ErrorResetEngine {
                     }
                     RoundRule::ModelSync { c1, h } if t % *h == 0 => {
                         let mut xs = take_field(&mut self.workers, |w| &mut w.x);
-                        let round = self.coll.psync(&mut xs, None, c1.as_ref(), t);
+                        let round = self.coll.psync(&mut xs, None, c1, t);
                         put_field(&mut self.workers, xs, |w| &mut w.x);
                         stats.model_bits = round.upload_bits_per_worker;
                         stats.model_allreduce = round.allreduce_compatible;
@@ -467,37 +570,61 @@ impl DistOptimizer for ErrorResetEngine {
     }
 }
 
-/// One worker-resident iteration (post-gradient): the same phase functions
-/// as the central path, with [`Rendezvous::collective`] standing in for the
-/// gathered collective calls.
+/// One worker's peer-driven loop: gradient → [`peer_step`] × `steps`,
+/// stopping early on the broadcast divergence verdict.  Shared verbatim by
+/// the resident (mesh endpoint) and distributed (TCP endpoint) modes.
 #[allow(clippy::too_many_arguments)]
-fn resident_step(
+fn drive_worker(
     plan: &CommPlan,
     beta: f32,
-    coll: &Arc<dyn Collective>,
-    rz: &Rendezvous,
+    tp: &mut dyn PeerTransport,
+    w: &mut WorkerState,
+    t0: u64,
+    steps: usize,
+    eta: f32,
+    stop_loss: f64,
+    d: usize,
+    grad: GradFn,
+) -> Result<(u64, Vec<StepReport>), TransportError> {
+    if w.g.len() != d {
+        w.g = vec![0.0f32; d];
+    }
+    let mut t = t0;
+    let mut reports = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        t += 1;
+        let loss = grad(w.id, &w.x, &mut w.g) as f64;
+        let (stats, mean_loss, stop) = peer_step(plan, beta, tp, w, t, eta, loss, stop_loss, d)?;
+        reports.push(StepReport { loss: mean_loss.unwrap_or(loss), stats });
+        if stop {
+            break;
+        }
+    }
+    Ok((t, reports))
+}
+
+/// One worker's iteration (post-gradient): the same phase functions as the
+/// central path, with this worker's side of each collective executed over
+/// its [`PeerTransport`].  Returns the stats, the fleet-mean loss when this
+/// step voted (`None` on barrier-free local steps), and the stop verdict.
+#[allow(clippy::too_many_arguments)]
+fn peer_step(
+    plan: &CommPlan,
+    beta: f32,
+    tp: &mut dyn PeerTransport,
     w: &mut WorkerState,
     t: u64,
     eta: f32,
     loss: f64,
     stop_loss: f64,
     d: usize,
-) -> (RoundStats, bool) {
+) -> Result<(RoundStats, Option<f64>, bool), TransportError> {
     match (&plan.step, &plan.round) {
         (StepRule::DenseAverage, _) => {
-            let g = std::mem::take(&mut w.g);
-            let (g, _, out) = rz.collective(w.id, g, None, Some(loss), stop_loss, &|vs, _| {
-                // dense gradient mean, broadcast to every worker — identical
-                // arithmetic to the central path's `mean_rows`
-                let refs: Vec<&[f32]> = vs.iter().map(|v| v.as_slice()).collect();
-                let mut m = vec![0.0f32; d];
-                math::mean_rows(&refs, &mut m);
-                for v in vs.iter_mut() {
-                    v.copy_from_slice(&m);
-                }
-                None
-            });
-            w.g = g;
+            let (mean_loss, stop) = peer::vote(tp, loss, stop_loss, t)?;
+            // dense gradient mean, identical arithmetic to the central
+            // path's `mean_rows` (gather in worker order at rank 0)
+            peer::mean_dense(tp, &mut w.g, t)?;
             descent_into(beta, &mut w.m, &w.g, eta, &mut w.p);
             math::axpy(-1.0, &w.p, &mut w.x);
             let stats = RoundStats {
@@ -507,20 +634,14 @@ fn resident_step(
                 model_allreduce: true,
                 synced: true,
             };
-            (stats, out.stop)
+            Ok((stats, Some(mean_loss), stop))
         }
         (StepRule::ErrorFeedback { c }, _) => {
+            let (mean_loss, stop) = peer::vote(tp, loss, stop_loss, t)?;
             descent_into(beta, &mut w.m, &w.g, eta, &mut w.p);
             math::axpy(1.0, &w.e, &mut w.p);
-            let p = std::mem::take(&mut w.p);
-            let e = std::mem::take(&mut w.e);
-            let (p, e, out) = rz.collective(w.id, p, Some(e), Some(loss), stop_loss, &|vs, rs| {
-                Some(coll.exchange_mean(vs, rs, c.as_ref(), t))
-            });
-            w.p = p;
-            w.e = e.expect("residual slot");
+            let round = peer::exchange_mean(tp, &mut w.p, Some(&mut w.e), c.as_ref(), t)?;
             math::axpy(-1.0, &w.p, &mut w.x);
-            let round = out.round.as_ref().expect("psync round");
             let stats = RoundStats {
                 grad_bits: round.upload_bits_per_worker,
                 model_bits: 0,
@@ -528,25 +649,19 @@ fn resident_step(
                 model_allreduce: true,
                 synced: true,
             };
-            (stats, out.stop)
+            Ok((stats, Some(mean_loss), stop))
         }
         (StepRule::LocalDescent, RoundRule::Resync { c1, h }) => {
             descent_into(beta, &mut w.m, &w.g, eta, &mut w.p);
             math::axpy(-1.0, &w.p, &mut w.x);
             if t % *h != 0 {
-                // free-running local step: no rendezvous, no stop verdict
-                return (RoundStats::default(), false);
+                // free-running local step: no collective, no vote
+                return Ok((RoundStats::default(), None, false));
             }
+            let (mean_loss, stop) = peer::vote(tp, loss, stop_loss, t)?;
             qsparse_prepare(w);
-            let p = std::mem::take(&mut w.p);
-            let e = std::mem::take(&mut w.e);
-            let (p, e, out) = rz.collective(w.id, p, Some(e), Some(loss), stop_loss, &|vs, rs| {
-                Some(coll.exchange_mean(vs, rs, c1.as_ref(), t))
-            });
-            w.p = p;
-            w.e = e.expect("residual slot");
+            let round = peer::exchange_mean(tp, &mut w.p, Some(&mut w.e), c1.as_ref(), t)?;
             qsparse_apply(w);
-            let round = out.round.as_ref().expect("psync round");
             let stats = RoundStats {
                 grad_bits: 0,
                 model_bits: round.upload_bits_per_worker,
@@ -554,37 +669,22 @@ fn resident_step(
                 model_allreduce: round.allreduce_compatible,
                 synced: true,
             };
-            (stats, out.stop)
+            Ok((stats, Some(mean_loss), stop))
         }
         (StepRule::ErrorReset { c2, track_error }, round_rule) => {
             let track = *track_error;
+            let (mean_loss, stop) = peer::vote(tp, loss, stop_loss, t)?;
             descent_into(beta, &mut w.m, &w.g, eta, &mut w.p);
             let global = c2.globally_synchronized();
             let mut stats = RoundStats::default();
-            let out = if global || !track {
-                let p = std::mem::take(&mut w.p);
-                let (p, _, out) = rz.collective(w.id, p, None, Some(loss), stop_loss, &|vs, _| {
-                    Some(coll.psync(vs, None, c2.as_ref(), t))
-                });
-                w.p = p;
-                out
+            let round = if global || !track {
+                peer::psync(tp, &mut w.p, None, c2.as_ref(), t)?
             } else {
-                let p = std::mem::take(&mut w.p);
-                let r = std::mem::take(&mut w.r);
-                let (p, r, out) = rz.collective(w.id, p, Some(r), Some(loss), stop_loss, &|vs, rs| {
-                    Some(coll.psync(vs, rs, c2.as_ref(), t))
-                });
-                w.p = p;
-                w.r = r.expect("residual slot");
-                out
+                peer::psync(tp, &mut w.p, Some(&mut w.r), c2.as_ref(), t)?
             };
-            {
-                let round = out.round.as_ref().expect("psync round");
-                stats.grad_bits = round.upload_bits_per_worker;
-                stats.grad_allreduce = round.allreduce_compatible;
-                cser_apply_grad(w, round, track, global, d);
-            }
-            let stop = out.stop;
+            stats.grad_bits = round.upload_bits_per_worker;
+            stats.grad_allreduce = round.allreduce_compatible;
+            cser_apply_grad(w, &round, track, global, d);
             match round_rule {
                 RoundRule::ErrorSync { c1, h } if t % *h == 0 => {
                     stats.synced = true;
@@ -594,47 +694,29 @@ fn resident_step(
                         // the identical shared support locally
                         let sel = c1.select(Ctx { round: t, worker: 0 }, &w.e);
                         cser_reset_pre_global(w, &sel, d);
-                        let e = std::mem::take(&mut w.e);
-                        let (e, _, out) =
-                            rz.collective(w.id, e, None, None, stop_loss, &|vs, _| {
-                                Some(coll.psync(vs, None, c1.as_ref(), t))
-                            });
-                        w.e = e;
-                        let round = out.round.as_ref().expect("psync round");
-                        debug_assert_eq!(*round.selection_for(w.id), sel);
+                        let round = peer::psync(tp, &mut w.e, None, c1.as_ref(), t)?;
+                        debug_assert_eq!(round.selections[0], sel);
                         stats.model_bits = round.upload_bits_per_worker;
                         stats.model_allreduce = true;
                         cser_reset_post_global(w, &sel, d);
                     } else {
                         w.e_half.copy_from_slice(&w.e);
-                        let e = std::mem::take(&mut w.e);
-                        let r = std::mem::take(&mut w.r);
-                        let (e, r, out) =
-                            rz.collective(w.id, e, Some(r), None, stop_loss, &|vs, rs| {
-                                Some(coll.psync(vs, rs, c1.as_ref(), t))
-                            });
-                        w.e = e;
-                        w.r = r.expect("residual slot");
-                        let round = out.round.as_ref().expect("psync round");
+                        let round =
+                            peer::psync(tp, &mut w.e, Some(&mut w.r), c1.as_ref(), t)?;
                         stats.model_bits = round.upload_bits_per_worker;
                         stats.model_allreduce = round.allreduce_compatible;
                         cser_reset_post_general(w);
                     }
                 }
                 RoundRule::ModelSync { c1, h } if t % *h == 0 => {
-                    let x = std::mem::take(&mut w.x);
-                    let (x, _, out) = rz.collective(w.id, x, None, None, stop_loss, &|vs, _| {
-                        Some(coll.psync(vs, None, c1.as_ref(), t))
-                    });
-                    w.x = x;
-                    let round = out.round.as_ref().expect("psync round");
+                    let round = peer::psync(tp, &mut w.x, None, c1.as_ref(), t)?;
                     stats.model_bits = round.upload_bits_per_worker;
                     stats.model_allreduce = round.allreduce_compatible;
                     stats.synced = true;
                 }
                 _ => {}
             }
-            (stats, stop)
+            Ok((stats, Some(mean_loss), stop))
         }
         _ => unreachable!("inconsistent CommPlan: local descent without a resync rule"),
     }
@@ -645,29 +727,34 @@ mod tests {
     use super::*;
     use crate::compressor::{Compressor, Grbs, RandK, TopK};
 
-    type PlanFactory = Box<dyn Fn() -> CommPlan>;
+    type PlanFactory = Box<dyn Fn() -> CommPlan + Send + Sync>;
 
     fn grbs(r: f64, nb: usize, seed: u64) -> Box<dyn Compressor> {
         Box::new(Grbs::new(r, nb, seed))
     }
 
-    fn plan_factories() -> Vec<(&'static str, PlanFactory)> {
+    /// (name, exact, factory): `exact` marks plans whose every collective
+    /// rides a bit-identical path under the peer protocol (dense mean or
+    /// parameter server); ring-path plans agree within f32 reduction
+    /// tolerance instead.
+    fn plan_factories() -> Vec<(&'static str, bool, PlanFactory)> {
         vec![
-            ("sgd", Box::new(CommPlan::full_sgd)),
-            ("ef-grbs", Box::new(|| CommPlan::ef_sgd(grbs(4.0, 6, 3)))),
-            ("ef-topk", Box::new(|| CommPlan::ef_sgd(Box::new(TopK::new(4.0))))),
-            ("local-sgd", Box::new(|| CommPlan::local_sgd(2))),
-            ("qsparse", Box::new(|| CommPlan::qsparse(grbs(2.0, 6, 5), 3))),
-            ("cser", Box::new(|| CommPlan::cser(grbs(2.0, 6, 7), grbs(4.0, 6, 9), 2))),
+            ("sgd", true, Box::new(CommPlan::full_sgd)),
+            ("ef-grbs", false, Box::new(|| CommPlan::ef_sgd(grbs(4.0, 6, 3)))),
+            ("ef-topk", true, Box::new(|| CommPlan::ef_sgd(Box::new(TopK::new(4.0))))),
+            ("local-sgd", false, Box::new(|| CommPlan::local_sgd(2))),
+            ("qsparse", false, Box::new(|| CommPlan::qsparse(grbs(2.0, 6, 5), 3))),
+            ("cser", false, Box::new(|| CommPlan::cser(grbs(2.0, 6, 7), grbs(4.0, 6, 9), 2))),
             (
                 "cser-perworker",
+                true,
                 Box::new(|| {
                     CommPlan::cser(Box::new(RandK::new(4.0)), Box::new(TopK::new(4.0)), 2)
                 }),
             ),
-            ("csea", Box::new(|| CommPlan::csea(grbs(2.0, 6, 11)))),
-            ("cser-pl", Box::new(|| CommPlan::cser_pl(grbs(2.0, 6, 13), 3))),
-            ("cser2", Box::new(|| CommPlan::cser_impl2(grbs(2.0, 6, 7), grbs(4.0, 6, 9), 2))),
+            ("csea", false, Box::new(|| CommPlan::csea(grbs(2.0, 6, 11)))),
+            ("cser-pl", false, Box::new(|| CommPlan::cser_pl(grbs(2.0, 6, 13), 3))),
+            ("cser2", false, Box::new(|| CommPlan::cser_impl2(grbs(2.0, 6, 7), grbs(4.0, 6, 9), 2))),
         ]
     }
 
@@ -683,35 +770,62 @@ mod tests {
         }
     }
 
+    fn run_central(mk: &PlanFactory, init: &[f32], n: usize, steps: usize) -> ErrorResetEngine {
+        let d = init.len();
+        let gf = grad_fn(d);
+        let mut central = ErrorResetEngine::new(init, n, 0.9, mk());
+        let mut grads = vec![vec![0.0f32; d]; n];
+        for _ in 0..steps {
+            for w in 0..n {
+                gf(w, central.worker_model(w), &mut grads[w]);
+            }
+            central.step(&grads, 0.05);
+        }
+        central
+    }
+
+    fn assert_models_agree(
+        central: &ErrorResetEngine,
+        models: &[Vec<f32>],
+        exact: bool,
+        name: &str,
+    ) {
+        for (i, m) in models.iter().enumerate() {
+            if exact {
+                assert_eq!(
+                    central.worker_model(i),
+                    m.as_slice(),
+                    "{name}: worker {i} diverged (expected bit-identical PS path)"
+                );
+            } else {
+                crate::util::prop::slices_close(central.worker_model(i), m, 1e-4)
+                    .unwrap_or_else(|e| panic!("{name}: worker {i}: {e}"));
+            }
+        }
+    }
+
     #[test]
-    fn resident_matches_central_bit_for_bit() {
+    fn resident_matches_central() {
         // The tentpole equivalence: worker-resident execution over the
-        // in-process collective is the central step loop, exactly.
+        // peer-owned mesh collectives reproduces the central step loop —
+        // bit-identically where every collective is a parameter-server /
+        // dense-mean round, within f32 ring tolerance where the shared-
+        // support ring reduces in a different order.
         let (n, d, steps) = (4, 24, 7);
         let init: Vec<f32> = (0..d).map(|j| (j as f32 * 0.37).sin()).collect();
         let gf = grad_fn(d);
-        for (name, mk) in plan_factories() {
-            let mut central = ErrorResetEngine::new(&init, n, 0.9, mk());
+        for (name, exact, mk) in plan_factories() {
+            let central = run_central(&mk, &init, n, steps);
             let mut resident = ErrorResetEngine::new(&init, n, 0.9, mk());
-            let mut grads = vec![vec![0.0f32; d]; n];
-            for _ in 0..steps {
-                for w in 0..n {
-                    gf(w, central.worker_model(w), &mut grads[w]);
-                }
-                central.step(&grads, 0.05);
-            }
             let reports = resident.run_resident(steps, 0.05, f64::INFINITY, &gf);
             assert_eq!(reports.len(), steps, "{name}");
-            for i in 0..n {
-                assert_eq!(
-                    central.worker_model(i),
-                    resident.worker_model(i),
-                    "{name}: worker {i} diverged between central and resident"
-                );
-            }
-            // stats agree too (same collectives ran)
-            let mut grads2 = vec![vec![0.0f32; d]; n];
+            let models: Vec<Vec<f32>> =
+                (0..n).map(|i| resident.worker_model(i).to_vec()).collect();
+            assert_models_agree(&central, &models, exact, name);
+            // stats agree exactly in all modes (same collectives, same
+            // accounting protocol)
             let mut central2 = ErrorResetEngine::new(&init, n, 0.9, mk());
+            let mut grads2 = vec![vec![0.0f32; d]; n];
             for rep in &reports {
                 for w in 0..n {
                     gf(w, central2.worker_model(w), &mut grads2[w]);
@@ -721,6 +835,41 @@ mod tests {
                 assert_eq!(s.model_bits, rep.stats.model_bits, "{name}");
                 assert_eq!(s.synced, rep.stats.synced, "{name}");
             }
+        }
+    }
+
+    #[test]
+    fn distributed_single_rank_engines_match_central() {
+        // N single-worker engines, each driven by `run_distributed` over a
+        // mesh endpoint, are the N-process deployment in miniature: same
+        // loop, same protocol, swap sockets for channels.  They must match
+        // the central N-worker engine exactly like the resident mode does.
+        let (n, d, steps) = (4, 24, 6);
+        let init: Vec<f32> = (0..d).map(|j| (j as f32 * 0.23).cos()).collect();
+        let gf = grad_fn(d);
+        for (name, exact, mk) in plan_factories() {
+            let central = run_central(&mk, &init, n, steps);
+            let mesh = channel_mesh(n);
+            let models: Vec<Vec<f32>> = std::thread::scope(|s| {
+                let handles: Vec<_> = mesh
+                    .into_iter()
+                    .map(|mut tp| {
+                        let init = &init;
+                        let mk = &mk;
+                        let gf = &gf;
+                        s.spawn(move || {
+                            let mut eng = ErrorResetEngine::new(init, 1, 0.9, mk());
+                            let reports = eng
+                                .run_distributed(&mut tp, steps, 0.05, f64::INFINITY, gf)
+                                .unwrap();
+                            assert_eq!(reports.len(), steps);
+                            eng.worker_model(0).to_vec()
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            assert_models_agree(&central, &models, exact, name);
         }
     }
 
@@ -760,7 +909,7 @@ mod tests {
     fn engine_runs_every_plan_centrally() {
         let (n, d) = (3, 16);
         let init = vec![0.2f32; d];
-        for (name, mk) in plan_factories() {
+        for (name, _, mk) in plan_factories() {
             let mut o = ErrorResetEngine::new(&init, n, 0.9, mk());
             let grads = vec![vec![0.01f32; d]; n];
             for _ in 0..5 {
@@ -771,5 +920,26 @@ mod tests {
             assert!(xbar.iter().all(|v| v.is_finite()), "{name}");
             assert!(xbar[0] < 0.2, "{name} did not descend");
         }
+    }
+
+    #[test]
+    fn restore_rejects_shape_and_section_mismatches() {
+        let init = vec![0.1f32; 8];
+        let mk = || CommPlan::cser(grbs(2.0, 2, 1), grbs(2.0, 2, 2), 2);
+        let mut e = ErrorResetEngine::new(&init, 2, 0.9, mk());
+        let models = vec![vec![0.0f32; 8]; 2];
+        let errors = vec![vec![0.0f32; 8]; 2];
+        let moms = vec![vec![0.0f32; 8]; 2];
+        // missing momentum for a β > 0 engine
+        assert!(e.restore(1, &models, Some(&errors), None, None).is_err());
+        // anchor section for a plan without anchors
+        assert!(e
+            .restore(1, &models, Some(&errors), Some(&moms), Some(&moms))
+            .is_err());
+        // wrong worker count
+        assert!(e.restore(1, &models[..1], Some(&errors), Some(&moms), None).is_err());
+        // well-formed
+        e.restore(3, &models, Some(&errors), Some(&moms), None).unwrap();
+        assert_eq!(e.step_count(), 3);
     }
 }

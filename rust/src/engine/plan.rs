@@ -21,6 +21,7 @@
 //! worker-resident (`run_resident`, one OS thread per worker).
 
 use crate::compressor::{Compressor, Zero};
+use std::sync::Arc;
 
 /// What happens on the gradient path, every step.
 pub enum StepRule {
@@ -29,7 +30,7 @@ pub enum StepRule {
     DenseAverage,
     /// Error feedback (Alg 10): q_i = e_i + p_i, exchange mean C(q), apply
     /// the mean to the (replicated) model, keep the residual as e_i.
-    ErrorFeedback { c: Box<dyn Compressor> },
+    ErrorFeedback { c: Arc<dyn Compressor> },
     /// Pure local descent x_i ← x_i − p_i; no per-step communication
     /// (QSparse-local-SGD / local SGD between sync rounds).
     LocalDescent,
@@ -38,7 +39,7 @@ pub enum StepRule {
     /// `track_error == false` the residual folds into the model implicitly
     /// (implementation II, Alg 13 — requires globally-synchronized
     /// sparsifiers).
-    ErrorReset { c2: Box<dyn Compressor>, track_error: bool },
+    ErrorReset { c2: Arc<dyn Compressor>, track_error: bool },
 }
 
 /// What happens on the model/error path, every `h` steps.
@@ -46,12 +47,12 @@ pub enum RoundRule {
     /// Never (the step rule syncs every step already).
     None,
     /// CSER implementation I error reset: PSync(e, C1), fold e′ − e into x.
-    ErrorSync { c1: Box<dyn Compressor>, h: u64 },
+    ErrorSync { c1: Arc<dyn Compressor>, h: u64 },
     /// CSER implementation II: PSync the local models directly.
-    ModelSync { c1: Box<dyn Compressor>, h: u64 },
+    ModelSync { c1: Arc<dyn Compressor>, h: u64 },
     /// QSparse full resync: q_i = e_i + (x_i − x̂), exchange mean C1(q),
     /// advance the shared anchor x̂ and reset every x_i to it.
-    Resync { c1: Box<dyn Compressor>, h: u64 },
+    Resync { c1: Arc<dyn Compressor>, h: u64 },
 }
 
 /// A fully-specified synchronization schedule.  Build one with the family
@@ -72,7 +73,7 @@ impl CommPlan {
 
     /// EF-SGD (Alg 10; Karimireddy et al. 2019): compressor `c1` every step.
     pub fn ef_sgd(c1: Box<dyn Compressor>) -> Self {
-        CommPlan { step: StepRule::ErrorFeedback { c: c1 }, round: RoundRule::None }
+        CommPlan { step: StepRule::ErrorFeedback { c: c1.into() }, round: RoundRule::None }
     }
 
     /// Local SGD: model averaging every `h` steps (C1 = identity).
@@ -83,7 +84,7 @@ impl CommPlan {
     /// QSparse-local-SGD (Alg 1/12; Basu et al. 2019).
     pub fn qsparse(c1: Box<dyn Compressor>, h: u64) -> Self {
         assert!(h >= 1);
-        CommPlan { step: StepRule::LocalDescent, round: RoundRule::Resync { c1, h } }
+        CommPlan { step: StepRule::LocalDescent, round: RoundRule::Resync { c1: c1.into(), h } }
     }
 
     /// Full CSER / M-CSER (Alg 2 / Alg 4, implementation I): gradient
@@ -91,8 +92,8 @@ impl CommPlan {
     pub fn cser(c1: Box<dyn Compressor>, c2: Box<dyn Compressor>, h: u64) -> Self {
         assert!(h >= 1);
         CommPlan {
-            step: StepRule::ErrorReset { c2, track_error: true },
-            round: RoundRule::ErrorSync { c1, h },
+            step: StepRule::ErrorReset { c2: c2.into(), track_error: true },
+            round: RoundRule::ErrorSync { c1: c1.into(), h },
         }
     }
 
@@ -117,8 +118,8 @@ impl CommPlan {
             "implementation II requires globally-synchronized sparsifiers (Appendix A.4)"
         );
         CommPlan {
-            step: StepRule::ErrorReset { c2, track_error: false },
-            round: RoundRule::ModelSync { c1, h },
+            step: StepRule::ErrorReset { c2: c2.into(), track_error: false },
+            round: RoundRule::ModelSync { c1: c1.into(), h },
         }
     }
 
@@ -250,8 +251,8 @@ mod tests {
     #[should_panic(expected = "inconsistent CommPlan")]
     fn validate_rejects_silently_ignored_round_rules() {
         CommPlan {
-            step: StepRule::ErrorFeedback { c: Box::new(Grbs::new(2.0, 4, 1)) },
-            round: RoundRule::ModelSync { c1: Box::new(Grbs::new(2.0, 4, 1)), h: 2 },
+            step: StepRule::ErrorFeedback { c: Arc::new(Grbs::new(2.0, 4, 1)) },
+            round: RoundRule::ModelSync { c1: Arc::new(Grbs::new(2.0, 4, 1)), h: 2 },
         }
         .validate();
     }

@@ -12,10 +12,11 @@
 //!   plan constructors with deprecated legacy wrappers ([`optimizer`]), the
 //!   GRBS compressor family ([`compressor`]), partial synchronization
 //!   ([`collective`]), the wire layer ([`transport`]: bit-packed codecs for
-//!   every compressor payload — encoded bits ≡ accounted bits — plus
-//!   swappable collective backends: the in-process reference, a
-//!   multi-threaded ring-allreduce/parameter-server backend moving real
-//!   serialized messages, and its worker-resident mode), the network
+//!   every compressor payload — encoded bits ≡ accounted bits, hardened
+//!   against untrusted frames — plus the peer-owned ring/parameter-server
+//!   protocol each worker executes over its own links: mpsc mesh endpoints
+//!   for resident threads and the persistent `Threaded` pool, or real TCP
+//!   sockets for `cser launch`-style multi-process jobs), the network
 //!   cost/accounting substrate ([`network`]), data sharding ([`data`]), a
 //!   fast pure-Rust model zoo for the paper's sweeps ([`models`]), the PJRT
 //!   runtime that executes AOT-compiled JAX/Pallas artifacts ([`runtime`]),

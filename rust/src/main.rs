@@ -12,6 +12,11 @@
 //! cser theory   [--quick]                 Theorem-1 bound, Corollary-1 speedup,
 //!                                          sparsifier families
 //! cser train-lm [--preset tiny|small] [--opt cser|sgd|...] [--steps N] ...
+//! cser launch   [--workers N] [--opt ...] [--epochs N] [--ckpt-dir D]
+//!                                          spawn N worker processes over
+//!                                          loopback TCP, print the RunRecord
+//! cser worker   --rendezvous H:P --rank R --workers N [training flags]
+//!                                          join a multi-process job as one rank
 //! cser kernel-check                       run L1 kernel artifacts vs Rust impls
 //! cser plot results/<file>.json [--x epoch|time|bits] [--y acc|loss]
 //!                                          render run records as an SVG figure
@@ -32,7 +37,8 @@ fn main() {
     }
     let known = [
         "suite", "seeds", "quick", "rc", "preset", "opt", "steps", "workers", "lr", "beta",
-        "eval-every", "seed", "artifacts", "h", "rc1", "rc2", "x", "y", "out",
+        "eval-every", "seed", "artifacts", "h", "rc1", "rc2", "x", "y", "out", "rendezvous",
+        "rank", "epochs", "batch", "record", "ckpt", "ckpt-dir",
     ];
     let args = match Args::parse(argv, &known) {
         Ok(a) => a,
@@ -198,10 +204,143 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
             }
             Ok(())
         }
+        "worker" => worker(args),
+        "launch" => launch(args),
         "kernel-check" => kernel_check(args),
         "plot" => plot(args),
         other => anyhow::bail!("unknown command '{other}'"),
     }
+}
+
+/// The multi-process training workload: the sim-trainer's synthetic
+/// classification suite, identical on every rank (the data seed is fixed;
+/// `--seed` drives init, sharding, and the compressor schedules).
+fn dist_workload() -> (cser::data::ClassDataset, cser::data::ClassDataset, cser::models::Mlp) {
+    let (train, test) = cser::data::ClassDataset::gaussian_mixture(10, 16, 2048, 512, 1.2, 0.8, 0.0, 3);
+    (train, test, cser::models::Mlp::new(16, 32, 10))
+}
+
+fn dist_train_cfg(args: &Args) -> anyhow::Result<cser::coordinator::TrainCfg> {
+    let mut cfg = cser::coordinator::TrainCfg::new(
+        args.usize("epochs", 4)?,
+        args.usize("batch", 16)?,
+        args.f64("lr", 0.1)?,
+        args.u64("seed", 7)?,
+    );
+    cfg.schedule = cser::config::LrSchedule::StepDecay { milestones: vec![0.5], factor: 0.2 };
+    cfg.paper_d = 1_000_000;
+    Ok(cfg)
+}
+
+/// Join a multi-process training job as one worker rank (see `cser launch`
+/// for the local-cluster front end).  Emits the rank's RunRecord JSON to
+/// `--record <path>` (or stdout) — identical across ranks for plans that
+/// synchronize every step.
+fn worker(args: &Args) -> anyhow::Result<()> {
+    let rendezvous = args
+        .opt_str("rendezvous")
+        .ok_or_else(|| anyhow::anyhow!("cser worker requires --rendezvous <host:port>"))?;
+    let peers = args.usize("workers", 4)?;
+    let rank = args.usize("rank", 0)?;
+    anyhow::ensure!(rank < peers, "--rank {rank} out of range for --workers {peers}");
+    let spec = opt_spec(args)?;
+    let beta = args.f64("beta", 0.9)? as f32;
+    let mut cfg = dist_train_cfg(args)?;
+    cfg.backend = cser::transport::Backend::Tcp { bind: rendezvous.clone(), peers, rank };
+    cfg.ckpt = args.opt_str("ckpt").map(std::path::PathBuf::from);
+
+    let (train, test, model) = dist_workload();
+    let init = cser::models::GradModel::init(&model, cfg.seed);
+    // One rank = one worker: the engine holds only this rank's state.
+    let mut opt = spec.build(&init, 1, beta, cfg.seed);
+    eprintln!(
+        "worker {rank}/{peers}: joining {rendezvous} ({:?}, {} epochs, batch {})",
+        spec, cfg.epochs, cfg.batch_per_worker
+    );
+    let run = cser::coordinator::train_classifier(&model, &train, &test, opt.as_mut(), &cfg);
+    eprintln!(
+        "worker {rank}/{peers}: done — final loss {:.4}, acc {:.2}%{}",
+        run.final_train_loss(),
+        run.final_acc() * 100.0,
+        if run.diverged { " (DIVERGED)" } else { "" }
+    );
+    match args.opt_str("record") {
+        Some(path) => std::fs::write(&path, run.to_json())
+            .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?,
+        None => println!("{}", run.to_json()),
+    }
+    anyhow::ensure!(!run.diverged, "worker {rank} diverged");
+    Ok(())
+}
+
+/// Spawn an n-process training job on loopback TCP: allocate a rendezvous
+/// port, fork `cser worker` for every rank, wait, validate rank 0's
+/// RunRecord, and print it to stdout — the same JSON the in-process sim
+/// trainer emits, produced by real sockets between real processes.
+fn launch(args: &Args) -> anyhow::Result<()> {
+    let n = args.usize("workers", 4)?;
+    anyhow::ensure!(n >= 1, "--workers must be at least 1");
+    let addr = cser::transport::rendezvous::free_loopback_addr()
+        .map_err(|e| anyhow::anyhow!("reserving a rendezvous port: {e}"))?;
+    let tmp = std::env::temp_dir().join(format!("cser_launch_{}", std::process::id()));
+    std::fs::create_dir_all(&tmp)?;
+    let exe = std::env::current_exe()?;
+    let t0 = std::time::Instant::now();
+
+    let mut children = Vec::with_capacity(n);
+    let mut records = Vec::with_capacity(n);
+    for rank in 0..n {
+        let record = tmp.join(format!("rank_{rank}.json"));
+        let mut cmd = std::process::Command::new(&exe);
+        cmd.arg("worker")
+            .arg("--rendezvous")
+            .arg(&addr)
+            .arg("--rank")
+            .arg(rank.to_string())
+            .arg("--workers")
+            .arg(n.to_string())
+            .arg("--record")
+            .arg(&record);
+        for key in ["opt", "rc1", "rc2", "h", "epochs", "batch", "lr", "beta", "seed"] {
+            if let Some(v) = args.opt_str(key) {
+                cmd.arg(format!("--{key}")).arg(v);
+            }
+        }
+        if let Some(dir) = args.opt_str("ckpt-dir") {
+            std::fs::create_dir_all(&dir)?;
+            cmd.arg("--ckpt").arg(std::path::Path::new(&dir).join(format!("rank_{rank}.ckpt")));
+        }
+        let child = cmd
+            .spawn()
+            .map_err(|e| anyhow::anyhow!("spawning worker {rank} ({}): {e}", exe.display()))?;
+        children.push((rank, child));
+        records.push(record);
+    }
+
+    let mut failures = Vec::new();
+    for (rank, child) in children.iter_mut() {
+        match child.wait() {
+            Ok(status) if status.success() => {}
+            Ok(status) => failures.push(format!("rank {rank} exited with {status}")),
+            Err(e) => failures.push(format!("rank {rank} unwaitable: {e}")),
+        }
+    }
+    anyhow::ensure!(failures.is_empty(), "launch failed: {}", failures.join("; "));
+
+    let json = std::fs::read_to_string(&records[0])
+        .map_err(|e| anyhow::anyhow!("reading rank 0's record: {e}"))?;
+    let parsed = cser::util::json::Json::parse(&json)
+        .map_err(|e| anyhow::anyhow!("rank 0 emitted unparseable RunRecord JSON: {e}"))?;
+    let diverged = parsed.get("diverged").and_then(|j| j.as_bool()).unwrap_or(true);
+    anyhow::ensure!(!diverged, "launch run diverged");
+    println!("{json}");
+    eprintln!(
+        "launch: {n} workers over loopback TCP at {addr} finished in {:.1}s (record: {} epochs)",
+        t0.elapsed().as_secs_f64(),
+        parsed.get("epoch").and_then(|j| j.as_arr()).map(|a| a.len()).unwrap_or(0),
+    );
+    std::fs::remove_dir_all(&tmp).ok();
+    Ok(())
 }
 
 /// Tiny end-to-end smoke: artifacts + PJRT + CSER in a few seconds.

@@ -1,0 +1,301 @@
+//! In-process peer links: a full mesh of mpsc channels.
+//!
+//! [`channel_mesh`] hands out one [`MeshTransport`] per worker; each is the
+//! channel-backed [`PeerTransport`] a persistent worker thread owns for its
+//! whole life.  Frames are `Arc<WireMsg>` so a broadcast (the parameter
+//! server's aggregate downlink) shares one allocation across all receivers
+//! instead of deep-cloning bench-scale dense aggregates.
+//!
+//! Failure semantics replace the old rendezvous poison protocol: when a
+//! worker thread dies, its `MeshTransport` drops, every channel it touched
+//! disconnects, and any peer blocked in (or later entering) a collective
+//! gets a [`TransportError`] instead of deadlocking.  Resident workers turn
+//! that error into a panic, which `std::thread::scope` then propagates.
+
+use super::peer::{PeerTransport, Tag, TransportError};
+use super::wire::WireMsg;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+type Frame = (u64, Tag, Arc<WireMsg>);
+
+/// One worker's channel endpoints into the fleet (index = peer rank; the
+/// self slot is empty).
+pub struct MeshTransport {
+    rank: usize,
+    n: usize,
+    txs: Vec<Option<Sender<Frame>>>,
+    rxs: Vec<Option<Receiver<Frame>>>,
+}
+
+/// Build the full n-way mesh: n·(n−1) channels, one per directed pair.
+pub fn channel_mesh(n: usize) -> Vec<MeshTransport> {
+    assert!(n >= 1);
+    let mut eps: Vec<MeshTransport> = (0..n)
+        .map(|rank| MeshTransport {
+            rank,
+            n,
+            txs: (0..n).map(|_| None).collect(),
+            rxs: (0..n).map(|_| None).collect(),
+        })
+        .collect();
+    for i in 0..n {
+        for j in 0..n {
+            if i == j {
+                continue;
+            }
+            let (tx, rx) = channel();
+            eps[i].txs[j] = Some(tx);
+            eps[j].rxs[i] = Some(rx);
+        }
+    }
+    eps
+}
+
+impl MeshTransport {
+    fn hangup(&self, peer: usize) -> TransportError {
+        TransportError(format!(
+            "peer {peer} hung up on worker {} (its thread died mid-run)",
+            self.rank
+        ))
+    }
+}
+
+impl PeerTransport for MeshTransport {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn send(&mut self, to: usize, round: u64, tag: Tag, msg: WireMsg) -> Result<(), TransportError> {
+        self.txs[to]
+            .as_ref()
+            .expect("mesh has no self-links")
+            .send((round, tag, Arc::new(msg)))
+            .map_err(|_| self.hangup(to))
+    }
+
+    fn broadcast(&mut self, round: u64, tag: Tag, msg: WireMsg) -> Result<(), TransportError> {
+        let shared = Arc::new(msg);
+        for j in 0..self.n {
+            if j != self.rank {
+                self.txs[j]
+                    .as_ref()
+                    .expect("mesh has no self-links")
+                    .send((round, tag, Arc::clone(&shared)))
+                    .map_err(|_| self.hangup(j))?;
+            }
+        }
+        Ok(())
+    }
+
+    fn recv(&mut self, from: usize, round: u64, tag: Tag) -> Result<Arc<WireMsg>, TransportError> {
+        let (r, tg, msg) = self.rxs[from]
+            .as_ref()
+            .expect("mesh has no self-links")
+            .recv()
+            .map_err(|_| self.hangup(from))?;
+        if r != round || tg != tag {
+            return Err(TransportError(format!(
+                "worker {} desynchronized: expected (round {round}, {tag:?}) from peer {from}, \
+                 got (round {r}, {tg:?})",
+                self.rank
+            )));
+        }
+        Ok(msg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collective::{exchange_mean, psync};
+    use crate::compressor::{
+        BlockTopK, Compressor, Grbs, Identity, Qsgd, RandK, SignSgd, TopK, Zero,
+    };
+    use crate::transport::peer;
+    use crate::util::prop::{forall, slices_close, Gen};
+
+    /// Run `f(rank, transport)` on n threads, one per mesh endpoint.
+    fn run_peers<T: Send, F: Fn(usize, &mut MeshTransport) -> T + Sync>(
+        n: usize,
+        f: F,
+    ) -> Vec<T> {
+        let eps = channel_mesh(n);
+        std::thread::scope(|s| {
+            let handles: Vec<_> = eps
+                .into_iter()
+                .enumerate()
+                .map(|(w, mut tp)| {
+                    let f = &f;
+                    s.spawn(move || f(w, &mut tp))
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("peer thread panicked")).collect()
+        })
+    }
+
+    fn compressor_set(d: usize) -> Vec<std::sync::Arc<dyn Compressor>> {
+        vec![
+            std::sync::Arc::new(Grbs::new(4.0, (d / 4).max(1), 77)),
+            std::sync::Arc::new(RandK::new(4.0)),
+            std::sync::Arc::new(TopK::new(4.0)),
+            std::sync::Arc::new(BlockTopK::new(4.0, (d / 8).max(1))),
+            std::sync::Arc::new(Qsgd::new(4)),
+            std::sync::Arc::new(SignSgd),
+            std::sync::Arc::new(Identity),
+            std::sync::Arc::new(Zero),
+        ]
+    }
+
+    #[test]
+    fn prop_peer_psync_matches_in_process() {
+        // Peer-owned collectives over the mesh: PS-path compressors must
+        // match the in-process reference bit-for-bit, ring-path within f32
+        // reduction tolerance — the same contract the old runner-thread
+        // backend carried, now with zero per-call spawns.
+        forall(10, 0x9E51, |g: &mut Gen| {
+            let n = g.usize_in(2, 6);
+            let d = g.usize_in(8, 96);
+            let case = g.case;
+            let vs = g.worker_vecs(n, d);
+            for c in compressor_set(d) {
+                let ring = c.globally_synchronized() && !c.is_dense();
+                let mut a = vs.clone();
+                let mut ra = vec![vec![0.0f32; d]; n];
+                let ia = psync(&mut a, Some(&mut ra), c.as_ref(), case);
+                let out = run_peers(n, |w, tp| {
+                    let mut v = vs[w].clone();
+                    let mut r = vec![0.0f32; d];
+                    let round =
+                        peer::psync(tp, &mut v, Some(&mut r), c.as_ref(), case).unwrap();
+                    (v, r, round)
+                });
+                let tol = if ring { 1e-5 } else { 0.0 };
+                for (i, (v, r, round)) in out.iter().enumerate() {
+                    slices_close(&a[i], v, tol)
+                        .map_err(|e| format!("{} psync w{i}: {e}", c.name()))?;
+                    slices_close(&ra[i], r, tol)
+                        .map_err(|e| format!("{} resid w{i}: {e}", c.name()))?;
+                    crate::prop_assert!(
+                        round.upload_bits_per_worker == ia.upload_bits_per_worker,
+                        "{} w{i}: accounted bits differ: {} vs {}",
+                        c.name(),
+                        round.upload_bits_per_worker,
+                        ia.upload_bits_per_worker
+                    );
+                    crate::prop_assert!(
+                        round.allreduce_compatible == ia.allreduce_compatible,
+                        "{} w{i}: allreduce flag differs",
+                        c.name()
+                    );
+                }
+                // exchange_mean too
+                let mut a = vs.clone();
+                exchange_mean(&mut a, None, c.as_ref(), case);
+                let out = run_peers(n, |w, tp| {
+                    let mut v = vs[w].clone();
+                    peer::exchange_mean(tp, &mut v, None, c.as_ref(), case).unwrap();
+                    v
+                });
+                for (i, v) in out.iter().enumerate() {
+                    slices_close(&a[i], v, tol)
+                        .map_err(|e| format!("{} exch w{i}: {e}", c.name()))?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn mean_dense_is_bit_identical_to_mean_rows() {
+        let n = 5;
+        let d = 33;
+        let mut g = Gen::replay(0x3E, 0);
+        let vs = g.worker_vecs(n, d);
+        let refs: Vec<&[f32]> = vs.iter().map(|v| v.as_slice()).collect();
+        let mut expect = vec![0.0f32; d];
+        crate::util::math::mean_rows(&refs, &mut expect);
+        let out = run_peers(n, |w, tp| {
+            let mut v = vs[w].clone();
+            peer::mean_dense(tp, &mut v, 9).unwrap();
+            v
+        });
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(&expect, v, "worker {i}");
+        }
+    }
+
+    #[test]
+    fn vote_verdict_is_uniform_and_exact() {
+        let n = 3;
+        let out = run_peers(n, |w, tp| {
+            peer::vote(tp, 10.0 + w as f64, 5.0, 1).unwrap()
+        });
+        let expect = (10.0 + 11.0 + 12.0) / 3.0;
+        for (mean, stop) in &out {
+            assert!((*mean - expect).abs() < 1e-12);
+            assert!(*stop, "mean 11 > 5 must stop");
+        }
+        // NaN losses must trip the brake even though NaN > x is false
+        let out = run_peers(n, |w, tp| {
+            let loss = if w == 1 { f64::NAN } else { 0.0 };
+            peer::vote(tp, loss, 5.0, 2).unwrap()
+        });
+        assert!(out.iter().all(|(_, stop)| *stop));
+    }
+
+    #[test]
+    fn agree_is_an_or_across_the_fleet() {
+        let n = 4;
+        let out = run_peers(n, |w, tp| peer::agree(tp, w == 2, 3).unwrap());
+        assert!(out.iter().all(|&b| b));
+        let out = run_peers(n, |_, tp| peer::agree(tp, false, 4).unwrap());
+        assert!(out.iter().all(|&b| !b));
+    }
+
+    #[test]
+    fn all_equal_detects_mismatched_ranks_exactly() {
+        // Integer agreement: exact for every (n, value), including the
+        // fleet sizes where a float mean would re-round (n = 3, value 7).
+        for n in [2usize, 3, 5] {
+            let out = run_peers(n, |_, tp| peer::all_equal(tp, 7, 5).unwrap());
+            assert!(out.iter().all(|&b| b), "n={n}: equal values must agree");
+            let out = run_peers(n, |w, tp| {
+                peer::all_equal(tp, if w == n - 1 { 8 } else { 7 }, 6).unwrap()
+            });
+            assert!(out.iter().all(|&b| !b), "n={n}: one stray rank must be detected");
+        }
+    }
+
+    #[test]
+    fn dead_peer_errors_instead_of_deadlocking() {
+        // Worker 1 dies before its collective; the survivor's recv must
+        // surface a TransportError (its resident wrapper then panics),
+        // not block forever.
+        let mut eps = channel_mesh(2);
+        let tp1 = eps.pop().unwrap();
+        let mut tp0 = eps.pop().unwrap();
+        let h = std::thread::spawn(move || {
+            drop(tp1); // rank 1 "dies"
+        });
+        h.join().unwrap();
+        let c = Identity;
+        let mut v = vec![1.0f32; 4];
+        let err = peer::psync(&mut tp0, &mut v, None, &c, 1);
+        assert!(err.is_err(), "collective against a dead peer must error");
+    }
+
+    #[test]
+    fn desynchronized_frames_are_rejected() {
+        let mut eps = channel_mesh(2);
+        let mut tp1 = eps.pop().unwrap();
+        let mut tp0 = eps.pop().unwrap();
+        tp0.send(1, 7, Tag::Loss, WireMsg { words: vec![0], bit_len: 64 }).unwrap();
+        let err = tp1.recv(0, 8, Tag::Loss).unwrap_err();
+        assert!(err.0.contains("desynchronized"), "{err}");
+    }
+}

@@ -5,19 +5,25 @@
 //! makes the transport explicit and swappable:
 //!
 //! * [`wire`] — bit-packed codecs for every compressor payload, with the
-//!   invariant that the encoded length equals the accounted bits;
-//! * [`Collective`] — the aggregation abstraction every optimizer now runs
-//!   over, with two backends:
-//!   * [`InProcess`] — the original single-address-space fast path
-//!     (delegates to [`crate::collective::psync`]); zero serialization,
-//!     bit accounting only;
-//!   * [`Threaded`] — one OS thread per worker exchanging *serialized*
-//!     [`wire::WireMsg`]s over std channels: a reduce-scatter/all-gather
-//!     ring for AllReduce-compatible compressors (GRBS — shared support, no
-//!     index metadata) and a gather/broadcast parameter-server path for
-//!     index-carrying or dense-quantizing compressors.  This demonstrates
-//!     the paper's headline systems claim end-to-end: GRBS rides the ring,
-//!     Qsparse/EF-style sparsifiers must pay the PS round trip.
+//!   invariant that the encoded length equals the accounted bits; decoders
+//!   validate untrusted frames (`Result`, not `debug_assert!`);
+//! * [`peer`] — the **peer-owned** protocol: each worker executes its own
+//!   ring segment / parameter-server exchange over a [`peer::PeerTransport`]
+//!   it holds, instead of a rendezvous electing runner threads per call.
+//!   Three transports implement it:
+//!   * [`mesh`] — a full mesh of mpsc channels for workers living in one
+//!     process (persistent resident threads, the [`Threaded`] pool);
+//!   * [`tcp`] — persistent loopback/LAN sockets between N independent OS
+//!     processes, bootstrapped by [`rendezvous`] (rank 0 hosts a peer-table
+//!     exchange); frames are length-prefixed `(round, tag, bit length)`
+//!     headers over the same bit-packed payloads, so measured wire traffic
+//!     stays `encoded bits ≡ accounted bits`;
+//! * [`Collective`] — the central aggregation interface optimizers run
+//!   over, with two backends: [`InProcess`] (the original single-address-
+//!   space fast path; zero serialization, bit accounting only) and
+//!   [`Threaded`] (a persistent pool of mesh workers moving serialized
+//!   [`wire::WireMsg`]s — ring reduce-scatter/all-gather for shared-support
+//!   compressors, gather/broadcast parameter server otherwise).
 //!
 //! Numerics: the parameter-server path is **bit-identical** to `InProcess`
 //! (messages decode to the exact `C(q_i)` bits and the server accumulates in
@@ -26,11 +32,17 @@
 //! relative per element; the equivalence tests pin a 1e-4 trajectory
 //! tolerance on training workloads).
 
+pub mod mesh;
+pub mod peer;
+pub mod rendezvous;
+pub mod tcp;
 pub mod threaded;
 pub mod wire;
 
+pub use peer::{PeerTransport, Tag, TransportError};
+pub use tcp::TcpTransport;
 pub use threaded::Threaded;
-pub use wire::{BitReader, BitWriter, WireMsg};
+pub use wire::{BitReader, BitWriter, WireError, WireMsg};
 
 use crate::collective::{exchange_mean, psync, PsyncRound};
 use crate::compressor::Compressor;
@@ -40,7 +52,10 @@ use std::sync::Arc;
 ///
 /// Both methods are *collective calls*: `vs`/`qs` hold one vector per worker
 /// and every worker's slot is updated as if each worker ran its side of the
-/// protocol.  `round` seeds the compressor's selection schedule.
+/// protocol.  `round` seeds the compressor's selection schedule.  The
+/// compressor travels as `&Arc<dyn Compressor>` so backends with persistent
+/// worker threads can hand each thread a handle without re-spawning per
+/// call.
 pub trait Collective: Send + Sync {
     fn name(&self) -> &'static str;
 
@@ -50,7 +65,7 @@ pub trait Collective: Send + Sync {
         &self,
         vs: &mut [Vec<f32>],
         resid_out: Option<&mut [Vec<f32>]>,
-        c: &dyn Compressor,
+        c: &Arc<dyn Compressor>,
         round: u64,
     ) -> PsyncRound;
 
@@ -61,7 +76,7 @@ pub trait Collective: Send + Sync {
         &self,
         qs: &mut [Vec<f32>],
         resid_out: Option<&mut [Vec<f32>]>,
-        c: &dyn Compressor,
+        c: &Arc<dyn Compressor>,
         round: u64,
     ) -> PsyncRound;
 }
@@ -81,51 +96,67 @@ impl Collective for InProcess {
         &self,
         vs: &mut [Vec<f32>],
         resid_out: Option<&mut [Vec<f32>]>,
-        c: &dyn Compressor,
+        c: &Arc<dyn Compressor>,
         round: u64,
     ) -> PsyncRound {
-        psync(vs, resid_out, c, round)
+        psync(vs, resid_out, c.as_ref(), round)
     }
 
     fn exchange_mean(
         &self,
         qs: &mut [Vec<f32>],
         resid_out: Option<&mut [Vec<f32>]>,
-        c: &dyn Compressor,
+        c: &Arc<dyn Compressor>,
         round: u64,
     ) -> PsyncRound {
-        exchange_mean(qs, resid_out, c, round)
+        exchange_mean(qs, resid_out, c.as_ref(), round)
     }
 }
 
-/// Backend selector for configs/CLIs (a `Copy` tag that builds the trait
-/// object on demand).
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+/// Backend selector for configs/CLIs.
+///
+/// **Migration note:** `Backend` is no longer `Copy` — the [`Backend::Tcp`]
+/// variant carries the rendezvous address.  Clone it where it used to be
+/// copied.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub enum Backend {
     #[default]
     InProcess,
     Threaded,
-    /// The `Threaded` wire collectives driven in **worker-resident** mode:
-    /// each worker is a persistent OS thread owning its
-    /// `engine::WorkerState`, running gradient → compress → sync → apply end
-    /// to end and meeting the other workers only at the collective — no
-    /// central gradients array, no lock-step barrier in the trainer
+    /// Worker-resident mode: each worker is a persistent OS thread owning
+    /// its `engine::WorkerState`, running gradient → compress → sync → apply
+    /// end to end, and executing **its own side** of every collective over a
+    /// [`mesh`] channel endpoint — no central gradients array, no lock-step
+    /// barrier in the trainer, no per-call thread spawns
     /// (`coordinator::sim_trainer` routes engine optimizers through
     /// `ErrorResetEngine::run_resident` when this backend is selected).
     Resident,
+    /// Real multi-process training over TCP: this process is worker `rank`
+    /// of `peers`, joining the job at rendezvous address `bind` (rank 0
+    /// hosts it).  The trainer routes through the peer-owned
+    /// [`tcp::TcpTransport`]; the `cser worker` / `cser launch` subcommands
+    /// surface this from the CLI.
+    Tcp { bind: String, peers: usize, rank: usize },
 }
 
 impl Backend {
-    pub fn collective(self) -> Arc<dyn Collective> {
+    /// The central [`Collective`] this backend drives `DistOptimizer::step`
+    /// through.  `Tcp` has none — each process owns only its local rank's
+    /// state, so the trainer routes it through the peer-owned transport
+    /// instead of a central call path.
+    pub fn collective(&self) -> Arc<dyn Collective> {
         match self {
             Backend::InProcess => Arc::new(InProcess),
             Backend::Threaded | Backend::Resident => Arc::new(Threaded::new()),
+            Backend::Tcp { .. } => panic!(
+                "Backend::Tcp has no central collective; route through the distributed trainer"
+            ),
         }
     }
 
     /// True when the trainer should hand the step loop to the worker threads
     /// (`ErrorResetEngine::run_resident`) instead of driving it centrally.
-    pub fn worker_resident(self) -> bool {
+    pub fn worker_resident(&self) -> bool {
         matches!(self, Backend::Resident)
     }
 }

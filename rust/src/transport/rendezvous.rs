@@ -1,0 +1,314 @@
+//! Job bootstrap: rank-0-hosted rendezvous + full-mesh socket setup.
+//!
+//! N independent OS processes become one training job in two phases:
+//!
+//! 1. **Rendezvous** — rank 0 listens at the job address every process was
+//!    launched with.  Each other rank binds its own *data* listener on an
+//!    ephemeral port, dials the rendezvous, and registers
+//!    `(rank, data_addr)`.  Once all `n` ranks are present, rank 0 answers
+//!    every registration with the complete peer table (data addresses in
+//!    rank order, rank 0's own included) and closes the rendezvous.
+//! 2. **Mesh** — for every pair `{i, j}` the *higher* rank dials the lower
+//!    rank's data listener and introduces itself with a one-shot handshake
+//!    frame carrying its rank; the lower rank accepts `n − 1 − rank`
+//!    such connections.  Deterministic direction ⇒ no glare, exactly one
+//!    persistent connection per pair, `TCP_NODELAY` everywhere.
+//!
+//! All bootstrap messages are magic-tagged and length-prefixed; a process
+//! joining the wrong job (or a stray port scanner) fails validation loudly
+//! instead of wedging the fleet.  Dials retry until a deadline so workers
+//! may start in any order.
+
+use super::peer::TransportError;
+use std::io::{Read, Write};
+use std::net::{IpAddr, Ipv4Addr, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::time::{Duration, Instant};
+
+const RV_MAGIC: &[u8; 8] = b"CSER-RV1";
+const TABLE_MAGIC: &[u8; 8] = b"CSER-TB1";
+const HANDSHAKE_MAGIC: &[u8; 8] = b"CSER-HS1";
+
+/// How long dials retry and accepts wait before declaring the fleet dead.
+const BOOTSTRAP_TIMEOUT: Duration = Duration::from_secs(30);
+const IO_TIMEOUT: Duration = Duration::from_secs(10);
+
+fn io_err(ctx: &str, e: std::io::Error) -> TransportError {
+    TransportError(format!("{ctx}: {e}"))
+}
+
+/// Reserve a loopback address for a new job: bind an ephemeral port, read
+/// it back, release it.  Used by `cser launch`, tests, and benches to pick
+/// a rendezvous address before spawning workers.  The reservation is
+/// advisory — another process could grab the port in the window before
+/// rank 0 re-binds it — but kernels cycle the ephemeral range rather than
+/// reusing fresh releases, and rank 0's bind retries transient collisions
+/// ([`establish`]).
+pub fn free_loopback_addr() -> std::io::Result<String> {
+    let l = TcpListener::bind((Ipv4Addr::LOCALHOST, 0))?;
+    Ok(l.local_addr()?.to_string())
+}
+
+/// Bind with retry: the rendezvous port comes from an advisory
+/// reservation, so a transient holder (e.g. the reserving socket's own
+/// release racing this bind, or TIME_WAIT debris) should be waited out
+/// rather than failing the whole job.
+fn bind_retry(addr: SocketAddr, deadline: Instant) -> Result<TcpListener, TransportError> {
+    loop {
+        match TcpListener::bind(addr) {
+            Ok(l) => return Ok(l),
+            Err(e) if e.kind() == std::io::ErrorKind::AddrInUse && Instant::now() < deadline => {
+                std::thread::sleep(Duration::from_millis(50));
+            }
+            Err(e) => return Err(io_err(&format!("rank 0 binding rendezvous {addr}"), e)),
+        }
+    }
+}
+
+fn resolve(addr: &str) -> Result<SocketAddr, TransportError> {
+    addr.to_socket_addrs()
+        .map_err(|e| TransportError(format!("cannot resolve '{addr}': {e}")))?
+        .next()
+        .ok_or_else(|| TransportError(format!("'{addr}' resolved to no address")))
+}
+
+fn connect_retry(addr: SocketAddr, what: &str, deadline: Instant) -> Result<TcpStream, TransportError> {
+    loop {
+        match TcpStream::connect_timeout(&addr, Duration::from_millis(500)) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(TransportError(format!(
+                        "dialing {what} at {addr} timed out after {:?}: {e}",
+                        BOOTSTRAP_TIMEOUT
+                    )));
+                }
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+fn accept_retry(l: &TcpListener, what: &str, deadline: Instant) -> Result<TcpStream, TransportError> {
+    l.set_nonblocking(true).map_err(|e| io_err("listener setup", e))?;
+    loop {
+        match l.accept() {
+            Ok((s, _)) => {
+                s.set_nonblocking(false).map_err(|e| io_err("socket setup", e))?;
+                return Ok(s);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    return Err(TransportError(format!(
+                        "waiting for {what} timed out after {:?}",
+                        BOOTSTRAP_TIMEOUT
+                    )));
+                }
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            Err(e) => return Err(io_err("accept", e)),
+        }
+    }
+}
+
+fn read_exact(s: &mut TcpStream, buf: &mut [u8], ctx: &str) -> Result<(), TransportError> {
+    s.read_exact(buf).map_err(|e| io_err(ctx, e))
+}
+
+fn write_addr(s: &mut TcpStream, addr: &SocketAddr) -> Result<(), TransportError> {
+    let text = addr.to_string();
+    let bytes = text.as_bytes();
+    let len = bytes.len() as u16;
+    s.write_all(&len.to_le_bytes()).map_err(|e| io_err("writing address", e))?;
+    s.write_all(bytes).map_err(|e| io_err("writing address", e))
+}
+
+fn read_addr(s: &mut TcpStream) -> Result<SocketAddr, TransportError> {
+    let mut len = [0u8; 2];
+    read_exact(s, &mut len, "reading address length")?;
+    let len = u16::from_le_bytes(len) as usize;
+    if len == 0 || len > 256 {
+        return Err(TransportError(format!("implausible address length {len}")));
+    }
+    let mut buf = vec![0u8; len];
+    read_exact(s, &mut buf, "reading address")?;
+    let text = String::from_utf8(buf)
+        .map_err(|_| TransportError("address is not valid UTF-8".into()))?;
+    resolve(&text)
+}
+
+/// Run the two bootstrap phases.  Returns the per-peer data streams indexed
+/// by rank (`None` at the caller's own slot), each with `TCP_NODELAY` set.
+pub fn establish(
+    rendezvous: &str,
+    rank: usize,
+    n: usize,
+) -> Result<Vec<Option<TcpStream>>, TransportError> {
+    if n == 0 || rank >= n {
+        return Err(TransportError(format!("rank {rank} out of range for {n} workers")));
+    }
+    let mut links: Vec<Option<TcpStream>> = (0..n).map(|_| None).collect();
+    if n == 1 {
+        return Ok(links); // single-process job: no peers, no sockets
+    }
+    let rv_addr = resolve(rendezvous)?;
+    let deadline = Instant::now() + BOOTSTRAP_TIMEOUT;
+
+    // Every rank owns a data listener on an ephemeral port.  Rank 0 binds
+    // the rendezvous interface (it owns that address by construction);
+    // other ranks may live on *different hosts*, so they bind the
+    // unspecified address of the matching family and advertise the
+    // interface their rendezvous connection actually used — routable by
+    // definition, loopback for loopback jobs.
+    let bind_ip: IpAddr = if rank == 0 {
+        if rv_addr.ip().is_unspecified() {
+            IpAddr::V4(Ipv4Addr::LOCALHOST)
+        } else {
+            rv_addr.ip()
+        }
+    } else {
+        match rv_addr {
+            SocketAddr::V4(_) => IpAddr::V4(Ipv4Addr::UNSPECIFIED),
+            SocketAddr::V6(_) => IpAddr::V6(std::net::Ipv6Addr::UNSPECIFIED),
+        }
+    };
+    let data = TcpListener::bind((bind_ip, 0)).map_err(|e| io_err("binding data listener", e))?;
+    let data_addr = data.local_addr().map_err(|e| io_err("reading data address", e))?;
+
+    // ---- phase 1: the peer table ----
+    let table: Vec<SocketAddr> = if rank == 0 {
+        let server = bind_retry(rv_addr, deadline)?;
+        let mut table: Vec<Option<SocketAddr>> = (0..n).map(|_| None).collect();
+        table[0] = Some(data_addr);
+        let mut registrants: Vec<(usize, TcpStream)> = Vec::with_capacity(n - 1);
+        while registrants.len() < n - 1 {
+            let mut s = accept_retry(&server, "worker registrations", deadline)?;
+            s.set_read_timeout(Some(IO_TIMEOUT)).map_err(|e| io_err("socket setup", e))?;
+            let mut magic = [0u8; 8];
+            read_exact(&mut s, &mut magic, "reading rendezvous magic")?;
+            if &magic != RV_MAGIC {
+                return Err(TransportError("rendezvous contacted by a non-worker".into()));
+            }
+            let mut hdr = [0u8; 8];
+            read_exact(&mut s, &mut hdr, "reading registration")?;
+            let peer = u32::from_le_bytes(hdr[..4].try_into().unwrap()) as usize;
+            let peer_n = u32::from_le_bytes(hdr[4..].try_into().unwrap()) as usize;
+            if peer_n != n {
+                return Err(TransportError(format!(
+                    "worker {peer} was launched with --workers {peer_n}, this job has {n}"
+                )));
+            }
+            if peer == 0 || peer >= n || table[peer].is_some() {
+                return Err(TransportError(format!("invalid or duplicate rank {peer}")));
+            }
+            table[peer] = Some(read_addr(&mut s)?);
+            registrants.push((peer, s));
+        }
+        let table: Vec<SocketAddr> = table.into_iter().map(|a| a.unwrap()).collect();
+        for (_, mut s) in registrants {
+            s.write_all(TABLE_MAGIC).map_err(|e| io_err("writing peer table", e))?;
+            s.write_all(&(n as u32).to_le_bytes()).map_err(|e| io_err("writing peer table", e))?;
+            for a in &table {
+                write_addr(&mut s, a)?;
+            }
+        }
+        table
+    } else {
+        let mut s = connect_retry(rv_addr, "rendezvous", deadline)?;
+        s.set_read_timeout(Some(BOOTSTRAP_TIMEOUT)).map_err(|e| io_err("socket setup", e))?;
+        // Advertise the interface this connection used, with the data
+        // listener's port (the listener itself is bound to the unspecified
+        // address, which no peer could dial).
+        let advertised = SocketAddr::new(
+            s.local_addr().map_err(|e| io_err("reading local address", e))?.ip(),
+            data_addr.port(),
+        );
+        s.write_all(RV_MAGIC).map_err(|e| io_err("registering", e))?;
+        let mut hdr = [0u8; 8];
+        hdr[..4].copy_from_slice(&(rank as u32).to_le_bytes());
+        hdr[4..].copy_from_slice(&(n as u32).to_le_bytes());
+        s.write_all(&hdr).map_err(|e| io_err("registering", e))?;
+        write_addr(&mut s, &advertised)?;
+        let mut magic = [0u8; 8];
+        read_exact(&mut s, &mut magic, "reading peer table magic")?;
+        if &magic != TABLE_MAGIC {
+            return Err(TransportError("rendezvous answered with a non-table".into()));
+        }
+        let mut cnt = [0u8; 4];
+        read_exact(&mut s, &mut cnt, "reading peer table size")?;
+        if u32::from_le_bytes(cnt) as usize != n {
+            return Err(TransportError("peer table size mismatch".into()));
+        }
+        let mut table = Vec::with_capacity(n);
+        for _ in 0..n {
+            table.push(read_addr(&mut s)?);
+        }
+        table
+    };
+
+    // ---- phase 2: the mesh ----
+    // Higher ranks dial lower ranks; the handshake names the dialer.
+    for (j, addr) in table.iter().enumerate().take(rank) {
+        let mut s = connect_retry(*addr, &format!("peer {j}"), deadline)?;
+        s.write_all(HANDSHAKE_MAGIC).map_err(|e| io_err("handshaking", e))?;
+        s.write_all(&(rank as u32).to_le_bytes()).map_err(|e| io_err("handshaking", e))?;
+        s.set_nodelay(true).map_err(|e| io_err("socket setup", e))?;
+        links[j] = Some(s);
+    }
+    for _ in rank + 1..n {
+        let mut s = accept_retry(&data, "peer connections", deadline)?;
+        s.set_read_timeout(Some(IO_TIMEOUT)).map_err(|e| io_err("socket setup", e))?;
+        let mut magic = [0u8; 8];
+        read_exact(&mut s, &mut magic, "reading handshake magic")?;
+        if &magic != HANDSHAKE_MAGIC {
+            return Err(TransportError("data listener contacted by a non-worker".into()));
+        }
+        let mut rb = [0u8; 4];
+        read_exact(&mut s, &mut rb, "reading handshake rank")?;
+        let peer = u32::from_le_bytes(rb) as usize;
+        if peer <= rank || peer >= n || links[peer].is_some() {
+            return Err(TransportError(format!("invalid or duplicate handshake rank {peer}")));
+        }
+        s.set_read_timeout(None).map_err(|e| io_err("socket setup", e))?;
+        s.set_nodelay(true).map_err(|e| io_err("socket setup", e))?;
+        links[peer] = Some(s);
+    }
+    Ok(links)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn four_ranks_form_a_full_mesh_over_loopback() {
+        let addr = free_loopback_addr().unwrap();
+        let n = 4;
+        let meshes: Vec<_> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..n)
+                .map(|r| {
+                    let addr = addr.clone();
+                    s.spawn(move || establish(&addr, r, n).unwrap())
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (r, links) in meshes.iter().enumerate() {
+            assert!(links[r].is_none(), "rank {r} must not link to itself");
+            for (j, l) in links.iter().enumerate() {
+                assert_eq!(l.is_some(), j != r, "rank {r} link to {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_rank_needs_no_sockets() {
+        let links = establish("127.0.0.1:1", 0, 1).unwrap();
+        assert_eq!(links.len(), 1);
+        assert!(links[0].is_none());
+    }
+
+    #[test]
+    fn bad_rank_is_rejected() {
+        assert!(establish("127.0.0.1:1", 3, 2).is_err());
+    }
+}

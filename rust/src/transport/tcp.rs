@@ -1,0 +1,275 @@
+//! TCP peer transport: the same bit-packed frames, over real sockets.
+//!
+//! [`TcpTransport`] is the [`PeerTransport`] of one OS process acting as one
+//! worker rank.  It holds a persistent full mesh of loopback/LAN sockets
+//! built by [`super::rendezvous::establish`] and moves every collective
+//! frame as:
+//!
+//! ```text
+//! | round: u64 LE | tag: u8 | bit_len: u64 LE | payload: ceil(bit_len/8) bytes |
+//! ```
+//!
+//! The payload is the [`WireMsg`]'s bit-packed words, little-endian,
+//! truncated to the byte length — so the bytes on the socket are exactly
+//! the accounted payload (`encoded bits ≡ accounted bits` holds on the real
+//! network, measured by the `payload_bits_*` counters) plus the fixed
+//! 17-byte header the counters report separately.  Receivers validate the
+//! header against the (round, tag) they expect and cap `bit_len` before
+//! allocating, then hand the rebuilt message to the hardened
+//! `transport::wire` decoders — a corrupt or desynchronized stream fails
+//! loudly in release builds.
+
+use super::peer::{PeerTransport, Tag, TransportError};
+use super::wire::WireMsg;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+/// Refuse frames claiming more than 64 MiB of payload — a corrupt length
+/// header must not become an allocation bomb (`recv` allocates the byte
+/// and word buffers before `read_exact` can fail).  Legitimate frames top
+/// out at one dense vector (32·d bits: ~4 MB at d = 2²⁰); raise this if
+/// models beyond ~16M dense values are ever driven over TCP.
+const MAX_FRAME_BITS: u64 = 1 << 29;
+
+/// Fixed frame header size in bytes (round + tag + bit length).
+pub const FRAME_HEADER_BYTES: u64 = 17;
+
+struct Link {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+}
+
+pub struct TcpTransport {
+    rank: usize,
+    n: usize,
+    links: Vec<Option<Link>>,
+    /// Payload bits moved through this process's sockets (headers excluded)
+    /// — the quantity that must equal the accounted `payload_bits_wire`.
+    pub payload_bits_sent: u64,
+    pub payload_bits_received: u64,
+    /// Raw bytes written including the 17-byte frame headers.
+    pub frame_bytes_sent: u64,
+}
+
+impl TcpTransport {
+    /// Join job `rendezvous` as worker `rank` of `n`: run the bootstrap and
+    /// wrap the mesh sockets in buffered links.
+    pub fn connect(rendezvous: &str, rank: usize, n: usize) -> Result<TcpTransport, TransportError> {
+        let streams = super::rendezvous::establish(rendezvous, rank, n)?;
+        let mut links = Vec::with_capacity(n);
+        for s in streams {
+            links.push(match s {
+                None => None,
+                Some(stream) => {
+                    let reader = BufReader::new(
+                        stream
+                            .try_clone()
+                            .map_err(|e| TransportError(format!("splitting socket: {e}")))?,
+                    );
+                    Some(Link { reader, writer: BufWriter::new(stream) })
+                }
+            });
+        }
+        Ok(TcpTransport {
+            rank,
+            n,
+            links,
+            payload_bits_sent: 0,
+            payload_bits_received: 0,
+            frame_bytes_sent: 0,
+        })
+    }
+
+    fn link(&mut self, peer: usize) -> Result<&mut Link, TransportError> {
+        if peer == self.rank || peer >= self.n {
+            return Err(TransportError(format!(
+                "rank {} has no link to peer {peer}",
+                self.rank
+            )));
+        }
+        Ok(self.links[peer].as_mut().expect("mesh link exists for every other rank"))
+    }
+
+    fn send_ref(
+        &mut self,
+        to: usize,
+        round: u64,
+        tag: Tag,
+        msg: &WireMsg,
+    ) -> Result<(), TransportError> {
+        let nbytes = msg.byte_len() as usize;
+        let link = self.link(to)?;
+        let mut hdr = [0u8; FRAME_HEADER_BYTES as usize];
+        hdr[..8].copy_from_slice(&round.to_le_bytes());
+        hdr[8] = tag as u8;
+        hdr[9..].copy_from_slice(&msg.bit_len.to_le_bytes());
+        let io = |e: std::io::Error| TransportError(format!("sending to peer {to}: {e}"));
+        link.writer.write_all(&hdr).map_err(io)?;
+        let mut written = 0usize;
+        for w in &msg.words {
+            let bytes = w.to_le_bytes();
+            let take = (nbytes - written).min(8);
+            link.writer.write_all(&bytes[..take]).map_err(io)?;
+            written += take;
+            if written == nbytes {
+                break;
+            }
+        }
+        link.writer.flush().map_err(io)?;
+        self.payload_bits_sent += msg.bit_len;
+        self.frame_bytes_sent += FRAME_HEADER_BYTES + nbytes as u64;
+        Ok(())
+    }
+}
+
+impl PeerTransport for TcpTransport {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn send(&mut self, to: usize, round: u64, tag: Tag, msg: WireMsg) -> Result<(), TransportError> {
+        self.send_ref(to, round, tag, &msg)
+    }
+
+    fn broadcast(&mut self, round: u64, tag: Tag, msg: WireMsg) -> Result<(), TransportError> {
+        for j in 0..self.n {
+            if j != self.rank {
+                self.send_ref(j, round, tag, &msg)?;
+            }
+        }
+        Ok(())
+    }
+
+    fn recv(&mut self, from: usize, round: u64, tag: Tag) -> Result<Arc<WireMsg>, TransportError> {
+        let rank = self.rank;
+        let link = self.link(from)?;
+        let io = |e: std::io::Error| TransportError(format!("receiving from peer {from}: {e}"));
+        let mut hdr = [0u8; FRAME_HEADER_BYTES as usize];
+        link.reader.read_exact(&mut hdr).map_err(io)?;
+        let r = u64::from_le_bytes(hdr[..8].try_into().unwrap());
+        let tg = Tag::from_u8(hdr[8])
+            .ok_or_else(|| TransportError(format!("unknown frame tag {} from peer {from}", hdr[8])))?;
+        let bit_len = u64::from_le_bytes(hdr[9..].try_into().unwrap());
+        if bit_len > MAX_FRAME_BITS {
+            return Err(TransportError(format!(
+                "frame from peer {from} claims {bit_len} bits (cap {MAX_FRAME_BITS})"
+            )));
+        }
+        if r != round || tg != tag {
+            return Err(TransportError(format!(
+                "rank {rank} desynchronized: expected (round {round}, {tag:?}) from peer {from}, \
+                 got (round {r}, {tg:?})"
+            )));
+        }
+        let nbytes = bit_len.div_ceil(8) as usize;
+        let mut buf = vec![0u8; nbytes];
+        link.reader.read_exact(&mut buf).map_err(io)?;
+        let mut words = vec![0u64; bit_len.div_ceil(64) as usize];
+        for (w, chunk) in words.iter_mut().zip(buf.chunks(8)) {
+            let mut b = [0u8; 8];
+            b[..chunk.len()].copy_from_slice(chunk);
+            *w = u64::from_le_bytes(b);
+        }
+        self.payload_bits_received += bit_len;
+        Ok(Arc::new(WireMsg { words, bit_len }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collective::psync as in_process_psync;
+    use crate::compressor::{Compressor, Grbs, TopK};
+    use crate::transport::rendezvous::free_loopback_addr;
+    use crate::transport::peer;
+    use crate::util::prop::{slices_close, Gen};
+
+    /// Run `f(rank, transport)` in n threads joined over a fresh loopback
+    /// rendezvous — real sockets, one process, n "workers".
+    fn run_tcp_peers<T: Send, F: Fn(usize, &mut TcpTransport) -> T + Sync>(
+        n: usize,
+        f: F,
+    ) -> Vec<T> {
+        let addr = free_loopback_addr().unwrap();
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..n)
+                .map(|r| {
+                    let addr = addr.clone();
+                    let f = &f;
+                    s.spawn(move || {
+                        let mut tp = TcpTransport::connect(&addr, r, n).unwrap();
+                        f(r, &mut tp)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("tcp peer panicked")).collect()
+        })
+    }
+
+    #[test]
+    fn tcp_psync_matches_in_process_and_measures_exact_bits() {
+        let n = 4;
+        let d = 96;
+        let mut g = Gen::replay(0x7C9, 0);
+        let vs = g.worker_vecs(n, d);
+
+        // Ring path (GRBS): within f32 reduction tolerance; the frames on
+        // the socket carry exactly the encoded chunk bits.
+        let c = Grbs::new(4.0, 12, 7);
+        let mut expect = vs.clone();
+        in_process_psync(&mut expect, None, &c, 3);
+        let out = run_tcp_peers(n, |w, tp| {
+            let mut v = vs[w].clone();
+            let round = peer::psync(tp, &mut v, None, &c, 3).unwrap();
+            (v, round, tp.payload_bits_sent)
+        });
+        for (i, (v, round, sent)) in out.iter().enumerate() {
+            slices_close(&expect[i], v, 1e-5).unwrap_or_else(|e| panic!("worker {i}: {e}"));
+            let wire = round.wire.expect("tcp measures traffic");
+            assert_eq!(
+                wire.up_bits + wire.down_bits,
+                *sent,
+                "worker {i}: socket payload bits != protocol accounting"
+            );
+        }
+
+        // PS path (top-k): bit-identical, upload == accounted payload.
+        let c = TopK::new(8.0);
+        let mut expect = vs.clone();
+        let ia = in_process_psync(&mut expect, None, &c, 4);
+        let out = run_tcp_peers(n, |w, tp| {
+            let mut v = vs[w].clone();
+            let round = peer::psync(tp, &mut v, None, &c, 4).unwrap();
+            (v, round)
+        });
+        for (i, (v, round)) in out.iter().enumerate() {
+            assert_eq!(&expect[i], v, "worker {i}: PS path must be bit-identical over TCP");
+            assert_eq!(round.upload_bits_per_worker, ia.upload_bits_per_worker);
+            let sel = c.select(crate::compressor::Ctx { round: 4, worker: i as u32 }, &vs[i]);
+            assert_eq!(
+                round.wire.unwrap().up_bits,
+                crate::compressor::payload_bits_wire(c.wire_scheme(), &sel, d),
+                "worker {i}: encoded bits must equal accounted bits on the socket"
+            );
+        }
+    }
+
+    #[test]
+    fn vote_and_agree_work_over_sockets() {
+        let out = run_tcp_peers(3, |w, tp| {
+            let v = peer::vote(tp, w as f64, 10.0, 1).unwrap();
+            let a = peer::agree(tp, w == 0, 2).unwrap();
+            (v, a)
+        });
+        for ((mean, stop), any) in &out {
+            assert!((*mean - 1.0).abs() < 1e-12);
+            assert!(!*stop);
+            assert!(*any);
+        }
+    }
+}

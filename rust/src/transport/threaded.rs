@@ -1,50 +1,116 @@
-//! Multi-threaded collectives over serialized messages.
+//! Multi-threaded collectives over serialized messages — now with
+//! **persistent** worker threads.
 //!
-//! One OS thread per worker (std::thread::scope + std::sync::mpsc only, the
-//! same no-dependency discipline as `util::pool`), every payload an actual
-//! bit-packed [`WireMsg`]:
+//! The first version of this backend spawned 2n fresh OS threads on every
+//! collective call (`std::thread::scope` per round), the per-call cost
+//! DESIGN.md §5 documented.  It is now a thin facade over the peer-owned
+//! protocol: a pool of n long-lived worker threads (built lazily on the
+//! first call, reused for every subsequent round, resized only if the
+//! worker count changes) each owns a [`mesh::MeshTransport`] endpoint and
+//! executes its own ring segment / parameter-server exchange via
+//! [`peer::run`].  A call moves each worker's vector into its thread (a
+//! pointer swap, not a copy), the threads run the round concurrently, and
+//! the facade reassembles the fleet-view [`PsyncRound`] the central
+//! `Collective` interface promises.
 //!
-//! * **Ring** (AllReduce-compatible compressors — shared support, no index
-//!   metadata): the selected values are gathered into a compact vector and
-//!   reduce-scattered/all-gathered around the ring in `2(n−1)` steps,
-//!   exactly the schedule `collective::ring_allreduce_cost` prices.  Chunk
-//!   sums accumulate in ring order, so results match the in-process backend
-//!   up to f32 reduction-order error (documented tolerance).
-//! * **Parameter server** (per-worker supports and dense quantizers): each
-//!   worker encodes its message and sends it to the server (the calling
-//!   thread); the server decodes in worker order, accumulates the mean,
-//!   and broadcasts the aggregate over the *union* support — the actual
-//!   quantity `CostModel::sync_round` approximates with a union factor.
-//!   Because decode∘encode is bit-identical to `compress_into` and the
-//!   accumulation order matches, this path is **bit-identical** to
-//!   [`super::InProcess`].
-//!
-//! The returned [`PsyncRound::wire`] carries the measured per-worker traffic
-//! (ceiling of the mean across workers): serialized bits, not a formula.
+//! Protocol and numerics are unchanged from the spawning version (the ring
+//! chunk schedule and server accumulation order moved verbatim into
+//! `transport::peer`): the parameter-server path stays **bit-identical** to
+//! [`super::InProcess`], the ring path stays within f32 reduction-order
+//! tolerance.  `benches/transport.rs` shows the before/after: construct a
+//! fresh `Threaded` per call to re-measure the old spawn cost.
 
-use super::wire::{self, WireMsg};
+use super::mesh::channel_mesh;
+use super::peer::{self, Mode, TransportError};
 use super::{Collective, InProcess};
 use crate::collective::{PsyncRound, WireCost};
-use crate::compressor::{payload_bits_wire, Compressor, Ctx, Selection};
-use crate::util::math;
+use crate::compressor::Compressor;
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
 
-#[derive(Clone, Copy, Debug, Default)]
-pub struct Threaded;
+pub struct Threaded {
+    pool: Mutex<Option<Pool>>,
+}
 
 impl Threaded {
     pub fn new() -> Self {
-        Threaded
+        Threaded { pool: Mutex::new(None) }
     }
 }
 
-#[derive(Clone, Copy, PartialEq, Eq)]
-enum Mode {
-    /// vs[i] ← mean + residual_i (PSync proper).
-    Psync,
-    /// qs[i] ← mean; residual only reported.
-    Exchange,
+impl Default for Threaded {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+struct Job {
+    mode: Mode,
+    v: Vec<f32>,
+    resid: Option<Vec<f32>>,
+    c: Arc<dyn Compressor>,
+    round: u64,
+}
+
+type JobResult = Result<(Vec<f32>, Option<Vec<f32>>, PsyncRound), TransportError>;
+
+/// The persistent worker fleet: one thread per worker slot, fed over a
+/// per-worker job channel, answering on a shared completion channel.
+struct Pool {
+    n: usize,
+    jobs: Vec<Sender<Job>>,
+    done: Receiver<(usize, JobResult)>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl Pool {
+    fn new(n: usize) -> Pool {
+        let (done_tx, done_rx) = channel();
+        let mut jobs = Vec::with_capacity(n);
+        let mut handles = Vec::with_capacity(n);
+        for (w, mut tp) in channel_mesh(n).into_iter().enumerate() {
+            let (tx, rx) = channel::<Job>();
+            jobs.push(tx);
+            let done = done_tx.clone();
+            handles.push(std::thread::spawn(move || {
+                while let Ok(mut job) = rx.recv() {
+                    let out = peer::run(
+                        &mut tp,
+                        job.mode,
+                        &mut job.v,
+                        job.resid.as_mut(),
+                        job.c.as_ref(),
+                        job.round,
+                    );
+                    let out = out.map(|round| (job.v, job.resid, round));
+                    if done.send((w, out)).is_err() {
+                        break; // facade gone: shut down
+                    }
+                }
+            }));
+        }
+        Pool { n, jobs, done: done_rx, handles }
+    }
+
+    fn shutdown(self) {
+        drop(self.jobs); // workers' `rx.recv()` errors → loops exit
+        for h in self.handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Threaded {
+    fn drop(&mut self) {
+        let pool = match self.pool.get_mut() {
+            Ok(p) => p.take(),
+            Err(poisoned) => poisoned.into_inner().take(),
+        };
+        if let Some(p) = pool {
+            p.shutdown();
+        }
+    }
 }
 
 impl Collective for Threaded {
@@ -56,7 +122,7 @@ impl Collective for Threaded {
         &self,
         vs: &mut [Vec<f32>],
         resid_out: Option<&mut [Vec<f32>]>,
-        c: &dyn Compressor,
+        c: &Arc<dyn Compressor>,
         round: u64,
     ) -> PsyncRound {
         self.run(Mode::Psync, vs, resid_out, c, round)
@@ -66,7 +132,7 @@ impl Collective for Threaded {
         &self,
         qs: &mut [Vec<f32>],
         resid_out: Option<&mut [Vec<f32>]>,
-        c: &dyn Compressor,
+        c: &Arc<dyn Compressor>,
         round: u64,
     ) -> PsyncRound {
         self.run(Mode::Exchange, qs, resid_out, c, round)
@@ -79,7 +145,7 @@ impl Threaded {
         mode: Mode,
         vs: &mut [Vec<f32>],
         resid_out: Option<&mut [Vec<f32>]>,
-        c: &dyn Compressor,
+        c: &Arc<dyn Compressor>,
         round: u64,
     ) -> PsyncRound {
         let n = vs.len();
@@ -91,267 +157,85 @@ impl Threaded {
                 Mode::Exchange => InProcess.exchange_mean(vs, resid_out, c, round),
             };
         }
-        if c.globally_synchronized() && !c.is_dense() {
-            ring_round(mode, vs, resid_out, c, round)
-        } else {
-            ps_round(mode, vs, resid_out, c, round)
-        }
-    }
-}
-
-/// Balanced chunk bounds: chunk `k` of a length-`m` vector split `n` ways.
-fn chunk_bounds(m: usize, n: usize, k: usize) -> (usize, usize) {
-    (k * m / n, (k + 1) * m / n)
-}
-
-/// Gather `v`'s selected ranges into a compact vector of length `sel.count`.
-fn gather(sel: &Selection, v: &[f32], compact: &mut Vec<f32>) {
-    compact.clear();
-    sel.for_each_range(v.len(), |s, e| compact.extend_from_slice(&v[s..e]));
-}
-
-fn ring_round(
-    mode: Mode,
-    vs: &mut [Vec<f32>],
-    mut resid_out: Option<&mut [Vec<f32>]>,
-    c: &dyn Compressor,
-    round: u64,
-) -> PsyncRound {
-    let n = vs.len();
-    let d = vs[0].len();
-    let sel = c.select(Ctx { round, worker: 0 }, &vs[0]);
-    let bits = payload_bits_wire(c.wire_scheme(), &sel, d);
-    let m = sel.count(d);
-
-    if m == 0 {
-        // C = 0 everywhere (e.g. the Zero compressor): nothing travels.
-        if let Some(res) = resid_out.as_deref_mut() {
-            for (r, v) in res.iter_mut().zip(vs.iter()) {
-                r.copy_from_slice(v);
+        let mut guard = self.pool.lock().unwrap();
+        if guard.as_ref().map(|p| p.n) != Some(n) {
+            if let Some(old) = guard.take() {
+                old.shutdown();
             }
+            *guard = Some(Pool::new(n));
         }
-        if mode == Mode::Exchange {
-            for v in vs.iter_mut() {
-                math::fill(v, 0.0);
-            }
+        let pool = guard.as_ref().expect("pool just built");
+
+        let mut resid = resid_out;
+        for (i, v) in vs.iter_mut().enumerate() {
+            let job = Job {
+                mode,
+                v: std::mem::take(v),
+                resid: resid.as_deref_mut().map(|rs| std::mem::take(&mut rs[i])),
+                c: Arc::clone(c),
+                round,
+            };
+            pool.jobs[i].send(job).expect("pool worker hung up");
         }
-        return PsyncRound {
-            selections: vec![sel],
-            upload_bits_per_worker: 0,
-            allreduce_compatible: true,
-            wire: Some(WireCost { up_bits: 0, down_bits: 0, steps: 0 }),
-        };
-    }
-
-    // One mpsc channel per worker; worker i sends to (i+1) % n.
-    let mut txs: Vec<Option<Sender<WireMsg>>> = Vec::with_capacity(n);
-    let mut rxs: Vec<Option<Receiver<WireMsg>>> = Vec::with_capacity(n);
-    for _ in 0..n {
-        let (tx, rx) = channel();
-        txs.push(Some(tx));
-        rxs.push(Some(rx));
-    }
-    let mut resid_slots: Vec<Option<&mut Vec<f32>>> = match resid_out.as_deref_mut() {
-        Some(res) => res.iter_mut().map(Some).collect(),
-        None => (0..n).map(|_| None).collect(),
-    };
-    // Grab the senders first (txs is also indexed by the loop below).
-    let next_tx: Vec<Sender<WireMsg>> =
-        (0..n).map(|i| txs[(i + 1) % n].take().unwrap()).collect();
-
-    let sel_ref = &sel;
-    let mut traffic: Vec<(u64, u64)> = Vec::with_capacity(n);
-    std::thread::scope(|s| {
-        let mut handles = Vec::with_capacity(n);
-        for (i, ((v, res), tx)) in
-            vs.iter_mut().zip(resid_slots.drain(..)).zip(next_tx).enumerate()
-        {
-            let rx = rxs[i].take().unwrap();
-            handles.push(s.spawn(move || -> (u64, u64) {
-                let mut compact = Vec::with_capacity(m);
-                gather(sel_ref, v, &mut compact);
-                // Traffic split follows `ring_allreduce_cost`'s convention:
-                // `up` = bits sent during reduce-scatter, `down` = bits sent
-                // during all-gather (each worker also receives the same
-                // volumes from its other neighbor).
-                let (mut up, mut down) = (0u64, 0u64);
-
-                // Reduce-scatter: after n-1 steps this worker owns the fully
-                // reduced chunk (i+1) % n.
-                for step in 0..n - 1 {
-                    let (cs, ce) = chunk_bounds(m, n, (i + n - step) % n);
-                    let msg = wire::encode_f32s(&compact[cs..ce]);
-                    up += msg.bit_len;
-                    tx.send(msg).expect("ring send");
-                    let msg = rx.recv().expect("ring recv");
-                    let (cs, ce) = chunk_bounds(m, n, (i + n - step - 1) % n);
-                    wire::decode_f32s_add(&msg, &mut compact[cs..ce]);
-                }
-                // All-gather: circulate the completed chunks.
-                for step in 0..n - 1 {
-                    let (cs, ce) = chunk_bounds(m, n, (i + 1 + n - step) % n);
-                    let msg = wire::encode_f32s(&compact[cs..ce]);
-                    down += msg.bit_len;
-                    tx.send(msg).expect("ring send");
-                    let msg = rx.recv().expect("ring recv");
-                    let (cs, ce) = chunk_bounds(m, n, (i + n - step) % n);
-                    wire::decode_f32s(&msg, &mut compact[cs..ce]);
-                }
-
-                let inv = 1.0 / n as f32;
-                for x in compact.iter_mut() {
-                    *x *= inv;
-                }
-                // Residual (v off support) must be captured before the mean
-                // overwrites the selected ranges.
-                if let Some(r) = res {
-                    r.copy_from_slice(v);
-                    sel_ref.for_each_range(v.len(), |s0, e0| math::fill(&mut r[s0..e0], 0.0));
-                }
-                if mode == Mode::Exchange {
-                    math::fill(v, 0.0);
-                }
-                let mut cursor = 0usize;
-                sel_ref.for_each_range(v.len(), |s0, e0| {
-                    v[s0..e0].copy_from_slice(&compact[cursor..cursor + (e0 - s0)]);
-                    cursor += e0 - s0;
-                });
-                (up, down)
-            }));
-        }
-        for h in handles {
-            traffic.push(h.join().expect("ring worker panicked"));
-        }
-    });
-
-    let steps = 2 * (n as u32 - 1);
-    let total_up: u64 = traffic.iter().map(|t| t.0).sum();
-    let total_down: u64 = traffic.iter().map(|t| t.1).sum();
-    PsyncRound {
-        selections: vec![sel],
-        upload_bits_per_worker: bits,
-        allreduce_compatible: true,
-        wire: Some(WireCost {
-            up_bits: total_up.div_ceil(n as u64),
-            down_bits: total_down.div_ceil(n as u64),
-            steps,
-        }),
-    }
-}
-
-fn ps_round(
-    mode: Mode,
-    vs: &mut [Vec<f32>],
-    mut resid_out: Option<&mut [Vec<f32>]>,
-    c: &dyn Compressor,
-    round: u64,
-) -> PsyncRound {
-    let n = vs.len();
-    let d = vs[0].len();
-    let (tx_up, rx_up) = channel::<(usize, WireMsg)>();
-    // The aggregate is broadcast behind an Arc: workers only read it, and at
-    // bench scale (dense d=2^20 aggregates) per-worker deep clones would be
-    // tens of MB of memcpy charged to the backend under test.
-    let mut down_txs: Vec<Sender<Arc<WireMsg>>> = Vec::with_capacity(n);
-    let mut down_rxs: Vec<Option<Receiver<Arc<WireMsg>>>> = Vec::with_capacity(n);
-    for _ in 0..n {
-        let (tx, rx) = channel();
-        down_txs.push(tx);
-        down_rxs.push(Some(rx));
-    }
-    let mut resid_slots: Vec<Option<&mut Vec<f32>>> = match resid_out.as_deref_mut() {
-        Some(res) => res.iter_mut().map(Some).collect(),
-        None => (0..n).map(|_| None).collect(),
-    };
-
-    let mut selections: Vec<Selection> = Vec::with_capacity(n);
-    let mut traffic: Vec<(u64, u64)> = Vec::with_capacity(n);
-    std::thread::scope(|s| {
-        let mut handles = Vec::with_capacity(n);
-        for (i, (v, res)) in vs.iter_mut().zip(resid_slots.drain(..)).enumerate() {
-            let tx_up = tx_up.clone();
-            let rx_down = down_rxs[i].take().unwrap();
-            handles.push(s.spawn(move || -> (Selection, u64, u64) {
-                let ctx = Ctx { round, worker: i as u32 };
-                let sel = c.select(ctx, v);
-                let msg = wire::encode_with_selection(c, ctx, v, Some(&sel));
-                let up = msg.bit_len;
-                // Decode our own upload so the residual is computed against
-                // the exact bits the server aggregates.
-                let mut cq = vec![0.0f32; d];
-                wire::decode(c, ctx, &msg, &mut cq);
-                tx_up.send((i, msg)).expect("gather send");
-                // residual r = v − C(v)
-                for (vj, kj) in v.iter_mut().zip(&cq) {
-                    *vj -= *kj;
-                }
-                if let Some(r) = res {
-                    r.copy_from_slice(v);
-                }
-                let agg = rx_down.recv().expect("broadcast recv");
-                let down = agg.bit_len;
-                // reuse cq as the decoded aggregate (mean over the union)
-                if c.is_dense() {
-                    wire::decode_f32s(&agg, &mut cq);
-                } else {
-                    wire::decode_union(&agg, &mut cq);
-                }
-                match mode {
-                    // v currently holds the residual: v' = mean + residual.
-                    Mode::Psync => math::axpy(1.0, &cq, v),
-                    Mode::Exchange => v.copy_from_slice(&cq),
-                }
-                (sel, up, down)
-            }));
-        }
-        drop(tx_up);
-
-        // ---- server (the calling thread) ----
-        let mut msgs: Vec<Option<WireMsg>> = (0..n).map(|_| None).collect();
+        let mut rounds: Vec<Option<PsyncRound>> = (0..n).map(|_| None).collect();
         for _ in 0..n {
-            let (i, m) = rx_up.recv().expect("gather recv");
-            msgs[i] = Some(m);
-        }
-        let mut mean = vec![0.0f32; d];
-        let mut scratch = vec![0.0f32; d];
-        let mut mask = vec![false; d];
-        let inv = 1.0 / n as f32;
-        // Accumulate in worker order — the same order as the in-process
-        // backend, so the mean is bit-identical to `collective::exchange_mean`.
-        for (i, msg) in msgs.iter().enumerate() {
-            let msg = msg.as_ref().unwrap();
-            wire::decode(c, Ctx { round, worker: i as u32 }, msg, &mut scratch);
-            for ((mj, sj), uj) in mean.iter_mut().zip(&scratch).zip(mask.iter_mut()) {
-                *mj += inv * *sj;
-                *uj |= *sj != 0.0;
+            // A worker that panics (rather than returning a TransportError)
+            // dies without sending its result, and the done channel stays
+            // connected through the survivors' sender clones — poll for
+            // dead threads so the run panics instead of hanging forever
+            // (the old scoped-thread design surfaced this via join).
+            let (i, res) = loop {
+                match pool.done.recv_timeout(std::time::Duration::from_millis(200)) {
+                    Ok(msg) => break msg,
+                    Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                        assert!(
+                            !pool.handles.iter().any(|h| h.is_finished()),
+                            "threaded pool worker died mid-collective"
+                        );
+                    }
+                    Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                        panic!("threaded pool shut down mid-collective")
+                    }
+                }
+            };
+            let (v, r, info) =
+                res.unwrap_or_else(|e| panic!("threaded worker {i} collective failed: {e}"));
+            vs[i] = v;
+            if let Some(rs) = resid.as_deref_mut() {
+                rs[i] = r.expect("residual travels with its job");
             }
+            rounds[i] = Some(info);
         }
-        let agg = Arc::new(if c.is_dense() {
-            wire::encode_f32s(&mean)
-        } else {
-            wire::encode_union(&mean, &mask)
-        });
-        for tx in &down_txs {
-            tx.send(Arc::clone(&agg)).expect("broadcast send");
-        }
+        combine(rounds.into_iter().map(|r| r.expect("one result per worker")).collect())
+    }
+}
 
-        for h in handles {
-            let (sel, up, down) = h.join().expect("ps worker panicked");
-            selections.push(sel);
-            traffic.push((up, down));
-        }
-    });
-
-    let total_up: u64 = traffic.iter().map(|t| t.0).sum();
-    let total_down: u64 = traffic.iter().map(|t| t.1).sum();
+/// Reassemble the fleet-view round from the per-peer views: per-worker
+/// selections in worker order (a single shared one on the ring path), the
+/// fleet-uniform accounting, and the per-worker mean of the measured wire
+/// traffic (ceiling), matching the spawning backend's reporting exactly.
+fn combine(mut rounds: Vec<PsyncRound>) -> PsyncRound {
+    let n = rounds.len() as u64;
+    let allreduce = rounds[0].allreduce_compatible;
+    let upload_bits_per_worker = rounds[0].upload_bits_per_worker;
+    let steps = rounds[0].wire.expect("peer rounds measure traffic").steps;
+    let total_up: u64 = rounds.iter().map(|r| r.wire.expect("measured").up_bits).sum();
+    let total_down: u64 = rounds.iter().map(|r| r.wire.expect("measured").down_bits).sum();
+    // Selections move out of the per-peer rounds — no per-collective clones
+    // of index vectors on this path.
+    let selections = if allreduce {
+        rounds.swap_remove(0).selections
+    } else {
+        rounds.into_iter().map(|mut r| r.selections.swap_remove(0)).collect()
+    };
     PsyncRound {
         selections,
-        upload_bits_per_worker: total_up.div_ceil(n as u64),
-        allreduce_compatible: false,
+        upload_bits_per_worker,
+        allreduce_compatible: allreduce,
         wire: Some(WireCost {
-            up_bits: total_up.div_ceil(n as u64),
-            down_bits: total_down.div_ceil(n as u64),
-            steps: 2,
+            up_bits: total_up.div_ceil(n),
+            down_bits: total_down.div_ceil(n),
+            steps,
         }),
     }
 }
@@ -361,6 +245,7 @@ mod tests {
     use super::*;
     use crate::collective::ring_allreduce_cost;
     use crate::compressor::{BlockTopK, Grbs, Identity, Qsgd, RandK, SignSgd, TopK, Zero};
+    use crate::transport::wire;
     use crate::util::prop::{forall, slices_close, Gen};
 
     fn mean_of(vs: &[Vec<f32>]) -> Vec<f32> {
@@ -374,21 +259,22 @@ mod tests {
         m
     }
 
-    fn compressor_set(d: usize) -> Vec<Box<dyn Compressor>> {
+    fn compressor_set(d: usize) -> Vec<Arc<dyn Compressor>> {
         vec![
-            Box::new(Grbs::new(4.0, (d / 4).max(1), 77)),
-            Box::new(RandK::new(4.0)),
-            Box::new(TopK::new(4.0)),
-            Box::new(BlockTopK::new(4.0, (d / 8).max(1))),
-            Box::new(Qsgd::new(4)),
-            Box::new(SignSgd),
-            Box::new(Identity),
-            Box::new(Zero),
+            Arc::new(Grbs::new(4.0, (d / 4).max(1), 77)),
+            Arc::new(RandK::new(4.0)),
+            Arc::new(TopK::new(4.0)),
+            Arc::new(BlockTopK::new(4.0, (d / 8).max(1))),
+            Arc::new(Qsgd::new(4)),
+            Arc::new(SignSgd),
+            Arc::new(Identity),
+            Arc::new(Zero),
         ]
     }
 
     #[test]
     fn prop_threaded_psync_preserves_means() {
+        let coll = Threaded::new();
         forall(15, 0x711, |g: &mut Gen| {
             let n = g.usize_in(1, 7);
             let d = g.usize_in(8, 120);
@@ -396,7 +282,7 @@ mod tests {
             let before = mean_of(&vs);
             for c in compressor_set(d) {
                 let mut copy = vs.clone();
-                Threaded.psync(&mut copy, None, c.as_ref(), g.case);
+                coll.psync(&mut copy, None, &c, g.case);
                 let after = mean_of(&copy);
                 slices_close(&before, &after, 1e-4)
                     .map_err(|e| format!("{}: mean not preserved: {e}", c.name()))?;
@@ -408,7 +294,9 @@ mod tests {
     #[test]
     fn prop_threaded_matches_in_process() {
         // PS-path compressors must match bit-for-bit; the ring path within
-        // f32 reduction-order tolerance.
+        // f32 reduction-order tolerance.  One persistent pool serves every
+        // case — rounds reuse the same threads.
+        let coll = Threaded::new();
         forall(15, 0x712, |g: &mut Gen| {
             let n = g.usize_in(2, 7);
             let d = g.usize_in(8, 120);
@@ -417,10 +305,10 @@ mod tests {
                 let ring = c.globally_synchronized() && !c.is_dense();
                 let mut a = vs.clone();
                 let mut ra = vec![vec![0.0f32; d]; n];
-                let ia = InProcess.psync(&mut a, Some(&mut ra), c.as_ref(), g.case);
+                let ia = InProcess.psync(&mut a, Some(&mut ra), &c, g.case);
                 let mut b = vs.clone();
                 let mut rb = vec![vec![0.0f32; d]; n];
-                let ib = Threaded.psync(&mut b, Some(&mut rb), c.as_ref(), g.case);
+                let ib = coll.psync(&mut b, Some(&mut rb), &c, g.case);
                 crate::prop_assert!(
                     ia.allreduce_compatible == ib.allreduce_compatible,
                     "{}: allreduce flag differs",
@@ -435,9 +323,9 @@ mod tests {
                 }
                 // exchange_mean too
                 let mut a = vs.clone();
-                let ia = InProcess.exchange_mean(&mut a, None, c.as_ref(), g.case);
+                let ia = InProcess.exchange_mean(&mut a, None, &c, g.case);
                 let mut b = vs.clone();
-                let ib = Threaded.exchange_mean(&mut b, None, c.as_ref(), g.case);
+                let ib = coll.exchange_mean(&mut b, None, &c, g.case);
                 for i in 0..n {
                     slices_close(&a[i], &b[i], tol)
                         .map_err(|e| format!("{} exch w{i}: {e}", c.name()))?;
@@ -460,10 +348,10 @@ mod tests {
         // the ring formula exactly.
         let n = 4;
         let d = 1024; // GRBS R=2 on 16 blocks of 64 → m = 512, divisible by 4
-        let c = Grbs::new(2.0, 16, 9);
+        let c: Arc<dyn Compressor> = Arc::new(Grbs::new(2.0, 16, 9));
         let mut g = Gen::replay(0x41, 0);
         let mut vs = g.worker_vecs_smooth(n, d);
-        let round = Threaded.psync(&mut vs, None, &c, 3);
+        let round = Threaded::new().psync(&mut vs, None, &c, 3);
         let sel = round.selections[0].clone();
         let m = sel.count(d) as u64;
         assert_eq!(m % n as u64, 0, "test setup: chunks must divide evenly");
@@ -479,10 +367,10 @@ mod tests {
     fn ps_wire_traffic_reports_union_aggregate() {
         let n = 4;
         let d = 256;
-        let c = TopK::new(8.0); // k = 32 per worker
+        let c: Arc<dyn Compressor> = Arc::new(TopK::new(8.0)); // k = 32 per worker
         let mut g = Gen::replay(0x42, 0);
         let mut vs = g.worker_vecs_smooth(n, d);
-        let round = Threaded.psync(&mut vs, None, &c, 5);
+        let round = Threaded::new().psync(&mut vs, None, &c, 5);
         let wire = round.wire.expect("measured traffic");
         // upload: exactly the accounted payload (index+value pairs)
         let pair = wire::index_width(d) as u64 + 32;
@@ -491,28 +379,48 @@ mod tests {
         // download: the union support — between one worker's support and n×
         assert!(wire.down_bits >= 32 * pair && wire.down_bits <= n as u64 * 32 * pair);
         assert_eq!(wire.steps, 2);
+        assert_eq!(round.selections.len(), n, "per-worker selections in worker order");
     }
 
     #[test]
     fn single_worker_delegates_to_in_process() {
         let mut vs = vec![vec![1.0f32, -2.0, 3.0, -4.0]];
         let orig = vs.clone();
-        let round = Threaded.psync(&mut vs, None, &Grbs::new(2.0, 2, 3), 7);
+        let c: Arc<dyn Compressor> = Arc::new(Grbs::new(2.0, 2, 3));
+        let round = Threaded::new().psync(&mut vs, None, &c, 7);
         assert_eq!(vs, orig); // n=1: v' = C(v) + (v − C(v)) = v
         assert!(round.wire.is_none());
     }
 
     #[test]
     fn zero_compressor_moves_no_bits() {
+        let coll = Threaded::new();
         let mut vs = vec![vec![1.0f32; 8]; 3];
         let orig = vs.clone();
-        let round = Threaded.psync(&mut vs, None, &Zero, 1);
+        let c: Arc<dyn Compressor> = Arc::new(Zero);
+        let round = coll.psync(&mut vs, None, &c, 1);
         assert_eq!(vs, orig);
         assert_eq!(round.wire.unwrap().total_bits(), 0);
         let mut qs = vs.clone();
         let mut resid = vec![vec![0.0f32; 8]; 3];
-        Threaded.exchange_mean(&mut qs, Some(&mut resid), &Zero, 1);
+        coll.exchange_mean(&mut qs, Some(&mut resid), &c, 1);
         assert!(qs.iter().all(|q| q.iter().all(|&x| x == 0.0)));
         assert_eq!(resid, orig);
+    }
+
+    #[test]
+    fn pool_survives_worker_count_changes() {
+        // One facade, three fleet sizes: the pool rebuilds only when n
+        // changes and keeps serving rounds correctly.
+        let coll = Threaded::new();
+        let c: Arc<dyn Compressor> = Arc::new(Identity);
+        for &n in &[2usize, 5, 2] {
+            let mut vs: Vec<Vec<f32>> = (0..n).map(|w| vec![w as f32; 6]).collect();
+            coll.psync(&mut vs, None, &c, 1);
+            let expect: f32 = (0..n).map(|w| w as f32).sum::<f32>() / n as f32;
+            for v in &vs {
+                assert!(v.iter().all(|x| (x - expect).abs() < 1e-6), "n={n}");
+            }
+        }
     }
 }

@@ -42,6 +42,25 @@
 
 use crate::compressor::{Compressor, Ctx, Selection, WireScheme};
 
+/// A malformed frame: truncated, misaligned, or carrying out-of-range
+/// metadata.  Decoders return this instead of panicking — the TCP backend
+/// feeds them bytes from the network, exactly the place `debug_assert!`
+/// guards would vanish in release builds.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireError(pub String);
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "malformed wire frame: {}", self.0)
+    }
+}
+
+impl std::error::Error for WireError {}
+
+macro_rules! frame_err {
+    ($($arg:tt)*) => { return Err(WireError(format!($($arg)*))) };
+}
+
 /// A serialized message: `bit_len` bits stored little-endian in `words`.
 #[derive(Clone, Debug, PartialEq)]
 pub struct WireMsg {
@@ -57,6 +76,23 @@ impl WireMsg {
     /// Bytes this message occupies on the wire (bit length rounded up).
     pub fn byte_len(&self) -> u64 {
         self.bit_len.div_ceil(8)
+    }
+
+    /// Structural sanity: the word buffer must cover `bit_len` exactly.
+    /// Every decoder calls this first so a frame with a lying length header
+    /// (truncated or oversized payload) fails loudly instead of reading out
+    /// of bounds or silently ignoring trailing bytes.
+    pub fn check(&self) -> Result<(), WireError> {
+        let need = self.bit_len.div_ceil(64);
+        if self.words.len() as u64 != need {
+            return Err(WireError(format!(
+                "payload holds {} words, bit length {} needs {}",
+                self.words.len(),
+                self.bit_len,
+                need
+            )));
+        }
+        Ok(())
     }
 }
 
@@ -239,7 +275,18 @@ pub fn encode_with_selection(
 
 /// Decode a message produced by [`encode`] with the same `(c, ctx)` into
 /// `out` (length d, fully overwritten): `out == C(v)`.
-pub fn decode(c: &dyn Compressor, ctx: Ctx, msg: &WireMsg, out: &mut [f32]) {
+///
+/// Frames are validated before any read — truncated, misaligned, or
+/// out-of-range frames return [`WireError`] (release-mode safe; the TCP
+/// backend decodes untrusted bytes through this path).  `out` contents are
+/// unspecified on error.
+pub fn decode(
+    c: &dyn Compressor,
+    ctx: Ctx,
+    msg: &WireMsg,
+    out: &mut [f32],
+) -> Result<(), WireError> {
+    msg.check()?;
     let d = out.len();
     out.iter_mut().for_each(|x| *x = 0.0);
     let mut r = msg.reader();
@@ -249,6 +296,13 @@ pub fn decode(c: &dyn Compressor, ctx: Ctx, msg: &WireMsg, out: &mut [f32]) {
             // is zeroed, so value-dependent selections would be wrong here by
             // construction (enforced by the codec roundtrip property tests).
             let sel = c.select(ctx, out);
+            let expect = 32 * sel.count(d) as u64;
+            if msg.bit_len != expect {
+                frame_err!(
+                    "shared-support frame is {} bits, selection needs {expect}",
+                    msg.bit_len
+                );
+            }
             sel.for_each_range(d, |s, e| {
                 for x in &mut out[s..e] {
                     *x = r.read_f32();
@@ -258,9 +312,18 @@ pub fn decode(c: &dyn Compressor, ctx: Ctx, msg: &WireMsg, out: &mut [f32]) {
         WireScheme::IndexValue => {
             let iw = index_width(d);
             let pair = (iw + 32) as u64;
-            debug_assert_eq!(msg.bit_len % pair, 0, "frame not a whole number of pairs");
-            for _ in 0..msg.bit_len / pair {
+            if msg.bit_len % pair != 0 {
+                frame_err!("index-value frame {} bits, not a multiple of {pair}", msg.bit_len);
+            }
+            let pairs = msg.bit_len / pair;
+            if pairs > d as u64 {
+                frame_err!("index-value frame carries {pairs} pairs for a {d}-vector");
+            }
+            for _ in 0..pairs {
                 let i = r.read(iw) as usize;
+                if i >= d {
+                    frame_err!("index {i} out of range for a {d}-vector");
+                }
                 out[i] = r.read_f32();
             }
         }
@@ -273,27 +336,40 @@ pub fn decode(c: &dyn Compressor, ctx: Ctx, msg: &WireMsg, out: &mut [f32]) {
             let block_size = (d + nb - 1) / nb;
             let mut consumed = 0u64;
             while consumed < msg.bit_len {
+                if msg.bit_len - consumed < iw as u64 {
+                    frame_err!("block-index frame ends mid-id ({} trailing bits)", msg.bit_len - consumed);
+                }
                 let b = r.read(iw) as usize;
                 consumed += iw as u64;
+                if b >= nb {
+                    frame_err!("block id {b} out of range for {nb} blocks");
+                }
                 let s = b * block_size;
                 if s < d {
                     let e = (s + block_size).min(d);
+                    let need = 32 * (e - s) as u64;
+                    if msg.bit_len - consumed < need {
+                        frame_err!("block-index frame truncated inside block {b}");
+                    }
                     for x in &mut out[s..e] {
                         *x = r.read_f32();
                     }
-                    consumed += 32 * (e - s) as u64;
+                    consumed += need;
                 }
             }
-            debug_assert_eq!(consumed, msg.bit_len, "BlockIndex frame misaligned");
         }
-        WireScheme::QsgdLevels { levels } => decode_qsgd(levels, &mut r, msg.bit_len, out),
+        WireScheme::QsgdLevels { levels } => decode_qsgd(levels, &mut r, msg.bit_len, out)?,
         WireScheme::SignBitmap => {
+            if msg.bit_len != 32 + d as u64 {
+                frame_err!("sign frame is {} bits, expected {}", msg.bit_len, 32 + d as u64);
+            }
             let scale = r.read_f32();
             for x in out.iter_mut() {
                 *x = if r.read(1) == 1 { -scale } else { scale };
             }
         }
     }
+    Ok(())
 }
 
 // ---------------------------------------------------------------------------
@@ -344,12 +420,26 @@ fn encode_qsgd(c: &dyn Compressor, ctx: Ctx, v: &[f32], levels: u32, w: &mut Bit
     debug_assert_eq!(w.bit_len() - start, qsgd_level_bits(d, levels));
 }
 
-fn decode_qsgd(levels: u32, r: &mut BitReader, bit_len: u64, out: &mut [f32]) {
+fn decode_qsgd(
+    levels: u32,
+    r: &mut BitReader,
+    bit_len: u64,
+    out: &mut [f32],
+) -> Result<(), WireError> {
     let d = out.len();
+    if bit_len < 32 {
+        frame_err!("qsgd frame is {bit_len} bits, shorter than its norm header");
+    }
     let norm = r.read_f32();
     if norm == 0.0 {
-        debug_assert_eq!(bit_len, 32);
-        return; // out already zeroed
+        if bit_len != 32 {
+            frame_err!("qsgd zero-norm frame is {bit_len} bits, expected 32");
+        }
+        return Ok(()); // out already zeroed
+    }
+    let expect = 32 + qsgd_level_bits(d, levels);
+    if bit_len != expect {
+        frame_err!("qsgd frame is {bit_len} bits, expected {expect} for d={d}, s={levels}");
     }
     let s = levels as f32;
     let base = (2 * levels + 1) as u64;
@@ -370,6 +460,7 @@ fn decode_qsgd(levels: u32, r: &mut BitReader, bit_len: u64, out: &mut [f32]) {
         }
         idx += len;
     }
+    Ok(())
 }
 
 // ---------------------------------------------------------------------------
@@ -386,22 +477,30 @@ pub fn encode_f32s(xs: &[f32]) -> WireMsg {
 }
 
 /// Overwrite `out` with the values of an [`encode_f32s`] message.
-pub fn decode_f32s(msg: &WireMsg, out: &mut [f32]) {
-    debug_assert_eq!(msg.bit_len, out.len() as u64 * 32);
+pub fn decode_f32s(msg: &WireMsg, out: &mut [f32]) -> Result<(), WireError> {
+    msg.check()?;
+    if msg.bit_len != out.len() as u64 * 32 {
+        frame_err!("raw-f32 frame is {} bits, expected {}", msg.bit_len, out.len() * 32);
+    }
     let mut r = msg.reader();
     for x in out.iter_mut() {
         *x = r.read_f32();
     }
+    Ok(())
 }
 
 /// Accumulate (`out[i] += v_i`) the values of an [`encode_f32s`] message —
 /// the reduce half of the ring's reduce-scatter.
-pub fn decode_f32s_add(msg: &WireMsg, out: &mut [f32]) {
-    debug_assert_eq!(msg.bit_len, out.len() as u64 * 32);
+pub fn decode_f32s_add(msg: &WireMsg, out: &mut [f32]) -> Result<(), WireError> {
+    msg.check()?;
+    if msg.bit_len != out.len() as u64 * 32 {
+        frame_err!("raw-f32 frame is {} bits, expected {}", msg.bit_len, out.len() * 32);
+    }
     let mut r = msg.reader();
     for x in out.iter_mut() {
         *x += r.read_f32();
     }
+    Ok(())
 }
 
 /// Union-support aggregate: (index, value) pairs for every `true` in `mask`.
@@ -422,17 +521,28 @@ pub fn encode_union(v: &[f32], mask: &[bool]) -> WireMsg {
 }
 
 /// Zero-fill `out` and scatter a union-support aggregate into it.
-pub fn decode_union(msg: &WireMsg, out: &mut [f32]) {
+pub fn decode_union(msg: &WireMsg, out: &mut [f32]) -> Result<(), WireError> {
+    msg.check()?;
     let d = out.len();
     out.iter_mut().for_each(|x| *x = 0.0);
     let iw = index_width(d);
     let pair = (iw + 32) as u64;
-    debug_assert_eq!(msg.bit_len % pair, 0);
+    if msg.bit_len % pair != 0 {
+        frame_err!("union frame {} bits, not a multiple of {pair}", msg.bit_len);
+    }
+    let pairs = msg.bit_len / pair;
+    if pairs > d as u64 {
+        frame_err!("union frame carries {pairs} pairs for a {d}-vector");
+    }
     let mut r = msg.reader();
-    for _ in 0..msg.bit_len / pair {
+    for _ in 0..pairs {
         let i = r.read(iw) as usize;
+        if i >= d {
+            frame_err!("union index {i} out of range for a {d}-vector");
+        }
         out[i] = r.read_f32();
     }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -570,7 +680,7 @@ mod tests {
                     );
                 }
                 let mut out = vec![7.0f32; d]; // poisoned: decode must overwrite
-                decode(c.as_ref(), ctx, &msg, &mut out);
+                decode(c.as_ref(), ctx, &msg, &mut out).unwrap();
                 for i in 0..d {
                     crate::prop_assert!(
                         out[i] == expect[i],
@@ -605,7 +715,7 @@ mod tests {
         let accounted = c.compress_into(ctx, &v, &mut expect);
         assert_eq!(msg.bit_len, accounted, "accounted bits must equal encoded bits");
         let mut out = vec![0.0f32; d];
-        decode(&c, ctx, &msg, &mut out);
+        decode(&c, ctx, &msg, &mut out).unwrap();
         assert_eq!(out, expect);
     }
 
@@ -625,7 +735,7 @@ mod tests {
         let msg = encode(&c, ctx, &v);
         assert_eq!(msg.bit_len, accounted);
         let mut out = vec![7.0f32; d];
-        decode(&c, ctx, &msg, &mut out);
+        decode(&c, ctx, &msg, &mut out).unwrap();
         assert_eq!(out, expect);
     }
 
@@ -644,7 +754,7 @@ mod tests {
         let msg = encode(&c, ctx, &v);
         assert_eq!(msg.bit_len, bits);
         let mut out = vec![0.0f32; d];
-        decode(&c, ctx, &msg, &mut out);
+        decode(&c, ctx, &msg, &mut out).unwrap();
         assert_eq!(out, expect);
     }
 
@@ -656,7 +766,7 @@ mod tests {
         let msg = encode(&c, ctx, &v);
         assert_eq!(msg.bit_len, 32);
         let mut out = vec![1.0f32; 50];
-        decode(&c, ctx, &msg, &mut out);
+        decode(&c, ctx, &msg, &mut out).unwrap();
         assert!(out.iter().all(|&x| x == 0.0));
     }
 
@@ -674,7 +784,7 @@ mod tests {
             let msg = encode(&c, ctx, &v);
             assert_eq!(msg.bit_len, bits, "levels={levels}");
             let mut out = vec![0.0f32; d];
-            decode(&c, ctx, &msg, &mut out);
+            decode(&c, ctx, &msg, &mut out).unwrap();
             assert_eq!(out, expect, "levels={levels}");
         }
     }
@@ -688,10 +798,126 @@ mod tests {
         let k = mask.iter().filter(|&&m| m).count() as u64;
         assert_eq!(msg.bit_len, k * (index_width(d) as u64 + 32));
         let mut out = vec![9.0f32; d];
-        decode_union(&msg, &mut out);
+        decode_union(&msg, &mut out).unwrap();
         for i in 0..d {
             assert_eq!(out[i], if mask[i] { v[i] } else { 0.0 });
         }
+    }
+
+    /// Hardened decode: corrupt frames (lying bit lengths, truncated word
+    /// buffers, misaligned payloads) must return `WireError` — never panic,
+    /// never read out of bounds — for every compressor scheme.  This is the
+    /// release-mode guarantee the TCP transport depends on; the old
+    /// `debug_assert!` guards vanished exactly there.
+    #[test]
+    fn prop_corrupt_frames_error_instead_of_panicking() {
+        forall(40, 0xBAD0, |g: &mut Gen| {
+            // d >= 16 keeps every scheme's valid lengths > 31 bits apart, so
+            // the +1..31-bit misalignment below can never land on one.
+            let d = g.usize_in(16, 200);
+            let v = g.vec(d);
+            let ctx = Ctx { round: g.rng.next_u64() % 999, worker: g.usize_in(0, 6) as u32 };
+            let comps: Vec<Box<dyn Compressor>> = vec![
+                Box::new(Grbs::new(4.0, (d / 8).max(1), 0x6EB)),
+                Box::new(RandK::new(8.0)),
+                Box::new(TopK::new(8.0)),
+                Box::new(BlockTopK::new(4.0, (d / 8).max(1))),
+                Box::new(Qsgd::new(4)),
+                Box::new(SignSgd),
+                Box::new(Identity),
+            ];
+            for c in comps {
+                let msg = encode(c.as_ref(), ctx, &v);
+                let mut out = vec![0.0f32; d];
+
+                // (a) lying length header: word buffer no longer covers it
+                let mut lying = msg.clone();
+                lying.bit_len += 64 * (1 + g.usize_in(0, 3) as u64);
+                crate::prop_assert!(
+                    decode(c.as_ref(), ctx, &lying, &mut out).is_err(),
+                    "{}: oversized bit_len accepted",
+                    c.name()
+                );
+
+                // (b) truncated word buffer under an unchanged header
+                if !msg.words.is_empty() {
+                    let mut short = msg.clone();
+                    short.words.truncate(short.words.len() - 1);
+                    crate::prop_assert!(
+                        decode(c.as_ref(), ctx, &short, &mut out).is_err(),
+                        "{}: truncated words accepted",
+                        c.name()
+                    );
+                }
+
+                // (c) off-by-a-few bit length with a consistent word buffer:
+                // every scheme's layout checks must reject the misalignment
+                // (the word count only changes at 64-bit boundaries, so the
+                // structural check alone cannot catch this one).
+                let delta = g.usize_in(1, 31) as u64;
+                let grown = WireMsg {
+                    bit_len: msg.bit_len + delta,
+                    words: {
+                        let mut w = msg.words.clone();
+                        w.resize(((msg.bit_len + delta).div_ceil(64)) as usize, 0);
+                        w
+                    },
+                };
+                crate::prop_assert!(
+                    decode(c.as_ref(), ctx, &grown, &mut out).is_err(),
+                    "{}: misaligned frame (+{delta} bits) accepted",
+                    c.name()
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn decode_rejects_out_of_range_indices() {
+        // A hand-built index-value frame whose index points past d: the
+        // release build must refuse it (the index would previously have
+        // panicked on slice access — or worse, aliased coordinate d-1).
+        let d = 40; // index width 6, so index 63 is representable but invalid
+        let iw = index_width(d);
+        let mut w = BitWriter::new();
+        w.write(63, iw);
+        w.write_f32(1.5);
+        let msg = w.finish();
+        let mut out = vec![0.0f32; d];
+        let c = TopK::new(4.0);
+        let ctx = Ctx { round: 1, worker: 0 };
+        assert!(decode(&c, ctx, &msg, &mut out).is_err());
+        // same for the union aggregate codec
+        assert!(decode_union(&msg, &mut out).is_err());
+    }
+
+    #[test]
+    fn decode_rejects_bad_block_frames() {
+        let d = 64;
+        let ctx = Ctx { round: 1, worker: 0 };
+        let mut out = vec![0.0f32; d];
+
+        // 10 blocks → 4-bit ids, so ids 10..15 are representable but invalid.
+        let c = BlockTopK::new(4.0, 10); // block_size ceil(64/10) = 7
+        let mut w = BitWriter::new();
+        w.write(12, index_width(10));
+        for _ in 0..7 {
+            w.write_f32(1.0);
+        }
+        assert!(
+            decode(&c, ctx, &w.finish(), &mut out).is_err(),
+            "block id beyond num_blocks must be rejected"
+        );
+
+        // An id-only frame for a non-empty block: truncated mid-entry.
+        let c = BlockTopK::new(4.0, 8); // block_size 8
+        let mut w = BitWriter::new();
+        w.write(7, index_width(8));
+        assert!(
+            decode(&c, ctx, &w.finish(), &mut out).is_err(),
+            "id-only frame for a non-empty block must be rejected as truncated"
+        );
     }
 
     #[test]
@@ -700,9 +926,9 @@ mod tests {
         let msg = encode_f32s(&xs);
         assert_eq!(msg.bit_len, 5 * 32);
         let mut out = [0.0f32; 5];
-        decode_f32s(&msg, &mut out);
+        decode_f32s(&msg, &mut out).unwrap();
         assert_eq!(out, xs);
-        decode_f32s_add(&msg, &mut out);
+        decode_f32s_add(&msg, &mut out).unwrap();
         for (o, x) in out.iter().zip(&xs) {
             assert_eq!(*o, x + x);
         }

@@ -546,31 +546,32 @@ fn consensus_invariants_all_plans_both_backends_central() {
 }
 
 #[test]
-fn consensus_invariants_all_plans_both_backends_resident() {
+fn consensus_invariants_all_plans_resident() {
+    // Worker-resident execution always runs the peer-owned mesh collectives
+    // (serialized wire frames; the installed central backend is not
+    // consulted), so there is a single resident path to pin here.
     let (n, d, steps) = (4, 36, 6);
     let init: Vec<f32> = (0..d).map(|j| (j as f32 * 0.31).cos() * 0.2).collect();
     let gf = grad_oracle(d);
-    for backend in [Backend::InProcess, Backend::Threaded] {
-        for (label, mk, inv) in invariant_plans() {
-            let mut o = ErrorResetEngine::new(&init, n, 0.9, mk());
-            o.set_collective(backend.collective());
-            // run in short bursts so the invariant is observed at several t
-            for burst in 0..3u64 {
-                let reports = o.run_resident(steps, 0.05, f64::INFINITY, &gf);
-                assert_eq!(reports.len(), steps, "{label}");
-                let t = (burst + 1) * steps as u64;
-                // burst boundaries land on multiples of every H used above
-                check_invariant(&o, &inv, t, 1e-4, label);
-            }
+    for (label, mk, inv) in invariant_plans() {
+        let mut o = ErrorResetEngine::new(&init, n, 0.9, mk());
+        // run in short bursts so the invariant is observed at several t
+        for burst in 0..3u64 {
+            let reports = o.run_resident(steps, 0.05, f64::INFINITY, &gf);
+            assert_eq!(reports.len(), steps, "{label}");
+            let t = (burst + 1) * steps as u64;
+            // burst boundaries land on multiples of every H used above
+            check_invariant(&o, &inv, t, 1e-4, label);
         }
     }
 }
 
 #[test]
-fn resident_threaded_ps_path_matches_central_in_process_bitwise() {
-    // TopK rides the parameter-server path, which is bit-identical to the
-    // in-process reference — so worker-resident execution over the real
-    // threaded wire layer must equal the central in-process loop exactly.
+fn resident_ps_path_matches_central_in_process_bitwise() {
+    // TopK/RandK ride the parameter-server path, which the peer-owned
+    // mesh collectives keep bit-identical to the in-process reference — so
+    // worker-resident execution over real serialized wire frames must equal
+    // the central in-process loop exactly.
     let (n, d, steps) = (4, 32, 8);
     let init = vec![0.1f32; d];
     let gf = grad_oracle(d);
@@ -586,7 +587,6 @@ fn resident_threaded_ps_path_matches_central_in_process_bitwise() {
     }
 
     let mut res = ErrorResetEngine::new(&init, n, 0.9, mk());
-    res.set_collective(Backend::Threaded.collective());
     res.run_resident(steps, 0.05, f64::INFINITY, &gf);
 
     for i in 0..n {

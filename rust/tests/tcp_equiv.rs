@@ -1,0 +1,259 @@
+//! Multi-process equivalence: N ranks over real loopback TCP sockets must
+//! reproduce the in-process trainer.
+//!
+//! Each "process" here is a thread running the **exact** code path of a
+//! `cser worker` process — `train_classifier` with `Backend::Tcp`, a
+//! single-worker engine, a real `TcpTransport` built through the rank-0
+//! rendezvous — so everything but the PID boundary is exercised (the PID
+//! boundary itself is the CI `cser launch` smoke job).
+//!
+//! Contracts pinned here (the acceptance criteria for the TCP backend):
+//!
+//! * **PS path bit-identical**: a CSER plan with per-worker compressors
+//!   (rand-k/top-k ride the parameter server) produces the *identical*
+//!   `RunRecord` — every loss, accuracy, bit and second — and identical
+//!   worker models, across 4 processes vs the central in-process loop.
+//! * **Ring path within f32 tolerance**: the GRBS CSER plan's final metrics
+//!   match the central run within the documented reduction-order band,
+//!   while the *accounting* (cum_bits/cum_seconds) stays exactly equal —
+//!   the α-β pricing is transport-invariant.
+//! * **Measured wire ≡ accounted bits**: the payload bits counted at the
+//!   sockets equal the `payload_bits_wire` accounting (also asserted
+//!   in-module in `transport::tcp` and in `benches/transport.rs`).
+
+use cser::config::OptSpec;
+use cser::coordinator::sim_trainer::{train_classifier, TrainCfg};
+use cser::coordinator::RunRecord;
+use cser::data::ClassDataset;
+use cser::engine::{CommPlan, ErrorResetEngine};
+use cser::models::{GradModel, Mlp};
+use cser::optimizer::DistOptimizer;
+use cser::transport::rendezvous::free_loopback_addr;
+use cser::transport::Backend;
+
+fn workload() -> (ClassDataset, ClassDataset, Mlp) {
+    let (tr, te) = ClassDataset::gaussian_mixture(10, 16, 1024, 256, 1.2, 0.8, 0.0, 7);
+    (tr, te, Mlp::new(16, 32, 10))
+}
+
+fn quick_cfg(epochs: usize) -> TrainCfg {
+    let mut c = TrainCfg::new(epochs, 16, 0.1, 7);
+    c.schedule = cser::config::LrSchedule::StepDecay { milestones: vec![0.5], factor: 0.2 };
+    c.paper_d = 1_000_000;
+    c.threads = 4;
+    c
+}
+
+/// Plan builders shared by the central and per-rank runs (`n` differs).
+type MkOpt = dyn Fn(&[f32], usize) -> Box<dyn DistOptimizer> + Sync;
+
+fn run_central(mk: &MkOpt, n: usize, cfg: &TrainCfg) -> (RunRecord, Vec<Vec<f32>>) {
+    let (tr, te, model) = workload();
+    let init = model.init(cfg.seed);
+    let mut opt = mk(&init, n);
+    let rec = train_classifier(&model, &tr, &te, opt.as_mut(), cfg);
+    let models = (0..n).map(|i| opt.worker_model(i).to_vec()).collect();
+    (rec, models)
+}
+
+/// One thread per rank, each running the full `Backend::Tcp` trainer over a
+/// fresh loopback rendezvous.  Returns (record, final model) per rank.
+fn run_tcp(mk: &MkOpt, n: usize, cfg: &TrainCfg) -> Vec<(RunRecord, Vec<f32>)> {
+    let addr = free_loopback_addr().expect("loopback port");
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..n)
+            .map(|rank| {
+                let addr = addr.clone();
+                let mut cfg = cfg.clone();
+                s.spawn(move || {
+                    let (tr, te, model) = workload();
+                    let init = model.init(cfg.seed);
+                    cfg.backend = Backend::Tcp { bind: addr, peers: n, rank };
+                    let mut opt = mk(&init, 1);
+                    let rec = train_classifier(&model, &tr, &te, opt.as_mut(), &cfg);
+                    (rec, opt.worker_model(0).to_vec())
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("rank panicked")).collect()
+    })
+}
+
+#[test]
+fn four_process_ps_path_matches_central_bit_for_bit() {
+    // Per-worker compressors → every collective is a parameter-server round
+    // → the 4-process job must equal the central in-process trainer exactly:
+    // identical records (losses, accuracies, bits, seconds) and identical
+    // models, and every rank must agree with every other.
+    let n = 4;
+    let cfg = quick_cfg(3);
+    let mk: Box<MkOpt> = Box::new(|init, n| {
+        Box::new(ErrorResetEngine::new(
+            init,
+            n,
+            0.9,
+            CommPlan::cser(
+                Box::new(cser::compressor::RandK::new(4.0)),
+                Box::new(cser::compressor::TopK::new(4.0)),
+                2,
+            ),
+        ))
+    });
+    let (central_rec, central_models) = run_central(&mk, n, &cfg);
+    assert!(!central_rec.diverged);
+    let ranks = run_tcp(&mk, n, &cfg);
+    for (rank, (rec, model)) in ranks.iter().enumerate() {
+        assert_eq!(
+            rec.to_json(),
+            central_rec.to_json(),
+            "rank {rank}: RunRecord differs from the central trainer"
+        );
+        assert_eq!(
+            model.as_slice(),
+            central_models[rank].as_slice(),
+            "rank {rank}: final model differs bit-for-bit"
+        );
+    }
+}
+
+#[test]
+fn four_process_cser_grbs_matches_central_within_ring_tolerance() {
+    // The headline CSER plan (GRBS both paths) rides the ring: metrics agree
+    // within the documented f32 reduction-order band, the communication
+    // accounting agrees exactly, and all ranks emit the identical record.
+    let n = 4;
+    let cfg = quick_cfg(3);
+    let spec = OptSpec::Cser { rc1: 2.0, rc2: 4.0, h: 2 };
+    let mk: Box<MkOpt> = {
+        let spec = spec.clone();
+        Box::new(move |init, n| spec.build(init, n, 0.9, 7))
+    };
+    let (central_rec, _) = run_central(&mk, n, &cfg);
+    assert!(!central_rec.diverged);
+    let ranks = run_tcp(&mk, n, &cfg);
+
+    let rec0 = &ranks[0].0;
+    for (rank, (rec, _)) in ranks.iter().enumerate().skip(1) {
+        assert_eq!(
+            rec.to_json(),
+            rec0.to_json(),
+            "rank {rank}: CSER syncs every step, so all ranks must agree exactly"
+        );
+    }
+    assert!(!rec0.diverged);
+    assert_eq!(rec0.points.len(), central_rec.points.len());
+    for (tcp, central) in rec0.points.iter().zip(&central_rec.points) {
+        assert!(
+            (tcp.test_acc - central.test_acc).abs() < 0.05,
+            "epoch {}: acc {} vs central {}",
+            tcp.epoch,
+            tcp.test_acc,
+            central.test_acc
+        );
+        assert!(
+            (tcp.train_loss - central.train_loss).abs() < 0.05 * central.train_loss.abs().max(1.0),
+            "epoch {}: loss {} vs central {}",
+            tcp.epoch,
+            tcp.train_loss,
+            central.train_loss
+        );
+        // Accounting is transport-invariant even where f32 sums are not:
+        // accounted upload bits and α-β pricing must match to the bit.
+        assert_eq!(tcp.cum_bits, central.cum_bits, "epoch {}: cum_bits drifted", tcp.epoch);
+        assert_eq!(
+            tcp.cum_seconds, central.cum_seconds,
+            "epoch {}: cum_seconds drifted",
+            tcp.epoch
+        );
+    }
+}
+
+#[test]
+fn two_process_sgd_matches_central_and_killed_fleet_resumes() {
+    // Dense SGD rides the gather/mean/broadcast path: the uninterrupted
+    // 2-process run must be bit-identical to the central trainer.  Then the
+    // kill/resume contract: a fleet that checkpoints, dies, and restarts
+    // picks up at the saved epoch and finishes sanely.  (The optimizer
+    // state itself resumes bit-identically — pinned by the
+    // `coordinator::checkpoint` tests; the data shards draw fresh batches
+    // after a restart, so the post-resume trajectory is a new sample of the
+    // same run, not a replay.)
+    let n = 2;
+    let mk: Box<MkOpt> = Box::new(|init, n| OptSpec::Sgd.build(init, n, 0.9, 7));
+
+    let cfg3 = quick_cfg(3);
+    let (central_rec, central_models) = run_central(&mk, n, &cfg3);
+    assert!(!central_rec.diverged);
+    let ranks = run_tcp(&mk, n, &cfg3);
+    for (rank, (rec, model)) in ranks.iter().enumerate() {
+        assert_eq!(rec.to_json(), central_rec.to_json(), "rank {rank}: SGD record");
+        assert_eq!(model.as_slice(), central_models[rank].as_slice(), "rank {rank}: SGD model");
+    }
+
+    let dir = std::env::temp_dir().join(format!("cser_tcp_ckpt_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let ck_cfg = |epochs: usize, rank: usize| {
+        let mut c = quick_cfg(epochs);
+        c.ckpt = Some(dir.join(format!("rank_{rank}.ckpt")));
+        c
+    };
+    // Phase 1: epochs 0-1, checkpoint at each epoch boundary.
+    {
+        let addr = free_loopback_addr().unwrap();
+        std::thread::scope(|s| {
+            for rank in 0..n {
+                let addr = addr.clone();
+                let mk = &mk;
+                let mut cfg = ck_cfg(2, rank);
+                s.spawn(move || {
+                    let (tr, te, model) = workload();
+                    let init = model.init(cfg.seed);
+                    cfg.backend = Backend::Tcp { bind: addr, peers: n, rank };
+                    let mut opt = mk(&init, 1);
+                    train_classifier(&model, &tr, &te, opt.as_mut(), &cfg);
+                });
+            }
+        });
+    }
+    // Phase 2: a fresh fleet resumes from the checkpoints and finishes
+    // the 3-epoch schedule.
+    let resumed: Vec<(RunRecord, Vec<f32>)> = {
+        let addr = free_loopback_addr().unwrap();
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..n)
+                .map(|rank| {
+                    let addr = addr.clone();
+                    let mk = &mk;
+                    let mut cfg = ck_cfg(3, rank);
+                    s.spawn(move || {
+                        let (tr, te, model) = workload();
+                        let init = model.init(cfg.seed);
+                        cfg.backend = Backend::Tcp { bind: addr, peers: n, rank };
+                        let mut opt = mk(&init, 1);
+                        let rec = train_classifier(&model, &tr, &te, opt.as_mut(), &cfg);
+                        (rec, opt.worker_model(0).to_vec())
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("rank panicked")).collect()
+        })
+    };
+    let (rec0, model0) = &resumed[0];
+    assert_eq!(rec0.points.len(), 1, "resumed run must cover only the final epoch");
+    assert_eq!(rec0.points[0].epoch, 2, "resume must restart at the checkpointed epoch");
+    assert!(!rec0.diverged);
+    assert!(
+        rec0.points[0].test_acc > 0.35, // 10 classes — chance is 0.1
+        "resumed fleet should keep training sanely (acc {})",
+        rec0.points[0].test_acc
+    );
+    for (rank, (rec, model)) in resumed.iter().enumerate().skip(1) {
+        assert_eq!(rec.to_json(), rec0.to_json(), "rank {rank}: records must agree");
+        assert_eq!(
+            model.as_slice(),
+            model0.as_slice(),
+            "rank {rank}: SGD replicas must stay bit-identical across a restart"
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}

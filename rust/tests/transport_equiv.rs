@@ -137,12 +137,13 @@ fn lemma1_holds_under_threaded_backend() {
 }
 
 #[test]
-fn worker_resident_threaded_matches_central_trajectories() {
-    // The worker-resident mode drives the same wire collectives from
-    // persistent worker threads.  Ring-path compressors (GRBS) must stay
-    // within the documented f32 reduction tolerance of the central
-    // in-process reference; the collectives themselves are the ones the
-    // rest of this suite pins.
+fn worker_resident_matches_central_trajectories() {
+    // The worker-resident mode drives the peer-owned mesh collectives from
+    // persistent worker threads (serialized wire frames, no per-call
+    // spawns).  Ring-path compressors (GRBS) must stay within the
+    // documented f32 reduction tolerance of the central in-process
+    // reference; the protocol itself is the one the rest of this suite
+    // pins.
     use cser::engine::{CommPlan, ErrorResetEngine};
     let d = 96;
     let n = 4;
@@ -173,7 +174,6 @@ fn worker_resident_threaded_matches_central_trajectories() {
     }
 
     let mut res = ErrorResetEngine::new(&vec![0.0; d], n, 0.9, mk());
-    res.set_collective(Backend::Threaded.collective());
     let reports = res.run_resident(steps, 0.05, f64::INFINITY, &gf);
     assert_eq!(reports.len(), steps);
 
@@ -203,8 +203,8 @@ fn threaded_psync_mean_preservation_at_scale() {
         .iter()
         .map(|&j| vs.iter().map(|v| v[j] as f64).sum::<f64>() / n as f64)
         .collect();
-    let c = Grbs::new(64.0, d / 256, 13);
-    let round = Threaded.psync(&mut vs, None, &c, 21);
+    let c: std::sync::Arc<dyn Compressor> = std::sync::Arc::new(Grbs::new(64.0, d / 256, 13));
+    let round = Threaded::new().psync(&mut vs, None, &c, 21);
     assert!(round.allreduce_compatible);
     let wire = round.wire.expect("threaded measures traffic");
     assert!(wire.total_bits() > 0);
