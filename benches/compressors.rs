@@ -4,7 +4,7 @@
 //! (independent of d) and applying a selection O(d/R); the paper's
 //! "less computation overhead" claim for GRBS vs top-k is quantified here.
 
-use cser::compressor::{Compressor, Ctx, Grbs, RandK, TopK};
+use cser::compressor::{BlockTopK, Compressor, Ctx, Grbs, RandK, Scratch, TopK};
 use cser::util::bench::{black_box, Bench};
 use cser::util::rng::Rng;
 
@@ -33,6 +33,25 @@ fn main() {
         black_box(topk.select(ctx, &v));
     });
 
+    // Scratch-reuse delta: the same selections through a persistent Scratch
+    // (the engine's steady-state path) — no fresh `0..d` index vector /
+    // draw-pool / block-mass allocation per call.
+    let mut scratch = Scratch::new();
+    b.run("topk_select_scratch", || {
+        black_box(topk.select_with(ctx, &v, &mut scratch));
+    });
+    b.run("randk_select_scratch", || {
+        round += 1;
+        black_box(randk.select_with(Ctx { round, worker: 0 }, &v, &mut scratch));
+    });
+    let btk = BlockTopK::new(256.0, d / 1024);
+    b.run("blocktopk_select", || {
+        black_box(btk.select(ctx, &v));
+    });
+    b.run("blocktopk_select_scratch", || {
+        black_box(btk.select_with(ctx, &v, &mut scratch));
+    });
+
     let sel = grbs.select(ctx, &v);
     let mut kept = vec![0.0f32; d];
     b.run("grbs_apply_d4M_R256", || {
@@ -50,4 +69,9 @@ fn main() {
     let g = b.results.iter().find(|r| r.name.starts_with("grbs_select")).unwrap().median_ns;
     let t = b.results.iter().find(|r| r.name.starts_with("topk_select")).unwrap().median_ns;
     println!("\ntopk/grbs selection cost ratio: {:.0}x (paper: GRBS has 'less computation overhead')", t / g);
+
+    // scratch-reuse delta (the ISSUE-4 satellite): fresh-allocation select
+    // vs the persistent-Scratch path
+    let ts = b.results.iter().find(|r| r.name == "topk_select_scratch").unwrap().median_ns;
+    println!("topk select scratch reuse: {:.2}x faster than per-call allocation", t / ts);
 }

@@ -79,4 +79,16 @@ fn main() {
         let per = r.median_ns / (n as f64 * d as f64);
         println!("{:<28} {:.3} ns per worker-element", r.name, per);
     }
+
+    // Batched-vs-reference MLP gradient and single-worker train-step deltas,
+    // plus the machine-readable perf record — the same measurement suite
+    // `cser bench` runs (schema documented in harness::perf / DESIGN.md).
+    println!();
+    let report = cser::harness::perf::run(false);
+    cser::harness::perf::write_json(&report, "BENCH_engine.json")
+        .expect("writing BENCH_engine.json");
+    println!("\nperf record -> BENCH_engine.json");
+    for e in report.entries.iter().filter(|e| e.speedup_vs_reference > 1.0) {
+        println!("  {:<26} {:.2}x vs per-sample reference", e.name, e.speedup_vs_reference);
+    }
 }

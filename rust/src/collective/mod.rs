@@ -5,4 +5,4 @@ pub mod allreduce;
 pub mod psync;
 
 pub use allreduce::{allreduce_mean, param_server_cost, ring_allreduce_cost, WireCost};
-pub use psync::{exchange_mean, psync, PsyncRound};
+pub use psync::{exchange_mean, exchange_mean_with, psync, psync_with, PsyncRound};

@@ -15,7 +15,8 @@
 //! because C(v_j) is zero outside the common support).
 
 use super::allreduce::WireCost;
-use crate::compressor::{payload_bits_wire, Compressor, Ctx, Selection};
+use crate::compressor::{payload_bits_wire, Compressor, Ctx, Scratch, Selection};
+use crate::kernel::dense;
 
 /// What one PSync round did — enough for exact bit accounting and for
 /// optimizers to update error state without dense residual buffers.
@@ -69,11 +70,29 @@ impl PsyncRound {
 ///
 /// On return `vs[i] == v'_i`.  If `resid_out` is provided (same shapes),
 /// `resid_out[i] == r_i = v_i − C(v_i)` (computed before mutation).
+///
+/// Scratch-oblivious convenience over [`psync_with`] (cold paths and tests;
+/// steady-state callers hold a [`Scratch`] and avoid the per-round dense
+/// allocations of the generic path).
 pub fn psync(
+    vs: &mut [Vec<f32>],
+    resid_out: Option<&mut [Vec<f32>]>,
+    c: &dyn Compressor,
+    round: u64,
+) -> PsyncRound {
+    psync_with(vs, resid_out, c, round, &mut Scratch::new())
+}
+
+/// [`psync`] with caller-owned working memory: the generic path's dense
+/// mean/staging pair and the compressor's selection buffers all live in
+/// `scratch`, so a reused handle makes steady-state rounds allocation-free
+/// apart from the returned selections.
+pub fn psync_with(
     vs: &mut [Vec<f32>],
     mut resid_out: Option<&mut [Vec<f32>]>,
     c: &dyn Compressor,
     round: u64,
+    scratch: &mut Scratch,
 ) -> PsyncRound {
     let n = vs.len();
     assert!(n > 0);
@@ -81,7 +100,7 @@ pub fn psync(
     debug_assert!(vs.iter().all(|v| v.len() == d));
 
     if c.globally_synchronized() && !c.is_dense() {
-        let sel = c.select(Ctx { round, worker: 0 }, &vs[0]);
+        let sel = c.select_with(Ctx { round, worker: 0 }, &vs[0], scratch);
         average_shared_ranges(vs, &mut resid_out, &sel, d);
         let bits = payload_bits_wire(c.wire_scheme(), &sel, d);
         return PsyncRound {
@@ -93,13 +112,13 @@ pub fn psync(
     }
 
     // Generic path: per-worker supports or dense quantizers.
-    let mut vbar = vec![0.0f32; d];
-    let mut kept = vec![0.0f32; d];
+    let (mut vbar, mut kept) = scratch.take_dense_pair(d);
     let (selections, bits_total) =
-        residualize_accumulate(vs, &mut resid_out, c, round, &mut vbar, &mut kept);
+        residualize_accumulate(vs, &mut resid_out, c, round, &mut vbar, &mut kept, scratch);
     for v in vs.iter_mut() {
-        crate::util::math::axpy(1.0, &vbar, v); // v'_i = vbar + r_i
+        dense::axpy(1.0, &vbar, v); // v'_i = vbar + r_i
     }
+    scratch.put_dense_pair(vbar, kept);
     PsyncRound {
         selections,
         // Ceiling division: flooring would under-report whenever the total is
@@ -126,7 +145,7 @@ fn average_shared_ranges(
     if let Some(res) = resid_out.as_deref_mut() {
         for (r, v) in res.iter_mut().zip(vs.iter()) {
             r.copy_from_slice(v);
-            sel.for_each_range(d, |s, e| crate::util::math::fill(&mut r[s..e], 0.0));
+            sel.for_each_range(d, |s, e| dense::fill(&mut r[s..e], 0.0));
         }
     }
     let inv = 1.0 / vs.len() as f32;
@@ -140,9 +159,10 @@ fn average_shared_ranges(
                 *a += inv * *b;
             }
         }
-        let proto = first[s..e].to_vec(); // small: one range
+        // broadcast straight from worker 0's (now final) range — `first`
+        // and `rest` are disjoint borrows, no staging copy needed
         for w in rest.iter_mut() {
-            w[s..e].copy_from_slice(&proto);
+            w[s..e].copy_from_slice(&first[s..e]);
         }
     });
 }
@@ -152,9 +172,9 @@ fn average_shared_ranges(
 /// while accumulating `vbar = (1/n) Σ C(v_i)` into the caller's scratch.
 /// Returns the per-worker selections and the total payload bits.
 ///
-/// `vbar`/`kept` are caller-provided so the two entry points share one
-/// allocation policy (one d-sized pair per round; cheap next to the O(n·d)
-/// arithmetic this path does anyway).
+/// `vbar`/`kept` come from the caller's [`Scratch`] (via `take_dense_pair`),
+/// so the two entry points share one reuse policy: zero dense allocations
+/// per round once the scratch has grown to the model dimension.
 fn residualize_accumulate(
     vs: &mut [Vec<f32>],
     resid_out: &mut Option<&mut [Vec<f32>]>,
@@ -162,6 +182,7 @@ fn residualize_accumulate(
     round: u64,
     vbar: &mut [f32],
     kept: &mut [f32],
+    scratch: &mut Scratch,
 ) -> (Vec<Selection>, u64) {
     let n = vs.len();
     let d = vbar.len();
@@ -170,11 +191,11 @@ fn residualize_accumulate(
     let mut bits_total = 0u64;
     for (w, v) in vs.iter_mut().enumerate() {
         let ctx = Ctx { round, worker: w as u32 };
-        let sel = c.select(ctx, v);
+        let sel = c.select_with(ctx, v, scratch);
         // For sparsifiers C(v) is v on the selection (one `select`, no second
         // pass); dense quantizers materialize through compress_into.
         bits_total += if c.is_dense() {
-            c.compress_into(ctx, v, kept)
+            c.compress_into_with(ctx, v, kept, scratch)
         } else {
             sel.apply(v, kept);
             payload_bits_wire(c.wire_scheme(), &sel, d)
@@ -200,9 +221,20 @@ fn residualize_accumulate(
 /// [`crate::transport::Collective`] trait exposes both.
 pub fn exchange_mean(
     qs: &mut [Vec<f32>],
+    resid_out: Option<&mut [Vec<f32>]>,
+    c: &dyn Compressor,
+    round: u64,
+) -> PsyncRound {
+    exchange_mean_with(qs, resid_out, c, round, &mut Scratch::new())
+}
+
+/// [`exchange_mean`] with caller-owned working memory (see [`psync_with`]).
+pub fn exchange_mean_with(
+    qs: &mut [Vec<f32>],
     mut resid_out: Option<&mut [Vec<f32>]>,
     c: &dyn Compressor,
     round: u64,
+    scratch: &mut Scratch,
 ) -> PsyncRound {
     let n = qs.len();
     assert!(n > 0);
@@ -214,7 +246,7 @@ pub fn exchange_mean(
     // `kept`/`vbar` scratch — and the complement (where the mean is exactly
     // zero) is cleared directly.
     if c.globally_synchronized() && !c.is_dense() {
-        let sel = c.select(Ctx { round, worker: 0 }, &qs[0]);
+        let sel = c.select_with(Ctx { round, worker: 0 }, &qs[0], scratch);
         average_shared_ranges(qs, &mut resid_out, &sel, d);
         let bits = payload_bits_wire(c.wire_scheme(), &sel, d);
         let info = PsyncRound {
@@ -225,19 +257,19 @@ pub fn exchange_mean(
         };
         info.for_each_unselected(0, d, |s, e| {
             for q in qs.iter_mut() {
-                crate::util::math::fill(&mut q[s..e], 0.0);
+                dense::fill(&mut q[s..e], 0.0);
             }
         });
         return info;
     }
 
-    let mut vbar = vec![0.0f32; d];
-    let mut kept = vec![0.0f32; d];
+    let (mut vbar, mut kept) = scratch.take_dense_pair(d);
     let (selections, bits_total) =
-        residualize_accumulate(qs, &mut resid_out, c, round, &mut vbar, &mut kept);
+        residualize_accumulate(qs, &mut resid_out, c, round, &mut vbar, &mut kept, scratch);
     for q in qs.iter_mut() {
         q.copy_from_slice(&vbar);
     }
+    scratch.put_dense_pair(vbar, kept);
     PsyncRound {
         selections,
         upload_bits_per_worker: bits_total.div_ceil(n as u64),
@@ -376,7 +408,7 @@ mod tests {
     /// indices) — exercises the per-worker-mean rounding.
     struct Lopsided;
     impl Compressor for Lopsided {
-        fn select(&self, ctx: Ctx, v: &[f32]) -> Selection {
+        fn select_with(&self, ctx: Ctx, v: &[f32], _s: &mut Scratch) -> Selection {
             let k = (ctx.worker as usize + 1).min(v.len());
             Selection::Indices((0..k as u32).collect())
         }

@@ -14,7 +14,7 @@
 //! shared `(seed, round)` pair — the Rust equivalent of the paper's
 //! "synchronized random seed".
 
-use super::{Compressor, Ctx, Selection};
+use super::{Compressor, Ctx, Scratch, Selection};
 use crate::util::rng::Rng;
 
 #[derive(Clone, Debug)]
@@ -57,10 +57,10 @@ impl Grbs {
 }
 
 impl Compressor for Grbs {
-    fn select(&self, ctx: Ctx, v: &[f32]) -> Selection {
+    fn select_with(&self, ctx: Ctx, v: &[f32], scratch: &mut Scratch) -> Selection {
         let block_size = (v.len() + self.num_blocks - 1) / self.num_blocks;
         let mut rng = Rng::stream(self.seed, ctx.round); // worker-independent
-        let mut blocks = rng.choose_k(self.num_blocks, self.keep);
+        let mut blocks = rng.choose_k_with(self.num_blocks, self.keep, &mut scratch.ix);
         blocks.sort_unstable();
         Selection::Blocks { block_size, blocks }
     }

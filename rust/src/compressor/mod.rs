@@ -28,6 +28,8 @@ pub use quantize::{Qsgd, SignSgd};
 pub use randk::{RandBlock, RandK};
 pub use topk::{BlockTopK, TopK};
 
+pub use crate::kernel::scratch::Scratch;
+
 /// Context identifying one compression call.
 ///
 /// `round` drives globally-synchronized randomness (all workers pass the same
@@ -192,22 +194,47 @@ pub fn payload_bits_wire(scheme: WireScheme, sel: &Selection, d: usize) -> u64 {
 
 /// A δ-approximate compressor (Definition 1).
 ///
-/// Sparsifiers implement [`Compressor::select`]; dense value-quantizers
-/// (QSGD, sign-SGD — see [`quantize`]) override
-/// [`Compressor::compress_into`] and report `is_dense() == true` so callers
-/// route them through the dense path.
+/// Sparsifiers implement [`Compressor::select_with`] (the scratch-threaded
+/// hot-path entry; [`Compressor::select`] is a fresh-scratch convenience);
+/// dense value-quantizers (QSGD, sign-SGD — see [`quantize`]) override
+/// [`Compressor::compress_into_with`] and report `is_dense() == true` so
+/// callers route them through the dense path.
 pub trait Compressor: Send + Sync {
-    /// Choose the support of C(v). Implementations must be deterministic in
-    /// (ctx, v).  Dense compressors return `Selection::All`.
-    fn select(&self, ctx: Ctx, v: &[f32]) -> Selection;
+    /// Choose the support of C(v), reusing the caller's [`Scratch`] for any
+    /// working buffers (top-k's `0..d` index permutation, random-draw pools,
+    /// block-mass tables).  Implementations must be deterministic in
+    /// `(ctx, v)` — the scratch only relocates working memory between calls,
+    /// it never carries selection state.  Dense compressors return
+    /// `Selection::All`.
+    fn select_with(&self, ctx: Ctx, v: &[f32], scratch: &mut Scratch) -> Selection;
 
-    /// Materialize C(v) into `out` (fully overwritten); returns the payload
-    /// bits one worker uploads for this message — the exact size of the wire
-    /// message `transport::wire::encode` would emit for this compressor.
-    fn compress_into(&self, ctx: Ctx, v: &[f32], out: &mut [f32]) -> u64 {
-        let sel = self.select(ctx, v);
+    /// Scratch-oblivious convenience over [`Compressor::select_with`]
+    /// (allocates a fresh scratch per call — cold paths and tests; the hot
+    /// paths hold a per-worker / per-thread scratch and call `select_with`).
+    fn select(&self, ctx: Ctx, v: &[f32]) -> Selection {
+        self.select_with(ctx, v, &mut Scratch::new())
+    }
+
+    /// Materialize C(v) into `out` (fully overwritten) reusing the caller's
+    /// scratch; returns the payload bits one worker uploads for this message
+    /// — the exact size of the wire message `transport::wire::encode` would
+    /// emit for this compressor.  Dense value-quantizers override this (the
+    /// selection default below is meaningless for them).
+    fn compress_into_with(
+        &self,
+        ctx: Ctx,
+        v: &[f32],
+        out: &mut [f32],
+        scratch: &mut Scratch,
+    ) -> u64 {
+        let sel = self.select_with(ctx, v, scratch);
         sel.apply(v, out);
         payload_bits_wire(self.wire_scheme(), &sel, v.len())
+    }
+
+    /// Scratch-oblivious convenience over [`Compressor::compress_into_with`].
+    fn compress_into(&self, ctx: Ctx, v: &[f32], out: &mut [f32]) -> u64 {
+        self.compress_into_with(ctx, v, out, &mut Scratch::new())
     }
 
     /// True for value-quantizing compressors whose support is the whole
@@ -251,7 +278,7 @@ pub trait Compressor: Send + Sync {
 pub struct Identity;
 
 impl Compressor for Identity {
-    fn select(&self, _ctx: Ctx, _v: &[f32]) -> Selection {
+    fn select_with(&self, _ctx: Ctx, _v: &[f32], _s: &mut Scratch) -> Selection {
         Selection::All
     }
     fn ratio(&self) -> f64 {
@@ -271,7 +298,7 @@ impl Compressor for Identity {
 pub struct Zero;
 
 impl Compressor for Zero {
-    fn select(&self, _ctx: Ctx, _v: &[f32]) -> Selection {
+    fn select_with(&self, _ctx: Ctx, _v: &[f32], _s: &mut Scratch) -> Selection {
         Selection::Nothing
     }
     fn ratio(&self) -> f64 {
@@ -349,6 +376,25 @@ mod tests {
                 let s1 = c.select(Ctx { round, worker: 0 }, &v1);
                 let s2 = c.select(Ctx { round, worker: 5 }, &v2);
                 crate::prop_assert!(s1 == s2, "{}: selection differs across workers", c.name());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_select_with_reused_scratch_matches_select() {
+        // The scratch only relocates working memory: a scratch reused across
+        // many calls (the hot-path pattern) must produce the identical
+        // selection as the fresh-allocation convenience path.
+        let mut scratch = Scratch::new();
+        forall(30, 0xA14, |g: &mut Gen| {
+            let d = g.usize_in(8, 300);
+            let v = g.vec(d);
+            let ctx = Ctx { round: g.rng.next_u64() % 512, worker: g.usize_in(0, 8) as u32 };
+            for c in compressors(d) {
+                let a = c.select(ctx, &v);
+                let b = c.select_with(ctx, &v, &mut scratch);
+                crate::prop_assert!(a == b, "{}: scratch path diverged", c.name());
             }
             Ok(())
         });

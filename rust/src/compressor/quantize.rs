@@ -12,14 +12,14 @@
 //!   the compressor Definition 1's δ was originally stated for:
 //!   δ = ‖v‖₁²/(d‖v‖₂²) ∈ (0, 1].
 //!
-//! They implement [`Compressor::compress_into`] directly (the selection API
-//! is meaningless for value quantization); `select` returns
+//! They implement [`Compressor::compress_into_with`] directly (the selection
+//! API is meaningless for value quantization); `select` returns
 //! `Selection::All` so selection-based fast paths are bypassed and PSync
 //! routes them through the dense generic path.  Neither is
 //! AllReduce-compatible in the value domain (sums of quantized values are
 //! not quantized), matching `globally_synchronized() == false`.
 
-use super::{Compressor, Ctx, Selection, WireScheme};
+use super::{Compressor, Ctx, Scratch, Selection, WireScheme};
 use crate::util::rng::Rng;
 
 /// Chunk geometry of the QSGD level codec (DESIGN.md §5): digits in radix
@@ -84,11 +84,11 @@ impl Qsgd {
 }
 
 impl Compressor for Qsgd {
-    fn select(&self, _ctx: Ctx, _v: &[f32]) -> Selection {
+    fn select_with(&self, _ctx: Ctx, _v: &[f32], _s: &mut Scratch) -> Selection {
         Selection::All // dense: the whole vector is touched
     }
 
-    fn compress_into(&self, ctx: Ctx, v: &[f32], out: &mut [f32]) -> u64 {
+    fn compress_into_with(&self, ctx: Ctx, v: &[f32], out: &mut [f32], _s: &mut Scratch) -> u64 {
         let norm = crate::util::math::norm2(v).sqrt() as f32;
         if norm == 0.0 {
             out.iter_mut().for_each(|o| *o = 0.0);
@@ -137,11 +137,11 @@ impl Compressor for Qsgd {
 pub struct SignSgd;
 
 impl Compressor for SignSgd {
-    fn select(&self, _ctx: Ctx, _v: &[f32]) -> Selection {
+    fn select_with(&self, _ctx: Ctx, _v: &[f32], _s: &mut Scratch) -> Selection {
         Selection::All
     }
 
-    fn compress_into(&self, _ctx: Ctx, v: &[f32], out: &mut [f32]) -> u64 {
+    fn compress_into_with(&self, _ctx: Ctx, v: &[f32], out: &mut [f32], _s: &mut Scratch) -> u64 {
         let d = v.len();
         let l1: f64 = v.iter().map(|x| x.abs() as f64).sum();
         let scale = (l1 / d as f64) as f32;

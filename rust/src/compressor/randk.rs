@@ -5,7 +5,7 @@
 //! worker id), so messages carry index metadata and cannot be AllReduced
 //! without decompression.  Used in ablations (DESIGN.md ABL).
 
-use super::{Compressor, Ctx, Selection, WireScheme};
+use super::{Compressor, Ctx, Scratch, Selection, WireScheme};
 use crate::util::rng::Rng;
 
 #[derive(Clone, Debug)]
@@ -25,11 +25,11 @@ impl RandK {
 }
 
 impl Compressor for RandK {
-    fn select(&self, ctx: Ctx, v: &[f32]) -> Selection {
+    fn select_with(&self, ctx: Ctx, v: &[f32], scratch: &mut Scratch) -> Selection {
         let d = v.len();
         let k = ((d as f64 / self.ratio).round() as usize).clamp(1, d);
         let mut rng = Rng::stream(self.seed ^ ((ctx.worker as u64) << 32), ctx.round);
-        let mut ix = rng.choose_k(d, k);
+        let mut ix = rng.choose_k_with(d, k, &mut scratch.ix);
         ix.sort_unstable();
         Selection::Indices(ix)
     }
@@ -67,10 +67,10 @@ impl RandBlock {
 }
 
 impl Compressor for RandBlock {
-    fn select(&self, ctx: Ctx, v: &[f32]) -> Selection {
+    fn select_with(&self, ctx: Ctx, v: &[f32], scratch: &mut Scratch) -> Selection {
         let block_size = (v.len() + self.num_blocks - 1) / self.num_blocks;
         let mut rng = Rng::stream(self.seed ^ ((ctx.worker as u64) << 32), ctx.round);
-        let mut blocks = rng.choose_k(self.num_blocks, self.keep);
+        let mut blocks = rng.choose_k_with(self.num_blocks, self.keep, &mut scratch.ix);
         blocks.sort_unstable();
         Selection::Blocks { block_size, blocks }
     }

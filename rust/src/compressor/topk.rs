@@ -8,7 +8,7 @@
 //! `BlockTopK` ranks whole blocks by their l2 mass — the deterministic cousin
 //! of GRBS used in ablations.
 
-use super::{Compressor, Ctx, Selection, WireScheme};
+use super::{Compressor, Ctx, Scratch, Selection, WireScheme};
 
 #[derive(Clone, Debug)]
 pub struct TopK {
@@ -23,10 +23,13 @@ impl TopK {
 }
 
 impl Compressor for TopK {
-    fn select(&self, _ctx: Ctx, v: &[f32]) -> Selection {
+    fn select_with(&self, _ctx: Ctx, v: &[f32], scratch: &mut Scratch) -> Selection {
         let d = v.len();
         let k = ((d as f64 / self.ratio).round() as usize).clamp(1, d);
-        let mut ix: Vec<u32> = (0..d as u32).collect();
+        // The O(d) `0..d` permutation lives in the caller's scratch —
+        // rebuilt in place, never reallocated across steps.  Only the
+        // k-element result is owned by the returned selection.
+        let ix = scratch.iota(d);
         // partial selection by |v|, then sort the chosen k for range iteration
         ix.select_nth_unstable_by(k - 1, |&a, &b| {
             v[b as usize]
@@ -34,9 +37,9 @@ impl Compressor for TopK {
                 .partial_cmp(&v[a as usize].abs())
                 .unwrap_or(std::cmp::Ordering::Equal)
         });
-        ix.truncate(k);
-        ix.sort_unstable();
-        Selection::Indices(ix)
+        let mut kept: Vec<u32> = ix[..k].to_vec();
+        kept.sort_unstable();
+        Selection::Indices(kept)
     }
 
     fn ratio(&self) -> f64 {
@@ -68,21 +71,26 @@ impl BlockTopK {
 }
 
 impl Compressor for BlockTopK {
-    fn select(&self, _ctx: Ctx, v: &[f32]) -> Selection {
+    fn select_with(&self, _ctx: Ctx, v: &[f32], scratch: &mut Scratch) -> Selection {
         let d = v.len();
         let block_size = (d + self.num_blocks - 1) / self.num_blocks;
-        let mut mass: Vec<(f64, u32)> = (0..self.num_blocks as u32)
-            .map(|b| {
-                let s = b as usize * block_size;
+        // Block-mass ranking table reused from the scratch.  The sort must
+        // stay *stable* (equal-mass ties resolve to the lower block id, the
+        // behavior every pinned trajectory was recorded under), so the small
+        // merge buffer `sort_by` allocates is kept — the scratch removes the
+        // per-call table itself.
+        let mass = &mut scratch.mass;
+        mass.clear();
+        mass.extend((0..self.num_blocks as u32).map(|b| {
+            let s = b as usize * block_size;
+            let m: f64 = if s < d {
                 let e = (s + block_size).min(d);
-                let m: f64 = if s < d {
-                    v[s..e].iter().map(|x| (*x as f64) * (*x as f64)).sum()
-                } else {
-                    0.0
-                };
-                (m, b)
-            })
-            .collect();
+                v[s..e].iter().map(|x| (*x as f64) * (*x as f64)).sum()
+            } else {
+                0.0
+            };
+            (m, b)
+        }));
         mass.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal));
         let mut blocks: Vec<u32> = mass[..self.keep].iter().map(|&(_, b)| b).collect();
         blocks.sort_unstable();

@@ -15,11 +15,11 @@ use super::checkpoint::Checkpoint;
 use super::metrics::{EpochPoint, RunRecord};
 use crate::data::{ClassDataset, Shard};
 use crate::engine::ErrorResetEngine;
-use crate::models::GradModel;
+use crate::models::{GradModel, ModelScratch};
 use crate::network::CostModel;
 use crate::optimizer::{DistOptimizer, RoundStats};
 use crate::transport::{peer, Backend, TcpTransport};
-use crate::util::pool::scope_map;
+use crate::util::pool::scope_zip;
 use std::sync::Mutex;
 
 #[derive(Clone, Debug)]
@@ -104,12 +104,29 @@ fn price_step(
     }
 }
 
+/// Per-worker gradient-oracle resources for the resident/TCP paths: the
+/// shard sampler plus reused minibatch and model-scratch buffers behind one
+/// mutex (uncontended by construction — worker i is the only locker of
+/// entry i), so the in-thread gradient calls allocate nothing per step.
+struct GradRes {
+    shard: Shard,
+    batch: Vec<u32>,
+    scratch: ModelScratch,
+}
+
+impl GradRes {
+    fn new(shard: Shard) -> Mutex<GradRes> {
+        Mutex::new(GradRes { shard, batch: Vec::new(), scratch: ModelScratch::new() })
+    }
+}
+
 /// Train `opt` on `(train, test)`; returns the full run record.
 ///
 /// With `cfg.backend == Backend::Resident` and an engine-backed optimizer
 /// (all built-ins are), the step loop is handed to the worker threads via
 /// [`ErrorResetEngine::run_resident`]; otherwise the classic central loop
-/// below drives `step(grads, eta)` with `scope_map`-parallel gradients.
+/// below drives `step(grads, eta)` with `scope_zip`-parallel gradients into
+/// persistent per-worker buffers.
 pub fn train_classifier(
     model: &dyn GradModel,
     train: &ClassDataset,
@@ -136,8 +153,26 @@ pub fn train_classifier(
     let mut shards = Shard::split(train.len(), n, cfg.seed);
     let iters_per_epoch = (train.len() / (cfg.batch_per_worker * n)).max(1);
 
-    let mut grads: Vec<Vec<f32>> = vec![vec![0.0; d]; n];
-    let mut batches: Vec<Vec<u32>> = vec![Vec::new(); n];
+    // Persistent per-worker contexts: gradient buffer, minibatch indices,
+    // and the model's scratch arena are allocated once and reused every
+    // step — the hot loop below performs no steady-state allocation.
+    struct WorkerCtx {
+        grad: Vec<f32>,
+        batch: Vec<u32>,
+        scratch: ModelScratch,
+        loss: f32,
+    }
+    let mut ctxs: Vec<WorkerCtx> = (0..n)
+        .map(|_| WorkerCtx {
+            grad: vec![0.0; d],
+            batch: Vec::new(),
+            scratch: ModelScratch::new(),
+            loss: 0.0,
+        })
+        .collect();
+    // `step(&grads, ..)` wants `&[Vec<f32>]`; the buffers are swapped in
+    // from the contexts around each call (pointer moves, no copies).
+    let mut grads: Vec<Vec<f32>> = vec![Vec::new(); n];
     let mut xbar = vec![0.0f32; d];
     let mut points = Vec::with_capacity(cfg.epochs);
     let mut diverged = false;
@@ -152,27 +187,25 @@ pub fn train_classifier(
         let mut loss_sum = 0.0f64;
         for _ in 0..iters_per_epoch {
             for (w, shard) in shards.iter_mut().enumerate() {
-                shard.sample_batch(cfg.batch_per_worker, &mut batches[w]);
+                shard.sample_batch(cfg.batch_per_worker, &mut ctxs[w].batch);
             }
-            // parallel per-worker gradients at each worker's local model
-            let worker_out: Vec<(Vec<f32>, f32)> = {
+            // parallel per-worker gradients at each worker's local model,
+            // into each worker's persistent buffers
+            {
                 let opt_ref: &dyn DistOptimizer = opt;
-                let batches_ref = &batches;
-                scope_map(n, cfg.threads, move |w| {
-                    let mut g = vec![0.0f32; d];
-                    let loss = model.loss_grad(
+                scope_zip(&mut ctxs, cfg.threads, |w, ctx| {
+                    ctx.loss = model.loss_grad_scratch(
                         opt_ref.worker_model(w),
                         train,
-                        &batches_ref[w],
-                        &mut g,
+                        &ctx.batch,
+                        &mut ctx.grad,
+                        &mut ctx.scratch,
                     );
-                    (g, loss)
-                })
-            };
+                });
+            }
             let mut step_loss = 0.0f64;
-            for (w, (g, l)) in worker_out.into_iter().enumerate() {
-                grads[w] = g;
-                step_loss += l as f64 / n as f64;
+            for ctx in &ctxs {
+                step_loss += ctx.loss as f64 / n as f64;
             }
             loss_sum += step_loss;
             if initial_loss.is_nan() {
@@ -182,7 +215,13 @@ pub fn train_classifier(
                 diverged = true;
             }
 
+            for (g, ctx) in grads.iter_mut().zip(ctxs.iter_mut()) {
+                std::mem::swap(g, &mut ctx.grad);
+            }
             let stats = opt.step(&grads, eta);
+            for (g, ctx) in grads.iter_mut().zip(ctxs.iter_mut()) {
+                std::mem::swap(g, &mut ctx.grad);
+            }
             // paper-scale accounting
             price_step(cfg, scale, &stats, &mut cum_bits, &mut cum_seconds);
             if diverged {
@@ -232,13 +271,14 @@ fn train_classifier_resident(
     // No collective is installed: resident workers execute the peer-owned
     // mesh collectives directly (`run_resident` never consults the central
     // `Collective`).
-    let shards: Vec<Mutex<Shard>> =
-        Shard::split(train.len(), n, cfg.seed).into_iter().map(Mutex::new).collect();
+    let res: Vec<Mutex<GradRes>> =
+        Shard::split(train.len(), n, cfg.seed).into_iter().map(GradRes::new).collect();
     let iters_per_epoch = (train.len() / (cfg.batch_per_worker * n)).max(1);
     let grad_fn = crate::engine::as_grad(|w, xw, out| {
-        let mut batch = Vec::with_capacity(cfg.batch_per_worker);
-        shards[w].lock().unwrap().sample_batch(cfg.batch_per_worker, &mut batch);
-        model.loss_grad(xw, train, &batch, out)
+        let mut r = res[w].lock().unwrap();
+        let GradRes { shard, batch, scratch } = &mut *r;
+        shard.sample_batch(cfg.batch_per_worker, batch);
+        model.loss_grad_scratch(xw, train, batch, out, scratch)
     });
 
     let mut xbar = vec![0.0f32; d];
@@ -341,12 +381,13 @@ fn train_classifier_tcp(
 
     // Deterministic sharding: every rank derives the same split from the
     // shared seed and takes its own slice.
-    let shard = Mutex::new(Shard::split(train.len(), n, cfg.seed).swap_remove(rank));
+    let res = GradRes::new(Shard::split(train.len(), n, cfg.seed).swap_remove(rank));
     let iters_per_epoch = (train.len() / (cfg.batch_per_worker * n)).max(1);
     let grad_fn = crate::engine::as_grad(|_w, xw: &[f32], out: &mut [f32]| {
-        let mut batch = Vec::with_capacity(cfg.batch_per_worker);
-        shard.lock().unwrap().sample_batch(cfg.batch_per_worker, &mut batch);
-        model.loss_grad(xw, train, &batch, out)
+        let mut r = res.lock().unwrap();
+        let GradRes { shard, batch, scratch } = &mut *r;
+        shard.sample_batch(cfg.batch_per_worker, batch);
+        model.loss_grad_scratch(xw, train, batch, out, scratch)
     });
 
     let mut start_epoch = 0usize;

@@ -43,11 +43,11 @@ pub use plan::{CommPlan, RoundRule, StepRule};
 pub use worker::{descent_into, WorkerState};
 
 use crate::compressor::{Ctx, Selection};
+use crate::kernel::{dense as math, fused, Scratch};
 use crate::optimizer::{DistOptimizer, RoundStats};
 use crate::transport::mesh::channel_mesh;
 use crate::transport::peer::{self, PeerTransport, TransportError};
 use crate::transport::Collective;
-use crate::util::math;
 use std::sync::Arc;
 use worker::{put_field, take_field};
 
@@ -105,6 +105,7 @@ impl ErrorResetEngine {
                 r: if needs_r { vec![0.0; d] } else { Vec::new() },
                 e_half: if needs_ehalf { vec![0.0; d] } else { Vec::new() },
                 g: Vec::new(),
+                scratch: Scratch::new(),
             })
             .collect();
         let gbar =
@@ -314,21 +315,19 @@ impl ErrorResetEngine {
 
 /// QSparse sync message: q_i = e_i + (x_i − x̂), built into the p buffer.
 fn qsparse_prepare(w: &mut WorkerState) {
-    let (p, e, x, xhat) = (&mut w.p, &w.e, &w.x, &w.xhat);
-    for ((qj, ej), (xj, hj)) in p.iter_mut().zip(e).zip(x.iter().zip(xhat)) {
-        *qj = ej + xj - hj;
-    }
+    fused::qsparse_message(&mut w.p, &w.e, &w.x, &w.xhat);
 }
 
-/// QSparse resync: advance the anchor by the mean message, reset x to it.
+/// QSparse resync: advance the anchor by the mean message and reset x to it
+/// — one fused traversal (`xhat += p; x = xhat`).
 fn qsparse_apply(w: &mut WorkerState) {
-    math::axpy(1.0, &w.p, &mut w.xhat);
-    w.x.copy_from_slice(&w.xhat);
+    fused::advance_and_copy(&mut w.xhat, &w.p, &mut w.x);
 }
 
 /// CSER gradient-path apply: x −= p′, and (impl. I) fold the residual into e
 /// — from the complement ranges on the global fast path, from the dense
-/// residual buffer otherwise.
+/// residual buffer otherwise (where the model apply and the error fold fuse
+/// into a single traversal of x/p/e/r).
 fn cser_apply_grad(
     w: &mut WorkerState,
     round: &crate::collective::PsyncRound,
@@ -336,16 +335,16 @@ fn cser_apply_grad(
     global: bool,
     d: usize,
 ) {
-    math::axpy(-1.0, &w.p, &mut w.x);
+    if track && !global {
+        fused::apply_sub_pair(&mut w.x, &w.p, &mut w.e, &w.r);
+        return;
+    }
+    fused::sub_assign(&mut w.x, &w.p);
     if track {
-        if global {
-            let (p_i, e_i) = (&w.p, &mut w.e);
-            round.for_each_unselected(w.id, d, |s, e2| {
-                math::axpy(-1.0, &p_i[s..e2], &mut e_i[s..e2]);
-            });
-        } else {
-            math::axpy(-1.0, &w.r, &mut w.e);
-        }
+        let (p_i, e_i) = (&w.p, &mut w.e);
+        round.for_each_unselected(w.id, d, |s, e2| {
+            math::axpy(-1.0, &p_i[s..e2], &mut e_i[s..e2]);
+        });
     }
 }
 
@@ -364,10 +363,10 @@ fn cser_reset_post_global(w: &mut WorkerState, sel: &Selection, d: usize) {
     });
 }
 
-/// General-path reset, after PSync: x += e′ − e_half; e ← new residual.
+/// General-path reset, after PSync: x += e′ − e_half (one fused traversal);
+/// e ← new residual.
 fn cser_reset_post_general(w: &mut WorkerState) {
-    math::axpy(1.0, &w.e, &mut w.x);
-    math::axpy(-1.0, &w.e_half, &mut w.x);
+    fused::add_sub(&mut w.x, &w.e, &w.e_half);
     std::mem::swap(&mut w.e, &mut w.r);
 }
 
@@ -385,10 +384,10 @@ impl DistOptimizer for ErrorResetEngine {
                 // All workers are bit-identical replicas: run the momentum
                 // descent once and memcpy the result, keeping the seed's
                 // single-model arithmetic cost (the resident path computes
-                // per worker instead — same bits either way).
+                // per worker instead — same bits either way).  Descent and
+                // model apply fuse into one traversal.
                 let (w0, rest) = self.workers.split_first_mut().expect("n >= 1");
-                descent_into(beta, &mut w0.m, &self.gbar, eta, &mut w0.p);
-                math::axpy(-1.0, &w0.p, &mut w0.x);
+                fused::descent_apply(beta, &mut w0.m, &self.gbar, eta, &mut w0.x, &mut w0.p);
                 for w in rest {
                     if beta > 0.0 {
                         w.m.copy_from_slice(&w0.m);
@@ -405,8 +404,7 @@ impl DistOptimizer for ErrorResetEngine {
             }
             (StepRule::ErrorFeedback { c }, _) => {
                 for (w, g) in self.workers.iter_mut().zip(grads) {
-                    descent_into(beta, &mut w.m, g, eta, &mut w.p);
-                    math::axpy(1.0, &w.e, &mut w.p);
+                    fused::descent_plus_error(beta, &mut w.m, g, &w.e, eta, &mut w.p);
                 }
                 let mut qs = take_field(&mut self.workers, |w| &mut w.p);
                 let mut es = take_field(&mut self.workers, |w| &mut w.e);
@@ -414,7 +412,7 @@ impl DistOptimizer for ErrorResetEngine {
                 put_field(&mut self.workers, qs, |w| &mut w.p);
                 put_field(&mut self.workers, es, |w| &mut w.e);
                 for w in self.workers.iter_mut() {
-                    math::axpy(-1.0, &w.p, &mut w.x);
+                    fused::sub_assign(&mut w.x, &w.p);
                 }
                 RoundStats {
                     grad_bits: round.upload_bits_per_worker,
@@ -426,8 +424,7 @@ impl DistOptimizer for ErrorResetEngine {
             }
             (StepRule::LocalDescent, RoundRule::Resync { c1, h }) => {
                 for (w, g) in self.workers.iter_mut().zip(grads) {
-                    descent_into(beta, &mut w.m, g, eta, &mut w.p);
-                    math::axpy(-1.0, &w.p, &mut w.x);
+                    fused::descent_apply(beta, &mut w.m, g, eta, &mut w.x, &mut w.p);
                 }
                 if t % *h != 0 {
                     return RoundStats::default();
@@ -477,8 +474,9 @@ impl DistOptimizer for ErrorResetEngine {
                     RoundRule::ErrorSync { c1, h } if t % *h == 0 => {
                         stats.synced = true;
                         if c1.globally_synchronized() {
-                            let sel =
-                                c1.select(Ctx { round: t, worker: 0 }, &self.workers[0].e);
+                            let sel = crate::kernel::with_thread_scratch(|s| {
+                                c1.select_with(Ctx { round: t, worker: 0 }, &self.workers[0].e, s)
+                            });
                             for w in self.workers.iter_mut() {
                                 cser_reset_pre_global(w, &sel, d);
                             }
@@ -625,8 +623,7 @@ fn peer_step(
             // dense gradient mean, identical arithmetic to the central
             // path's `mean_rows` (gather in worker order at rank 0)
             peer::mean_dense(tp, &mut w.g, t)?;
-            descent_into(beta, &mut w.m, &w.g, eta, &mut w.p);
-            math::axpy(-1.0, &w.p, &mut w.x);
+            fused::descent_apply(beta, &mut w.m, &w.g, eta, &mut w.x, &mut w.p);
             let stats = RoundStats {
                 grad_bits: d as u64 * 32,
                 model_bits: 0,
@@ -638,10 +635,12 @@ fn peer_step(
         }
         (StepRule::ErrorFeedback { c }, _) => {
             let (mean_loss, stop) = peer::vote(tp, loss, stop_loss, t)?;
-            descent_into(beta, &mut w.m, &w.g, eta, &mut w.p);
-            math::axpy(1.0, &w.e, &mut w.p);
-            let round = peer::exchange_mean(tp, &mut w.p, Some(&mut w.e), c.as_ref(), t)?;
-            math::axpy(-1.0, &w.p, &mut w.x);
+            fused::descent_plus_error(beta, &mut w.m, &w.g, &w.e, eta, &mut w.p);
+            let round = {
+                let (p, e, s) = (&mut w.p, &mut w.e, &mut w.scratch);
+                peer::exchange_mean_with(tp, p, Some(e), c.as_ref(), t, s)?
+            };
+            fused::sub_assign(&mut w.x, &w.p);
             let stats = RoundStats {
                 grad_bits: round.upload_bits_per_worker,
                 model_bits: 0,
@@ -652,15 +651,17 @@ fn peer_step(
             Ok((stats, Some(mean_loss), stop))
         }
         (StepRule::LocalDescent, RoundRule::Resync { c1, h }) => {
-            descent_into(beta, &mut w.m, &w.g, eta, &mut w.p);
-            math::axpy(-1.0, &w.p, &mut w.x);
+            fused::descent_apply(beta, &mut w.m, &w.g, eta, &mut w.x, &mut w.p);
             if t % *h != 0 {
                 // free-running local step: no collective, no vote
                 return Ok((RoundStats::default(), None, false));
             }
             let (mean_loss, stop) = peer::vote(tp, loss, stop_loss, t)?;
             qsparse_prepare(w);
-            let round = peer::exchange_mean(tp, &mut w.p, Some(&mut w.e), c1.as_ref(), t)?;
+            let round = {
+                let (p, e, s) = (&mut w.p, &mut w.e, &mut w.scratch);
+                peer::exchange_mean_with(tp, p, Some(e), c1.as_ref(), t, s)?
+            };
             qsparse_apply(w);
             let stats = RoundStats {
                 grad_bits: 0,
@@ -678,9 +679,9 @@ fn peer_step(
             let global = c2.globally_synchronized();
             let mut stats = RoundStats::default();
             let round = if global || !track {
-                peer::psync(tp, &mut w.p, None, c2.as_ref(), t)?
+                peer::psync_with(tp, &mut w.p, None, c2.as_ref(), t, &mut w.scratch)?
             } else {
-                peer::psync(tp, &mut w.p, Some(&mut w.r), c2.as_ref(), t)?
+                peer::psync_with(tp, &mut w.p, Some(&mut w.r), c2.as_ref(), t, &mut w.scratch)?
             };
             stats.grad_bits = round.upload_bits_per_worker;
             stats.grad_allreduce = round.allreduce_compatible;
@@ -692,24 +693,33 @@ fn peer_step(
                         // a globally-synchronized selection ignores both the
                         // vector and the worker id, so each worker derives
                         // the identical shared support locally
-                        let sel = c1.select(Ctx { round: t, worker: 0 }, &w.e);
+                        let ctx = Ctx { round: t, worker: 0 };
+                        let sel = c1.select_with(ctx, &w.e, &mut w.scratch);
                         cser_reset_pre_global(w, &sel, d);
-                        let round = peer::psync(tp, &mut w.e, None, c1.as_ref(), t)?;
+                        let round = {
+                            let (e, s) = (&mut w.e, &mut w.scratch);
+                            peer::psync_with(tp, e, None, c1.as_ref(), t, s)?
+                        };
                         debug_assert_eq!(round.selections[0], sel);
                         stats.model_bits = round.upload_bits_per_worker;
                         stats.model_allreduce = true;
                         cser_reset_post_global(w, &sel, d);
                     } else {
                         w.e_half.copy_from_slice(&w.e);
-                        let round =
-                            peer::psync(tp, &mut w.e, Some(&mut w.r), c1.as_ref(), t)?;
+                        let round = {
+                            let (e, r, s) = (&mut w.e, &mut w.r, &mut w.scratch);
+                            peer::psync_with(tp, e, Some(r), c1.as_ref(), t, s)?
+                        };
                         stats.model_bits = round.upload_bits_per_worker;
                         stats.model_allreduce = round.allreduce_compatible;
                         cser_reset_post_general(w);
                     }
                 }
                 RoundRule::ModelSync { c1, h } if t % *h == 0 => {
-                    let round = peer::psync(tp, &mut w.x, None, c1.as_ref(), t)?;
+                    let round = {
+                        let (x, s) = (&mut w.x, &mut w.scratch);
+                        peer::psync_with(tp, x, None, c1.as_ref(), t, s)?
+                    };
                     stats.model_bits = round.upload_bits_per_worker;
                     stats.model_allreduce = round.allreduce_compatible;
                     stats.synced = true;

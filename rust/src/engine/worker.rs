@@ -13,6 +13,12 @@
 //! copies never diverge (bit-exactly — the collective hands every worker the
 //! same aggregate), and no cross-worker reads are ever needed.
 
+/// The momentum kernel shared by every plan (and by the deprecated
+/// `optimizer::Momentum` wrapper): p = η(β m + g), m updated in place.
+/// Now lives in the kernel layer with its fused variants
+/// (`kernel::fused::{descent_apply, descent_plus_error}`).
+pub use crate::kernel::fused::descent_into;
+
 /// One worker's slice of the optimizer state.  Vectors the active
 /// [`super::CommPlan`] does not need are left empty (`e` for impl. II /
 /// plain SGD, `m` at β = 0, the reset scratch on the GRBS fast path).
@@ -35,6 +41,10 @@ pub struct WorkerState {
     /// Gradient buffer (worker-resident mode computes gradients in-thread;
     /// sized lazily so central-mode engines don't pay for it).
     pub g: Vec<f32>,
+    /// Selection/codec working buffers, threaded through this worker's
+    /// compressor calls (`Compressor::select_with`, the peer collectives) so
+    /// steady-state steps allocate nothing.
+    pub scratch: crate::kernel::Scratch,
 }
 
 impl WorkerState {
@@ -43,21 +53,6 @@ impl WorkerState {
     ///   m ← β m + g,   out = η(β m + g);   out = η g at β = 0.
     pub fn descent(&mut self, beta: f32, g: &[f32], eta: f32) {
         descent_into(beta, &mut self.m, g, eta, &mut self.p)
-    }
-}
-
-/// The momentum kernel shared by every plan (and by the deprecated
-/// `optimizer::Momentum` wrapper): p = η(β m + g), m updated in place.
-pub fn descent_into(beta: f32, m: &mut [f32], g: &[f32], eta: f32, out: &mut [f32]) {
-    if beta == 0.0 {
-        for (o, gi) in out.iter_mut().zip(g) {
-            *o = eta * *gi;
-        }
-        return;
-    }
-    for ((o, mi), gi) in out.iter_mut().zip(m.iter_mut()).zip(g) {
-        *mi = beta * *mi + *gi;
-        *o = eta * (beta * *mi + *gi);
     }
 }
 
@@ -85,24 +80,8 @@ pub(crate) fn put_field(
 mod tests {
     use super::*;
 
-    #[test]
-    fn descent_beta_zero_is_plain_direction() {
-        let mut m: Vec<f32> = vec![];
-        let mut p = vec![0.0f32; 3];
-        descent_into(0.0, &mut m, &[1.0, -2.0, 3.0], 0.1, &mut p);
-        assert_eq!(p, vec![0.1, -0.2, 0.3]);
-    }
-
-    #[test]
-    fn descent_matches_sutskever_recursion() {
-        let (beta, eta) = (0.9f32, 0.5f32);
-        let mut m = vec![0.0f32];
-        let mut p = vec![0.0f32];
-        descent_into(beta, &mut m, &[2.0], eta, &mut p);
-        assert!((p[0] - 1.9).abs() < 1e-6);
-        descent_into(beta, &mut m, &[1.0], eta, &mut p);
-        assert!((p[0] - 1.76).abs() < 1e-6);
-    }
+    // `descent_into`'s unit + bit-parity tests live with the kernel
+    // (`kernel::fused`); this module keeps the state-plumbing tests.
 
     #[test]
     fn take_put_roundtrip_preserves_buffers() {
@@ -117,6 +96,7 @@ mod tests {
                 r: vec![],
                 e_half: vec![],
                 g: vec![],
+                scratch: crate::kernel::Scratch::new(),
             })
             .collect();
         let ps = take_field(&mut ws, |w| &mut w.p);

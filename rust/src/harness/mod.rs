@@ -12,9 +12,13 @@
 //!   ablation, and the Lemma-3 H-scaling check on the quadratic model.
 //! * [`theory`]   — §4 validation: measured L/V₁/V₂, the Theorem-1 bound,
 //!   Corollary-1 linear speedup, sparsifier-family comparison.
+//! * [`perf`]     — the `cser bench` measurement suite: optimizer-step and
+//!   gradient throughput + bits/step, emitted as the schema-versioned
+//!   `BENCH_engine.json` perf-trajectory record (validated in CI).
 
 pub mod ablation;
 pub mod curves;
+pub mod perf;
 pub mod sweep;
 pub mod tables;
 pub mod theory;

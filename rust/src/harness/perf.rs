@@ -1,0 +1,343 @@
+//! Machine-readable perf harness: the `cser bench` subcommand and the
+//! `BENCH_engine.json` trajectory record.
+//!
+//! The paper's wall-clock claims (§5.3, near-10× speedups) only hold while
+//! local compute — the O(d) optimizer sweeps and the gradient evaluation —
+//! stays fast enough that communication is the bottleneck being removed.
+//! This harness measures exactly those two hot paths and emits one JSON
+//! record at the repo root so every future PR is held to the trajectory
+//! (CI's `bench-smoke` job runs `cser bench --quick` and validates the
+//! schema).
+//!
+//! # `BENCH_engine.json` schema (`cser-bench-engine/v1`)
+//!
+//! ```json
+//! {
+//!   "schema": "cser-bench-engine/v1",
+//!   "quick": false,
+//!   "entries": [
+//!     {
+//!       "name": "step_cser",          // unique entry id
+//!       "kind": "optimizer_step",     // "optimizer_step" | "grad" | "train_step"
+//!       "d": 1048576,                 // model dimension
+//!       "workers": 8,                 // simulated workers
+//!       "batch": 0,                   // samples per gradient (grad/train_step kinds)
+//!       "median_ns": 1234.5,          // median wall time per operation
+//!       "throughput_per_s": 810.0,    // operations per second at the median
+//!       "bits_per_step": 4096.0,      // mean accounted upload bits per step (0 for grad)
+//!       "speedup_vs_reference": 2.3   // reference median / this median (0 = no reference)
+//!     }
+//!   ]
+//! }
+//! ```
+//!
+//! `kind` semantics: `optimizer_step` times `DistOptimizer::step` alone
+//! (gradients given); `grad` times one minibatch gradient; `train_step`
+//! times gradient + step together for a single worker, with
+//! `speedup_vs_reference` comparing against the per-sample reference
+//! gradient driving the same engine.  `mlp_train_step_batched` isolates
+//! the serial batching/fusion gain; `mlp_train_step_batched_par` (chunk
+//! parallelism enabled — the full tentpole configuration) carries the
+//! ≥2× target vs the pre-PR baseline.
+
+use crate::config::OptSpec;
+use crate::data::ClassDataset;
+use crate::models::{GradModel, Mlp, ModelScratch};
+use crate::optimizer::DistOptimizer;
+use crate::util::bench::{black_box, Bench};
+use crate::util::json::JsonWriter;
+use crate::util::pool;
+use crate::util::rng::Rng;
+use std::time::Duration;
+
+pub const SCHEMA: &str = "cser-bench-engine/v1";
+
+#[derive(Debug, Clone)]
+pub struct PerfEntry {
+    pub name: String,
+    pub kind: &'static str,
+    pub d: usize,
+    pub workers: usize,
+    pub batch: usize,
+    pub median_ns: f64,
+    pub bits_per_step: f64,
+    pub speedup_vs_reference: f64,
+}
+
+impl PerfEntry {
+    pub fn throughput_per_s(&self) -> f64 {
+        if self.median_ns > 0.0 {
+            1e9 / self.median_ns
+        } else {
+            0.0
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct PerfReport {
+    pub quick: bool,
+    pub entries: Vec<PerfEntry>,
+}
+
+fn bench_profile(quick: bool) -> Bench {
+    if quick {
+        Bench {
+            warmup: Duration::from_millis(60),
+            window: Duration::from_millis(160),
+            samples: 5,
+            results: vec![],
+        }
+    } else {
+        Bench::new()
+    }
+}
+
+/// Mean accounted upload bits per step over a probe run long enough to
+/// cover every plan's sync cadence.
+fn probe_bits_per_step(spec: &OptSpec, init: &[f32], n: usize, grads: &[Vec<f32>]) -> f64 {
+    let mut opt = spec.build(init, n, 0.9, 7);
+    let probe = 32u64;
+    let mut bits = 0u64;
+    for _ in 0..probe {
+        let s = opt.step(grads, 0.01);
+        bits += s.grad_bits + s.model_bits;
+    }
+    bits as f64 / probe as f64
+}
+
+/// Run the full measurement suite.  `quick` shrinks dimensions and windows
+/// to a few seconds total (the CI smoke profile) without changing the
+/// schema.
+pub fn run(quick: bool) -> PerfReport {
+    let mut entries = Vec::new();
+
+    // ---- optimizer step throughput (gradients given), n workers ----
+    let d = if quick { 1 << 16 } else { 1 << 20 };
+    let n = 8;
+    let mut rng = Rng::new(3);
+    let init = vec![0.0f32; d];
+    let grads: Vec<Vec<f32>> = (0..n)
+        .map(|_| {
+            let mut g = vec![0.0f32; d];
+            rng.fill_normal(&mut g, 1.0);
+            g
+        })
+        .collect();
+    let specs: [(&str, OptSpec); 7] = [
+        ("sgd", OptSpec::Sgd),
+        ("ef_sgd", OptSpec::EfSgd { rc1: 256.0 }),
+        ("qsparse", OptSpec::Qsparse { rc1: 128.0, h: 2 }),
+        ("cser", OptSpec::Cser { rc1: 16.0, rc2: 512.0, h: 32 }),
+        ("cser2", OptSpec::Cser2 { rc1: 16.0, rc2: 512.0, h: 32 }),
+        ("cser_pl", OptSpec::CserPl { rc1: 16.0, h: 16 }),
+        ("csea", OptSpec::Csea { rc1: 256.0 }),
+    ];
+    for (name, spec) in &specs {
+        let mut b = bench_profile(quick);
+        let mut opt = spec.build(&init, n, 0.9, 7);
+        b.run(&format!("step_{name}"), || {
+            black_box(opt.step(&grads, 0.01));
+        });
+        let median_ns = b.results[0].median_ns;
+        entries.push(PerfEntry {
+            name: format!("step_{name}"),
+            kind: "optimizer_step",
+            d,
+            workers: n,
+            batch: 0,
+            median_ns,
+            bits_per_step: probe_bits_per_step(spec, &init, n, &grads),
+            speedup_vs_reference: 0.0,
+        });
+    }
+
+    // ---- MLP gradient throughput: per-sample reference vs batched ----
+    let (input, hidden, classes, batch) =
+        if quick { (64, 64, 10, 128) } else { (256, 256, 16, 256) };
+    let (train, _test) =
+        ClassDataset::gaussian_mixture(classes, input, 2048, 64, 1.2, 0.8, 0.0, 5);
+    let model = Mlp::new(input, hidden, classes);
+    let md = model.dim();
+    let params = model.init(2);
+    let mut grad = vec![0.0f32; md];
+    let mut rng = Rng::new(11);
+    let idxs: Vec<u32> = (0..batch).map(|_| rng.below(train.len()) as u32).collect();
+
+    let mut b = bench_profile(quick);
+    b.run("mlp_grad_reference", || {
+        black_box(model.loss_grad_reference(&params, &train, &idxs, &mut grad));
+    });
+    let ref_ns = b.results.last().unwrap().median_ns;
+    entries.push(PerfEntry {
+        name: "mlp_grad_reference".into(),
+        kind: "grad",
+        d: md,
+        workers: 1,
+        batch,
+        median_ns: ref_ns,
+        bits_per_step: 0.0,
+        speedup_vs_reference: 1.0,
+    });
+
+    let mut scratch = ModelScratch::new();
+    b.run("mlp_grad_batched", || {
+        black_box(model.loss_grad_scratch(&params, &train, &idxs, &mut grad, &mut scratch));
+    });
+    let batched_ns = b.results.last().unwrap().median_ns;
+    entries.push(PerfEntry {
+        name: "mlp_grad_batched".into(),
+        kind: "grad",
+        d: md,
+        workers: 1,
+        batch,
+        median_ns: batched_ns,
+        bits_per_step: 0.0,
+        speedup_vs_reference: ref_ns / batched_ns,
+    });
+
+    let mut par_scratch = ModelScratch::parallel(pool::default_threads());
+    b.run("mlp_grad_batched_par", || {
+        black_box(model.loss_grad_scratch(&params, &train, &idxs, &mut grad, &mut par_scratch));
+    });
+    let par_ns = b.results.last().unwrap().median_ns;
+    entries.push(PerfEntry {
+        name: "mlp_grad_batched_par".into(),
+        kind: "grad",
+        d: md,
+        workers: 1,
+        batch,
+        median_ns: par_ns,
+        bits_per_step: 0.0,
+        speedup_vs_reference: ref_ns / par_ns,
+    });
+
+    // ---- single-worker MLP train step: gradient + optimizer step ----
+    // The tentpole target: ≥2× step throughput vs the pre-PR hot path
+    // (per-sample gradient + unfused sweeps), measured end to end.  The
+    // `_batched` entry runs the trainers' default configuration (serial
+    // scratch — apples-to-apples against the single-threaded reference, so
+    // the speedup is batching/fusion, not thread fan-out); `_batched_par`
+    // records what the optional chunk parallelism adds on top.
+    let spec = OptSpec::Cser { rc1: 8.0, rc2: 64.0, h: 8 };
+    let mut opt_ref = spec.build(&params, 1, 0.9, 7);
+    let mut gbuf = vec![vec![0.0f32; md]];
+    b.run("mlp_train_step_reference", || {
+        model.loss_grad_reference(opt_ref.worker_model(0), &train, &idxs, &mut gbuf[0]);
+        black_box(opt_ref.step(&gbuf, 0.01));
+    });
+    let step_ref_ns = b.results.last().unwrap().median_ns;
+    entries.push(PerfEntry {
+        name: "mlp_train_step_reference".into(),
+        kind: "train_step",
+        d: md,
+        workers: 1,
+        batch,
+        median_ns: step_ref_ns,
+        bits_per_step: 0.0,
+        speedup_vs_reference: 1.0,
+    });
+
+    let mut opt_new = spec.build(&params, 1, 0.9, 7);
+    b.run("mlp_train_step_batched", || {
+        model.loss_grad_scratch(opt_new.worker_model(0), &train, &idxs, &mut gbuf[0], &mut scratch);
+        black_box(opt_new.step(&gbuf, 0.01));
+    });
+    let step_new_ns = b.results.last().unwrap().median_ns;
+    entries.push(PerfEntry {
+        name: "mlp_train_step_batched".into(),
+        kind: "train_step",
+        d: md,
+        workers: 1,
+        batch,
+        median_ns: step_new_ns,
+        bits_per_step: 0.0,
+        speedup_vs_reference: step_ref_ns / step_new_ns,
+    });
+
+    let mut opt_par = spec.build(&params, 1, 0.9, 7);
+    b.run("mlp_train_step_batched_par", || {
+        model.loss_grad_scratch(
+            opt_par.worker_model(0),
+            &train,
+            &idxs,
+            &mut gbuf[0],
+            &mut par_scratch,
+        );
+        black_box(opt_par.step(&gbuf, 0.01));
+    });
+    let step_par_ns = b.results.last().unwrap().median_ns;
+    entries.push(PerfEntry {
+        name: "mlp_train_step_batched_par".into(),
+        kind: "train_step",
+        d: md,
+        workers: 1,
+        batch,
+        median_ns: step_par_ns,
+        bits_per_step: 0.0,
+        speedup_vs_reference: step_ref_ns / step_par_ns,
+    });
+
+    PerfReport { quick, entries }
+}
+
+pub fn to_json(r: &PerfReport) -> String {
+    let mut w = JsonWriter::new();
+    w.begin_obj();
+    w.key("schema").str(SCHEMA);
+    w.key("quick").bool(r.quick);
+    w.key("entries").begin_arr();
+    for e in &r.entries {
+        w.begin_obj();
+        w.key("name").str(&e.name);
+        w.key("kind").str(e.kind);
+        w.key("d").int(e.d as i64);
+        w.key("workers").int(e.workers as i64);
+        w.key("batch").int(e.batch as i64);
+        w.key("median_ns").num(e.median_ns);
+        w.key("throughput_per_s").num(e.throughput_per_s());
+        w.key("bits_per_step").num(e.bits_per_step);
+        w.key("speedup_vs_reference").num(e.speedup_vs_reference);
+        w.end_obj();
+    }
+    w.end_arr();
+    w.end_obj();
+    w.finish()
+}
+
+pub fn write_json(r: &PerfReport, path: &str) -> std::io::Result<()> {
+    std::fs::write(path, to_json(r))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn report_json_roundtrips_and_carries_schema() {
+        let r = PerfReport {
+            quick: true,
+            entries: vec![PerfEntry {
+                name: "step_x".into(),
+                kind: "optimizer_step",
+                d: 64,
+                workers: 2,
+                batch: 0,
+                median_ns: 1500.0,
+                bits_per_step: 320.0,
+                speedup_vs_reference: 0.0,
+            }],
+        };
+        let j = Json::parse(&to_json(&r)).unwrap();
+        assert_eq!(j.get("schema").unwrap().as_str(), Some(SCHEMA));
+        assert_eq!(j.get("quick").unwrap().as_bool(), Some(true));
+        let es = j.get("entries").unwrap().as_arr().unwrap();
+        assert_eq!(es.len(), 1);
+        let e = &es[0];
+        assert_eq!(e.get("kind").unwrap().as_str(), Some("optimizer_step"));
+        assert_eq!(e.get("d").unwrap().as_usize(), Some(64));
+        let tp = e.get("throughput_per_s").unwrap().as_f64().unwrap();
+        assert!((tp - 1e9 / 1500.0).abs() < 1.0);
+    }
+}

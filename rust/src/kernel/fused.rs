@@ -1,0 +1,287 @@
+//! Fused single-traversal step kernels.
+//!
+//! Every optimizer family in the engine is a chain of O(d) sweeps: momentum
+//! descent, error fold, model apply, residual fold, reset add/sub.  Run as
+//! separate `axpy` calls each sweep streams the full vector through the
+//! cache again — at WRN-scale d the step is pure memory traffic, so k
+//! traversals cost k× the bandwidth of one.  The kernels here combine the
+//! chains the engine actually executes into single passes.
+//!
+//! **Bit-exactness contract:** each fused kernel performs the *identical
+//! per-element operation sequence* as the unfused chain it replaces — same
+//! f32 ops, same order, no reassociation, no FMA (Rust never contracts
+//! `a * b + c` without explicit `mul_add`).  The property tests below pin
+//! every kernel bit-identical to its reference chain, which is what keeps
+//! the `engine_parity` and `tcp_equiv` equivalence pins valid across the
+//! fusion.
+
+/// The momentum kernel shared by every plan (Sutskever form, paper §3.2):
+///   m ← β m + g,   out = η(β m + g);   out = η g at β = 0.
+/// `m` may be empty when β = 0 (no momentum state is kept).
+pub fn descent_into(beta: f32, m: &mut [f32], g: &[f32], eta: f32, out: &mut [f32]) {
+    if beta == 0.0 {
+        for (o, gi) in out.iter_mut().zip(g) {
+            *o = eta * *gi;
+        }
+        return;
+    }
+    for ((o, mi), gi) in out.iter_mut().zip(m.iter_mut()).zip(g) {
+        *mi = beta * *mi + *gi;
+        *o = eta * (beta * *mi + *gi);
+    }
+}
+
+/// Fused descent + model apply: `descent_into` immediately followed by
+/// `x -= p`, in one traversal.  Replaces the two-sweep chain on the dense
+/// SGD and local-descent paths (`p` still holds the step, unchanged — some
+/// plans transmit it afterwards).
+pub fn descent_apply(beta: f32, m: &mut [f32], g: &[f32], eta: f32, x: &mut [f32], p: &mut [f32]) {
+    if beta == 0.0 {
+        for ((o, gi), xi) in p.iter_mut().zip(g).zip(x.iter_mut()) {
+            *o = eta * *gi;
+            *xi -= *o;
+        }
+        return;
+    }
+    for (((o, mi), gi), xi) in p.iter_mut().zip(m.iter_mut()).zip(g).zip(x.iter_mut()) {
+        *mi = beta * *mi + *gi;
+        *o = eta * (beta * *mi + *gi);
+        *xi -= *o;
+    }
+}
+
+/// Fused descent + error fold (EF-SGD, Alg 10): `descent_into` immediately
+/// followed by `p += e`, in one traversal.  The message q_i = η(βm+g) + e_i
+/// is built without re-streaming `p`.
+pub fn descent_plus_error(
+    beta: f32,
+    m: &mut [f32],
+    g: &[f32],
+    e: &[f32],
+    eta: f32,
+    p: &mut [f32],
+) {
+    if beta == 0.0 {
+        for ((o, gi), ei) in p.iter_mut().zip(g).zip(e) {
+            *o = eta * *gi;
+            *o += *ei;
+        }
+        return;
+    }
+    for (((o, mi), gi), ei) in p.iter_mut().zip(m.iter_mut()).zip(g).zip(e) {
+        *mi = beta * *mi + *gi;
+        *o = eta * (beta * *mi + *gi);
+        *o += *ei;
+    }
+}
+
+/// Fused CSER impl. I apply (general path): `x -= p` and `e -= r` in one
+/// traversal — the synced step hits the model while the residual folds into
+/// the error, streaming all four vectors once.
+pub fn apply_sub_pair(x: &mut [f32], p: &[f32], e: &mut [f32], r: &[f32]) {
+    debug_assert_eq!(x.len(), p.len());
+    debug_assert_eq!(e.len(), r.len());
+    for (((xi, pi), ei), ri) in x.iter_mut().zip(p).zip(e.iter_mut()).zip(r) {
+        *xi -= *pi;
+        *ei -= *ri;
+    }
+}
+
+/// Fused reset fold (CSER impl. I general reset, post-PSync):
+/// `x += e` then `x -= e_half`, per element, in one traversal.
+pub fn add_sub(x: &mut [f32], a: &[f32], b: &[f32]) {
+    debug_assert_eq!(x.len(), a.len());
+    debug_assert_eq!(x.len(), b.len());
+    for ((xi, ai), bi) in x.iter_mut().zip(a).zip(b) {
+        *xi += *ai;
+        *xi -= *bi;
+    }
+}
+
+/// Fused QSparse resync apply: advance the anchor by the mean message and
+/// reset the model to it — `xhat += p; x = xhat` in one traversal.
+pub fn advance_and_copy(xhat: &mut [f32], p: &[f32], x: &mut [f32]) {
+    debug_assert_eq!(xhat.len(), p.len());
+    debug_assert_eq!(xhat.len(), x.len());
+    for ((hi, pi), xi) in xhat.iter_mut().zip(p).zip(x.iter_mut()) {
+        *hi += *pi;
+        *xi = *hi;
+    }
+}
+
+/// QSparse sync message (already a single pass; lives here with its family):
+/// `p = e + x − xhat`.
+pub fn qsparse_message(p: &mut [f32], e: &[f32], x: &[f32], xhat: &[f32]) {
+    debug_assert_eq!(p.len(), e.len());
+    debug_assert_eq!(p.len(), x.len());
+    debug_assert_eq!(p.len(), xhat.len());
+    for ((pi, ei), (xi, hi)) in p.iter_mut().zip(e).zip(x.iter().zip(xhat)) {
+        *pi = *ei + *xi - *hi;
+    }
+}
+
+/// `x -= p` — the lone apply where no fusion partner exists.  Identical
+/// arithmetic to `axpy(-1.0, p, x)` (IEEE: `x + (−1·p) ≡ x − p`).
+#[inline]
+pub fn sub_assign(x: &mut [f32], p: &[f32]) {
+    debug_assert_eq!(x.len(), p.len());
+    for (xi, pi) in x.iter_mut().zip(p) {
+        *xi -= *pi;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::dense::axpy;
+    use crate::util::prop::{forall, Gen};
+
+    /// Bit-level equality — tolerance would hide exactly the drift these
+    /// kernels must not introduce.
+    fn bits_eq(a: &[f32], b: &[f32]) -> Result<(), String> {
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            if x.to_bits() != y.to_bits() {
+                return Err(format!("element {i}: {x:?} != {y:?} (bitwise)"));
+            }
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn prop_descent_apply_bitexact_vs_chain() {
+        forall(60, 0xF0_01, |g: &mut Gen| {
+            let d = g.usize_in(1, 200);
+            let (gr, x0, m0) = (g.vec(d), g.vec(d), g.vec(d));
+            let beta = if g.usize_in(0, 2) == 0 { 0.0 } else { 0.9f32 };
+            let eta = 0.05f32;
+            // reference: unfused chain
+            let mut m_ref = if beta > 0.0 { m0.clone() } else { vec![] };
+            let mut p_ref = vec![0.0f32; d];
+            let mut x_ref = x0.clone();
+            descent_into(beta, &mut m_ref, &gr, eta, &mut p_ref);
+            axpy(-1.0, &p_ref, &mut x_ref);
+            // fused
+            let mut m = if beta > 0.0 { m0.clone() } else { vec![] };
+            let mut p = vec![0.0f32; d];
+            let mut x = x0.clone();
+            descent_apply(beta, &mut m, &gr, eta, &mut x, &mut p);
+            bits_eq(&x, &x_ref)?;
+            bits_eq(&p, &p_ref)?;
+            bits_eq(&m, &m_ref)?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_descent_plus_error_bitexact_vs_chain() {
+        forall(60, 0xF0_02, |g: &mut Gen| {
+            let d = g.usize_in(1, 200);
+            let (gr, e, m0) = (g.vec(d), g.vec(d), g.vec(d));
+            let beta = if g.usize_in(0, 2) == 0 { 0.0 } else { 0.9f32 };
+            let eta = 0.1f32;
+            let mut m_ref = if beta > 0.0 { m0.clone() } else { vec![] };
+            let mut p_ref = vec![0.0f32; d];
+            descent_into(beta, &mut m_ref, &gr, eta, &mut p_ref);
+            axpy(1.0, &e, &mut p_ref);
+            let mut m = if beta > 0.0 { m0.clone() } else { vec![] };
+            let mut p = vec![0.0f32; d];
+            descent_plus_error(beta, &mut m, &gr, &e, eta, &mut p);
+            bits_eq(&p, &p_ref)?;
+            bits_eq(&m, &m_ref)?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_apply_sub_pair_bitexact_vs_two_axpys() {
+        forall(60, 0xF0_03, |g: &mut Gen| {
+            let d = g.usize_in(1, 200);
+            let (p, r, x0, e0) = (g.vec(d), g.vec(d), g.vec(d), g.vec(d));
+            let mut x_ref = x0.clone();
+            let mut e_ref = e0.clone();
+            axpy(-1.0, &p, &mut x_ref);
+            axpy(-1.0, &r, &mut e_ref);
+            let mut x = x0.clone();
+            let mut e = e0.clone();
+            apply_sub_pair(&mut x, &p, &mut e, &r);
+            bits_eq(&x, &x_ref)?;
+            bits_eq(&e, &e_ref)?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_add_sub_bitexact_vs_two_axpys() {
+        forall(60, 0xF0_04, |g: &mut Gen| {
+            let d = g.usize_in(1, 200);
+            let (a, b, x0) = (g.vec(d), g.vec(d), g.vec(d));
+            let mut x_ref = x0.clone();
+            axpy(1.0, &a, &mut x_ref);
+            axpy(-1.0, &b, &mut x_ref);
+            let mut x = x0.clone();
+            add_sub(&mut x, &a, &b);
+            bits_eq(&x, &x_ref)?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_advance_and_copy_bitexact_vs_chain() {
+        forall(60, 0xF0_05, |g: &mut Gen| {
+            let d = g.usize_in(1, 200);
+            let (p, h0) = (g.vec(d), g.vec(d));
+            let mut h_ref = h0.clone();
+            axpy(1.0, &p, &mut h_ref);
+            let x_ref = h_ref.clone();
+            let mut h = h0.clone();
+            let mut x = vec![0.0f32; d];
+            advance_and_copy(&mut h, &p, &mut x);
+            bits_eq(&h, &h_ref)?;
+            bits_eq(&x, &x_ref)?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_sub_assign_bitexact_vs_axpy() {
+        forall(40, 0xF0_06, |g: &mut Gen| {
+            let d = g.usize_in(1, 200);
+            let (p, x0) = (g.vec(d), g.vec(d));
+            let mut x_ref = x0.clone();
+            axpy(-1.0, &p, &mut x_ref);
+            let mut x = x0.clone();
+            sub_assign(&mut x, &p);
+            bits_eq(&x, &x_ref)?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn descent_beta_zero_is_plain_direction() {
+        let mut m: Vec<f32> = vec![];
+        let mut p = vec![0.0f32; 3];
+        descent_into(0.0, &mut m, &[1.0, -2.0, 3.0], 0.1, &mut p);
+        assert_eq!(p, vec![0.1, -0.2, 0.3]);
+    }
+
+    #[test]
+    fn descent_matches_sutskever_recursion() {
+        let (beta, eta) = (0.9f32, 0.5f32);
+        let mut m = vec![0.0f32];
+        let mut p = vec![0.0f32];
+        descent_into(beta, &mut m, &[2.0], eta, &mut p);
+        assert!((p[0] - 1.9).abs() < 1e-6);
+        descent_into(beta, &mut m, &[1.0], eta, &mut p);
+        assert!((p[0] - 1.76).abs() < 1e-6);
+    }
+
+    #[test]
+    fn qsparse_message_formula() {
+        let e = [1.0f32, 2.0];
+        let x = [10.0f32, 20.0];
+        let h = [3.0f32, 4.0];
+        let mut p = [0.0f32; 2];
+        qsparse_message(&mut p, &e, &x, &h);
+        assert_eq!(p, [8.0, 18.0]);
+    }
+}

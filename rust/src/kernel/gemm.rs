@@ -1,0 +1,129 @@
+//! Blocked row-major matmul tiles for the batched MLP forward/backprop.
+//!
+//! The per-sample MLP forward walked weight matrices column-wise
+//! (`w[j * n + k]` with `k` in the outer loop — stride-`n` access that
+//! thrashes the cache at every hidden width).  These kernels flip the loops:
+//! the reduction index `j` is outermost (weight rows stream contiguously),
+//! blocked by `jb` so a tile of `w` stays hot across the whole row block of
+//! samples.
+//!
+//! **Order contract:** per output element, the reduction accumulates in
+//! ascending `j` — exactly the order of the scalar dot product the
+//! per-sample reference computes — and no term is skipped or reassociated,
+//! so the batched forward is **bit-identical** to the per-sample forward
+//! (pinned by the tests below and by `models::mlp`'s parity test).
+
+/// `out[r, :] = bias` for every row (the accumulator init before
+/// [`gemm_acc_rowmajor`] — matches the reference's `z = b[k]` seed).
+pub fn init_rows_with_bias(out: &mut [f32], n: usize, bias: &[f32]) {
+    debug_assert_eq!(bias.len(), n);
+    debug_assert_eq!(out.len() % n, 0);
+    for row in out.chunks_mut(n) {
+        row.copy_from_slice(bias);
+    }
+}
+
+/// `out[r, :] += Σ_j x[r, j] · w[j, :]` — row-major `x` (rows×k), `w` (k×n),
+/// `out` (rows×n), with the `j` loop blocked by `jb`.
+pub fn gemm_acc_rowmajor(
+    x: &[f32],
+    rows: usize,
+    k: usize,
+    w: &[f32],
+    n: usize,
+    out: &mut [f32],
+    jb: usize,
+) {
+    debug_assert_eq!(x.len(), rows * k);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(out.len(), rows * n);
+    let jb = jb.max(1);
+    let mut j0 = 0usize;
+    while j0 < k {
+        let j1 = (j0 + jb).min(k);
+        for r in 0..rows {
+            let xr = &x[r * k + j0..r * k + j1];
+            let or = &mut out[r * n..(r + 1) * n];
+            for (j, &xj) in (j0..j1).zip(xr) {
+                let wr = &w[j * n..(j + 1) * n];
+                for (o, wv) in or.iter_mut().zip(wr) {
+                    *o += xj * *wv;
+                }
+            }
+        }
+        j0 = j1;
+    }
+}
+
+/// In-place ReLU over a (rows×n) activation block.
+pub fn relu(a: &mut [f32]) {
+    for v in a.iter_mut() {
+        *v = v.max(0.0);
+    }
+}
+
+/// A good `jb` for [`gemm_acc_rowmajor`]: as many `w` rows as fit in half of
+/// a typical 32 KiB L1d, at least one.
+pub fn jb_for(n: usize) -> usize {
+    (4096 / n.max(1)).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The per-sample reference loop (the shape `Mlp::forward` used): output
+    /// element (r, col) as a scalar dot accumulated in ascending j.
+    fn naive(x: &[f32], rows: usize, k: usize, w: &[f32], n: usize, bias: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0f32; rows * n];
+        for r in 0..rows {
+            for col in 0..n {
+                let mut z = bias[col];
+                for j in 0..k {
+                    z += w[j * n + col] * x[r * k + j];
+                }
+                out[r * n + col] = z;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn prop_blocked_gemm_bitexact_vs_naive() {
+        use crate::util::prop::{forall, Gen};
+        forall(40, 0x6E44, |g: &mut Gen| {
+            let rows = g.usize_in(1, 9);
+            let k = g.usize_in(1, 40);
+            let n = g.usize_in(1, 24);
+            let x = g.vec(rows * k);
+            let w = g.vec(k * n);
+            let bias = g.vec(n);
+            let expect = naive(&x, rows, k, &w, n, &bias);
+            for jb in [1, 2, 7, k, k + 3] {
+                let mut out = vec![0.0f32; rows * n];
+                init_rows_with_bias(&mut out, n, &bias);
+                gemm_acc_rowmajor(&x, rows, k, &w, n, &mut out, jb);
+                for (i, (a, b)) in out.iter().zip(&expect).enumerate() {
+                    crate::prop_assert!(
+                        a.to_bits() == b.to_bits(),
+                        "jb={jb} element {i}: {a:?} != {b:?}"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn relu_clamps_negatives() {
+        let mut a = [1.0f32, -2.0, 0.0, 3.5];
+        relu(&mut a);
+        assert_eq!(a, [1.0, 0.0, 0.0, 3.5]);
+    }
+
+    #[test]
+    fn jb_reasonable() {
+        assert!(jb_for(32) >= 1);
+        assert_eq!(jb_for(0), 4096);
+    }
+}

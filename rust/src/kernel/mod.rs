@@ -1,0 +1,37 @@
+//! The kernel layer: every O(d) sweep and O(batch·d) matmul the hot paths
+//! run, in one place.
+//!
+//! CSER's wall-clock claim only materializes when local compute is fast
+//! enough that communication is the bottleneck being removed (paper §1;
+//! Qsparse-local-SGD makes the same compute/communication trade explicit).
+//! This module is where that compute lives:
+//!
+//! * [`dense`] — the elementwise vector kernels (`axpy`, `dot`, softmax, …)
+//!   that used to live in `util::math` (which now re-exports them).  Single
+//!   slices, in-place, autovectorizing shapes.
+//! * [`fused`] — **single-traversal combined ops** replacing the chains of
+//!   `axpy`/`axpby` sweeps in the optimizer engine: momentum descent + model
+//!   apply, descent + error fold, gradient apply + residual fold, reset
+//!   add/sub.  Each fused kernel performs the *identical per-element
+//!   operation sequence* as the unfused chain it replaces, so results are
+//!   bit-identical (pinned by property tests in `fused`), while touching
+//!   each cache line once instead of 2–4 times.
+//! * [`gemm`] — blocked row-major matmul tiles for the batched MLP
+//!   forward/backprop (`models::mlp`): j-blocked accumulation that keeps the
+//!   weight tile in cache across a chunk of samples while preserving the
+//!   reference per-element accumulation order (ascending reduction index).
+//! * [`scratch`] — the reusable [`Scratch`] handle threaded through
+//!   `Compressor::select_with` and the PSync generic path, so top-k's `0..d`
+//!   index vector, blockwise mass buffers, and the dense mean/staging
+//!   buffers are allocated once and reused across steps.
+//!
+//! Invariant: nothing in this module allocates in steady state — callers own
+//! every buffer (directly or through a [`Scratch`]), and the only growth is
+//! a scratch buffer's first use at a new dimension.
+
+pub mod dense;
+pub mod fused;
+pub mod gemm;
+pub mod scratch;
+
+pub use scratch::{with_thread_scratch, Scratch};

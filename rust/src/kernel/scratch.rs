@@ -1,0 +1,133 @@
+//! Reusable hot-path scratch buffers.
+//!
+//! Compressor selection and the PSync generic path used to rebuild their
+//! working buffers on every call: top-k's `0..d` index permutation (4 MB at
+//! WRN-scale d), blockwise top-k's per-block mass table, random-k's draw
+//! pool, and PSync's dense mean/staging pair.  A [`Scratch`] owns all of
+//! them; callers hold one per worker (engine `WorkerState`), per pool
+//! thread (`transport::Threaded`), or per calling thread
+//! ([`with_thread_scratch`] for `&self` entry points like the `Collective`
+//! trait), so steady-state steps allocate nothing — buffers grow on first
+//! use at a new dimension and are reused thereafter.
+
+use std::cell::RefCell;
+
+/// The scratch handle threaded through `Compressor::select_with` /
+/// `compress_into_with` and the PSync generic path.  All fields are plain
+/// buffers; no compressor stores state here between calls (selections stay
+/// deterministic in `(ctx, v)` — the scratch only changes *where* the
+/// working memory lives).
+#[derive(Default)]
+pub struct Scratch {
+    /// u32 index workspace: top-k's `0..d` permutation, `choose_k`'s draw
+    /// pool (random-k / GRBS block draws).
+    pub ix: Vec<u32>,
+    /// Per-block `(mass, block-id)` ranking workspace (blockwise top-k).
+    pub mass: Vec<(f64, u32)>,
+    /// Dense f32 workspace A (PSync's mean-of-compressed accumulator).
+    pub va: Vec<f32>,
+    /// Dense f32 workspace B (PSync's per-worker `C(v)` staging).
+    pub vb: Vec<f32>,
+    /// Dense f32 workspace C (peer PS server's per-upload decode staging).
+    pub vc: Vec<f32>,
+    /// Union-mask workspace (peer PS server's aggregate support).
+    pub mask: Vec<bool>,
+}
+
+impl Scratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The `0..d` index vector, rebuilt in place (no allocation once grown).
+    pub fn iota(&mut self, d: usize) -> &mut Vec<u32> {
+        self.ix.clear();
+        self.ix.extend(0..d as u32);
+        &mut self.ix
+    }
+
+    /// Move the dense workspace pair out, both zero-filled at length `d`
+    /// (A is an accumulator and needs the zeros; B is fully overwritten by
+    /// its users, but is cleared the same way — an O(d) memset is noise
+    /// next to the O(n·d) round it serves, and a uniform contract is harder
+    /// to misuse).  Return with [`Scratch::put_dense_pair`] so the capacity
+    /// is reused.
+    pub fn take_dense_pair(&mut self, d: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut a = std::mem::take(&mut self.va);
+        let mut b = std::mem::take(&mut self.vb);
+        a.clear();
+        a.resize(d, 0.0);
+        b.clear();
+        b.resize(d, 0.0);
+        (a, b)
+    }
+
+    pub fn put_dense_pair(&mut self, a: Vec<f32>, b: Vec<f32>) {
+        self.va = a;
+        self.vb = b;
+    }
+
+    /// Move workspace A out alone, zero-filled at length `d` (for paths that
+    /// need a single dense staging buffer); return with
+    /// [`Scratch::put_dense`].
+    pub fn take_dense(&mut self, d: usize) -> Vec<f32> {
+        let mut a = std::mem::take(&mut self.va);
+        a.clear();
+        a.resize(d, 0.0);
+        a
+    }
+
+    pub fn put_dense(&mut self, a: Vec<f32>) {
+        self.va = a;
+    }
+}
+
+thread_local! {
+    static TL_SCRATCH: RefCell<Scratch> = RefCell::new(Scratch::new());
+}
+
+/// Run `f` with this thread's persistent [`Scratch`] — the reuse vehicle for
+/// `&self` entry points that cannot hold one (the `Collective` trait's
+/// in-process backend, wire-codec decode).  Must not be re-entered from
+/// inside `f` (the engine/peer paths thread explicit scratch handles and
+/// never call back into this).
+pub fn with_thread_scratch<R>(f: impl FnOnce(&mut Scratch) -> R) -> R {
+    TL_SCRATCH.with(|s| f(&mut s.borrow_mut()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn iota_rebuilds_without_shrinking_capacity() {
+        let mut s = Scratch::new();
+        assert_eq!(s.iota(4).as_slice(), &[0, 1, 2, 3]);
+        let cap = s.ix.capacity();
+        assert_eq!(s.iota(3).as_slice(), &[0, 1, 2]);
+        assert!(s.ix.capacity() >= cap.min(3));
+    }
+
+    #[test]
+    fn dense_pair_roundtrip_reuses_capacity() {
+        let mut s = Scratch::new();
+        let (a, b) = s.take_dense_pair(100);
+        assert_eq!(a.len(), 100);
+        assert!(a.iter().all(|&x| x == 0.0));
+        let cap = a.capacity();
+        s.put_dense_pair(a, b);
+        let (a2, _b2) = s.take_dense_pair(50);
+        assert_eq!(a2.len(), 50);
+        assert!(a2.capacity() >= cap.min(50));
+    }
+
+    #[test]
+    fn thread_scratch_persists_across_calls() {
+        with_thread_scratch(|s| {
+            s.iota(128);
+        });
+        with_thread_scratch(|s| {
+            assert!(s.ix.capacity() >= 128);
+        });
+    }
+}

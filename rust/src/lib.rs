@@ -8,7 +8,11 @@
 //!   worker-centric optimizer engine ([`engine`]: per-worker
 //!   `WorkerState` + declarative `CommPlan` sync schedules executed by one
 //!   generic `ErrorResetEngine`, centrally or as worker-resident threads
-//!   that meet only at the collective), the paper's algorithm families as
+//!   that meet only at the collective), the compute kernel layer
+//!   ([`kernel`]: fused single-pass step sweeps pinned bit-identical to
+//!   their unfused chains, blocked matmul tiles for the batched MLP
+//!   backprop, and the reusable `Scratch` that keeps steady-state steps
+//!   allocation-free), the paper's algorithm families as
 //!   plan constructors with deprecated legacy wrappers ([`optimizer`]), the
 //!   GRBS compressor family ([`compressor`]), partial synchronization
 //!   ([`collective`]), the wire layer ([`transport`]: bit-packed codecs for
@@ -37,6 +41,7 @@ pub mod coordinator;
 pub mod engine;
 pub mod data;
 pub mod harness;
+pub mod kernel;
 pub mod models;
 pub mod network;
 pub mod optimizer;

@@ -17,6 +17,9 @@
 //!                                          loopback TCP, print the RunRecord
 //! cser worker   --rendezvous H:P --rank R --workers N [training flags]
 //!                                          join a multi-process job as one rank
+//! cser bench    [--quick] [--out BENCH_engine.json]
+//!                                          perf suite: step/grad throughput +
+//!                                          bits/step, machine-readable JSON
 //! cser kernel-check                       run L1 kernel artifacts vs Rust impls
 //! cser plot results/<file>.json [--x epoch|time|bits] [--y acc|loss]
 //!                                          render run records as an SVG figure
@@ -32,7 +35,7 @@ use cser::util::cli::Args;
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     if argv.is_empty() {
-        eprintln!("usage: cser <quickstart|table2|table4|curves|timecomm|ablation|train-lm|kernel-check> [flags]");
+        eprintln!("usage: cser <quickstart|table2|table4|curves|timecomm|ablation|theory|bench|train-lm|launch|worker|kernel-check|plot> [flags]");
         std::process::exit(2);
     }
     let known = [
@@ -202,6 +205,29 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
             for (name, acc) in theory::compressor_families(&suite, 8.0, quick) {
                 println!("  {name:<26} acc={:.2}%", acc * 100.0);
             }
+            Ok(())
+        }
+        "bench" => {
+            let quick = args.bool("quick", false)?;
+            let out = args.str("out", "BENCH_engine.json");
+            let report = cser::harness::perf::run(quick);
+            cser::harness::perf::write_json(&report, &out)
+                .map_err(|e| anyhow::anyhow!("writing {out}: {e}"))?;
+            println!();
+            for e in &report.entries {
+                println!(
+                    "{:<26} {:>12.0} ns median  {:>12.1}/s{}",
+                    e.name,
+                    e.median_ns,
+                    e.throughput_per_s(),
+                    if e.speedup_vs_reference > 0.0 && e.speedup_vs_reference != 1.0 {
+                        format!("  ({:.2}x vs reference)", e.speedup_vs_reference)
+                    } else {
+                        String::new()
+                    }
+                );
+            }
+            println!("perf record -> {out} ({} entries)", report.entries.len());
             Ok(())
         }
         "worker" => worker(args),

@@ -1,4 +1,4 @@
-//! Two-layer MLP (ReLU, softmax cross-entropy) with manual backprop.
+//! Two-layer MLP (ReLU, softmax cross-entropy) with batched backprop.
 //!
 //! The non-convex stand-in for WRN-40-8 / ResNet-50 in the sweeps
 //! (DESIGN.md §3): small enough that a full Table-4 sweep (6 optimizers ×
@@ -6,11 +6,69 @@
 //! aggressive compression noise visibly hurts/destroys convergence.
 //!
 //! Flat layout: [W1 (in×h) | b1 (h) | W2 (h×c) | b2 (c)], row-major W.
+//!
+//! Gradient evaluation is structured as **batched tiles over sample
+//! chunks** (`kernel::gemm`): inputs are gathered once per chunk, the
+//! forward runs as j-blocked row-major matmuls (weight rows stream
+//! contiguously instead of the per-sample column walk), and chunks fan out
+//! over `util::pool::scope_zip` when the caller opts in.  All working
+//! buffers live in the caller-owned [`MlpScratch`] arena, so steady-state
+//! training allocates nothing per call (the seed implementation copied `w2`
+//! and allocated three scratch vectors per minibatch).
+//!
+//! Numerics: within one chunk the per-element accumulation order is
+//! *identical* to the per-sample reference ([`Mlp::loss_grad_reference`]) —
+//! bit-identical results, pinned by a test below.  Across chunks
+//! (`batch > CHUNK`) partial gradients are reduced serially in chunk order,
+//! so multi-chunk results differ from the reference only by f32 summation
+//! order (finite-difference-checked; tolerance documented in DESIGN.md
+//! §Perf) while staying deterministic for any thread count.
 
-use super::GradModel;
+use super::{GradModel, ModelScratch};
 use crate::data::ClassDataset;
-use crate::util::math::{argmax, logsumexp};
+use crate::kernel::dense::{argmax, logsumexp};
+use crate::kernel::{dense, gemm};
 use crate::util::rng::Rng;
+
+/// Samples per batched tile.  Fixed (not thread-derived) so results are
+/// independent of the machine's parallelism.
+const CHUNK: usize = 64;
+
+/// Per-chunk working buffers (one set per concurrently-processed chunk).
+#[derive(Default)]
+struct ChunkBuf {
+    /// Gathered inputs, chunk×in.
+    x: Vec<f32>,
+    /// Hidden activations, chunk×h.
+    a: Vec<f32>,
+    /// Logits → dlogits, chunk×c.
+    dl: Vec<f32>,
+    /// Per-sample hidden gradient, h.
+    dz: Vec<f32>,
+    /// Partial gradient, d (sized only when more than one chunk is live).
+    grad: Vec<f32>,
+    loss: f32,
+}
+
+/// The caller-owned arena for [`Mlp`] gradient evaluation.  Reused across
+/// calls; grows on first use at a new batch/model shape and never shrinks.
+#[derive(Default)]
+pub struct MlpScratch {
+    threads: usize,
+    chunks: Vec<ChunkBuf>,
+}
+
+impl MlpScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fan sample chunks out over up to `threads` OS threads (serial when
+    /// 0/1 — the default, since trainers already parallelize over workers).
+    pub fn with_threads(threads: usize) -> Self {
+        MlpScratch { threads, chunks: Vec::new() }
+    }
+}
 
 #[derive(Clone, Debug)]
 pub struct Mlp {
@@ -53,31 +111,17 @@ impl Mlp {
             logits[m] = z;
         }
     }
-}
 
-impl GradModel for Mlp {
-    fn dim(&self) -> usize {
-        self.input * self.hidden + self.hidden + self.hidden * self.classes + self.classes
-    }
-
-    fn init(&self, seed: u64) -> Vec<f32> {
-        let mut rng = Rng::stream(seed, 0x317);
-        let mut p = vec![0.0f32; self.dim()];
-        let (i, h, c) = (self.input, self.hidden, self.classes);
-        let s1 = (2.0 / i as f32).sqrt();
-        // damp the output layer so initial logits stay near uniform
-        // (loss ~ ln(classes) at init, like the usual zero-init head)
-        let s2 = (2.0 / h as f32).sqrt() * 0.1;
-        for v in &mut p[..i * h] {
-            *v = rng.normal() * s1;
-        }
-        for v in &mut p[i * h + h..i * h + h + h * c] {
-            *v = rng.normal() * s2;
-        }
-        p
-    }
-
-    fn loss_grad(&self, params: &[f32], data: &ClassDataset, idxs: &[u32], grad: &mut [f32]) -> f32 {
+    /// The per-sample scalar reference implementation (the seed's
+    /// `loss_grad`, kept verbatim): the numerical spec the batched path is
+    /// pinned against.  Allocates per call — tests and parity checks only.
+    pub fn loss_grad_reference(
+        &self,
+        params: &[f32],
+        data: &ClassDataset,
+        idxs: &[u32],
+        grad: &mut [f32],
+    ) -> f32 {
         debug_assert_eq!(grad.len(), self.dim());
         grad.iter_mut().for_each(|g| *g = 0.0);
         let (i, h, c) = (self.input, self.hidden, self.classes);
@@ -86,7 +130,7 @@ impl GradModel for Mlp {
         let b2o = i * h + h + h * c;
         let w2 = {
             let (_, _, w2, _) = self.split(params);
-            w2.to_vec() // copy: avoids borrow conflict with grad writes
+            w2.to_vec()
         };
         let mut a = vec![0.0f32; h];
         let mut logits = vec![0.0f32; c];
@@ -142,6 +186,190 @@ impl GradModel for Mlp {
         loss
     }
 
+    /// One chunk's forward + backward, accumulating scaled (by `inv`, the
+    /// reciprocal of the *full* batch) gradient contributions into `grad`.
+    ///
+    /// Forward is tiled (`kernel::gemm`: bias init, j-blocked matmul, ReLU —
+    /// per-element accumulation in ascending j, bit-identical to the scalar
+    /// forward); backward is the reference per-sample loop verbatim, in
+    /// sample order, so the whole pass matches [`Self::loss_grad_reference`]
+    /// bit-for-bit over the same index slice.
+    #[allow(clippy::too_many_arguments)]
+    fn chunk_pass(
+        &self,
+        params: &[f32],
+        data: &ClassDataset,
+        idxs: &[u32],
+        inv: f32,
+        grad: &mut [f32],
+        xbuf: &mut Vec<f32>,
+        abuf: &mut Vec<f32>,
+        dlbuf: &mut Vec<f32>,
+        dzbuf: &mut Vec<f32>,
+    ) -> f32 {
+        let (i, h, c) = (self.input, self.hidden, self.classes);
+        let (w1, b1, w2, b2) = self.split(params);
+        let (w1o, b1o, w2o, b2o) = (0, i * h, i * h + h, i * h + h + h * c);
+        let s = idxs.len();
+
+        // Gather inputs once: chunk×in, contiguous for the matmul tiles.
+        xbuf.clear();
+        xbuf.reserve(s * i);
+        for &gi in idxs {
+            xbuf.extend_from_slice(data.feat(gi as usize));
+        }
+
+        // Forward hidden: A = relu(X·W1 + b1), j-blocked.  The tiles are
+        // shaped with a bare `resize` (a steady-state no-op) — every element
+        // is written by the bias init before being read, so no zero-fill.
+        abuf.resize(s * h, 0.0);
+        gemm::init_rows_with_bias(abuf, h, b1);
+        gemm::gemm_acc_rowmajor(xbuf, s, i, w1, h, abuf, gemm::jb_for(h));
+        gemm::relu(abuf);
+
+        // Logits: L = A·W2 + b2, k-blocked.
+        dlbuf.resize(s * c, 0.0);
+        gemm::init_rows_with_bias(dlbuf, c, b2);
+        gemm::gemm_acc_rowmajor(abuf, s, h, w2, c, dlbuf, gemm::jb_for(c));
+
+        // Loss + dlogits = softmax − onehot (same expressions as the
+        // reference, per sample in order).
+        let mut loss = 0.0f32;
+        for (r, &gi) in idxs.iter().enumerate() {
+            let y = data.y[gi as usize] as usize;
+            let logits = &mut dlbuf[r * c..(r + 1) * c];
+            let lse = logsumexp(logits);
+            loss += (lse - logits[y]) * inv;
+            for l in logits.iter_mut() {
+                *l = (*l - lse).exp();
+            }
+            logits[y] -= 1.0;
+        }
+
+        // Backward: the reference per-sample loop, sample-major so the
+        // accumulation order into `grad` is identical.
+        dzbuf.clear();
+        dzbuf.resize(h, 0.0);
+        for r in 0..s {
+            let arow = &abuf[r * h..(r + 1) * h];
+            let dl = &dlbuf[r * c..(r + 1) * c];
+            let xrow = &xbuf[r * i..(r + 1) * i];
+            // W2/b2 grads + backprop into hidden
+            for k in 0..h {
+                let ak = arow[k];
+                let grow = &mut grad[w2o + k * c..w2o + (k + 1) * c];
+                let wrow = &w2[k * c..(k + 1) * c];
+                if ak > 0.0 {
+                    let mut acc = 0.0f32;
+                    for m in 0..c {
+                        let dlm = dl[m];
+                        grow[m] += inv * ak * dlm;
+                        acc += wrow[m] * dlm;
+                    }
+                    dzbuf[k] = acc;
+                } else {
+                    for m in 0..c {
+                        grow[m] += inv * ak * dl[m];
+                    }
+                    dzbuf[k] = 0.0;
+                }
+            }
+            for m in 0..c {
+                grad[b2o + m] += inv * dl[m];
+            }
+            // W1/b1 grads
+            for j in 0..i {
+                let xj = xrow[j] * inv;
+                if xj != 0.0 {
+                    let row = &mut grad[w1o + j * h..w1o + (j + 1) * h];
+                    for (rk, dzk) in row.iter_mut().zip(dzbuf.iter()) {
+                        *rk += xj * *dzk;
+                    }
+                }
+            }
+            for k in 0..h {
+                grad[b1o + k] += inv * dzbuf[k];
+            }
+        }
+        loss
+    }
+}
+
+impl GradModel for Mlp {
+    fn dim(&self) -> usize {
+        self.input * self.hidden + self.hidden + self.hidden * self.classes + self.classes
+    }
+
+    fn init(&self, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::stream(seed, 0x317);
+        let mut p = vec![0.0f32; self.dim()];
+        let (i, h, c) = (self.input, self.hidden, self.classes);
+        let s1 = (2.0 / i as f32).sqrt();
+        // damp the output layer so initial logits stay near uniform
+        // (loss ~ ln(classes) at init, like the usual zero-init head)
+        let s2 = (2.0 / h as f32).sqrt() * 0.1;
+        for v in &mut p[..i * h] {
+            *v = rng.normal() * s1;
+        }
+        for v in &mut p[i * h + h..i * h + h + h * c] {
+            *v = rng.normal() * s2;
+        }
+        p
+    }
+
+    fn loss_grad(&self, params: &[f32], data: &ClassDataset, idxs: &[u32], grad: &mut [f32]) -> f32 {
+        self.loss_grad_scratch(params, data, idxs, grad, &mut ModelScratch::new())
+    }
+
+    fn loss_grad_scratch(
+        &self,
+        params: &[f32],
+        data: &ClassDataset,
+        idxs: &[u32],
+        grad: &mut [f32],
+        scratch: &mut ModelScratch,
+    ) -> f32 {
+        debug_assert_eq!(grad.len(), self.dim());
+        grad.iter_mut().for_each(|g| *g = 0.0);
+        if idxs.is_empty() {
+            return 0.0;
+        }
+        let ms = &mut scratch.mlp;
+        let b = idxs.len();
+        let d = self.dim();
+        let inv = 1.0 / b as f32;
+        let n_chunks = b.div_ceil(CHUNK);
+        if ms.chunks.len() < n_chunks {
+            ms.chunks.resize_with(n_chunks, Default::default);
+        }
+
+        if n_chunks == 1 {
+            // Single tile: accumulate straight into the caller's grad —
+            // bit-identical to the per-sample reference.
+            let ChunkBuf { x, a, dl, dz, .. } = &mut ms.chunks[0];
+            return self.chunk_pass(params, data, idxs, inv, grad, x, a, dl, dz);
+        }
+
+        // Multi-tile: chunks compute partial gradients independently (fanned
+        // out over the arena's thread budget), then reduce serially in chunk
+        // order — deterministic for any thread count.
+        let threads = ms.threads.max(1).min(n_chunks);
+        crate::util::pool::scope_zip(&mut ms.chunks[..n_chunks], threads, |ci, ch| {
+            let lo = ci * CHUNK;
+            let hi = (lo + CHUNK).min(b);
+            let ChunkBuf { x, a, dl, dz, grad: cg, loss } = ch;
+            cg.clear();
+            cg.resize(d, 0.0);
+            *loss = self.chunk_pass(params, data, &idxs[lo..hi], inv, cg, x, a, dl, dz);
+        });
+        let mut loss = 0.0f32;
+        for ch in ms.chunks[..n_chunks].iter() {
+            loss += ch.loss;
+            dense::axpy(1.0, &ch.grad, grad);
+        }
+        loss
+    }
+
     fn loss(&self, params: &[f32], data: &ClassDataset) -> f32 {
         let (h, c) = (self.hidden, self.classes);
         let mut a = vec![0.0f32; h];
@@ -182,6 +410,58 @@ mod tests {
     }
 
     #[test]
+    fn batched_single_chunk_bitexact_vs_reference() {
+        // batch <= CHUNK: the tiled pass must reproduce the per-sample
+        // reference bit-for-bit (this is what keeps every pinned training
+        // trajectory unchanged at trainer batch sizes).
+        let (tr, _) = ClassDataset::gaussian_mixture(7, 12, 256, 16, 1.1, 0.6, 0.0, 11);
+        let m = Mlp::new(12, 19, 7);
+        let p = m.init(5);
+        let mut scratch = ModelScratch::new();
+        let mut rng = Rng::new(3);
+        for trial in 0..10 {
+            let bs = 1 + (trial * 7) % CHUNK;
+            let idxs: Vec<u32> = (0..bs).map(|_| rng.below(tr.len()) as u32).collect();
+            let mut g_ref = vec![0.0f32; m.dim()];
+            let l_ref = m.loss_grad_reference(&p, &tr, &idxs, &mut g_ref);
+            let mut g = vec![0.0f32; m.dim()];
+            let l = m.loss_grad_scratch(&p, &tr, &idxs, &mut g, &mut scratch);
+            assert_eq!(l.to_bits(), l_ref.to_bits(), "trial {trial}: loss differs");
+            for (j, (a, b)) in g.iter().zip(&g_ref).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "trial {trial} coord {j}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn batched_multichunk_matches_reference_and_is_thread_invariant() {
+        // batch > CHUNK: cross-chunk reduction reorders f32 sums, so the
+        // comparison is tolerance-based (DESIGN.md §Perf documents 1e-5
+        // relative); but serial vs parallel chunking must agree *bitwise*
+        // (fixed chunk size + serial reduce ⇒ thread-count invariant).
+        let (tr, _) = ClassDataset::gaussian_mixture(6, 10, 512, 16, 1.2, 0.7, 0.0, 13);
+        let m = Mlp::new(10, 16, 6);
+        let p = m.init(8);
+        let mut rng = Rng::new(9);
+        let idxs: Vec<u32> = (0..(3 * CHUNK + 17)).map(|_| rng.below(tr.len()) as u32).collect();
+
+        let mut g_ref = vec![0.0f32; m.dim()];
+        let l_ref = m.loss_grad_reference(&p, &tr, &idxs, &mut g_ref);
+
+        let mut g1 = vec![0.0f32; m.dim()];
+        let l1 = m.loss_grad_scratch(&p, &tr, &idxs, &mut g1, &mut ModelScratch::new());
+        crate::util::prop::slices_close(&g1, &g_ref, 1e-5).unwrap();
+        assert!((l1 - l_ref).abs() < 1e-5 * (1.0 + l_ref.abs()));
+
+        let mut g4 = vec![0.0f32; m.dim()];
+        let l4 = m.loss_grad_scratch(&p, &tr, &idxs, &mut g4, &mut ModelScratch::parallel(4));
+        assert_eq!(l1.to_bits(), l4.to_bits());
+        for (j, (a, b)) in g1.iter().zip(&g4).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "coord {j}: serial vs 4-thread");
+        }
+    }
+
+    #[test]
     fn init_loss_near_uniform() {
         let (tr, _) = ClassDataset::gaussian_mixture(10, 8, 64, 8, 1.0, 0.5, 0.0, 4);
         let m = Mlp::new(8, 16, 10);
@@ -196,10 +476,11 @@ mod tests {
         let m = Mlp::new(8, 16, 6);
         let mut p = m.init(2);
         let mut g = vec![0.0f32; m.dim()];
+        let mut scratch = ModelScratch::new();
         let mut rng = Rng::new(1);
         for _ in 0..800 {
             let idxs: Vec<u32> = (0..16).map(|_| rng.below(tr.len()) as u32).collect();
-            m.loss_grad(&p, &tr, &idxs, &mut g);
+            m.loss_grad_scratch(&p, &tr, &idxs, &mut g, &mut scratch);
             for (pj, gj) in p.iter_mut().zip(&g) {
                 *pj -= 0.2 * gj;
             }

@@ -20,6 +20,31 @@ pub use quadratic::Quadratic;
 
 use crate::data::ClassDataset;
 
+/// Reusable per-caller gradient-evaluation scratch, opaque to callers.
+///
+/// The batched MLP backprop owns a per-model arena here (gathered inputs,
+/// activation/logit tiles, per-chunk partial gradients) so steady-state
+/// training allocates nothing per `loss_grad_scratch` call; models without
+/// internal buffers ignore it.  Trainers hold one per worker.
+#[derive(Default)]
+pub struct ModelScratch {
+    pub(crate) mlp: mlp::MlpScratch,
+}
+
+impl ModelScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Enable intra-gradient chunk parallelism: the MLP fans sample chunks
+    /// out over up to `threads` OS threads via `util::pool`.  Serial by
+    /// default — the trainers already parallelize across workers, so nested
+    /// fan-out only pays off for single-worker callers (benches, eval).
+    pub fn parallel(threads: usize) -> Self {
+        ModelScratch { mlp: mlp::MlpScratch::with_threads(threads) }
+    }
+}
+
 /// A model trainable by the distributed optimizers.
 pub trait GradModel: Send + Sync {
     /// Flat parameter dimension.
@@ -31,6 +56,22 @@ pub trait GradModel: Send + Sync {
     /// Minibatch loss + gradient at `params` over `idxs` into `grad`
     /// (overwritten). Returns the minibatch mean loss.
     fn loss_grad(&self, params: &[f32], data: &ClassDataset, idxs: &[u32], grad: &mut [f32]) -> f32;
+
+    /// [`GradModel::loss_grad`] with caller-owned scratch — the hot-path
+    /// entry (trainers hold a [`ModelScratch`] per worker and reuse it every
+    /// step).  Default: delegates to `loss_grad` for models that keep no
+    /// working buffers.
+    fn loss_grad_scratch(
+        &self,
+        params: &[f32],
+        data: &ClassDataset,
+        idxs: &[u32],
+        grad: &mut [f32],
+        scratch: &mut ModelScratch,
+    ) -> f32 {
+        let _ = scratch;
+        self.loss_grad(params, data, idxs, grad)
+    }
 
     /// Mean loss over a whole dataset (no gradient).
     fn loss(&self, params: &[f32], data: &ClassDataset) -> f32;

@@ -44,8 +44,9 @@ pub use tcp::TcpTransport;
 pub use threaded::Threaded;
 pub use wire::{BitReader, BitWriter, WireError, WireMsg};
 
-use crate::collective::{exchange_mean, psync, PsyncRound};
+use crate::collective::{exchange_mean_with, psync_with, PsyncRound};
 use crate::compressor::Compressor;
+use crate::kernel::with_thread_scratch;
 use std::sync::Arc;
 
 /// A synchronization backend: how per-worker vectors are aggregated.
@@ -99,7 +100,10 @@ impl Collective for InProcess {
         c: &Arc<dyn Compressor>,
         round: u64,
     ) -> PsyncRound {
-        psync(vs, resid_out, c.as_ref(), round)
+        // `&self` cannot hold a scratch; the calling thread's persistent one
+        // gives the same cross-step reuse (the central step loop is
+        // single-threaded per engine).
+        with_thread_scratch(|s| psync_with(vs, resid_out, c.as_ref(), round, s))
     }
 
     fn exchange_mean(
@@ -109,7 +113,7 @@ impl Collective for InProcess {
         c: &Arc<dyn Compressor>,
         round: u64,
     ) -> PsyncRound {
-        exchange_mean(qs, resid_out, c.as_ref(), round)
+        with_thread_scratch(|s| exchange_mean_with(qs, resid_out, c.as_ref(), round, s))
     }
 }
 

@@ -36,8 +36,8 @@
 
 use super::wire::{self, WireError, WireMsg};
 use crate::collective::{PsyncRound, WireCost};
-use crate::compressor::{payload_bits_wire, Compressor, Ctx, Selection};
-use crate::util::math;
+use crate::compressor::{payload_bits_wire, Compressor, Ctx, Scratch, Selection};
+use crate::kernel::dense as math;
 use std::sync::Arc;
 
 /// A transport-level failure: a peer hung up, a frame failed validation, or
@@ -148,7 +148,21 @@ pub fn psync(
     c: &dyn Compressor,
     round: u64,
 ) -> Result<PsyncRound, TransportError> {
-    run(t, Mode::Psync, v, resid, c, round)
+    run(t, Mode::Psync, v, resid, c, round, &mut Scratch::new())
+}
+
+/// [`psync`] with a caller-owned [`Scratch`] — the steady-state entry (the
+/// engine threads each worker's scratch through here, so selection/codec
+/// working buffers are reused across steps).
+pub fn psync_with(
+    t: &mut dyn PeerTransport,
+    v: &mut Vec<f32>,
+    resid: Option<&mut Vec<f32>>,
+    c: &dyn Compressor,
+    round: u64,
+    scratch: &mut Scratch,
+) -> Result<PsyncRound, TransportError> {
+    run(t, Mode::Psync, v, resid, c, round, scratch)
 }
 
 /// This worker's side of the mean-of-compressed exchange:
@@ -160,7 +174,19 @@ pub fn exchange_mean(
     c: &dyn Compressor,
     round: u64,
 ) -> Result<PsyncRound, TransportError> {
-    run(t, Mode::Exchange, v, resid, c, round)
+    run(t, Mode::Exchange, v, resid, c, round, &mut Scratch::new())
+}
+
+/// [`exchange_mean`] with a caller-owned [`Scratch`] (see [`psync_with`]).
+pub fn exchange_mean_with(
+    t: &mut dyn PeerTransport,
+    v: &mut Vec<f32>,
+    resid: Option<&mut Vec<f32>>,
+    c: &dyn Compressor,
+    round: u64,
+    scratch: &mut Scratch,
+) -> Result<PsyncRound, TransportError> {
+    run(t, Mode::Exchange, v, resid, c, round, scratch)
 }
 
 pub(crate) fn run(
@@ -170,20 +196,21 @@ pub(crate) fn run(
     resid: Option<&mut Vec<f32>>,
     c: &dyn Compressor,
     round: u64,
+    scratch: &mut Scratch,
 ) -> Result<PsyncRound, TransportError> {
     if t.n() == 1 {
         // Degenerate fleet: nothing travels; keep reference numerics.
         let vs = std::slice::from_mut(v);
         let rs = resid.map(std::slice::from_mut);
         return Ok(match mode {
-            Mode::Psync => crate::collective::psync(vs, rs, c, round),
-            Mode::Exchange => crate::collective::exchange_mean(vs, rs, c, round),
+            Mode::Psync => crate::collective::psync_with(vs, rs, c, round, scratch),
+            Mode::Exchange => crate::collective::exchange_mean_with(vs, rs, c, round, scratch),
         });
     }
     if c.globally_synchronized() && !c.is_dense() {
-        ring(t, mode, v, resid, c, round)
+        ring(t, mode, v, resid, c, round, scratch)
     } else {
-        ps(t, mode, v, resid, c, round)
+        ps(t, mode, v, resid, c, round, scratch)
     }
 }
 
@@ -259,13 +286,14 @@ fn ring(
     mut resid: Option<&mut Vec<f32>>,
     c: &dyn Compressor,
     round: u64,
+    scratch: &mut Scratch,
 ) -> Result<PsyncRound, TransportError> {
     let n = t.n();
     let i = t.rank();
     let d = v.len();
     // Globally-synchronized selections ignore both the vector and the worker
     // id, so every peer derives the identical shared support locally.
-    let sel = c.select(Ctx { round, worker: 0 }, v);
+    let sel = c.select_with(Ctx { round, worker: 0 }, v, scratch);
     let bits = payload_bits_wire(c.wire_scheme(), &sel, d);
     let m = sel.count(d);
 
@@ -285,7 +313,9 @@ fn ring(
         });
     }
 
-    let mut compact = Vec::with_capacity(m);
+    // The O(d/R) gather buffer lives in the scratch (returned before the
+    // success exit; error exits abort the run, so the lost capacity is moot).
+    let mut compact = std::mem::take(&mut scratch.vb);
     gather(&sel, v, &mut compact);
     let next = (i + 1) % n;
     let prev = (i + n - 1) % n;
@@ -326,6 +356,7 @@ fn ring(
         v[s..e].copy_from_slice(&compact[cursor..cursor + (e - s)]);
         cursor += e - s;
     });
+    scratch.vb = compact;
     Ok(PsyncRound {
         selections: vec![sel],
         upload_bits_per_worker: bits,
@@ -350,18 +381,20 @@ fn ps(
     mut resid: Option<&mut Vec<f32>>,
     c: &dyn Compressor,
     round: u64,
+    scratch: &mut Scratch,
 ) -> Result<PsyncRound, TransportError> {
     let n = t.n();
     let i = t.rank();
     let d = v.len();
     let ctx = Ctx { round, worker: i as u32 };
-    let sel = c.select(ctx, v);
+    let sel = c.select_with(ctx, v, scratch);
     let msg = wire::encode_with_selection(c, ctx, v, Some(&sel));
     let up = msg.bit_len;
     // Decode our own upload so the residual is computed against the exact
     // bits the server aggregates, then capture it before the aggregate
-    // overwrites anything: r = v − C(v).
-    let mut cq = vec![0.0f32; d];
+    // overwrites anything: r = v − C(v).  The staging buffer comes from the
+    // scratch — reused across rounds (returned before every exit below).
+    let mut cq = scratch.take_dense(d);
     wire::decode(c, ctx, &msg, &mut cq)?;
     for (vj, kj) in v.iter_mut().zip(&cq) {
         *vj -= *kj;
@@ -373,9 +406,18 @@ fn ps(
     // cq is then reused for the decoded aggregate (mean over the union).
     let (acct_bits, down) = if i == 0 {
         // ---- server (rank 0, in its own step) ----
-        let mut mean = vec![0.0f32; d];
-        let mut scratch = vec![0.0f32; d];
-        let mut mask = vec![false; d];
+        // All three O(d) server buffers come from the scratch (returned at
+        // the end of the branch; error exits abort the run, so losing the
+        // capacity there is moot).
+        let mut mean = std::mem::take(&mut scratch.vb);
+        mean.clear();
+        mean.resize(d, 0.0);
+        let mut stage = std::mem::take(&mut scratch.vc);
+        stage.clear();
+        stage.resize(d, 0.0);
+        let mut mask = std::mem::take(&mut scratch.mask);
+        mask.clear();
+        mask.resize(d, false);
         let inv = 1.0 / n as f32;
         let mut total_up = up;
         // Accumulate in worker order — the same order as the in-process
@@ -384,8 +426,8 @@ fn ps(
         for j in 1..n {
             let m = t.recv(j, round, Tag::Upload)?;
             total_up += m.bit_len;
-            wire::decode(c, Ctx { round, worker: j as u32 }, &m, &mut scratch)?;
-            accumulate(&scratch, inv, &mut mean, &mut mask);
+            wire::decode(c, Ctx { round, worker: j as u32 }, &m, &mut stage)?;
+            accumulate(&stage, inv, &mut mean, &mut mask);
         }
         let a = if c.is_dense() {
             wire::encode_f32s(&mean)
@@ -406,6 +448,9 @@ fn ps(
             wire::decode_union(&a, &mut cq)?;
         }
         t.broadcast(round, Tag::Aggregate, a)?;
+        scratch.vb = mean;
+        scratch.vc = stage;
+        scratch.mask = mask;
         (acct, down)
     } else {
         t.send(0, round, Tag::Upload, msg)?;
@@ -432,6 +477,7 @@ fn ps(
         Mode::Psync => math::axpy(1.0, &cq, v),
         Mode::Exchange => v.copy_from_slice(&cq),
     }
+    scratch.put_dense(cq);
     Ok(PsyncRound {
         selections: vec![sel],
         upload_bits_per_worker: acct_bits,

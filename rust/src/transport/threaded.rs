@@ -74,6 +74,9 @@ impl Pool {
             jobs.push(tx);
             let done = done_tx.clone();
             handles.push(std::thread::spawn(move || {
+                // Persistent per-thread scratch: selection/codec working
+                // buffers are reused across every round this worker runs.
+                let mut scratch = crate::kernel::Scratch::new();
                 while let Ok(mut job) = rx.recv() {
                     let out = peer::run(
                         &mut tp,
@@ -82,6 +85,7 @@ impl Pool {
                         job.resid.as_mut(),
                         job.c.as_ref(),
                         job.round,
+                        &mut scratch,
                     );
                     let out = out.map(|round| (job.v, job.resid, round));
                     if done.send((w, out)).is_err() {

@@ -1,9 +1,20 @@
 //! Scoped worker thread pool (no `rayon`/`tokio` offline).
 //!
 //! The coordinator computes per-worker gradients in parallel; the experiment
-//! harness runs independent (optimizer, R_C, seed) cells in parallel.  Both
-//! only need a fork-join `scope_map` over indices, which `std::thread::scope`
-//! provides safely without unsafe code.
+//! harness runs independent (optimizer, R_C, seed) cells in parallel; the
+//! batched MLP backprop fans sample chunks out.  All only need fork-join
+//! primitives over indices, which `std::thread::scope` provides safely
+//! without unsafe code.
+//!
+//! Work distribution is **chunked ownership**: the output is pre-split into
+//! contiguous chunks (`chunks_mut`, i.e. `split_at_mut` repeatedly) held in
+//! a claim queue; a worker takes one short lock to claim a whole chunk, then
+//! fills its exclusively-owned slice lock-free.  The earlier design wrapped
+//! every output slot in its own `Mutex` — one lock acquisition *per
+//! element*; now locking is one acquisition per chunk, and oversubscribing
+//! chunks (4× threads) keeps the dynamic load balancing.
+
+use std::sync::Mutex;
 
 /// Run `f(i)` for `i in 0..n` on up to `threads` OS threads; returns results
 /// in index order.  `f` must be `Sync` (it is shared by reference).
@@ -15,23 +26,61 @@ pub fn scope_map<T: Send, F: Fn(usize) -> T + Sync>(n: usize, threads: usize, f:
     if threads == 1 {
         return (0..n).map(f).collect();
     }
-    let next = std::sync::atomic::AtomicUsize::new(0);
     let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
-    let slots: Vec<std::sync::Mutex<&mut Option<T>>> =
-        out.iter_mut().map(std::sync::Mutex::new).collect();
+    // 4× oversubscription: enough chunks for dynamic balancing, few enough
+    // that the per-chunk lock is noise.
+    let chunk = n.div_ceil(threads * 4).max(1);
+    let queue = Mutex::new(
+        out.chunks_mut(chunk).enumerate().map(|(ci, s)| (ci * chunk, s)).collect::<Vec<_>>(),
+    );
     std::thread::scope(|s| {
         for _ in 0..threads {
             s.spawn(|| loop {
-                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                if i >= n {
-                    break;
+                let claimed = queue.lock().unwrap().pop();
+                let (base, slice) = match claimed {
+                    Some(c) => c,
+                    None => break,
+                };
+                for (j, slot) in slice.iter_mut().enumerate() {
+                    *slot = Some(f(base + j));
                 }
-                let v = f(i);
-                **slots[i].lock().unwrap() = Some(v);
             });
         }
     });
+    drop(queue); // release the chunk borrows of `out` before consuming it
     out.into_iter().map(|v| v.expect("worker finished")).collect()
+}
+
+/// Run `f(i, &mut items[i])` for every item on up to `threads` OS threads.
+/// Each invocation exclusively owns its item (claimed whole from the queue —
+/// no per-element locking), so items can carry heavy per-task state: grad
+/// buffers, scratch arenas, samplers.  Items are heavyweight work units here
+/// (one per worker/chunk), so the claim granularity is one item.
+pub fn scope_zip<A: Send, F: Fn(usize, &mut A) + Sync>(items: &mut [A], threads: usize, f: F) {
+    let n = items.len();
+    let threads = threads.max(1).min(n.max(1));
+    if n == 0 {
+        return;
+    }
+    if threads == 1 {
+        for (i, a) in items.iter_mut().enumerate() {
+            f(i, a);
+        }
+        return;
+    }
+    let queue = Mutex::new(items.iter_mut().enumerate().collect::<Vec<_>>());
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let claimed = queue.lock().unwrap().pop();
+                let (i, a) = match claimed {
+                    Some(c) => c,
+                    None => break,
+                };
+                f(i, a);
+            });
+        }
+    });
 }
 
 /// Number of hardware threads (bounded to avoid oversubscription in benches).
@@ -53,6 +102,15 @@ mod tests {
     }
 
     #[test]
+    fn maps_in_order_at_awkward_sizes() {
+        // n not a multiple of the chunk size, n < threads, n == 1
+        for (n, threads) in [(97, 8), (3, 16), (1, 4), (33, 2)] {
+            let out = scope_map(n, threads, |i| i + 7);
+            assert_eq!(out, (0..n).map(|i| i + 7).collect::<Vec<_>>(), "n={n} t={threads}");
+        }
+    }
+
+    #[test]
     fn single_thread_path() {
         assert_eq!(scope_map(5, 1, |i| i + 1), vec![1, 2, 3, 4, 5]);
     }
@@ -69,5 +127,24 @@ mod tests {
         let counter = AtomicUsize::new(0);
         scope_map(64, 8, |_| counter.fetch_add(1, Ordering::SeqCst));
         assert_eq!(counter.load(Ordering::SeqCst), 64);
+    }
+
+    #[test]
+    fn zip_visits_every_item_exactly_once_with_its_index() {
+        let mut items: Vec<(usize, u32)> = (0..37).map(|i| (i, 0u32)).collect();
+        scope_zip(&mut items, 8, |i, it| {
+            assert_eq!(i, it.0);
+            it.1 += 1;
+        });
+        assert!(items.iter().all(|&(_, c)| c == 1));
+    }
+
+    #[test]
+    fn zip_serial_and_empty() {
+        let mut items = vec![1u64, 2, 3];
+        scope_zip(&mut items, 1, |i, it| *it += i as u64);
+        assert_eq!(items, vec![1, 3, 5]);
+        let mut none: Vec<u8> = vec![];
+        scope_zip(&mut none, 4, |_i, _it| {});
     }
 }

@@ -90,16 +90,23 @@ impl Rng {
     /// Fisher–Yates partial shuffle: returns the first `k` entries of a
     /// random permutation of 0..n (the GRBS block draw).
     pub fn choose_k(&mut self, n: usize, k: usize) -> Vec<u32> {
+        let mut pool = Vec::new();
+        self.choose_k_with(n, k, &mut pool)
+    }
+
+    /// [`Rng::choose_k`] with a caller-owned draw pool: the dense `0..n`
+    /// index vector is rebuilt in `pool` (no allocation once grown) instead
+    /// of being freshly allocated per draw.  Identical RNG consumption and
+    /// results to `choose_k` — only the working memory moves.
+    pub fn choose_k_with(&mut self, n: usize, k: usize, pool: &mut Vec<u32>) -> Vec<u32> {
         debug_assert!(k <= n);
-        // For small k relative to n, do selection-sampling over a dense
-        // index vec only when n is small; use a partial shuffle otherwise.
-        let mut idx: Vec<u32> = (0..n as u32).collect();
+        pool.clear();
+        pool.extend(0..n as u32);
         for i in 0..k {
             let j = i + self.below(n - i);
-            idx.swap(i, j);
+            pool.swap(i, j);
         }
-        idx.truncate(k);
-        idx
+        pool[..k].to_vec()
     }
 
     /// Sample from a categorical distribution given cumulative weights.
@@ -169,6 +176,19 @@ mod tests {
         s.dedup();
         assert_eq!(s.len(), 17);
         assert!(s.iter().all(|&i| i < 100));
+    }
+
+    #[test]
+    fn choose_k_with_matches_choose_k() {
+        // Same RNG consumption, same subset — only the pool's home differs.
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        let mut pool = Vec::new();
+        for t in 0usize..50 {
+            let n = 3 + (t % 97);
+            let k = 1 + (t % n.min(7));
+            assert_eq!(a.choose_k(n, k), b.choose_k_with(n, k, &mut pool));
+        }
     }
 
     #[test]

@@ -5,7 +5,7 @@
 //! so the comparison pins the *algebra* (momentum, PSync, error reset) and
 //! not incidental generator details.
 
-use cser::compressor::{Compressor, Ctx, Selection};
+use cser::compressor::{Compressor, Ctx, Scratch, Selection};
 use cser::optimizer::{Cser, DistOptimizer};
 use cser::util::json::Json;
 
@@ -18,7 +18,7 @@ struct Scheduled {
 }
 
 impl Compressor for Scheduled {
-    fn select(&self, ctx: Ctx, _v: &[f32]) -> Selection {
+    fn select_with(&self, ctx: Ctx, _v: &[f32], _s: &mut Scratch) -> Selection {
         let m = &self.masks[ctx.round as usize];
         let blocks: Vec<u32> =
             (0..self.nb as u32).filter(|&b| m[b as usize] > 0.5).collect();

@@ -1,0 +1,134 @@
+//! Steady-state allocation accounting for the hot paths.
+//!
+//! A counting global allocator wraps `System`; after a warmup call that
+//! grows every arena/scratch to its steady-state shape, the hot paths are
+//! measured directly:
+//!
+//! * `Mlp::loss_grad_scratch` — **zero** allocations per call (the seed
+//!   implementation copied `w2` and allocated three scratch vectors per
+//!   minibatch);
+//! * `TopK::select_with` through a reused `Scratch` — allocates only the
+//!   k-element result, never the `0..d` index permutation;
+//! * a central CSER engine step — allocates no dense (O(d)) buffer per
+//!   step: what remains is selection results and per-round bookkeeping,
+//!   bounded far below one model-sized vector.
+//!
+//! One `#[test]` only: the counters are process-global, so concurrent tests
+//! would pollute each other's windows.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+struct Counting;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static BYTES: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for Counting {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(l.size() as u64, Ordering::Relaxed);
+        System.alloc(l)
+    }
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(p, l, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: Counting = Counting;
+
+/// (allocation count, bytes requested) during `f`.
+fn alloc_during<R>(f: impl FnOnce() -> R) -> (u64, u64) {
+    let (a0, b0) = (ALLOCS.load(Ordering::SeqCst), BYTES.load(Ordering::SeqCst));
+    let r = f();
+    std::hint::black_box(r);
+    (ALLOCS.load(Ordering::SeqCst) - a0, BYTES.load(Ordering::SeqCst) - b0)
+}
+
+#[test]
+fn steady_state_hot_paths_do_not_allocate() {
+    use cser::compressor::{Compressor, Ctx, Scratch, TopK};
+    use cser::config::OptSpec;
+    use cser::data::ClassDataset;
+    use cser::models::{GradModel, Mlp, ModelScratch};
+    use cser::optimizer::DistOptimizer;
+    use cser::util::rng::Rng;
+
+    // ---- batched MLP gradient: zero steady-state allocations ----
+    let (train, _) = ClassDataset::gaussian_mixture(8, 24, 512, 32, 1.2, 0.8, 0.0, 3);
+    let model = Mlp::new(24, 32, 8);
+    let params = model.init(1);
+    let mut grad = vec![0.0f32; model.dim()];
+    let mut scratch = ModelScratch::new();
+    let mut rng = Rng::new(7);
+    // single-chunk (batch < 64) and serial multi-chunk (batch > 64) shapes
+    for batch in [48usize, 150] {
+        let idxs: Vec<u32> = (0..batch).map(|_| rng.below(train.len()) as u32).collect();
+        // warmup: grows the arena to this batch shape
+        for _ in 0..2 {
+            model.loss_grad_scratch(&params, &train, &idxs, &mut grad, &mut scratch);
+        }
+        let (allocs, bytes) = alloc_during(|| {
+            for _ in 0..10 {
+                model.loss_grad_scratch(&params, &train, &idxs, &mut grad, &mut scratch);
+            }
+        });
+        assert_eq!(
+            allocs, 0,
+            "loss_grad_scratch (batch {batch}): {allocs} allocations / {bytes} bytes in 10 \
+             steady-state calls"
+        );
+    }
+
+    // ---- top-k selection through a reused scratch: only the k-result ----
+    let d = 1 << 16;
+    let mut v = vec![0.0f32; d];
+    Rng::new(9).fill_normal(&mut v, 1.0);
+    let topk = TopK::new(256.0); // k = 256
+    let mut sel_scratch = Scratch::new();
+    let ctx = Ctx { round: 5, worker: 0 };
+    let _ = topk.select_with(ctx, &v, &mut sel_scratch); // warmup: grows iota
+    let (_, bytes_scratch) = alloc_during(|| topk.select_with(ctx, &v, &mut sel_scratch));
+    let (_, bytes_fresh) = alloc_during(|| topk.select(ctx, &v));
+    // fresh path rebuilds the 0..d permutation (>= 4·d bytes); the scratch
+    // path allocates only the sorted k-element result
+    assert!(bytes_fresh >= (d * 4) as u64, "fresh select allocated only {bytes_fresh} bytes");
+    assert!(
+        bytes_scratch < 8 * 1024,
+        "scratch select allocated {bytes_scratch} bytes (expected ~k·4 = 1 KiB)"
+    );
+
+    // ---- central engine step: no dense per-step buffers ----
+    let d = 1 << 15;
+    let n = 4;
+    let init = vec![0.0f32; d];
+    let spec = OptSpec::Cser { rc1: 8.0, rc2: 64.0, h: 4 };
+    let mut opt = spec.build(&init, n, 0.9, 7);
+    let mut grads: Vec<Vec<f32>> = vec![vec![0.0f32; d]; n];
+    let mut grng = Rng::new(4);
+    for g in &mut grads {
+        grng.fill_normal(g, 1.0);
+    }
+    for _ in 0..8 {
+        opt.step(&grads, 0.01); // warmup: thread scratch, engine buffers
+    }
+    let steps = 8; // two full H-cycles: sync and non-sync steps both counted
+    let (_, bytes) = alloc_during(|| {
+        for _ in 0..steps {
+            opt.step(&grads, 0.01);
+        }
+    });
+    let per_step = bytes / steps;
+    assert!(
+        per_step < (d as u64) * 4 / 8,
+        "engine step allocates {per_step} bytes/step — a dense O(d) buffer ({} bytes) is \
+         being rebuilt per step",
+        d * 4
+    );
+}
