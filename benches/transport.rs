@@ -196,4 +196,60 @@ fn main() {
         wire::decode(&c, ctx, &msg, &mut out).expect("valid frame");
         black_box(&out);
     });
+
+    // ---- bucketed pipeline over TCP: socket payload bits ≡ accounting ----
+    // One pipelined psync round per rank with two buckets in flight; the
+    // per-bucket wire costs, summed, must equal the payload bits actually
+    // counted at the sockets (the single vectored header+payload write per
+    // frame moves exactly the accounted payload).
+    {
+        use cser::collective::SyncBuckets;
+        use cser::transport::{pipelined_sync, BucketPipeline};
+        let kb = 8usize;
+        let buckets = SyncBuckets::even(d, kb);
+        let addr = free_loopback_addr().expect("loopback port");
+        let outs: Vec<(u64, u64)> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..n)
+                .map(|rank| {
+                    let addr = addr.clone();
+                    let buckets = buckets.clone();
+                    let v0 = base[rank].clone();
+                    s.spawn(move || {
+                        let c: Arc<dyn Compressor> = Arc::new(Grbs::new(16.0, d / 1024 / kb, 5));
+                        let mut tp = TcpTransport::connect(&addr, rank, n).expect("tcp join");
+                        let mut pipe = BucketPipeline::new();
+                        let mut v = v0;
+                        let info = pipelined_sync(
+                            &mut pipe,
+                            &mut tp,
+                            peer::Mode::Psync,
+                            &mut v,
+                            None,
+                            &c,
+                            7,
+                            &buckets,
+                        )
+                        .expect("pipelined tcp psync");
+                        let wire_total: u64 = info
+                            .parts()
+                            .iter()
+                            .map(|p| {
+                                let w = p.2.wire.expect("tcp measures traffic");
+                                w.up_bits + w.down_bits
+                            })
+                            .sum();
+                        (wire_total, tp.payload_bits_sent)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("pipelined tcp worker")).collect()
+        });
+        for (i, (wire_total, sent)) in outs.iter().enumerate() {
+            assert_eq!(
+                wire_total, sent,
+                "worker {i}: pipelined socket payload bits != per-bucket accounting"
+            );
+        }
+        println!("pipelined tcp check: per-bucket wire sums == socket payload bits ✓");
+    }
 }

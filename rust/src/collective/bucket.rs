@@ -1,0 +1,203 @@
+//! Gradient buckets: the schedule and bookkeeping shared by every bucketed
+//! synchronization path.
+//!
+//! A [`SyncBuckets`] partitions the flat model into K contiguous buckets
+//! (layer-boundary-aware bounds come from `models::ParamLayout`; the types
+//! are decoupled so the collective layer stays model-agnostic).  Each bucket
+//! runs the *whole* collective protocol independently — its own selection,
+//! its own wire frames, its own residual bookkeeping — under a per-bucket
+//! sub-round ([`SyncBuckets::sub_round`]) that (a) decorrelates the random
+//! draws of globally-seeded compressors across buckets and (b) tags every
+//! wire frame with the bucket it belongs to, so two buckets can be in
+//! flight on one link and a desynchronized stream still fails validation.
+//!
+//! **Selection semantics (documented contract):** compressors are applied
+//! *per bucket*, so ratio-R compressors hold their ratio per bucket rather
+//! than globally — TopK keeps the top `len_b/R` of each bucket instead of a
+//! global top `d/R` (blockwise semantics, as in dist-EF-SGDM), and GRBS
+//! draws `B/R` of its `B` blocks inside each bucket.  This is a different —
+//! deliberately different — compressor than the whole-vector one; the
+//! bucketed *pipelined* path is pinned bit-identical (PS/dense) to the
+//! bucketed *sequential* path, not to the whole-vector path.
+//!
+//! **Accounting (bucket-sum invariance):** per-bucket accounted bits are
+//! the exact per-bucket wire messages, so the step total is their sum.
+//! For `SharedSupport` layouts (GRBS — zero index metadata) the sum equals
+//! the whole-vector accounting of the union selection exactly: value bits
+//! are 32·count either way.  Index-carrying layouts ship *narrower*
+//! per-bucket indices (`ceil(log2 len_b)` vs `ceil(log2 d)` bits), so
+//! bucketing strictly reduces their metadata cost — accounted ≡ encoded
+//! still holds per bucket, which is the invariant every harness prices.
+
+use super::PsyncRound;
+
+/// Multiplier mixing the bucket index into the logical round for per-bucket
+/// sub-rounds.  Bounds the bucket count; far above any sane K (buckets are
+/// meant to be a handful to a few dozen).
+const ROUND_STRIDE: u64 = 1 << 16;
+
+/// A bucket partition of `[0, d)`: `bounds` strictly increasing, `0 ..= d`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SyncBuckets {
+    bounds: Vec<usize>,
+}
+
+impl SyncBuckets {
+    /// Wrap precomputed bounds (e.g. `ParamLayout::bucket_bounds`).
+    pub fn from_bounds(bounds: Vec<usize>) -> Self {
+        assert!(bounds.len() >= 2, "need at least one bucket");
+        assert_eq!(bounds[0], 0, "bounds must start at 0");
+        assert!(bounds.windows(2).all(|w| w[0] < w[1]), "bounds must strictly increase");
+        assert!(
+            ((bounds.len() - 1) as u64) < ROUND_STRIDE,
+            "bucket count must stay below {ROUND_STRIDE}"
+        );
+        SyncBuckets { bounds }
+    }
+
+    /// Even partition of `[0, d)` into `k` buckets (no layout information).
+    pub fn even(d: usize, k: usize) -> Self {
+        let k = k.max(1).min(d);
+        let mut bounds: Vec<usize> = (0..=k).map(|i| i * d / k).collect();
+        bounds.dedup();
+        Self::from_bounds(bounds)
+    }
+
+    /// Flat dimension covered.
+    pub fn dim(&self) -> usize {
+        *self.bounds.last().unwrap()
+    }
+
+    /// Number of buckets K.
+    pub fn k(&self) -> usize {
+        self.bounds.len() - 1
+    }
+
+    /// Bucket `b` as `(start, end)`.
+    pub fn range(&self, b: usize) -> (usize, usize) {
+        (self.bounds[b], self.bounds[b + 1])
+    }
+
+    /// The per-bucket sub-round: seeds bucket `b`'s selection draw and tags
+    /// its wire frames.  Injective in `b` for a fixed `t`; collisions with
+    /// *other* steps' sub-rounds are possible after 2^48 steps and only
+    /// weaken desync detection, never correctness (frames are FIFO per
+    /// link).
+    pub fn sub_round(&self, t: u64, b: usize) -> u64 {
+        t.wrapping_mul(ROUND_STRIDE).wrapping_add(b as u64 + 1)
+    }
+}
+
+/// What one (possibly bucketed) synchronization did: per-part
+/// [`PsyncRound`]s with their global offsets, plus the merged accounting.
+/// A whole-vector collective is the single-part case, so optimizer code
+/// consumes one type for both paths.
+#[derive(Debug, Clone)]
+pub struct SyncInfo {
+    /// Accounted upload bits per worker, summed over parts.
+    pub upload_bits_per_worker: u64,
+    /// True iff every part was AllReduce-compatible.
+    pub allreduce_compatible: bool,
+    parts: Vec<(usize, usize, PsyncRound)>,
+}
+
+impl SyncInfo {
+    pub fn new() -> Self {
+        SyncInfo { upload_bits_per_worker: 0, allreduce_compatible: true, parts: Vec::new() }
+    }
+
+    /// Wrap a whole-vector round covering `[0, d)`.
+    pub fn whole(d: usize, round: PsyncRound) -> Self {
+        let mut info = SyncInfo::new();
+        info.push(0, d, round);
+        info
+    }
+
+    /// Append bucket `[start, end)`'s round (buckets pushed in order).
+    pub fn push(&mut self, start: usize, end: usize, round: PsyncRound) {
+        self.upload_bits_per_worker += round.upload_bits_per_worker;
+        self.allreduce_compatible &= round.allreduce_compatible;
+        self.parts.push((start, end, round));
+    }
+
+    /// The parts in bucket order: `(start, end, round)`.
+    pub fn parts(&self) -> &[(usize, usize, PsyncRound)] {
+        &self.parts
+    }
+
+    /// Visit the complement of `worker`'s selection across all parts, as
+    /// global `(start, end)` coordinate ranges.
+    pub fn for_each_unselected<F: FnMut(usize, usize)>(&self, worker: usize, mut f: F) {
+        for (s0, e0, round) in &self.parts {
+            round.for_each_unselected(worker, e0 - s0, |s, e| f(s0 + s, s0 + e));
+        }
+    }
+}
+
+impl Default for SyncInfo {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressor::Selection;
+
+    fn round_with(sel: Selection, bits: u64, ar: bool) -> PsyncRound {
+        PsyncRound {
+            selections: vec![sel],
+            upload_bits_per_worker: bits,
+            allreduce_compatible: ar,
+            wire: None,
+        }
+    }
+
+    #[test]
+    fn even_buckets_cover_and_balance() {
+        let b = SyncBuckets::even(100, 3);
+        assert_eq!(b.k(), 3);
+        assert_eq!(b.range(0), (0, 33));
+        assert_eq!(b.range(2), (66, 100));
+        // k > d degenerates to d unit buckets
+        assert_eq!(SyncBuckets::even(4, 100).k(), 4);
+    }
+
+    #[test]
+    fn sub_rounds_are_distinct_within_a_step() {
+        let b = SyncBuckets::even(64, 4);
+        let rounds: Vec<u64> = (0..4).map(|i| b.sub_round(7, i)).collect();
+        for (i, r) in rounds.iter().enumerate() {
+            assert!(rounds[..i].iter().all(|o| o != r), "duplicate sub-round");
+            assert_ne!(*r, 7, "sub-round collides with the bare step round");
+        }
+    }
+
+    #[test]
+    fn sync_info_merges_bits_and_offsets_complements() {
+        let mut info = SyncInfo::new();
+        // bucket [0, 8): blocks of 4, block 0 selected -> complement [4, 8)
+        info.push(0, 8, round_with(Selection::Blocks { block_size: 4, blocks: vec![0] }, 128, true));
+        // bucket [8, 14): nothing selected -> complement [8, 14)
+        info.push(8, 14, round_with(Selection::Nothing, 0, true));
+        assert_eq!(info.upload_bits_per_worker, 128);
+        assert!(info.allreduce_compatible);
+        let mut got = vec![];
+        info.for_each_unselected(0, |s, e| got.push((s, e)));
+        assert_eq!(got, vec![(4, 8), (8, 14)]);
+        // one non-allreduce part poisons the flag
+        info.push(14, 16, round_with(Selection::All, 64, false));
+        assert!(!info.allreduce_compatible);
+    }
+
+    #[test]
+    fn whole_wraps_single_part() {
+        let info = SyncInfo::whole(10, round_with(Selection::All, 320, true));
+        assert_eq!(info.parts().len(), 1);
+        assert_eq!(info.upload_bits_per_worker, 320);
+        let mut got = vec![];
+        info.for_each_unselected(0, |s, e| got.push((s, e)));
+        assert!(got.is_empty());
+    }
+}

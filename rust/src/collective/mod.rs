@@ -2,7 +2,9 @@
 //! primitives/wire-cost models underneath it.
 
 pub mod allreduce;
+pub mod bucket;
 pub mod psync;
 
 pub use allreduce::{allreduce_mean, param_server_cost, ring_allreduce_cost, WireCost};
+pub use bucket::{SyncBuckets, SyncInfo};
 pub use psync::{exchange_mean, exchange_mean_with, psync, psync_with, PsyncRound};

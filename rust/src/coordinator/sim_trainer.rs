@@ -58,6 +58,13 @@ pub struct TrainCfg {
     /// the exact optimizer state; shard sampling and the run record restart
     /// (see `train_classifier_tcp`).
     pub ckpt: Option<std::path::PathBuf>,
+    /// Gradient-bucket count for the synchronization pipeline (0 or 1 =
+    /// whole-vector sync, the historical path).  With K > 1 and an
+    /// engine-backed optimizer, every collective runs per bucket — bucket
+    /// bounds come from the model's `param_layout()` (layer-aware), and the
+    /// resident/TCP modes overlap each bucket's compression with the
+    /// previous bucket's exchange (`engine::SyncPipeline`).
+    pub buckets: usize,
 }
 
 impl TrainCfg {
@@ -75,6 +82,7 @@ impl TrainCfg {
             divergence_factor: 5.0,
             backend: Backend::default(),
             ckpt: None,
+            buckets: 0,
         }
     }
 }
@@ -134,6 +142,13 @@ pub fn train_classifier(
     opt: &mut dyn DistOptimizer,
     cfg: &TrainCfg,
 ) -> RunRecord {
+    if cfg.buckets > 1 {
+        let engine = opt
+            .as_engine()
+            .expect("cfg.buckets requires an engine-backed optimizer (all built-ins are)");
+        let bounds = model.param_layout().bucket_bounds(cfg.buckets);
+        engine.set_bucketing(Some(crate::engine::SyncBuckets::from_bounds(bounds)));
+    }
     if let Backend::Tcp { bind, peers, rank } = &cfg.backend {
         let (bind, peers, rank) = (bind.clone(), *peers, *rank);
         let engine = opt.as_engine().expect("Backend::Tcp requires an engine optimizer");
@@ -602,6 +617,47 @@ mod tests {
         let b_res = rec_res.points.last().unwrap().cum_bits;
         let ratio = b_res / b_central;
         assert!((0.5..2.0).contains(&ratio), "bit accounting drifted: {ratio}");
+    }
+
+    #[test]
+    fn bucketed_pipeline_trains_like_whole_vector() {
+        // Bucketing changes the compressor schedule (per-bucket ratios), so
+        // trajectories differ from the whole-vector run — but training must
+        // land in the same accuracy band, and the central-bucketed and
+        // resident-pipelined runs of the *same* schedule must account the
+        // identical number of bits.
+        let (tr, te) = ClassDataset::gaussian_mixture(10, 16, 1024, 256, 1.2, 0.8, 0.0, 11);
+        let m = Mlp::new(16, 32, 10);
+        let init = m.init(6);
+        let spec = OptSpec::Cser { rc1: 2.0, rc2: 4.0, h: 2 };
+        let mut cfg = quick_cfg(4, 0.1, 11);
+        let mut opt = spec.build(&init, 4, 0.9, 11);
+        let acc_whole = train_classifier(&m, &tr, &te, opt.as_mut(), &cfg).final_acc();
+        cfg.buckets = 3;
+        let mut opt = spec.build(&init, 4, 0.9, 11);
+        let rec_bucketed = train_classifier(&m, &tr, &te, opt.as_mut(), &cfg);
+        assert!(!rec_bucketed.diverged);
+        assert!(
+            (acc_whole - rec_bucketed.final_acc()).abs() < 0.10,
+            "whole {acc_whole} vs bucketed {}",
+            rec_bucketed.final_acc()
+        );
+        cfg.backend = crate::transport::Backend::Resident;
+        let mut opt = spec.build(&init, 4, 0.9, 11);
+        let rec_res = train_classifier(&m, &tr, &te, opt.as_mut(), &cfg);
+        assert!(!rec_res.diverged);
+        assert!(
+            (rec_bucketed.final_acc() - rec_res.final_acc()).abs() < 0.06,
+            "central-bucketed {} vs resident-pipelined {}",
+            rec_bucketed.final_acc(),
+            rec_res.final_acc()
+        );
+        // Accounting is pipeline-invariant: same schedule, same bits.
+        assert_eq!(
+            rec_bucketed.points.last().unwrap().cum_bits,
+            rec_res.points.last().unwrap().cum_bits,
+            "bucketed accounting drifted between central and resident"
+        );
     }
 
     #[test]

@@ -36,18 +36,20 @@
 //! The legacy structs (`optimizer::{Cser, CserImpl2, EfSgd, QsparseLocalSgd,
 //! FullSgd}`) survive as thin deprecated wrappers over this engine.
 
+pub mod pipeline;
 pub mod plan;
 pub mod worker;
 
+pub use pipeline::{SyncBuckets, SyncInfo, SyncPipeline};
 pub use plan::{CommPlan, RoundRule, StepRule};
 pub use worker::{descent_into, WorkerState};
 
-use crate::compressor::{Ctx, Selection};
+use crate::compressor::{Compressor, Ctx, Selection};
 use crate::kernel::{dense as math, fused, Scratch};
 use crate::optimizer::{DistOptimizer, RoundStats};
 use crate::transport::mesh::channel_mesh;
 use crate::transport::peer::{self, PeerTransport, TransportError};
-use crate::transport::Collective;
+use crate::transport::{BucketPipeline, Collective};
 use std::sync::Arc;
 use worker::{put_field, take_field};
 
@@ -83,6 +85,11 @@ pub struct ErrorResetEngine {
     coll: Arc<dyn Collective>,
     /// Central-mode scratch for the dense gradient mean (`DenseAverage`).
     gbar: Vec<f32>,
+    /// Bucketed synchronization (None = the historical whole-vector path).
+    /// Central mode stages buckets through this sequentially; the
+    /// resident/TCP drivers clone its schedule and overlap buckets via a
+    /// per-worker `transport::BucketPipeline`.
+    pipeline: Option<SyncPipeline>,
 }
 
 impl ErrorResetEngine {
@@ -118,7 +125,30 @@ impl ErrorResetEngine {
             workers,
             coll: crate::transport::default_collective(),
             gbar,
+            pipeline: None,
         }
+    }
+
+    /// Enable (or disable, with `None`) bucketed synchronization.  Every
+    /// data-plane collective then runs per bucket under per-bucket
+    /// sub-rounds — sequentially in central mode, overlapped
+    /// (compression ∥ exchange) in the resident/TCP modes.  Dense-average
+    /// SGD is exempt (nothing to compress, bucketing would only add frame
+    /// headers).  Selection semantics change deliberately: ratios hold per
+    /// bucket (see `collective::bucket`), so a bucketed engine is a
+    /// different — pipelineable — compressor schedule, pinned
+    /// pipelined ≡ sequential rather than bucketed ≡ whole-vector.
+    pub fn set_bucketing(&mut self, buckets: Option<SyncBuckets>) {
+        if let Some(b) = &buckets {
+            assert_eq!(b.dim(), self.d, "bucket bounds must cover the model dimension");
+        }
+        let n = self.workers.len();
+        self.pipeline = buckets.map(|b| SyncPipeline::new(b, n));
+    }
+
+    /// The active bucket schedule, when bucketing is enabled.
+    pub fn bucketing(&self) -> Option<&SyncBuckets> {
+        self.pipeline.as_ref().map(|p| p.buckets())
     }
 
     /// The active schedule (read-only; useful for harness introspection).
@@ -249,14 +279,16 @@ impl ErrorResetEngine {
         let plan = &self.plan;
         let beta = self.beta;
         let t0 = self.t;
+        let buckets = self.pipeline.as_ref().map(|p| p.buckets().clone());
         let mut per_worker: Vec<(u64, Vec<StepReport>)> = Vec::with_capacity(n);
         let mesh = channel_mesh(n);
         std::thread::scope(|s| {
             let mut handles = Vec::with_capacity(n);
             for (w, mut tp) in self.workers.iter_mut().zip(mesh) {
+                let bk = buckets.clone();
                 handles.push(s.spawn(move || {
                     let wid = w.id;
-                    drive_worker(plan, beta, &mut tp, w, t0, steps, eta, stop_loss, d, grad)
+                    drive_worker(plan, beta, &mut tp, w, t0, steps, eta, stop_loss, d, grad, bk)
                         .unwrap_or_else(|e| panic!("resident worker {wid}: {e}"))
                 }));
             }
@@ -299,10 +331,22 @@ impl ErrorResetEngine {
             1,
             "a distributed engine holds exactly the local rank's worker (build with n = 1)"
         );
+        let buckets = self.pipeline.as_ref().map(|p| p.buckets().clone());
         let w = &mut self.workers[0];
         w.id = tp.rank();
-        let (t, reports) =
-            drive_worker(&self.plan, self.beta, tp, w, self.t, steps, eta, stop_loss, self.d, grad)?;
+        let (t, reports) = drive_worker(
+            &self.plan,
+            self.beta,
+            tp,
+            w,
+            self.t,
+            steps,
+            eta,
+            stop_loss,
+            self.d,
+            grad,
+            buckets,
+        )?;
         self.t = t;
         Ok(reports)
     }
@@ -327,14 +371,11 @@ fn qsparse_apply(w: &mut WorkerState) {
 /// CSER gradient-path apply: x −= p′, and (impl. I) fold the residual into e
 /// — from the complement ranges on the global fast path, from the dense
 /// residual buffer otherwise (where the model apply and the error fold fuse
-/// into a single traversal of x/p/e/r).
-fn cser_apply_grad(
-    w: &mut WorkerState,
-    round: &crate::collective::PsyncRound,
-    track: bool,
-    global: bool,
-    d: usize,
-) {
+/// into a single traversal of x/p/e/r).  `info` carries one round per
+/// bucket (one whole-vector round when bucketing is off), so the
+/// complement walk covers every bucket's unselected ranges in global
+/// coordinates.
+fn cser_apply_grad(w: &mut WorkerState, info: &SyncInfo, track: bool, global: bool) {
     if track && !global {
         fused::apply_sub_pair(&mut w.x, &w.p, &mut w.e, &w.r);
         return;
@@ -342,25 +383,157 @@ fn cser_apply_grad(
     fused::sub_assign(&mut w.x, &w.p);
     if track {
         let (p_i, e_i) = (&w.p, &mut w.e);
-        round.for_each_unselected(w.id, d, |s, e2| {
+        info.for_each_unselected(w.id, |s, e2| {
             math::axpy(-1.0, &p_i[s..e2], &mut e_i[s..e2]);
         });
     }
 }
 
-/// Global-C1 reset, before PSync: x −= e on the shared support.
-fn cser_reset_pre_global(w: &mut WorkerState, sel: &Selection, d: usize) {
-    let (x_i, e_i) = (&mut w.x, &w.e);
-    sel.for_each_range(d, |s, e2| math::axpy(-1.0, &e_i[s..e2], &mut x_i[s..e2]));
+/// Global-C1 reset on bucket `[s0, e0)`, before PSync: x −= e on the
+/// bucket's shared support (`sel` is in bucket-local coordinates).
+fn cser_reset_pre_global_at(w: &mut WorkerState, sel: &Selection, s0: usize, e0: usize) {
+    let x_i = &mut w.x[s0..e0];
+    let e_i = &w.e[s0..e0];
+    sel.for_each_range(e0 - s0, |s, e2| math::axpy(-1.0, &e_i[s..e2], &mut x_i[s..e2]));
 }
 
-/// Global-C1 reset, after PSync: x += e′ on the support, which then resets.
-fn cser_reset_post_global(w: &mut WorkerState, sel: &Selection, d: usize) {
-    let (x_i, e_i) = (&mut w.x, &mut w.e);
-    sel.for_each_range(d, |s, e2| {
+/// Global-C1 reset on bucket `[s0, e0)`, after PSync: x += e′ on the
+/// support, which then resets.
+fn cser_reset_post_global_at(w: &mut WorkerState, sel: &Selection, s0: usize, e0: usize) {
+    let x_i = &mut w.x[s0..e0];
+    let e_i = &mut w.e[s0..e0];
+    sel.for_each_range(e0 - s0, |s, e2| {
         math::axpy(1.0, &e_i[s..e2], &mut x_i[s..e2]);
         math::fill(&mut e_i[s..e2], 0.0);
     });
+}
+
+/// Global-C1 reset, before PSync (whole-vector form).
+fn cser_reset_pre_global(w: &mut WorkerState, sel: &Selection, d: usize) {
+    cser_reset_pre_global_at(w, sel, 0, d);
+}
+
+/// Global-C1 reset, after PSync (whole-vector form).
+fn cser_reset_post_global(w: &mut WorkerState, sel: &Selection, d: usize) {
+    cser_reset_post_global_at(w, sel, 0, d);
+}
+
+// The bucketed global-C1 choreography is shared verbatim by the central and
+// peer drivers (the parity contract lives in this sharing): derive every
+// bucket's shared support, pre-reset, sync, assert, post-reset.  `e` is
+// untouched between derivation and the sync, so deriving all supports up
+// front equals the interleaved order element-for-element.
+
+/// Bucket b's shared support for a globally-synchronized C1, from
+/// `e[s0..e0]` under its sub-round — identical on every worker.
+fn bucket_global_sels(
+    c1: &Arc<dyn Compressor>,
+    buckets: &SyncBuckets,
+    t: u64,
+    e: &[f32],
+    scratch: &mut Scratch,
+) -> Vec<Selection> {
+    (0..buckets.k())
+        .map(|b| {
+            let (s0, e0) = buckets.range(b);
+            c1.select_with(Ctx { round: buckets.sub_round(t, b), worker: 0 }, &e[s0..e0], scratch)
+        })
+        .collect()
+}
+
+/// Global-C1 pre-reset (x −= e on support) on every bucket of one worker.
+fn reset_pre_global_buckets(w: &mut WorkerState, sels: &[Selection], buckets: &SyncBuckets) {
+    for (b, sel) in sels.iter().enumerate() {
+        let (s0, e0) = buckets.range(b);
+        cser_reset_pre_global_at(w, sel, s0, e0);
+    }
+}
+
+/// Global-C1 post-reset (x += e′; e ← 0 on support) on every bucket.
+fn reset_post_global_buckets(w: &mut WorkerState, sels: &[Selection], buckets: &SyncBuckets) {
+    for (b, sel) in sels.iter().enumerate() {
+        let (s0, e0) = buckets.range(b);
+        cser_reset_post_global_at(w, sel, s0, e0);
+    }
+}
+
+/// The synced per-bucket selections must equal the locally-derived ones.
+fn debug_assert_bucket_sels(info: &SyncInfo, sels: &[Selection]) {
+    for (part, sel) in info.parts().iter().zip(sels) {
+        debug_assert_eq!(part.2.selections[0], *sel);
+    }
+}
+
+/// Route one central-mode collective: bucketed through the [`SyncPipeline`]
+/// when one is installed, the historical whole-vector call otherwise.
+#[allow(clippy::too_many_arguments)]
+fn central_sync(
+    coll: &Arc<dyn Collective>,
+    pipeline: &mut Option<SyncPipeline>,
+    exchange: bool,
+    vs: &mut [Vec<f32>],
+    rs: Option<&mut [Vec<f32>]>,
+    c: &Arc<dyn Compressor>,
+    t: u64,
+    d: usize,
+) -> SyncInfo {
+    match pipeline.as_mut() {
+        Some(p) => p.central_sync(coll.as_ref(), exchange, vs, rs, c, t),
+        None => {
+            let round = if exchange {
+                coll.exchange_mean(vs, rs, c, t)
+            } else {
+                coll.psync(vs, rs, c, t)
+            };
+            SyncInfo::whole(d, round)
+        }
+    }
+}
+
+/// Per-worker peer-mode pipeline state: the bucket schedule plus this
+/// worker's prepare thread (owned for the whole run — no per-round
+/// spawns).
+pub(crate) struct PipelineCtx {
+    buckets: SyncBuckets,
+    pipe: BucketPipeline,
+}
+
+impl PipelineCtx {
+    fn new(buckets: SyncBuckets) -> Self {
+        PipelineCtx { buckets, pipe: BucketPipeline::new() }
+    }
+}
+
+/// Route one peer-mode collective: overlapped bucketed when a
+/// [`PipelineCtx`] is live, the historical whole-vector call otherwise.
+#[allow(clippy::too_many_arguments)]
+fn peer_sync(
+    tp: &mut dyn PeerTransport,
+    pipe: &mut Option<PipelineCtx>,
+    mode: peer::Mode,
+    v: &mut Vec<f32>,
+    resid: Option<&mut Vec<f32>>,
+    c: &Arc<dyn Compressor>,
+    t: u64,
+    scratch: &mut Scratch,
+) -> Result<SyncInfo, TransportError> {
+    let d = v.len();
+    match pipe.as_mut() {
+        Some(ctx) => crate::transport::pipelined_sync(
+            &mut ctx.pipe,
+            tp,
+            mode,
+            v,
+            resid.map(|r| r.as_mut_slice()),
+            c,
+            t,
+            &ctx.buckets,
+        ),
+        None => {
+            let round = peer::run(tp, mode, v, resid, c.as_ref(), t, scratch)?;
+            Ok(SyncInfo::whole(d, round))
+        }
+    }
 }
 
 /// General-path reset, after PSync: x += e′ − e_half (one fused traversal);
@@ -370,10 +543,16 @@ fn cser_reset_post_general(w: &mut WorkerState) {
     std::mem::swap(&mut w.e, &mut w.r);
 }
 
-impl DistOptimizer for ErrorResetEngine {
-    fn step(&mut self, grads: &[Vec<f32>], eta: f32) -> RoundStats {
-        debug_assert_eq!(grads.len(), self.workers.len());
-        self.t += 1;
+impl ErrorResetEngine {
+    /// The central step body.  `pipeline` is taken out of `self` by the
+    /// [`DistOptimizer::step`] wrapper so bucketed dispatch can borrow it
+    /// alongside the worker state (and early returns can't lose it).
+    fn step_inner(
+        &mut self,
+        grads: &[Vec<f32>],
+        eta: f32,
+        pipeline: &mut Option<SyncPipeline>,
+    ) -> RoundStats {
         let t = self.t;
         let d = self.d;
         let beta = self.beta;
@@ -408,16 +587,17 @@ impl DistOptimizer for ErrorResetEngine {
                 }
                 let mut qs = take_field(&mut self.workers, |w| &mut w.p);
                 let mut es = take_field(&mut self.workers, |w| &mut w.e);
-                let round = self.coll.exchange_mean(&mut qs, Some(&mut es), c, t);
+                let info =
+                    central_sync(&self.coll, pipeline, true, &mut qs, Some(&mut es), c, t, d);
                 put_field(&mut self.workers, qs, |w| &mut w.p);
                 put_field(&mut self.workers, es, |w| &mut w.e);
                 for w in self.workers.iter_mut() {
                     fused::sub_assign(&mut w.x, &w.p);
                 }
                 RoundStats {
-                    grad_bits: round.upload_bits_per_worker,
+                    grad_bits: info.upload_bits_per_worker,
                     model_bits: 0,
-                    grad_allreduce: round.allreduce_compatible,
+                    grad_allreduce: info.allreduce_compatible,
                     model_allreduce: true,
                     synced: true,
                 }
@@ -434,7 +614,8 @@ impl DistOptimizer for ErrorResetEngine {
                 }
                 let mut qs = take_field(&mut self.workers, |w| &mut w.p);
                 let mut es = take_field(&mut self.workers, |w| &mut w.e);
-                let round = self.coll.exchange_mean(&mut qs, Some(&mut es), c1, t);
+                let info =
+                    central_sync(&self.coll, pipeline, true, &mut qs, Some(&mut es), c1, t, d);
                 put_field(&mut self.workers, qs, |w| &mut w.p);
                 put_field(&mut self.workers, es, |w| &mut w.e);
                 for w in self.workers.iter_mut() {
@@ -442,9 +623,9 @@ impl DistOptimizer for ErrorResetEngine {
                 }
                 RoundStats {
                     grad_bits: 0,
-                    model_bits: round.upload_bits_per_worker,
+                    model_bits: info.upload_bits_per_worker,
                     grad_allreduce: true,
-                    model_allreduce: round.allreduce_compatible,
+                    model_allreduce: info.allreduce_compatible,
                     synced: true,
                 }
             }
@@ -456,38 +637,65 @@ impl DistOptimizer for ErrorResetEngine {
                 let mut stats = RoundStats::default();
                 let global = c2.globally_synchronized();
                 let mut ps = take_field(&mut self.workers, |w| &mut w.p);
-                let round = if global || !track {
-                    self.coll.psync(&mut ps, None, c2, t)
+                let info = if global || !track {
+                    central_sync(&self.coll, pipeline, false, &mut ps, None, c2, t, d)
                 } else {
                     let mut rs = take_field(&mut self.workers, |w| &mut w.r);
-                    let round = self.coll.psync(&mut ps, Some(&mut rs), c2, t);
+                    let info =
+                        central_sync(&self.coll, pipeline, false, &mut ps, Some(&mut rs), c2, t, d);
                     put_field(&mut self.workers, rs, |w| &mut w.r);
-                    round
+                    info
                 };
                 put_field(&mut self.workers, ps, |w| &mut w.p);
-                stats.grad_bits = round.upload_bits_per_worker;
-                stats.grad_allreduce = round.allreduce_compatible;
+                stats.grad_bits = info.upload_bits_per_worker;
+                stats.grad_allreduce = info.allreduce_compatible;
                 for w in self.workers.iter_mut() {
-                    cser_apply_grad(w, &round, track, global, d);
+                    cser_apply_grad(w, &info, track, global);
                 }
                 match round_rule {
                     RoundRule::ErrorSync { c1, h } if t % *h == 0 => {
                         stats.synced = true;
                         if c1.globally_synchronized() {
-                            let sel = crate::kernel::with_thread_scratch(|s| {
-                                c1.select_with(Ctx { round: t, worker: 0 }, &self.workers[0].e, s)
-                            });
-                            for w in self.workers.iter_mut() {
-                                cser_reset_pre_global(w, &sel, d);
-                            }
-                            let mut es = take_field(&mut self.workers, |w| &mut w.e);
-                            let round = self.coll.psync(&mut es, None, c1, t);
-                            debug_assert_eq!(round.selections[0], sel);
-                            put_field(&mut self.workers, es, |w| &mut w.e);
-                            stats.model_bits = round.upload_bits_per_worker;
-                            stats.model_allreduce = true;
-                            for w in self.workers.iter_mut() {
-                                cser_reset_post_global(w, &sel, d);
+                            match pipeline.as_mut() {
+                                None => {
+                                    let sel = crate::kernel::with_thread_scratch(|s| {
+                                        c1.select_with(
+                                            Ctx { round: t, worker: 0 },
+                                            &self.workers[0].e,
+                                            s,
+                                        )
+                                    });
+                                    for w in self.workers.iter_mut() {
+                                        cser_reset_pre_global(w, &sel, d);
+                                    }
+                                    let mut es = take_field(&mut self.workers, |w| &mut w.e);
+                                    let round = self.coll.psync(&mut es, None, c1, t);
+                                    debug_assert_eq!(round.selections[0], sel);
+                                    put_field(&mut self.workers, es, |w| &mut w.e);
+                                    stats.model_bits = round.upload_bits_per_worker;
+                                    stats.model_allreduce = true;
+                                    for w in self.workers.iter_mut() {
+                                        cser_reset_post_global(w, &sel, d);
+                                    }
+                                }
+                                Some(p) => {
+                                    let sels = crate::kernel::with_thread_scratch(|s| {
+                                        bucket_global_sels(c1, p.buckets(), t, &self.workers[0].e, s)
+                                    });
+                                    for w in self.workers.iter_mut() {
+                                        reset_pre_global_buckets(w, &sels, p.buckets());
+                                    }
+                                    let mut es = take_field(&mut self.workers, |w| &mut w.e);
+                                    let info =
+                                        p.central_sync(self.coll.as_ref(), false, &mut es, None, c1, t);
+                                    put_field(&mut self.workers, es, |w| &mut w.e);
+                                    debug_assert_bucket_sels(&info, &sels);
+                                    stats.model_bits = info.upload_bits_per_worker;
+                                    stats.model_allreduce = true;
+                                    for w in self.workers.iter_mut() {
+                                        reset_post_global_buckets(w, &sels, p.buckets());
+                                    }
+                                }
                             }
                         } else {
                             for w in self.workers.iter_mut() {
@@ -495,11 +703,20 @@ impl DistOptimizer for ErrorResetEngine {
                             }
                             let mut es = take_field(&mut self.workers, |w| &mut w.e);
                             let mut rs = take_field(&mut self.workers, |w| &mut w.r);
-                            let round = self.coll.psync(&mut es, Some(&mut rs), c1, t);
+                            let info = central_sync(
+                                &self.coll,
+                                pipeline,
+                                false,
+                                &mut es,
+                                Some(&mut rs),
+                                c1,
+                                t,
+                                d,
+                            );
                             put_field(&mut self.workers, es, |w| &mut w.e);
                             put_field(&mut self.workers, rs, |w| &mut w.r);
-                            stats.model_bits = round.upload_bits_per_worker;
-                            stats.model_allreduce = round.allreduce_compatible;
+                            stats.model_bits = info.upload_bits_per_worker;
+                            stats.model_allreduce = info.allreduce_compatible;
                             for w in self.workers.iter_mut() {
                                 cser_reset_post_general(w);
                             }
@@ -507,10 +724,11 @@ impl DistOptimizer for ErrorResetEngine {
                     }
                     RoundRule::ModelSync { c1, h } if t % *h == 0 => {
                         let mut xs = take_field(&mut self.workers, |w| &mut w.x);
-                        let round = self.coll.psync(&mut xs, None, c1, t);
+                        let info =
+                            central_sync(&self.coll, pipeline, false, &mut xs, None, c1, t, d);
                         put_field(&mut self.workers, xs, |w| &mut w.x);
-                        stats.model_bits = round.upload_bits_per_worker;
-                        stats.model_allreduce = round.allreduce_compatible;
+                        stats.model_bits = info.upload_bits_per_worker;
+                        stats.model_allreduce = info.allreduce_compatible;
                         stats.synced = true;
                     }
                     _ => {}
@@ -519,6 +737,19 @@ impl DistOptimizer for ErrorResetEngine {
             }
             _ => unreachable!("inconsistent CommPlan: local descent without a resync rule"),
         }
+    }
+}
+
+impl DistOptimizer for ErrorResetEngine {
+    fn step(&mut self, grads: &[Vec<f32>], eta: f32) -> RoundStats {
+        debug_assert_eq!(grads.len(), self.workers.len());
+        self.t += 1;
+        // Taken out so bucketed dispatch can hold `&mut SyncPipeline`
+        // alongside the worker borrows; restored on every exit path.
+        let mut pipeline = self.pipeline.take();
+        let stats = self.step_inner(grads, eta, &mut pipeline);
+        self.pipeline = pipeline;
+        stats
     }
 
     fn set_collective(&mut self, c: Arc<dyn Collective>) {
@@ -583,16 +814,21 @@ fn drive_worker(
     stop_loss: f64,
     d: usize,
     grad: GradFn,
+    buckets: Option<SyncBuckets>,
 ) -> Result<(u64, Vec<StepReport>), TransportError> {
     if w.g.len() != d {
         w.g = vec![0.0f32; d];
     }
+    // With a bucket schedule, this worker owns a prepare thread for the
+    // whole run: bucket k+1 compresses there while bucket k is on the wire.
+    let mut pipe = buckets.map(PipelineCtx::new);
     let mut t = t0;
     let mut reports = Vec::with_capacity(steps);
     for _ in 0..steps {
         t += 1;
         let loss = grad(w.id, &w.x, &mut w.g) as f64;
-        let (stats, mean_loss, stop) = peer_step(plan, beta, tp, w, t, eta, loss, stop_loss, d)?;
+        let (stats, mean_loss, stop) =
+            peer_step(plan, beta, tp, w, t, eta, loss, stop_loss, d, &mut pipe)?;
         reports.push(StepReport { loss: mean_loss.unwrap_or(loss), stats });
         if stop {
             break;
@@ -616,12 +852,15 @@ fn peer_step(
     loss: f64,
     stop_loss: f64,
     d: usize,
+    pipe: &mut Option<PipelineCtx>,
 ) -> Result<(RoundStats, Option<f64>, bool), TransportError> {
     match (&plan.step, &plan.round) {
         (StepRule::DenseAverage, _) => {
             let (mean_loss, stop) = peer::vote(tp, loss, stop_loss, t)?;
             // dense gradient mean, identical arithmetic to the central
-            // path's `mean_rows` (gather in worker order at rank 0)
+            // path's `mean_rows` (gather in worker order at rank 0).
+            // Never bucketed: there is no compression to overlap, and
+            // bucketing would only add frame headers.
             peer::mean_dense(tp, &mut w.g, t)?;
             fused::descent_apply(beta, &mut w.m, &w.g, eta, &mut w.x, &mut w.p);
             let stats = RoundStats {
@@ -636,15 +875,15 @@ fn peer_step(
         (StepRule::ErrorFeedback { c }, _) => {
             let (mean_loss, stop) = peer::vote(tp, loss, stop_loss, t)?;
             fused::descent_plus_error(beta, &mut w.m, &w.g, &w.e, eta, &mut w.p);
-            let round = {
+            let info = {
                 let (p, e, s) = (&mut w.p, &mut w.e, &mut w.scratch);
-                peer::exchange_mean_with(tp, p, Some(e), c.as_ref(), t, s)?
+                peer_sync(tp, pipe, peer::Mode::Exchange, p, Some(e), c, t, s)?
             };
             fused::sub_assign(&mut w.x, &w.p);
             let stats = RoundStats {
-                grad_bits: round.upload_bits_per_worker,
+                grad_bits: info.upload_bits_per_worker,
                 model_bits: 0,
-                grad_allreduce: round.allreduce_compatible,
+                grad_allreduce: info.allreduce_compatible,
                 model_allreduce: true,
                 synced: true,
             };
@@ -658,16 +897,16 @@ fn peer_step(
             }
             let (mean_loss, stop) = peer::vote(tp, loss, stop_loss, t)?;
             qsparse_prepare(w);
-            let round = {
+            let info = {
                 let (p, e, s) = (&mut w.p, &mut w.e, &mut w.scratch);
-                peer::exchange_mean_with(tp, p, Some(e), c1.as_ref(), t, s)?
+                peer_sync(tp, pipe, peer::Mode::Exchange, p, Some(e), c1, t, s)?
             };
             qsparse_apply(w);
             let stats = RoundStats {
                 grad_bits: 0,
-                model_bits: round.upload_bits_per_worker,
+                model_bits: info.upload_bits_per_worker,
                 grad_allreduce: true,
-                model_allreduce: round.allreduce_compatible,
+                model_allreduce: info.allreduce_compatible,
                 synced: true,
             };
             Ok((stats, Some(mean_loss), stop))
@@ -678,50 +917,78 @@ fn peer_step(
             descent_into(beta, &mut w.m, &w.g, eta, &mut w.p);
             let global = c2.globally_synchronized();
             let mut stats = RoundStats::default();
-            let round = if global || !track {
-                peer::psync_with(tp, &mut w.p, None, c2.as_ref(), t, &mut w.scratch)?
+            let info = if global || !track {
+                let (p, s) = (&mut w.p, &mut w.scratch);
+                peer_sync(tp, pipe, peer::Mode::Psync, p, None, c2, t, s)?
             } else {
-                peer::psync_with(tp, &mut w.p, Some(&mut w.r), c2.as_ref(), t, &mut w.scratch)?
+                let (p, r, s) = (&mut w.p, &mut w.r, &mut w.scratch);
+                peer_sync(tp, pipe, peer::Mode::Psync, p, Some(r), c2, t, s)?
             };
-            stats.grad_bits = round.upload_bits_per_worker;
-            stats.grad_allreduce = round.allreduce_compatible;
-            cser_apply_grad(w, &round, track, global, d);
+            stats.grad_bits = info.upload_bits_per_worker;
+            stats.grad_allreduce = info.allreduce_compatible;
+            cser_apply_grad(w, &info, track, global);
             match round_rule {
                 RoundRule::ErrorSync { c1, h } if t % *h == 0 => {
                     stats.synced = true;
                     if c1.globally_synchronized() {
-                        // a globally-synchronized selection ignores both the
-                        // vector and the worker id, so each worker derives
-                        // the identical shared support locally
-                        let ctx = Ctx { round: t, worker: 0 };
-                        let sel = c1.select_with(ctx, &w.e, &mut w.scratch);
-                        cser_reset_pre_global(w, &sel, d);
-                        let round = {
-                            let (e, s) = (&mut w.e, &mut w.scratch);
-                            peer::psync_with(tp, e, None, c1.as_ref(), t, s)?
-                        };
-                        debug_assert_eq!(round.selections[0], sel);
-                        stats.model_bits = round.upload_bits_per_worker;
-                        stats.model_allreduce = true;
-                        cser_reset_post_global(w, &sel, d);
+                        match pipe.as_mut() {
+                            None => {
+                                // a globally-synchronized selection ignores
+                                // both the vector and the worker id, so each
+                                // worker derives the identical shared
+                                // support locally
+                                let ctx = Ctx { round: t, worker: 0 };
+                                let sel = c1.select_with(ctx, &w.e, &mut w.scratch);
+                                cser_reset_pre_global(w, &sel, d);
+                                let round = {
+                                    let (e, s) = (&mut w.e, &mut w.scratch);
+                                    peer::psync_with(tp, e, None, c1.as_ref(), t, s)?
+                                };
+                                debug_assert_eq!(round.selections[0], sel);
+                                stats.model_bits = round.upload_bits_per_worker;
+                                stats.model_allreduce = true;
+                                cser_reset_post_global(w, &sel, d);
+                            }
+                            Some(ctx) => {
+                                let sels = {
+                                    let (e, s) = (&w.e, &mut w.scratch);
+                                    bucket_global_sels(c1, &ctx.buckets, t, e, s)
+                                };
+                                reset_pre_global_buckets(w, &sels, &ctx.buckets);
+                                let info = crate::transport::pipelined_sync(
+                                    &mut ctx.pipe,
+                                    tp,
+                                    peer::Mode::Psync,
+                                    &mut w.e,
+                                    None,
+                                    c1,
+                                    t,
+                                    &ctx.buckets,
+                                )?;
+                                debug_assert_bucket_sels(&info, &sels);
+                                stats.model_bits = info.upload_bits_per_worker;
+                                stats.model_allreduce = true;
+                                reset_post_global_buckets(w, &sels, &ctx.buckets);
+                            }
+                        }
                     } else {
                         w.e_half.copy_from_slice(&w.e);
-                        let round = {
+                        let info = {
                             let (e, r, s) = (&mut w.e, &mut w.r, &mut w.scratch);
-                            peer::psync_with(tp, e, Some(r), c1.as_ref(), t, s)?
+                            peer_sync(tp, pipe, peer::Mode::Psync, e, Some(r), c1, t, s)?
                         };
-                        stats.model_bits = round.upload_bits_per_worker;
-                        stats.model_allreduce = round.allreduce_compatible;
+                        stats.model_bits = info.upload_bits_per_worker;
+                        stats.model_allreduce = info.allreduce_compatible;
                         cser_reset_post_general(w);
                     }
                 }
                 RoundRule::ModelSync { c1, h } if t % *h == 0 => {
-                    let round = {
+                    let info = {
                         let (x, s) = (&mut w.x, &mut w.scratch);
-                        peer::psync_with(tp, x, None, c1.as_ref(), t, s)?
+                        peer_sync(tp, pipe, peer::Mode::Psync, x, None, c1, t, s)?
                     };
-                    stats.model_bits = round.upload_bits_per_worker;
-                    stats.model_allreduce = round.allreduce_compatible;
+                    stats.model_bits = info.upload_bits_per_worker;
+                    stats.model_allreduce = info.allreduce_compatible;
                     stats.synced = true;
                 }
                 _ => {}
@@ -844,6 +1111,46 @@ mod tests {
                 assert_eq!(s.grad_bits, rep.stats.grad_bits, "{name}");
                 assert_eq!(s.model_bits, rep.stats.model_bits, "{name}");
                 assert_eq!(s.synced, rep.stats.synced, "{name}");
+            }
+        }
+    }
+
+    #[test]
+    fn bucketed_pipeline_matches_central_bucketed_reference() {
+        // The bucket-pipeline tentpole: with the same (deliberately uneven)
+        // bucket schedule installed on both sides, worker-resident
+        // execution — each worker overlapping bucket compression with the
+        // exchange through its prepare thread — must reproduce the central
+        // sequential bucketed loop: bit-identically for PS/dense plans,
+        // within the documented f32 ring tolerance otherwise, with exactly
+        // equal accounting on every step.
+        let (n, d, steps) = (4, 29, 6);
+        let init: Vec<f32> = (0..d).map(|j| (j as f32 * 0.41).sin()).collect();
+        let gf = grad_fn(d);
+        let buckets = SyncBuckets::from_bounds(vec![0, 9, 16, 29]);
+        for (name, exact, mk) in plan_factories() {
+            let mut central = ErrorResetEngine::new(&init, n, 0.9, mk());
+            central.set_bucketing(Some(buckets.clone()));
+            let mut grads = vec![vec![0.0f32; d]; n];
+            let mut central_stats = Vec::with_capacity(steps);
+            for _ in 0..steps {
+                for w in 0..n {
+                    gf(w, central.worker_model(w), &mut grads[w]);
+                }
+                central_stats.push(central.step(&grads, 0.05));
+            }
+            let mut resident = ErrorResetEngine::new(&init, n, 0.9, mk());
+            resident.set_bucketing(Some(buckets.clone()));
+            let reports = resident.run_resident(steps, 0.05, f64::INFINITY, &gf);
+            assert_eq!(reports.len(), steps, "{name}");
+            let models: Vec<Vec<f32>> =
+                (0..n).map(|i| resident.worker_model(i).to_vec()).collect();
+            assert_models_agree(&central, &models, exact, name);
+            // Accounting is pipeline-invariant even where f32 sums are not.
+            for (rep, st) in reports.iter().zip(&central_stats) {
+                assert_eq!(st.grad_bits, rep.stats.grad_bits, "{name}: grad bits");
+                assert_eq!(st.model_bits, rep.stats.model_bits, "{name}: model bits");
+                assert_eq!(st.synced, rep.stats.synced, "{name}: sync cadence");
             }
         }
     }

@@ -1,0 +1,187 @@
+//! Engine-side bucket pipeline: the schedule plus the central-mode
+//! sequential driver.
+//!
+//! The engine runs every data-plane collective either **whole-vector**
+//! (`pipeline = None`, the historical path — bit-for-bit unchanged) or
+//! **bucketed** over a [`SyncBuckets`] schedule.  Bucketed execution has
+//! two drivers:
+//!
+//! * [`SyncPipeline::central_sync`] — the *sequential reference*: the
+//!   central step loop stages each bucket through the installed
+//!   [`Collective`] backend, bucket by bucket, under the per-bucket
+//!   sub-rounds.  This is deliberately simple (one staging copy per
+//!   bucket): it defines the numbers the overlapped path must reproduce.
+//! * `transport::pipeline::pipelined_sync` — the *overlapped* driver used
+//!   by the worker-resident and TCP modes: bucket k+1 compresses on a
+//!   per-worker prepare thread while bucket k is on the wire.  Pinned to
+//!   the sequential reference by `rust/tests/pipeline_parity.rs`
+//!   (bit-identical on PS/dense routes, documented f32 tolerance on the
+//!   ring).
+//!
+//! Both drivers use the same sub-round schedule ([`SyncBuckets::sub_round`])
+//! for selection contexts and wire tags, which is the whole parity
+//! argument: per bucket, each driver runs the identical collective the
+//! whole-vector paths already pin against each other.
+
+pub use crate::collective::bucket::{SyncBuckets, SyncInfo};
+use crate::collective::PsyncRound;
+use crate::compressor::Compressor;
+use crate::transport::Collective;
+use std::sync::Arc;
+
+/// Bucket schedule plus the central-mode staging buffers (n per-worker
+/// bucket-length vectors, grown on first use and reused every round).
+pub struct SyncPipeline {
+    buckets: SyncBuckets,
+    stage: Vec<Vec<f32>>,
+    stage_r: Vec<Vec<f32>>,
+}
+
+impl SyncPipeline {
+    pub fn new(buckets: SyncBuckets, n: usize) -> Self {
+        SyncPipeline {
+            buckets,
+            stage: (0..n).map(|_| Vec::new()).collect(),
+            stage_r: (0..n).map(|_| Vec::new()).collect(),
+        }
+    }
+
+    pub fn buckets(&self) -> &SyncBuckets {
+        &self.buckets
+    }
+
+    /// One bucket of the sequential reference: stage `vs[i][s..e]` through
+    /// `coll`, copy results (and residuals) back.
+    #[allow(clippy::too_many_arguments)]
+    pub fn central_sync_bucket(
+        &mut self,
+        coll: &dyn Collective,
+        exchange: bool,
+        vs: &mut [Vec<f32>],
+        rs: Option<&mut [Vec<f32>]>,
+        c: &Arc<dyn Compressor>,
+        t: u64,
+        b: usize,
+    ) -> PsyncRound {
+        let (s, e) = self.buckets.range(b);
+        let sub = self.buckets.sub_round(t, b);
+        for (st, v) in self.stage.iter_mut().zip(vs.iter()) {
+            st.clear();
+            st.extend_from_slice(&v[s..e]);
+        }
+        let want_r = rs.is_some();
+        let round = if want_r {
+            for r in self.stage_r.iter_mut() {
+                r.clear();
+                r.resize(e - s, 0.0);
+            }
+            if exchange {
+                coll.exchange_mean(&mut self.stage, Some(&mut self.stage_r), c, sub)
+            } else {
+                coll.psync(&mut self.stage, Some(&mut self.stage_r), c, sub)
+            }
+        } else if exchange {
+            coll.exchange_mean(&mut self.stage, None, c, sub)
+        } else {
+            coll.psync(&mut self.stage, None, c, sub)
+        };
+        for (st, v) in self.stage.iter().zip(vs.iter_mut()) {
+            v[s..e].copy_from_slice(st);
+        }
+        if let Some(rs) = rs {
+            for (r0, r) in self.stage_r.iter().zip(rs.iter_mut()) {
+                r[s..e].copy_from_slice(r0);
+            }
+        }
+        round
+    }
+
+    /// The sequential bucketed collective: every bucket in order through
+    /// the central backend.  Returns the merged [`SyncInfo`].
+    pub fn central_sync(
+        &mut self,
+        coll: &dyn Collective,
+        exchange: bool,
+        vs: &mut [Vec<f32>],
+        mut rs: Option<&mut [Vec<f32>]>,
+        c: &Arc<dyn Compressor>,
+        t: u64,
+    ) -> SyncInfo {
+        let mut info = SyncInfo::new();
+        for b in 0..self.buckets.k() {
+            let (s, e) = self.buckets.range(b);
+            let round = self.central_sync_bucket(coll, exchange, vs, rs.as_deref_mut(), c, t, b);
+            info.push(s, e, round);
+        }
+        info
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressor::{Grbs, TopK};
+    use crate::transport::InProcess;
+    use crate::util::prop::Gen;
+
+    #[test]
+    fn central_sync_equals_manual_bucket_loop() {
+        let (n, d) = (3, 50);
+        let mut g = Gen::replay(0xCE27, 0);
+        let vs0 = g.worker_vecs(n, d);
+        let buckets = SyncBuckets::from_bounds(vec![0, 20, 50]);
+        for c in [
+            Arc::new(TopK::new(4.0)) as Arc<dyn Compressor>,
+            Arc::new(Grbs::new(2.0, 4, 9)) as Arc<dyn Compressor>,
+        ] {
+            // manual: run the in-process collective on hand-carved buckets
+            let mut want = vs0.clone();
+            let mut want_bits = 0u64;
+            for b in 0..buckets.k() {
+                let (s, e) = buckets.range(b);
+                let mut stage: Vec<Vec<f32>> = want.iter().map(|v| v[s..e].to_vec()).collect();
+                let round = crate::collective::psync(
+                    &mut stage,
+                    None,
+                    c.as_ref(),
+                    buckets.sub_round(11, b),
+                );
+                want_bits += round.upload_bits_per_worker;
+                for (st, v) in stage.iter().zip(want.iter_mut()) {
+                    v[s..e].copy_from_slice(st);
+                }
+            }
+            let mut got = vs0.clone();
+            let mut p = SyncPipeline::new(buckets.clone(), n);
+            let info = p.central_sync(&InProcess, false, &mut got, None, &c, 11);
+            assert_eq!(got, want, "{}", c.name());
+            assert_eq!(info.upload_bits_per_worker, want_bits, "{}", c.name());
+            assert_eq!(info.parts().len(), buckets.k());
+        }
+    }
+
+    #[test]
+    fn residuals_are_scattered_back_per_bucket() {
+        let (n, d) = (2, 24);
+        let mut g = Gen::replay(0xCE28, 1);
+        let vs0 = g.worker_vecs(n, d);
+        let buckets = SyncBuckets::even(d, 3);
+        let c = Arc::new(TopK::new(3.0)) as Arc<dyn Compressor>;
+        let mut vs = vs0.clone();
+        let mut rs = vec![vec![0.0f32; d]; n];
+        let mut p = SyncPipeline::new(buckets.clone(), n);
+        let info = p.central_sync(&InProcess, false, &mut vs, Some(&mut rs), &c, 2);
+        // Per-bucket residual definition: r = v − C(v) on that bucket.
+        for (i, r) in rs.iter().enumerate() {
+            for part in info.parts() {
+                let (s0, e0, round) = (part.0, part.1, &part.2);
+                let sel = round.selection_for(i);
+                let mut kept = vec![0.0f32; e0 - s0];
+                sel.apply(&vs0[i][s0..e0], &mut kept);
+                for j in 0..e0 - s0 {
+                    assert_eq!(r[s0 + j], vs0[i][s0 + j] - kept[j], "w{i} bucket at {s0}");
+                }
+            }
+        }
+    }
+}

@@ -9,16 +9,17 @@
 //! (CI's `bench-smoke` job runs `cser bench --quick` and validates the
 //! schema).
 //!
-//! # `BENCH_engine.json` schema (`cser-bench-engine/v1`)
+//! # `BENCH_engine.json` schema (`cser-bench-engine/v2`)
 //!
 //! ```json
 //! {
-//!   "schema": "cser-bench-engine/v1",
+//!   "schema": "cser-bench-engine/v2",
 //!   "quick": false,
+//!   "overlap_speedup_vs_sequential": 1.4,  // psync_sequential_bucketed / psync_overlap medians
 //!   "entries": [
 //!     {
 //!       "name": "step_cser",          // unique entry id
-//!       "kind": "optimizer_step",     // "optimizer_step" | "grad" | "train_step"
+//!       "kind": "optimizer_step",     // "optimizer_step" | "grad" | "train_step" | "collective"
 //!       "d": 1048576,                 // model dimension
 //!       "workers": 8,                 // simulated workers
 //!       "batch": 0,                   // samples per gradient (grad/train_step kinds)
@@ -37,20 +38,43 @@
 //! `speedup_vs_reference` comparing against the per-sample reference
 //! gradient driving the same engine.  `mlp_train_step_batched` isolates
 //! the serial batching/fusion gain; `mlp_train_step_batched_par` (chunk
-//! parallelism enabled — the full tentpole configuration) carries the
-//! ≥2× target vs the pre-PR baseline.
+//! parallelism enabled) carries the PR-4 ≥2× target vs the per-sample
+//! baseline.
+//!
+//! v2 adds the `collective` kind and the top-level
+//! `overlap_speedup_vs_sequential`.  Three entries over the 4-worker
+//! in-process mesh (top-k — the parameter-server route, whose rank-0
+//! aggregation is the serial phase worth overlapping) separate the
+//! effects: `psync_sequential` is the pre-PR whole-vector path;
+//! `psync_sequential_bucketed` runs the pipeline's bucket schedule with
+//! no overlap (its `speedup_vs_reference` isolates the schedule change —
+//! cheaper per-bucket selections and narrower indices);
+//! `psync_overlap` is the double-buffered pipeline, and the headline
+//! `overlap_speedup_vs_sequential` = sequential-bucketed / overlapped
+//! medians — pure overlap on an identical schedule (target ≥ 1.2).  The
+//! same section asserts two accounting invariants: pipelined bits equal
+//! sequential-bucketed bits exactly, and for shared-support compressors
+//! (GRBS with a bucket-tiling block grid) the per-bucket sum equals the
+//! whole-vector accounting on every path.
 
+use crate::collective::bucket::SyncBuckets;
+use crate::compressor::{Compressor, Grbs, TopK};
 use crate::config::OptSpec;
 use crate::data::ClassDataset;
 use crate::models::{GradModel, Mlp, ModelScratch};
 use crate::optimizer::DistOptimizer;
+use crate::transport::mesh::channel_mesh;
+use crate::transport::peer::{self, Mode};
+use crate::transport::{pipelined_sync, BucketPipeline};
 use crate::util::bench::{black_box, Bench};
 use crate::util::json::JsonWriter;
 use crate::util::pool;
 use crate::util::rng::Rng;
+use std::sync::mpsc::channel;
+use std::sync::Arc;
 use std::time::Duration;
 
-pub const SCHEMA: &str = "cser-bench-engine/v1";
+pub const SCHEMA: &str = "cser-bench-engine/v2";
 
 #[derive(Debug, Clone)]
 pub struct PerfEntry {
@@ -77,6 +101,11 @@ impl PerfEntry {
 #[derive(Debug, Clone)]
 pub struct PerfReport {
     pub quick: bool,
+    /// Median sequential-**bucketed** psync time / median overlapped psync
+    /// time on the 4-worker mesh — pure overlap on an identical bucket
+    /// schedule (the bucket-pipeline headline; target ≥ 1.2).  Equals
+    /// `psync_sequential_bucketed.median_ns / psync_overlap.median_ns`.
+    pub overlap_speedup_vs_sequential: f64,
     pub entries: Vec<PerfEntry>,
 }
 
@@ -278,7 +307,200 @@ pub fn run(quick: bool) -> PerfReport {
         speedup_vs_reference: step_ref_ns / step_par_ns,
     });
 
-    PerfReport { quick, entries }
+    // ---- bucketed sync pipeline: sequential vs overlapped psync ----
+    // 4 mesh workers, top-k (the PS route: rank 0's serial aggregation is
+    // exactly the phase the pipeline overlaps with every rank's
+    // compression).  Three configurations separate the effects:
+    // `psync_sequential` is the pre-PR whole-vector path,
+    // `psync_sequential_bucketed` runs the *same bucket schedule* as the
+    // pipeline with no overlap (its speedup_vs_reference isolates the
+    // schedule change: cheaper per-bucket selections/indices), and
+    // `psync_overlap` is the double-buffered pipeline — the headline
+    // `overlap_speedup_vs_sequential` is sequential-bucketed / overlapped,
+    // i.e. pure overlap on an identical schedule.  The GRBS rounds at the
+    // end assert the accounting invariant: per-bucket bits, summed, equal
+    // whole-vector bits on every path.
+    let (dc, k_buckets) = if quick { (1 << 16, 4) } else { (1 << 20, 8) };
+    let n_coll = 4usize;
+    let buckets = SyncBuckets::even(dc, k_buckets);
+    let mut rng = Rng::new(21);
+    let base: Vec<Vec<f32>> = (0..n_coll)
+        .map(|_| {
+            let mut v = vec![0.0f32; dc];
+            rng.fill_normal(&mut v, 1.0);
+            v
+        })
+        .collect();
+    #[derive(Clone, Copy, PartialEq)]
+    enum Op {
+        SeqWhole,
+        SeqBucketed,
+        Pipe,
+        Stop,
+    }
+    #[derive(Clone, Copy)]
+    struct Cmd {
+        round: u64,
+        op: Op,
+        grbs: bool,
+    }
+    let eps = channel_mesh(n_coll);
+    let (done_tx, done_rx) = channel::<u64>();
+    let mut cmd_txs = Vec::with_capacity(n_coll);
+    let mut handles = Vec::with_capacity(n_coll);
+    for (w, mut tp) in eps.into_iter().enumerate() {
+        let (cmd_tx, cmd_rx) = channel::<Cmd>();
+        cmd_txs.push(cmd_tx);
+        let mut v = base[w].clone();
+        let done = done_tx.clone();
+        let bk = buckets.clone();
+        handles.push(std::thread::spawn(move || {
+            let c_top: Arc<dyn Compressor> = Arc::new(TopK::new(64.0));
+            // Bucket-tiling block grids: the per-bucket draws keep exactly
+            // as many values as the whole-vector draw.
+            let c_gw: Arc<dyn Compressor> = Arc::new(Grbs::new(16.0, dc / 1024, 5));
+            let c_gb: Arc<dyn Compressor> = Arc::new(Grbs::new(16.0, dc / 1024 / k_buckets, 5));
+            let mut scratch = crate::compressor::Scratch::new();
+            let mut pipe = BucketPipeline::new();
+            let mut tmp: Vec<f32> = Vec::new();
+            while let Ok(cmd) = cmd_rx.recv() {
+                if cmd.op == Op::Stop {
+                    break;
+                }
+                let bits = match cmd.op {
+                    Op::SeqWhole => {
+                        let c = if cmd.grbs { &c_gw } else { &c_top };
+                        peer::psync_with(&mut tp, &mut v, None, c.as_ref(), cmd.round, &mut scratch)
+                            .expect("sequential psync")
+                            .upload_bits_per_worker
+                    }
+                    Op::SeqBucketed => {
+                        // The pipeline's schedule, run bucket-by-bucket on
+                        // this thread with no overlap.
+                        let c = if cmd.grbs { &c_gb } else { &c_top };
+                        let mut total = 0u64;
+                        for bi in 0..bk.k() {
+                            let (s, e) = bk.range(bi);
+                            tmp.clear();
+                            tmp.extend_from_slice(&v[s..e]);
+                            let r = peer::psync_with(
+                                &mut tp,
+                                &mut tmp,
+                                None,
+                                c.as_ref(),
+                                bk.sub_round(cmd.round, bi),
+                                &mut scratch,
+                            )
+                            .expect("sequential bucketed psync");
+                            v[s..e].copy_from_slice(&tmp);
+                            total += r.upload_bits_per_worker;
+                        }
+                        total
+                    }
+                    Op::Pipe => {
+                        let c = if cmd.grbs { &c_gb } else { &c_top };
+                        pipelined_sync(&mut pipe, &mut tp, Mode::Psync, &mut v, None, c, cmd.round, &bk)
+                            .expect("pipelined psync")
+                            .upload_bits_per_worker
+                    }
+                    Op::Stop => unreachable!(),
+                };
+                done.send(bits).expect("bench collector");
+            }
+        }));
+    }
+    let mut round = 1_000_000u64; // clear of the sub-round space of earlier rounds
+    let drive = |cmd_txs: &[std::sync::mpsc::Sender<Cmd>], op: Op, grbs: bool, round: u64| -> Vec<u64> {
+        for tx in cmd_txs {
+            tx.send(Cmd { round, op, grbs }).expect("bench worker");
+        }
+        (0..n_coll).map(|_| done_rx.recv().expect("bench worker")).collect()
+    };
+    let mut bits_seq = 0u64;
+    b.run("psync_sequential_topk_n4", || {
+        round += 1;
+        bits_seq = drive(&cmd_txs, Op::SeqWhole, false, round)[0];
+    });
+    let seq_ns = b.results.last().unwrap().median_ns;
+    entries.push(PerfEntry {
+        name: "psync_sequential".into(),
+        kind: "collective",
+        d: dc,
+        workers: n_coll,
+        batch: 0,
+        median_ns: seq_ns,
+        bits_per_step: bits_seq as f64,
+        speedup_vs_reference: 1.0,
+    });
+    let mut bits_seq_b = 0u64;
+    b.run("psync_sequential_bucketed_topk_n4", || {
+        round += 1;
+        bits_seq_b = drive(&cmd_txs, Op::SeqBucketed, false, round)[0];
+    });
+    let seq_b_ns = b.results.last().unwrap().median_ns;
+    entries.push(PerfEntry {
+        name: "psync_sequential_bucketed".into(),
+        kind: "collective",
+        d: dc,
+        workers: n_coll,
+        batch: 0,
+        median_ns: seq_b_ns,
+        bits_per_step: bits_seq_b as f64,
+        // The schedule effect alone (whole-vector vs per-bucket selection).
+        speedup_vs_reference: seq_ns / seq_b_ns,
+    });
+    let mut bits_pipe = 0u64;
+    b.run("psync_overlap_topk_n4", || {
+        round += 1;
+        bits_pipe = drive(&cmd_txs, Op::Pipe, false, round)[0];
+    });
+    let overlap_ns = b.results.last().unwrap().median_ns;
+    // Pure overlap: identical bucket schedule, with vs without the pipeline.
+    let overlap_speedup = seq_b_ns / overlap_ns;
+    entries.push(PerfEntry {
+        name: "psync_overlap".into(),
+        kind: "collective",
+        d: dc,
+        workers: n_coll,
+        batch: 0,
+        median_ns: overlap_ns,
+        bits_per_step: bits_pipe as f64,
+        speedup_vs_reference: overlap_speedup,
+    });
+    // Same schedule ⇒ exactly the same accounted bits, pipelined or not.
+    assert_eq!(
+        bits_seq_b, bits_pipe,
+        "pipelined accounting must equal the sequential-bucketed accounting"
+    );
+    // Accounting invariant (GRBS, bucket-tiling grid): whole-vector bits ==
+    // per-bucket sum, on every worker, every execution path.
+    round += 1;
+    let whole_bits = drive(&cmd_txs, Op::SeqWhole, true, round);
+    round += 1;
+    let seq_bucket_bits = drive(&cmd_txs, Op::SeqBucketed, true, round);
+    round += 1;
+    let pipe_bits = drive(&cmd_txs, Op::Pipe, true, round);
+    let expect = (dc as u64 / 16) * 32;
+    for w in 0..n_coll {
+        assert_eq!(whole_bits[w], expect, "worker {w}: whole-vector GRBS accounting");
+        assert_eq!(
+            seq_bucket_bits[w], expect,
+            "worker {w}: sequential per-bucket accounting must sum to the whole-vector bits"
+        );
+        assert_eq!(
+            pipe_bits[w], expect,
+            "worker {w}: pipelined per-bucket accounting must sum to the whole-vector bits"
+        );
+    }
+    println!("bucket accounting check: per-bucket sum == whole-vector == {expect} bits ✓");
+    for tx in &cmd_txs {
+        tx.send(Cmd { round: 0, op: Op::Stop, grbs: false }).expect("bench worker");
+    }
+    for h in handles {
+        h.join().expect("collective bench worker");
+    }
+
+    PerfReport { quick, overlap_speedup_vs_sequential: overlap_speedup, entries }
 }
 
 pub fn to_json(r: &PerfReport) -> String {
@@ -286,6 +508,7 @@ pub fn to_json(r: &PerfReport) -> String {
     w.begin_obj();
     w.key("schema").str(SCHEMA);
     w.key("quick").bool(r.quick);
+    w.key("overlap_speedup_vs_sequential").num(r.overlap_speedup_vs_sequential);
     w.key("entries").begin_arr();
     for e in &r.entries {
         w.begin_obj();
@@ -318,6 +541,7 @@ mod tests {
     fn report_json_roundtrips_and_carries_schema() {
         let r = PerfReport {
             quick: true,
+            overlap_speedup_vs_sequential: 1.4,
             entries: vec![PerfEntry {
                 name: "step_x".into(),
                 kind: "optimizer_step",
@@ -332,6 +556,8 @@ mod tests {
         let j = Json::parse(&to_json(&r)).unwrap();
         assert_eq!(j.get("schema").unwrap().as_str(), Some(SCHEMA));
         assert_eq!(j.get("quick").unwrap().as_bool(), Some(true));
+        let sp = j.get("overlap_speedup_vs_sequential").unwrap().as_f64().unwrap();
+        assert!((sp - 1.4).abs() < 1e-9);
         let es = j.get("entries").unwrap().as_arr().unwrap();
         assert_eq!(es.len(), 1);
         let e = &es[0];

@@ -30,6 +30,9 @@ pub struct Scratch {
     pub vb: Vec<f32>,
     /// Dense f32 workspace C (peer PS server's per-upload decode staging).
     pub vc: Vec<f32>,
+    /// Dense f32 workspace D (peer PS path's decoded-aggregate staging —
+    /// separate from A so the own-message copy survives the download).
+    pub vd: Vec<f32>,
     /// Union-mask workspace (peer PS server's aggregate support).
     pub mask: Vec<bool>,
 }

@@ -13,8 +13,9 @@
 //!                                          sparsifier families
 //! cser train-lm [--preset tiny|small] [--opt cser|sgd|...] [--steps N] ...
 //! cser launch   [--workers N] [--opt ...] [--epochs N] [--ckpt-dir D]
-//!                                          spawn N worker processes over
+//!               [--buckets K]              spawn N worker processes over
 //!                                          loopback TCP, print the RunRecord
+//!                                          (K > 1: bucketed sync pipeline)
 //! cser worker   --rendezvous H:P --rank R --workers N [training flags]
 //!                                          join a multi-process job as one rank
 //! cser bench    [--quick] [--out BENCH_engine.json]
@@ -41,7 +42,7 @@ fn main() {
     let known = [
         "suite", "seeds", "quick", "rc", "preset", "opt", "steps", "workers", "lr", "beta",
         "eval-every", "seed", "artifacts", "h", "rc1", "rc2", "x", "y", "out", "rendezvous",
-        "rank", "epochs", "batch", "record", "ckpt", "ckpt-dir",
+        "rank", "epochs", "batch", "record", "ckpt", "ckpt-dir", "buckets",
     ];
     let args = match Args::parse(argv, &known) {
         Ok(a) => a,
@@ -255,6 +256,9 @@ fn dist_train_cfg(args: &Args) -> anyhow::Result<cser::coordinator::TrainCfg> {
     );
     cfg.schedule = cser::config::LrSchedule::StepDecay { milestones: vec![0.5], factor: 0.2 };
     cfg.paper_d = 1_000_000;
+    // K > 1 runs the bucketed sync pipeline (layer-aware buckets, overlap
+    // of compression with the exchange on every rank).
+    cfg.buckets = args.usize("buckets", 0)?;
     Ok(cfg)
 }
 
@@ -327,7 +331,7 @@ fn launch(args: &Args) -> anyhow::Result<()> {
             .arg(n.to_string())
             .arg("--record")
             .arg(&record);
-        for key in ["opt", "rc1", "rc2", "h", "epochs", "batch", "lr", "beta", "seed"] {
+        for key in ["opt", "rc1", "rc2", "h", "epochs", "batch", "lr", "beta", "seed", "buckets"] {
             if let Some(v) = args.opt_str(key) {
                 cmd.arg(format!("--{key}")).arg(v);
             }

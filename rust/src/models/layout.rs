@@ -1,0 +1,162 @@
+//! Parameter-layout metadata: where the layer boundaries of a flattened
+//! model live.
+//!
+//! Every model in this repo trains over one flat `Vec<f32>`; the optimizer
+//! and transport layers never needed to know that the vector is really
+//! `[W1 | b1 | W2 | b2]`.  The bucketed synchronization pipeline does: a
+//! gradient bucket that straddles a layer boundary mixes tensors with very
+//! different magnitudes under one top-k/GRBS draw, and (more practically)
+//! bucket boundaries aligned to tensor boundaries keep per-bucket selections
+//! meaningful per layer — the blockwise error-feedback framing of
+//! dist-EF-SGDM (PAPERS.md).
+//!
+//! [`ParamLayout`] records the segment (tensor) boundaries and computes a
+//! bucket partition: `bucket_bounds(k)` cuts the vector into at most `k`
+//! contiguous buckets whose boundaries snap to segment boundaries when a
+//! segment boundary lies close to the ideal even cut, and fall back to the
+//! ideal cut when a single tensor is larger than a bucket (a huge embedding
+//! matrix must still be splittable).  Models report their layout through
+//! [`super::GradModel::param_layout`]; the default is one dense segment.
+
+/// Segment (tensor) boundaries of a flat parameter vector: `bounds` is
+/// strictly increasing, starts at 0, ends at `dim()`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ParamLayout {
+    bounds: Vec<usize>,
+}
+
+impl ParamLayout {
+    /// Layout from per-segment lengths (all non-zero).
+    pub fn from_segments(lens: &[usize]) -> Self {
+        assert!(!lens.is_empty(), "a layout needs at least one segment");
+        let mut bounds = Vec::with_capacity(lens.len() + 1);
+        bounds.push(0usize);
+        let mut acc = 0usize;
+        for &l in lens {
+            assert!(l > 0, "zero-length parameter segment");
+            acc += l;
+            bounds.push(acc);
+        }
+        ParamLayout { bounds }
+    }
+
+    /// Single dense segment (models that don't describe their tensors).
+    pub fn dense(d: usize) -> Self {
+        assert!(d > 0);
+        ParamLayout { bounds: vec![0, d] }
+    }
+
+    /// Flat parameter dimension.
+    pub fn dim(&self) -> usize {
+        *self.bounds.last().unwrap()
+    }
+
+    /// Number of segments (tensors).
+    pub fn num_segments(&self) -> usize {
+        self.bounds.len() - 1
+    }
+
+    /// Segment `i` as `(start, end)`.
+    pub fn segment(&self, i: usize) -> (usize, usize) {
+        (self.bounds[i], self.bounds[i + 1])
+    }
+
+    /// Partition `[0, dim)` into at most `k` contiguous buckets.
+    ///
+    /// Each interior cut starts at the ideal even position `i·d/k` and snaps
+    /// to the nearest segment boundary when one lies within half a bucket of
+    /// it (layer-boundary-aware); otherwise the ideal cut stands (segments
+    /// larger than a bucket are split mid-tensor).  Cuts that would collapse
+    /// a bucket to zero length are dropped, so the result can have fewer
+    /// than `k` buckets but never an empty one.  Returned bounds are
+    /// strictly increasing, `0 ..= d`.
+    pub fn bucket_bounds(&self, k: usize) -> Vec<usize> {
+        let d = self.dim();
+        let k = k.max(1).min(d);
+        let target = d.div_ceil(k);
+        let mut out = Vec::with_capacity(k + 1);
+        out.push(0usize);
+        for i in 1..k {
+            let ideal = i * d / k;
+            // nearest segment boundary to `ideal`
+            let snapped = match self.bounds.binary_search(&ideal) {
+                Ok(_) => ideal,
+                Err(pos) => {
+                    let hi = self.bounds[pos.min(self.bounds.len() - 1)];
+                    let lo = self.bounds[pos.saturating_sub(1)];
+                    if ideal - lo <= hi - ideal {
+                        lo
+                    } else {
+                        hi
+                    }
+                }
+            };
+            let cut = if snapped.abs_diff(ideal) * 2 <= target { snapped } else { ideal };
+            if cut > *out.last().unwrap() && cut < d {
+                out.push(cut);
+            }
+        }
+        out.push(d);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, Gen};
+
+    #[test]
+    fn segments_roundtrip() {
+        let l = ParamLayout::from_segments(&[12, 3, 6, 2]);
+        assert_eq!(l.dim(), 23);
+        assert_eq!(l.num_segments(), 4);
+        assert_eq!(l.segment(0), (0, 12));
+        assert_eq!(l.segment(3), (21, 23));
+        assert_eq!(ParamLayout::dense(7).segment(0), (0, 7));
+    }
+
+    #[test]
+    fn buckets_snap_to_layer_boundaries() {
+        // MLP-ish layout: a big W1, small b1, medium W2, small b2.  Asking
+        // for 2 buckets should cut at a tensor boundary near the middle,
+        // not through the middle of a tensor.
+        let l = ParamLayout::from_segments(&[512, 32, 320, 10]);
+        let b = l.bucket_bounds(2);
+        assert_eq!(b.first(), Some(&0));
+        assert_eq!(b.last(), Some(&l.dim()));
+        for cut in &b[1..b.len() - 1] {
+            assert!(
+                l.bounds.contains(cut),
+                "cut {cut} is not a segment boundary of {:?}",
+                l.bounds
+            );
+        }
+    }
+
+    #[test]
+    fn oversized_segments_are_split() {
+        // One giant tensor: no boundary to snap to, so the even cuts stand.
+        let l = ParamLayout::from_segments(&[1000]);
+        let b = l.bucket_bounds(4);
+        assert_eq!(b, vec![0, 250, 500, 750, 1000]);
+    }
+
+    #[test]
+    fn prop_bucket_bounds_partition_the_vector() {
+        forall(60, 0x1A70, |g: &mut Gen| {
+            let nseg = g.usize_in(1, 8);
+            let lens: Vec<usize> = (0..nseg).map(|_| g.usize_in(1, 300)).collect();
+            let l = ParamLayout::from_segments(&lens);
+            let k = g.usize_in(1, 12);
+            let b = l.bucket_bounds(k);
+            crate::prop_assert!(b[0] == 0, "first bound {} != 0", b[0]);
+            crate::prop_assert!(*b.last().unwrap() == l.dim(), "last bound misses dim");
+            crate::prop_assert!(b.len() <= k + 1, "{} buckets for k = {k}", b.len() - 1);
+            for w in b.windows(2) {
+                crate::prop_assert!(w[0] < w[1], "bounds not strictly increasing: {b:?}");
+            }
+            Ok(())
+        });
+    }
+}

@@ -42,6 +42,10 @@ impl GradModel for Logistic {
         self.input * self.classes + self.classes
     }
 
+    fn param_layout(&self) -> super::ParamLayout {
+        super::ParamLayout::from_segments(&[self.input * self.classes, self.classes])
+    }
+
     fn init(&self, seed: u64) -> Vec<f32> {
         let mut rng = Rng::stream(seed, 0x109);
         let mut p = vec![0.0f32; self.dim()];

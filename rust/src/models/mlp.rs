@@ -300,6 +300,11 @@ impl GradModel for Mlp {
         self.input * self.hidden + self.hidden + self.hidden * self.classes + self.classes
     }
 
+    fn param_layout(&self) -> super::ParamLayout {
+        let (i, h, c) = (self.input, self.hidden, self.classes);
+        super::ParamLayout::from_segments(&[i * h, h, h * c, c])
+    }
+
     fn init(&self, seed: u64) -> Vec<f32> {
         let mut rng = Rng::stream(seed, 0x317);
         let mut p = vec![0.0f32; self.dim()];

@@ -10,10 +10,12 @@
 //! loss at a given flat parameter vector, plus evaluation metrics.  Gradients
 //! are verified against central finite differences in each model's tests.
 
+pub mod layout;
 pub mod logistic;
 pub mod mlp;
 pub mod quadratic;
 
+pub use layout::ParamLayout;
 pub use logistic::Logistic;
 pub use mlp::Mlp;
 pub use quadratic::Quadratic;
@@ -49,6 +51,13 @@ impl ModelScratch {
 pub trait GradModel: Send + Sync {
     /// Flat parameter dimension.
     fn dim(&self) -> usize;
+
+    /// Tensor boundaries of the flat parameter vector (drives layer-aware
+    /// gradient bucketing — see [`ParamLayout`]).  Default: one dense
+    /// segment; models with named tensors override.
+    fn param_layout(&self) -> ParamLayout {
+        ParamLayout::dense(self.dim())
+    }
 
     /// Initialize parameters (deterministic in `seed`).
     fn init(&self, seed: u64) -> Vec<f32>;

@@ -10,6 +10,9 @@
 //! * [`peer`] — the **peer-owned** protocol: each worker executes its own
 //!   ring segment / parameter-server exchange over a [`peer::PeerTransport`]
 //!   it holds, instead of a rendezvous electing runner threads per call.
+//!   [`pipeline`] drives the same protocol per gradient *bucket* with a
+//!   persistent per-worker prepare thread, overlapping bucket k+1's
+//!   compression with bucket k's exchange (DESIGN.md §2.2).
 //!   Three transports implement it:
 //!   * [`mesh`] — a full mesh of mpsc channels for workers living in one
 //!     process (persistent resident threads, the [`Threaded`] pool);
@@ -34,12 +37,14 @@
 
 pub mod mesh;
 pub mod peer;
+pub mod pipeline;
 pub mod rendezvous;
 pub mod tcp;
 pub mod threaded;
 pub mod wire;
 
 pub use peer::{PeerTransport, Tag, TransportError};
+pub use pipeline::{pipelined_sync, BucketPipeline};
 pub use tcp::TcpTransport;
 pub use threaded::Threaded;
 pub use wire::{BitReader, BitWriter, WireError, WireMsg};

@@ -235,7 +235,7 @@ const RING_SEGMENT_F32S: usize = 8192;
 /// segment.  `reduce` accumulates (reduce-scatter) instead of overwriting
 /// (all-gather).  Returns the bits this peer sent.
 #[allow(clippy::too_many_arguments)]
-fn ring_exchange(
+pub(crate) fn ring_exchange(
     t: &mut dyn PeerTransport,
     compact: &mut [f32],
     next: usize,
@@ -279,6 +279,158 @@ pub(crate) fn gather(sel: &Selection, v: &[f32], compact: &mut Vec<f32>) {
     sel.for_each_range(v.len(), |s, e| compact.extend_from_slice(&v[s..e]));
 }
 
+/// The ring's data movement for one already-gathered compact vector:
+/// reduce-scatter, all-gather, then the 1/n mean scale — exactly the chunk
+/// schedule and reduction order of the whole-vector path (this *is* the
+/// whole-vector path's core; the bucketed pipeline drives it per bucket).
+/// Returns (reduce-scatter bits sent, all-gather bits sent).
+pub(crate) fn ring_rounds(
+    t: &mut dyn PeerTransport,
+    compact: &mut [f32],
+    round: u64,
+) -> Result<(u64, u64), TransportError> {
+    let n = t.n();
+    let i = t.rank();
+    let m = compact.len();
+    let next = (i + 1) % n;
+    let prev = (i + n - 1) % n;
+    // Traffic split follows `ring_allreduce_cost`'s convention: `up` = bits
+    // sent during reduce-scatter, `down` = bits sent during all-gather.
+    let (mut up, mut down) = (0u64, 0u64);
+    // Reduce-scatter: after n-1 steps this peer owns the fully reduced
+    // chunk (i+1) % n.
+    for step in 0..n - 1 {
+        let send = chunk_bounds(m, n, (i + n - step) % n);
+        let recv = chunk_bounds(m, n, (i + n - step - 1) % n);
+        up += ring_exchange(t, compact, next, prev, round, send, recv, true)?;
+    }
+    // All-gather: circulate the completed chunks.
+    for step in 0..n - 1 {
+        let send = chunk_bounds(m, n, (i + 1 + n - step) % n);
+        let recv = chunk_bounds(m, n, (i + n - step) % n);
+        down += ring_exchange(t, compact, next, prev, round, send, recv, false)?;
+    }
+    let inv = 1.0 / n as f32;
+    for x in compact.iter_mut() {
+        *x *= inv;
+    }
+    Ok((up, down))
+}
+
+/// The compression phase of the parameter-server path: select, encode, and
+/// self-decode (so downstream arithmetic sees the exact bits the server
+/// aggregates).  `own` is an owned staging buffer (recycled by callers);
+/// it returns holding the decoded `C(v)`.
+pub(crate) struct PsUpload {
+    pub sel: Selection,
+    pub msg: WireMsg,
+    pub own: Vec<f32>,
+}
+
+pub(crate) fn ps_prepare(
+    c: &dyn Compressor,
+    ctx: Ctx,
+    v: &[f32],
+    mut own: Vec<f32>,
+    scratch: &mut Scratch,
+) -> Result<PsUpload, WireError> {
+    let sel = c.select_with(ctx, v, scratch);
+    let msg = wire::encode_with_selection(c, ctx, v, Some(&sel));
+    own.clear();
+    own.resize(v.len(), 0.0);
+    wire::decode(c, ctx, &msg, &mut own)?;
+    Ok(PsUpload { sel, msg, own })
+}
+
+/// The exchange phase of the parameter-server path: upload → worker-order
+/// accumulate at rank 0 → accounting + aggregate broadcast.  `own` must be
+/// this worker's decoded `C(v)` (from [`ps_prepare`]); `agg` receives the
+/// decoded union/dense aggregate.  Returns (fleet accounted bits per
+/// worker, up bits, down bits).  Server staging buffers live in `scratch`
+/// (`vb`/`vc`/`mask`).
+pub(crate) fn ps_rounds(
+    t: &mut dyn PeerTransport,
+    c: &dyn Compressor,
+    round: u64,
+    msg: WireMsg,
+    own: &[f32],
+    agg: &mut Vec<f32>,
+    scratch: &mut Scratch,
+) -> Result<(u64, u64, u64), TransportError> {
+    let n = t.n();
+    let d = own.len();
+    let up = msg.bit_len;
+    agg.clear();
+    agg.resize(d, 0.0);
+    if t.rank() == 0 {
+        // ---- server (rank 0, in its own step) ----
+        // All three O(d) server buffers come from the scratch (returned at
+        // the end of the branch; error exits abort the run, so losing the
+        // capacity there is moot).
+        let mut mean = std::mem::take(&mut scratch.vb);
+        mean.clear();
+        mean.resize(d, 0.0);
+        let mut stage = std::mem::take(&mut scratch.vc);
+        stage.clear();
+        stage.resize(d, 0.0);
+        let mut mask = std::mem::take(&mut scratch.mask);
+        mask.clear();
+        mask.resize(d, false);
+        let inv = 1.0 / n as f32;
+        let mut total_up = up;
+        // Accumulate in worker order — the same order as the in-process
+        // backend, so the mean is bit-identical to `collective::exchange_mean`.
+        accumulate(own, inv, &mut mean, &mut mask);
+        for j in 1..n {
+            let m = t.recv(j, round, Tag::Upload)?;
+            total_up += m.bit_len;
+            wire::decode(c, Ctx { round, worker: j as u32 }, &m, &mut stage)?;
+            accumulate(&stage, inv, &mut mean, &mut mask);
+        }
+        let a = if c.is_dense() {
+            wire::encode_f32s(&mean)
+        } else {
+            wire::encode_union(&mean, &mask)
+        };
+        let down = a.bit_len;
+        // Fleet-wide accounting rides a tiny control frame so every rank
+        // reports the identical `upload_bits_per_worker` the in-process
+        // backend computes (ceiling of the per-worker mean).
+        let acct = total_up.div_ceil(n as u64);
+        let mut w = wire::BitWriter::new();
+        w.write(acct, 64);
+        t.broadcast(round, Tag::AggInfo, w.finish())?;
+        if c.is_dense() {
+            wire::decode_f32s(&a, agg)?;
+        } else {
+            wire::decode_union(&a, agg)?;
+        }
+        t.broadcast(round, Tag::Aggregate, a)?;
+        scratch.vb = mean;
+        scratch.vc = stage;
+        scratch.mask = mask;
+        Ok((acct, up, down))
+    } else {
+        t.send(0, round, Tag::Upload, msg)?;
+        let info = t.recv(0, round, Tag::AggInfo)?;
+        if info.bit_len != 64 {
+            return Err(TransportError(format!(
+                "accounting frame is {} bits, expected 64",
+                info.bit_len
+            )));
+        }
+        let acct = info.reader().read(64);
+        let a = t.recv(0, round, Tag::Aggregate)?;
+        let down = a.bit_len;
+        if c.is_dense() {
+            wire::decode_f32s(&a, agg)?;
+        } else {
+            wire::decode_union(&a, agg)?;
+        }
+        Ok((acct, up, down))
+    }
+}
+
 fn ring(
     t: &mut dyn PeerTransport,
     mode: Mode,
@@ -289,7 +441,6 @@ fn ring(
     scratch: &mut Scratch,
 ) -> Result<PsyncRound, TransportError> {
     let n = t.n();
-    let i = t.rank();
     let d = v.len();
     // Globally-synchronized selections ignore both the vector and the worker
     // id, so every peer derives the identical shared support locally.
@@ -315,33 +466,11 @@ fn ring(
 
     // The O(d/R) gather buffer lives in the scratch (returned before the
     // success exit; error exits abort the run, so the lost capacity is moot).
+    // Chunk schedule and reduction order inside `ring_rounds` are identical
+    // to the retired runner-thread ring, so the f32 results carry over.
     let mut compact = std::mem::take(&mut scratch.vb);
     gather(&sel, v, &mut compact);
-    let next = (i + 1) % n;
-    let prev = (i + n - 1) % n;
-    // Traffic split follows `ring_allreduce_cost`'s convention: `up` = bits
-    // sent during reduce-scatter, `down` = bits sent during all-gather.
-    let (mut up, mut down) = (0u64, 0u64);
-
-    // Reduce-scatter: after n-1 steps this peer owns the fully reduced
-    // chunk (i+1) % n.  Chunk schedule and reduction order are identical to
-    // the retired runner-thread ring, so the f32 results carry over.
-    for step in 0..n - 1 {
-        let send = chunk_bounds(m, n, (i + n - step) % n);
-        let recv = chunk_bounds(m, n, (i + n - step - 1) % n);
-        up += ring_exchange(t, &mut compact, next, prev, round, send, recv, true)?;
-    }
-    // All-gather: circulate the completed chunks.
-    for step in 0..n - 1 {
-        let send = chunk_bounds(m, n, (i + 1 + n - step) % n);
-        let recv = chunk_bounds(m, n, (i + n - step) % n);
-        down += ring_exchange(t, &mut compact, next, prev, round, send, recv, false)?;
-    }
-
-    let inv = 1.0 / n as f32;
-    for x in compact.iter_mut() {
-        *x *= inv;
-    }
+    let (up, down) = ring_rounds(t, &mut compact, round)?;
     // Residual (v off support) must be captured before the mean overwrites
     // the selected ranges.
     if let Some(r) = resid.as_deref_mut() {
@@ -383,101 +512,33 @@ fn ps(
     round: u64,
     scratch: &mut Scratch,
 ) -> Result<PsyncRound, TransportError> {
-    let n = t.n();
     let i = t.rank();
     let d = v.len();
     let ctx = Ctx { round, worker: i as u32 };
-    let sel = c.select_with(ctx, v, scratch);
-    let msg = wire::encode_with_selection(c, ctx, v, Some(&sel));
-    let up = msg.bit_len;
-    // Decode our own upload so the residual is computed against the exact
-    // bits the server aggregates, then capture it before the aggregate
-    // overwrites anything: r = v − C(v).  The staging buffer comes from the
-    // scratch — reused across rounds (returned before every exit below).
-    let mut cq = scratch.take_dense(d);
-    wire::decode(c, ctx, &msg, &mut cq)?;
-    for (vj, kj) in v.iter_mut().zip(&cq) {
+    // Compression phase: select, encode, and self-decode (the residual must
+    // be computed against the exact bits the server aggregates).  The `own`
+    // staging buffer comes from the scratch — reused across rounds
+    // (returned before the success exit below).
+    let own_buf = scratch.take_dense(d);
+    let PsUpload { sel, msg, own } = ps_prepare(c, ctx, v, own_buf, scratch)?;
+    // r = v − C(v), captured before the aggregate overwrites anything.
+    for (vj, kj) in v.iter_mut().zip(&own) {
         *vj -= *kj;
     }
     if let Some(r) = resid.as_deref_mut() {
         r.copy_from_slice(v);
     }
-
-    // cq is then reused for the decoded aggregate (mean over the union).
-    let (acct_bits, down) = if i == 0 {
-        // ---- server (rank 0, in its own step) ----
-        // All three O(d) server buffers come from the scratch (returned at
-        // the end of the branch; error exits abort the run, so losing the
-        // capacity there is moot).
-        let mut mean = std::mem::take(&mut scratch.vb);
-        mean.clear();
-        mean.resize(d, 0.0);
-        let mut stage = std::mem::take(&mut scratch.vc);
-        stage.clear();
-        stage.resize(d, 0.0);
-        let mut mask = std::mem::take(&mut scratch.mask);
-        mask.clear();
-        mask.resize(d, false);
-        let inv = 1.0 / n as f32;
-        let mut total_up = up;
-        // Accumulate in worker order — the same order as the in-process
-        // backend, so the mean is bit-identical to `collective::exchange_mean`.
-        accumulate(&cq, inv, &mut mean, &mut mask);
-        for j in 1..n {
-            let m = t.recv(j, round, Tag::Upload)?;
-            total_up += m.bit_len;
-            wire::decode(c, Ctx { round, worker: j as u32 }, &m, &mut stage)?;
-            accumulate(&stage, inv, &mut mean, &mut mask);
-        }
-        let a = if c.is_dense() {
-            wire::encode_f32s(&mean)
-        } else {
-            wire::encode_union(&mean, &mask)
-        };
-        let down = a.bit_len;
-        // Fleet-wide accounting rides a tiny control frame so every rank
-        // reports the identical `upload_bits_per_worker` the in-process
-        // backend computes (ceiling of the per-worker mean).
-        let acct = total_up.div_ceil(n as u64);
-        let mut w = wire::BitWriter::new();
-        w.write(acct, 64);
-        t.broadcast(round, Tag::AggInfo, w.finish())?;
-        if c.is_dense() {
-            wire::decode_f32s(&a, &mut cq)?;
-        } else {
-            wire::decode_union(&a, &mut cq)?;
-        }
-        t.broadcast(round, Tag::Aggregate, a)?;
-        scratch.vb = mean;
-        scratch.vc = stage;
-        scratch.mask = mask;
-        (acct, down)
-    } else {
-        t.send(0, round, Tag::Upload, msg)?;
-        let info = t.recv(0, round, Tag::AggInfo)?;
-        if info.bit_len != 64 {
-            return Err(TransportError(format!(
-                "accounting frame is {} bits, expected 64",
-                info.bit_len
-            )));
-        }
-        let acct = info.reader().read(64);
-        let agg = t.recv(0, round, Tag::Aggregate)?;
-        let down = agg.bit_len;
-        if c.is_dense() {
-            wire::decode_f32s(&agg, &mut cq)?;
-        } else {
-            wire::decode_union(&agg, &mut cq)?;
-        }
-        (acct, down)
-    };
-
+    // Exchange phase: upload / serve, aggregate broadcast, decode into the
+    // scratch's aggregate buffer.
+    let mut agg = std::mem::take(&mut scratch.vd);
+    let (acct_bits, up, down) = ps_rounds(t, c, round, msg, &own, &mut agg, scratch)?;
     match mode {
         // v currently holds the residual: v' = mean + residual.
-        Mode::Psync => math::axpy(1.0, &cq, v),
-        Mode::Exchange => v.copy_from_slice(&cq),
+        Mode::Psync => math::axpy(1.0, &agg, v),
+        Mode::Exchange => v.copy_from_slice(&agg),
     }
-    scratch.put_dense(cq);
+    scratch.vd = agg;
+    scratch.put_dense(own);
     Ok(PsyncRound {
         selections: vec![sel],
         upload_bits_per_worker: acct_bits,
@@ -651,5 +712,65 @@ pub fn agree(t: &mut dyn PeerTransport, flag: bool, round: u64) -> Result<bool, 
             return Err(TransportError(format!("flag frame is {} bits, expected 1", m.bit_len)));
         }
         Ok(m.reader().read(1) == 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, Gen};
+
+    #[test]
+    fn prop_chunk_bounds_partition_any_m_n() {
+        // chunk_bounds must tile [0, m) exactly for every (m, n), including
+        // m < n (some chunks empty), m = 0 (all empty), and uneven splits
+        // (sizes differing by at most one).
+        forall(200, 0xC0B1, |g: &mut Gen| {
+            let n = g.usize_in(1, 12);
+            let m = match g.usize_in(0, 4) {
+                0 => 0,                     // nothing to split
+                1 => g.usize_in(1, n),      // fewer values than chunks
+                _ => g.usize_in(1, 10_000), // generic (usually uneven)
+            };
+            let mut cursor = 0usize;
+            let (mut min_len, mut max_len) = (usize::MAX, 0usize);
+            for k in 0..n {
+                let (s, e) = chunk_bounds(m, n, k);
+                crate::prop_assert!(s == cursor, "m={m} n={n} k={k}: gap/overlap at {s} (expected {cursor})");
+                crate::prop_assert!(e >= s, "m={m} n={n} k={k}: negative chunk");
+                crate::prop_assert!(e <= m, "m={m} n={n} k={k}: end {e} past m");
+                min_len = min_len.min(e - s);
+                max_len = max_len.max(e - s);
+                cursor = e;
+            }
+            crate::prop_assert!(cursor == m, "m={m} n={n}: chunks cover {cursor}, not m");
+            crate::prop_assert!(
+                max_len - min_len <= 1,
+                "m={m} n={n}: unbalanced chunks (sizes {min_len}..{max_len})"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn chunk_bounds_edge_cases() {
+        // m = 0: every chunk is empty.
+        for k in 0..5 {
+            assert_eq!(chunk_bounds(0, 5, k), (0, 0));
+        }
+        // m < n: exactly m unit chunks, the rest empty.
+        let lens: Vec<usize> = (0..5).map(|k| {
+            let (s, e) = chunk_bounds(3, 5, k);
+            e - s
+        }).collect();
+        assert_eq!(lens.iter().sum::<usize>(), 3);
+        assert!(lens.iter().all(|&l| l <= 1));
+        // uneven: 10 over 4 -> 2/3/2/3 (sizes differ by at most one).
+        let lens: Vec<usize> = (0..4).map(|k| {
+            let (s, e) = chunk_bounds(10, 4, k);
+            e - s
+        }).collect();
+        assert_eq!(lens.iter().sum::<usize>(), 10);
+        assert!(lens.iter().all(|&l| l == 2 || l == 3));
     }
 }

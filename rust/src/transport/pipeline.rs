@@ -1,0 +1,584 @@
+//! The bucketed synchronization pipeline: overlap compression with the
+//! collective exchange.
+//!
+//! The whole-vector peer path serializes every round as
+//! `select → encode → exchange → apply` over one monolithic vector, leaving
+//! the CPU idle during socket/channel waits and the network idle during
+//! compression.  [`pipelined_sync`] splits the vector into
+//! [`SyncBuckets`] and double-buffers: a persistent per-worker **prepare
+//! thread** compresses bucket k+1 (selection, gather/encode, self-decode)
+//! while the transport-owning thread runs bucket k's ring or
+//! parameter-server exchange — so rank 0's serial aggregation work overlaps
+//! every other rank's (and its own) compression, and two buckets can be in
+//! flight on one link (frames are tagged with the per-bucket
+//! [`SyncBuckets::sub_round`]).
+//!
+//! The wire protocol per bucket is byte-identical to the whole-vector
+//! path's — the exchange phases (`peer::ring_rounds`, `peer::ps_rounds`)
+//! and the compression phase (`peer::ps_prepare`, `peer::gather`) are the
+//! *same functions* the sequential path runs, just driven per bucket from
+//! two threads.  Numerics: PS-path buckets are bit-identical to the
+//! bucketed sequential reference (the central engine loop with the same
+//! bucket schedule); ring-path buckets agree within the documented f32
+//! reduction-order tolerance.  `rust/tests/pipeline_parity.rs` pins both
+//! across every plan family.
+//!
+//! Queue discipline: jobs and results ride two SPSC mpsc channels in
+//! strict bucket order (at most one bucket being prepared while one is on
+//! the wire — the "double buffer").  An exchange error aborts the whole
+//! run, so a pipeline that returned an error must be dropped, not reused
+//! (in-flight results would desynchronize a reuse; the engine's drivers
+//! tear the run down on any `TransportError`).
+
+use super::peer::{self, Mode, PeerTransport, TransportError};
+use crate::collective::bucket::{SyncBuckets, SyncInfo};
+use crate::collective::{PsyncRound, WireCost};
+use crate::compressor::{payload_bits_wire, Compressor, Ctx, Scratch, Selection};
+use crate::kernel::dense as math;
+use crate::transport::wire::WireMsg;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// One bucket's compression request (main thread → prepare thread).
+struct PrepJob {
+    bucket: usize,
+    /// Ring route (shared support) vs parameter server.
+    ring: bool,
+    c: Arc<dyn Compressor>,
+    /// `round` is the bucket's sub-round; `worker` the sender's rank.
+    ctx: Ctx,
+    /// Copy of the bucket's values (taken before any mutation this round).
+    data: Vec<f32>,
+    /// Recycled working buffer (becomes `compact` or the decoded `own`).
+    buf: Vec<f32>,
+}
+
+/// One bucket's compressed form (prepare thread → main thread).
+struct Prepared {
+    bucket: usize,
+    sel: Selection,
+    /// Accounted upload bits for this bucket's message.
+    bits: u64,
+    /// The bucket's original values (returned for residual arithmetic).
+    data: Vec<f32>,
+    payload: Payload,
+}
+
+enum Payload {
+    /// Shared-support route: gathered selected values, ready for the ring.
+    Ring { compact: Vec<f32> },
+    /// PS route: encoded upload + its decoded form (the exact bits the
+    /// server aggregates).
+    Ps { msg: WireMsg, own: Vec<f32> },
+    /// Empty selection: nothing travels (buffer returned for recycling).
+    Empty { buf: Vec<f32> },
+}
+
+fn prepare(job: PrepJob, scratch: &mut Scratch) -> Prepared {
+    let PrepJob { bucket, ring, c, ctx, data, mut buf } = job;
+    let d = data.len();
+    if ring {
+        // Globally-synchronized selections ignore the worker id.
+        let sel = c.select_with(Ctx { round: ctx.round, worker: 0 }, &data, scratch);
+        let bits = payload_bits_wire(c.wire_scheme(), &sel, d);
+        if sel.count(d) == 0 {
+            buf.clear();
+            return Prepared { bucket, sel, bits: 0, data, payload: Payload::Empty { buf } };
+        }
+        peer::gather(&sel, &data, &mut buf);
+        Prepared { bucket, sel, bits, data, payload: Payload::Ring { compact: buf } }
+    } else {
+        let up = peer::ps_prepare(c.as_ref(), ctx, &data, buf, scratch)
+            .expect("self-encoded frame must decode");
+        let bits = up.msg.bit_len;
+        Prepared { bucket, sel: up.sel, bits, data, payload: Payload::Ps { msg: up.msg, own: up.own } }
+    }
+}
+
+fn helper_loop(rx: Receiver<PrepJob>, tx: Sender<Prepared>) {
+    let mut scratch = Scratch::new();
+    while let Ok(job) = rx.recv() {
+        let prep = prepare(job, &mut scratch);
+        if tx.send(prep).is_err() {
+            break; // driver dropped mid-run: stop quietly
+        }
+    }
+}
+
+/// A persistent per-worker prepare thread plus the buffers and scratch the
+/// transport-side half of the pipeline needs.  One per worker, living for
+/// one worker-driver run — a full `run_resident`/`run_distributed` call,
+/// i.e. an epoch of steps in the trainers — parking on its queue between
+/// syncs.  No per-round (and certainly no per-bucket) spawns; the cost is
+/// one thread spawn+join per worker per driver call.
+pub struct BucketPipeline {
+    tx: Option<Sender<PrepJob>>,
+    rx: Receiver<Prepared>,
+    handle: Option<JoinHandle<()>>,
+    /// Recycled f32 buffers (bucket copies, compacts, own/agg staging).
+    spare: Vec<Vec<f32>>,
+    /// Transport-side scratch (PS server buffers).
+    scratch: Scratch,
+}
+
+impl BucketPipeline {
+    pub fn new() -> Self {
+        let (jtx, jrx) = channel::<PrepJob>();
+        let (ptx, prx) = channel::<Prepared>();
+        let handle = std::thread::Builder::new()
+            .name("cser-bucket-prep".into())
+            .spawn(move || helper_loop(jrx, ptx))
+            .expect("spawning the bucket-prepare thread");
+        BucketPipeline {
+            tx: Some(jtx),
+            rx: prx,
+            handle: Some(handle),
+            spare: Vec::new(),
+            scratch: Scratch::new(),
+        }
+    }
+
+    fn take_buf(&mut self) -> Vec<f32> {
+        self.spare.pop().unwrap_or_default()
+    }
+
+    fn submit(&mut self, job: PrepJob) -> Result<(), TransportError> {
+        self.tx
+            .as_ref()
+            .expect("pipeline sender lives until drop")
+            .send(job)
+            .map_err(|_| TransportError("bucket-prepare thread died".into()))
+    }
+
+    fn recv_prepared(&mut self, bucket: usize) -> Result<Prepared, TransportError> {
+        let prep = self
+            .rx
+            .recv()
+            .map_err(|_| TransportError("bucket-prepare thread died".into()))?;
+        if prep.bucket != bucket {
+            return Err(TransportError(format!(
+                "bucket pipeline desynchronized: expected bucket {bucket}, got {}",
+                prep.bucket
+            )));
+        }
+        Ok(prep)
+    }
+}
+
+impl Default for BucketPipeline {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Drop for BucketPipeline {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // closes the job queue; the helper exits
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Queue bucket `b`'s compression job (copying the bucket's current values).
+#[allow(clippy::too_many_arguments)]
+fn submit_job(
+    pipe: &mut BucketPipeline,
+    buckets: &SyncBuckets,
+    t_round: u64,
+    rank: usize,
+    ring: bool,
+    c: &Arc<dyn Compressor>,
+    v: &[f32],
+    b: usize,
+) -> Result<(), TransportError> {
+    let (s, e) = buckets.range(b);
+    let mut data = pipe.take_buf();
+    data.clear();
+    data.extend_from_slice(&v[s..e]);
+    let buf = pipe.take_buf();
+    pipe.submit(PrepJob {
+        bucket: b,
+        ring,
+        c: Arc::clone(c),
+        ctx: Ctx { round: buckets.sub_round(t_round, b), worker: rank as u32 },
+        data,
+        buf,
+    })
+}
+
+/// Run bucket `b`'s exchange + apply on the transport thread.  The wire
+/// traffic and arithmetic are identical to the whole-vector path's,
+/// restricted to the bucket (see the module docs).
+#[allow(clippy::too_many_arguments)]
+fn exchange_bucket(
+    t: &mut dyn PeerTransport,
+    prep: Prepared,
+    mode: Mode,
+    c: &Arc<dyn Compressor>,
+    wire_round: u64,
+    v: &mut [f32],
+    resid: Option<&mut [f32]>,
+    scratch: &mut Scratch,
+    spare: &mut Vec<Vec<f32>>,
+) -> Result<PsyncRound, TransportError> {
+    let db = v.len();
+    let n = t.n();
+    match prep.payload {
+        Payload::Empty { buf } => {
+            // C = 0 on this bucket: nothing travels.
+            if let Some(r) = resid {
+                r.copy_from_slice(v);
+            }
+            if mode == Mode::Exchange {
+                math::fill(v, 0.0);
+            }
+            spare.push(buf);
+            spare.push(prep.data);
+            Ok(PsyncRound {
+                selections: vec![prep.sel],
+                upload_bits_per_worker: 0,
+                allreduce_compatible: true,
+                wire: Some(WireCost { up_bits: 0, down_bits: 0, steps: 0 }),
+            })
+        }
+        Payload::Ring { mut compact } => {
+            let (up, down) = peer::ring_rounds(t, &mut compact, wire_round)?;
+            // Residual (v off support) before the mean overwrites the
+            // selected ranges; v itself was untouched while the bucket was
+            // in flight.
+            if let Some(r) = resid {
+                r.copy_from_slice(v);
+                prep.sel.for_each_range(db, |s, e| math::fill(&mut r[s..e], 0.0));
+            }
+            if mode == Mode::Exchange {
+                math::fill(v, 0.0);
+            }
+            let mut cursor = 0usize;
+            prep.sel.for_each_range(db, |s, e| {
+                v[s..e].copy_from_slice(&compact[cursor..cursor + (e - s)]);
+                cursor += e - s;
+            });
+            spare.push(compact);
+            spare.push(prep.data);
+            Ok(PsyncRound {
+                selections: vec![prep.sel],
+                upload_bits_per_worker: prep.bits,
+                allreduce_compatible: true,
+                wire: Some(WireCost { up_bits: up, down_bits: down, steps: 2 * (n as u32 - 1) }),
+            })
+        }
+        Payload::Ps { msg, own } => {
+            let mut agg = spare.pop().unwrap_or_default();
+            let (acct, up, down) = peer::ps_rounds(t, c.as_ref(), wire_round, msg, &own, &mut agg, scratch)?;
+            // Apply: v' = mean + (v − C(v)), the residual computed against
+            // the exact decoded upload — same expressions as the
+            // whole-vector path, element by element.
+            match mode {
+                Mode::Psync => {
+                    if let Some(r) = resid {
+                        for j in 0..db {
+                            let rj = prep.data[j] - own[j];
+                            r[j] = rj;
+                            v[j] = agg[j] + rj;
+                        }
+                    } else {
+                        for j in 0..db {
+                            v[j] = agg[j] + (prep.data[j] - own[j]);
+                        }
+                    }
+                }
+                Mode::Exchange => {
+                    if let Some(r) = resid {
+                        for j in 0..db {
+                            r[j] = prep.data[j] - own[j];
+                        }
+                    }
+                    v.copy_from_slice(&agg);
+                }
+            }
+            spare.push(agg);
+            spare.push(own);
+            spare.push(prep.data);
+            Ok(PsyncRound {
+                selections: vec![prep.sel],
+                upload_bits_per_worker: acct,
+                allreduce_compatible: false,
+                wire: Some(WireCost { up_bits: up, down_bits: down, steps: 2 }),
+            })
+        }
+    }
+}
+
+/// Degenerate single-peer fleet: no exchange — each bucket runs the
+/// in-process collective locally (identical to the central bucketed
+/// reference at n = 1).
+fn local_sync(
+    pipe: &mut BucketPipeline,
+    mode: Mode,
+    v: &mut [f32],
+    mut resid: Option<&mut [f32]>,
+    c: &Arc<dyn Compressor>,
+    t_round: u64,
+    buckets: &SyncBuckets,
+) -> Result<SyncInfo, TransportError> {
+    let mut info = SyncInfo::new();
+    for b in 0..buckets.k() {
+        let (s, e) = buckets.range(b);
+        let sub = buckets.sub_round(t_round, b);
+        let mut data = pipe.take_buf();
+        data.clear();
+        data.extend_from_slice(&v[s..e]);
+        let mut vs = vec![data];
+        let round = if let Some(r) = resid.as_deref_mut() {
+            let mut rs = vec![vec![0.0f32; e - s]];
+            let round = match mode {
+                Mode::Psync => {
+                    crate::collective::psync_with(&mut vs, Some(&mut rs), c.as_ref(), sub, &mut pipe.scratch)
+                }
+                Mode::Exchange => crate::collective::exchange_mean_with(
+                    &mut vs,
+                    Some(&mut rs),
+                    c.as_ref(),
+                    sub,
+                    &mut pipe.scratch,
+                ),
+            };
+            r[s..e].copy_from_slice(&rs[0]);
+            round
+        } else {
+            match mode {
+                Mode::Psync => crate::collective::psync_with(&mut vs, None, c.as_ref(), sub, &mut pipe.scratch),
+                Mode::Exchange => {
+                    crate::collective::exchange_mean_with(&mut vs, None, c.as_ref(), sub, &mut pipe.scratch)
+                }
+            }
+        };
+        v[s..e].copy_from_slice(&vs[0]);
+        pipe.spare.push(vs.pop().unwrap());
+        info.push(s, e, round);
+    }
+    Ok(info)
+}
+
+/// This worker's side of a bucketed, double-buffered PSync/exchange round:
+/// bucket k+1 compresses on the prepare thread while bucket k's exchange
+/// runs here.  `v` (and `resid`) cover the full flat vector; the returned
+/// [`SyncInfo`] carries one [`PsyncRound`] per bucket plus the merged
+/// accounting (the exact per-bucket sum — see `collective::bucket` for the
+/// sum-invariance contract).
+#[allow(clippy::too_many_arguments)]
+pub fn pipelined_sync(
+    pipe: &mut BucketPipeline,
+    t: &mut dyn PeerTransport,
+    mode: Mode,
+    v: &mut [f32],
+    mut resid: Option<&mut [f32]>,
+    c: &Arc<dyn Compressor>,
+    t_round: u64,
+    buckets: &SyncBuckets,
+) -> Result<SyncInfo, TransportError> {
+    debug_assert_eq!(v.len(), buckets.dim());
+    if t.n() == 1 {
+        return local_sync(pipe, mode, v, resid, c, t_round, buckets);
+    }
+    let rank = t.rank();
+    let ring = c.globally_synchronized() && !c.is_dense();
+    let k = buckets.k();
+    let mut info = SyncInfo::new();
+    submit_job(pipe, buckets, t_round, rank, ring, c, v, 0)?;
+    for b in 0..k {
+        if b + 1 < k {
+            submit_job(pipe, buckets, t_round, rank, ring, c, v, b + 1)?;
+        }
+        let prep = pipe.recv_prepared(b)?;
+        let (s, e) = buckets.range(b);
+        let wire_round = buckets.sub_round(t_round, b);
+        let rb = resid.as_deref_mut().map(|r| &mut r[s..e]);
+        let round = exchange_bucket(
+            t,
+            prep,
+            mode,
+            c,
+            wire_round,
+            &mut v[s..e],
+            rb,
+            &mut pipe.scratch,
+            &mut pipe.spare,
+        )?;
+        info.push(s, e, round);
+    }
+    Ok(info)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressor::{Grbs, Identity, Qsgd, RandK, TopK, Zero};
+    use crate::transport::mesh::channel_mesh;
+    use crate::util::prop::{slices_close, Gen};
+
+    /// Sequential bucketed reference: the central in-process collective run
+    /// bucket by bucket with the same sub-rounds.
+    fn sequential_bucketed(
+        vs: &[Vec<f32>],
+        c: &Arc<dyn Compressor>,
+        t_round: u64,
+        buckets: &SyncBuckets,
+        exchange: bool,
+    ) -> (Vec<Vec<f32>>, Vec<Vec<f32>>, u64) {
+        let n = vs.len();
+        let d = vs[0].len();
+        let mut out = vs.to_vec();
+        let mut res = vec![vec![0.0f32; d]; n];
+        let mut bits = 0u64;
+        for b in 0..buckets.k() {
+            let (s, e) = buckets.range(b);
+            let mut stage: Vec<Vec<f32>> = out.iter().map(|v| v[s..e].to_vec()).collect();
+            let mut rstage: Vec<Vec<f32>> = vec![vec![0.0f32; e - s]; n];
+            let round = if exchange {
+                crate::collective::exchange_mean(
+                    &mut stage,
+                    Some(&mut rstage),
+                    c.as_ref(),
+                    buckets.sub_round(t_round, b),
+                )
+            } else {
+                crate::collective::psync(
+                    &mut stage,
+                    Some(&mut rstage),
+                    c.as_ref(),
+                    buckets.sub_round(t_round, b),
+                )
+            };
+            bits += round.upload_bits_per_worker;
+            for i in 0..n {
+                out[i][s..e].copy_from_slice(&stage[i]);
+                res[i][s..e].copy_from_slice(&rstage[i]);
+            }
+        }
+        (out, res, bits)
+    }
+
+    fn run_pipelined(
+        vs: &[Vec<f32>],
+        c: &Arc<dyn Compressor>,
+        t_round: u64,
+        buckets: &SyncBuckets,
+        mode: Mode,
+    ) -> Vec<(Vec<f32>, Vec<f32>, u64)> {
+        let n = vs.len();
+        let d = vs[0].len();
+        let eps = channel_mesh(n);
+        std::thread::scope(|s| {
+            let handles: Vec<_> = eps
+                .into_iter()
+                .enumerate()
+                .map(|(w, mut tp)| {
+                    let c = Arc::clone(c);
+                    let buckets = buckets.clone();
+                    let mut v = vs[w].clone();
+                    s.spawn(move || {
+                        let mut pipe = BucketPipeline::new();
+                        let mut r = vec![0.0f32; d];
+                        let info = pipelined_sync(
+                            &mut pipe,
+                            &mut tp,
+                            mode,
+                            &mut v,
+                            Some(&mut r),
+                            &c,
+                            t_round,
+                            &buckets,
+                        )
+                        .unwrap();
+                        (v, r, info.upload_bits_per_worker)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("pipelined peer panicked")).collect()
+        })
+    }
+
+    #[test]
+    fn pipelined_matches_sequential_bucketed_reference() {
+        // PS-path compressors bit-identical, ring within f32 tolerance,
+        // accounting exactly equal — per mode, per compressor, with uneven
+        // bucket bounds.
+        let (n, d) = (4, 103);
+        let mut g = Gen::replay(0xB0C4, 0);
+        let vs = g.worker_vecs(n, d);
+        let buckets = SyncBuckets::from_bounds(vec![0, 37, 64, 103]);
+        let comps: Vec<(Arc<dyn Compressor>, bool)> = vec![
+            (Arc::new(TopK::new(4.0)), true),
+            (Arc::new(RandK::new(4.0)), true),
+            (Arc::new(Qsgd::new(4)), true),
+            (Arc::new(Grbs::new(2.0, 8, 5)), false),
+            (Arc::new(Identity), false),
+            (Arc::new(Zero), false),
+        ];
+        for (c, exact) in &comps {
+            for (mode, exchange) in [(Mode::Psync, false), (Mode::Exchange, true)] {
+                let (want_v, want_r, want_bits) =
+                    sequential_bucketed(&vs, c, 9, &buckets, exchange);
+                let got = run_pipelined(&vs, c, 9, &buckets, mode);
+                let tol = if *exact { 0.0 } else { 1e-5 };
+                for (i, (v, r, bits)) in got.iter().enumerate() {
+                    slices_close(&want_v[i], v, tol)
+                        .unwrap_or_else(|e| panic!("{} {mode:?} w{i}: {e}", c.name()));
+                    slices_close(&want_r[i], r, tol)
+                        .unwrap_or_else(|e| panic!("{} {mode:?} resid w{i}: {e}", c.name()));
+                    assert_eq!(*bits, want_bits, "{} {mode:?} w{i}: accounted bits", c.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bucket_sum_accounting_equals_whole_vector_for_shared_support() {
+        // GRBS with bucket-tiling blocks: per-bucket accounted bits sum to
+        // exactly the whole-vector accounting (SharedSupport charges
+        // 32·count either way), and Identity trivially so.
+        let (n, d) = (4, 1024);
+        let mut g = Gen::replay(0xACC7, 1);
+        let vs = g.worker_vecs(n, d);
+        let k = 4;
+        let buckets = SyncBuckets::even(d, k);
+        // Whole vector: 64 blocks of 16, keep 16 -> 256 values.  Per
+        // bucket: 16 blocks of 16, keep 4 -> 64 values x 4 buckets = 256.
+        let whole: Arc<dyn Compressor> = Arc::new(Grbs::new(4.0, 64, 7));
+        let per_bucket: Arc<dyn Compressor> = Arc::new(Grbs::new(4.0, 16, 7));
+        let mut vs_whole = vs.clone();
+        let whole_round = crate::collective::psync(&mut vs_whole, None, whole.as_ref(), 3);
+        let got = run_pipelined(&vs, &per_bucket, 3, &buckets, Mode::Psync);
+        for (_, _, bits) in &got {
+            assert_eq!(
+                *bits, whole_round.upload_bits_per_worker,
+                "bucket-sum accounting must equal whole-vector accounting"
+            );
+        }
+        let ident: Arc<dyn Compressor> = Arc::new(Identity);
+        let got = run_pipelined(&vs, &ident, 4, &buckets, Mode::Psync);
+        for (_, _, bits) in &got {
+            assert_eq!(*bits, d as u64 * 32);
+        }
+    }
+
+    #[test]
+    fn single_peer_pipelined_psync_is_identity() {
+        let d = 40;
+        let mut g = Gen::replay(0x51, 2);
+        let v0 = g.vec(d);
+        let buckets = SyncBuckets::even(d, 3);
+        let c: Arc<dyn Compressor> = Arc::new(Grbs::new(2.0, 4, 3));
+        let mut eps = channel_mesh(1);
+        let mut tp = eps.pop().unwrap();
+        let mut pipe = BucketPipeline::new();
+        let mut v = v0.clone();
+        let info =
+            pipelined_sync(&mut pipe, &mut tp, Mode::Psync, &mut v, None, &c, 5, &buckets).unwrap();
+        assert_eq!(v, v0, "n = 1 PSync is compress + decompress = identity");
+        assert_eq!(info.parts().len(), 3);
+    }
+}

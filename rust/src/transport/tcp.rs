@@ -21,7 +21,7 @@
 
 use super::peer::{PeerTransport, Tag, TransportError};
 use super::wire::WireMsg;
-use std::io::{BufReader, BufWriter, Read, Write};
+use std::io::{BufReader, IoSlice, Read, Write};
 use std::net::TcpStream;
 use std::sync::Arc;
 
@@ -37,7 +37,32 @@ pub const FRAME_HEADER_BYTES: u64 = 17;
 
 struct Link {
     reader: BufReader<TcpStream>,
-    writer: BufWriter<TcpStream>,
+    writer: TcpStream,
+    /// Reusable serialization buffer: the payload's little-endian bytes.
+    wbuf: Vec<u8>,
+}
+
+/// Write `hdr` then `payload` through as few syscalls as the kernel allows —
+/// one `writev` in the common case (the old path buffered the header and
+/// the payload word-by-word through a `BufWriter`, costing a second syscall
+/// whenever a frame outgrew the 8 KiB buffer, i.e. on every large bucket).
+/// Loops on partial/interrupted writes.
+fn write_all_vectored(w: &mut TcpStream, hdr: &[u8], payload: &[u8]) -> std::io::Result<()> {
+    let (mut h, mut p) = (0usize, 0usize);
+    while h < hdr.len() || p < payload.len() {
+        let bufs = [IoSlice::new(&hdr[h..]), IoSlice::new(&payload[p..])];
+        match w.write_vectored(&bufs) {
+            Ok(0) => return Err(std::io::ErrorKind::WriteZero.into()),
+            Ok(n) => {
+                let adv_h = n.min(hdr.len() - h);
+                h += adv_h;
+                p += n - adv_h;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
 }
 
 pub struct TcpTransport {
@@ -54,7 +79,8 @@ pub struct TcpTransport {
 
 impl TcpTransport {
     /// Join job `rendezvous` as worker `rank` of `n`: run the bootstrap and
-    /// wrap the mesh sockets in buffered links.
+    /// wrap the mesh sockets in links (buffered reads; writes go out as one
+    /// vectored header+payload write per frame).
     pub fn connect(rendezvous: &str, rank: usize, n: usize) -> Result<TcpTransport, TransportError> {
         let streams = super::rendezvous::establish(rendezvous, rank, n)?;
         let mut links = Vec::with_capacity(n);
@@ -67,7 +93,7 @@ impl TcpTransport {
                             .try_clone()
                             .map_err(|e| TransportError(format!("splitting socket: {e}")))?,
                     );
-                    Some(Link { reader, writer: BufWriter::new(stream) })
+                    Some(Link { reader, writer: stream, wbuf: Vec::new() })
                 }
             });
         }
@@ -104,19 +130,20 @@ impl TcpTransport {
         hdr[..8].copy_from_slice(&round.to_le_bytes());
         hdr[8] = tag as u8;
         hdr[9..].copy_from_slice(&msg.bit_len.to_le_bytes());
-        let io = |e: std::io::Error| TransportError(format!("sending to peer {to}: {e}"));
-        link.writer.write_all(&hdr).map_err(io)?;
-        let mut written = 0usize;
+        // Serialize the payload into the link's reusable buffer, then move
+        // header + payload with one vectored write (two syscalls → one).
+        link.wbuf.clear();
+        link.wbuf.reserve(nbytes);
         for w in &msg.words {
             let bytes = w.to_le_bytes();
-            let take = (nbytes - written).min(8);
-            link.writer.write_all(&bytes[..take]).map_err(io)?;
-            written += take;
-            if written == nbytes {
+            let take = (nbytes - link.wbuf.len()).min(8);
+            link.wbuf.extend_from_slice(&bytes[..take]);
+            if link.wbuf.len() == nbytes {
                 break;
             }
         }
-        link.writer.flush().map_err(io)?;
+        let io = |e: std::io::Error| TransportError(format!("sending to peer {to}: {e}"));
+        write_all_vectored(&mut link.writer, &hdr, &link.wbuf).map_err(io)?;
         self.payload_bits_sent += msg.bit_len;
         self.frame_bytes_sent += FRAME_HEADER_BYTES + nbytes as u64;
         Ok(())

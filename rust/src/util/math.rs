@@ -2,7 +2,11 @@
 //! [`crate::kernel::dense`] (the dedicated kernel layer, which also holds
 //! the fused single-pass variants in [`crate::kernel::fused`] and the
 //! batched matmul tiles in [`crate::kernel::gemm`]).  Existing `math::`
-//! call sites keep working through this re-export; new hot-path code should
-//! use `crate::kernel` directly.
+//! call sites keep working through this re-export; new hot-path code
+//! imports `crate::kernel` directly — the bucketed sync pipeline
+//! (`transport::pipeline`, `collective::bucket`, `engine::pipeline`) was
+//! written against `kernel::dense` and adds no new `util::math` callers.
+//! The shim retires once the remaining legacy call sites (benches,
+//! harnesses, model zoo) migrate.
 
 pub use crate::kernel::dense::*;

@@ -1,0 +1,184 @@
+//! Pipelined-vs-sequential parity for the bucketed gradient pipeline.
+//!
+//! The sequential reference is the **central bucketed** engine loop (every
+//! collective staged bucket-by-bucket through the in-process backend under
+//! the per-bucket sub-rounds).  The pipelined path — worker-resident or
+//! multi-rank over real sockets, each worker overlapping bucket k+1's
+//! compression with bucket k's exchange on its prepare thread — must
+//! reproduce it:
+//!
+//! * **bit-identically** where every collective rides a parameter-server /
+//!   dense-mean route (per-worker compressors, dense SGD);
+//! * within the documented f32 reduction-order tolerance where buckets
+//!   ride the ring (globally-synchronized sparsifiers);
+//! * with **exactly equal accounting** everywhere (bits are
+//!   selection-count arithmetic, not f32 sums).
+//!
+//! All seven plan families × the mesh backend are pinned here plus in the
+//! engine's in-module tests; the TCP backend is pinned on a PS plan
+//! (bit-exact) and the GRBS CSER plan (ring tolerance), and a killed rank
+//! mid-pipelined-round must error peers out instead of wedging them.
+
+use cser::compressor::{Compressor, Grbs, RandK, TopK};
+use cser::engine::{CommPlan, ErrorResetEngine, SyncBuckets};
+use cser::optimizer::DistOptimizer;
+use cser::transport::rendezvous::free_loopback_addr;
+use cser::transport::TcpTransport;
+use cser::util::prop::slices_close;
+
+type PlanFactory = Box<dyn Fn() -> CommPlan + Send + Sync>;
+
+fn grbs(r: f64, nb: usize, seed: u64) -> Box<dyn Compressor> {
+    Box::new(Grbs::new(r, nb, seed))
+}
+
+/// (name, exact, factory) — `exact` marks plans whose every collective is a
+/// PS/dense route (bit-identical under the pipeline).
+fn plan_factories() -> Vec<(&'static str, bool, PlanFactory)> {
+    vec![
+        ("sgd", true, Box::new(CommPlan::full_sgd) as PlanFactory),
+        ("ef-grbs", false, Box::new(|| CommPlan::ef_sgd(grbs(4.0, 6, 3)))),
+        ("ef-topk", true, Box::new(|| CommPlan::ef_sgd(Box::new(TopK::new(4.0))))),
+        ("local-sgd", false, Box::new(|| CommPlan::local_sgd(2))),
+        ("qsparse", false, Box::new(|| CommPlan::qsparse(grbs(2.0, 6, 5), 3))),
+        ("cser", false, Box::new(|| CommPlan::cser(grbs(2.0, 6, 7), grbs(4.0, 6, 9), 2))),
+        (
+            "cser-perworker",
+            true,
+            Box::new(|| CommPlan::cser(Box::new(RandK::new(4.0)), Box::new(TopK::new(4.0)), 2)),
+        ),
+        ("csea", false, Box::new(|| CommPlan::csea(grbs(2.0, 6, 11)))),
+        ("cser-pl", false, Box::new(|| CommPlan::cser_pl(grbs(2.0, 6, 13), 3))),
+        ("cser2", false, Box::new(|| CommPlan::cser_impl2(grbs(2.0, 6, 7), grbs(4.0, 6, 9), 2))),
+    ]
+}
+
+fn grad_fn(d: usize) -> impl Fn(usize, &[f32], &mut [f32]) -> f32 + Sync {
+    move |w: usize, x: &[f32], out: &mut [f32]| -> f32 {
+        let mut loss = 0.0f32;
+        for (j, (o, xi)) in out.iter_mut().zip(x).enumerate() {
+            *o = xi - 1.0 + 0.05 * ((w * 31 + j) % 7) as f32;
+            loss += *o * *o;
+        }
+        loss / d as f32
+    }
+}
+
+/// Central bucketed reference run: returns (per-worker models, per-step
+/// (grad_bits, model_bits)).
+fn run_central_bucketed(
+    mk: &PlanFactory,
+    init: &[f32],
+    n: usize,
+    steps: usize,
+    buckets: &SyncBuckets,
+) -> (ErrorResetEngine, Vec<(u64, u64)>) {
+    let d = init.len();
+    let gf = grad_fn(d);
+    let mut eng = ErrorResetEngine::new(init, n, 0.9, mk());
+    eng.set_bucketing(Some(buckets.clone()));
+    let mut grads = vec![vec![0.0f32; d]; n];
+    let mut stats = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        for w in 0..n {
+            gf(w, eng.worker_model(w), &mut grads[w]);
+        }
+        let s = eng.step(&grads, 0.05);
+        stats.push((s.grad_bits, s.model_bits));
+    }
+    (eng, stats)
+}
+
+#[test]
+fn pipelined_resident_matches_sequential_bucketed_all_plans() {
+    let (n, d, steps) = (4, 31, 6);
+    let init: Vec<f32> = (0..d).map(|j| (j as f32 * 0.29).sin()).collect();
+    let gf = grad_fn(d);
+    // Deliberately uneven, layer-boundary-style bounds.
+    let buckets = SyncBuckets::from_bounds(vec![0, 11, 18, 31]);
+    for (name, exact, mk) in plan_factories() {
+        let (central, central_stats) = run_central_bucketed(&mk, &init, n, steps, &buckets);
+        let mut resident = ErrorResetEngine::new(&init, n, 0.9, mk());
+        resident.set_bucketing(Some(buckets.clone()));
+        let reports = resident.run_resident(steps, 0.05, f64::INFINITY, &gf);
+        assert_eq!(reports.len(), steps, "{name}");
+        for i in 0..n {
+            if exact {
+                assert_eq!(
+                    central.worker_model(i),
+                    resident.worker_model(i),
+                    "{name}: worker {i} must be bit-identical (PS/dense routes)"
+                );
+            } else {
+                slices_close(central.worker_model(i), resident.worker_model(i), 1e-4)
+                    .unwrap_or_else(|e| panic!("{name}: worker {i}: {e}"));
+            }
+        }
+        for (rep, (gb, mb)) in reports.iter().zip(&central_stats) {
+            assert_eq!(rep.stats.grad_bits, *gb, "{name}: grad accounting");
+            assert_eq!(rep.stats.model_bits, *mb, "{name}: model accounting");
+        }
+    }
+}
+
+/// Run one engine per rank over real loopback TCP with bucketing enabled.
+fn run_tcp_pipelined(
+    mk: &PlanFactory,
+    init: &[f32],
+    n: usize,
+    steps: usize,
+    buckets: &SyncBuckets,
+) -> Vec<Vec<f32>> {
+    let addr = free_loopback_addr().expect("loopback port");
+    let gf = grad_fn(init.len());
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..n)
+            .map(|rank| {
+                let addr = addr.clone();
+                let buckets = buckets.clone();
+                let gf = &gf;
+                s.spawn(move || {
+                    let mut tp = TcpTransport::connect(&addr, rank, n).expect("tcp join");
+                    let mut eng = ErrorResetEngine::new(init, 1, 0.9, mk());
+                    eng.set_bucketing(Some(buckets));
+                    let reports =
+                        eng.run_distributed(&mut tp, steps, 0.05, f64::INFINITY, gf).unwrap();
+                    assert_eq!(reports.len(), steps);
+                    eng.worker_model(0).to_vec()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("rank panicked")).collect()
+    })
+}
+
+#[test]
+fn pipelined_tcp_ps_plan_is_bit_identical_to_sequential() {
+    // Per-worker compressors: every bucket is a PS round, so 3 ranks over
+    // real sockets with two buckets in flight must equal the central
+    // sequential bucketed loop bit-for-bit.
+    let (n, d, steps) = (3, 26, 5);
+    let init: Vec<f32> = (0..d).map(|j| (j as f32 * 0.33).cos()).collect();
+    let buckets = SyncBuckets::from_bounds(vec![0, 9, 26]);
+    let mk: PlanFactory =
+        Box::new(|| CommPlan::cser(Box::new(RandK::new(4.0)), Box::new(TopK::new(4.0)), 2));
+    let (central, _) = run_central_bucketed(&mk, &init, n, steps, &buckets);
+    let models = run_tcp_pipelined(&mk, &init, n, steps, &buckets);
+    for (i, m) in models.iter().enumerate() {
+        assert_eq!(central.worker_model(i), m.as_slice(), "rank {i} diverged over TCP");
+    }
+}
+
+#[test]
+fn pipelined_tcp_grbs_ring_within_tolerance() {
+    let (n, d, steps) = (3, 24, 5);
+    let init: Vec<f32> = (0..d).map(|j| (j as f32 * 0.19).sin()).collect();
+    let buckets = SyncBuckets::from_bounds(vec![0, 8, 16, 24]);
+    let mk: PlanFactory = Box::new(|| CommPlan::cser(grbs(2.0, 4, 7), grbs(2.0, 4, 9), 2));
+    let (central, _) = run_central_bucketed(&mk, &init, n, steps, &buckets);
+    let models = run_tcp_pipelined(&mk, &init, n, steps, &buckets);
+    for (i, m) in models.iter().enumerate() {
+        slices_close(central.worker_model(i), m, 1e-4)
+            .unwrap_or_else(|e| panic!("rank {i}: {e}"));
+    }
+}

@@ -29,7 +29,7 @@ use cser::engine::{CommPlan, ErrorResetEngine};
 use cser::models::{GradModel, Mlp};
 use cser::optimizer::DistOptimizer;
 use cser::transport::rendezvous::free_loopback_addr;
-use cser::transport::Backend;
+use cser::transport::{Backend, TcpTransport};
 
 fn workload() -> (ClassDataset, ClassDataset, Mlp) {
     let (tr, te) = ClassDataset::gaussian_mixture(10, 16, 1024, 256, 1.2, 0.8, 0.0, 7);
@@ -165,6 +165,121 @@ fn four_process_cser_grbs_matches_central_within_ring_tolerance() {
             "epoch {}: cum_seconds drifted",
             tcp.epoch
         );
+    }
+}
+
+#[test]
+fn four_process_bucketed_ps_path_matches_central_bit_for_bit() {
+    // The bucketed pipeline over real sockets: with `cfg.buckets` set the
+    // trainer derives layer-aware bucket bounds from the MLP's
+    // `param_layout()` on every rank, each rank overlaps bucket
+    // compression with the exchange, and — per-worker compressors, so
+    // every bucket is a PS round — the 4-process job must equal the
+    // central sequential-bucketed trainer exactly: identical records and
+    // identical models.
+    let n = 4;
+    let mut cfg = quick_cfg(2);
+    cfg.buckets = 3;
+    let mk: Box<MkOpt> = Box::new(|init, n| {
+        Box::new(ErrorResetEngine::new(
+            init,
+            n,
+            0.9,
+            CommPlan::cser(
+                Box::new(cser::compressor::RandK::new(4.0)),
+                Box::new(cser::compressor::TopK::new(4.0)),
+                2,
+            ),
+        ))
+    });
+    let (central_rec, central_models) = run_central(&mk, n, &cfg);
+    assert!(!central_rec.diverged);
+    let ranks = run_tcp(&mk, n, &cfg);
+    for (rank, (rec, model)) in ranks.iter().enumerate() {
+        assert_eq!(
+            rec.to_json(),
+            central_rec.to_json(),
+            "rank {rank}: bucketed RunRecord differs from the central trainer"
+        );
+        assert_eq!(
+            model.as_slice(),
+            central_models[rank].as_slice(),
+            "rank {rank}: bucketed final model differs bit-for-bit"
+        );
+    }
+}
+
+#[test]
+fn killed_tcp_worker_errors_peers_out_of_pipelined_round() {
+    // Rank 2 dies partway through a bucketed multi-process run (its
+    // gradient oracle panics, unwinding drops its transport and its
+    // prepare thread).  The survivors' next collective must surface a
+    // TransportError — run_distributed returns Err — instead of wedging
+    // in a half-finished pipelined round.
+    use cser::engine::SyncBuckets;
+    let (n, d, steps) = (3usize, 24usize, 6usize);
+    let init = vec![0.3f32; d];
+    let buckets = SyncBuckets::from_bounds(vec![0, 7, 24]);
+    let addr = free_loopback_addr().unwrap();
+    let mut outcomes = Vec::new();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..n)
+            .map(|rank| {
+                let addr = addr.clone();
+                let buckets = buckets.clone();
+                let init = init.clone();
+                s.spawn(move || -> Result<(), String> {
+                    let calls = std::sync::atomic::AtomicUsize::new(0);
+                    let gf = cser::engine::as_grad(
+                        move |_w: usize, x: &[f32], out: &mut [f32]| -> f32 {
+                            let k = calls.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                            if rank == 2 && k >= 3 {
+                                panic!("rank 2 killed mid-run (test)");
+                            }
+                            for (o, xi) in out.iter_mut().zip(x) {
+                                *o = 0.1 * *xi + 0.01;
+                            }
+                            0.5
+                        },
+                    );
+                    let mut tp =
+                        TcpTransport::connect(&addr, rank, n).map_err(|e| e.to_string())?;
+                    let mut eng = ErrorResetEngine::new(
+                        &init,
+                        1,
+                        0.9,
+                        CommPlan::cser(
+                            Box::new(cser::compressor::RandK::new(4.0)),
+                            Box::new(cser::compressor::TopK::new(4.0)),
+                            2,
+                        ),
+                    );
+                    eng.set_bucketing(Some(buckets));
+                    eng.run_distributed(&mut tp, steps, 0.05, f64::INFINITY, &gf)
+                        .map(|_| ())
+                        .map_err(|e| e.to_string())
+                })
+            })
+            .collect();
+        for (rank, h) in handles.into_iter().enumerate() {
+            outcomes.push((rank, h.join().map_err(|_| "panicked".to_string())));
+        }
+    });
+    for (rank, outcome) in &outcomes {
+        if *rank == 2 {
+            assert!(outcome.is_err(), "rank 2 was killed and must have panicked");
+        } else {
+            let inner = outcome
+                .as_ref()
+                .unwrap_or_else(|_| panic!("rank {rank} panicked instead of erroring"));
+            let err = inner
+                .as_ref()
+                .expect_err("surviving rank must surface a TransportError, not finish");
+            assert!(
+                err.contains("transport error") || err.contains("peer"),
+                "rank {rank}: unexpected error: {err}"
+            );
+        }
     }
 }
 
