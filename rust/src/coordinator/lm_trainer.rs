@@ -144,6 +144,7 @@ pub fn train_lm(
             seed: cfg.seed,
             points,
             diverged,
+            phases: Vec::new(),
         },
         step_seconds,
         final_eval_loss: eval_loss,

@@ -1,5 +1,6 @@
 //! Run records: per-epoch curves + summary, with JSON/CSV emission.
 
+use crate::obs::{Phase, PhaseStats, RingSnapshot};
 use crate::util::json::JsonWriter;
 use std::io::Write as _;
 use std::path::Path;
@@ -17,6 +18,42 @@ pub struct EpochPoint {
     pub cum_seconds: f64,
 }
 
+/// Wall-clock summary of one traced phase (see [`crate::obs::Phase`]),
+/// folded from this rank's ring buffers at the end of a traced run.
+/// Empty unless the run was launched with `--trace`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PhaseSummary {
+    pub phase: String,
+    pub count: u64,
+    pub total_ns: u64,
+    pub p50_ns: u64,
+    pub p99_ns: u64,
+}
+
+/// Fold ring snapshots from every thread of this rank into one
+/// [`PhaseSummary`] per phase that recorded at least one span.
+pub fn phase_summaries(snaps: &[RingSnapshot]) -> Vec<PhaseSummary> {
+    let mut merged: [PhaseStats; Phase::COUNT] = std::array::from_fn(|_| PhaseStats::default());
+    for s in snaps {
+        let folded = crate::obs::stats::fold(&s.events);
+        for (m, f) in merged.iter_mut().zip(folded.iter()) {
+            m.merge(f);
+        }
+    }
+    Phase::ALL
+        .iter()
+        .zip(merged.iter())
+        .filter(|(_, st)| st.count > 0)
+        .map(|(p, st)| PhaseSummary {
+            phase: p.name().to_string(),
+            count: st.count,
+            total_ns: st.total_ns,
+            p50_ns: st.p50(),
+            p99_ns: st.p99(),
+        })
+        .collect()
+}
+
 /// A full training run.
 #[derive(Debug, Clone)]
 pub struct RunRecord {
@@ -27,6 +64,8 @@ pub struct RunRecord {
     pub seed: u64,
     pub points: Vec<EpochPoint>,
     pub diverged: bool,
+    /// Per-phase timing summary; populated only on traced runs.
+    pub phases: Vec<PhaseSummary>,
 }
 
 impl RunRecord {
@@ -66,6 +105,18 @@ impl RunRecord {
         w.key("seed").int(self.seed as i64);
         w.key("diverged").bool(self.diverged);
         w.key("final_acc").num(self.final_acc());
+        // Additive field: consumers that predate tracing ignore it.
+        w.key("phases").begin_arr();
+        for p in &self.phases {
+            w.begin_obj();
+            w.key("phase").str(&p.phase);
+            w.key("count").int(p.count as i64);
+            w.key("total_ns").int(p.total_ns as i64);
+            w.key("p50_ns").int(p.p50_ns as i64);
+            w.key("p99_ns").int(p.p99_ns as i64);
+            w.end_obj();
+        }
+        w.end_arr();
         for (key, f) in [
             ("epoch", (|p: &EpochPoint| p.epoch as f64) as fn(&EpochPoint) -> f64),
             ("train_loss", |p| p.train_loss),
@@ -131,6 +182,7 @@ mod tests {
             lr: 0.1,
             seed: 1,
             diverged: false,
+            phases: Vec::new(),
             points: (0..3)
                 .map(|e| EpochPoint {
                     epoch: e,
@@ -150,6 +202,23 @@ mod tests {
         assert_eq!(j.get("optimizer").unwrap().as_str(), Some("cser"));
         assert_eq!(j.get("test_acc").unwrap().as_arr().unwrap().len(), 3);
         assert!((j.get("final_acc").unwrap().as_f64().unwrap() - 0.9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn phases_array_roundtrips() {
+        let mut r = record();
+        r.phases.push(PhaseSummary {
+            phase: "exchange".into(),
+            count: 4,
+            total_ns: 400,
+            p50_ns: 100,
+            p99_ns: 130,
+        });
+        let j = Json::parse(&r.to_json()).unwrap();
+        let arr = j.get("phases").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].get("phase").unwrap().as_str(), Some("exchange"));
+        assert_eq!(arr[0].get("count").unwrap().as_f64(), Some(4.0));
     }
 
     #[test]

@@ -294,6 +294,7 @@ pub fn load_records(path: &str) -> Result<Vec<RunRecord>, String> {
                 seed: r.get("seed").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64,
                 diverged: r.get("diverged").and_then(|v| v.as_bool()).unwrap_or(false),
                 points,
+                phases: Vec::new(),
             })
         })
         .collect()
@@ -311,6 +312,7 @@ mod tests {
             lr: 0.1,
             seed: 1,
             diverged: false,
+            phases: Vec::new(),
             points: (1..=10)
                 .map(|e| EpochPoint {
                     epoch: e,

@@ -12,11 +12,12 @@
 //! resulting curves are the substitutes for Figures 4/5/8/9.
 
 use super::checkpoint::Checkpoint;
-use super::metrics::{EpochPoint, RunRecord};
+use super::metrics::{phase_summaries, EpochPoint, PhaseSummary, RunRecord};
 use crate::data::{ClassDataset, Shard};
 use crate::engine::ErrorResetEngine;
 use crate::models::{GradModel, ModelScratch};
 use crate::network::CostModel;
+use crate::obs;
 use crate::optimizer::{DistOptimizer, RoundStats};
 use crate::transport::{peer, Backend, TcpTransport};
 use crate::util::pool::scope_zip;
@@ -65,6 +66,10 @@ pub struct TrainCfg {
     /// resident/TCP modes overlap each bucket's compression with the
     /// previous bucket's exchange (`engine::SyncPipeline`).
     pub buckets: usize,
+    /// When set, phase tracing is enabled for the run and this rank's
+    /// events are written to `<dir>/trace-rank<R>.jsonl` at the end
+    /// (`obs::export`); the record's `phases` summary is populated.
+    pub trace: Option<std::path::PathBuf>,
 }
 
 impl TrainCfg {
@@ -83,8 +88,37 @@ impl TrainCfg {
             backend: Backend::default(),
             ckpt: None,
             buckets: 0,
+            trace: None,
         }
     }
+}
+
+/// Arm the trace recorder for this run if `cfg.trace` is set.  The main
+/// thread registers here; worker/pipeline threads register themselves at
+/// their entry points (`engine::drive_worker`, `pipeline::helper_loop`).
+fn trace_begin(cfg: &TrainCfg) {
+    if cfg.trace.is_some() {
+        obs::set_enabled(true);
+        obs::register_thread("main");
+    }
+}
+
+/// Drain the recorder at the end of a traced run: write this rank's JSONL
+/// trace (spans from every registered thread plus the transport's per-peer
+/// wire counters) and fold the events into the record's phase summaries.
+/// No-op (empty summary) on untraced runs.
+fn trace_finish(cfg: &TrainCfg, rank: usize, peers: &[obs::PeerCounters]) -> Vec<PhaseSummary> {
+    let Some(dir) = &cfg.trace else {
+        return Vec::new();
+    };
+    let snaps = obs::snapshot_all();
+    let phases = phase_summaries(&snaps);
+    if let Err(e) = obs::export::write_rank_jsonl(dir, rank, &snaps, peers) {
+        eprintln!("warning: rank {rank}: writing trace to {}: {e}", dir.display());
+    }
+    obs::set_enabled(false);
+    obs::reset();
+    phases
 }
 
 /// Price one optimizer step's communication at paper scale (DESIGN.md §3)
@@ -164,6 +198,7 @@ pub fn train_classifier(
     let n = opt.n();
     let d = opt.dim();
     assert_eq!(d, model.dim());
+    trace_begin(cfg);
     opt.set_collective(cfg.backend.collective());
     let mut shards = Shard::split(train.len(), n, cfg.seed);
     let iters_per_epoch = (train.len() / (cfg.batch_per_worker * n)).max(1);
@@ -265,6 +300,7 @@ pub fn train_classifier(
         seed: cfg.seed,
         points,
         diverged,
+        phases: trace_finish(cfg, 0, &[]),
     }
 }
 
@@ -283,6 +319,7 @@ fn train_classifier_resident(
     let n = engine.n();
     let d = engine.dim();
     assert_eq!(d, model.dim());
+    trace_begin(cfg);
     // No collective is installed: resident workers execute the peer-owned
     // mesh collectives directly (`run_resident` never consults the central
     // `Collective`).
@@ -350,6 +387,7 @@ fn train_classifier_resident(
         seed: cfg.seed,
         points,
         diverged,
+        phases: trace_finish(cfg, 0, &[]),
     }
 }
 
@@ -390,6 +428,7 @@ fn train_classifier_tcp(
     assert_eq!(engine.n(), 1, "a Backend::Tcp engine holds exactly the local rank's worker");
     let d = engine.dim();
     assert_eq!(d, model.dim());
+    trace_begin(cfg);
     let n = n_peers;
     let mut tp = TcpTransport::connect(rendezvous, rank, n)
         .unwrap_or_else(|e| panic!("joining job at {rendezvous} as rank {rank}/{n}: {e}"));
@@ -500,6 +539,7 @@ fn train_classifier_tcp(
         seed: cfg.seed,
         points,
         diverged,
+        phases: trace_finish(cfg, rank, &tp.per_peer),
     }
 }
 

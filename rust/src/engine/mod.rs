@@ -46,6 +46,7 @@ pub use worker::{descent_into, WorkerState};
 
 use crate::compressor::{Compressor, Ctx, Selection};
 use crate::kernel::{dense as math, fused, Scratch};
+use crate::obs::{self, Phase};
 use crate::optimizer::{DistOptimizer, RoundStats};
 use crate::transport::mesh::channel_mesh;
 use crate::transport::peer::{self, PeerTransport, TransportError};
@@ -266,7 +267,10 @@ impl ErrorResetEngine {
             let mut reports = Vec::with_capacity(steps);
             let mut grads = vec![vec![0.0f32; d]];
             for _ in 0..steps {
-                let loss = grad(0, &self.workers[0].x, &mut grads[0]) as f64;
+                let loss = {
+                    let _s = obs::Span::enter(Phase::GradCompute);
+                    grad(0, &self.workers[0].x, &mut grads[0]) as f64
+                };
                 let stats = DistOptimizer::step(self, &grads, eta);
                 reports.push(StepReport { loss, stats });
                 if !loss.is_finite() || loss > stop_loss {
@@ -477,6 +481,7 @@ fn central_sync(
     t: u64,
     d: usize,
 ) -> SyncInfo {
+    let _s = obs::Span::enter(Phase::Exchange);
     match pipeline.as_mut() {
         Some(p) => p.central_sync(coll.as_ref(), exchange, vs, rs, c, t),
         None => {
@@ -565,6 +570,7 @@ impl ErrorResetEngine {
                 // single-model arithmetic cost (the resident path computes
                 // per worker instead — same bits either way).  Descent and
                 // model apply fuse into one traversal.
+                let _s = obs::Span::enter(Phase::ApplyReset);
                 let (w0, rest) = self.workers.split_first_mut().expect("n >= 1");
                 fused::descent_apply(beta, &mut w0.m, &self.gbar, eta, &mut w0.x, &mut w0.p);
                 for w in rest {
@@ -582,8 +588,11 @@ impl ErrorResetEngine {
                 }
             }
             (StepRule::ErrorFeedback { c }, _) => {
-                for (w, g) in self.workers.iter_mut().zip(grads) {
-                    fused::descent_plus_error(beta, &mut w.m, g, &w.e, eta, &mut w.p);
+                {
+                    let _s = obs::Span::enter(Phase::ApplyReset);
+                    for (w, g) in self.workers.iter_mut().zip(grads) {
+                        fused::descent_plus_error(beta, &mut w.m, g, &w.e, eta, &mut w.p);
+                    }
                 }
                 let mut qs = take_field(&mut self.workers, |w| &mut w.p);
                 let mut es = take_field(&mut self.workers, |w| &mut w.e);
@@ -591,8 +600,11 @@ impl ErrorResetEngine {
                     central_sync(&self.coll, pipeline, true, &mut qs, Some(&mut es), c, t, d);
                 put_field(&mut self.workers, qs, |w| &mut w.p);
                 put_field(&mut self.workers, es, |w| &mut w.e);
-                for w in self.workers.iter_mut() {
-                    fused::sub_assign(&mut w.x, &w.p);
+                {
+                    let _s = obs::Span::enter(Phase::ApplyReset);
+                    for w in self.workers.iter_mut() {
+                        fused::sub_assign(&mut w.x, &w.p);
+                    }
                 }
                 RoundStats {
                     grad_bits: info.upload_bits_per_worker,
@@ -631,8 +643,11 @@ impl ErrorResetEngine {
             }
             (StepRule::ErrorReset { c2, track_error }, round_rule) => {
                 let track = *track_error;
-                for (w, g) in self.workers.iter_mut().zip(grads) {
-                    descent_into(beta, &mut w.m, g, eta, &mut w.p);
+                {
+                    let _s = obs::Span::enter(Phase::ApplyReset);
+                    for (w, g) in self.workers.iter_mut().zip(grads) {
+                        descent_into(beta, &mut w.m, g, eta, &mut w.p);
+                    }
                 }
                 let mut stats = RoundStats::default();
                 let global = c2.globally_synchronized();
@@ -649,8 +664,11 @@ impl ErrorResetEngine {
                 put_field(&mut self.workers, ps, |w| &mut w.p);
                 stats.grad_bits = info.upload_bits_per_worker;
                 stats.grad_allreduce = info.allreduce_compatible;
-                for w in self.workers.iter_mut() {
-                    cser_apply_grad(w, &info, track, global);
+                {
+                    let _s = obs::Span::enter(Phase::ApplyReset);
+                    for w in self.workers.iter_mut() {
+                        cser_apply_grad(w, &info, track, global);
+                    }
                 }
                 match round_rule {
                     RoundRule::ErrorSync { c1, h } if t % *h == 0 => {
@@ -659,6 +677,7 @@ impl ErrorResetEngine {
                             match pipeline.as_mut() {
                                 None => {
                                     let sel = crate::kernel::with_thread_scratch(|s| {
+                                        let _s = obs::Span::enter(Phase::Select);
                                         c1.select_with(
                                             Ctx { round: t, worker: 0 },
                                             &self.workers[0].e,
@@ -669,11 +688,15 @@ impl ErrorResetEngine {
                                         cser_reset_pre_global(w, &sel, d);
                                     }
                                     let mut es = take_field(&mut self.workers, |w| &mut w.e);
-                                    let round = self.coll.psync(&mut es, None, c1, t);
+                                    let round = {
+                                        let _s = obs::Span::enter(Phase::Exchange);
+                                        self.coll.psync(&mut es, None, c1, t)
+                                    };
                                     debug_assert_eq!(round.selections[0], sel);
                                     put_field(&mut self.workers, es, |w| &mut w.e);
                                     stats.model_bits = round.upload_bits_per_worker;
                                     stats.model_allreduce = true;
+                                    let _s = obs::Span::enter(Phase::ApplyReset);
                                     for w in self.workers.iter_mut() {
                                         cser_reset_post_global(w, &sel, d);
                                     }
@@ -686,12 +709,15 @@ impl ErrorResetEngine {
                                         reset_pre_global_buckets(w, &sels, p.buckets());
                                     }
                                     let mut es = take_field(&mut self.workers, |w| &mut w.e);
-                                    let info =
-                                        p.central_sync(self.coll.as_ref(), false, &mut es, None, c1, t);
+                                    let info = {
+                                        let _s = obs::Span::enter(Phase::Exchange);
+                                        p.central_sync(self.coll.as_ref(), false, &mut es, None, c1, t)
+                                    };
                                     put_field(&mut self.workers, es, |w| &mut w.e);
                                     debug_assert_bucket_sels(&info, &sels);
                                     stats.model_bits = info.upload_bits_per_worker;
                                     stats.model_allreduce = true;
+                                    let _s = obs::Span::enter(Phase::ApplyReset);
                                     for w in self.workers.iter_mut() {
                                         reset_post_global_buckets(w, &sels, p.buckets());
                                     }
@@ -819,6 +845,12 @@ fn drive_worker(
     if w.g.len() != d {
         w.g = vec![0.0f32; d];
     }
+    if obs::enabled() {
+        // One ring per worker thread.  Idempotent: on a distributed rank
+        // the process main thread may already be registered (e.g. as
+        // "main" by the trainer) — first name wins, the ring is shared.
+        obs::register_thread(&format!("worker{}", w.id));
+    }
     // With a bucket schedule, this worker owns a prepare thread for the
     // whole run: bucket k+1 compresses there while bucket k is on the wire.
     let mut pipe = buckets.map(PipelineCtx::new);
@@ -826,7 +858,10 @@ fn drive_worker(
     let mut reports = Vec::with_capacity(steps);
     for _ in 0..steps {
         t += 1;
-        let loss = grad(w.id, &w.x, &mut w.g) as f64;
+        let loss = {
+            let _s = obs::Span::enter(Phase::GradCompute);
+            grad(w.id, &w.x, &mut w.g) as f64
+        };
         let (stats, mean_loss, stop) =
             peer_step(plan, beta, tp, w, t, eta, loss, stop_loss, d, &mut pipe)?;
         reports.push(StepReport { loss: mean_loss.unwrap_or(loss), stats });
@@ -861,8 +896,14 @@ fn peer_step(
             // path's `mean_rows` (gather in worker order at rank 0).
             // Never bucketed: there is no compression to overlap, and
             // bucketing would only add frame headers.
-            peer::mean_dense(tp, &mut w.g, t)?;
-            fused::descent_apply(beta, &mut w.m, &w.g, eta, &mut w.x, &mut w.p);
+            {
+                let _s = obs::Span::enter(Phase::Exchange);
+                peer::mean_dense(tp, &mut w.g, t)?;
+            }
+            {
+                let _s = obs::Span::enter(Phase::ApplyReset);
+                fused::descent_apply(beta, &mut w.m, &w.g, eta, &mut w.x, &mut w.p);
+            }
             let stats = RoundStats {
                 grad_bits: d as u64 * 32,
                 model_bits: 0,
@@ -874,12 +915,18 @@ fn peer_step(
         }
         (StepRule::ErrorFeedback { c }, _) => {
             let (mean_loss, stop) = peer::vote(tp, loss, stop_loss, t)?;
-            fused::descent_plus_error(beta, &mut w.m, &w.g, &w.e, eta, &mut w.p);
+            {
+                let _s = obs::Span::enter(Phase::ApplyReset);
+                fused::descent_plus_error(beta, &mut w.m, &w.g, &w.e, eta, &mut w.p);
+            }
             let info = {
                 let (p, e, s) = (&mut w.p, &mut w.e, &mut w.scratch);
                 peer_sync(tp, pipe, peer::Mode::Exchange, p, Some(e), c, t, s)?
             };
-            fused::sub_assign(&mut w.x, &w.p);
+            {
+                let _s = obs::Span::enter(Phase::ApplyReset);
+                fused::sub_assign(&mut w.x, &w.p);
+            }
             let stats = RoundStats {
                 grad_bits: info.upload_bits_per_worker,
                 model_bits: 0,
@@ -890,7 +937,10 @@ fn peer_step(
             Ok((stats, Some(mean_loss), stop))
         }
         (StepRule::LocalDescent, RoundRule::Resync { c1, h }) => {
-            fused::descent_apply(beta, &mut w.m, &w.g, eta, &mut w.x, &mut w.p);
+            {
+                let _s = obs::Span::enter(Phase::ApplyReset);
+                fused::descent_apply(beta, &mut w.m, &w.g, eta, &mut w.x, &mut w.p);
+            }
             if t % *h != 0 {
                 // free-running local step: no collective, no vote
                 return Ok((RoundStats::default(), None, false));
@@ -901,7 +951,10 @@ fn peer_step(
                 let (p, e, s) = (&mut w.p, &mut w.e, &mut w.scratch);
                 peer_sync(tp, pipe, peer::Mode::Exchange, p, Some(e), c1, t, s)?
             };
-            qsparse_apply(w);
+            {
+                let _s = obs::Span::enter(Phase::ApplyReset);
+                qsparse_apply(w);
+            }
             let stats = RoundStats {
                 grad_bits: 0,
                 model_bits: info.upload_bits_per_worker,
@@ -914,7 +967,10 @@ fn peer_step(
         (StepRule::ErrorReset { c2, track_error }, round_rule) => {
             let track = *track_error;
             let (mean_loss, stop) = peer::vote(tp, loss, stop_loss, t)?;
-            descent_into(beta, &mut w.m, &w.g, eta, &mut w.p);
+            {
+                let _s = obs::Span::enter(Phase::ApplyReset);
+                descent_into(beta, &mut w.m, &w.g, eta, &mut w.p);
+            }
             let global = c2.globally_synchronized();
             let mut stats = RoundStats::default();
             let info = if global || !track {
@@ -926,7 +982,10 @@ fn peer_step(
             };
             stats.grad_bits = info.upload_bits_per_worker;
             stats.grad_allreduce = info.allreduce_compatible;
-            cser_apply_grad(w, &info, track, global);
+            {
+                let _s = obs::Span::enter(Phase::ApplyReset);
+                cser_apply_grad(w, &info, track, global);
+            }
             match round_rule {
                 RoundRule::ErrorSync { c1, h } if t % *h == 0 => {
                     stats.synced = true;
@@ -938,8 +997,14 @@ fn peer_step(
                                 // worker derives the identical shared
                                 // support locally
                                 let ctx = Ctx { round: t, worker: 0 };
-                                let sel = c1.select_with(ctx, &w.e, &mut w.scratch);
-                                cser_reset_pre_global(w, &sel, d);
+                                let sel = {
+                                    let _s = obs::Span::enter(Phase::Select);
+                                    c1.select_with(ctx, &w.e, &mut w.scratch)
+                                };
+                                {
+                                    let _s = obs::Span::enter(Phase::ApplyReset);
+                                    cser_reset_pre_global(w, &sel, d);
+                                }
                                 let round = {
                                     let (e, s) = (&mut w.e, &mut w.scratch);
                                     peer::psync_with(tp, e, None, c1.as_ref(), t, s)?
@@ -947,14 +1012,21 @@ fn peer_step(
                                 debug_assert_eq!(round.selections[0], sel);
                                 stats.model_bits = round.upload_bits_per_worker;
                                 stats.model_allreduce = true;
-                                cser_reset_post_global(w, &sel, d);
+                                {
+                                    let _s = obs::Span::enter(Phase::ApplyReset);
+                                    cser_reset_post_global(w, &sel, d);
+                                }
                             }
                             Some(ctx) => {
                                 let sels = {
+                                    let _s = obs::Span::enter(Phase::Select);
                                     let (e, s) = (&w.e, &mut w.scratch);
                                     bucket_global_sels(c1, &ctx.buckets, t, e, s)
                                 };
-                                reset_pre_global_buckets(w, &sels, &ctx.buckets);
+                                {
+                                    let _s = obs::Span::enter(Phase::ApplyReset);
+                                    reset_pre_global_buckets(w, &sels, &ctx.buckets);
+                                }
                                 let info = crate::transport::pipelined_sync(
                                     &mut ctx.pipe,
                                     tp,
@@ -968,7 +1040,10 @@ fn peer_step(
                                 debug_assert_bucket_sels(&info, &sels);
                                 stats.model_bits = info.upload_bits_per_worker;
                                 stats.model_allreduce = true;
-                                reset_post_global_buckets(w, &sels, &ctx.buckets);
+                                {
+                                    let _s = obs::Span::enter(Phase::ApplyReset);
+                                    reset_post_global_buckets(w, &sels, &ctx.buckets);
+                                }
                             }
                         }
                     } else {
@@ -979,7 +1054,10 @@ fn peer_step(
                         };
                         stats.model_bits = info.upload_bits_per_worker;
                         stats.model_allreduce = info.allreduce_compatible;
-                        cser_reset_post_general(w);
+                        {
+                            let _s = obs::Span::enter(Phase::ApplyReset);
+                            cser_reset_post_general(w);
+                        }
                     }
                 }
                 RoundRule::ModelSync { c1, h } if t % *h == 0 => {

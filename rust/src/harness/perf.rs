@@ -9,11 +9,11 @@
 //! (CI's `bench-smoke` job runs `cser bench --quick` and validates the
 //! schema).
 //!
-//! # `BENCH_engine.json` schema (`cser-bench-engine/v2`)
+//! # `BENCH_engine.json` schema (`cser-bench-engine/v3`)
 //!
 //! ```json
 //! {
-//!   "schema": "cser-bench-engine/v2",
+//!   "schema": "cser-bench-engine/v3",
 //!   "quick": false,
 //!   "overlap_speedup_vs_sequential": 1.4,  // psync_sequential_bucketed / psync_overlap medians
 //!   "entries": [
@@ -56,6 +56,12 @@
 //! sequential-bucketed bits exactly, and for shared-support compressors
 //! (GRBS with a bucket-tiling block grid) the per-bucket sum equals the
 //! whole-vector accounting on every path.
+//!
+//! v3 adds the `trace_overhead` entry (kind `optimizer_step`): the CSER
+//! engine step re-timed with phase tracing enabled.  Its
+//! `speedup_vs_reference` is untraced median / traced median — the
+//! zero-overhead contract puts the target above 0.95 (< 5% overhead);
+//! `median_ns` is the traced time.
 
 use crate::collective::bucket::SyncBuckets;
 use crate::compressor::{Compressor, Grbs, TopK};
@@ -74,7 +80,7 @@ use std::sync::mpsc::channel;
 use std::sync::Arc;
 use std::time::Duration;
 
-pub const SCHEMA: &str = "cser-bench-engine/v2";
+pub const SCHEMA: &str = "cser-bench-engine/v3";
 
 #[derive(Debug, Clone)]
 pub struct PerfEntry {
@@ -499,6 +505,36 @@ pub fn run(quick: bool) -> PerfReport {
     for h in handles {
         h.join().expect("collective bench worker");
     }
+
+    // ---- tracing overhead: the CSER engine step, tracing off vs on ----
+    // Both medians are measured back to back in this process so the
+    // comparison is apples to apples; the zero-overhead-when-disabled /
+    // zero-alloc-when-enabled contracts put the target ratio above 0.95.
+    let spec = OptSpec::Cser { rc1: 16.0, rc2: 512.0, h: 32 };
+    let mut opt_off = spec.build(&init, n, 0.9, 7);
+    b.run("step_cser_untraced", || {
+        black_box(opt_off.step(&grads, 0.01));
+    });
+    let off_ns = b.results.last().unwrap().median_ns;
+    crate::obs::set_enabled(true);
+    crate::obs::register_thread("bench");
+    let mut opt_on = spec.build(&init, n, 0.9, 7);
+    b.run("step_cser_traced", || {
+        black_box(opt_on.step(&grads, 0.01));
+    });
+    let on_ns = b.results.last().unwrap().median_ns;
+    crate::obs::set_enabled(false);
+    crate::obs::reset();
+    entries.push(PerfEntry {
+        name: "trace_overhead".into(),
+        kind: "optimizer_step",
+        d,
+        workers: n,
+        batch: 0,
+        median_ns: on_ns,
+        bits_per_step: 0.0,
+        speedup_vs_reference: off_ns / on_ns,
+    });
 
     PerfReport { quick, overlap_speedup_vs_sequential: overlap_speedup, entries }
 }

@@ -100,6 +100,7 @@ mod tests {
             lr: 0.1,
             seed: 1,
             diverged: false,
+            phases: Vec::new(),
             points: (1..=10)
                 .map(|e| EpochPoint {
                     epoch: e,

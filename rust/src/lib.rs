@@ -20,7 +20,10 @@
 //!   against untrusted frames — plus the peer-owned ring/parameter-server
 //!   protocol each worker executes over its own links: mpsc mesh endpoints
 //!   for resident threads and the persistent `Threaded` pool, or real TCP
-//!   sockets for `cser launch`-style multi-process jobs), the network
+//!   sockets for `cser launch`-style multi-process jobs), the
+//!   observability layer ([`obs`]: zero-alloc per-thread phase tracing
+//!   with Chrome-trace export and per-peer wire counters, off by default
+//!   and costing one flag check per span site when disabled), the network
 //!   cost/accounting substrate ([`network`]), data sharding ([`data`]), a
 //!   fast pure-Rust model zoo for the paper's sweeps ([`models`]), the PJRT
 //!   runtime that executes AOT-compiled JAX/Pallas artifacts ([`runtime`]),
@@ -44,6 +47,7 @@ pub mod harness;
 pub mod kernel;
 pub mod models;
 pub mod network;
+pub mod obs;
 pub mod optimizer;
 pub mod runtime;
 pub mod transport;

@@ -13,11 +13,14 @@
 //!                                          sparsifier families
 //! cser train-lm [--preset tiny|small] [--opt cser|sgd|...] [--steps N] ...
 //! cser launch   [--workers N] [--opt ...] [--epochs N] [--ckpt-dir D]
-//!               [--buckets K]              spawn N worker processes over
+//!               [--buckets K] [--trace D]  spawn N worker processes over
 //!                                          loopback TCP, print the RunRecord
-//!                                          (K > 1: bucketed sync pipeline)
+//!                                          (K > 1: bucketed sync pipeline;
+//!                                          --trace: per-rank phase traces)
 //! cser worker   --rendezvous H:P --rank R --workers N [training flags]
 //!                                          join a multi-process job as one rank
+//! cser trace    summarize --trace D        merge per-rank traces into a
+//!                                          Chrome trace JSON + print summary
 //! cser bench    [--quick] [--out BENCH_engine.json]
 //!                                          perf suite: step/grad throughput +
 //!                                          bits/step, machine-readable JSON
@@ -36,13 +39,13 @@ use cser::util::cli::Args;
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     if argv.is_empty() {
-        eprintln!("usage: cser <quickstart|table2|table4|curves|timecomm|ablation|theory|bench|train-lm|launch|worker|kernel-check|plot> [flags]");
+        eprintln!("usage: cser <quickstart|table2|table4|curves|timecomm|ablation|theory|bench|train-lm|launch|worker|trace|kernel-check|plot> [flags]");
         std::process::exit(2);
     }
     let known = [
         "suite", "seeds", "quick", "rc", "preset", "opt", "steps", "workers", "lr", "beta",
         "eval-every", "seed", "artifacts", "h", "rc1", "rc2", "x", "y", "out", "rendezvous",
-        "rank", "epochs", "batch", "record", "ckpt", "ckpt-dir", "buckets",
+        "rank", "epochs", "batch", "record", "ckpt", "ckpt-dir", "buckets", "trace",
     ];
     let args = match Args::parse(argv, &known) {
         Ok(a) => a,
@@ -233,6 +236,7 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
         }
         "worker" => worker(args),
         "launch" => launch(args),
+        "trace" => trace_cmd(args),
         "kernel-check" => kernel_check(args),
         "plot" => plot(args),
         other => anyhow::bail!("unknown command '{other}'"),
@@ -259,6 +263,7 @@ fn dist_train_cfg(args: &Args) -> anyhow::Result<cser::coordinator::TrainCfg> {
     // K > 1 runs the bucketed sync pipeline (layer-aware buckets, overlap
     // of compression with the exchange on every rank).
     cfg.buckets = args.usize("buckets", 0)?;
+    cfg.trace = args.opt_str("trace").map(std::path::PathBuf::from);
     Ok(cfg)
 }
 
@@ -312,6 +317,10 @@ fn launch(args: &Args) -> anyhow::Result<()> {
     anyhow::ensure!(n >= 1, "--workers must be at least 1");
     let addr = cser::transport::rendezvous::free_loopback_addr()
         .map_err(|e| anyhow::anyhow!("reserving a rendezvous port: {e}"))?;
+    if let Some(dir) = args.opt_str("trace") {
+        std::fs::create_dir_all(&dir)
+            .map_err(|e| anyhow::anyhow!("creating trace dir {dir}: {e}"))?;
+    }
     let tmp = std::env::temp_dir().join(format!("cser_launch_{}", std::process::id()));
     std::fs::create_dir_all(&tmp)?;
     let exe = std::env::current_exe()?;
@@ -331,7 +340,9 @@ fn launch(args: &Args) -> anyhow::Result<()> {
             .arg(n.to_string())
             .arg("--record")
             .arg(&record);
-        for key in ["opt", "rc1", "rc2", "h", "epochs", "batch", "lr", "beta", "seed", "buckets"] {
+        for key in
+            ["opt", "rc1", "rc2", "h", "epochs", "batch", "lr", "beta", "seed", "buckets", "trace"]
+        {
             if let Some(v) = args.opt_str(key) {
                 cmd.arg(format!("--{key}")).arg(v);
             }
@@ -369,7 +380,25 @@ fn launch(args: &Args) -> anyhow::Result<()> {
         t0.elapsed().as_secs_f64(),
         parsed.get("epoch").and_then(|j| j.as_arr()).map(|a| a.len()).unwrap_or(0),
     );
+    if let Some(dir) = args.opt_str("trace") {
+        eprintln!("launch: per-rank traces in {dir} — merge with: cser trace summarize --trace {dir}");
+    }
     std::fs::remove_dir_all(&tmp).ok();
+    Ok(())
+}
+
+/// Merge the per-rank traces a `--trace` run wrote: emit `<dir>/trace.json`
+/// (Chrome trace-event format, loadable in Perfetto / chrome://tracing with
+/// one track per rank×thread) and print the per-rank, per-phase summary.
+fn trace_cmd(args: &Args) -> anyhow::Result<()> {
+    let sub = args.positional().get(1).cloned().unwrap_or_else(|| "summarize".into());
+    anyhow::ensure!(sub == "summarize", "unknown trace subcommand '{sub}' (expected 'summarize')");
+    let dir = args
+        .opt_str("trace")
+        .ok_or_else(|| anyhow::anyhow!("cser trace summarize requires --trace <dir>"))?;
+    let summary = cser::obs::export::summarize(std::path::Path::new(&dir))
+        .map_err(|e| anyhow::anyhow!("summarizing {dir}: {e}"))?;
+    println!("{summary}");
     Ok(())
 }
 

@@ -1,0 +1,539 @@
+//! Trace export: per-rank JSONL files and the merged Chrome trace.
+//!
+//! # File formats
+//!
+//! **Per-rank JSONL** (`trace-rank<R>.jsonl`, written by each worker at
+//! the end of a `--trace` run): one JSON object per line, one line per
+//! event —
+//!
+//! ```text
+//! {"tid":0,"phase":"exchange","kind":"span","start_ns":98,"dur_ns":13,"arg":2}
+//! ```
+//!
+//! — closed by a single meta line carrying the rank id, per-thread names
+//! and dropped-event counts, and the transport's per-peer wire counters:
+//!
+//! ```text
+//! {"meta":true,"rank":1,"threads":[{"tid":0,"name":"worker","events":840,
+//!  "dropped":0}],"peers":[{"peer":0,"frames_sent":64,...}]}
+//! ```
+//!
+//! **Merged Chrome trace** (`trace.json`, written by `cser trace
+//! summarize`): the Trace Event Format consumed by Perfetto /
+//! `chrome://tracing` — `{"traceEvents": [...]}` with one complete
+//! (`"ph":"X"`) event per span, `"ph":"C"` counter samples, and
+//! `"ph":"M"` metadata naming each rank (`pid`) and thread (`tid`), so
+//! every rank×thread gets its own labeled track.  Timestamps are µs
+//! relative to each rank's own trace epoch (clocks are per-process; the
+//! `pid` split keeps cross-rank comparisons honest).
+//!
+//! The summary (`cser-trace-summary/v1`) folds each rank's spans into
+//! per-phase [`PhaseStats`] rows.
+
+use super::phase::Phase;
+use super::recorder::{Event, PeerCounters, RingSnapshot, KIND_COUNTER, KIND_SPAN, NO_ARG};
+use super::stats::{self, PhaseStats};
+use crate::util::json::{Json, JsonWriter};
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+pub const SUMMARY_SCHEMA: &str = "cser-trace-summary/v1";
+
+/// One parsed trace event (a JSONL line).
+#[derive(Debug, Clone)]
+pub struct LineEvent {
+    pub tid: usize,
+    pub phase: Phase,
+    pub kind: u8,
+    pub arg: Option<u64>,
+    pub start_ns: u64,
+    pub dur_ns: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct ThreadMeta {
+    pub tid: usize,
+    pub name: String,
+    pub events: u64,
+    pub dropped: u64,
+}
+
+/// One rank's full trace (events + meta), as read back from JSONL.
+#[derive(Debug, Clone)]
+pub struct RankTrace {
+    pub rank: usize,
+    pub threads: Vec<ThreadMeta>,
+    pub events: Vec<LineEvent>,
+    /// Wire counters indexed by peer rank (self slot zero).
+    pub peers: Vec<PeerCounters>,
+}
+
+/// Write one rank's rings + transport counters as
+/// `<dir>/trace-rank<rank>.jsonl`.  Returns the path written.
+pub fn write_rank_jsonl(
+    dir: &Path,
+    rank: usize,
+    snaps: &[RingSnapshot],
+    peers: &[PeerCounters],
+) -> std::io::Result<PathBuf> {
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("trace-rank{rank}.jsonl"));
+    let mut out = std::io::BufWriter::new(std::fs::File::create(&path)?);
+    for (tid, snap) in snaps.iter().enumerate() {
+        for ev in &snap.events {
+            let mut w = JsonWriter::new();
+            w.begin_obj();
+            w.key("tid").int(tid as i64);
+            let phase =
+                Phase::from_u8(ev.phase).map(Phase::name).unwrap_or("unknown");
+            w.key("phase").str(phase);
+            w.key("kind").str(if ev.kind == KIND_COUNTER { "counter" } else { "span" });
+            w.key("start_ns").int(ev.start_ns as i64);
+            w.key("dur_ns").int(ev.dur_ns as i64);
+            if ev.arg != NO_ARG {
+                w.key("arg").int(ev.arg as i64);
+            }
+            w.end_obj();
+            writeln!(out, "{}", w.finish())?;
+        }
+    }
+    let mut w = JsonWriter::new();
+    w.begin_obj();
+    w.key("meta").bool(true);
+    w.key("rank").int(rank as i64);
+    w.key("threads").begin_arr();
+    for (tid, snap) in snaps.iter().enumerate() {
+        w.begin_obj();
+        w.key("tid").int(tid as i64);
+        w.key("name").str(&snap.name);
+        w.key("events").int(snap.events.len() as i64);
+        w.key("dropped").int(snap.dropped as i64);
+        w.end_obj();
+    }
+    w.end_arr();
+    w.key("peers").begin_arr();
+    for (peer, c) in peers.iter().enumerate() {
+        w.begin_obj();
+        w.key("peer").int(peer as i64);
+        w.key("frames_sent").int(c.frames_sent as i64);
+        w.key("payload_bits_sent").int(c.payload_bits_sent as i64);
+        w.key("blocked_send_ns").int(c.blocked_send_ns as i64);
+        w.key("frames_received").int(c.frames_received as i64);
+        w.key("payload_bits_received").int(c.payload_bits_received as i64);
+        w.end_obj();
+    }
+    w.end_arr();
+    w.end_obj();
+    writeln!(out, "{}", w.finish())?;
+    out.flush()?;
+    Ok(path)
+}
+
+fn get_u64(j: &Json, key: &str) -> u64 {
+    j.get(key).and_then(Json::as_f64).unwrap_or(0.0) as u64
+}
+
+/// Parse one rank's JSONL file.
+pub fn read_rank_jsonl(path: &Path) -> Result<RankTrace, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("{}: {e}", path.display()))?;
+    let mut trace =
+        RankTrace { rank: usize::MAX, threads: Vec::new(), events: Vec::new(), peers: Vec::new() };
+    for (lineno, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(line)
+            .map_err(|e| format!("{} line {}: {e}", path.display(), lineno + 1))?;
+        if j.get("meta").and_then(Json::as_bool) == Some(true) {
+            trace.rank = get_u64(&j, "rank") as usize;
+            for t in j.get("threads").and_then(Json::as_arr).unwrap_or(&[]) {
+                trace.threads.push(ThreadMeta {
+                    tid: get_u64(t, "tid") as usize,
+                    name: t
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .unwrap_or("thread")
+                        .to_string(),
+                    events: get_u64(t, "events"),
+                    dropped: get_u64(t, "dropped"),
+                });
+            }
+            for p in j.get("peers").and_then(Json::as_arr).unwrap_or(&[]) {
+                trace.peers.push(PeerCounters {
+                    frames_sent: get_u64(p, "frames_sent"),
+                    payload_bits_sent: get_u64(p, "payload_bits_sent"),
+                    blocked_send_ns: get_u64(p, "blocked_send_ns"),
+                    frames_received: get_u64(p, "frames_received"),
+                    payload_bits_received: get_u64(p, "payload_bits_received"),
+                });
+            }
+            continue;
+        }
+        let phase = j
+            .get("phase")
+            .and_then(Json::as_str)
+            .and_then(Phase::from_name);
+        let Some(phase) = phase else {
+            continue; // unknown phase from a newer writer: skip, don't fail
+        };
+        trace.events.push(LineEvent {
+            tid: get_u64(&j, "tid") as usize,
+            phase,
+            kind: if j.get("kind").and_then(Json::as_str) == Some("counter") {
+                KIND_COUNTER
+            } else {
+                KIND_SPAN
+            },
+            arg: j.get("arg").and_then(Json::as_f64).map(|v| v as u64),
+            start_ns: get_u64(&j, "start_ns"),
+            dur_ns: get_u64(&j, "dur_ns"),
+        });
+    }
+    if trace.rank == usize::MAX {
+        return Err(format!("{}: missing meta line", path.display()));
+    }
+    Ok(trace)
+}
+
+/// Load every `trace-rank<R>.jsonl` under `dir`, sorted by rank.
+pub fn load_trace_dir(dir: &Path) -> Result<Vec<RankTrace>, String> {
+    let entries = std::fs::read_dir(dir).map_err(|e| format!("{}: {e}", dir.display()))?;
+    let mut paths: Vec<PathBuf> = Vec::new();
+    for ent in entries {
+        let ent = ent.map_err(|e| format!("{}: {e}", dir.display()))?;
+        let name = ent.file_name();
+        let name = name.to_string_lossy();
+        if name.starts_with("trace-rank") && name.ends_with(".jsonl") {
+            paths.push(ent.path());
+        }
+    }
+    if paths.is_empty() {
+        return Err(format!("{}: no trace-rank*.jsonl files", dir.display()));
+    }
+    let mut ranks: Vec<RankTrace> =
+        paths.iter().map(|p| read_rank_jsonl(p)).collect::<Result<_, _>>()?;
+    ranks.sort_by_key(|r| r.rank);
+    Ok(ranks)
+}
+
+/// Render the merged Chrome trace-event JSON (Perfetto-loadable): one
+/// `pid` per rank, one `tid` per thread, `"X"` spans, `"C"` counters,
+/// and `"M"` metadata naming every track.
+pub fn chrome_trace_json(ranks: &[RankTrace]) -> String {
+    let mut w = JsonWriter::new();
+    w.begin_obj();
+    w.key("traceEvents").begin_arr();
+    for r in ranks {
+        w.begin_obj();
+        w.key("ph").str("M");
+        w.key("pid").int(r.rank as i64);
+        w.key("tid").int(0);
+        w.key("name").str("process_name");
+        w.key("args").begin_obj();
+        w.key("name").str(&format!("rank {}", r.rank));
+        w.end_obj();
+        w.end_obj();
+        for t in &r.threads {
+            w.begin_obj();
+            w.key("ph").str("M");
+            w.key("pid").int(r.rank as i64);
+            w.key("tid").int(t.tid as i64);
+            w.key("name").str("thread_name");
+            w.key("args").begin_obj();
+            w.key("name").str(&t.name);
+            w.end_obj();
+            w.end_obj();
+        }
+        for ev in &r.events {
+            w.begin_obj();
+            w.key("ph").str(if ev.kind == KIND_COUNTER { "C" } else { "X" });
+            w.key("pid").int(r.rank as i64);
+            w.key("tid").int(ev.tid as i64);
+            w.key("name").str(ev.phase.name());
+            w.key("cat").str("phase");
+            w.key("ts").num(ev.start_ns as f64 / 1000.0);
+            if ev.kind == KIND_SPAN {
+                w.key("dur").num(ev.dur_ns as f64 / 1000.0);
+            }
+            if ev.kind == KIND_COUNTER || ev.arg.is_some() {
+                w.key("args").begin_obj();
+                if ev.kind == KIND_COUNTER {
+                    w.key("value").int(ev.arg.unwrap_or(0) as i64);
+                } else if let Some(a) = ev.arg {
+                    w.key("arg").int(a as i64);
+                }
+                w.end_obj();
+            }
+            w.end_obj();
+        }
+    }
+    w.end_arr();
+    w.end_obj();
+    w.finish()
+}
+
+fn phase_stats_obj(w: &mut JsonWriter, phase: &str, s: &PhaseStats) {
+    w.begin_obj();
+    w.key("phase").str(phase);
+    w.key("count").int(s.count as i64);
+    w.key("total_ns").int(s.total_ns as i64);
+    w.key("mean_ns").num(s.mean_ns());
+    w.key("min_ns").int(if s.count == 0 { 0 } else { s.min_ns as i64 });
+    w.key("max_ns").int(s.max_ns as i64);
+    w.key("p50_ns").int(s.p50() as i64);
+    w.key("p99_ns").int(s.p99() as i64);
+    w.end_obj();
+}
+
+/// Fold one rank's spans into per-phase stats.
+pub fn fold_rank(r: &RankTrace) -> [PhaseStats; Phase::COUNT] {
+    let events: Vec<Event> = r
+        .events
+        .iter()
+        .map(|e| Event {
+            phase: e.phase as u8,
+            kind: e.kind,
+            arg: e.arg.unwrap_or(NO_ARG),
+            start_ns: e.start_ns,
+            dur_ns: e.dur_ns,
+        })
+        .collect();
+    stats::fold(&events)
+}
+
+/// Render the `cser-trace-summary/v1` JSON for a set of rank traces.
+pub fn summary_json(ranks: &[RankTrace], trace_path: Option<&Path>) -> String {
+    let mut w = JsonWriter::new();
+    w.begin_obj();
+    w.key("schema").str(SUMMARY_SCHEMA);
+    if let Some(p) = trace_path {
+        w.key("trace").str(&p.to_string_lossy());
+    }
+    w.key("ranks").begin_arr();
+    for r in ranks {
+        let folded = fold_rank(r);
+        w.begin_obj();
+        w.key("rank").int(r.rank as i64);
+        w.key("threads").int(r.threads.len() as i64);
+        w.key("dropped").int(r.threads.iter().map(|t| t.dropped).sum::<u64>() as i64);
+        w.key("phases").begin_arr();
+        for p in Phase::ALL {
+            phase_stats_obj(&mut w, p.name(), &folded[p as usize]);
+        }
+        w.end_arr();
+        w.key("peers").begin_arr();
+        for (peer, c) in r.peers.iter().enumerate() {
+            w.begin_obj();
+            w.key("peer").int(peer as i64);
+            w.key("frames_sent").int(c.frames_sent as i64);
+            w.key("payload_bits_sent").int(c.payload_bits_sent as i64);
+            w.key("blocked_send_ns").int(c.blocked_send_ns as i64);
+            w.key("frames_received").int(c.frames_received as i64);
+            w.key("payload_bits_received").int(c.payload_bits_received as i64);
+            w.end_obj();
+        }
+        w.end_arr();
+        w.end_obj();
+    }
+    w.end_arr();
+    w.end_obj();
+    w.finish()
+}
+
+/// `cser trace summarize`: merge `<dir>/trace-rank*.jsonl` into
+/// `<dir>/trace.json` (Chrome trace) and return the summary JSON.
+pub fn summarize(dir: &Path) -> Result<String, String> {
+    let ranks = load_trace_dir(dir)?;
+    let trace_path = dir.join("trace.json");
+    std::fs::write(&trace_path, chrome_trace_json(&ranks))
+        .map_err(|e| format!("{}: {e}", trace_path.display()))?;
+    Ok(summary_json(&ranks, Some(&trace_path)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::forall;
+
+    fn hostile_name(g: &mut crate::util::prop::Gen) -> String {
+        let palette = [
+            "a", "Z", "0", " ", "\"", "\\", "\n", "\t", "\r", "\u{1}", "\u{8}", "\u{c}",
+            "\u{7f}", "é", "🦀", "{", "}", "[", "]", ",", ":", "/",
+        ];
+        let n = g.usize_in(0, 24);
+        (0..n).map(|_| palette[g.usize_in(0, palette.len())]).collect()
+    }
+
+    fn sample_trace(thread_name: &str) -> RankTrace {
+        RankTrace {
+            rank: 2,
+            threads: vec![ThreadMeta {
+                tid: 0,
+                name: thread_name.to_string(),
+                events: 2,
+                dropped: 1,
+            }],
+            events: vec![
+                LineEvent {
+                    tid: 0,
+                    phase: Phase::Exchange,
+                    kind: KIND_SPAN,
+                    arg: Some(3),
+                    start_ns: 1500,
+                    dur_ns: 2500,
+                },
+                LineEvent {
+                    tid: 0,
+                    phase: Phase::Decode,
+                    kind: KIND_COUNTER,
+                    arg: Some(99),
+                    start_ns: 4000,
+                    dur_ns: 0,
+                },
+            ],
+            peers: vec![PeerCounters::default(), PeerCounters {
+                frames_sent: 7,
+                payload_bits_sent: 4096,
+                blocked_send_ns: 12,
+                frames_received: 7,
+                payload_bits_received: 4096,
+            }],
+        }
+    }
+
+    #[test]
+    fn chrome_trace_escapes_names() {
+        // Hostile thread names must always yield parseable JSON that
+        // round-trips the name exactly.
+        forall(200, 0xE5CA9E, |g| {
+            let name = hostile_name(g);
+            let tr = sample_trace(&name);
+            let s = chrome_trace_json(std::slice::from_ref(&tr));
+            let j = Json::parse(&s).map_err(|e| format!("invalid chrome JSON: {e}"))?;
+            let evs = j
+                .get("traceEvents")
+                .and_then(Json::as_arr)
+                .ok_or("missing traceEvents")?;
+            let thread_meta = evs
+                .iter()
+                .find(|e| e.get("name").and_then(Json::as_str) == Some("thread_name"))
+                .ok_or("missing thread_name metadata")?;
+            let got = thread_meta
+                .get("args")
+                .and_then(|a| a.get("name"))
+                .and_then(Json::as_str)
+                .ok_or("missing args.name")?;
+            prop_assert!(got == name, "thread name mangled: {got:?} != {name:?}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn chrome_trace_event_shape() {
+        let tr = sample_trace("worker");
+        let s = chrome_trace_json(std::slice::from_ref(&tr));
+        let j = Json::parse(&s).unwrap();
+        let evs = j.get("traceEvents").unwrap().as_arr().unwrap();
+        // 2 metadata + 2 events
+        assert_eq!(evs.len(), 4);
+        let x = evs
+            .iter()
+            .find(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
+            .expect("complete event");
+        assert_eq!(x.get("pid").unwrap().as_usize(), Some(2));
+        assert_eq!(x.get("name").unwrap().as_str(), Some("exchange"));
+        assert_eq!(x.get("ts").unwrap().as_f64(), Some(1.5));
+        assert_eq!(x.get("dur").unwrap().as_f64(), Some(2.5));
+        assert_eq!(x.get("args").unwrap().get("arg").unwrap().as_usize(), Some(3));
+        let c = evs
+            .iter()
+            .find(|e| e.get("ph").and_then(Json::as_str) == Some("C"))
+            .expect("counter event");
+        assert_eq!(c.get("args").unwrap().get("value").unwrap().as_usize(), Some(99));
+    }
+
+    #[test]
+    fn jsonl_roundtrip_and_summary() {
+        forall(40, 0x10C4_11, |g| {
+            let name = hostile_name(g);
+            let dir = std::env::temp_dir().join(format!("cser-obs-test-{}", g.case));
+            let snaps = vec![RingSnapshot {
+                name: name.clone(),
+                events: vec![
+                    Event {
+                        phase: Phase::GradCompute as u8,
+                        kind: KIND_SPAN,
+                        arg: NO_ARG,
+                        start_ns: 10,
+                        dur_ns: 30,
+                    },
+                    Event {
+                        phase: Phase::Exchange as u8,
+                        kind: KIND_SPAN,
+                        arg: 1,
+                        start_ns: 50,
+                        dur_ns: 20,
+                    },
+                ],
+                dropped: 3,
+            }];
+            let peers = vec![
+                PeerCounters::default(),
+                PeerCounters {
+                    frames_sent: 2,
+                    payload_bits_sent: 128,
+                    blocked_send_ns: 0,
+                    frames_received: 2,
+                    payload_bits_received: 128,
+                },
+            ];
+            let path = write_rank_jsonl(&dir, 1, &snaps, &peers)
+                .map_err(|e| format!("write: {e}"))?;
+            let tr = read_rank_jsonl(&path)?;
+            let _ = std::fs::remove_file(&path);
+            let _ = std::fs::remove_dir(&dir);
+            prop_assert!(tr.rank == 1, "rank {} != 1", tr.rank);
+            prop_assert!(
+                tr.threads.len() == 1 && tr.threads[0].name == name,
+                "thread meta mangled: {:?}",
+                tr.threads
+            );
+            prop_assert!(tr.threads[0].dropped == 3, "dropped {}", tr.threads[0].dropped);
+            prop_assert!(tr.events.len() == 2, "events {}", tr.events.len());
+            prop_assert!(
+                tr.events[0].phase == Phase::GradCompute && tr.events[0].arg.is_none(),
+                "event 0 mangled"
+            );
+            prop_assert!(
+                tr.events[1].arg == Some(1) && tr.events[1].dur_ns == 20,
+                "event 1 mangled"
+            );
+            prop_assert!(
+                tr.peers.len() == 2 && tr.peers[1] == peers[1],
+                "peer counters mangled: {:?}",
+                tr.peers
+            );
+            // Summary folds spans per phase and carries the schema.
+            let sum = summary_json(std::slice::from_ref(&tr), None);
+            let j = Json::parse(&sum).map_err(|e| format!("summary JSON: {e}"))?;
+            prop_assert!(
+                j.get("schema").and_then(Json::as_str) == Some(SUMMARY_SCHEMA),
+                "summary schema missing"
+            );
+            let ranks = j.get("ranks").and_then(Json::as_arr).ok_or("ranks")?;
+            let phases = ranks[0].get("phases").and_then(Json::as_arr).ok_or("phases")?;
+            prop_assert!(phases.len() == Phase::COUNT, "phase rows {}", phases.len());
+            let grad = phases
+                .iter()
+                .find(|p| p.get("phase").and_then(Json::as_str) == Some("grad_compute"))
+                .ok_or("grad_compute row")?;
+            prop_assert!(
+                grad.get("count").and_then(Json::as_usize) == Some(1),
+                "grad_compute count"
+            );
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,38 @@
+//! Observability: per-rank phase tracing and wire-level comm metrics.
+//!
+//! CSER's claims are statements about *where wall time goes* — how much
+//! exchange the pipeline hides, how long ranks block on slow peers,
+//! whether compression cost eats the bits it saves.  This layer measures
+//! that directly, under two hard contracts:
+//!
+//! * **zero overhead when disabled** — every span site checks the
+//!   runtime flag once (`recorder::enabled`, one relaxed load) and reads
+//!   no timestamp when it is off;
+//! * **zero allocation when enabled** — rings are preallocated at
+//!   thread registration; steady-state recording is two atomics and a
+//!   32-byte store, so the counting-allocator pin in
+//!   `rust/tests/hotpath_alloc.rs` holds with tracing on.
+//!
+//! Submodules: [`phase`] (the taxonomy), [`recorder`] (per-thread
+//! lock-free rings + the `Span` guard), [`stats`] (fixed-bin histogram
+//! folds), [`export`] (per-rank JSONL, merged Chrome trace JSON, the
+//! `cser trace` summary).  Transports keep [`PeerCounters`] — frames,
+//! payload bits, blocked-send time per remote rank — which ride along in
+//! the JSONL meta line.
+//!
+//! Typical wiring: `set_enabled(true)` + `register_thread("main")` at
+//! run start, `Span::enter(Phase::X)` guards in the hot paths,
+//! `snapshot_all()` + `export::write_rank_jsonl` at run end, then
+//! `cser trace summarize --trace <dir>` to merge and summarize.
+
+pub mod export;
+pub mod phase;
+pub mod recorder;
+pub mod stats;
+
+pub use phase::Phase;
+pub use recorder::{
+    enabled, now_ns, record_counter, register_thread, reset, set_enabled, snapshot_all, Event,
+    PeerCounters, RingSnapshot, Span, NO_ARG,
+};
+pub use stats::PhaseStats;

@@ -1,0 +1,94 @@
+//! The phase taxonomy: where a worker's wall time can go.
+//!
+//! Every traced span carries exactly one `Phase`.  The set is closed and
+//! small on purpose — each phase is a *mutually exclusive* slice of a
+//! training round, so per-phase totals add up to attributable wall time
+//! and a missing phase in a trace is a bug, not a configuration choice:
+//!
+//! * `GradCompute` — minibatch forward/backward (`GradFn`);
+//! * `Select` — compressor support selection (`select_with`);
+//! * `Encode` — gathering/serializing the selected payload;
+//! * `Exchange` — the collective exchange proper (ring segments or the
+//!   parameter-server gather/broadcast); per-bucket under the pipeline,
+//!   with the bucket index in the span's `arg`;
+//! * `Decode` — turning received payloads back into dense updates;
+//! * `ApplyReset` — the O(d) local update: descent, error fold,
+//!   CSER reset add/sub;
+//! * `BarrierWait` — blocked on a peer: the divergence vote, a blocking
+//!   recv inside a control collective, or waiting on the pipeline's
+//!   prepare thread;
+//! * `PipelinePrepare` — the `BucketPipeline` helper thread preparing
+//!   bucket k+1 while bucket k exchanges (its overlap with `Exchange`
+//!   spans on the owning worker's track is the pipeline's win, visible
+//!   directly in the merged Chrome trace).
+
+/// One attributable slice of a training round.  Discriminants are stable
+/// and double as indices into per-phase arrays (`Phase::ALL[p as usize]
+/// == p`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Phase {
+    GradCompute = 0,
+    Select = 1,
+    Encode = 2,
+    Exchange = 3,
+    Decode = 4,
+    ApplyReset = 5,
+    BarrierWait = 6,
+    PipelinePrepare = 7,
+}
+
+impl Phase {
+    pub const COUNT: usize = 8;
+
+    /// Every phase, in discriminant order.
+    pub const ALL: [Phase; Phase::COUNT] = [
+        Phase::GradCompute,
+        Phase::Select,
+        Phase::Encode,
+        Phase::Exchange,
+        Phase::Decode,
+        Phase::ApplyReset,
+        Phase::BarrierWait,
+        Phase::PipelinePrepare,
+    ];
+
+    /// Stable wire/export name (used in JSONL, Chrome trace events, and
+    /// the summary schema).
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::GradCompute => "grad_compute",
+            Phase::Select => "select",
+            Phase::Encode => "encode",
+            Phase::Exchange => "exchange",
+            Phase::Decode => "decode",
+            Phase::ApplyReset => "apply_reset",
+            Phase::BarrierWait => "barrier_wait",
+            Phase::PipelinePrepare => "pipeline_prepare",
+        }
+    }
+
+    pub fn from_u8(b: u8) -> Option<Phase> {
+        Phase::ALL.get(b as usize).copied()
+    }
+
+    pub fn from_name(s: &str) -> Option<Phase> {
+        Phase::ALL.iter().copied().find(|p| p.name() == s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn discriminants_index_all() {
+        for (i, p) in Phase::ALL.iter().enumerate() {
+            assert_eq!(*p as usize, i);
+            assert_eq!(Phase::from_u8(i as u8), Some(*p));
+            assert_eq!(Phase::from_name(p.name()), Some(*p));
+        }
+        assert_eq!(Phase::from_u8(Phase::COUNT as u8), None);
+        assert_eq!(Phase::from_name("nope"), None);
+    }
+}

@@ -1,0 +1,345 @@
+//! Lock-free, preallocated per-thread trace recorder.
+//!
+//! # Memory model
+//!
+//! Each recording thread owns one `ThreadRing`: a fixed-capacity
+//! (`RING_CAPACITY`) preallocated event buffer plus an atomic length.
+//! Only the owning thread writes; the exporter reads completed prefixes.
+//! The protocol is single-writer/multi-reader publication:
+//!
+//! * **writer** (owning thread): load `len` (Relaxed) → write slot `len`
+//!   → store `len + 1` (Release);
+//! * **reader** (exporter): load `len` (Acquire) → copy `events[..len]`.
+//!
+//! The buffer is *bounded, not wrapping*: once full, new events are
+//! dropped and counted (`dropped`) rather than overwriting history —
+//! a trace that silently lost its warmup would misattribute every
+//! steady-state number, while a counted tail drop is visible in the
+//! export.  Nothing in the steady state allocates or locks: the ring is
+//! preallocated at registration (one allocation per thread, during
+//! warmup), `push` is two atomic ops plus a 32-byte store, and the
+//! global registry mutex is touched only at registration/export time.
+//! The counting-allocator pin in `rust/tests/hotpath_alloc.rs` runs its
+//! engine-step section with tracing enabled to hold this contract.
+//!
+//! # Overhead when disabled
+//!
+//! `Span::enter` checks the global `enabled()` flag **once** (one
+//! relaxed atomic load) and, when disabled, neither reads a timestamp
+//! nor records on drop.  Timestamps are `Instant`-based monotonic
+//! nanoseconds relative to a process-wide epoch pinned by
+//! `set_enabled(true)`.
+
+use super::phase::Phase;
+use std::cell::{RefCell, UnsafeCell};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Events per thread ring (fixed at registration; ~2 MiB per thread).
+pub const RING_CAPACITY: usize = 1 << 16;
+
+/// `Event::arg` value meaning "no argument".
+pub const NO_ARG: u64 = u64::MAX;
+
+pub const KIND_SPAN: u8 = 0;
+pub const KIND_COUNTER: u8 = 1;
+
+/// One fixed-size trace event (a completed span or a counter sample).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Event {
+    /// `Phase` discriminant.
+    pub phase: u8,
+    /// `KIND_SPAN` or `KIND_COUNTER`.
+    pub kind: u8,
+    /// Span argument (bucket index, worker id, ...) or counter value;
+    /// `NO_ARG` when absent.
+    pub arg: u64,
+    /// Nanoseconds since the trace epoch.
+    pub start_ns: u64,
+    /// Span duration (0 for counters).
+    pub dur_ns: u64,
+}
+
+struct ThreadRing {
+    name: String,
+    capacity: usize,
+    events: UnsafeCell<Box<[Event]>>,
+    len: AtomicUsize,
+    dropped: AtomicU64,
+}
+
+// SAFETY: `events` is written only by the owning thread below `len`
+// published with Release; readers copy only the Acquire-loaded prefix.
+unsafe impl Sync for ThreadRing {}
+
+impl ThreadRing {
+    fn new(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            capacity: RING_CAPACITY,
+            events: UnsafeCell::new(vec![Event::default(); RING_CAPACITY].into_boxed_slice()),
+            len: AtomicUsize::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    fn push(&self, ev: Event) {
+        let len = self.len.load(Ordering::Relaxed);
+        if len >= self.capacity {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        // SAFETY: single-writer protocol — only the owning thread pushes,
+        // and slot `len` is not yet visible to readers.
+        unsafe {
+            (*self.events.get())[len] = ev;
+        }
+        self.len.store(len + 1, Ordering::Release);
+    }
+
+    fn snapshot(&self) -> RingSnapshot {
+        let len = self.len.load(Ordering::Acquire).min(self.capacity);
+        // SAFETY: every slot below the Acquire-loaded `len` was published
+        // by a Release store after being fully written.
+        let events = unsafe { (*self.events.get())[..len].to_vec() };
+        RingSnapshot {
+            name: self.name.clone(),
+            events,
+            dropped: self.dropped.load(Ordering::Relaxed),
+        }
+    }
+
+    fn reset(&self) {
+        self.len.store(0, Ordering::Release);
+        self.dropped.store(0, Ordering::Relaxed);
+    }
+}
+
+/// An exported copy of one thread's ring.
+#[derive(Debug, Clone)]
+pub struct RingSnapshot {
+    pub name: String,
+    pub events: Vec<Event>,
+    pub dropped: u64,
+}
+
+/// Per-peer wire counters kept by the transports (one slot per remote
+/// rank; the self slot stays zero).  Plain `u64`s owned by the transport
+/// — no atomics, no recording cost beyond the adds, and the blocked-send
+/// timer only runs when `enabled()`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PeerCounters {
+    pub frames_sent: u64,
+    pub payload_bits_sent: u64,
+    /// Nanoseconds spent inside blocking sends to this peer (TCP only;
+    /// measured only while tracing is enabled — backpressure made
+    /// visible).
+    pub blocked_send_ns: u64,
+    pub frames_received: u64,
+    pub payload_bits_received: u64,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static REGISTRY: Mutex<Vec<Arc<ThreadRing>>> = Mutex::new(Vec::new());
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+thread_local! {
+    static HANDLE: RefCell<Option<Arc<ThreadRing>>> = const { RefCell::new(None) };
+}
+
+/// Is tracing on?  One relaxed load — the only cost every span site pays
+/// when tracing is disabled.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn tracing on/off.  Enabling pins the trace epoch (idempotent).
+pub fn set_enabled(on: bool) {
+    if on {
+        let _ = EPOCH.set(Instant::now());
+    }
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Monotonic nanoseconds since the trace epoch (0 before the first
+/// `set_enabled(true)`).
+#[inline]
+pub fn now_ns() -> u64 {
+    match EPOCH.get() {
+        Some(t0) => t0.elapsed().as_nanos() as u64,
+        None => 0,
+    }
+}
+
+/// Register the calling thread under `name`, preallocating its ring.
+/// Idempotent: a thread that already has a ring keeps it (first name
+/// wins).  Call during warmup — this is the one allocation the recorder
+/// ever makes per thread.
+pub fn register_thread(name: &str) {
+    HANDLE.with(|h| {
+        let mut h = h.borrow_mut();
+        if h.is_some() {
+            return;
+        }
+        let ring = Arc::new(ThreadRing::new(name));
+        REGISTRY.lock().expect("obs registry").push(Arc::clone(&ring));
+        *h = Some(ring);
+    });
+}
+
+fn record(ev: Event) {
+    HANDLE.with(|h| {
+        if let Some(ring) = h.borrow().as_ref() {
+            ring.push(ev);
+            return;
+        }
+        // First event from an unregistered thread: fall back to a
+        // generic name (allocates once — registration, not steady state).
+        let ring = Arc::new(ThreadRing::new("thread"));
+        REGISTRY.lock().expect("obs registry").push(Arc::clone(&ring));
+        ring.push(ev);
+        *h.borrow_mut() = Some(ring);
+    });
+}
+
+/// Record an instantaneous counter sample for `phase`.
+#[inline]
+pub fn record_counter(phase: Phase, value: u64) {
+    if enabled() {
+        record(Event {
+            phase: phase as u8,
+            kind: KIND_COUNTER,
+            arg: value,
+            start_ns: now_ns(),
+            dur_ns: 0,
+        });
+    }
+}
+
+/// RAII span guard: construct with [`Span::enter`] at the top of a phase,
+/// drop at the end.  Disabled tracing costs one flag load — no timestamp
+/// read, nothing recorded on drop.
+pub struct Span {
+    phase: Phase,
+    arg: u64,
+    start_ns: u64,
+    armed: bool,
+}
+
+impl Span {
+    #[inline]
+    pub fn enter(phase: Phase) -> Span {
+        Span::enter_arg(phase, NO_ARG)
+    }
+
+    #[inline]
+    pub fn enter_arg(phase: Phase, arg: u64) -> Span {
+        if enabled() {
+            Span { phase, arg, start_ns: now_ns(), armed: true }
+        } else {
+            Span { phase, arg, start_ns: 0, armed: false }
+        }
+    }
+}
+
+impl Drop for Span {
+    #[inline]
+    fn drop(&mut self) {
+        if self.armed {
+            let end = now_ns();
+            record(Event {
+                phase: self.phase as u8,
+                kind: KIND_SPAN,
+                arg: self.arg,
+                start_ns: self.start_ns,
+                dur_ns: end.saturating_sub(self.start_ns),
+            });
+        }
+    }
+}
+
+/// Copy out every registered thread's events, in registration order
+/// (the export `tid`).  Readers see each ring's completed prefix.
+pub fn snapshot_all() -> Vec<RingSnapshot> {
+    let rings: Vec<Arc<ThreadRing>> = REGISTRY.lock().expect("obs registry").clone();
+    rings.iter().map(|r| r.snapshot()).collect()
+}
+
+/// Clear every registered ring (length + dropped count).  The rings stay
+/// registered and owned by their threads; callers must ensure recording
+/// threads are quiescent (between runs / bench sections).
+pub fn reset() {
+    for r in REGISTRY.lock().expect("obs registry").iter() {
+        r.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // One test only: `ENABLED` and the registry are process-global, so
+    // concurrent tests toggling the flag would race each other's
+    // assertions.  Everything runs in sequence here.
+    #[test]
+    fn recorder_protocol() {
+        // Disabled: spans are unarmed — nothing recorded, no epoch read.
+        register_thread("obs-recorder-test");
+        let before = my_ring_len();
+        {
+            let _s = Span::enter(Phase::Exchange);
+        }
+        record_counter(Phase::Exchange, 42);
+        assert_eq!(my_ring_len(), before, "disabled tracing must record nothing");
+
+        // Enabled: spans land with end >= start, counters carry values.
+        set_enabled(true);
+        {
+            let _s = Span::enter_arg(Phase::Exchange, 3);
+        }
+        record_counter(Phase::Decode, 99);
+        set_enabled(false);
+        let snap = my_ring();
+        assert_eq!(snap.events.len(), before + 2);
+        let sp = &snap.events[before];
+        assert_eq!((sp.phase, sp.kind, sp.arg), (Phase::Exchange as u8, KIND_SPAN, 3));
+        let ct = &snap.events[before + 1];
+        assert_eq!((ct.phase, ct.kind, ct.arg), (Phase::Decode as u8, KIND_COUNTER, 99));
+        assert!(ct.start_ns >= sp.start_ns, "timestamps must be monotone");
+
+        // Overflow: a full ring drops and counts instead of wrapping.
+        set_enabled(true);
+        let start = my_ring_len();
+        for _ in start..RING_CAPACITY + 10 {
+            record_counter(Phase::Select, 1);
+        }
+        set_enabled(false);
+        let snap = my_ring();
+        assert_eq!(snap.events.len(), RING_CAPACITY, "ring must stop at capacity");
+        assert_eq!(snap.dropped, 10, "overflow must be counted, not wrapped");
+        assert_eq!(
+            snap.events[before].phase,
+            Phase::Exchange as u8,
+            "early events must survive overflow (bounded, not wrapping)"
+        );
+
+        // Reset clears length and dropped for reuse.
+        reset();
+        let snap = my_ring();
+        assert_eq!((snap.events.len(), snap.dropped), (0, 0));
+    }
+
+    fn my_ring() -> RingSnapshot {
+        snapshot_all()
+            .into_iter()
+            .find(|s| s.name == "obs-recorder-test")
+            .expect("test ring registered")
+    }
+
+    fn my_ring_len() -> usize {
+        my_ring().events.len()
+    }
+}

@@ -1,0 +1,211 @@
+//! Fixed-bin duration histograms: folding trace events into `PhaseStats`.
+//!
+//! One `PhaseStats` per phase: count, total, min/max, and a 64-bin log2
+//! histogram (bin 0 holds zero-duration events; bin i ≥ 1 holds
+//! `[2^(i-1), 2^i)` ns; the last bin is open-ended).  Quantiles walk the
+//! bins and clamp to the recorded `[min, max]`, so p50/p99 are estimates
+//! with at most one-octave resolution but can never leave the observed
+//! range.  Everything is plain `u64` arithmetic — fold once after a run,
+//! never in the hot path.
+
+use super::phase::Phase;
+use super::recorder::{Event, KIND_SPAN};
+
+/// Histogram bins per phase (log2-spaced; see module docs).
+pub const BINS: usize = 64;
+
+/// Duration statistics for one phase.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PhaseStats {
+    pub count: u64,
+    pub total_ns: u64,
+    pub min_ns: u64,
+    pub max_ns: u64,
+    bins: [u64; BINS],
+}
+
+impl Default for PhaseStats {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PhaseStats {
+    pub fn new() -> Self {
+        Self { count: 0, total_ns: 0, min_ns: u64::MAX, max_ns: 0, bins: [0; BINS] }
+    }
+
+    /// Lower edge of bin `i` (valid for `i <= BINS`): 0, 1, 2, 4, ... —
+    /// strictly monotone, so bins partition `[0, ∞)`.
+    pub fn bin_lo(i: usize) -> u64 {
+        if i == 0 {
+            0
+        } else {
+            1u64 << (i - 1)
+        }
+    }
+
+    /// Bin holding `dur_ns`: `bin_lo(i) <= dur_ns < bin_lo(i + 1)` (the
+    /// last bin is open-ended).
+    pub fn bin_index(dur_ns: u64) -> usize {
+        if dur_ns == 0 {
+            0
+        } else {
+            (64 - dur_ns.leading_zeros() as usize).min(BINS - 1)
+        }
+    }
+
+    pub fn record(&mut self, dur_ns: u64) {
+        self.count += 1;
+        self.total_ns += dur_ns;
+        self.min_ns = self.min_ns.min(dur_ns);
+        self.max_ns = self.max_ns.max(dur_ns);
+        self.bins[Self::bin_index(dur_ns)] += 1;
+    }
+
+    pub fn merge(&mut self, o: &PhaseStats) {
+        self.count += o.count;
+        self.total_ns += o.total_ns;
+        self.min_ns = self.min_ns.min(o.min_ns);
+        self.max_ns = self.max_ns.max(o.max_ns);
+        for (b, ob) in self.bins.iter_mut().zip(o.bins.iter()) {
+            *b += ob;
+        }
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.total_ns as f64 / self.count as f64
+        }
+    }
+
+    /// Histogram quantile (`0 < q <= 1`): midpoint of the bin holding the
+    /// `ceil(q·count)`-th sample, clamped to `[min_ns, max_ns]`.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = (q * self.count as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, &c) in self.bins.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                let lo = Self::bin_lo(i);
+                let hi = if i + 1 < BINS { Self::bin_lo(i + 1) } else { self.max_ns.max(lo) };
+                let mid = lo + (hi - lo) / 2;
+                return mid.clamp(self.min_ns, self.max_ns);
+            }
+        }
+        self.max_ns
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+
+    pub fn bin_counts(&self) -> &[u64; BINS] {
+        &self.bins
+    }
+}
+
+/// Fold span events into one `PhaseStats` per phase (indexable by
+/// `Phase as usize`).  Counter events and unknown phase bytes (from a
+/// newer trace format) are skipped.
+pub fn fold(events: &[Event]) -> [PhaseStats; Phase::COUNT] {
+    let mut out: [PhaseStats; Phase::COUNT] = std::array::from_fn(|_| PhaseStats::new());
+    for ev in events {
+        if ev.kind != KIND_SPAN {
+            continue;
+        }
+        if let Some(p) = Phase::from_u8(ev.phase) {
+            out[p as usize].record(ev.dur_ns);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn bin_edges_are_strictly_monotone_and_consistent() {
+        for i in 1..=BINS {
+            assert!(
+                PhaseStats::bin_lo(i) > PhaseStats::bin_lo(i - 1),
+                "bin_lo({i}) must exceed bin_lo({})",
+                i - 1
+            );
+        }
+        // Every duration lands in the bin whose range contains it.
+        for dur in [0u64, 1, 2, 3, 4, 1023, 1024, u64::MAX] {
+            let i = PhaseStats::bin_index(dur);
+            assert!(PhaseStats::bin_lo(i) <= dur, "dur {dur} below bin {i} lower edge");
+            if i + 1 < BINS {
+                assert!(dur < PhaseStats::bin_lo(i + 1), "dur {dur} above bin {i} upper edge");
+            }
+        }
+    }
+
+    #[test]
+    fn histogram_properties() {
+        forall(300, 0x0B57A75, |g| {
+            let n = g.usize_in(1, 400);
+            let mut s = PhaseStats::new();
+            let mut durs = Vec::with_capacity(n);
+            for _ in 0..n {
+                // Durations spanning many magnitudes (≤ 2^48 so the u64
+                // total cannot overflow over 400 draws), zero included.
+                let shift = g.usize_in(16, 64);
+                let dur = if shift == 63 { 0 } else { g.rng.next_u64() >> shift };
+                s.record(dur);
+                durs.push(dur);
+            }
+            let (lo, hi) =
+                (*durs.iter().min().unwrap(), *durs.iter().max().unwrap());
+            // Conservation: every recorded event is in exactly one bin.
+            let binned: u64 = s.bin_counts().iter().sum();
+            prop_assert!(binned == n as u64, "bin sum {binned} != count {n}");
+            prop_assert!(s.count == n as u64, "count {} != {n}", s.count);
+            let want: u64 = durs.iter().sum();
+            prop_assert!(s.total_ns == want, "total {} != {want}", s.total_ns);
+            prop_assert!(
+                (s.min_ns, s.max_ns) == (lo, hi),
+                "min/max {:?} != {:?}",
+                (s.min_ns, s.max_ns),
+                (lo, hi)
+            );
+            // Quantiles stay inside the recorded range and are ordered.
+            let (p50, p99) = (s.p50(), s.p99());
+            prop_assert!(lo <= p50 && p50 <= hi, "p50 {p50} outside [{lo}, {hi}]");
+            prop_assert!(lo <= p99 && p99 <= hi, "p99 {p99} outside [{lo}, {hi}]");
+            prop_assert!(p50 <= p99, "p50 {p50} > p99 {p99}");
+            // Merge conserves counts and bins exactly.
+            let mut m = PhaseStats::new();
+            m.merge(&s);
+            m.merge(&s);
+            let msum: u64 = m.bin_counts().iter().sum();
+            prop_assert!(msum == 2 * n as u64, "merged bin sum {msum} != {}", 2 * n);
+            prop_assert!(
+                m.count == 2 * n as u64 && m.total_ns == 2 * want,
+                "merge must add counts and totals"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn empty_stats_are_inert() {
+        let s = PhaseStats::new();
+        assert_eq!((s.count, s.p50(), s.p99()), (0, 0, 0));
+        assert_eq!(s.mean_ns(), 0.0);
+    }
+}

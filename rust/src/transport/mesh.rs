@@ -14,6 +14,7 @@
 
 use super::peer::{PeerTransport, Tag, TransportError};
 use super::wire::WireMsg;
+use crate::obs::PeerCounters;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 
@@ -26,6 +27,11 @@ pub struct MeshTransport {
     n: usize,
     txs: Vec<Option<Sender<Frame>>>,
     rxs: Vec<Option<Receiver<Frame>>>,
+    /// Per-peer wire counters, mirroring `TcpTransport::per_peer` so the
+    /// two transports export identical metrics.  Channel sends are
+    /// unbounded and never block, so `blocked_send_ns` stays zero here —
+    /// a structural statement, not a measurement gap.
+    pub per_peer: Vec<PeerCounters>,
 }
 
 /// Build the full n-way mesh: n·(n−1) channels, one per directed pair.
@@ -37,6 +43,7 @@ pub fn channel_mesh(n: usize) -> Vec<MeshTransport> {
             n,
             txs: (0..n).map(|_| None).collect(),
             rxs: (0..n).map(|_| None).collect(),
+            per_peer: vec![PeerCounters::default(); n],
         })
         .collect();
     for i in 0..n {
@@ -71,14 +78,19 @@ impl PeerTransport for MeshTransport {
     }
 
     fn send(&mut self, to: usize, round: u64, tag: Tag, msg: WireMsg) -> Result<(), TransportError> {
+        let bit_len = msg.bit_len;
         self.txs[to]
             .as_ref()
             .expect("mesh has no self-links")
             .send((round, tag, Arc::new(msg)))
-            .map_err(|_| self.hangup(to))
+            .map_err(|_| self.hangup(to))?;
+        self.per_peer[to].frames_sent += 1;
+        self.per_peer[to].payload_bits_sent += bit_len;
+        Ok(())
     }
 
     fn broadcast(&mut self, round: u64, tag: Tag, msg: WireMsg) -> Result<(), TransportError> {
+        let bit_len = msg.bit_len;
         let shared = Arc::new(msg);
         for j in 0..self.n {
             if j != self.rank {
@@ -87,6 +99,8 @@ impl PeerTransport for MeshTransport {
                     .expect("mesh has no self-links")
                     .send((round, tag, Arc::clone(&shared)))
                     .map_err(|_| self.hangup(j))?;
+                self.per_peer[j].frames_sent += 1;
+                self.per_peer[j].payload_bits_sent += bit_len;
             }
         }
         Ok(())
@@ -105,6 +119,8 @@ impl PeerTransport for MeshTransport {
                 self.rank
             )));
         }
+        self.per_peer[from].frames_received += 1;
+        self.per_peer[from].payload_bits_received += msg.bit_len;
         Ok(msg)
     }
 }

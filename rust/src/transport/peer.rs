@@ -38,6 +38,7 @@ use super::wire::{self, WireError, WireMsg};
 use crate::collective::{PsyncRound, WireCost};
 use crate::compressor::{payload_bits_wire, Compressor, Ctx, Scratch, Selection};
 use crate::kernel::dense as math;
+use crate::obs::{self, Phase};
 use std::sync::Arc;
 
 /// A transport-level failure: a peer hung up, a frame failed validation, or
@@ -334,11 +335,20 @@ pub(crate) fn ps_prepare(
     mut own: Vec<f32>,
     scratch: &mut Scratch,
 ) -> Result<PsUpload, WireError> {
-    let sel = c.select_with(ctx, v, scratch);
-    let msg = wire::encode_with_selection(c, ctx, v, Some(&sel));
+    let sel = {
+        let _s = obs::Span::enter(Phase::Select);
+        c.select_with(ctx, v, scratch)
+    };
+    let msg = {
+        let _s = obs::Span::enter(Phase::Encode);
+        wire::encode_with_selection(c, ctx, v, Some(&sel))
+    };
     own.clear();
     own.resize(v.len(), 0.0);
-    wire::decode(c, ctx, &msg, &mut own)?;
+    {
+        let _s = obs::Span::enter(Phase::Decode);
+        wire::decode(c, ctx, &msg, &mut own)?;
+    }
     Ok(PsUpload { sel, msg, own })
 }
 
@@ -444,7 +454,10 @@ fn ring(
     let d = v.len();
     // Globally-synchronized selections ignore both the vector and the worker
     // id, so every peer derives the identical shared support locally.
-    let sel = c.select_with(Ctx { round, worker: 0 }, v, scratch);
+    let sel = {
+        let _s = obs::Span::enter(Phase::Select);
+        c.select_with(Ctx { round, worker: 0 }, v, scratch)
+    };
     let bits = payload_bits_wire(c.wire_scheme(), &sel, d);
     let m = sel.count(d);
 
@@ -469,22 +482,31 @@ fn ring(
     // Chunk schedule and reduction order inside `ring_rounds` are identical
     // to the retired runner-thread ring, so the f32 results carry over.
     let mut compact = std::mem::take(&mut scratch.vb);
-    gather(&sel, v, &mut compact);
-    let (up, down) = ring_rounds(t, &mut compact, round)?;
-    // Residual (v off support) must be captured before the mean overwrites
-    // the selected ranges.
-    if let Some(r) = resid.as_deref_mut() {
-        r.copy_from_slice(v);
-        sel.for_each_range(d, |s, e| math::fill(&mut r[s..e], 0.0));
+    {
+        let _s = obs::Span::enter(Phase::Encode);
+        gather(&sel, v, &mut compact);
     }
-    if mode == Mode::Exchange {
-        math::fill(v, 0.0);
+    let (up, down) = {
+        let _s = obs::Span::enter(Phase::Exchange);
+        ring_rounds(t, &mut compact, round)?
+    };
+    {
+        let _s = obs::Span::enter(Phase::Decode);
+        // Residual (v off support) must be captured before the mean
+        // overwrites the selected ranges.
+        if let Some(r) = resid.as_deref_mut() {
+            r.copy_from_slice(v);
+            sel.for_each_range(d, |s, e| math::fill(&mut r[s..e], 0.0));
+        }
+        if mode == Mode::Exchange {
+            math::fill(v, 0.0);
+        }
+        let mut cursor = 0usize;
+        sel.for_each_range(d, |s, e| {
+            v[s..e].copy_from_slice(&compact[cursor..cursor + (e - s)]);
+            cursor += e - s;
+        });
     }
-    let mut cursor = 0usize;
-    sel.for_each_range(d, |s, e| {
-        v[s..e].copy_from_slice(&compact[cursor..cursor + (e - s)]);
-        cursor += e - s;
-    });
     scratch.vb = compact;
     Ok(PsyncRound {
         selections: vec![sel],
@@ -531,7 +553,10 @@ fn ps(
     // Exchange phase: upload / serve, aggregate broadcast, decode into the
     // scratch's aggregate buffer.
     let mut agg = std::mem::take(&mut scratch.vd);
-    let (acct_bits, up, down) = ps_rounds(t, c, round, msg, &own, &mut agg, scratch)?;
+    let (acct_bits, up, down) = {
+        let _s = obs::Span::enter(Phase::Exchange);
+        ps_rounds(t, c, round, msg, &own, &mut agg, scratch)?
+    };
     match mode {
         // v currently holds the residual: v' = mean + residual.
         Mode::Psync => math::axpy(1.0, &agg, v),
@@ -561,6 +586,7 @@ pub fn mean_dense(
     if n == 1 {
         return Ok(());
     }
+    let _s = obs::Span::enter(Phase::BarrierWait);
     let d = v.len();
     if t.rank() == 0 {
         let mut others: Vec<Vec<f32>> = Vec::with_capacity(n - 1);
@@ -602,6 +628,7 @@ pub fn vote(
     if n == 1 {
         return Ok((loss, !loss.is_finite() || loss > stop_loss));
     }
+    let _s = obs::Span::enter(Phase::BarrierWait);
     if t.rank() == 0 {
         let mut mean = loss / n as f64;
         for j in 1..n {
@@ -650,6 +677,7 @@ pub fn all_equal(
     if n == 1 {
         return Ok(true);
     }
+    let _s = obs::Span::enter(Phase::BarrierWait);
     if t.rank() == 0 {
         let mut same = true;
         for j in 1..n {
@@ -686,6 +714,7 @@ pub fn agree(t: &mut dyn PeerTransport, flag: bool, round: u64) -> Result<bool, 
     if n == 1 {
         return Ok(flag);
     }
+    let _s = obs::Span::enter(Phase::BarrierWait);
     let bit = |b: bool| {
         let mut w = wire::BitWriter::new();
         w.write(b as u64, 1);

@@ -35,6 +35,7 @@ use crate::collective::bucket::{SyncBuckets, SyncInfo};
 use crate::collective::{PsyncRound, WireCost};
 use crate::compressor::{payload_bits_wire, Compressor, Ctx, Scratch, Selection};
 use crate::kernel::dense as math;
+use crate::obs::{self, Phase};
 use crate::transport::wire::WireMsg;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
@@ -80,13 +81,19 @@ fn prepare(job: PrepJob, scratch: &mut Scratch) -> Prepared {
     let d = data.len();
     if ring {
         // Globally-synchronized selections ignore the worker id.
-        let sel = c.select_with(Ctx { round: ctx.round, worker: 0 }, &data, scratch);
+        let sel = {
+            let _s = obs::Span::enter(Phase::Select);
+            c.select_with(Ctx { round: ctx.round, worker: 0 }, &data, scratch)
+        };
         let bits = payload_bits_wire(c.wire_scheme(), &sel, d);
         if sel.count(d) == 0 {
             buf.clear();
             return Prepared { bucket, sel, bits: 0, data, payload: Payload::Empty { buf } };
         }
-        peer::gather(&sel, &data, &mut buf);
+        {
+            let _s = obs::Span::enter(Phase::Encode);
+            peer::gather(&sel, &data, &mut buf);
+        }
         Prepared { bucket, sel, bits, data, payload: Payload::Ring { compact: buf } }
     } else {
         let up = peer::ps_prepare(c.as_ref(), ctx, &data, buf, scratch)
@@ -97,9 +104,13 @@ fn prepare(job: PrepJob, scratch: &mut Scratch) -> Prepared {
 }
 
 fn helper_loop(rx: Receiver<PrepJob>, tx: Sender<Prepared>) {
+    obs::register_thread("cser-bucket-prep");
     let mut scratch = Scratch::new();
     while let Ok(job) = rx.recv() {
-        let prep = prepare(job, &mut scratch);
+        let prep = {
+            let _s = obs::Span::enter_arg(Phase::PipelinePrepare, job.bucket as u64);
+            prepare(job, &mut scratch)
+        };
         if tx.send(prep).is_err() {
             break; // driver dropped mid-run: stop quietly
         }
@@ -225,6 +236,7 @@ fn exchange_bucket(
 ) -> Result<PsyncRound, TransportError> {
     let db = v.len();
     let n = t.n();
+    let bkt = prep.bucket as u64;
     match prep.payload {
         Payload::Empty { buf } => {
             // C = 0 on this bucket: nothing travels.
@@ -244,7 +256,11 @@ fn exchange_bucket(
             })
         }
         Payload::Ring { mut compact } => {
-            let (up, down) = peer::ring_rounds(t, &mut compact, wire_round)?;
+            let (up, down) = {
+                let _s = obs::Span::enter_arg(Phase::Exchange, bkt);
+                peer::ring_rounds(t, &mut compact, wire_round)?
+            };
+            let _s = obs::Span::enter_arg(Phase::Decode, bkt);
             // Residual (v off support) before the mean overwrites the
             // selected ranges; v itself was untouched while the bucket was
             // in flight.
@@ -260,6 +276,7 @@ fn exchange_bucket(
                 v[s..e].copy_from_slice(&compact[cursor..cursor + (e - s)]);
                 cursor += e - s;
             });
+            drop(_s); // Decode span ends here; buffer recycling is untimed.
             spare.push(compact);
             spare.push(prep.data);
             Ok(PsyncRound {
@@ -271,7 +288,11 @@ fn exchange_bucket(
         }
         Payload::Ps { msg, own } => {
             let mut agg = spare.pop().unwrap_or_default();
-            let (acct, up, down) = peer::ps_rounds(t, c.as_ref(), wire_round, msg, &own, &mut agg, scratch)?;
+            let (acct, up, down) = {
+                let _s = obs::Span::enter_arg(Phase::Exchange, bkt);
+                peer::ps_rounds(t, c.as_ref(), wire_round, msg, &own, &mut agg, scratch)?
+            };
+            let _s = obs::Span::enter_arg(Phase::Decode, bkt);
             // Apply: v' = mean + (v − C(v)), the residual computed against
             // the exact decoded upload — same expressions as the
             // whole-vector path, element by element.
@@ -298,6 +319,7 @@ fn exchange_bucket(
                     v.copy_from_slice(&agg);
                 }
             }
+            drop(_s); // Decode span ends here; buffer recycling is untimed.
             spare.push(agg);
             spare.push(own);
             spare.push(prep.data);
@@ -392,7 +414,12 @@ pub fn pipelined_sync(
         if b + 1 < k {
             submit_job(pipe, buckets, t_round, rank, ring, c, v, b + 1)?;
         }
-        let prep = pipe.recv_prepared(b)?;
+        // Time spent here is the pipeline stalling on its own compression —
+        // the complement of the overlap the double buffer exists to win.
+        let prep = {
+            let _s = obs::Span::enter_arg(Phase::BarrierWait, b as u64);
+            pipe.recv_prepared(b)?
+        };
         let (s, e) = buckets.range(b);
         let wire_round = buckets.sub_round(t_round, b);
         let rb = resid.as_deref_mut().map(|r| &mut r[s..e]);

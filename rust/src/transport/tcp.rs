@@ -21,6 +21,7 @@
 
 use super::peer::{PeerTransport, Tag, TransportError};
 use super::wire::WireMsg;
+use crate::obs::{self, PeerCounters};
 use std::io::{BufReader, IoSlice, Read, Write};
 use std::net::TcpStream;
 use std::sync::Arc;
@@ -75,6 +76,13 @@ pub struct TcpTransport {
     pub payload_bits_received: u64,
     /// Raw bytes written including the 17-byte frame headers.
     pub frame_bytes_sent: u64,
+    /// Per-peer wire counters (indexed by remote rank; the self slot
+    /// stays zero).  Frames and payload bits are always counted — plain
+    /// adds on paths that already count aggregates — while
+    /// `blocked_send_ns` (time inside the blocking socket write, i.e.
+    /// backpressure) is measured only while `obs` tracing is enabled so
+    /// the disabled path reads no timestamps.
+    pub per_peer: Vec<PeerCounters>,
 }
 
 impl TcpTransport {
@@ -104,6 +112,7 @@ impl TcpTransport {
             payload_bits_sent: 0,
             payload_bits_received: 0,
             frame_bytes_sent: 0,
+            per_peer: vec![PeerCounters::default(); n],
         })
     }
 
@@ -143,9 +152,16 @@ impl TcpTransport {
             }
         }
         let io = |e: std::io::Error| TransportError(format!("sending to peer {to}: {e}"));
+        let timed = obs::enabled();
+        let t0 = if timed { obs::now_ns() } else { 0 };
         write_all_vectored(&mut link.writer, &hdr, &link.wbuf).map_err(io)?;
+        if timed {
+            self.per_peer[to].blocked_send_ns += obs::now_ns().saturating_sub(t0);
+        }
         self.payload_bits_sent += msg.bit_len;
         self.frame_bytes_sent += FRAME_HEADER_BYTES + nbytes as u64;
+        self.per_peer[to].frames_sent += 1;
+        self.per_peer[to].payload_bits_sent += msg.bit_len;
         Ok(())
     }
 }
@@ -203,6 +219,8 @@ impl PeerTransport for TcpTransport {
             *w = u64::from_le_bytes(b);
         }
         self.payload_bits_received += bit_len;
+        self.per_peer[from].frames_received += 1;
+        self.per_peer[from].payload_bits_received += bit_len;
         Ok(Arc::new(WireMsg { words, bit_len }))
     }
 }
@@ -253,6 +271,8 @@ mod tests {
         let out = run_tcp_peers(n, |w, tp| {
             let mut v = vs[w].clone();
             let round = peer::psync(tp, &mut v, None, &c, 3).unwrap();
+            let per_peer: u64 = tp.per_peer.iter().map(|p| p.payload_bits_sent).sum();
+            assert_eq!(per_peer, tp.payload_bits_sent, "per-peer sums must equal the aggregate");
             (v, round, tp.payload_bits_sent)
         });
         for (i, (v, round, sent)) in out.iter().enumerate() {

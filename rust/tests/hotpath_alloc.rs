@@ -11,7 +11,10 @@
 //!   k-element result, never the `0..d` index permutation;
 //! * a central CSER engine step — allocates no dense (O(d)) buffer per
 //!   step: what remains is selection results and per-round bookkeeping,
-//!   bounded far below one model-sized vector.
+//!   bounded far below one model-sized vector;
+//! * the same engine step with phase tracing ENABLED — the recorder's
+//!   rings are preallocated at registration, so the per-step allocation
+//!   bound must hold unchanged with spans recording.
 //!
 //! One `#[test]` only: the counters are process-global, so concurrent tests
 //! would pollute each other's windows.
@@ -130,5 +133,26 @@ fn steady_state_hot_paths_do_not_allocate() {
         "engine step allocates {per_step} bytes/step — a dense O(d) buffer ({} bytes) is \
          being rebuilt per step",
         d * 4
+    );
+
+    // ---- the same steps with tracing enabled: the recorder must add no
+    //      steady-state allocations (rings preallocate at registration) ----
+    cser::obs::set_enabled(true);
+    cser::obs::register_thread("alloc-test");
+    for _ in 0..8 {
+        opt.step(&grads, 0.01); // warmup: lazily registers any helper-thread rings
+    }
+    let (_, bytes_traced) = alloc_during(|| {
+        for _ in 0..steps {
+            opt.step(&grads, 0.01);
+        }
+    });
+    cser::obs::set_enabled(false);
+    cser::obs::reset();
+    let per_step_traced = bytes_traced / steps;
+    assert!(
+        per_step_traced < (d as u64) * 4 / 8,
+        "traced engine step allocates {per_step_traced} bytes/step (untraced: {per_step}) — \
+         span recording must be allocation-free in steady state"
     );
 }

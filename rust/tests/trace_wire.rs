@@ -1,0 +1,158 @@
+//! Tier-1 cross-check: the bits the TCP transport counts at its sockets —
+//! in aggregate and per peer — are exactly the bits the collectives
+//! account and the α-β cost model charges.
+//!
+//! Lifted from the assertion sections of `benches/transport.rs` so the
+//! invariant runs on every test pass rather than only when someone runs
+//! the bench, and with tracing ENABLED so the gated blocked-send timing
+//! path is exercised too.  One `#[test]` only: the trace recorder's
+//! enable flag is process-global.
+
+use cser::collective::{ring_allreduce_cost, SyncBuckets};
+use cser::compressor::{Compressor, Ctx, Grbs};
+use cser::transport::rendezvous::free_loopback_addr;
+use cser::transport::{peer, pipelined_sync, BucketPipeline, TcpTransport};
+use cser::util::rng::Rng;
+use std::sync::Arc;
+
+fn worker_vecs(n: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let mut v = vec![0.0f32; d];
+            rng.fill_normal(&mut v, 1.0);
+            v
+        })
+        .collect()
+}
+
+#[test]
+fn traced_tcp_wire_bits_equal_accounted_bits() {
+    let n = 4usize;
+    let d = 1usize << 12;
+    let base = worker_vecs(n, d, 2);
+    cser::obs::set_enabled(true);
+    cser::obs::register_thread("main");
+
+    // ---- whole-vector GRBS ring: socket bits == formula == accounting ----
+    {
+        let addr = free_loopback_addr().expect("loopback port");
+        let round = 7u64;
+        let outs: Vec<_> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..n)
+                .map(|rank| {
+                    let addr = addr.clone();
+                    let mut v = base[rank].clone();
+                    s.spawn(move || {
+                        let c = Grbs::new(16.0, 64, 5);
+                        let mut tp = TcpTransport::connect(&addr, rank, n).expect("tcp join");
+                        let info =
+                            peer::psync(&mut tp, &mut v, None, &c, round).expect("tcp psync");
+                        (info, tp.payload_bits_sent, tp.payload_bits_received, tp.per_peer.clone())
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("tcp worker")).collect()
+        });
+        let c = Grbs::new(16.0, 64, 5);
+        let m = c.select(Ctx { round, worker: 0 }, &base[0]).count(d) as u64;
+        assert_eq!(m % n as u64, 0, "test setup: ring chunks must divide evenly");
+        let expect = ring_allreduce_cost(m * 32, n);
+        for (rank, (info, sent, received, per_peer)) in outs.iter().enumerate() {
+            assert_eq!(info.upload_bits_per_worker, m * 32, "rank {rank}: accounted bits");
+            let wc = info.wire.expect("tcp measures traffic");
+            assert_eq!(
+                (wc.up_bits, wc.down_bits),
+                (expect.up_bits, expect.down_bits),
+                "rank {rank}: socket bits != ring formula"
+            );
+            // Aggregate socket counters see both ring phases as sends.
+            assert_eq!(*sent, expect.up_bits + expect.down_bits, "rank {rank}: bits sent");
+            assert_eq!(*received, expect.up_bits + expect.down_bits, "rank {rank}: bits received");
+            // Per-peer counters decompose the aggregates exactly, and a
+            // ring only ever sends to its successor.
+            assert_eq!(
+                per_peer.iter().map(|p| p.payload_bits_sent).sum::<u64>(),
+                *sent,
+                "rank {rank}: per-peer sent bits don't sum to the aggregate"
+            );
+            assert_eq!(
+                per_peer.iter().map(|p| p.payload_bits_received).sum::<u64>(),
+                *received,
+                "rank {rank}: per-peer received bits don't sum to the aggregate"
+            );
+            for (j, p) in per_peer.iter().enumerate() {
+                if j == (rank + 1) % n {
+                    assert_eq!(p.payload_bits_sent, *sent, "rank {rank}: ring sends to successor");
+                } else {
+                    assert_eq!(
+                        p.payload_bits_sent, 0,
+                        "rank {rank} sent payload to non-successor {j}"
+                    );
+                }
+            }
+        }
+        // Fleet-wide conservation: every sent bit is received somewhere.
+        let total_sent: u64 = outs.iter().map(|o| o.1).sum();
+        let total_received: u64 = outs.iter().map(|o| o.2).sum();
+        assert_eq!(total_sent, total_received, "bits lost between sockets");
+    }
+
+    // ---- bucketed pipelined sync: per-bucket accounting sums to the
+    //      socket aggregate, per peer and in total ----
+    {
+        let kb = 8usize;
+        let buckets = SyncBuckets::even(d, kb);
+        let addr = free_loopback_addr().expect("loopback port");
+        let outs: Vec<_> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..n)
+                .map(|rank| {
+                    let addr = addr.clone();
+                    let buckets = buckets.clone();
+                    let v0 = base[rank].clone();
+                    s.spawn(move || {
+                        let c: Arc<dyn Compressor> = Arc::new(Grbs::new(16.0, 64 / kb, 5));
+                        let mut tp = TcpTransport::connect(&addr, rank, n).expect("tcp join");
+                        let mut pipe = BucketPipeline::new();
+                        let mut v = v0;
+                        let info = pipelined_sync(
+                            &mut pipe,
+                            &mut tp,
+                            peer::Mode::Psync,
+                            &mut v,
+                            None,
+                            &c,
+                            9,
+                            &buckets,
+                        )
+                        .expect("pipelined tcp psync");
+                        let wire_total: u64 = info
+                            .parts()
+                            .iter()
+                            .map(|p| {
+                                let w = p.2.wire.expect("tcp measures traffic");
+                                w.up_bits + w.down_bits
+                            })
+                            .sum();
+                        (wire_total, tp.payload_bits_sent, tp.per_peer.clone())
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("pipelined tcp worker")).collect()
+        });
+        for (rank, (wire_total, sent, per_peer)) in outs.iter().enumerate() {
+            assert_eq!(
+                wire_total, sent,
+                "rank {rank}: per-bucket wire sums != socket payload bits"
+            );
+            assert_eq!(
+                per_peer.iter().map(|p| p.payload_bits_sent).sum::<u64>(),
+                *sent,
+                "rank {rank}: per-peer sent bits don't sum to the aggregate"
+            );
+        }
+    }
+
+    cser::obs::set_enabled(false);
+    cser::obs::reset();
+}
