@@ -7,4 +7,6 @@ pub mod psync;
 
 pub use allreduce::{allreduce_mean, param_server_cost, ring_allreduce_cost, WireCost};
 pub use bucket::{SyncBuckets, SyncInfo};
-pub use psync::{exchange_mean, exchange_mean_with, psync, psync_with, PsyncRound};
+pub use psync::{
+    censors, exchange_mean, exchange_mean_with, psync, psync_censored_with, psync_with, PsyncRound,
+};

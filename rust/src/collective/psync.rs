@@ -129,6 +129,91 @@ pub fn psync_with(
     }
 }
 
+/// Li et al.'s censoring test (Communication-Censored Distributed SGD,
+/// PAPERS.md): a worker transmits its compressed update `u = C(v)` only
+/// when `‖u‖ ≥ τ`; below the threshold the round is censored and the whole
+/// update stays in the local residual.  The squared norm is accumulated in
+/// f64 in index order so every backend — in-process, threaded, TCP —
+/// reaches the identical verdict on the identical decoded bits.
+pub fn censors(u: &[f32], tau: f32) -> bool {
+    let mut ss = 0.0f64;
+    for &x in u {
+        ss += (x as f64) * (x as f64);
+    }
+    ss < (tau as f64) * (tau as f64)
+}
+
+/// [`psync_with`] under the censoring cadence: worker `w` contributes
+/// `C(v_w)` to the average only if it passes [`censors`]; a censored worker
+/// uploads nothing (zero bits), keeps its *whole* `v_w` as residual, and
+/// still receives the aggregate:
+///
+///   v'_i = (1/n) Σ_{j not censored} C(v_j)  +  r_i,
+///   r_i  = v_i − C(v_i)  if i transmits, else  v_i.
+///
+/// The divisor stays `n` — cadence-censored workers are live (they answer
+/// the round with an empty frame), matching the transport's live-scale
+/// aggregation bit-for-bit.  With `tau = 0` nothing censors and this is
+/// exactly [`psync_with`]'s generic path.  Parameter-server routing only: a
+/// globally-synchronized sparse compressor derives one shared support and
+/// cannot drop per-worker uploads (`CommPlan::validate` rejects such
+/// pairings).
+pub fn psync_censored_with(
+    vs: &mut [Vec<f32>],
+    mut resid_out: Option<&mut [Vec<f32>]>,
+    c: &dyn Compressor,
+    round: u64,
+    tau: f32,
+    scratch: &mut Scratch,
+) -> PsyncRound {
+    let n = vs.len();
+    assert!(n > 0);
+    let d = vs[0].len();
+    debug_assert!(vs.iter().all(|v| v.len() == d));
+    debug_assert!(
+        !(c.globally_synchronized() && !c.is_dense()),
+        "censoring cadence is parameter-server-routed"
+    );
+    let (mut vbar, mut kept) = scratch.take_dense_pair(d);
+    let inv = 1.0 / n as f32;
+    let mut selections = Vec::with_capacity(n);
+    let mut bits_total = 0u64;
+    for (w, v) in vs.iter_mut().enumerate() {
+        let ctx = Ctx { round, worker: w as u32 };
+        let sel = c.select_with(ctx, v, scratch);
+        // Same one-pass convention as `residualize_accumulate`: sparsifiers'
+        // C(v) is v on the selection; dense quantizers materialize through
+        // compress_into.  The censoring verdict rides these decoded values.
+        let bits = if c.is_dense() {
+            c.compress_into_with(ctx, v, &mut kept, scratch)
+        } else {
+            sel.apply(v, &mut kept);
+            payload_bits_wire(c.wire_scheme(), &sel, d)
+        };
+        if !censors(&kept, tau) {
+            bits_total += bits;
+            for ((vj, kj), bj) in v.iter_mut().zip(kept.iter()).zip(vbar.iter_mut()) {
+                *bj += inv * *kj;
+                *vj -= *kj; // v now holds the residual
+            }
+        }
+        selections.push(sel);
+        if let Some(res) = resid_out.as_deref_mut() {
+            res[w].copy_from_slice(v);
+        }
+    }
+    for v in vs.iter_mut() {
+        dense::axpy(1.0, &vbar, v); // v'_i = vbar + r_i
+    }
+    scratch.put_dense_pair(vbar, kept);
+    PsyncRound {
+        selections,
+        upload_bits_per_worker: bits_total.div_ceil(n as u64),
+        allreduce_compatible: false,
+        wire: None,
+    }
+}
+
 /// Shared fast-path core of [`psync`] and [`exchange_mean`] for
 /// globally-synchronized sparsifiers: capture residuals (`v_i` off the
 /// shared support, zero on it) and average the selected ranges in place —
@@ -486,5 +571,86 @@ mod tests {
         let orig = vs.clone();
         psync(&mut vs, None, &Grbs::new(2.0, 4, 3), 12);
         assert_eq!(vs, orig);
+    }
+
+    #[test]
+    fn zero_threshold_censored_psync_is_plain_psync() {
+        // τ = 0 ⇒ ‖C(v)‖² < 0 is never true ⇒ every worker transmits and
+        // the censored entry point must be bit-for-bit the generic path.
+        forall(30, 0xCE50, |g: &mut Gen| {
+            let n = g.usize_in(2, 6);
+            let d = g.usize_in(8, 100);
+            let vs = g.worker_vecs(n, d);
+            for c in [
+                Box::new(RandK::new(2.0)) as Box<dyn Compressor>,
+                Box::new(TopK::new(4.0)),
+                Box::new(TopK::new(1.0)),
+            ] {
+                let mut plain = vs.clone();
+                let mut plain_res = vec![vec![0.0f32; d]; n];
+                let a = psync(&mut plain, Some(&mut plain_res), c.as_ref(), g.case);
+                let mut cens = vs.clone();
+                let mut cens_res = vec![vec![0.0f32; d]; n];
+                let b = psync_censored_with(
+                    &mut cens,
+                    Some(&mut cens_res),
+                    c.as_ref(),
+                    g.case,
+                    0.0,
+                    &mut Scratch::new(),
+                );
+                assert_eq!(a.upload_bits_per_worker, b.upload_bits_per_worker);
+                for i in 0..n {
+                    slices_close(&plain[i], &cens[i], 0.0)
+                        .map_err(|e| format!("{} w{i}: {e}", c.name()))?;
+                    slices_close(&plain_res[i], &cens_res[i], 0.0)
+                        .map_err(|e| format!("{} resid w{i}: {e}", c.name()))?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn huge_threshold_censors_everyone() {
+        // τ = ∞-ish ⇒ every worker is censored: nothing travels, zero bits
+        // are accounted, and each v survives untouched as its own residual.
+        let mut vs = vec![vec![1.0f32, -2.0, 3.0, 4.0], vec![0.5, 0.5, -0.5, 2.0]];
+        let orig = vs.clone();
+        let mut res = vec![vec![0.0f32; 4]; 2];
+        let info = psync_censored_with(
+            &mut vs,
+            Some(&mut res),
+            &TopK::new(2.0),
+            3,
+            1e6,
+            &mut Scratch::new(),
+        );
+        assert_eq!(info.upload_bits_per_worker, 0);
+        assert_eq!(vs, orig);
+        assert_eq!(res, orig);
+    }
+
+    #[test]
+    fn censored_psync_matches_manual_partial_average() {
+        // One loud worker, one quiet worker: τ between their ‖C(v)‖ values
+        // censors exactly the quiet one.  v'_i = (1/n)·C(v_loud) + r_i.
+        // TopK at ratio 1 keeps everything, so C(v) = v.
+        let d = 4;
+        let loud = vec![10.0f32, -10.0, 10.0, -10.0];
+        let quiet = vec![0.01f32, -0.01, 0.01, -0.01];
+        let mut vs = vec![loud.clone(), quiet.clone()];
+        let info =
+            psync_censored_with(&mut vs, None, &TopK::new(1.0), 0, 1.0, &mut Scratch::new());
+        let expect_loud: Vec<f32> = loud.iter().map(|x| x / 2.0).collect();
+        let expect_quiet: Vec<f32> = loud.iter().zip(&quiet).map(|(l, q)| l / 2.0 + q).collect();
+        slices_close(&vs[0], &expect_loud, 0.0).unwrap();
+        slices_close(&vs[1], &expect_quiet, 0.0).unwrap();
+        // Only the loud worker's payload enters the accounting: d values at
+        // 32 + index_bits(4) = 34 bits each, over 2 workers.
+        assert_eq!(info.upload_bits_per_worker, (34 * d as u64).div_ceil(2));
+        // `censors` itself: the quiet update is below τ=1, the loud above.
+        assert!(censors(&quiet, 1.0));
+        assert!(!censors(&loud, 1.0));
     }
 }

@@ -106,7 +106,11 @@ impl Checkpoint {
         )
     }
 
-    pub fn save(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+    /// Serialize to the checkpoint wire/file format (header + payloads +
+    /// FNV-1a trailer).  This is also the **join blob**: rank 0 ships
+    /// exactly these bytes in a rejoin grant, so an evicted rank resumes
+    /// from the same state a file-based restart would see.
+    pub fn to_bytes(&self) -> Vec<u8> {
         let mut buf: Vec<u8> = Vec::new();
         buf.extend_from_slice(MAGIC);
         buf.extend_from_slice(&VERSION.to_le_bytes());
@@ -139,15 +143,18 @@ impl Checkpoint {
         }
         let sum = fnv1a(&buf, 0xcbf29ce484222325);
         buf.extend_from_slice(&sum.to_le_bytes());
-        let mut f = std::fs::File::create(path)?;
-        f.write_all(&buf)
+        buf
     }
 
-    pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint, String> {
-        let mut buf = Vec::new();
-        std::fs::File::open(path.as_ref())
-            .and_then(|mut f| f.read_to_end(&mut buf))
-            .map_err(|e| format!("reading checkpoint: {e}"))?;
+    pub fn save(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(&self.to_bytes())
+    }
+
+    /// Parse the checkpoint format (see [`Checkpoint::to_bytes`]) from an
+    /// untrusted byte slice — checksum first, then overflow-guarded
+    /// dimensions.
+    pub fn from_bytes(buf: &[u8]) -> Result<Checkpoint, String> {
         if buf.len() < 8 + 4 + 8 + 4 + 8 + 4 + 8 {
             return Err("checkpoint truncated".into());
         }
@@ -212,6 +219,14 @@ impl Checkpoint {
         let momentum = read_section(FLAG_MOMENTUM, "momentum")?;
         let anchors = read_section(FLAG_ANCHORS, "anchors")?;
         Ok(Checkpoint { step, models, errors, momentum, anchors })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint, String> {
+        let mut buf = Vec::new();
+        std::fs::File::open(path.as_ref())
+            .and_then(|mut f| f.read_to_end(&mut buf))
+            .map_err(|e| format!("reading checkpoint: {e}"))?;
+        Checkpoint::from_bytes(&buf)
     }
 }
 

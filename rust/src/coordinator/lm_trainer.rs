@@ -145,6 +145,7 @@ pub fn train_lm(
             points,
             diverged,
             phases: Vec::new(),
+            elastic: None,
         },
         step_seconds,
         final_eval_loss: eval_loss,

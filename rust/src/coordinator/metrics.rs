@@ -54,6 +54,33 @@ pub fn phase_summaries(snaps: &[RingSnapshot]) -> Vec<PhaseSummary> {
         .collect()
 }
 
+/// Elastic-membership summary of one rank's run (`Backend::Tcp` with
+/// `TrainCfg::elastic`; DESIGN.md §8).  `None` on fixed-fleet runs.
+///
+/// The wire counters are this rank's ground truth for the exact bit
+/// accounting under partial rounds: payload bits actually written to /
+/// read from its sockets (the 17-byte frame headers excluded), so on a
+/// parameter-server plan `payload_bits_received` at rank 0 equals the sum
+/// of `payload_bits_sent` over every rank whose frames arrived — censored
+/// rounds and dead peers contribute exactly nothing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ElasticSummary {
+    /// Membership epoch id in force when the run ended.
+    pub final_epoch: u64,
+    /// Effective live set at the end (bit `r` ⇔ rank `r` live, pending
+    /// deaths already removed).
+    pub live_mask: u64,
+    /// Rounds this rank censored a peer (deaths + deadline misses).
+    pub censor_events: u64,
+    /// Evictions across the boundaries this rank observed.
+    pub evictions: u64,
+    /// Admissions across the boundaries this rank observed (a rejoining
+    /// rank counts its own admission).
+    pub joins: u64,
+    pub payload_bits_sent: u64,
+    pub payload_bits_received: u64,
+}
+
 /// A full training run.
 #[derive(Debug, Clone)]
 pub struct RunRecord {
@@ -66,6 +93,8 @@ pub struct RunRecord {
     pub diverged: bool,
     /// Per-phase timing summary; populated only on traced runs.
     pub phases: Vec<PhaseSummary>,
+    /// Membership + wire accounting; populated only on elastic TCP runs.
+    pub elastic: Option<ElasticSummary>,
 }
 
 impl RunRecord {
@@ -117,6 +146,18 @@ impl RunRecord {
             w.end_obj();
         }
         w.end_arr();
+        // Additive object: present only on elastic runs.
+        if let Some(e) = &self.elastic {
+            w.key("elastic").begin_obj();
+            w.key("final_epoch").int(e.final_epoch as i64);
+            w.key("live_mask").int(e.live_mask as i64);
+            w.key("censor_events").int(e.censor_events as i64);
+            w.key("evictions").int(e.evictions as i64);
+            w.key("joins").int(e.joins as i64);
+            w.key("payload_bits_sent").int(e.payload_bits_sent as i64);
+            w.key("payload_bits_received").int(e.payload_bits_received as i64);
+            w.end_obj();
+        }
         for (key, f) in [
             ("epoch", (|p: &EpochPoint| p.epoch as f64) as fn(&EpochPoint) -> f64),
             ("train_loss", |p| p.train_loss),
@@ -183,6 +224,7 @@ mod tests {
             seed: 1,
             diverged: false,
             phases: Vec::new(),
+            elastic: None,
             points: (0..3)
                 .map(|e| EpochPoint {
                     epoch: e,
@@ -219,6 +261,32 @@ mod tests {
         assert_eq!(arr.len(), 1);
         assert_eq!(arr[0].get("phase").unwrap().as_str(), Some("exchange"));
         assert_eq!(arr[0].get("count").unwrap().as_f64(), Some(4.0));
+    }
+
+    #[test]
+    fn elastic_object_roundtrips_and_is_absent_by_default() {
+        let r = record();
+        let j = Json::parse(&r.to_json()).unwrap();
+        assert!(j.get("elastic").is_none(), "fixed-fleet records carry no elastic object");
+        let mut r = record();
+        r.elastic = Some(ElasticSummary {
+            final_epoch: 2,
+            live_mask: 0b0111,
+            censor_events: 5,
+            evictions: 1,
+            joins: 0,
+            payload_bits_sent: 4096,
+            payload_bits_received: 12288,
+        });
+        let j = Json::parse(&r.to_json()).unwrap();
+        let e = j.get("elastic").unwrap();
+        assert_eq!(e.get("final_epoch").unwrap().as_usize(), Some(2));
+        assert_eq!(e.get("live_mask").unwrap().as_usize(), Some(0b0111));
+        assert_eq!(e.get("censor_events").unwrap().as_usize(), Some(5));
+        assert_eq!(e.get("evictions").unwrap().as_usize(), Some(1));
+        assert_eq!(e.get("joins").unwrap().as_usize(), Some(0));
+        assert_eq!(e.get("payload_bits_sent").unwrap().as_usize(), Some(4096));
+        assert_eq!(e.get("payload_bits_received").unwrap().as_usize(), Some(12288));
     }
 
     #[test]

@@ -295,6 +295,7 @@ pub fn load_records(path: &str) -> Result<Vec<RunRecord>, String> {
                 diverged: r.get("diverged").and_then(|v| v.as_bool()).unwrap_or(false),
                 points,
                 phases: Vec::new(),
+                elastic: None,
             })
         })
         .collect()
@@ -313,6 +314,7 @@ mod tests {
             seed: 1,
             diverged: false,
             phases: Vec::new(),
+            elastic: None,
             points: (1..=10)
                 .map(|e| EpochPoint {
                     epoch: e,

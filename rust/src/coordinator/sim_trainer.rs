@@ -12,16 +12,20 @@
 //! resulting curves are the substitutes for Figures 4/5/8/9.
 
 use super::checkpoint::Checkpoint;
-use super::metrics::{phase_summaries, EpochPoint, PhaseSummary, RunRecord};
+use super::metrics::{phase_summaries, ElasticSummary, EpochPoint, PhaseSummary, RunRecord};
 use crate::data::{ClassDataset, Shard};
 use crate::engine::ErrorResetEngine;
+use crate::membership::{Elastic, Epoch};
 use crate::models::{GradModel, ModelScratch};
 use crate::network::CostModel;
 use crate::obs;
 use crate::optimizer::{DistOptimizer, RoundStats};
-use crate::transport::{peer, Backend, TcpTransport};
+use crate::transport::peer::{PeerTransport, Tag};
+use crate::transport::{peer, rendezvous, Backend, TcpTransport};
 use crate::util::pool::scope_zip;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
+use std::time::Duration;
 
 #[derive(Clone, Debug)]
 pub struct TrainCfg {
@@ -70,6 +74,24 @@ pub struct TrainCfg {
     /// events are written to `<dir>/trace-rank<R>.jsonl` at the end
     /// (`obs::export`); the record's `phases` summary is populated.
     pub trace: Option<std::path::PathBuf>,
+    /// Elastic membership for `Backend::Tcp` (DESIGN.md §8): wrap the
+    /// transport in [`crate::membership::Elastic`], censor dead or
+    /// deadline-missing peers for the round instead of erroring, and
+    /// negotiate evictions/admissions at epoch boundaries through the
+    /// standing rendezvous session.  Implied by `chaos` and `join`.
+    pub elastic: bool,
+    /// Per-gather deadline for elastic runs, in milliseconds: a live rank
+    /// that misses it is censored for the round (not evicted — only
+    /// observed deaths evict).
+    pub round_deadline_ms: u64,
+    /// Fault injection for elastic TCP runs (`cser launch --chaos`);
+    /// loopback rendezvous only, enforced by the worker entry point.
+    pub chaos: Option<ChaosSpec>,
+    /// This rank was evicted (or started late) and is rejoining a running
+    /// job: dial the rendezvous with a `CSER-JN2` join request, restore
+    /// the granted checkpoint blob bit-exactly, and enter the epoch loop
+    /// at the granted step.
+    pub join: bool,
 }
 
 impl TrainCfg {
@@ -89,7 +111,68 @@ impl TrainCfg {
             ckpt: None,
             buckets: 0,
             trace: None,
+            elastic: false,
+            round_deadline_ms: 1000,
+            chaos: None,
+            join: false,
         }
+    }
+}
+
+/// Fault-injection plan for elastic TCP runs, parsed from
+/// `--chaos kill:<rank>@<step>,slow:<rank>:<ms>`: `kill` aborts the rank's
+/// process at its `<step>`-th gradient call (the launcher knows the plan
+/// and treats that death as expected), `slow` sleeps before every gradient
+/// to provoke round-deadline censoring.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ChaosSpec {
+    pub kill: Vec<(usize, u64)>,
+    pub slow: Vec<(usize, u64)>,
+}
+
+impl ChaosSpec {
+    pub fn parse(s: &str) -> Result<ChaosSpec, String> {
+        let mut spec = ChaosSpec::default();
+        for part in s.split(',').filter(|p| !p.is_empty()) {
+            if let Some(rest) = part.strip_prefix("kill:") {
+                let (rank, step) = rest
+                    .split_once('@')
+                    .ok_or_else(|| format!("bad chaos directive '{part}' (want kill:<rank>@<step>)"))?;
+                let rank: usize =
+                    rank.parse().map_err(|_| format!("bad chaos rank in '{part}'"))?;
+                if rank == 0 {
+                    return Err("chaos cannot kill rank 0 (the control plane is not evictable)".into());
+                }
+                let step = step.parse().map_err(|_| format!("bad chaos step in '{part}'"))?;
+                spec.kill.push((rank, step));
+            } else if let Some(rest) = part.strip_prefix("slow:") {
+                let (rank, ms) = rest
+                    .split_once(':')
+                    .ok_or_else(|| format!("bad chaos directive '{part}' (want slow:<rank>:<ms>)"))?;
+                spec.slow.push((
+                    rank.parse().map_err(|_| format!("bad chaos rank in '{part}'"))?,
+                    ms.parse().map_err(|_| format!("bad chaos delay in '{part}'"))?,
+                ));
+            } else {
+                return Err(format!("unknown chaos directive '{part}'"));
+            }
+        }
+        Ok(spec)
+    }
+
+    /// The gradient-call index at which `rank` dies, if it is marked.
+    pub fn kill_step(&self, rank: usize) -> Option<u64> {
+        self.kill.iter().find(|(r, _)| *r == rank).map(|(_, s)| *s)
+    }
+
+    /// The per-gradient delay injected into `rank`, if it is marked.
+    pub fn slow_ms(&self, rank: usize) -> Option<u64> {
+        self.slow.iter().find(|(r, _)| *r == rank).map(|(_, m)| *m)
+    }
+
+    /// Every rank named anywhere in the plan (launch validates them).
+    pub fn ranks(&self) -> impl Iterator<Item = usize> + '_ {
+        self.kill.iter().chain(self.slow.iter()).map(|(r, _)| *r)
     }
 }
 
@@ -186,6 +269,9 @@ pub fn train_classifier(
     if let Backend::Tcp { bind, peers, rank } = &cfg.backend {
         let (bind, peers, rank) = (bind.clone(), *peers, *rank);
         let engine = opt.as_engine().expect("Backend::Tcp requires an engine optimizer");
+        if cfg.elastic || cfg.chaos.is_some() || cfg.join {
+            return train_classifier_tcp_elastic(model, train, test, engine, cfg, &bind, peers, rank);
+        }
         return train_classifier_tcp(model, train, test, engine, cfg, &bind, peers, rank);
     }
     if cfg.backend.worker_resident() {
@@ -301,6 +387,7 @@ pub fn train_classifier(
         points,
         diverged,
         phases: trace_finish(cfg, 0, &[]),
+        elastic: None,
     }
 }
 
@@ -388,6 +475,7 @@ fn train_classifier_resident(
         points,
         diverged,
         phases: trace_finish(cfg, 0, &[]),
+        elastic: None,
     }
 }
 
@@ -540,6 +628,271 @@ fn train_classifier_tcp(
         points,
         diverged,
         phases: trace_finish(cfg, rank, &tp.per_peer),
+        elastic: None,
+    }
+}
+
+/// Elastic variant of [`train_classifier_tcp`] (DESIGN.md §8): the socket
+/// transport is wrapped in [`Elastic`], so a dead or deadline-missing peer
+/// is **censored for the round** — the parameter-server collectives
+/// aggregate over the responders and rescale by the live count — instead
+/// of killing the fleet, and membership changes are negotiated at each
+/// epoch boundary through the standing rendezvous [`rendezvous::Session`]:
+/// observed deaths are evicted, and rank 0 admits at most one parked
+/// joiner per boundary (grant = epoch, resume step, live mask, checkpoint
+/// blob; the joiner re-dials the live mesh and every survivor installs the
+/// fresh link).  With `cfg.join` this rank *is* the joiner: it restores
+/// the granted blob bit-exactly and enters the epoch loop at the granted
+/// step.
+///
+/// Scope limits, by design: ring-routed plans (globally-synchronized
+/// sparse compressors) keep their fail-stop semantics — every collective
+/// here must be parameter-server-shaped for censoring to be sound — and
+/// the bucketed pipeline is not combined with elastic membership.  Rank 0
+/// is the control plane and is not evictable; losing it is terminal.
+///
+/// The returned record carries an [`ElasticSummary`]: the final epoch
+/// view plus this rank's ground-truth wire counters, which is what the
+/// `elastic_equiv` tests audit for exact bit accounting under partial
+/// rounds.
+#[allow(clippy::too_many_arguments)]
+fn train_classifier_tcp_elastic(
+    model: &dyn GradModel,
+    train: &ClassDataset,
+    test: &ClassDataset,
+    engine: &mut ErrorResetEngine,
+    cfg: &TrainCfg,
+    rendezvous_addr: &str,
+    n_peers: usize,
+    rank: usize,
+) -> RunRecord {
+    assert_eq!(engine.n(), 1, "a Backend::Tcp engine holds exactly the local rank's worker");
+    assert!(
+        cfg.buckets <= 1,
+        "elastic membership runs the whole-vector sync path (no bucketed pipeline)"
+    );
+    let d = engine.dim();
+    assert_eq!(d, model.dim());
+    trace_begin(cfg);
+    let n = n_peers;
+    let deadline = Duration::from_millis(cfg.round_deadline_ms.max(1));
+    let iters_per_epoch = (train.len() / (cfg.batch_per_worker * n)).max(1);
+    let mut evictions = 0u64;
+    let mut joins = 0u64;
+
+    let (mut el, mut session, start_epoch) = if cfg.join {
+        // ---- the rejoin path: dial back into the running job ----
+        let (links, grant, session) = rendezvous::rejoin(rendezvous_addr, rank, n)
+            .unwrap_or_else(|e| panic!("rank {rank}: rejoining job at {rendezvous_addr}: {e}"));
+        let ck = Checkpoint::from_bytes(&grant.blob)
+            .unwrap_or_else(|e| panic!("rank {rank}: decoding the grant checkpoint: {e}"));
+        ck.restore_engine(engine)
+            .unwrap_or_else(|e| panic!("rank {rank}: restoring the grant checkpoint: {e}"));
+        assert_eq!(engine.step_count(), grant.step, "grant step must match its checkpoint");
+        assert_eq!(grant.step % iters_per_epoch as u64, 0, "admissions happen at epoch boundaries");
+        let tp = TcpTransport::from_streams(rank, n, links)
+            .unwrap_or_else(|e| panic!("rank {rank}: wrapping the rejoin mesh: {e}"));
+        let view = Epoch::from_mask(grant.epoch, grant.live_mask, n);
+        assert!(view.is_live(rank), "the granted view must include the joiner");
+        let mut el = Elastic::with_epoch(tp, view, Some(deadline));
+        // Rank 0's boundary broadcast runs under the granted view, so the
+        // admission frame arrives here too; consume it and cross-check the
+        // grant against what the survivors were told.
+        let m = el
+            .recv(0, grant.step, Tag::Epoch)
+            .unwrap_or_else(|e| panic!("rank {rank}: receiving the admission frame: {e}"));
+        let (epoch, joined) = crate::membership::decode_epoch_frame(&m, n)
+            .unwrap_or_else(|e| panic!("rank {rank}: decoding the admission frame: {e}"));
+        assert_eq!(joined, Some(rank), "the admission frame must name this rank");
+        assert_eq!(epoch, view, "grant and boundary frame disagree on the view");
+        joins += 1;
+        (el, session, (grant.step / iters_per_epoch as u64) as usize)
+    } else {
+        let (tp, session) = TcpTransport::connect_v2(rendezvous_addr, rank, n)
+            .unwrap_or_else(|e| panic!("joining job at {rendezvous_addr} as rank {rank}/{n}: {e}"));
+        let mut el = Elastic::new(tp, Some(deadline));
+        let mut start_epoch = 0usize;
+        if let Some(path) = &cfg.ckpt {
+            if path.exists() {
+                let ck = Checkpoint::load(path)
+                    .unwrap_or_else(|e| panic!("rank {rank}: loading checkpoint: {e}"));
+                ck.restore_engine(engine)
+                    .unwrap_or_else(|e| panic!("rank {rank}: restoring checkpoint: {e}"));
+                start_epoch = (engine.step_count() / iters_per_epoch as u64) as usize;
+            }
+        }
+        let same = peer::all_equal(&mut el, start_epoch as u64, 0)
+            .unwrap_or_else(|e| panic!("rank {rank}: start-epoch agreement: {e}"));
+        assert!(
+            same,
+            "rank {rank} resumed at epoch {start_epoch} but the fleet disagrees — \
+             restart all ranks from matching checkpoints"
+        );
+        (el, session, start_epoch)
+    };
+
+    // Gradient oracle, with the chaos plan folded in: a marked kill panics
+    // at its gradient call (unwinding drops the transport, so peers observe
+    // the hangup as `PeerDown` and censor this rank); a marked slow sleeps
+    // before every gradient to provoke deadline censoring.
+    let res = GradRes::new(Shard::split(train.len(), n, cfg.seed).swap_remove(rank));
+    let kill_at = cfg.chaos.as_ref().and_then(|c| c.kill_step(rank));
+    let slow_ms = cfg.chaos.as_ref().and_then(|c| c.slow_ms(rank));
+    let calls = AtomicU64::new(0);
+    let grad_fn = crate::engine::as_grad(|_w, xw: &[f32], out: &mut [f32]| {
+        let k = calls.fetch_add(1, Ordering::SeqCst);
+        if kill_at.is_some_and(|at| k >= at) {
+            panic!("chaos: rank {rank} killed at gradient call {k}");
+        }
+        if let Some(ms) = slow_ms {
+            std::thread::sleep(Duration::from_millis(ms));
+        }
+        let mut r = res.lock().unwrap();
+        let GradRes { shard, batch, scratch } = &mut *r;
+        shard.sample_batch(cfg.batch_per_worker, batch);
+        model.loss_grad_scratch(xw, train, batch, out, scratch)
+    });
+
+    let mut xbar = vec![0.0f32; d];
+    let mut points = Vec::with_capacity(cfg.epochs.saturating_sub(start_epoch));
+    let mut diverged = false;
+    let mut initial_loss = f64::NAN;
+    let mut cum_bits = 0.0f64;
+    let mut cum_seconds = 0.0f64;
+    let scale = cfg.paper_d as f64 / d as f64;
+
+    for epoch in start_epoch..cfg.epochs {
+        let frac = epoch as f64 / cfg.epochs as f64;
+        let eta = (cfg.lr * (cfg.lr_multiplier)(&cfg.schedule, frac)) as f32;
+        let stop_loss = if initial_loss.is_finite() {
+            cfg.divergence_factor * initial_loss
+        } else {
+            f64::INFINITY
+        };
+        let reports = engine
+            .run_distributed(&mut el, iters_per_epoch, eta, stop_loss, &grad_fn)
+            .unwrap_or_else(|e| panic!("rank {rank}: epoch {epoch}: {e}"));
+        let mut loss_sum = 0.0f64;
+        for rep in &reports {
+            if initial_loss.is_nan() {
+                initial_loss = rep.loss;
+            }
+            loss_sum += rep.loss;
+            if !rep.loss.is_finite() || rep.loss > cfg.divergence_factor * initial_loss {
+                diverged = true;
+            }
+            price_step(cfg, scale, &rep.stats, &mut cum_bits, &mut cum_seconds);
+        }
+        let train_loss = loss_sum / reports.len().max(1) as f64;
+        xbar.copy_from_slice(engine.worker_model(0));
+        if !engine.comm_plan().replicated() {
+            peer::mean_dense(&mut el, &mut xbar, engine.step_count())
+                .unwrap_or_else(|e| panic!("rank {rank}: evaluating mean model: {e}"));
+        }
+        let test_acc = if xbar.iter().all(|v| v.is_finite()) {
+            model.accuracy(&xbar, test) as f64
+        } else {
+            diverged = true;
+            f64::NAN
+        };
+        points.push(EpochPoint { epoch, train_loss, test_acc, cum_bits, cum_seconds });
+        if let Some(path) = &cfg.ckpt {
+            if let Err(e) = Checkpoint::capture_engine(engine).save(path) {
+                eprintln!("warning: rank {rank}: checkpoint save failed: {e}");
+            }
+        }
+        diverged = peer::agree(&mut el, diverged, engine.step_count())
+            .unwrap_or_else(|e| panic!("rank {rank}: divergence agreement: {e}"));
+        if diverged {
+            break;
+        }
+
+        // ---- the epoch boundary: the only place membership changes ----
+        let round = engine.step_count();
+        let mut admit = None;
+        if rank == 0 && el.live_count() < n {
+            // Short-handed: give a restarting rank one deadline window to
+            // park at the rendezvous.  A full fleet skips the poll — the
+            // happy path costs nothing here.
+            match session.poll_join_deadline(deadline) {
+                Ok(Some(req)) if !el.is_live(req.rank) => {
+                    let j = req.rank;
+                    let next =
+                        el.epoch().advance(el.pending_down() & el.epoch().live_mask(), Some(j));
+                    let blob = Checkpoint::capture_engine(engine).to_bytes();
+                    let granted = session
+                        .grant_join(req, next.id(), round, next.live_mask(), &blob)
+                        .and_then(|()| session.accept_rejoin());
+                    match granted {
+                        Ok((peer, stream)) if peer == j => {
+                            el.inner_mut()
+                                .install_link(j, stream)
+                                .unwrap_or_else(|e| panic!("rank 0: relinking rank {j}: {e}"));
+                            admit = Some(j);
+                        }
+                        Ok((peer, _)) => eprintln!(
+                            "warning: rank 0: rank {peer} re-dialed while rank {j} held the \
+                             grant — admission dropped"
+                        ),
+                        Err(e) => eprintln!("warning: rank 0: admitting rank {j} failed: {e}"),
+                    }
+                }
+                Ok(Some(req)) => {
+                    eprintln!("warning: rank 0: live rank {} asked to join — ignored", req.rank)
+                }
+                Ok(None) => {}
+                Err(e) => eprintln!("warning: rank 0: join poll failed: {e}"),
+            }
+        }
+        if let Some(tr) = el
+            .epoch_boundary(round, admit)
+            .unwrap_or_else(|e| panic!("rank {rank}: epoch boundary at step {round}: {e}"))
+        {
+            evictions += u64::from(tr.evicted.count_ones());
+            for r in 0..n {
+                if (tr.evicted >> r) & 1 == 1 {
+                    el.inner_mut().drop_link(r);
+                }
+            }
+            if let Some(j) = tr.joined {
+                joins += 1;
+                if rank != 0 {
+                    // The joiner re-dialed this rank's data listener when
+                    // the grant arrived; adopt the fresh stream.
+                    let (peer, stream) = session.accept_rejoin().unwrap_or_else(|e| {
+                        panic!("rank {rank}: accepting rejoined rank {j}: {e}")
+                    });
+                    assert_eq!(peer, j, "rejoin handshake names the wrong rank");
+                    el.inner_mut()
+                        .install_link(j, stream)
+                        .unwrap_or_else(|e| panic!("rank {rank}: relinking rank {j}: {e}"));
+                }
+            }
+        }
+    }
+
+    let final_view = el.epoch();
+    let live_mask = final_view.live_mask() & !el.pending_down();
+    let censor_events = el.censor_events();
+    let tp = el.into_inner();
+    RunRecord {
+        name: String::new(),
+        optimizer: engine.name(),
+        overall_rc: f64::NAN,
+        lr: cfg.lr,
+        seed: cfg.seed,
+        points,
+        diverged,
+        phases: trace_finish(cfg, rank, &tp.per_peer),
+        elastic: Some(ElasticSummary {
+            final_epoch: final_view.id(),
+            live_mask,
+            censor_events,
+            evictions,
+            joins,
+            payload_bits_sent: tp.per_peer.iter().map(|p| p.payload_bits_sent).sum(),
+            payload_bits_received: tp.per_peer.iter().map(|p| p.payload_bits_received).sum(),
+        }),
     }
 }
 

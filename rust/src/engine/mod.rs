@@ -41,7 +41,7 @@ pub mod plan;
 pub mod worker;
 
 pub use pipeline::{SyncBuckets, SyncInfo, SyncPipeline};
-pub use plan::{CommPlan, RoundRule, StepRule};
+pub use plan::{Cadence, CommPlan, RoundRule, StepRule};
 pub use worker::{descent_into, WorkerState};
 
 use crate::compressor::{Compressor, Ctx, Selection};
@@ -142,6 +142,11 @@ impl ErrorResetEngine {
     pub fn set_bucketing(&mut self, buckets: Option<SyncBuckets>) {
         if let Some(b) = &buckets {
             assert_eq!(b.dim(), self.d, "bucket bounds must cover the model dimension");
+            assert!(
+                matches!(self.plan.cadence, Cadence::Always),
+                "bucketed synchronization does not implement the censoring cadence \
+                 (the threshold prices the whole-vector compressed norm)"
+            );
         }
         let n = self.workers.len();
         self.pipeline = buckets.map(|b| SyncPipeline::new(b, n));
@@ -651,13 +656,41 @@ impl ErrorResetEngine {
                 }
                 let mut stats = RoundStats::default();
                 let global = c2.globally_synchronized();
+                // Censoring cadence (Li et al.): the gradient-path sync drops
+                // sub-threshold uploads.  `validate` pins this to PS-routed
+                // c2 (so `global` is false) and `set_bucketing` forbids the
+                // bucketed pipeline under it — whole-vector only.
+                let tau = self.plan.cadence.tau(t);
                 let mut ps = take_field(&mut self.workers, |w| &mut w.p);
                 let info = if global || !track {
-                    central_sync(&self.coll, pipeline, false, &mut ps, None, c2, t, d)
+                    match tau {
+                        Some(tau) => {
+                            let _s = obs::Span::enter(Phase::Exchange);
+                            SyncInfo::whole(d, self.coll.psync_censored(&mut ps, None, c2, t, tau))
+                        }
+                        None => central_sync(&self.coll, pipeline, false, &mut ps, None, c2, t, d),
+                    }
                 } else {
                     let mut rs = take_field(&mut self.workers, |w| &mut w.r);
-                    let info =
-                        central_sync(&self.coll, pipeline, false, &mut ps, Some(&mut rs), c2, t, d);
+                    let info = match tau {
+                        Some(tau) => {
+                            let _s = obs::Span::enter(Phase::Exchange);
+                            SyncInfo::whole(
+                                d,
+                                self.coll.psync_censored(&mut ps, Some(&mut rs), c2, t, tau),
+                            )
+                        }
+                        None => central_sync(
+                            &self.coll,
+                            pipeline,
+                            false,
+                            &mut ps,
+                            Some(&mut rs),
+                            c2,
+                            t,
+                            d,
+                        ),
+                    };
                     put_field(&mut self.workers, rs, |w| &mut w.r);
                     info
                 };
@@ -973,12 +1006,27 @@ fn peer_step(
             }
             let global = c2.globally_synchronized();
             let mut stats = RoundStats::default();
+            // Censoring cadence: same routing as the central path — PS-only,
+            // never bucketed (`set_bucketing` rejects the pairing).
+            let tau = plan.cadence.tau(t);
             let info = if global || !track {
                 let (p, s) = (&mut w.p, &mut w.scratch);
-                peer_sync(tp, pipe, peer::Mode::Psync, p, None, c2, t, s)?
+                match tau {
+                    Some(tau) => SyncInfo::whole(
+                        d,
+                        peer::psync_censored_with(tp, p, None, c2.as_ref(), t, tau, s)?,
+                    ),
+                    None => peer_sync(tp, pipe, peer::Mode::Psync, p, None, c2, t, s)?,
+                }
             } else {
                 let (p, r, s) = (&mut w.p, &mut w.r, &mut w.scratch);
-                peer_sync(tp, pipe, peer::Mode::Psync, p, Some(r), c2, t, s)?
+                match tau {
+                    Some(tau) => SyncInfo::whole(
+                        d,
+                        peer::psync_censored_with(tp, p, Some(r), c2.as_ref(), t, tau, s)?,
+                    ),
+                    None => peer_sync(tp, pipe, peer::Mode::Psync, p, Some(r), c2, t, s)?,
+                }
             };
             stats.grad_bits = info.upload_bits_per_worker;
             stats.grad_allreduce = info.allreduce_compatible;

@@ -55,6 +55,38 @@ pub enum RoundRule {
     Resync { c1: Arc<dyn Compressor>, h: u64 },
 }
 
+/// When the per-step compressed upload actually transmits.
+///
+/// Orthogonal to the step rule: the rule says *what* is compressed, the
+/// cadence says *whether this round's result is worth sending*.  The
+/// censored variant implements Li et al.'s communication-censoring rule
+/// (PAPERS.md): round `t` transmits only when `‖C2(v)‖ ≥ τ(t)` with the
+/// decaying threshold `τ(t) = τ0·γ^t`; a censored worker uploads an empty
+/// frame, keeps its whole update as residual, and still receives the
+/// aggregate (see [`crate::collective::psync_censored_with`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Cadence {
+    /// Transmit every round — the historical behavior.
+    Always,
+    /// Event-triggered: transmit only when the compressed update's norm
+    /// clears the decaying threshold `τ(t) = tau0·gamma^t`.
+    Censored { tau0: f32, gamma: f32 },
+}
+
+impl Cadence {
+    /// The threshold in force at step `t`; `None` when nothing censors.
+    pub fn tau(&self, t: u64) -> Option<f32> {
+        match self {
+            Cadence::Always => None,
+            Cadence::Censored { tau0, gamma } => {
+                // γ^t underflows to 0 long before t saturates the clamp, so
+                // the cast is exact everywhere it matters.
+                Some(tau0 * gamma.powi(t.min(i32::MAX as u64) as i32))
+            }
+        }
+    }
+}
+
 /// A fully-specified synchronization schedule.  Build one with the family
 /// constructors below, or assemble the rules directly for new algorithms —
 /// the step/round pair must form one of the supported combinations
@@ -63,17 +95,24 @@ pub enum RoundRule {
 pub struct CommPlan {
     pub step: StepRule,
     pub round: RoundRule,
+    /// Per-step transmit cadence; [`Cadence::Always`] for every family
+    /// constructor (attach censoring with [`CommPlan::with_cadence`]).
+    pub cadence: Cadence,
 }
 
 impl CommPlan {
     /// Fully-synchronous SGD — the R_C = 1 baseline in every table.
     pub fn full_sgd() -> Self {
-        CommPlan { step: StepRule::DenseAverage, round: RoundRule::None }
+        CommPlan { step: StepRule::DenseAverage, round: RoundRule::None, cadence: Cadence::Always }
     }
 
     /// EF-SGD (Alg 10; Karimireddy et al. 2019): compressor `c1` every step.
     pub fn ef_sgd(c1: Box<dyn Compressor>) -> Self {
-        CommPlan { step: StepRule::ErrorFeedback { c: c1.into() }, round: RoundRule::None }
+        CommPlan {
+            step: StepRule::ErrorFeedback { c: c1.into() },
+            round: RoundRule::None,
+            cadence: Cadence::Always,
+        }
     }
 
     /// Local SGD: model averaging every `h` steps (C1 = identity).
@@ -84,7 +123,11 @@ impl CommPlan {
     /// QSparse-local-SGD (Alg 1/12; Basu et al. 2019).
     pub fn qsparse(c1: Box<dyn Compressor>, h: u64) -> Self {
         assert!(h >= 1);
-        CommPlan { step: StepRule::LocalDescent, round: RoundRule::Resync { c1: c1.into(), h } }
+        CommPlan {
+            step: StepRule::LocalDescent,
+            round: RoundRule::Resync { c1: c1.into(), h },
+            cadence: Cadence::Always,
+        }
     }
 
     /// Full CSER / M-CSER (Alg 2 / Alg 4, implementation I): gradient
@@ -94,6 +137,7 @@ impl CommPlan {
         CommPlan {
             step: StepRule::ErrorReset { c2: c2.into(), track_error: true },
             round: RoundRule::ErrorSync { c1: c1.into(), h },
+            cadence: Cadence::Always,
         }
     }
 
@@ -120,7 +164,16 @@ impl CommPlan {
         CommPlan {
             step: StepRule::ErrorReset { c2: c2.into(), track_error: false },
             round: RoundRule::ModelSync { c1: c1.into(), h },
+            cadence: Cadence::Always,
         }
+    }
+
+    /// Attach a transmit cadence (builder-style).  [`CommPlan::validate`]
+    /// rejects censored cadences on plans whose step rule is not a
+    /// parameter-server-routed `ErrorReset`.
+    pub fn with_cadence(mut self, cadence: Cadence) -> Self {
+        self.cadence = cadence;
+        self
     }
 
     /// Panic unless the step/round pair is one the engine executes.  Every
@@ -149,6 +202,23 @@ impl CommPlan {
              (use the family constructors, or pair DenseAverage/ErrorFeedback with None, \
              LocalDescent with Resync, ErrorReset with ErrorSync/ModelSync)"
         );
+        if let Cadence::Censored { tau0, gamma } = self.cadence {
+            assert!(
+                tau0.is_finite() && tau0 >= 0.0 && gamma > 0.0 && gamma <= 1.0,
+                "censored cadence needs finite tau0 >= 0 and gamma in (0, 1]"
+            );
+            match &self.step {
+                StepRule::ErrorReset { c2, .. } => assert!(
+                    !c2.globally_synchronized(),
+                    "censored cadence is parameter-server-routed: a globally-synchronized \
+                     C2 derives one shared schedule and cannot drop per-worker uploads"
+                ),
+                _ => panic!(
+                    "censored cadence applies to the per-step compressed upload; only \
+                     ErrorReset step rules have one"
+                ),
+            }
+        }
     }
 
     /// Reset cadence (1 when the plan has no round rule).
@@ -197,7 +267,7 @@ impl CommPlan {
     /// Legacy-compatible display name (what the result files and figures
     /// carried before the engine refactor).
     pub fn name(&self) -> String {
-        match (&self.step, &self.round) {
+        let base = match (&self.step, &self.round) {
             (StepRule::DenseAverage, _) => "sgd".into(),
             (StepRule::ErrorFeedback { c }, _) => format!("ef-sgd[{}]", c.name()),
             (StepRule::LocalDescent, RoundRule::Resync { c1, h }) => {
@@ -210,6 +280,10 @@ impl CommPlan {
                 format!("cser2[{},{},H={}]", c1.name(), c2.name(), h)
             }
             _ => "custom-plan".into(),
+        };
+        match self.cadence {
+            Cadence::Always => base,
+            Cadence::Censored { tau0, gamma } => format!("{base}+censor[{tau0},{gamma}]"),
         }
     }
 }
@@ -253,8 +327,38 @@ mod tests {
         CommPlan {
             step: StepRule::ErrorFeedback { c: Arc::new(Grbs::new(2.0, 4, 1)) },
             round: RoundRule::ModelSync { c1: Arc::new(Grbs::new(2.0, 4, 1)), h: 2 },
+            cadence: Cadence::Always,
         }
         .validate();
+    }
+
+    #[test]
+    fn censored_cadence_threshold_decays() {
+        let p = CommPlan::cser(
+            Box::new(Grbs::new(2.0, 4, 1)),
+            Box::new(crate::compressor::TopK::new(4.0)),
+            2,
+        )
+        .with_cadence(Cadence::Censored { tau0: 2.0, gamma: 0.5 });
+        p.validate();
+        assert_eq!(p.cadence.tau(0), Some(2.0));
+        assert_eq!(p.cadence.tau(2), Some(0.5));
+        assert!(p.name().contains("+censor["));
+        assert_eq!(CommPlan::full_sgd().cadence.tau(5), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "parameter-server-routed")]
+    fn censored_cadence_rejects_shared_support_c2() {
+        CommPlan::cser(Box::new(Grbs::new(2.0, 4, 1)), Box::new(Grbs::new(4.0, 4, 2)), 2)
+            .with_cadence(Cadence::Censored { tau0: 1.0, gamma: 0.9 })
+            .validate();
+    }
+
+    #[test]
+    #[should_panic(expected = "ErrorReset step rules")]
+    fn censored_cadence_rejects_non_error_reset_plans() {
+        CommPlan::full_sgd().with_cadence(Cadence::Censored { tau0: 1.0, gamma: 0.9 }).validate();
     }
 
     #[test]

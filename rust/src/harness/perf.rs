@@ -9,11 +9,11 @@
 //! (CI's `bench-smoke` job runs `cser bench --quick` and validates the
 //! schema).
 //!
-//! # `BENCH_engine.json` schema (`cser-bench-engine/v3`)
+//! # `BENCH_engine.json` schema (`cser-bench-engine/v4`)
 //!
 //! ```json
 //! {
-//!   "schema": "cser-bench-engine/v3",
+//!   "schema": "cser-bench-engine/v4",
 //!   "quick": false,
 //!   "overlap_speedup_vs_sequential": 1.4,  // psync_sequential_bucketed / psync_overlap medians
 //!   "entries": [
@@ -62,6 +62,13 @@
 //! `speedup_vs_reference` is untraced median / traced median — the
 //! zero-overhead contract puts the target above 0.95 (< 5% overhead);
 //! `median_ns` is the traced time.
+//!
+//! v4 adds the `partial_participation` entry (kind `collective`): the
+//! `psync_sequential` workload re-run with every mesh endpoint wrapped in
+//! `membership::Elastic` — full fleet, nobody censored, so the measured
+//! cost is the elastic happy path (live-mask checks + the deadline-aware
+//! recv).  `speedup_vs_reference` is raw median / elastic median; the
+//! target overhead is < 2% (ratio above 0.98 up to bench noise).
 
 use crate::collective::bucket::SyncBuckets;
 use crate::compressor::{Compressor, Grbs, TopK};
@@ -80,7 +87,7 @@ use std::sync::mpsc::channel;
 use std::sync::Arc;
 use std::time::Duration;
 
-pub const SCHEMA: &str = "cser-bench-engine/v3";
+pub const SCHEMA: &str = "cser-bench-engine/v4";
 
 #[derive(Debug, Clone)]
 pub struct PerfEntry {
@@ -505,6 +512,69 @@ pub fn run(quick: bool) -> PerfReport {
     for h in handles {
         h.join().expect("collective bench worker");
     }
+
+    // ---- elastic membership: happy-path deadline-check overhead ----
+    // The psync_sequential workload again, with every mesh endpoint
+    // wrapped in `membership::Elastic` (full fleet, nobody censored): the
+    // wrapper's cost on the happy path is live-mask checks plus the
+    // deadline-aware recv.  speedup_vs_reference = raw / elastic medians;
+    // target < 2% overhead.
+    let eps = channel_mesh(n_coll);
+    let (edone_tx, edone_rx) = channel::<u64>();
+    let mut ecmd_txs = Vec::with_capacity(n_coll);
+    let mut ehandles = Vec::with_capacity(n_coll);
+    for (w, tp) in eps.into_iter().enumerate() {
+        let (cmd_tx, cmd_rx) = channel::<u64>(); // round to run; 0 = stop
+        ecmd_txs.push(cmd_tx);
+        let mut v = base[w].clone();
+        let done = edone_tx.clone();
+        ehandles.push(std::thread::spawn(move || {
+            let c: Arc<dyn Compressor> = Arc::new(TopK::new(64.0));
+            let mut scratch = crate::compressor::Scratch::new();
+            let mut el = crate::membership::Elastic::new(tp, Some(Duration::from_secs(5)));
+            while let Ok(round) = cmd_rx.recv() {
+                if round == 0 {
+                    break;
+                }
+                let r = peer::psync_with(&mut el, &mut v, None, c.as_ref(), round, &mut scratch)
+                    .expect("elastic psync");
+                done.send(r.upload_bits_per_worker).expect("bench collector");
+            }
+        }));
+    }
+    let mut bits_elastic = 0u64;
+    b.run("psync_elastic_topk_n4", || {
+        round += 1;
+        for tx in &ecmd_txs {
+            tx.send(round).expect("bench worker");
+        }
+        for _ in 0..n_coll {
+            bits_elastic = edone_rx.recv().expect("bench worker");
+        }
+    });
+    let elastic_ns = b.results.last().unwrap().median_ns;
+    for tx in &ecmd_txs {
+        tx.send(0).expect("bench worker");
+    }
+    for h in ehandles {
+        h.join().expect("elastic bench worker");
+    }
+    // Same compressor, same fleet, nobody censored: the elastic path must
+    // account exactly the bits the raw path accounts.
+    assert_eq!(
+        bits_elastic, bits_seq,
+        "elastic happy path must account the same bits as the raw transport"
+    );
+    entries.push(PerfEntry {
+        name: "partial_participation".into(),
+        kind: "collective",
+        d: dc,
+        workers: n_coll,
+        batch: 0,
+        median_ns: elastic_ns,
+        bits_per_step: bits_elastic as f64,
+        speedup_vs_reference: seq_ns / elastic_ns,
+    });
 
     // ---- tracing overhead: the CSER engine step, tracing off vs on ----
     // Both medians are measured back to back in this process so the

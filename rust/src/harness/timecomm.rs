@@ -101,6 +101,7 @@ mod tests {
             seed: 1,
             diverged: false,
             phases: Vec::new(),
+            elastic: None,
             points: (1..=10)
                 .map(|e| EpochPoint {
                     epoch: e,

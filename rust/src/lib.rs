@@ -45,6 +45,7 @@ pub mod engine;
 pub mod data;
 pub mod harness;
 pub mod kernel;
+pub mod membership;
 pub mod models;
 pub mod network;
 pub mod obs;

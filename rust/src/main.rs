@@ -13,12 +13,18 @@
 //!                                          sparsifier families
 //! cser train-lm [--preset tiny|small] [--opt cser|sgd|...] [--steps N] ...
 //! cser launch   [--workers N] [--opt ...] [--epochs N] [--ckpt-dir D]
-//!               [--buckets K] [--trace D]  spawn N worker processes over
+//!               [--buckets K] [--trace D] [--elastic] [--deadline-ms T]
+//!               [--chaos kill:<r>@<s>,slow:<r>:<ms>]
+//!                                          spawn N worker processes over
 //!                                          loopback TCP, print the RunRecord
 //!                                          (K > 1: bucketed sync pipeline;
-//!                                          --trace: per-rank phase traces)
-//! cser worker   --rendezvous H:P --rank R --workers N [training flags]
+//!                                          --trace: per-rank phase traces;
+//!                                          --elastic/--chaos: epoch-based
+//!                                          membership + fault injection)
+//! cser worker   --rendezvous H:P --rank R --workers N [--join] [training flags]
 //!                                          join a multi-process job as one rank
+//!                                          (--join: rejoin a running elastic
+//!                                          job from its checkpoint grant)
 //! cser trace    summarize --trace D        merge per-rank traces into a
 //!                                          Chrome trace JSON + print summary
 //! cser bench    [--quick] [--out BENCH_engine.json]
@@ -45,7 +51,8 @@ fn main() {
     let known = [
         "suite", "seeds", "quick", "rc", "preset", "opt", "steps", "workers", "lr", "beta",
         "eval-every", "seed", "artifacts", "h", "rc1", "rc2", "x", "y", "out", "rendezvous",
-        "rank", "epochs", "batch", "record", "ckpt", "ckpt-dir", "buckets", "trace",
+        "rank", "epochs", "batch", "record", "ckpt", "ckpt-dir", "buckets", "trace", "chaos",
+        "elastic", "deadline-ms", "join",
     ];
     let args = match Args::parse(argv, &known) {
         Ok(a) => a,
@@ -264,6 +271,19 @@ fn dist_train_cfg(args: &Args) -> anyhow::Result<cser::coordinator::TrainCfg> {
     // of compression with the exchange on every rank).
     cfg.buckets = args.usize("buckets", 0)?;
     cfg.trace = args.opt_str("trace").map(std::path::PathBuf::from);
+    // Elastic membership (DESIGN.md §8): --elastic opts in directly;
+    // --chaos (fault injection) and --join (rejoin a running job) imply it.
+    cfg.elastic = args.bool("elastic", false)?;
+    cfg.round_deadline_ms = args.u64("deadline-ms", 1000)?;
+    if let Some(spec) = args.opt_str("chaos") {
+        cfg.chaos =
+            Some(cser::coordinator::ChaosSpec::parse(&spec).map_err(|e| anyhow::anyhow!(e))?);
+        cfg.elastic = true;
+    }
+    cfg.join = args.bool("join", false)?;
+    if cfg.join {
+        cfg.elastic = true;
+    }
     Ok(cfg)
 }
 
@@ -283,6 +303,24 @@ fn worker(args: &Args) -> anyhow::Result<()> {
     let mut cfg = dist_train_cfg(args)?;
     cfg.backend = cser::transport::Backend::Tcp { bind: rendezvous.clone(), peers, rank };
     cfg.ckpt = args.opt_str("ckpt").map(std::path::PathBuf::from);
+    if cfg.chaos.is_some() {
+        // Fault injection deliberately kills processes; restrict it to
+        // single-machine loopback jobs so a mistyped flag cannot take down
+        // ranks of a real cluster.
+        use std::net::ToSocketAddrs;
+        let loopback = rendezvous
+            .to_socket_addrs()
+            .ok()
+            .and_then(|mut a| a.next())
+            .is_some_and(|a| a.ip().is_loopback());
+        anyhow::ensure!(loopback, "--chaos is loopback-only ({rendezvous} is not loopback)");
+    }
+    if cfg.elastic {
+        anyhow::ensure!(
+            cfg.buckets <= 1,
+            "--elastic runs the whole-vector sync path; drop --buckets"
+        );
+    }
 
     let (train, test, model) = dist_workload();
     let init = cser::models::GradModel::init(&model, cfg.seed);
@@ -315,6 +353,18 @@ fn worker(args: &Args) -> anyhow::Result<()> {
 fn launch(args: &Args) -> anyhow::Result<()> {
     let n = args.usize("workers", 4)?;
     anyhow::ensure!(n >= 1, "--workers must be at least 1");
+    // With --chaos the named ranks die on purpose (elastic membership keeps
+    // the survivors training); parse the plan here so their exits are
+    // expected instead of failing the launch.
+    let chaos = match args.opt_str("chaos") {
+        Some(s) => Some(cser::coordinator::ChaosSpec::parse(&s).map_err(|e| anyhow::anyhow!(e))?),
+        None => None,
+    };
+    if let Some(c) = &chaos {
+        for r in c.ranks() {
+            anyhow::ensure!(r < n, "--chaos names rank {r}, but the job has {n} workers");
+        }
+    }
     let addr = cser::transport::rendezvous::free_loopback_addr()
         .map_err(|e| anyhow::anyhow!("reserving a rendezvous port: {e}"))?;
     if let Some(dir) = args.opt_str("trace") {
@@ -340,9 +390,10 @@ fn launch(args: &Args) -> anyhow::Result<()> {
             .arg(n.to_string())
             .arg("--record")
             .arg(&record);
-        for key in
-            ["opt", "rc1", "rc2", "h", "epochs", "batch", "lr", "beta", "seed", "buckets", "trace"]
-        {
+        for key in [
+            "opt", "rc1", "rc2", "h", "epochs", "batch", "lr", "beta", "seed", "buckets", "trace",
+            "chaos", "elastic", "deadline-ms",
+        ] {
             if let Some(v) = args.opt_str(key) {
                 cmd.arg(format!("--{key}")).arg(v);
             }
@@ -360,8 +411,18 @@ fn launch(args: &Args) -> anyhow::Result<()> {
 
     let mut failures = Vec::new();
     for (rank, child) in children.iter_mut() {
+        let expected_kill = chaos.as_ref().is_some_and(|c| c.kill_step(*rank).is_some());
         match child.wait() {
-            Ok(status) if status.success() => {}
+            Ok(status) if status.success() => {
+                if expected_kill {
+                    failures.push(format!(
+                        "rank {rank} was marked for a chaos kill but exited cleanly"
+                    ));
+                }
+            }
+            Ok(status) if expected_kill => {
+                eprintln!("launch: rank {rank} chaos-killed as planned ({status})");
+            }
             Ok(status) => failures.push(format!("rank {rank} exited with {status}")),
             Err(e) => failures.push(format!("rank {rank} unwaitable: {e}")),
         }

@@ -1,0 +1,481 @@
+//! Elastic membership: the epoch-based control plane over the peer
+//! transports.
+//!
+//! The fixed-fleet transports assume every rank lives forever and treat a
+//! dead peer as a terminal [`TransportError`].  This module replaces that
+//! fail-stop contract with **partial participation** (DESIGN.md §8):
+//!
+//! * an [`Epoch`] is the authoritative view of the fleet — an id plus a
+//!   64-bit live mask over the *physical* ranks `0..n` (physical ranks are
+//!   never renumbered, so compressor seeds, shard assignments, and wire
+//!   headers stay stable across membership changes);
+//! * [`Elastic`] wraps any [`PeerTransport`] and overrides the membership
+//!   hooks: a dead or deadline-missing peer is *censored for the round*
+//!   (its contribution skipped, the aggregate rescaled by the live count)
+//!   instead of killing the job, and the death is remembered for the next
+//!   round boundary;
+//! * [`Elastic::epoch_boundary`] is the round-boundary view change: the
+//!   fleet agrees (via the existing [`peer::agree`] control collective)
+//!   whether membership changed, then rank 0 broadcasts the next epoch
+//!   — evictions observed this round, plus at most one admitted joiner —
+//!   as a [`Tag::Epoch`] frame.  Joins and evictions happen *only* here,
+//!   never mid-collective;
+//! * [`censor_seed`] derives the censoring cadence's initial threshold
+//!   from the wire backpressure counters ([`PeerCounters`]), tying the
+//!   "transmit only when it matters" rule to observed congestion.
+//!
+//! Rank 0 is the control plane (rendezvous host, parameter server, vote
+//! leader) and is **not evictable**: a rank that loses rank 0 gets a
+//! terminal `PeerDown(0)` and exits; an evicted rank sees rank 0 stop
+//! talking to it, errors out the same way, and re-enters a later epoch via
+//! `transport::rendezvous::rejoin` + checkpoint-v2 resume.
+
+use crate::obs::PeerCounters;
+use crate::transport::peer::{self, PeerTransport, Tag, TransportError};
+use crate::transport::wire::{BitWriter, WireMsg};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Hard cap on elastic fleets: the live view travels as one u64 mask.
+pub const MAX_RANKS: usize = 64;
+
+/// Bit length of a [`Tag::Epoch`] frame: epoch id, live mask, joiner+1.
+const EPOCH_FRAME_BITS: usize = 192;
+
+/// One epoch's membership view: which of the `n` physical ranks are live.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Epoch {
+    id: u64,
+    live: u64,
+    n: usize,
+}
+
+impl Epoch {
+    /// Epoch 0 with every rank live.
+    pub fn full(n: usize) -> Epoch {
+        assert!(n >= 1 && n <= MAX_RANKS, "elastic fleets hold 1..={MAX_RANKS} ranks");
+        let live = if n == MAX_RANKS { u64::MAX } else { (1u64 << n) - 1 };
+        Epoch { id: 0, live, n }
+    }
+
+    /// Rebuild a view received from the control plane (an epoch frame or a
+    /// join grant).  The mask must be inside `0..n` and keep rank 0 live.
+    pub fn from_mask(id: u64, live: u64, n: usize) -> Epoch {
+        assert!(n >= 1 && n <= MAX_RANKS, "elastic fleets hold 1..={MAX_RANKS} ranks");
+        let full = Epoch::full(n).live;
+        assert_eq!(live & !full, 0, "live mask names ranks outside 0..{n}");
+        assert_eq!(live & 1, 1, "rank 0 is the control plane and is always live");
+        Epoch { id, live, n }
+    }
+
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Physical fleet size (live or not).
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn live_mask(&self) -> u64 {
+        self.live
+    }
+
+    pub fn is_live(&self, rank: usize) -> bool {
+        rank < self.n && (self.live >> rank) & 1 == 1
+    }
+
+    pub fn live_count(&self) -> usize {
+        self.live.count_ones() as usize
+    }
+
+    /// The live ranks in ascending order.
+    pub fn live_ranks(&self) -> impl Iterator<Item = usize> + '_ {
+        (0..self.n).filter(|r| self.is_live(*r))
+    }
+
+    /// The successor view: `evict` leaves, `admit` (re)joins, id advances.
+    /// Rank 0 cannot be evicted; the admitted rank must be a known
+    /// physical rank.
+    pub fn advance(&self, evict: u64, admit: Option<usize>) -> Epoch {
+        assert_eq!(evict & 1, 0, "rank 0 is the control plane and is not evictable");
+        let mut live = self.live & !evict;
+        if let Some(j) = admit {
+            assert!(j < self.n, "admitted rank {j} outside the physical fleet 0..{}", self.n);
+            live |= 1u64 << j;
+        }
+        Epoch { id: self.id + 1, live, n: self.n }
+    }
+}
+
+/// What one [`Elastic::epoch_boundary`] decided, identically on every
+/// surviving rank.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Transition {
+    /// The view now in force.
+    pub epoch: Epoch,
+    /// Mask of ranks evicted by this transition.
+    pub evicted: u64,
+    /// The rank admitted by this transition, if any.
+    pub joined: Option<usize>,
+}
+
+/// A [`PeerTransport`] under elastic membership: censor-don't-crash for
+/// every rank but 0, with deaths folded into the next epoch.
+///
+/// The wrapper is pure control plane — data frames pass straight through
+/// to the inner transport, so the wire format (and the encoded ≡ accounted
+/// bits invariant) is untouched.
+pub struct Elastic<T: PeerTransport> {
+    inner: T,
+    epoch: Epoch,
+    /// Per-gather deadline: a live rank that misses it is censored for the
+    /// round (it stays in the view — only observed deaths evict).
+    timeout: Option<Duration>,
+    /// Ranks seen dead since the last boundary; evicted at the next one.
+    pending_down: u64,
+    /// Rounds-censored-total (deaths and deadline misses), for RunRecord
+    /// accounting and the harnesses.
+    censor_events: u64,
+}
+
+impl<T: PeerTransport> Elastic<T> {
+    /// Wrap a fixed-fleet transport at epoch 0 (everyone live).
+    pub fn new(inner: T, timeout: Option<Duration>) -> Elastic<T> {
+        let epoch = Epoch::full(inner.n());
+        Elastic::with_epoch(inner, epoch, timeout)
+    }
+
+    /// Wrap at an explicit epoch — the rejoin path, where the grant names
+    /// the view the survivors are already running.
+    pub fn with_epoch(inner: T, epoch: Epoch, timeout: Option<Duration>) -> Elastic<T> {
+        assert_eq!(inner.n(), epoch.n(), "epoch view must cover the physical fleet");
+        if let Some(t) = timeout {
+            assert!(t > Duration::ZERO, "round deadline must be positive");
+        }
+        Elastic { inner, epoch, timeout, pending_down: 0, censor_events: 0 }
+    }
+
+    pub fn epoch(&self) -> Epoch {
+        self.epoch
+    }
+
+    /// Deaths observed since the last boundary (mask).
+    pub fn pending_down(&self) -> u64 {
+        self.pending_down
+    }
+
+    /// Total censor events absorbed (deaths + deadline misses).
+    pub fn censor_events(&self) -> u64 {
+        self.censor_events
+    }
+
+    pub fn inner(&self) -> &T {
+        &self.inner
+    }
+
+    /// The wrapped transport — the trainer reaches through to install or
+    /// drop physical links around a boundary.
+    pub fn inner_mut(&mut self) -> &mut T {
+        &mut self.inner
+    }
+
+    pub fn into_inner(self) -> T {
+        self.inner
+    }
+
+    /// The round-boundary membership change (DESIGN.md §8).  Every live
+    /// rank calls this at the same `round`; only rank 0 passes `joiner`
+    /// (the rank it granted a rejoin to since the last boundary, its data
+    /// link already installed).  Returns the transition when the view
+    /// changed, `None` on the (overwhelmingly common) quiet boundary —
+    /// whose cost is one flag-bit agree.
+    pub fn epoch_boundary(
+        &mut self,
+        round: u64,
+        joiner: Option<usize>,
+    ) -> Result<Option<Transition>, TransportError> {
+        if let Some(j) = joiner {
+            assert_eq!(self.rank(), 0, "only the control plane admits joiners");
+            assert!(!self.is_live(j), "joiner rank {j} is already live");
+        }
+        let changed = peer::agree(self, self.pending_down != 0 || joiner.is_some(), round)?;
+        if !changed {
+            return Ok(None);
+        }
+        let prev = self.epoch;
+        if self.rank() == 0 {
+            let evicted = self.pending_down & prev.live_mask();
+            self.epoch = prev.advance(evicted, joiner);
+            self.pending_down = 0;
+            let mut w = BitWriter::new();
+            w.write(self.epoch.id(), 64);
+            w.write(self.epoch.live_mask(), 64);
+            w.write(joiner.map_or(0, |j| j as u64 + 1), 64);
+            // Sent under the *new* view: evicted ranks are skipped (they
+            // are dead), the joiner is included (its link is live).
+            self.broadcast(round, Tag::Epoch, w.finish())?;
+            Ok(Some(Transition { epoch: self.epoch, evicted, joined: joiner }))
+        } else {
+            let m = self.recv(0, round, Tag::Epoch)?;
+            let (epoch, joined) = decode_epoch_frame(&m, prev.n())?;
+            self.epoch = epoch;
+            self.pending_down = 0;
+            let evicted = prev.live_mask() & !epoch.live_mask();
+            Ok(Some(Transition { epoch, evicted, joined }))
+        }
+    }
+}
+
+/// Parse a [`Tag::Epoch`] frame into the view it announces.
+pub fn decode_epoch_frame(m: &WireMsg, n: usize) -> Result<(Epoch, Option<usize>), TransportError> {
+    if m.bit_len != EPOCH_FRAME_BITS {
+        return Err(TransportError::failed(format!(
+            "epoch frame is {} bits, expected {EPOCH_FRAME_BITS}",
+            m.bit_len
+        )));
+    }
+    let mut r = m.reader();
+    let id = r.read(64);
+    let live = r.read(64);
+    let joiner = r.read(64);
+    let full = Epoch::full(n).live_mask();
+    if live & !full != 0 || live & 1 != 1 {
+        return Err(TransportError::failed(format!(
+            "epoch frame live mask {live:#x} is invalid for a fleet of {n}"
+        )));
+    }
+    let joined = match joiner {
+        0 => None,
+        j if (j as usize) <= n => Some(j as usize - 1),
+        j => {
+            return Err(TransportError::failed(format!(
+                "epoch frame admits rank {} outside the fleet of {n}",
+                j - 1
+            )))
+        }
+    };
+    Ok((Epoch::from_mask(id, live, n), joined))
+}
+
+impl<T: PeerTransport> PeerTransport for Elastic<T> {
+    fn rank(&self) -> usize {
+        self.inner.rank()
+    }
+
+    fn n(&self) -> usize {
+        self.inner.n()
+    }
+
+    fn send(
+        &mut self,
+        to: usize,
+        round: u64,
+        tag: Tag,
+        msg: WireMsg,
+    ) -> Result<(), TransportError> {
+        if !self.is_live(to) {
+            // Out of the view (or censored-pending): nothing to say.  The
+            // bits were never accounted either — skipped sends keep the
+            // encoded ≡ accounted invariant under partial rounds.
+            return Ok(());
+        }
+        match self.inner.send(to, round, tag, msg) {
+            Err(e) => match e.downed_peer() {
+                Some(r) if self.on_peer_down(r) => Ok(()),
+                _ => Err(e),
+            },
+            ok => ok,
+        }
+    }
+
+    fn recv(&mut self, from: usize, round: u64, tag: Tag) -> Result<Arc<WireMsg>, TransportError> {
+        self.inner.recv(from, round, tag)
+    }
+
+    fn is_live(&self, rank: usize) -> bool {
+        self.epoch.is_live(rank) && (self.pending_down >> rank) & 1 == 0
+    }
+
+    fn live_count(&self) -> usize {
+        (self.epoch.live_mask() & !self.pending_down).count_ones() as usize
+    }
+
+    fn on_peer_down(&mut self, rank: usize) -> bool {
+        if rank == 0 {
+            // Losing the control plane is terminal: no rendezvous, no
+            // parameter server, no vote leader.
+            return false;
+        }
+        self.pending_down |= 1u64 << rank;
+        self.censor_events += 1;
+        true
+    }
+
+    fn round_timeout(&self) -> Option<Duration> {
+        self.timeout
+    }
+
+    fn recv_deadline(
+        &mut self,
+        from: usize,
+        round: u64,
+        tag: Tag,
+        timeout: Option<Duration>,
+    ) -> Result<Option<Arc<WireMsg>>, TransportError> {
+        match self.inner.recv_deadline(from, round, tag, timeout) {
+            Ok(None) => {
+                // Deadline miss: censored for this round, not evicted —
+                // a slow rank stays a member.
+                self.censor_events += 1;
+                Ok(None)
+            }
+            other => other,
+        }
+    }
+}
+
+/// Seed the censoring cadence's threshold from the backpressure the wire
+/// actually measured ([`PeerCounters::blocked_send_ns`], PR 6): a fleet
+/// whose sends never block gets `tau0 = 0` (nothing censors — `‖C(v)‖² <
+/// 0` never holds), and the threshold grows with the square root of the
+/// mean per-frame blocked time in microseconds, scaled by `base`.
+/// Deterministic and monotone, so two runs with identical traces pick
+/// identical cadences.
+pub fn censor_seed(peers: &[PeerCounters], base: f32) -> f32 {
+    let mut blocked_ns = 0u64;
+    let mut frames = 0u64;
+    for c in peers {
+        blocked_ns += c.blocked_send_ns;
+        frames += c.frames_sent;
+    }
+    if frames == 0 || blocked_ns == 0 {
+        return 0.0;
+    }
+    let per_frame_us = blocked_ns as f64 / frames as f64 / 1_000.0;
+    (base as f64 * per_frame_us.sqrt()) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::mesh::channel_mesh;
+
+    #[test]
+    fn epoch_views_evict_and_admit() {
+        let e = Epoch::full(4);
+        assert_eq!(e.id(), 0);
+        assert_eq!(e.live_mask(), 0b1111);
+        assert_eq!(e.live_count(), 4);
+        let e1 = e.advance(0b1000, None);
+        assert_eq!(e1.id(), 1);
+        assert!(!e1.is_live(3));
+        assert_eq!(e1.live_ranks().collect::<Vec<_>>(), vec![0, 1, 2]);
+        let e2 = e1.advance(0, Some(3));
+        assert_eq!(e2.id(), 2);
+        assert_eq!(e2.live_mask(), 0b1111);
+        // round-trip through the wire frame
+        let mut w = BitWriter::new();
+        w.write(e2.id(), 64);
+        w.write(e2.live_mask(), 64);
+        w.write(0, 64);
+        let (got, joined) = decode_epoch_frame(&w.finish(), 4).unwrap();
+        assert_eq!(got, e2);
+        assert_eq!(joined, None);
+    }
+
+    #[test]
+    #[should_panic(expected = "not evictable")]
+    fn rank0_is_not_evictable() {
+        Epoch::full(2).advance(0b01, None);
+    }
+
+    #[test]
+    fn boundary_evicts_a_dead_rank() {
+        let mut fleet = channel_mesh(3);
+        let t2 = fleet.pop().unwrap();
+        let t1 = fleet.pop().unwrap();
+        let t0 = fleet.pop().unwrap();
+        drop(t2); // rank 2 dies before the round
+        std::thread::scope(|s| {
+            let h0 = s.spawn(move || {
+                let mut el = Elastic::new(t0, Some(Duration::from_millis(200)));
+                // gather path: the dead peer is censored, not fatal
+                let (mean, stop) = peer::vote(&mut el, 3.0, 1e9, 1).unwrap();
+                assert!(!stop);
+                assert!((mean - 2.0).abs() < 1e-12, "mean over responders, got {mean}");
+                assert_eq!(el.pending_down(), 0b100);
+                assert_eq!(el.live_count(), 2);
+                let tr = el.epoch_boundary(1, None).unwrap().expect("view changed");
+                assert_eq!(tr.evicted, 0b100);
+                assert_eq!(tr.joined, None);
+                tr.epoch
+            });
+            let h1 = s.spawn(move || {
+                let mut el = Elastic::new(t1, Some(Duration::from_millis(200)));
+                let (mean, stop) = peer::vote(&mut el, 1.0, 1e9, 1).unwrap();
+                assert!(!stop);
+                assert!((mean - 2.0).abs() < 1e-12);
+                let tr = el.epoch_boundary(1, None).unwrap().expect("view changed");
+                tr.epoch
+            });
+            let e0 = h0.join().unwrap();
+            let e1 = h1.join().unwrap();
+            assert_eq!(e0, e1);
+            assert_eq!(e0.id(), 1);
+            assert_eq!(e0.live_mask(), 0b011);
+        });
+    }
+
+    #[test]
+    fn boundary_admits_a_joiner_and_quiet_rounds_are_free() {
+        let mut fleet = channel_mesh(3);
+        let mut t2 = fleet.pop().unwrap();
+        let t1 = fleet.pop().unwrap();
+        let t0 = fleet.pop().unwrap();
+        let view = Epoch::full(3).advance(0b100, None); // rank 2 out
+        std::thread::scope(|s| {
+            let h0 = s.spawn(move || {
+                let mut el = Elastic::with_epoch(t0, view, None);
+                assert!(el.epoch_boundary(5, None).unwrap().is_none(), "quiet boundary");
+                let tr = el.epoch_boundary(6, Some(2)).unwrap().expect("join");
+                assert_eq!(tr.joined, Some(2));
+                assert_eq!(tr.epoch.live_mask(), 0b111);
+                tr.epoch
+            });
+            let h1 = s.spawn(move || {
+                let mut el = Elastic::with_epoch(t1, view, None);
+                assert!(el.epoch_boundary(5, None).unwrap().is_none());
+                let tr = el.epoch_boundary(6, None).unwrap().expect("join");
+                assert_eq!(tr.joined, Some(2));
+                tr.epoch
+            });
+            // The joiner is outside the agree (it is not live yet); it
+            // learns the view from the epoch frame rank 0 sends once the
+            // new view includes it — the in-process stand-in for the
+            // rejoin grant.
+            let h2 = s.spawn(move || {
+                let m = t2.recv(0, 6, Tag::Epoch).unwrap();
+                let (epoch, joined) = decode_epoch_frame(&m, 3).unwrap();
+                assert_eq!(joined, Some(2));
+                epoch
+            });
+            let e0 = h0.join().unwrap();
+            assert_eq!(e0, h1.join().unwrap());
+            assert_eq!(e0, h2.join().unwrap());
+            assert_eq!(e0.id(), 2);
+        });
+    }
+
+    #[test]
+    fn censor_seed_is_zero_without_backpressure_and_monotone_with_it() {
+        let calm = PeerCounters { frames_sent: 100, ..Default::default() };
+        assert_eq!(censor_seed(&[calm], 0.5), 0.0);
+        let busy =
+            |ns| PeerCounters { frames_sent: 100, blocked_send_ns: ns, ..Default::default() };
+        let lo = censor_seed(&[busy(1_000_000)], 0.5);
+        let hi = censor_seed(&[busy(9_000_000)], 0.5);
+        assert!(lo > 0.0);
+        assert!((hi / lo - 3.0).abs() < 1e-5, "sqrt scaling: {hi} vs {lo}");
+    }
+}

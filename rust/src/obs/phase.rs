@@ -20,7 +20,12 @@
 //! * `PipelinePrepare` — the `BucketPipeline` helper thread preparing
 //!   bucket k+1 while bucket k exchanges (its overlap with `Exchange`
 //!   spans on the owning worker's track is the pipeline's win, visible
-//!   directly in the merged Chrome trace).
+//!   directly in the merged Chrome trace);
+//! * `Censor` — a censoring-cadence round this worker sat out: the
+//!   compressed update's norm missed the threshold, so an empty frame
+//!   shipped instead (the span's `arg` carries the rank; always nested
+//!   inside the surrounding `Exchange`, so phase totals still partition
+//!   wall time at the top level).
 
 /// One attributable slice of a training round.  Discriminants are stable
 /// and double as indices into per-phase arrays (`Phase::ALL[p as usize]
@@ -36,10 +41,11 @@ pub enum Phase {
     ApplyReset = 5,
     BarrierWait = 6,
     PipelinePrepare = 7,
+    Censor = 8,
 }
 
 impl Phase {
-    pub const COUNT: usize = 8;
+    pub const COUNT: usize = 9;
 
     /// Every phase, in discriminant order.
     pub const ALL: [Phase; Phase::COUNT] = [
@@ -51,6 +57,7 @@ impl Phase {
         Phase::ApplyReset,
         Phase::BarrierWait,
         Phase::PipelinePrepare,
+        Phase::Censor,
     ];
 
     /// Stable wire/export name (used in JSONL, Chrome trace events, and
@@ -65,6 +72,7 @@ impl Phase {
             Phase::ApplyReset => "apply_reset",
             Phase::BarrierWait => "barrier_wait",
             Phase::PipelinePrepare => "pipeline_prepare",
+            Phase::Censor => "censor",
         }
     }
 

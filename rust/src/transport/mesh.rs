@@ -61,10 +61,30 @@ pub fn channel_mesh(n: usize) -> Vec<MeshTransport> {
 
 impl MeshTransport {
     fn hangup(&self, peer: usize) -> TransportError {
-        TransportError(format!(
-            "peer {peer} hung up on worker {} (its thread died mid-run)",
-            self.rank
-        ))
+        TransportError::peer_down(
+            peer,
+            format!("hung up on worker {} (its thread died mid-run)", self.rank),
+        )
+    }
+
+    fn validate(
+        &mut self,
+        from: usize,
+        round: u64,
+        tag: Tag,
+        frame: Frame,
+    ) -> Result<Arc<WireMsg>, TransportError> {
+        let (r, tg, msg) = frame;
+        if r != round || tg != tag {
+            return Err(TransportError::failed(format!(
+                "worker {} desynchronized: expected (round {round}, {tag:?}) from peer {from}, \
+                 got (round {r}, {tg:?})",
+                self.rank
+            )));
+        }
+        self.per_peer[from].frames_received += 1;
+        self.per_peer[from].payload_bits_received += msg.bit_len;
+        Ok(msg)
     }
 }
 
@@ -107,21 +127,56 @@ impl PeerTransport for MeshTransport {
     }
 
     fn recv(&mut self, from: usize, round: u64, tag: Tag) -> Result<Arc<WireMsg>, TransportError> {
-        let (r, tg, msg) = self.rxs[from]
+        let frame = self.rxs[from]
             .as_ref()
             .expect("mesh has no self-links")
             .recv()
             .map_err(|_| self.hangup(from))?;
-        if r != round || tg != tag {
-            return Err(TransportError(format!(
-                "worker {} desynchronized: expected (round {round}, {tag:?}) from peer {from}, \
-                 got (round {r}, {tg:?})",
-                self.rank
-            )));
+        self.validate(from, round, tag, frame)
+    }
+
+    fn recv_deadline(
+        &mut self,
+        from: usize,
+        round: u64,
+        tag: Tag,
+        timeout: Option<std::time::Duration>,
+    ) -> Result<Option<Arc<WireMsg>>, TransportError> {
+        let Some(timeout) = timeout else {
+            // No deadline: plain blocking semantics, but still drop stale
+            // frames (leftovers from a round the caller censored).
+            loop {
+                let frame = self.rxs[from]
+                    .as_ref()
+                    .expect("mesh has no self-links")
+                    .recv()
+                    .map_err(|_| self.hangup(from))?;
+                if frame.0 < round {
+                    continue;
+                }
+                return self.validate(from, round, tag, frame).map(Some);
+            }
+        };
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            let left = deadline.saturating_duration_since(std::time::Instant::now());
+            let frame = match self.rxs[from]
+                .as_ref()
+                .expect("mesh has no self-links")
+                .recv_timeout(left)
+            {
+                Ok(f) => f,
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => return Ok(None),
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                    return Err(self.hangup(from))
+                }
+            };
+            if frame.0 < round {
+                // stale frame from a censored round: discard
+                continue;
+            }
+            return self.validate(from, round, tag, frame).map(Some);
         }
-        self.per_peer[from].frames_received += 1;
-        self.per_peer[from].payload_bits_received += msg.bit_len;
-        Ok(msg)
     }
 }
 
@@ -303,6 +358,9 @@ mod tests {
         let mut v = vec![1.0f32; 4];
         let err = peer::psync(&mut tp0, &mut v, None, &c, 1);
         assert!(err.is_err(), "collective against a dead peer must error");
+        // The death is attributable without string-matching: the error is
+        // the distinguishable PeerDown variant naming rank 1.
+        assert_eq!(err.unwrap_err().downed_peer(), Some(1));
     }
 
     #[test]
@@ -312,6 +370,25 @@ mod tests {
         let mut tp0 = eps.pop().unwrap();
         tp0.send(1, 7, Tag::Loss, WireMsg { words: vec![0], bit_len: 64 }).unwrap();
         let err = tp1.recv(0, 8, Tag::Loss).unwrap_err();
-        assert!(err.0.contains("desynchronized"), "{err}");
+        assert!(err.to_string().contains("desynchronized"), "{err}");
+        // A framing failure is terminal, never attributable as a death.
+        assert_eq!(err.downed_peer(), None);
+    }
+
+    #[test]
+    fn recv_deadline_times_out_and_discards_stale_rounds() {
+        let mut eps = channel_mesh(2);
+        let mut tp1 = eps.pop().unwrap();
+        let mut tp0 = eps.pop().unwrap();
+        let short = Some(std::time::Duration::from_millis(10));
+        // Nothing queued: the deadline expires with Ok(None).
+        let got = tp1.recv_deadline(0, 3, Tag::Loss, short).unwrap();
+        assert!(got.is_none(), "empty channel must time out, not block");
+        // A stale round-2 frame (censored earlier) is silently discarded;
+        // the round-3 frame behind it is delivered.
+        tp0.send(1, 2, Tag::Upload, WireMsg { words: vec![1], bit_len: 64 }).unwrap();
+        tp0.send(1, 3, Tag::Loss, WireMsg { words: vec![2], bit_len: 64 }).unwrap();
+        let got = tp1.recv_deadline(0, 3, Tag::Loss, short).unwrap();
+        assert_eq!(got.expect("round-3 frame must arrive").words, vec![2]);
     }
 }

@@ -49,7 +49,7 @@ pub use tcp::TcpTransport;
 pub use threaded::Threaded;
 pub use wire::{BitReader, BitWriter, WireError, WireMsg};
 
-use crate::collective::{exchange_mean_with, psync_with, PsyncRound};
+use crate::collective::{exchange_mean_with, psync_censored_with, psync_with, PsyncRound};
 use crate::compressor::Compressor;
 use crate::kernel::with_thread_scratch;
 use std::sync::Arc;
@@ -85,6 +85,24 @@ pub trait Collective: Send + Sync {
         c: &Arc<dyn Compressor>,
         round: u64,
     ) -> PsyncRound;
+
+    /// PSync under the censoring cadence (Li et al., PAPERS.md): worker `i`
+    /// contributes `C(v_i)` only when `‖C(v_i)‖ ≥ tau`
+    /// ([`crate::collective::censors`]); censored workers upload zero bits
+    /// and keep the whole update as residual.  The default runs the
+    /// in-process reference — since the parameter-server wire path is
+    /// bit-identical to it, every backend inherits the identical censoring
+    /// verdicts and this default is exact for `Threaded` too.
+    fn psync_censored(
+        &self,
+        vs: &mut [Vec<f32>],
+        resid_out: Option<&mut [Vec<f32>]>,
+        c: &Arc<dyn Compressor>,
+        round: u64,
+        tau: f32,
+    ) -> PsyncRound {
+        with_thread_scratch(|s| psync_censored_with(vs, resid_out, c.as_ref(), round, tau, s))
+    }
 }
 
 /// The original single-address-space path: no serialization, no threads,

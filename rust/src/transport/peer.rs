@@ -45,12 +45,49 @@ use std::sync::Arc;
 /// the underlying socket/channel errored.  In-process transports surface
 /// this when a worker thread dies (the panic cascades instead of
 /// deadlocking); the TCP transport surfaces network and framing errors.
+///
+/// Worker death is a *distinguishable* case ([`TransportError::PeerDown`])
+/// so the membership layer can downgrade it to "censored this round"
+/// without string-matching; everything else is terminal
+/// ([`TransportError::Failed`]).
 #[derive(Debug, Clone)]
-pub struct TransportError(pub String);
+pub enum TransportError {
+    /// Terminal failure: framing, validation, desynchronization, or an
+    /// unrecoverable socket/rendezvous error.
+    Failed(String),
+    /// Peer `rank` is gone — its thread died or its socket closed.
+    /// Recoverable under partial participation, terminal otherwise.
+    PeerDown { rank: usize, detail: String },
+}
+
+impl TransportError {
+    /// A terminal failure.
+    pub fn failed(detail: impl Into<String>) -> Self {
+        TransportError::Failed(detail.into())
+    }
+
+    /// A dead-peer failure attributable to `rank`.
+    pub fn peer_down(rank: usize, detail: impl Into<String>) -> Self {
+        TransportError::PeerDown { rank, detail: detail.into() }
+    }
+
+    /// The dead peer's rank, when this failure is attributable to one.
+    pub fn downed_peer(&self) -> Option<usize> {
+        match self {
+            TransportError::PeerDown { rank, .. } => Some(*rank),
+            TransportError::Failed(_) => None,
+        }
+    }
+}
 
 impl std::fmt::Display for TransportError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "transport error: {}", self.0)
+        match self {
+            TransportError::Failed(detail) => write!(f, "transport error: {detail}"),
+            TransportError::PeerDown { rank, detail } => {
+                write!(f, "transport error: peer {rank} down: {detail}")
+            }
+        }
     }
 }
 
@@ -58,7 +95,7 @@ impl std::error::Error for TransportError {}
 
 impl From<WireError> for TransportError {
     fn from(e: WireError) -> Self {
-        TransportError(e.to_string())
+        TransportError::Failed(e.to_string())
     }
 }
 
@@ -83,6 +120,9 @@ pub enum Tag {
     Verdict = 6,
     /// Boolean agreement frame ([`agree`]).
     Flag = 7,
+    /// Membership view update at a round boundary: epoch id, live mask,
+    /// joining rank (`membership::epoch_boundary`).
+    Epoch = 8,
 }
 
 impl Tag {
@@ -97,6 +137,7 @@ impl Tag {
             5 => Loss,
             6 => Verdict,
             7 => Flag,
+            8 => Epoch,
             _ => return None,
         })
     }
@@ -127,6 +168,78 @@ pub trait PeerTransport: Send {
     /// Blocking receive of the next frame from `from`; fails if its header
     /// does not carry exactly (`round`, `tag`).
     fn recv(&mut self, from: usize, round: u64, tag: Tag) -> Result<Arc<WireMsg>, TransportError>;
+
+    // --- membership hooks (partial participation) -----------------------
+    //
+    // Fixed-fleet transports keep the defaults: everyone is live forever,
+    // a dead peer is a terminal error, receives block without deadline.
+    // `membership::Elastic` overrides all four to run an epoch-based view.
+
+    /// Is `rank` live under the current membership view?
+    fn is_live(&self, _rank: usize) -> bool {
+        true
+    }
+
+    /// Number of live ranks this round — the aggregate scale under partial
+    /// participation (`1/n_live` replaces `1/n` in every mean).
+    fn live_count(&self) -> usize {
+        self.n()
+    }
+
+    /// A peer was found dead mid-collective.  Returns true when the
+    /// transport absorbs the death (the caller then censors the peer for
+    /// this round and carries on); false keeps the historical fail-stop.
+    fn on_peer_down(&mut self, _rank: usize) -> bool {
+        false
+    }
+
+    /// Per-gather deadline for rank-0 receives; `None` blocks forever.
+    fn round_timeout(&self) -> Option<std::time::Duration> {
+        None
+    }
+
+    /// [`PeerTransport::recv`] with an optional timeout: `Ok(None)` means
+    /// the deadline expired (the caller censors the peer for this round).
+    /// Implementations honoring the timeout must also discard stale frames
+    /// from `from` whose round is *lower* than `round` — leftovers from a
+    /// previously censored round.  The default ignores the timeout.
+    fn recv_deadline(
+        &mut self,
+        from: usize,
+        round: u64,
+        tag: Tag,
+        timeout: Option<std::time::Duration>,
+    ) -> Result<Option<Arc<WireMsg>>, TransportError> {
+        let _ = timeout;
+        self.recv(from, round, tag).map(Some)
+    }
+}
+
+/// Rank-0 gather receive under partial participation: `Ok(None)` means
+/// peer `from`'s contribution is censored this round — it is outside the
+/// live view, its frame missed the round deadline, or it died and the
+/// transport absorbs deaths.  Fixed-fleet transports never censor: the
+/// timeout is `None` and a death stays an error.
+fn recv_or_censor(
+    t: &mut dyn PeerTransport,
+    from: usize,
+    round: u64,
+    tag: Tag,
+) -> Result<Option<Arc<WireMsg>>, TransportError> {
+    if !t.is_live(from) {
+        return Ok(None);
+    }
+    let timeout = t.round_timeout();
+    match t.recv_deadline(from, round, tag, timeout) {
+        Ok(m) => Ok(m),
+        Err(e) => match e.downed_peer() {
+            Some(r) if t.on_peer_down(r) => {
+                let _s = obs::Span::enter_arg(Phase::Censor, r as u64);
+                Ok(None)
+            }
+            _ => Err(e),
+        },
+    }
 }
 
 /// PSync vs bare mean-of-compressed (the two `Collective` entry points).
@@ -190,6 +303,34 @@ pub fn exchange_mean_with(
     run(t, Mode::Exchange, v, resid, c, round, scratch)
 }
 
+/// [`psync_with`] under the censoring cadence (Li et al., PAPERS.md): this
+/// worker transmits only when its compressed update's norm clears `tau`
+/// (see [`crate::collective::censors`]); a censored worker uploads an
+/// empty frame, keeps its *whole* update as residual, and still receives
+/// the aggregate.  Parameter-server routing only — a globally-synchronized
+/// sparse C derives one shared support and cannot drop per-worker uploads
+/// (`CommPlan::validate` rejects such pairings).
+pub fn psync_censored_with(
+    t: &mut dyn PeerTransport,
+    v: &mut Vec<f32>,
+    resid: Option<&mut Vec<f32>>,
+    c: &dyn Compressor,
+    round: u64,
+    tau: f32,
+    scratch: &mut Scratch,
+) -> Result<PsyncRound, TransportError> {
+    debug_assert!(
+        !(c.globally_synchronized() && !c.is_dense()),
+        "censoring cadence is parameter-server-routed"
+    );
+    if t.n() == 1 {
+        let vs = std::slice::from_mut(v);
+        let rs = resid.map(std::slice::from_mut);
+        return Ok(crate::collective::psync_censored_with(vs, rs, c, round, tau, scratch));
+    }
+    ps(t, Mode::Psync, v, resid, c, round, Some(tau), scratch)
+}
+
 pub(crate) fn run(
     t: &mut dyn PeerTransport,
     mode: Mode,
@@ -211,7 +352,7 @@ pub(crate) fn run(
     if c.globally_synchronized() && !c.is_dense() {
         ring(t, mode, v, resid, c, round, scratch)
     } else {
-        ps(t, mode, v, resid, c, round, scratch)
+        ps(t, mode, v, resid, c, round, None, scratch)
     }
 }
 
@@ -386,14 +527,26 @@ pub(crate) fn ps_rounds(
         let mut mask = std::mem::take(&mut scratch.mask);
         mask.clear();
         mask.resize(d, false);
-        let inv = 1.0 / n as f32;
+        // Under partial participation the mean runs over the live view:
+        // dead ranks are excluded from the scale, live-but-censored ranks
+        // (deadline miss, cadence skip, mid-round death) contribute zero
+        // over the live scale.  A fully-live fleet reduces to the
+        // historical 1/n arithmetic bit-for-bit.
+        let live = t.live_count();
+        let inv = 1.0 / live as f32;
         let mut total_up = up;
         // Accumulate in worker order — the same order as the in-process
         // backend, so the mean is bit-identical to `collective::exchange_mean`.
         accumulate(own, inv, &mut mean, &mut mask);
         for j in 1..n {
-            let m = t.recv(j, round, Tag::Upload)?;
+            let Some(m) = recv_or_censor(t, j, round, Tag::Upload)? else {
+                continue;
+            };
             total_up += m.bit_len;
+            if m.bit_len == 0 {
+                // self-censored this round (cadence): no contribution
+                continue;
+            }
             wire::decode(c, Ctx { round, worker: j as u32 }, &m, &mut stage)?;
             accumulate(&stage, inv, &mut mean, &mut mask);
         }
@@ -405,8 +558,9 @@ pub(crate) fn ps_rounds(
         let down = a.bit_len;
         // Fleet-wide accounting rides a tiny control frame so every rank
         // reports the identical `upload_bits_per_worker` the in-process
-        // backend computes (ceiling of the per-worker mean).
-        let acct = total_up.div_ceil(n as u64);
+        // backend computes (ceiling of the per-live-worker mean; only bits
+        // actually received enter the total).
+        let acct = total_up.div_ceil(live as u64);
         let mut w = wire::BitWriter::new();
         w.write(acct, 64);
         t.broadcast(round, Tag::AggInfo, w.finish())?;
@@ -424,7 +578,7 @@ pub(crate) fn ps_rounds(
         t.send(0, round, Tag::Upload, msg)?;
         let info = t.recv(0, round, Tag::AggInfo)?;
         if info.bit_len != 64 {
-            return Err(TransportError(format!(
+            return Err(TransportError::failed(format!(
                 "accounting frame is {} bits, expected 64",
                 info.bit_len
             )));
@@ -525,6 +679,7 @@ fn accumulate(src: &[f32], inv: f32, mean: &mut [f32], mask: &mut [bool]) {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn ps(
     t: &mut dyn PeerTransport,
     mode: Mode,
@@ -532,6 +687,7 @@ fn ps(
     mut resid: Option<&mut Vec<f32>>,
     c: &dyn Compressor,
     round: u64,
+    censor: Option<f32>,
     scratch: &mut Scratch,
 ) -> Result<PsyncRound, TransportError> {
     let i = t.rank();
@@ -542,7 +698,19 @@ fn ps(
     // staging buffer comes from the scratch — reused across rounds
     // (returned before the success exit below).
     let own_buf = scratch.take_dense(d);
-    let PsUpload { sel, msg, own } = ps_prepare(c, ctx, v, own_buf, scratch)?;
+    let PsUpload { sel, msg, mut own } = ps_prepare(c, ctx, v, own_buf, scratch)?;
+    // Censoring cadence: when ‖C(v)‖ misses the threshold, transmit an
+    // empty frame instead — the whole update stays in the residual, the
+    // server skips this rank, and zero bits are accounted.  The decision
+    // rides the decoded bits, which every backend sees identically.
+    let msg = match censor {
+        Some(tau) if crate::collective::censors(&own, tau) => {
+            let _s = obs::Span::enter_arg(Phase::Censor, i as u64);
+            math::fill(&mut own, 0.0);
+            WireMsg { words: Vec::new(), bit_len: 0 }
+        }
+        _ => msg,
+    };
     // r = v − C(v), captured before the aggregate overwrites anything.
     for (vj, kj) in v.iter_mut().zip(&own) {
         *vj -= *kj;
@@ -589,9 +757,13 @@ pub fn mean_dense(
     let _s = obs::Span::enter(Phase::BarrierWait);
     let d = v.len();
     if t.rank() == 0 {
+        // Partial participation: the mean runs over the responders only
+        // (`mean_rows` divides by however many rows arrive).
         let mut others: Vec<Vec<f32>> = Vec::with_capacity(n - 1);
         for j in 1..n {
-            let m = t.recv(j, round, Tag::Dense)?;
+            let Some(m) = recv_or_censor(t, j, round, Tag::Dense)? else {
+                continue;
+            };
             let mut x = vec![0.0f32; d];
             wire::decode_f32s(&m, &mut x)?;
             others.push(x);
@@ -630,16 +802,27 @@ pub fn vote(
     }
     let _s = obs::Span::enter(Phase::BarrierWait);
     if t.rank() == 0 {
-        let mut mean = loss / n as f64;
+        // Divide by the live count term-by-term (the central trainer's
+        // exact expression on a fully-live fleet); when a live rank still
+        // misses the round, rescale so the mean is over the responders.
+        let nl = t.live_count();
+        let mut mean = loss / nl as f64;
+        let mut got = 1usize;
         for j in 1..n {
-            let m = t.recv(j, round, Tag::Loss)?;
+            let Some(m) = recv_or_censor(t, j, round, Tag::Loss)? else {
+                continue;
+            };
             if m.bit_len != 64 {
-                return Err(TransportError(format!(
+                return Err(TransportError::failed(format!(
                     "loss frame is {} bits, expected 64",
                     m.bit_len
                 )));
             }
-            mean += f64::from_bits(m.reader().read(64)) / n as f64;
+            mean += f64::from_bits(m.reader().read(64)) / nl as f64;
+            got += 1;
+        }
+        if got < nl {
+            mean *= nl as f64 / got as f64;
         }
         let stop = !mean.is_finite() || mean > stop_loss;
         let mut w = wire::BitWriter::new();
@@ -653,7 +836,7 @@ pub fn vote(
         t.send(0, round, Tag::Loss, w.finish())?;
         let m = t.recv(0, round, Tag::Verdict)?;
         if m.bit_len != 65 {
-            return Err(TransportError(format!(
+            return Err(TransportError::failed(format!(
                 "verdict frame is {} bits, expected 65",
                 m.bit_len
             )));
@@ -679,11 +862,14 @@ pub fn all_equal(
     }
     let _s = obs::Span::enter(Phase::BarrierWait);
     if t.rank() == 0 {
+        // Censored ranks abstain: agreement is over the responders.
         let mut same = true;
         for j in 1..n {
-            let m = t.recv(j, round, Tag::Flag)?;
+            let Some(m) = recv_or_censor(t, j, round, Tag::Flag)? else {
+                continue;
+            };
             if m.bit_len != 64 {
-                return Err(TransportError(format!(
+                return Err(TransportError::failed(format!(
                     "value frame is {} bits, expected 64",
                     m.bit_len
                 )));
@@ -700,7 +886,10 @@ pub fn all_equal(
         t.send(0, round, Tag::Flag, w.finish())?;
         let m = t.recv(0, round, Tag::Flag)?;
         if m.bit_len != 1 {
-            return Err(TransportError(format!("verdict frame is {} bits, expected 1", m.bit_len)));
+            return Err(TransportError::failed(format!(
+                "verdict frame is {} bits, expected 1",
+                m.bit_len
+            )));
         }
         Ok(m.reader().read(1) == 1)
     }
@@ -721,11 +910,14 @@ pub fn agree(t: &mut dyn PeerTransport, flag: bool, round: u64) -> Result<bool, 
         w.finish()
     };
     if t.rank() == 0 {
+        // Censored ranks abstain from the OR.
         let mut any = flag;
         for j in 1..n {
-            let m = t.recv(j, round, Tag::Flag)?;
+            let Some(m) = recv_or_censor(t, j, round, Tag::Flag)? else {
+                continue;
+            };
             if m.bit_len != 1 {
-                return Err(TransportError(format!(
+                return Err(TransportError::failed(format!(
                     "flag frame is {} bits, expected 1",
                     m.bit_len
                 )));
@@ -738,7 +930,10 @@ pub fn agree(t: &mut dyn PeerTransport, flag: bool, round: u64) -> Result<bool, 
         t.send(0, round, Tag::Flag, bit(flag))?;
         let m = t.recv(0, round, Tag::Flag)?;
         if m.bit_len != 1 {
-            return Err(TransportError(format!("flag frame is {} bits, expected 1", m.bit_len)));
+            return Err(TransportError::failed(format!(
+                "flag frame is {} bits, expected 1",
+                m.bit_len
+            )));
         }
         Ok(m.reader().read(1) == 1)
     }

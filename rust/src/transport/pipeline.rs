@@ -159,16 +159,16 @@ impl BucketPipeline {
             .as_ref()
             .expect("pipeline sender lives until drop")
             .send(job)
-            .map_err(|_| TransportError("bucket-prepare thread died".into()))
+            .map_err(|_| TransportError::failed("bucket-prepare thread died"))
     }
 
     fn recv_prepared(&mut self, bucket: usize) -> Result<Prepared, TransportError> {
         let prep = self
             .rx
             .recv()
-            .map_err(|_| TransportError("bucket-prepare thread died".into()))?;
+            .map_err(|_| TransportError::failed("bucket-prepare thread died"))?;
         if prep.bucket != bucket {
-            return Err(TransportError(format!(
+            return Err(TransportError::failed(format!(
                 "bucket pipeline desynchronized: expected bucket {bucket}, got {}",
                 prep.bucket
             )));

@@ -18,6 +18,26 @@
 //! joining the wrong job (or a stray port scanner) fails validation loudly
 //! instead of wedging the fleet.  Dials retry until a deadline so workers
 //! may start in any order.
+//!
+//! # Rendezvous v2: elastic membership
+//!
+//! [`establish_v2`] runs the same two phases but *keeps the listeners
+//! alive* inside a [`Session`], turning the one-shot bootstrap into a
+//! standing control plane:
+//!
+//! - rank 0's rendezvous listener stays bound (non-blocking) so evicted
+//!   ranks can dial back in ([`Session::poll_join`]);
+//! - every rank's data listener stays bound so a granted joiner can
+//!   re-dial the mesh ([`Session::accept_rejoin`]).
+//!
+//! The join protocol is three magic-tagged messages: the joiner registers
+//! with `CSER-JN2` (rank, n, fresh data address), rank 0 answers — at a
+//! round boundary of its choosing — with a `CSER-GR2` grant carrying the
+//! epoch id, resume step, live mask, checkpoint blob, and refreshed peer
+//! table, and the joiner then dials every live peer's data listener with a
+//! `CSER-HS2` handshake.  Survivors never dial a joiner: the join request
+//! advertises the joiner's *new* listener address, which rank 0 folds into
+//! its authoritative table for any later grants.
 
 use super::peer::TransportError;
 use std::io::{Read, Write};
@@ -27,13 +47,20 @@ use std::time::{Duration, Instant};
 const RV_MAGIC: &[u8; 8] = b"CSER-RV1";
 const TABLE_MAGIC: &[u8; 8] = b"CSER-TB1";
 const HANDSHAKE_MAGIC: &[u8; 8] = b"CSER-HS1";
+/// v2 mid-job control plane: join request, join grant, rejoin handshake.
+const JOIN_MAGIC: &[u8; 8] = b"CSER-JN2";
+const GRANT_MAGIC: &[u8; 8] = b"CSER-GR2";
+const REJOIN_MAGIC: &[u8; 8] = b"CSER-HS2";
 
 /// How long dials retry and accepts wait before declaring the fleet dead.
 const BOOTSTRAP_TIMEOUT: Duration = Duration::from_secs(30);
 const IO_TIMEOUT: Duration = Duration::from_secs(10);
+/// Checkpoint blobs ride the grant message; cap them well below anything a
+/// loopback-scale job could produce so a corrupt length fails loudly.
+const MAX_GRANT_BLOB_BYTES: u64 = 1 << 31;
 
 fn io_err(ctx: &str, e: std::io::Error) -> TransportError {
-    TransportError(format!("{ctx}: {e}"))
+    TransportError::failed(format!("{ctx}: {e}"))
 }
 
 /// Reserve a loopback address for a new job: bind an ephemeral port, read
@@ -66,9 +93,9 @@ fn bind_retry(addr: SocketAddr, deadline: Instant) -> Result<TcpListener, Transp
 
 fn resolve(addr: &str) -> Result<SocketAddr, TransportError> {
     addr.to_socket_addrs()
-        .map_err(|e| TransportError(format!("cannot resolve '{addr}': {e}")))?
+        .map_err(|e| TransportError::failed(format!("cannot resolve '{addr}': {e}")))?
         .next()
-        .ok_or_else(|| TransportError(format!("'{addr}' resolved to no address")))
+        .ok_or_else(|| TransportError::failed(format!("'{addr}' resolved to no address")))
 }
 
 fn connect_retry(addr: SocketAddr, what: &str, deadline: Instant) -> Result<TcpStream, TransportError> {
@@ -77,7 +104,7 @@ fn connect_retry(addr: SocketAddr, what: &str, deadline: Instant) -> Result<TcpS
             Ok(s) => return Ok(s),
             Err(e) => {
                 if Instant::now() >= deadline {
-                    return Err(TransportError(format!(
+                    return Err(TransportError::failed(format!(
                         "dialing {what} at {addr} timed out after {:?}: {e}",
                         BOOTSTRAP_TIMEOUT
                     )));
@@ -98,7 +125,7 @@ fn accept_retry(l: &TcpListener, what: &str, deadline: Instant) -> Result<TcpStr
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                 if Instant::now() >= deadline {
-                    return Err(TransportError(format!(
+                    return Err(TransportError::failed(format!(
                         "waiting for {what} timed out after {:?}",
                         BOOTSTRAP_TIMEOUT
                     )));
@@ -114,6 +141,12 @@ fn read_exact(s: &mut TcpStream, buf: &mut [u8], ctx: &str) -> Result<(), Transp
     s.read_exact(buf).map_err(|e| io_err(ctx, e))
 }
 
+fn read_u64(s: &mut TcpStream, ctx: &str) -> Result<u64, TransportError> {
+    let mut b = [0u8; 8];
+    read_exact(s, &mut b, ctx)?;
+    Ok(u64::from_le_bytes(b))
+}
+
 fn write_addr(s: &mut TcpStream, addr: &SocketAddr) -> Result<(), TransportError> {
     let text = addr.to_string();
     let bytes = text.as_bytes();
@@ -127,12 +160,12 @@ fn read_addr(s: &mut TcpStream) -> Result<SocketAddr, TransportError> {
     read_exact(s, &mut len, "reading address length")?;
     let len = u16::from_le_bytes(len) as usize;
     if len == 0 || len > 256 {
-        return Err(TransportError(format!("implausible address length {len}")));
+        return Err(TransportError::failed(format!("implausible address length {len}")));
     }
     let mut buf = vec![0u8; len];
     read_exact(s, &mut buf, "reading address")?;
     let text = String::from_utf8(buf)
-        .map_err(|_| TransportError("address is not valid UTF-8".into()))?;
+        .map_err(|_| TransportError::failed("address is not valid UTF-8"))?;
     resolve(&text)
 }
 
@@ -143,12 +176,26 @@ pub fn establish(
     rank: usize,
     n: usize,
 ) -> Result<Vec<Option<TcpStream>>, TransportError> {
+    // Dropping the Session closes both listeners, restoring v1's one-shot
+    // bootstrap semantics exactly.
+    establish_v2(rendezvous, rank, n).map(|(links, _session)| links)
+}
+
+/// [`establish`], but the bootstrap listeners survive as a [`Session`] so
+/// membership can change after the job starts (rendezvous v2).
+pub fn establish_v2(
+    rendezvous: &str,
+    rank: usize,
+    n: usize,
+) -> Result<(Vec<Option<TcpStream>>, Session), TransportError> {
     if n == 0 || rank >= n {
-        return Err(TransportError(format!("rank {rank} out of range for {n} workers")));
+        return Err(TransportError::failed(format!("rank {rank} out of range for {n} workers")));
     }
     let mut links: Vec<Option<TcpStream>> = (0..n).map(|_| None).collect();
     if n == 1 {
-        return Ok(links); // single-process job: no peers, no sockets
+        // single-process job: no peers, no sockets, nothing to rejoin
+        let session = Session { rank, n, rendezvous: None, data: None, table: Vec::new() };
+        return Ok((links, session));
     }
     let rv_addr = resolve(rendezvous)?;
     let deadline = Instant::now() + BOOTSTRAP_TIMEOUT;
@@ -159,46 +206,36 @@ pub fn establish(
     // unspecified address of the matching family and advertise the
     // interface their rendezvous connection actually used — routable by
     // definition, loopback for loopback jobs.
-    let bind_ip: IpAddr = if rank == 0 {
-        if rv_addr.ip().is_unspecified() {
-            IpAddr::V4(Ipv4Addr::LOCALHOST)
-        } else {
-            rv_addr.ip()
-        }
-    } else {
-        match rv_addr {
-            SocketAddr::V4(_) => IpAddr::V4(Ipv4Addr::UNSPECIFIED),
-            SocketAddr::V6(_) => IpAddr::V6(std::net::Ipv6Addr::UNSPECIFIED),
-        }
-    };
-    let data = TcpListener::bind((bind_ip, 0)).map_err(|e| io_err("binding data listener", e))?;
+    let data = TcpListener::bind((data_bind_ip(rank, rv_addr), 0))
+        .map_err(|e| io_err("binding data listener", e))?;
     let data_addr = data.local_addr().map_err(|e| io_err("reading data address", e))?;
 
     // ---- phase 1: the peer table ----
+    let mut server = None;
     let table: Vec<SocketAddr> = if rank == 0 {
-        let server = bind_retry(rv_addr, deadline)?;
+        let rv = bind_retry(rv_addr, deadline)?;
         let mut table: Vec<Option<SocketAddr>> = (0..n).map(|_| None).collect();
         table[0] = Some(data_addr);
         let mut registrants: Vec<(usize, TcpStream)> = Vec::with_capacity(n - 1);
         while registrants.len() < n - 1 {
-            let mut s = accept_retry(&server, "worker registrations", deadline)?;
+            let mut s = accept_retry(&rv, "worker registrations", deadline)?;
             s.set_read_timeout(Some(IO_TIMEOUT)).map_err(|e| io_err("socket setup", e))?;
             let mut magic = [0u8; 8];
             read_exact(&mut s, &mut magic, "reading rendezvous magic")?;
             if &magic != RV_MAGIC {
-                return Err(TransportError("rendezvous contacted by a non-worker".into()));
+                return Err(TransportError::failed("rendezvous contacted by a non-worker"));
             }
             let mut hdr = [0u8; 8];
             read_exact(&mut s, &mut hdr, "reading registration")?;
             let peer = u32::from_le_bytes(hdr[..4].try_into().unwrap()) as usize;
             let peer_n = u32::from_le_bytes(hdr[4..].try_into().unwrap()) as usize;
             if peer_n != n {
-                return Err(TransportError(format!(
+                return Err(TransportError::failed(format!(
                     "worker {peer} was launched with --workers {peer_n}, this job has {n}"
                 )));
             }
             if peer == 0 || peer >= n || table[peer].is_some() {
-                return Err(TransportError(format!("invalid or duplicate rank {peer}")));
+                return Err(TransportError::failed(format!("invalid or duplicate rank {peer}")));
             }
             table[peer] = Some(read_addr(&mut s)?);
             registrants.push((peer, s));
@@ -211,6 +248,7 @@ pub fn establish(
                 write_addr(&mut s, a)?;
             }
         }
+        server = Some(rv);
         table
     } else {
         let mut s = connect_retry(rv_addr, "rendezvous", deadline)?;
@@ -231,12 +269,12 @@ pub fn establish(
         let mut magic = [0u8; 8];
         read_exact(&mut s, &mut magic, "reading peer table magic")?;
         if &magic != TABLE_MAGIC {
-            return Err(TransportError("rendezvous answered with a non-table".into()));
+            return Err(TransportError::failed("rendezvous answered with a non-table"));
         }
         let mut cnt = [0u8; 4];
         read_exact(&mut s, &mut cnt, "reading peer table size")?;
         if u32::from_le_bytes(cnt) as usize != n {
-            return Err(TransportError("peer table size mismatch".into()));
+            return Err(TransportError::failed("peer table size mismatch"));
         }
         let mut table = Vec::with_capacity(n);
         for _ in 0..n {
@@ -260,19 +298,272 @@ pub fn establish(
         let mut magic = [0u8; 8];
         read_exact(&mut s, &mut magic, "reading handshake magic")?;
         if &magic != HANDSHAKE_MAGIC {
-            return Err(TransportError("data listener contacted by a non-worker".into()));
+            return Err(TransportError::failed("data listener contacted by a non-worker"));
         }
         let mut rb = [0u8; 4];
         read_exact(&mut s, &mut rb, "reading handshake rank")?;
         let peer = u32::from_le_bytes(rb) as usize;
         if peer <= rank || peer >= n || links[peer].is_some() {
-            return Err(TransportError(format!("invalid or duplicate handshake rank {peer}")));
+            return Err(TransportError::failed(format!("invalid or duplicate handshake rank {peer}")));
         }
         s.set_read_timeout(None).map_err(|e| io_err("socket setup", e))?;
         s.set_nodelay(true).map_err(|e| io_err("socket setup", e))?;
         links[peer] = Some(s);
     }
-    Ok(links)
+    let session = Session { rank, n, rendezvous: server, data: Some(data), table };
+    Ok((links, session))
+}
+
+/// Which interface a rank's data listener binds (see [`establish_v2`]).
+fn data_bind_ip(rank: usize, rv_addr: SocketAddr) -> IpAddr {
+    if rank == 0 {
+        if rv_addr.ip().is_unspecified() {
+            IpAddr::V4(Ipv4Addr::LOCALHOST)
+        } else {
+            rv_addr.ip()
+        }
+    } else {
+        match rv_addr {
+            SocketAddr::V4(_) => IpAddr::V4(Ipv4Addr::UNSPECIFIED),
+            SocketAddr::V6(_) => IpAddr::V6(std::net::Ipv6Addr::UNSPECIFIED),
+        }
+    }
+}
+
+/// The standing control plane left behind by [`establish_v2`]: the
+/// bootstrap listeners, kept alive so membership can change mid-job.
+///
+/// Rank 0 polls its rendezvous listener for join requests between rounds;
+/// every rank's data listener stands ready to accept a granted joiner's
+/// mesh re-dial.  Dropping the session closes both.
+pub struct Session {
+    rank: usize,
+    n: usize,
+    /// Rank 0 only: the original rendezvous listener, non-blocking.
+    rendezvous: Option<TcpListener>,
+    /// This rank's data listener (absent for single-rank jobs).
+    data: Option<TcpListener>,
+    /// Authoritative on rank 0 (refreshed by join requests); a bootstrap
+    /// snapshot elsewhere.
+    table: Vec<SocketAddr>,
+}
+
+/// A joiner parked at rank 0's rendezvous, waiting for a round boundary.
+/// Produced by [`Session::poll_join`], consumed by [`Session::grant_join`].
+pub struct JoinRequest {
+    pub rank: usize,
+    stream: TcpStream,
+}
+
+/// What a rejoining rank receives in exchange for its [`JoinRequest`]:
+/// where the job is (epoch, step, live mask) and the checkpoint bytes to
+/// resume from bit-exactly.
+pub struct JoinGrant {
+    pub epoch: u64,
+    pub step: u64,
+    /// Bit `r` set ⇔ rank `r` is live in the granted epoch (joiner
+    /// included).  Caps elastic jobs at 64 ranks.
+    pub live_mask: u64,
+    pub blob: Vec<u8>,
+}
+
+impl Session {
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Rank 0: non-blocking check for a parked joiner.  `Ok(None)` when no
+    /// one is dialing (or this rank does not host the rendezvous).  The
+    /// request's advertised data address replaces the joiner's stale table
+    /// entry immediately, so later grants hand out current addresses.
+    pub fn poll_join(&mut self) -> Result<Option<JoinRequest>, TransportError> {
+        let Some(server) = &self.rendezvous else {
+            return Ok(None);
+        };
+        let mut s = match server.accept() {
+            Ok((s, _)) => s,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return Ok(None),
+            Err(e) => return Err(io_err("polling for joiners", e)),
+        };
+        s.set_nonblocking(false).map_err(|e| io_err("socket setup", e))?;
+        s.set_read_timeout(Some(IO_TIMEOUT)).map_err(|e| io_err("socket setup", e))?;
+        let mut magic = [0u8; 8];
+        read_exact(&mut s, &mut magic, "reading join magic")?;
+        if &magic != JOIN_MAGIC {
+            return Err(TransportError::failed("rendezvous contacted mid-job by a non-joiner"));
+        }
+        let mut hdr = [0u8; 8];
+        read_exact(&mut s, &mut hdr, "reading join request")?;
+        let peer = u32::from_le_bytes(hdr[..4].try_into().unwrap()) as usize;
+        let peer_n = u32::from_le_bytes(hdr[4..].try_into().unwrap()) as usize;
+        if peer_n != self.n {
+            return Err(TransportError::failed(format!(
+                "joiner {peer} believes the job has {peer_n} workers, it has {}",
+                self.n
+            )));
+        }
+        if peer == 0 || peer >= self.n {
+            return Err(TransportError::failed(format!("invalid join request from rank {peer}")));
+        }
+        let addr = read_addr(&mut s)?;
+        self.table[peer] = addr;
+        Ok(Some(JoinRequest { rank: peer, stream: s }))
+    }
+
+    /// [`Session::poll_join`], but willing to wait up to `grace` for a
+    /// joiner to park.  Rank 0 uses this at boundaries where the fleet is
+    /// short-handed, so an evicted rank restarting promptly is readmitted
+    /// at the very next boundary instead of racing a one-shot poll.
+    pub fn poll_join_deadline(
+        &mut self,
+        grace: Duration,
+    ) -> Result<Option<JoinRequest>, TransportError> {
+        let deadline = Instant::now() + grace;
+        loop {
+            if let Some(req) = self.poll_join()? {
+                return Ok(Some(req));
+            }
+            if Instant::now() >= deadline {
+                return Ok(None);
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+
+    /// Rank 0, at a round boundary: admit a parked joiner by sending the
+    /// grant (epoch, resume step, live mask, checkpoint blob, peer table).
+    /// The joiner dials the live mesh on receipt; every survivor must pair
+    /// this with an [`Session::accept_rejoin`].
+    pub fn grant_join(
+        &mut self,
+        req: JoinRequest,
+        epoch: u64,
+        step: u64,
+        live_mask: u64,
+        blob: &[u8],
+    ) -> Result<(), TransportError> {
+        let mut s = req.stream;
+        s.write_all(GRANT_MAGIC).map_err(|e| io_err("writing join grant", e))?;
+        for v in [epoch, step, live_mask, blob.len() as u64] {
+            s.write_all(&v.to_le_bytes()).map_err(|e| io_err("writing join grant", e))?;
+        }
+        s.write_all(blob).map_err(|e| io_err("writing join grant checkpoint", e))?;
+        s.write_all(&(self.n as u32).to_le_bytes()).map_err(|e| io_err("writing join grant", e))?;
+        for a in &self.table {
+            write_addr(&mut s, a)?;
+        }
+        Ok(())
+    }
+
+    /// Any survivor: block (with the bootstrap deadline) until the granted
+    /// joiner re-dials this rank's data listener; returns the joiner's
+    /// rank and the fresh stream, ready for `TcpTransport::install_link`.
+    pub fn accept_rejoin(&mut self) -> Result<(usize, TcpStream), TransportError> {
+        let data = self
+            .data
+            .as_ref()
+            .ok_or_else(|| TransportError::failed("single-rank session has no data listener"))?;
+        let deadline = Instant::now() + BOOTSTRAP_TIMEOUT;
+        let mut s = accept_retry(data, "a rejoining peer", deadline)?;
+        s.set_read_timeout(Some(IO_TIMEOUT)).map_err(|e| io_err("socket setup", e))?;
+        let mut magic = [0u8; 8];
+        read_exact(&mut s, &mut magic, "reading rejoin magic")?;
+        if &magic != REJOIN_MAGIC {
+            return Err(TransportError::failed("data listener contacted mid-job by a non-joiner"));
+        }
+        let mut rb = [0u8; 4];
+        read_exact(&mut s, &mut rb, "reading rejoin rank")?;
+        let peer = u32::from_le_bytes(rb) as usize;
+        if peer == 0 || peer >= self.n || peer == self.rank {
+            return Err(TransportError::failed(format!("invalid rejoin handshake rank {peer}")));
+        }
+        s.set_read_timeout(None).map_err(|e| io_err("socket setup", e))?;
+        s.set_nodelay(true).map_err(|e| io_err("socket setup", e))?;
+        Ok((peer, s))
+    }
+}
+
+/// An evicted (or restarted) rank dials back into a running job: register
+/// at the rendezvous with `CSER-JN2`, wait for rank 0's grant — which only
+/// arrives at a round boundary, so this blocks up to the bootstrap
+/// deadline — then re-dial every live peer.  Returns the per-peer streams
+/// (indexed by rank, `None` for self and non-live ranks), the grant to
+/// resume from, and this rank's fresh [`Session`].
+pub fn rejoin(
+    rendezvous: &str,
+    rank: usize,
+    n: usize,
+) -> Result<(Vec<Option<TcpStream>>, JoinGrant, Session), TransportError> {
+    if n == 0 || rank == 0 || rank >= n {
+        return Err(TransportError::failed(format!(
+            "rank {rank} cannot rejoin a {n}-worker job (rank 0 hosts the rendezvous and is not evictable)"
+        )));
+    }
+    let rv_addr = resolve(rendezvous)?;
+    let deadline = Instant::now() + BOOTSTRAP_TIMEOUT;
+    let data = TcpListener::bind((data_bind_ip(rank, rv_addr), 0))
+        .map_err(|e| io_err("binding data listener", e))?;
+    let data_addr = data.local_addr().map_err(|e| io_err("reading data address", e))?;
+
+    let mut s = connect_retry(rv_addr, "rendezvous (rejoin)", deadline)?;
+    s.set_read_timeout(Some(BOOTSTRAP_TIMEOUT)).map_err(|e| io_err("socket setup", e))?;
+    let advertised = SocketAddr::new(
+        s.local_addr().map_err(|e| io_err("reading local address", e))?.ip(),
+        data_addr.port(),
+    );
+    s.write_all(JOIN_MAGIC).map_err(|e| io_err("requesting join", e))?;
+    let mut hdr = [0u8; 8];
+    hdr[..4].copy_from_slice(&(rank as u32).to_le_bytes());
+    hdr[4..].copy_from_slice(&(n as u32).to_le_bytes());
+    s.write_all(&hdr).map_err(|e| io_err("requesting join", e))?;
+    write_addr(&mut s, &advertised)?;
+
+    let mut magic = [0u8; 8];
+    read_exact(&mut s, &mut magic, "reading join grant magic")?;
+    if &magic != GRANT_MAGIC {
+        return Err(TransportError::failed("rendezvous answered the join with a non-grant"));
+    }
+    let epoch = read_u64(&mut s, "reading grant epoch")?;
+    let step = read_u64(&mut s, "reading grant step")?;
+    let live_mask = read_u64(&mut s, "reading grant live mask")?;
+    let blob_len = read_u64(&mut s, "reading grant checkpoint length")?;
+    if blob_len > MAX_GRANT_BLOB_BYTES {
+        return Err(TransportError::failed(format!(
+            "implausible grant checkpoint length {blob_len}"
+        )));
+    }
+    let mut blob = vec![0u8; blob_len as usize];
+    read_exact(&mut s, &mut blob, "reading grant checkpoint")?;
+    let mut cnt = [0u8; 4];
+    read_exact(&mut s, &mut cnt, "reading grant peer table size")?;
+    if u32::from_le_bytes(cnt) as usize != n {
+        return Err(TransportError::failed("grant peer table size mismatch"));
+    }
+    let mut table = Vec::with_capacity(n);
+    for _ in 0..n {
+        table.push(read_addr(&mut s)?);
+    }
+
+    // Re-dial the live mesh: the joiner dials *everyone* (survivors only
+    // ever accept), so the v1 higher-dials-lower rule does not apply here.
+    let mut links: Vec<Option<TcpStream>> = (0..n).map(|_| None).collect();
+    for (j, addr) in table.iter().enumerate() {
+        if j == rank || (live_mask >> j) & 1 == 0 {
+            continue;
+        }
+        let mut p = connect_retry(*addr, &format!("peer {j} (rejoin)"), deadline)?;
+        p.write_all(REJOIN_MAGIC).map_err(|e| io_err("rejoin handshaking", e))?;
+        p.write_all(&(rank as u32).to_le_bytes()).map_err(|e| io_err("rejoin handshaking", e))?;
+        p.set_nodelay(true).map_err(|e| io_err("socket setup", e))?;
+        links[j] = Some(p);
+    }
+    let grant = JoinGrant { epoch, step, live_mask, blob };
+    let session = Session { rank, n, rendezvous: None, data: Some(data), table };
+    Ok((links, grant, session))
 }
 
 #[cfg(test)]
@@ -310,5 +601,54 @@ mod tests {
     #[test]
     fn bad_rank_is_rejected() {
         assert!(establish("127.0.0.1:1", 3, 2).is_err());
+    }
+
+    #[test]
+    fn evicted_rank_rejoins_through_the_session() {
+        let addr = free_loopback_addr().unwrap();
+        let n = 3;
+        std::thread::scope(|scope| {
+            let a0 = addr.clone();
+            let r0 = scope.spawn(move || {
+                let (links, mut sess) = establish_v2(&a0, 0, n).unwrap();
+                drop(links); // this test exercises the control plane only
+                let req = loop {
+                    match sess.poll_join().unwrap() {
+                        Some(r) => break r,
+                        None => std::thread::sleep(Duration::from_millis(10)),
+                    }
+                };
+                assert_eq!(req.rank, 2);
+                sess.grant_join(req, 7, 42, 0b111, b"ckpt").unwrap();
+                let (peer, mut s) = sess.accept_rejoin().unwrap();
+                assert_eq!(peer, 2);
+                let mut b = [0u8; 4];
+                s.read_exact(&mut b).unwrap();
+                assert_eq!(&b, b"ping");
+            });
+            let a1 = addr.clone();
+            let r1 = scope.spawn(move || {
+                let (links, mut sess) = establish_v2(&a1, 1, n).unwrap();
+                drop(links);
+                let (peer, _s) = sess.accept_rejoin().unwrap();
+                assert_eq!(peer, 2);
+            });
+            let a2 = addr.clone();
+            let r2 = scope.spawn(move || {
+                let (links, sess) = establish_v2(&a2, 2, n).unwrap();
+                drop(links);
+                drop(sess); // rank 2 "dies": its listeners close
+                let (mut links, grant, _sess) = rejoin(&a2, 2, n).unwrap();
+                assert_eq!(grant.epoch, 7);
+                assert_eq!(grant.step, 42);
+                assert_eq!(grant.live_mask, 0b111);
+                assert_eq!(grant.blob, b"ckpt");
+                assert!(links[0].is_some() && links[1].is_some() && links[2].is_none());
+                links[0].as_mut().unwrap().write_all(b"ping").unwrap();
+            });
+            r0.join().unwrap();
+            r1.join().unwrap();
+            r2.join().unwrap();
+        });
     }
 }

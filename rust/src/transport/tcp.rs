@@ -22,7 +22,7 @@
 use super::peer::{PeerTransport, Tag, TransportError};
 use super::wire::WireMsg;
 use crate::obs::{self, PeerCounters};
-use std::io::{BufReader, IoSlice, Read, Write};
+use std::io::{BufRead, BufReader, IoSlice, Read, Write};
 use std::net::TcpStream;
 use std::sync::Arc;
 
@@ -91,19 +91,32 @@ impl TcpTransport {
     /// vectored header+payload write per frame).
     pub fn connect(rendezvous: &str, rank: usize, n: usize) -> Result<TcpTransport, TransportError> {
         let streams = super::rendezvous::establish(rendezvous, rank, n)?;
+        Self::from_streams(rank, n, streams)
+    }
+
+    /// [`TcpTransport::connect`] keeping the rendezvous/data listeners
+    /// alive (rendezvous v2): the returned [`super::rendezvous::Session`]
+    /// is what admits rejoining ranks at later epoch boundaries.
+    pub fn connect_v2(
+        rendezvous: &str,
+        rank: usize,
+        n: usize,
+    ) -> Result<(TcpTransport, super::rendezvous::Session), TransportError> {
+        let (streams, session) = super::rendezvous::establish_v2(rendezvous, rank, n)?;
+        Ok((Self::from_streams(rank, n, streams)?, session))
+    }
+
+    /// Wrap already-established mesh sockets (index = peer rank, self slot
+    /// `None`).  Slots may also be `None` for not-yet-joined ranks; their
+    /// links are installed later via [`TcpTransport::install_link`].
+    pub fn from_streams(
+        rank: usize,
+        n: usize,
+        streams: Vec<Option<TcpStream>>,
+    ) -> Result<TcpTransport, TransportError> {
         let mut links = Vec::with_capacity(n);
         for s in streams {
-            links.push(match s {
-                None => None,
-                Some(stream) => {
-                    let reader = BufReader::new(
-                        stream
-                            .try_clone()
-                            .map_err(|e| TransportError(format!("splitting socket: {e}")))?,
-                    );
-                    Some(Link { reader, writer: stream, wbuf: Vec::new() })
-                }
-            });
+            links.push(s.map(Self::make_link).transpose()?);
         }
         Ok(TcpTransport {
             rank,
@@ -116,14 +129,47 @@ impl TcpTransport {
         })
     }
 
+    fn make_link(stream: TcpStream) -> Result<Link, TransportError> {
+        let reader = BufReader::new(
+            stream
+                .try_clone()
+                .map_err(|e| TransportError::failed(format!("splitting socket: {e}")))?,
+        );
+        Ok(Link { reader, writer: stream, wbuf: Vec::new() })
+    }
+
+    /// Install (or replace) the link to `peer` — a rank rejoining at an
+    /// epoch boundary redials every survivor, which accepts on its kept
+    /// data listener and installs the fresh socket here.
+    pub fn install_link(&mut self, peer: usize, stream: TcpStream) -> Result<(), TransportError> {
+        if peer == self.rank || peer >= self.n {
+            return Err(TransportError::failed(format!(
+                "rank {} cannot link to peer {peer}",
+                self.rank
+            )));
+        }
+        self.links[peer] = Some(Self::make_link(stream)?);
+        Ok(())
+    }
+
+    /// Drop the link to a dead peer (its socket is unusable; a rejoin
+    /// installs a fresh one).
+    pub fn drop_link(&mut self, peer: usize) {
+        if peer < self.links.len() && peer != self.rank {
+            self.links[peer] = None;
+        }
+    }
+
     fn link(&mut self, peer: usize) -> Result<&mut Link, TransportError> {
         if peer == self.rank || peer >= self.n {
-            return Err(TransportError(format!(
+            return Err(TransportError::failed(format!(
                 "rank {} has no link to peer {peer}",
                 self.rank
             )));
         }
-        Ok(self.links[peer].as_mut().expect("mesh link exists for every other rank"))
+        self.links[peer]
+            .as_mut()
+            .ok_or_else(|| TransportError::peer_down(peer, "no live link (left the fleet)"))
     }
 
     fn send_ref(
@@ -151,7 +197,9 @@ impl TcpTransport {
                 break;
             }
         }
-        let io = |e: std::io::Error| TransportError(format!("sending to peer {to}: {e}"));
+        let io = |e: std::io::Error| {
+            TransportError::peer_down(to, format!("sending failed: {e}"))
+        };
         let timed = obs::enabled();
         let t0 = if timed { obs::now_ns() } else { 0 };
         write_all_vectored(&mut link.writer, &hdr, &link.wbuf).map_err(io)?;
@@ -190,23 +238,100 @@ impl PeerTransport for TcpTransport {
 
     fn recv(&mut self, from: usize, round: u64, tag: Tag) -> Result<Arc<WireMsg>, TransportError> {
         let rank = self.rank;
+        let (r, tg, msg) = self.read_frame(from)?;
+        if r != round || tg != tag {
+            return Err(TransportError::failed(format!(
+                "rank {rank} desynchronized: expected (round {round}, {tag:?}) from peer {from}, \
+                 got (round {r}, {tg:?})"
+            )));
+        }
+        Ok(Arc::new(msg))
+    }
+
+    fn recv_deadline(
+        &mut self,
+        from: usize,
+        round: u64,
+        tag: Tag,
+        timeout: Option<std::time::Duration>,
+    ) -> Result<Option<Arc<WireMsg>>, TransportError> {
+        let rank = self.rank;
+        loop {
+            if let Some(t) = timeout {
+                // The deadline applies only to the *first byte* of the next
+                // frame: once a frame starts arriving the peer is alive, and
+                // timing out a partial read would desynchronize the stream.
+                let link = self.link(from)?;
+                let set = |s: &TcpStream, d: Option<std::time::Duration>| {
+                    s.set_read_timeout(d)
+                        .map_err(|e| TransportError::failed(format!("setting read timeout: {e}")))
+                };
+                set(link.reader.get_ref(), Some(t))?;
+                let arrived = loop {
+                    match link.reader.fill_buf() {
+                        Ok([]) => {
+                            break Err(TransportError::peer_down(from, "connection closed"))
+                        }
+                        Ok(_) => break Ok(true),
+                        Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                        Err(e)
+                            if matches!(
+                                e.kind(),
+                                std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                            ) =>
+                        {
+                            break Ok(false)
+                        }
+                        Err(e) => {
+                            break Err(TransportError::peer_down(
+                                from,
+                                format!("receiving failed: {e}"),
+                            ))
+                        }
+                    }
+                };
+                set(link.reader.get_ref(), None)?;
+                match arrived {
+                    Ok(true) => {}
+                    Ok(false) => return Ok(None), // deadline expired
+                    Err(e) => return Err(e),
+                }
+            }
+            let (r, tg, msg) = self.read_frame(from)?;
+            if r < round {
+                // stale frame from a censored round: discard
+                continue;
+            }
+            if r != round || tg != tag {
+                return Err(TransportError::failed(format!(
+                    "rank {rank} desynchronized: expected (round {round}, {tag:?}) from peer \
+                     {from}, got (round {r}, {tg:?})"
+                )));
+            }
+            return Ok(Some(Arc::new(msg)));
+        }
+    }
+}
+
+impl TcpTransport {
+    /// Read one complete frame from `from`: header, cap check, payload.
+    /// No (round, tag) validation — callers decide what is stale vs
+    /// desynchronized.  Socket-level failures are attributed to the peer
+    /// ([`TransportError::PeerDown`]); framing violations are terminal.
+    fn read_frame(&mut self, from: usize) -> Result<(u64, Tag, WireMsg), TransportError> {
         let link = self.link(from)?;
-        let io = |e: std::io::Error| TransportError(format!("receiving from peer {from}: {e}"));
+        let io =
+            |e: std::io::Error| TransportError::peer_down(from, format!("receiving failed: {e}"));
         let mut hdr = [0u8; FRAME_HEADER_BYTES as usize];
         link.reader.read_exact(&mut hdr).map_err(io)?;
         let r = u64::from_le_bytes(hdr[..8].try_into().unwrap());
-        let tg = Tag::from_u8(hdr[8])
-            .ok_or_else(|| TransportError(format!("unknown frame tag {} from peer {from}", hdr[8])))?;
+        let tg = Tag::from_u8(hdr[8]).ok_or_else(|| {
+            TransportError::failed(format!("unknown frame tag {} from peer {from}", hdr[8]))
+        })?;
         let bit_len = u64::from_le_bytes(hdr[9..].try_into().unwrap());
         if bit_len > MAX_FRAME_BITS {
-            return Err(TransportError(format!(
+            return Err(TransportError::failed(format!(
                 "frame from peer {from} claims {bit_len} bits (cap {MAX_FRAME_BITS})"
-            )));
-        }
-        if r != round || tg != tag {
-            return Err(TransportError(format!(
-                "rank {rank} desynchronized: expected (round {round}, {tag:?}) from peer {from}, \
-                 got (round {r}, {tg:?})"
             )));
         }
         let nbytes = bit_len.div_ceil(8) as usize;
@@ -221,7 +346,7 @@ impl PeerTransport for TcpTransport {
         self.payload_bits_received += bit_len;
         self.per_peer[from].frames_received += 1;
         self.per_peer[from].payload_bits_received += bit_len;
-        Ok(Arc::new(WireMsg { words, bit_len }))
+        Ok((r, tg, WireMsg { words, bit_len }))
     }
 }
 

@@ -1,0 +1,381 @@
+//! Elastic-membership equivalence: partial participation over real
+//! loopback TCP must keep training live, keep the survivors bit-identical
+//! to each other, and keep the wire accounting exact (DESIGN.md §8).
+//!
+//! Each "process" is a thread running the exact `cser worker` code path —
+//! `train_classifier` with `Backend::Tcp` and `cfg.elastic`/`cfg.chaos`/
+//! `cfg.join` set, a single-worker engine, the rank-0 rendezvous-v2
+//! session — so everything but the PID boundary is exercised (that
+//! boundary is the CI `elastic-smoke` launch job).
+//!
+//! Contracts pinned here (the acceptance criteria for the control plane):
+//!
+//! * **A killed rank censors, then evicts**: a 4-rank fleet losing rank 3
+//!   mid-training finishes with valid, mutually identical survivor
+//!   records, and the survivors' wire counters account *exactly* the bits
+//!   the dead rank sent before dying — nothing invented, nothing lost.
+//! * **Censoring cadence**: Li et al.'s transmit-when-it-matters rule over
+//!   elastic TCP is bit-identical to the central in-process trainer,
+//!   strictly cheaper than the dense-cadence reference, and keeps the
+//!   star-topology wire perfectly balanced.
+//! * **Grant blob = checkpoint v2**: the byte blob a join grant carries
+//!   resumes an engine bit-exactly, and a corrupted blob is rejected.
+//! * **Evicted rank rejoins a later epoch**: a chaos-killed rank re-enters
+//!   through rendezvous v2, resumes at the granted epoch boundary, and
+//!   from there reproduces the survivors' curves exactly.
+
+use cser::compressor::{RandK, TopK};
+use cser::coordinator::checkpoint::Checkpoint;
+use cser::coordinator::sim_trainer::{train_classifier, ChaosSpec, TrainCfg};
+use cser::coordinator::{ElasticSummary, RunRecord};
+use cser::data::ClassDataset;
+use cser::engine::{Cadence, CommPlan, ErrorResetEngine};
+use cser::models::{GradModel, Mlp};
+use cser::optimizer::DistOptimizer;
+use cser::transport::rendezvous::free_loopback_addr;
+use cser::transport::Backend;
+
+fn workload() -> (ClassDataset, ClassDataset, Mlp) {
+    let (tr, te) = ClassDataset::gaussian_mixture(10, 16, 1024, 256, 1.2, 0.8, 0.0, 7);
+    (tr, te, Mlp::new(16, 32, 10))
+}
+
+fn quick_cfg(epochs: usize) -> TrainCfg {
+    let mut c = TrainCfg::new(epochs, 16, 0.1, 7);
+    c.schedule = cser::config::LrSchedule::StepDecay { milestones: vec![0.5], factor: 0.2 };
+    c.paper_d = 1_000_000;
+    c.threads = 4;
+    c
+}
+
+/// The parameter-server-routed CSER plan used throughout: per-worker
+/// compressors, so every collective is a star round through rank 0 —
+/// the shape censoring (and the whole elastic path) requires.
+fn ps_plan() -> CommPlan {
+    CommPlan::cser(Box::new(RandK::new(4.0)), Box::new(TopK::new(4.0)), 2)
+}
+
+/// Plan builders shared by the central and per-rank runs (`n` differs).
+type MkOpt = dyn Fn(&[f32], usize) -> Box<dyn DistOptimizer> + Sync;
+
+fn run_central(mk: &MkOpt, n: usize, cfg: &TrainCfg) -> RunRecord {
+    let (tr, te, model) = workload();
+    let init = model.init(cfg.seed);
+    let mut opt = mk(&init, n);
+    train_classifier(&model, &tr, &te, opt.as_mut(), cfg)
+}
+
+/// One thread per rank over a fresh loopback rendezvous.  A rank whose
+/// chaos plan kills it panics by design, so each outcome is a `Result`:
+/// `Err` marks the planned death, `Ok` carries the survivor's record.
+fn run_elastic(mk: &MkOpt, n: usize, cfg: &TrainCfg) -> Vec<Result<RunRecord, ()>> {
+    let addr = free_loopback_addr().expect("loopback port");
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..n)
+            .map(|rank| {
+                let addr = addr.clone();
+                let mut cfg = cfg.clone();
+                s.spawn(move || {
+                    let (tr, te, model) = workload();
+                    let init = model.init(cfg.seed);
+                    cfg.backend = Backend::Tcp { bind: addr, peers: n, rank };
+                    let mut opt = mk(&init, 1);
+                    train_classifier(&model, &tr, &te, opt.as_mut(), &cfg)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().map_err(|_| ())).collect()
+    })
+}
+
+fn summary(rec: &RunRecord) -> &ElasticSummary {
+    rec.elastic.as_ref().expect("elastic run must carry an ElasticSummary")
+}
+
+/// Bit-exact comparison of two epoch curves (f64 payloads compared by
+/// representation, so a NaN sneaking in fails instead of vacuously passing).
+fn assert_points_eq(a: &RunRecord, b: &RunRecord, what: &str) {
+    assert_eq!(a.points.len(), b.points.len(), "{what}: point counts differ");
+    for (x, y) in a.points.iter().zip(&b.points) {
+        assert_eq!(x.epoch, y.epoch, "{what}: epoch ids differ");
+        assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits(), "{what}: epoch {}", x.epoch);
+        assert_eq!(x.test_acc.to_bits(), y.test_acc.to_bits(), "{what}: epoch {}", x.epoch);
+        assert_eq!(x.cum_bits.to_bits(), y.cum_bits.to_bits(), "{what}: epoch {}", x.epoch);
+        assert_eq!(x.cum_seconds.to_bits(), y.cum_seconds.to_bits(), "{what}: epoch {}", x.epoch);
+    }
+}
+
+#[test]
+fn elastic_fleet_survives_a_killed_rank_and_accounts_every_bit() {
+    // Rank 3 dies at its very first gradient call.  Its only traffic is the
+    // start-epoch agreement: one 64-bit value frame up, one 1-bit verdict
+    // down.  The survivors censor it for the round, evict it at the first
+    // epoch boundary, and finish the full schedule — and because every
+    // collective is a star through rank 0, the wire counters must balance
+    // *exactly*: what rank 0 received is what ranks 1..3 sent (the dead
+    // rank's 64 bits included), what it sent is what they received.
+    let n = 4;
+    let mut cfg = quick_cfg(3);
+    cfg.chaos = Some(ChaosSpec::parse("kill:3@0").expect("chaos spec"));
+    let mk: Box<MkOpt> =
+        Box::new(|init, n| Box::new(ErrorResetEngine::new(init, n, 0.9, ps_plan())));
+
+    let outcomes = run_elastic(&mk, n, &cfg);
+    assert!(outcomes[3].is_err(), "rank 3 was chaos-killed and must have panicked");
+    let recs: Vec<&RunRecord> = outcomes[..3]
+        .iter()
+        .enumerate()
+        .map(|(r, o)| o.as_ref().unwrap_or_else(|_| panic!("survivor rank {r} panicked")))
+        .collect();
+
+    for (r, rec) in recs.iter().enumerate() {
+        assert!(!rec.diverged, "survivor rank {r} diverged");
+        assert_eq!(rec.points.len(), 3, "survivor rank {r} must finish all epochs");
+        let s = summary(rec);
+        assert_eq!(s.live_mask, 0b0111, "rank {r}: rank 3 must be out of the final view");
+        assert_eq!(s.final_epoch, 1, "rank {r}: exactly one view change");
+        assert_eq!(s.evictions, 1, "rank {r}: exactly one eviction");
+        assert_eq!(s.joins, 0, "rank {r}: nobody rejoined");
+        assert_points_eq(rec, recs[0], "survivors must agree");
+    }
+    let acc = recs[0].points.last().unwrap().test_acc;
+    assert!(acc > 0.35, "survivors should keep converging (acc {acc})");
+
+    // Only rank 0 talks to rank 3 in a star, so only rank 0 censors.
+    let (s0, s1, s2) = (summary(recs[0]), summary(recs[1]), summary(recs[2]));
+    assert!(s0.censor_events >= 1, "rank 0 must have censored the dead rank");
+    assert_eq!(s1.censor_events, 0, "rank 1 never talks to rank 3");
+    assert_eq!(s2.censor_events, 0, "rank 2 never talks to rank 3");
+
+    // Exact accounting under the partial round: the dead rank sent its
+    // 64-bit start-epoch value and received the 1-bit verdict, nothing else.
+    assert_eq!(
+        s0.payload_bits_received,
+        s1.payload_bits_sent + s2.payload_bits_sent + 64,
+        "rank 0 must account exactly the survivors' uploads plus the dead rank's 64-bit flag"
+    );
+    assert_eq!(
+        s0.payload_bits_sent,
+        s1.payload_bits_received + s2.payload_bits_received + 1,
+        "rank 0 must account exactly the survivors' downloads plus the dead rank's 1-bit verdict"
+    );
+}
+
+#[test]
+fn censored_cadence_matches_central_and_undercuts_the_dense_reference() {
+    // τ(t) = 64·0.5^t: the first handful of steps censor every worker
+    // (updates at lr 0.1 are nowhere near norm 64), then the threshold
+    // decays below the update norms and the run goes effectively dense.
+    // Contracts: the elastic TCP run is bit-identical to the central
+    // in-process trainer (every loss, accuracy, bit); it accounts strictly
+    // fewer bits than the Always-cadence reference; its final accuracy is
+    // within the documented 0.2 band of dense; and the happy-path star
+    // stays perfectly balanced with zero censor events.
+    let n = 4;
+    let cfg = quick_cfg(3);
+    let mk_censored: Box<MkOpt> = Box::new(|init, n| {
+        let plan = ps_plan().with_cadence(Cadence::Censored { tau0: 64.0, gamma: 0.5 });
+        Box::new(ErrorResetEngine::new(init, n, 0.9, plan))
+    });
+    let mk_dense: Box<MkOpt> =
+        Box::new(|init, n| Box::new(ErrorResetEngine::new(init, n, 0.9, ps_plan())));
+
+    let central = run_central(&mk_censored, n, &cfg);
+    assert!(!central.diverged);
+    let dense = run_central(&mk_dense, n, &cfg);
+    assert!(!dense.diverged);
+
+    let mut ecfg = cfg.clone();
+    ecfg.elastic = true;
+    let outcomes = run_elastic(&mk_censored, n, &ecfg);
+    let recs: Vec<&RunRecord> = outcomes
+        .iter()
+        .enumerate()
+        .map(|(r, o)| o.as_ref().unwrap_or_else(|_| panic!("rank {r} panicked")))
+        .collect();
+
+    for (r, rec) in recs.iter().enumerate() {
+        assert!(!rec.diverged, "rank {r} diverged");
+        assert_points_eq(rec, &central, "elastic TCP vs central censored trainer");
+        let s = summary(rec);
+        assert_eq!(s.live_mask, 0b1111, "rank {r}: full fleet stays live");
+        assert_eq!(s.final_epoch, 0, "rank {r}: no view change on the happy path");
+        assert_eq!((s.evictions, s.joins), (0, 0), "rank {r}");
+        assert_eq!(s.censor_events, 0, "rank {r}: cadence skips are not transport censoring");
+    }
+
+    // Strictly cheaper than dense (the early censored steps transmit
+    // nothing), within the documented accuracy band.
+    let cens_bits = central.points.last().unwrap().cum_bits;
+    let dense_bits = dense.points.last().unwrap().cum_bits;
+    assert!(
+        cens_bits < dense_bits,
+        "censoring must drop bits: {cens_bits} vs dense {dense_bits}"
+    );
+    let cens_acc = central.points.last().unwrap().test_acc;
+    let dense_acc = dense.points.last().unwrap().test_acc;
+    assert!(cens_acc > 0.35, "censored run should still learn (acc {cens_acc})");
+    assert!(
+        (cens_acc - dense_acc).abs() < 0.2,
+        "censored acc {cens_acc} strayed from dense {dense_acc}"
+    );
+
+    // No deaths, no deadline misses: the star balances to the bit.
+    let s0 = summary(recs[0]);
+    let up: u64 = recs[1..].iter().map(|r| summary(r).payload_bits_sent).sum();
+    let down: u64 = recs[1..].iter().map(|r| summary(r).payload_bits_received).sum();
+    assert_eq!(s0.payload_bits_received, up, "rank 0 received exactly what 1..n sent");
+    assert_eq!(s0.payload_bits_sent, down, "rank 0 sent exactly what 1..n received");
+}
+
+#[test]
+fn grant_checkpoint_blob_resumes_bit_exactly() {
+    // The join grant ships `Checkpoint::capture_engine(..).to_bytes()` as
+    // an opaque blob.  Round-tripping it through `from_bytes` and
+    // `restore_engine` must reproduce the engine bit-for-bit — models,
+    // errors, and the continued trajectory — and a corrupted blob must be
+    // rejected up front (checksum first), not half-applied.
+    let (n, d) = (3usize, 24usize);
+    let init: Vec<f32> = (0..d).map(|j| (j as f32 * 0.29).sin() * 0.3).collect();
+    let grads_at = |o: &ErrorResetEngine| -> Vec<Vec<f32>> {
+        (0..n)
+            .map(|w| {
+                o.worker_model(w)
+                    .iter()
+                    .enumerate()
+                    .map(|(j, x)| x - 1.0 + 0.04 * ((w * 29 + 5 * j) % 13) as f32)
+                    .collect()
+            })
+            .collect()
+    };
+    let mut full = ErrorResetEngine::new(&init, n, 0.9, ps_plan());
+    for _ in 0..7 {
+        let gs = grads_at(&full);
+        full.step(&gs, 0.05);
+    }
+
+    let blob = Checkpoint::capture_engine(&full).to_bytes();
+    let back = Checkpoint::from_bytes(&blob).expect("grant blob must parse");
+    let mut resumed = ErrorResetEngine::new(&init, n, 0.9, ps_plan());
+    back.restore_engine(&mut resumed).expect("grant blob must restore");
+    assert_eq!(resumed.step_count(), 7, "resume at the granted step");
+    for w in 0..n {
+        assert_eq!(full.worker_model(w), resumed.worker_model(w), "worker {w} model at restore");
+        assert_eq!(full.local_error(w), resumed.local_error(w), "worker {w} error at restore");
+    }
+    for _ in 0..5 {
+        let gs = grads_at(&full);
+        full.step(&gs, 0.05);
+        let gs = grads_at(&resumed);
+        resumed.step(&gs, 0.05);
+    }
+    for w in 0..n {
+        assert_eq!(full.worker_model(w), resumed.worker_model(w), "worker {w} model diverged");
+        assert_eq!(full.local_error(w), resumed.local_error(w), "worker {w} error diverged");
+    }
+
+    let mut bad = blob.clone();
+    bad[blob.len() / 2] ^= 1;
+    assert!(Checkpoint::from_bytes(&bad).is_err(), "a corrupted grant blob must be rejected");
+}
+
+#[test]
+fn evicted_rank_rejoins_a_later_epoch_and_tracks_the_survivors() {
+    // Rank 2 is chaos-killed early in epoch 1 (21 iters/epoch at this
+    // workload; gradient call 23 is epoch 1's third step), evicted at that
+    // epoch's boundary, then restarted with `cfg.join`: it parks a CSER-JN2
+    // request at the rendezvous, rank 0 grants it at a short-handed
+    // boundary with the checkpoint blob, and the joiner finishes the
+    // schedule in lockstep — its per-epoch losses and accuracies must equal
+    // the survivors' bit-for-bit on the overlap (fleet-level aggregates are
+    // rank-independent), and every final view must be whole again.
+    let n = 3;
+    let epochs = 8;
+    let addr = free_loopback_addr().expect("loopback port");
+    let mk: Box<MkOpt> =
+        Box::new(|init, n| Box::new(ErrorResetEngine::new(init, n, 0.9, ps_plan())));
+    let mut cfg = quick_cfg(epochs);
+    cfg.chaos = Some(ChaosSpec::parse("kill:2@23").expect("chaos spec"));
+
+    fn run_rank(rank: usize, n: usize, mut cfg: TrainCfg, addr: String, mk: &MkOpt) -> RunRecord {
+        let (tr, te, model) = workload();
+        let init = model.init(cfg.seed);
+        cfg.backend = Backend::Tcp { bind: addr, peers: n, rank };
+        let mut opt = mk(&init, 1);
+        train_classifier(&model, &tr, &te, opt.as_mut(), &cfg)
+    }
+
+    let (rec0, rec1, recj) = std::thread::scope(|s| {
+        let h0 = {
+            let (cfg, addr, mk) = (cfg.clone(), addr.clone(), &mk);
+            s.spawn(move || run_rank(0, n, cfg, addr, mk))
+        };
+        let h1 = {
+            let (cfg, addr, mk) = (cfg.clone(), addr.clone(), &mk);
+            s.spawn(move || run_rank(1, n, cfg, addr, mk))
+        };
+        let h2 = {
+            let (cfg, addr, mk) = (cfg.clone(), addr.clone(), &mk);
+            s.spawn(move || run_rank(2, n, cfg, addr, mk))
+        };
+        assert!(h2.join().is_err(), "rank 2 was chaos-killed and must have panicked");
+        // The rank is dead and (once the survivors hit the boundary)
+        // evicted; restart it as a joiner.  `rejoin` parks at the
+        // rendezvous until a boundary grants it.
+        let hj = {
+            let mut jcfg = quick_cfg(epochs);
+            jcfg.join = true;
+            let (addr, mk) = (addr.clone(), &mk);
+            s.spawn(move || run_rank(2, n, jcfg, addr, mk))
+        };
+        let rec0 = h0.join().expect("rank 0 panicked");
+        let rec1 = h1.join().expect("rank 1 panicked");
+        let recj = hj.join().expect("joiner panicked");
+        (rec0, rec1, recj)
+    });
+
+    for (name, rec) in [("rank 0", &rec0), ("rank 1", &rec1), ("joiner", &recj)] {
+        assert!(!rec.diverged, "{name} diverged");
+        let s = summary(rec);
+        assert_eq!(s.live_mask, 0b111, "{name}: the final view must be whole again");
+        assert!(s.joins >= 1, "{name}: the admission must be on record");
+    }
+    assert_eq!(rec0.points.len(), epochs, "rank 0 must run the full schedule");
+    assert!(
+        rec0.points.last().unwrap().test_acc > 0.35,
+        "survivors should keep converging through the churn"
+    );
+
+    let (s0, s1, sj) = (summary(&rec0), summary(&rec1), summary(&recj));
+    assert_eq!(s0.evictions, 1, "rank 0 observed the one eviction");
+    assert_eq!(s1.evictions, 1, "rank 1 observed the one eviction");
+    assert_eq!(sj.evictions, 0, "the joiner entered after the eviction");
+    assert_eq!(s0.final_epoch, s1.final_epoch, "survivors must agree on the final view");
+    assert_eq!(s0.final_epoch, sj.final_epoch, "the joiner must land on the survivors' view");
+    assert!(s0.final_epoch >= 1, "the eviction (and rejoin) must have advanced the epoch");
+
+    // The joiner resumes at a granted epoch boundary strictly after the
+    // death, and from there its fleet-level curve is the survivors' curve.
+    assert!(!recj.points.is_empty(), "the joiner must train at least one epoch");
+    let first = recj.points[0].epoch;
+    assert!(
+        (2..=6).contains(&first),
+        "joiner resumed at epoch {first}, expected a boundary shortly after the kill"
+    );
+    assert_eq!(recj.points.last().unwrap().epoch, epochs - 1, "joiner finishes the schedule");
+    for p in &recj.points {
+        let q = &rec0.points[p.epoch];
+        assert_eq!(
+            p.train_loss.to_bits(),
+            q.train_loss.to_bits(),
+            "epoch {}: joiner loss differs from rank 0",
+            p.epoch
+        );
+        assert_eq!(
+            p.test_acc.to_bits(),
+            q.test_acc.to_bits(),
+            "epoch {}: joiner accuracy differs from rank 0",
+            p.epoch
+        );
+    }
+}
