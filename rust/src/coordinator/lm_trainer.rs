@@ -119,6 +119,7 @@ pub fn train_lm(
                 test_acc: -eval_loss, // higher-is-better slot holds -loss
                 cum_bits,
                 cum_seconds: t0.elapsed().as_secs_f64(),
+                wall_ms: t0.elapsed().as_millis() as u64,
             });
             if cfg.verbose {
                 println!(

@@ -16,6 +16,10 @@ pub struct EpochPoint {
     pub cum_bits: f64,
     /// Cumulative simulated wall-clock seconds; the x-axis of Figures 4/8.
     pub cum_seconds: f64,
+    /// *Measured* wall-clock milliseconds since the run started (as opposed
+    /// to `cum_seconds`, which is the paper-scale simulated timeline).
+    /// Additive field: records written before it existed read back as 0.
+    pub wall_ms: u64,
 }
 
 /// Wall-clock summary of one traced phase (see [`crate::obs::Phase`]),
@@ -164,6 +168,7 @@ impl RunRecord {
             ("test_acc", |p| p.test_acc),
             ("cum_bits", |p| p.cum_bits),
             ("cum_seconds", |p| p.cum_seconds),
+            ("wall_ms", |p| p.wall_ms as f64),
         ] {
             w.key(key).nums(&self.points.iter().map(f).collect::<Vec<_>>());
         }
@@ -172,11 +177,11 @@ impl RunRecord {
     }
 
     pub fn to_csv(&self) -> String {
-        let mut s = String::from("epoch,train_loss,test_acc,cum_bits,cum_seconds\n");
+        let mut s = String::from("epoch,train_loss,test_acc,cum_bits,cum_seconds,wall_ms\n");
         for p in &self.points {
             s.push_str(&format!(
-                "{},{},{},{},{}\n",
-                p.epoch, p.train_loss, p.test_acc, p.cum_bits, p.cum_seconds
+                "{},{},{},{},{},{}\n",
+                p.epoch, p.train_loss, p.test_acc, p.cum_bits, p.cum_seconds, p.wall_ms
             ));
         }
         s
@@ -232,6 +237,7 @@ mod tests {
                     test_acc: 0.3 * (e + 1) as f64,
                     cum_bits: 1e6 * (e + 1) as f64,
                     cum_seconds: 10.0 * (e + 1) as f64,
+                    wall_ms: 100 * (e as u64 + 1),
                 })
                 .collect(),
         }
@@ -244,6 +250,9 @@ mod tests {
         assert_eq!(j.get("optimizer").unwrap().as_str(), Some("cser"));
         assert_eq!(j.get("test_acc").unwrap().as_arr().unwrap().len(), 3);
         assert!((j.get("final_acc").unwrap().as_f64().unwrap() - 0.9).abs() < 1e-9);
+        let wall = j.get("wall_ms").unwrap().as_arr().unwrap();
+        assert_eq!(wall.len(), 3);
+        assert_eq!(wall[2].as_f64(), Some(300.0));
     }
 
     #[test]

@@ -13,6 +13,7 @@ pub enum Axis {
     Epoch,
     Seconds,
     Bits,
+    Wall,
     TestAcc,
     TrainLoss,
 }
@@ -23,6 +24,7 @@ impl Axis {
             Axis::Epoch => p.epoch as f64,
             Axis::Seconds => p.cum_seconds,
             Axis::Bits => p.cum_bits,
+            Axis::Wall => p.wall_ms as f64 / 1000.0,
             Axis::TestAcc => p.test_acc * 100.0,
             Axis::TrainLoss => p.train_loss,
         }
@@ -32,6 +34,7 @@ impl Axis {
             Axis::Epoch => "epoch",
             Axis::Seconds => "simulated training time (s)",
             Axis::Bits => "communicated bits (per worker)",
+            Axis::Wall => "wall-clock time (s)",
             Axis::TestAcc => "test accuracy (%)",
             Axis::TrainLoss => "training loss",
         }
@@ -44,6 +47,7 @@ impl Axis {
             "epoch" => Axis::Epoch,
             "seconds" | "time" => Axis::Seconds,
             "bits" | "comm" => Axis::Bits,
+            "wall" | "wall_ms" => Axis::Wall,
             "acc" | "test_acc" => Axis::TestAcc,
             "loss" | "train_loss" => Axis::TrainLoss,
             _ => return None,
@@ -273,6 +277,8 @@ pub fn load_records(path: &str) -> Result<Vec<RunRecord>, String> {
                 f("cum_bits")?,
                 f("cum_seconds")?,
             );
+            // Additive field: records written before wall_ms existed load as 0.
+            let wall = f("wall_ms").unwrap_or_else(|_| vec![0.0; ep.len()]);
             let points = (0..ep.len())
                 .map(|i| EpochPoint {
                     epoch: ep[i] as usize,
@@ -280,6 +286,7 @@ pub fn load_records(path: &str) -> Result<Vec<RunRecord>, String> {
                     test_acc: ta[i],
                     cum_bits: cb[i],
                     cum_seconds: cs[i],
+                    wall_ms: wall.get(i).copied().unwrap_or(0.0) as u64,
                 })
                 .collect();
             Ok(RunRecord {
@@ -322,6 +329,7 @@ mod tests {
                     test_acc: 0.08 * e as f64,
                     cum_bits: 1e7 * e as f64,
                     cum_seconds: 3.0 * e as f64,
+                    wall_ms: 250 * e as u64,
                 })
                 .collect(),
         }
@@ -362,6 +370,32 @@ mod tests {
         assert_eq!(loaded[0].optimizer, "SGD");
         assert_eq!(loaded[0].points.len(), 10);
         assert!((loaded[0].points[4].test_acc - 0.4).abs() < 1e-9);
+        assert_eq!(loaded[0].points[4].wall_ms, 1250);
+    }
+
+    #[test]
+    fn legacy_records_without_wall_ms_load_as_zero() {
+        let json = concat!(
+            r#"[{"name":"t","optimizer":"SGD","overall_rc":1.0,"lr":0.1,"seed":1,"#,
+            r#""diverged":false,"phases":[],"epoch":[0,1],"train_loss":[1.0,0.5],"#,
+            r#""test_acc":[0.1,0.2],"cum_bits":[8.0,16.0],"cum_seconds":[1.0,2.0]}]"#
+        );
+        let dir = std::env::temp_dir().join("cser_plot_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("legacy.json");
+        std::fs::write(&p, json).unwrap();
+        let loaded = load_records(p.to_str().unwrap()).unwrap();
+        assert_eq!(loaded[0].points.len(), 2);
+        assert!(loaded[0].points.iter().all(|pt| pt.wall_ms == 0));
+    }
+
+    #[test]
+    fn wall_axis_parses_and_scales_to_seconds() {
+        assert_eq!(Axis::parse("wall"), Some(Axis::Wall));
+        let p = fake("CSER").points[3];
+        assert!((Axis::Wall.value(&p) - 1.0).abs() < 1e-9);
+        let svg = svg_chart("acc vs wall", &[fake("CSER")], Axis::Wall, Axis::TestAcc);
+        assert!(svg.contains("wall-clock time (s)"));
     }
 
     #[test]

@@ -92,6 +92,25 @@ pub struct TrainCfg {
     /// the granted checkpoint blob bit-exactly, and enter the epoch loop
     /// at the granted step.
     pub join: bool,
+    /// Live telemetry for elastic TCP runs (`cser launch --metrics-addr`,
+    /// DESIGN.md §9): every rank records into the `obs::metrics` registry
+    /// and ships a delta snapshot to rank 0 at each epoch boundary
+    /// (`Tag::Metrics`); rank 0 merges the fleet view and serves it at
+    /// this address (Prometheus text at `/metrics`, `cser-metrics/v1`
+    /// JSON elsewhere — what `cser top` polls).  Implies `elastic`.
+    pub metrics_addr: Option<String>,
+    /// Adaptive censoring (`--adaptive-tau <base>`): at every epoch
+    /// boundary, re-derive the censoring threshold from the measured
+    /// backpressure instead of the launch-time constant — rank 0 from the
+    /// aggregated fleet view (`membership::censor_seed_from_fleet`), the
+    /// others from their own mirrored counters
+    /// (`membership::censor_seed_from_metrics`) — and install it via
+    /// `ErrorResetEngine::set_cadence(Cadence::Censored { tau0, gamma: 1 })`.
+    /// The censoring decision is per-worker-local, so per-rank thresholds
+    /// are protocol-safe (rank 0 accounts whatever frames arrive).
+    /// Requires a censorable plan (parameter-server-routed C2); implies
+    /// `elastic`.  `None` keeps the configured cadence untouched.
+    pub adaptive_tau: Option<f32>,
 }
 
 impl TrainCfg {
@@ -115,6 +134,8 @@ impl TrainCfg {
             round_deadline_ms: 1000,
             chaos: None,
             join: false,
+            metrics_addr: None,
+            adaptive_tau: None,
         }
     }
 }
@@ -204,6 +225,45 @@ fn trace_finish(cfg: &TrainCfg, rank: usize, peers: &[obs::PeerCounters]) -> Vec
     phases
 }
 
+/// Arm the metrics registry for a metered elastic run and, on rank 0,
+/// build the fleet view — additionally binding the exposition server when
+/// `--metrics-addr` is set (adaptive-τ-only runs aggregate without
+/// serving).  Returns `None` on other ranks and on unmetered runs.
+fn metrics_begin(
+    cfg: &TrainCfg,
+    job: &str,
+    rank: usize,
+    n: usize,
+) -> Option<std::sync::Arc<Mutex<obs::metrics::FleetView>>> {
+    if cfg.metrics_addr.is_none() && cfg.adaptive_tau.is_none() {
+        return None;
+    }
+    obs::metrics::reset();
+    obs::metrics::set_enabled(true);
+    if rank != 0 {
+        return None;
+    }
+    let view = std::sync::Arc::new(Mutex::new(obs::metrics::FleetView::new(job, n)));
+    if let Some(addr) = &cfg.metrics_addr {
+        match obs::metrics::spawn_exposition_server(addr, std::sync::Arc::clone(&view)) {
+            Ok(bound) => eprintln!(
+                "rank 0: serving metrics at http://{bound}/ (Prometheus at /metrics)"
+            ),
+            Err(e) => eprintln!("warning: rank 0: binding metrics server at {addr}: {e}"),
+        }
+    }
+    Some(view)
+}
+
+/// Disarm the registry at the end of a metered run.  The exposition
+/// thread keeps serving the final view until the process exits, so a
+/// scrape that races run teardown still sees the last boundary's state.
+fn metrics_finish(cfg: &TrainCfg) {
+    if cfg.metrics_addr.is_some() || cfg.adaptive_tau.is_some() {
+        obs::metrics::set_enabled(false);
+    }
+}
+
 /// Price one optimizer step's communication at paper scale (DESIGN.md §3)
 /// into the cumulative wire-bit and wall-clock counters — shared by the
 /// central and worker-resident training loops.
@@ -269,7 +329,12 @@ pub fn train_classifier(
     if let Backend::Tcp { bind, peers, rank } = &cfg.backend {
         let (bind, peers, rank) = (bind.clone(), *peers, *rank);
         let engine = opt.as_engine().expect("Backend::Tcp requires an engine optimizer");
-        if cfg.elastic || cfg.chaos.is_some() || cfg.join {
+        if cfg.elastic
+            || cfg.chaos.is_some()
+            || cfg.join
+            || cfg.metrics_addr.is_some()
+            || cfg.adaptive_tau.is_some()
+        {
             return train_classifier_tcp_elastic(model, train, test, engine, cfg, &bind, peers, rank);
         }
         return train_classifier_tcp(model, train, test, engine, cfg, &bind, peers, rank);
@@ -310,6 +375,7 @@ pub fn train_classifier(
     // from the contexts around each call (pointer moves, no copies).
     let mut grads: Vec<Vec<f32>> = vec![Vec::new(); n];
     let mut xbar = vec![0.0f32; d];
+    let run_start = std::time::Instant::now();
     let mut points = Vec::with_capacity(cfg.epochs);
     let mut diverged = false;
     let mut initial_loss = f64::NAN;
@@ -372,7 +438,8 @@ pub fn train_classifier(
             diverged = true;
             f64::NAN
         };
-        points.push(EpochPoint { epoch, train_loss, test_acc, cum_bits, cum_seconds });
+        let wall_ms = run_start.elapsed().as_millis() as u64;
+        points.push(EpochPoint { epoch, train_loss, test_acc, cum_bits, cum_seconds, wall_ms });
         if diverged {
             break 'outer;
         }
@@ -421,6 +488,7 @@ fn train_classifier_resident(
     });
 
     let mut xbar = vec![0.0f32; d];
+    let run_start = std::time::Instant::now();
     let mut points = Vec::with_capacity(cfg.epochs);
     let mut diverged = false;
     let mut initial_loss = f64::NAN;
@@ -460,7 +528,8 @@ fn train_classifier_resident(
             diverged = true;
             f64::NAN
         };
-        points.push(EpochPoint { epoch, train_loss, test_acc, cum_bits, cum_seconds });
+        let wall_ms = run_start.elapsed().as_millis() as u64;
+        points.push(EpochPoint { epoch, train_loss, test_acc, cum_bits, cum_seconds, wall_ms });
         if diverged {
             break;
         }
@@ -555,6 +624,7 @@ fn train_classifier_tcp(
     );
 
     let mut xbar = vec![0.0f32; d];
+    let run_start = std::time::Instant::now();
     let mut points = Vec::with_capacity(cfg.epochs);
     let mut diverged = false;
     let mut initial_loss = f64::NAN;
@@ -604,7 +674,8 @@ fn train_classifier_tcp(
             diverged = true;
             f64::NAN
         };
-        points.push(EpochPoint { epoch, train_loss, test_acc, cum_bits, cum_seconds });
+        let wall_ms = run_start.elapsed().as_millis() as u64;
+        points.push(EpochPoint { epoch, train_loss, test_acc, cum_bits, cum_seconds, wall_ms });
         if let Some(path) = &cfg.ckpt {
             if let Err(e) = Checkpoint::capture_engine(engine).save(path) {
                 eprintln!("warning: rank {rank}: checkpoint save failed: {e}");
@@ -674,6 +745,9 @@ fn train_classifier_tcp_elastic(
     let d = engine.dim();
     assert_eq!(d, model.dim());
     trace_begin(cfg);
+    let metrics_on = cfg.metrics_addr.is_some() || cfg.adaptive_tau.is_some();
+    let fleet = metrics_begin(cfg, &engine.name(), rank, n_peers);
+    let mut tracker = obs::metrics::DeltaTracker::new();
     let n = n_peers;
     let deadline = Duration::from_millis(cfg.round_deadline_ms.max(1));
     let iters_per_epoch = (train.len() / (cfg.batch_per_worker * n)).max(1);
@@ -754,6 +828,7 @@ fn train_classifier_tcp_elastic(
     });
 
     let mut xbar = vec![0.0f32; d];
+    let run_start = std::time::Instant::now();
     let mut points = Vec::with_capacity(cfg.epochs.saturating_sub(start_epoch));
     let mut diverged = false;
     let mut initial_loss = f64::NAN;
@@ -795,7 +870,8 @@ fn train_classifier_tcp_elastic(
             diverged = true;
             f64::NAN
         };
-        points.push(EpochPoint { epoch, train_loss, test_acc, cum_bits, cum_seconds });
+        let wall_ms = run_start.elapsed().as_millis() as u64;
+        points.push(EpochPoint { epoch, train_loss, test_acc, cum_bits, cum_seconds, wall_ms });
         if let Some(path) = &cfg.ckpt {
             if let Err(e) = Checkpoint::capture_engine(engine).save(path) {
                 eprintln!("warning: rank {rank}: checkpoint save failed: {e}");
@@ -844,6 +920,7 @@ fn train_classifier_tcp_elastic(
                 Err(e) => eprintln!("warning: rank 0: join poll failed: {e}"),
             }
         }
+        let mut just_joined = None;
         if let Some(tr) = el
             .epoch_boundary(round, admit)
             .unwrap_or_else(|e| panic!("rank {rank}: epoch boundary at step {round}: {e}"))
@@ -856,6 +933,7 @@ fn train_classifier_tcp_elastic(
             }
             if let Some(j) = tr.joined {
                 joins += 1;
+                just_joined = Some(j);
                 if rank != 0 {
                     // The joiner re-dialed this rank's data listener when
                     // the grant arrived; adopt the fresh stream.
@@ -869,12 +947,77 @@ fn train_classifier_tcp_elastic(
                 }
             }
         }
+
+        // ---- telemetry: ship this boundary's delta snapshot to rank 0,
+        // riding the control plane right behind the epoch broadcast ----
+        if metrics_on {
+            obs::metrics::sync_from_peers(&el.inner().per_peer);
+            obs::metrics::gauge_set(obs::metrics::Gauge::LiveRanks, el.live_count() as f64);
+            obs::metrics::gauge_set(obs::metrics::Gauge::EpochId, el.epoch().id() as f64);
+            obs::metrics::gauge_set(
+                obs::metrics::Gauge::CensorEvents,
+                el.censor_events() as f64,
+            );
+            let snap = tracker.snapshot(rank);
+            if rank == 0 {
+                let view = fleet.as_ref().expect("rank 0 owns the fleet view");
+                let mut v = view.lock().expect("fleet view");
+                v.merge(&snap);
+                let pending = el.pending_down();
+                let epoch_view = el.epoch();
+                for r in epoch_view.live_ranks() {
+                    // The joiner admitted *at* this boundary enters the
+                    // loop next epoch and ships nothing yet; pending-down
+                    // ranks are dead in all but name.
+                    if r == 0 || Some(r) == just_joined || (pending >> r) & 1 == 1 {
+                        continue;
+                    }
+                    // Inner transport on purpose: a missed metrics frame
+                    // is telemetry loss, not a censor event, and must not
+                    // pollute the ElasticSummary accounting.  A frame that
+                    // lands after the window is discarded as stale by the
+                    // per-link round check, so the data plane never sees it.
+                    match el.inner_mut().recv_deadline(r, round, Tag::Metrics, Some(deadline))
+                    {
+                        Ok(Some(m)) => match obs::metrics::decode_snapshot(&m) {
+                            Ok(s) => v.merge(&s),
+                            Err(e) => eprintln!(
+                                "warning: rank 0: metrics frame from rank {r}: {e}"
+                            ),
+                        },
+                        Ok(None) => {} // missed the window; the next delta covers it
+                        Err(_) => {}   // death is the membership plane's problem
+                    }
+                }
+            } else if let Err(e) =
+                el.send(0, round, Tag::Metrics, obs::metrics::encode_snapshot(&snap))
+            {
+                eprintln!("warning: rank {rank}: shipping metrics snapshot: {e}");
+            }
+        }
+
+        // ---- adaptive censoring: re-seed τ from measured backpressure —
+        // rank 0 from the aggregated fleet view, others from their own
+        // mirrored counters (per-rank τ divergence is protocol-safe: the
+        // censoring decision is local, and rank 0 accounts whatever
+        // frames actually arrive) ----
+        if let Some(base) = cfg.adaptive_tau {
+            let tau = match &fleet {
+                Some(view) => crate::membership::censor_seed_from_fleet(
+                    &view.lock().expect("fleet view"),
+                    base,
+                ),
+                None => crate::membership::censor_seed_from_metrics(base),
+            };
+            engine.set_cadence(crate::engine::Cadence::Censored { tau0: tau, gamma: 1.0 });
+        }
     }
 
     let final_view = el.epoch();
     let live_mask = final_view.live_mask() & !el.pending_down();
     let censor_events = el.censor_events();
     let tp = el.into_inner();
+    metrics_finish(cfg);
     RunRecord {
         name: String::new(),
         optimizer: engine.name(),

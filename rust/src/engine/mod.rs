@@ -706,6 +706,7 @@ impl ErrorResetEngine {
                 match round_rule {
                     RoundRule::ErrorSync { c1, h } if t % *h == 0 => {
                         stats.synced = true;
+                        note_residual_pre(&self.workers[0].e);
                         if c1.globally_synchronized() {
                             match pipeline.as_mut() {
                                 None => {
@@ -780,6 +781,7 @@ impl ErrorResetEngine {
                                 cser_reset_post_general(w);
                             }
                         }
+                        note_residual_post(&self.workers[0].e);
                     }
                     RoundRule::ModelSync { c1, h } if t % *h == 0 => {
                         let mut xs = take_field(&mut self.workers, |w| &mut w.x);
@@ -799,15 +801,82 @@ impl ErrorResetEngine {
     }
 }
 
+/// Gauge the error-reset residual norm just before C1 rewrites it.
+/// Worker 0 is representative: every worker resets on the same rounds,
+/// and `cser top` wants one trajectory per rank, not per thread.
+fn note_residual_pre(e: &[f32]) {
+    if !obs::metrics::enabled() {
+        return;
+    }
+    obs::metrics::gauge_set(obs::metrics::Gauge::ResidualNormPre, math::norm2(e).sqrt());
+}
+
+/// Gauge the residual norm left after the reset and count the reset —
+/// the pre/post pair is the paper's headline mechanism made observable.
+fn note_residual_post(e: &[f32]) {
+    if !obs::metrics::enabled() {
+        return;
+    }
+    obs::metrics::gauge_set(obs::metrics::Gauge::ResidualNormPost, math::norm2(e).sqrt());
+    obs::metrics::inc(obs::metrics::Counter::ErrorResets, 1);
+}
+
+/// Fold one step's [`RoundStats`] into the metrics registry: step count,
+/// accounted bits on both paths, the dense 32·d reference on synced
+/// rounds (the compressed-bits ratio's denominator), and the step
+/// duration histogram.
+fn note_step_stats(stats: &RoundStats, d: usize, step_ns: u64) {
+    use obs::metrics::{inc, observe_step_ns, Counter};
+    if !obs::metrics::enabled() {
+        return;
+    }
+    inc(Counter::StepsTotal, 1);
+    inc(Counter::GradBits, stats.grad_bits);
+    inc(Counter::ModelBits, stats.model_bits);
+    if stats.synced {
+        inc(Counter::RoundsSynced, 1);
+        inc(Counter::DenseRefBits, 32 * d as u64);
+    }
+    observe_step_ns(step_ns);
+}
+
+impl ErrorResetEngine {
+    /// Swap the round cadence mid-run (the adaptive censoring path:
+    /// `Cadence::Censored` with a threshold derived from the aggregated
+    /// backpressure gauge instead of the launch-time constant).  The new
+    /// plan is re-validated; the bucketed pipeline only supports
+    /// `Cadence::Always`, so swapping under a pipeline is rejected the
+    /// same way construction would have.
+    pub fn set_cadence(&mut self, cadence: plan::Cadence) {
+        assert!(
+            self.pipeline.is_none() || matches!(cadence, plan::Cadence::Always),
+            "bucketed pipeline supports Cadence::Always only"
+        );
+        self.plan.cadence = cadence;
+        self.plan.validate();
+    }
+}
+
 impl DistOptimizer for ErrorResetEngine {
     fn step(&mut self, grads: &[Vec<f32>], eta: f32) -> RoundStats {
         debug_assert_eq!(grads.len(), self.workers.len());
         self.t += 1;
+        let metrics_on = obs::metrics::enabled();
+        let step_t0 = if metrics_on { obs::now_ns() } else { 0 };
+        if metrics_on {
+            if let Some(g) = grads.first() {
+                obs::metrics::gauge_set(obs::metrics::Gauge::GradNorm, math::norm2(g).sqrt());
+            }
+        }
         // Taken out so bucketed dispatch can hold `&mut SyncPipeline`
         // alongside the worker borrows; restored on every exit path.
         let mut pipeline = self.pipeline.take();
         let stats = self.step_inner(grads, eta, &mut pipeline);
         self.pipeline = pipeline;
+        if metrics_on {
+            let d = grads.first().map_or(0, |g| g.len());
+            note_step_stats(&stats, d, obs::now_ns().saturating_sub(step_t0));
+        }
         stats
     }
 
@@ -889,14 +958,22 @@ fn drive_worker(
     let mut pipe = buckets.map(PipelineCtx::new);
     let mut t = t0;
     let mut reports = Vec::with_capacity(steps);
+    let metrics_on = obs::metrics::enabled();
     for _ in 0..steps {
         t += 1;
+        let step_t0 = if metrics_on { obs::now_ns() } else { 0 };
         let loss = {
             let _s = obs::Span::enter(Phase::GradCompute);
             grad(w.id, &w.x, &mut w.g) as f64
         };
+        if metrics_on {
+            obs::metrics::gauge_set(obs::metrics::Gauge::GradNorm, math::norm2(&w.g).sqrt());
+        }
         let (stats, mean_loss, stop) =
             peer_step(plan, beta, tp, w, t, eta, loss, stop_loss, d, &mut pipe)?;
+        if metrics_on {
+            note_step_stats(&stats, d, obs::now_ns().saturating_sub(step_t0));
+        }
         reports.push(StepReport { loss: mean_loss.unwrap_or(loss), stats });
         if stop {
             break;
@@ -1037,6 +1114,7 @@ fn peer_step(
             match round_rule {
                 RoundRule::ErrorSync { c1, h } if t % *h == 0 => {
                     stats.synced = true;
+                    note_residual_pre(&w.e);
                     if c1.globally_synchronized() {
                         match pipe.as_mut() {
                             None => {
@@ -1107,6 +1185,7 @@ fn peer_step(
                             cser_reset_post_general(w);
                         }
                     }
+                    note_residual_post(&w.e);
                 }
                 RoundRule::ModelSync { c1, h } if t % *h == 0 => {
                     let info = {

@@ -109,6 +109,7 @@ mod tests {
                     test_acc: acc * e as f64 / 10.0,
                     cum_bits: 1e9 * e as f64,
                     cum_seconds: secs * e as f64 / 10.0,
+                    wall_ms: (secs * e as f64 * 100.0) as u64,
                 })
                 .collect(),
         }

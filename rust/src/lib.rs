@@ -22,8 +22,15 @@
 //!   for resident threads and the persistent `Threaded` pool, or real TCP
 //!   sockets for `cser launch`-style multi-process jobs), the
 //!   observability layer ([`obs`]: zero-alloc per-thread phase tracing
-//!   with Chrome-trace export and per-peer wire counters, off by default
-//!   and costing one flag check per span site when disabled), the network
+//!   with Chrome-trace export and per-peer wire counters, plus the
+//!   run-wide metrics plane — a static lock-free counter/gauge/histogram
+//!   registry whose per-rank delta snapshots ride the epoch boundary to
+//!   rank 0 for Prometheus/JSON exposition and the live `cser top` view;
+//!   both off by default, costing one flag check per site when
+//!   disabled), the elastic membership control plane ([`membership`]:
+//!   epoch-based eviction/rejoin and the censoring-rule threshold
+//!   derivations, including the metrics-fed `--adaptive-tau` loop), the
+//!   network
 //!   cost/accounting substrate ([`network`]), data sharding ([`data`]), a
 //!   fast pure-Rust model zoo for the paper's sweeps ([`models`]), the PJRT
 //!   runtime that executes AOT-compiled JAX/Pallas artifacts ([`runtime`]),

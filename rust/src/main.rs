@@ -15,18 +15,29 @@
 //! cser launch   [--workers N] [--opt ...] [--epochs N] [--ckpt-dir D]
 //!               [--buckets K] [--trace D] [--elastic] [--deadline-ms T]
 //!               [--chaos kill:<r>@<s>,slow:<r>:<ms>]
+//!               [--metrics-addr H:P] [--adaptive-tau B]
 //!                                          spawn N worker processes over
 //!                                          loopback TCP, print the RunRecord
 //!                                          (K > 1: bucketed sync pipeline;
 //!                                          --trace: per-rank phase traces;
 //!                                          --elastic/--chaos: epoch-based
-//!                                          membership + fault injection)
+//!                                          membership + fault injection;
+//!                                          --metrics-addr: rank 0 serves the
+//!                                          fleet metrics view over HTTP;
+//!                                          --adaptive-tau: censor threshold
+//!                                          follows the backpressure gauge)
 //! cser worker   --rendezvous H:P --rank R --workers N [--join] [training flags]
 //!                                          join a multi-process job as one rank
 //!                                          (--join: rejoin a running elastic
 //!                                          job from its checkpoint grant)
-//! cser trace    summarize --trace D        merge per-rank traces into a
+//! cser top      --addr H:P [--once] [--interval MS]
+//!                                          refreshing per-rank terminal table
+//!                                          from a --metrics-addr endpoint
+//! cser trace    summarize --trace D [--strict]
+//!                                          merge per-rank traces into a
 //!                                          Chrome trace JSON + print summary
+//!                                          (--strict: exit nonzero if any
+//!                                          rank dropped trace events)
 //! cser bench    [--quick] [--out BENCH_engine.json]
 //!                                          perf suite: step/grad throughput +
 //!                                          bits/step, machine-readable JSON
@@ -45,14 +56,15 @@ use cser::util::cli::Args;
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     if argv.is_empty() {
-        eprintln!("usage: cser <quickstart|table2|table4|curves|timecomm|ablation|theory|bench|train-lm|launch|worker|trace|kernel-check|plot> [flags]");
+        eprintln!("usage: cser <quickstart|table2|table4|curves|timecomm|ablation|theory|bench|train-lm|launch|worker|top|trace|kernel-check|plot> [flags]");
         std::process::exit(2);
     }
     let known = [
         "suite", "seeds", "quick", "rc", "preset", "opt", "steps", "workers", "lr", "beta",
         "eval-every", "seed", "artifacts", "h", "rc1", "rc2", "x", "y", "out", "rendezvous",
         "rank", "epochs", "batch", "record", "ckpt", "ckpt-dir", "buckets", "trace", "chaos",
-        "elastic", "deadline-ms", "join",
+        "elastic", "deadline-ms", "join", "metrics-addr", "adaptive-tau", "strict", "addr",
+        "once", "interval",
     ];
     let args = match Args::parse(argv, &known) {
         Ok(a) => a,
@@ -243,6 +255,7 @@ fn run(cmd: &str, args: &Args) -> anyhow::Result<()> {
         }
         "worker" => worker(args),
         "launch" => launch(args),
+        "top" => top(args),
         "trace" => trace_cmd(args),
         "kernel-check" => kernel_check(args),
         "plot" => plot(args),
@@ -282,6 +295,21 @@ fn dist_train_cfg(args: &Args) -> anyhow::Result<cser::coordinator::TrainCfg> {
     }
     cfg.join = args.bool("join", false)?;
     if cfg.join {
+        cfg.elastic = true;
+    }
+    // Live telemetry (DESIGN.md §9): --metrics-addr has rank 0 aggregate
+    // per-rank metric snapshots and serve them over HTTP; --adaptive-tau
+    // re-derives the censoring threshold from the fleet's backpressure
+    // counters at every epoch boundary.  Both ride the elastic control
+    // plane, so either flag opts the run into it.
+    cfg.metrics_addr = args.opt_str("metrics-addr");
+    cfg.adaptive_tau = match args.opt_str("adaptive-tau") {
+        Some(s) => Some(
+            s.parse::<f32>().map_err(|e| anyhow::anyhow!("bad --adaptive-tau '{s}': {e}"))?,
+        ),
+        None => None,
+    };
+    if cfg.metrics_addr.is_some() || cfg.adaptive_tau.is_some() {
         cfg.elastic = true;
     }
     Ok(cfg)
@@ -392,7 +420,7 @@ fn launch(args: &Args) -> anyhow::Result<()> {
             .arg(&record);
         for key in [
             "opt", "rc1", "rc2", "h", "epochs", "batch", "lr", "beta", "seed", "buckets", "trace",
-            "chaos", "elastic", "deadline-ms",
+            "chaos", "elastic", "deadline-ms", "metrics-addr", "adaptive-tau",
         ] {
             if let Some(v) = args.opt_str(key) {
                 cmd.arg(format!("--{key}")).arg(v);
@@ -407,6 +435,9 @@ fn launch(args: &Args) -> anyhow::Result<()> {
             .map_err(|e| anyhow::anyhow!("spawning worker {rank} ({}): {e}", exe.display()))?;
         children.push((rank, child));
         records.push(record);
+    }
+    if let Some(ma) = args.opt_str("metrics-addr") {
+        eprintln!("launch: rank 0 serves metrics at http://{ma}/ — watch with: cser top --addr {ma}");
     }
 
     let mut failures = Vec::new();
@@ -451,16 +482,107 @@ fn launch(args: &Args) -> anyhow::Result<()> {
 /// Merge the per-rank traces a `--trace` run wrote: emit `<dir>/trace.json`
 /// (Chrome trace-event format, loadable in Perfetto / chrome://tracing with
 /// one track per rank×thread) and print the per-rank, per-phase summary.
+/// Ring-buffer overflow drops events silently at record time, so any loss is
+/// surfaced here as a per-rank warning — and fails the command under
+/// `--strict`, for CI jobs that must not mistake a truncated trace for a
+/// quiet run.
 fn trace_cmd(args: &Args) -> anyhow::Result<()> {
+    use cser::util::json::Json;
     let sub = args.positional().get(1).cloned().unwrap_or_else(|| "summarize".into());
     anyhow::ensure!(sub == "summarize", "unknown trace subcommand '{sub}' (expected 'summarize')");
     let dir = args
         .opt_str("trace")
         .ok_or_else(|| anyhow::anyhow!("cser trace summarize requires --trace <dir>"))?;
+    let strict = args.bool("strict", false)?;
     let summary = cser::obs::export::summarize(std::path::Path::new(&dir))
         .map_err(|e| anyhow::anyhow!("summarizing {dir}: {e}"))?;
     println!("{summary}");
+    let doc = Json::parse(&summary)
+        .map_err(|e| anyhow::anyhow!("internal: summary JSON unparseable: {e}"))?;
+    let mut total_dropped = 0u64;
+    if let Some(ranks) = doc.get("ranks").and_then(Json::as_arr) {
+        for r in ranks {
+            let rank = r.get("rank").and_then(Json::as_f64).unwrap_or(-1.0) as i64;
+            let dropped = r.get("dropped").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+            if dropped > 0 {
+                eprintln!(
+                    "warning: rank {rank} dropped {dropped} trace events (ring overflow) — \
+                     the summary undercounts that rank"
+                );
+                total_dropped += dropped;
+            }
+        }
+    }
+    anyhow::ensure!(
+        !strict || total_dropped == 0,
+        "--strict: {total_dropped} trace events dropped across ranks"
+    );
     Ok(())
+}
+
+/// Live fleet dashboard: poll the `cser-metrics/v1` endpoint rank 0 serves
+/// under `cser launch --metrics-addr` and render one row per rank.  `--once`
+/// prints a single table and exits (for scripts and CI); otherwise the view
+/// refreshes every `--interval` ms until the endpoint goes away.
+fn top(args: &Args) -> anyhow::Result<()> {
+    use cser::util::json::Json;
+    let addr = args.opt_str("addr").ok_or_else(|| {
+        anyhow::anyhow!("cser top requires --addr <host:port> (see cser launch --metrics-addr)")
+    })?;
+    let once = args.bool("once", false)?;
+    let interval = args.u64("interval", 1000)?;
+    let mut rendered = false;
+    loop {
+        let body = match cser::obs::metrics::http_get(&addr, "/json") {
+            Ok(b) => b,
+            // A vanished endpoint after at least one render means the run
+            // finished; before the first render it is a usage error.
+            Err(e) if rendered => {
+                println!("cser top: {addr} went away ({e}) — run finished");
+                return Ok(());
+            }
+            Err(e) => anyhow::bail!("polling {addr}: {e}"),
+        };
+        let doc = Json::parse(&body)
+            .map_err(|e| anyhow::anyhow!("{addr} returned unparseable JSON: {e}"))?;
+        let schema = doc.get("schema").and_then(Json::as_str).unwrap_or("");
+        anyhow::ensure!(schema == "cser-metrics/v1", "unexpected schema '{schema}' from {addr}");
+        if !once {
+            // ANSI clear-screen + home, so the table refreshes in place.
+            print!("\x1b[2J\x1b[H");
+        }
+        let job = doc.get("job").and_then(Json::as_str).unwrap_or("?");
+        println!("cser top — job {job} @ {addr}");
+        println!(
+            "{:>4} {:>8} {:>8} {:>11} {:>11} {:>9} {:>9} {:>5} {:>11}",
+            "rank", "steps", "step/s", "bits/s", "resid", "p50(us)", "censored", "live", "blocked(ms)"
+        );
+        let num = |j: &Json, k: &str| j.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+        let nested = |j: &Json, o: &str, k: &str| {
+            j.get(o).and_then(|c| c.get(k)).and_then(Json::as_f64).unwrap_or(0.0)
+        };
+        if let Some(ranks) = doc.get("ranks").and_then(Json::as_arr) {
+            for rv in ranks {
+                println!(
+                    "{:>4} {:>8.0} {:>8.1} {:>11.3e} {:>11.4e} {:>9.1} {:>9.0} {:>5.0} {:>11.1}",
+                    num(rv, "rank") as i64,
+                    nested(rv, "counters", "steps_total"),
+                    num(rv, "step_rate"),
+                    num(rv, "bits_per_s"),
+                    nested(rv, "gauges", "residual_norm_post"),
+                    num(rv, "step_p50_ns") / 1e3,
+                    nested(rv, "counters", "censored_uploads_total"),
+                    nested(rv, "gauges", "live_ranks"),
+                    num(rv, "backpressure_ns") / 1e6,
+                );
+            }
+        }
+        rendered = true;
+        if once {
+            return Ok(());
+        }
+        std::thread::sleep(std::time::Duration::from_millis(interval));
+    }
 }
 
 /// Tiny end-to-end smoke: artifacts + PJRT + CSER in a few seconds.

@@ -356,6 +356,31 @@ pub fn censor_seed(peers: &[PeerCounters], base: f32) -> f32 {
     (base as f64 * per_frame_us.sqrt()) as f32
 }
 
+/// [`censor_seed`] over this rank's *live* backpressure view: the per-peer
+/// counters the trainer mirrored into the metrics registry at the last
+/// round boundary (`obs::metrics::sync_from_peers`).  This is the
+/// adaptive-censoring path — the threshold follows the run instead of
+/// being fixed at launch.  Returns `base`'s scaling of whatever the
+/// registry holds; zero (censoring off) while the registry is empty or
+/// disabled, so enabling adaptivity never censors before the first
+/// boundary ships counters.
+pub fn censor_seed_from_metrics(base: f32) -> f32 {
+    censor_seed(&crate::obs::metrics::peer_counters(), base)
+}
+
+/// [`censor_seed`] over rank 0's aggregated fleet view: sums the
+/// backpressure every rank reported via `Tag::Metrics` snapshots, so the
+/// coordinator's threshold reflects fleet-wide congestion, not just its
+/// own links.  Pure — safe to call from tests without touching the
+/// process-global registry.
+pub fn censor_seed_from_fleet(fleet: &crate::obs::metrics::FleetView, base: f32) -> f32 {
+    let mut all = Vec::new();
+    for (_, v) in fleet.ranks() {
+        all.extend_from_slice(&v.peers);
+    }
+    censor_seed(&all, base)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -477,5 +502,38 @@ mod tests {
         let hi = censor_seed(&[busy(9_000_000)], 0.5);
         assert!(lo > 0.0);
         assert!((hi / lo - 3.0).abs() < 1e-5, "sqrt scaling: {hi} vs {lo}");
+    }
+
+    #[test]
+    fn censor_seed_from_fleet_matches_flat_counter_list() {
+        use crate::obs::metrics::{FleetView, HistDelta, MetricsSnapshot};
+        // Two ranks report backpressure via Tag::Metrics snapshots; the
+        // fleet-derived threshold must equal censor_seed over the union
+        // of their per-peer counters.  An empty view censors nothing.
+        assert_eq!(censor_seed_from_fleet(&FleetView::new("t", 2), 0.5), 0.0);
+        let peers_of = |ns| {
+            vec![
+                PeerCounters::default(),
+                PeerCounters { frames_sent: 50, blocked_send_ns: ns, ..Default::default() },
+            ]
+        };
+        let mut view = FleetView::new("t", 2);
+        let mut all = Vec::new();
+        for (rank, ns) in [(0u32, 2_000_000u64), (1, 8_000_000)] {
+            let peers = peers_of(ns);
+            all.extend_from_slice(&peers);
+            view.merge(&MetricsSnapshot {
+                rank,
+                seq: 1,
+                uptime_ms: 10,
+                counters: [0; 7],
+                gauges: [0.0; 6],
+                hist: HistDelta::empty(),
+                peers,
+            });
+        }
+        let from_fleet = censor_seed_from_fleet(&view, 0.5);
+        assert!(from_fleet > 0.0);
+        assert_eq!(from_fleet, censor_seed(&all, 0.5));
     }
 }

@@ -1,0 +1,1138 @@
+//! Run-wide metrics registry and the live telemetry plane (DESIGN.md §9).
+//!
+//! Where [`super::recorder`] answers "where did wall time go" *after* a
+//! run, this module answers "is the algorithm healthy" *during* one: how
+//! fast each rank steps, how large the error-reset residual is before and
+//! after each reset, what fraction of dense bits the compressors actually
+//! ship, who is censored, and how much backpressure every link carries.
+//!
+//! The registry follows the recorder's two hard contracts:
+//!
+//! * **one relaxed load when disabled** — every recording call checks
+//!   [`enabled`] first and touches nothing else when it is off;
+//! * **no allocation when enabled** — all storage is `static` atomics
+//!   (counters, gauge bit-patterns, one log2 step-duration histogram
+//!   reusing [`super::stats::PhaseStats`]'s binning, and a
+//!   `[[u64; 5]; 64]` lane array mirroring the transports'
+//!   [`PeerCounters`]).  `rust/tests/hotpath_alloc.rs` pins both.
+//!
+//! The plane on top of the registry:
+//!
+//! * [`DeltaTracker::snapshot`] turns the registry into a
+//!   [`MetricsSnapshot`] of *deltas* (counters/histogram) and *absolutes*
+//!   (gauges, carried with a per-rank sequence number);
+//! * snapshots travel rank → rank 0 as `Tag::Metrics` frames
+//!   ([`encode_snapshot`]/[`decode_snapshot`]: plain u64 words, so the
+//!   frame is self-describing and byte-exact);
+//! * rank 0 folds them into a [`FleetView`] — counter deltas add (order-
+//!   independent and associative over disjoint snapshot sets; see
+//!   [`FleetView::merge`]/[`FleetView::absorb`]), gauges resolve by
+//!   highest sequence number;
+//! * [`spawn_exposition_server`] serves the view over a std
+//!   `TcpListener` as Prometheus text (`GET /metrics`) and as a
+//!   `cser-metrics/v1` JSON document (anything else); `cser top` polls
+//!   the JSON endpoint.
+
+use super::stats::{PhaseStats, BINS};
+use super::PeerCounters;
+use crate::transport::wire::WireMsg;
+use crate::util::json::JsonWriter;
+use std::fmt::Write as _;
+use std::io::{Read as _, Write as _};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Largest fleet a snapshot can describe (mirrors `membership::MAX_RANKS`;
+/// the per-peer lane array is sized by it).
+pub const MAX_PEERS: usize = 64;
+
+/// Fields per peer lane, in [`PeerCounters`] declaration order.
+const PEER_FIELDS: usize = 5;
+
+/// Monotone counters.  Static IDs: the discriminant is the storage index,
+/// so recording is a single `fetch_add` into a fixed slot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Counter {
+    /// Optimizer steps executed by this rank.
+    StepsTotal = 0,
+    /// Steps on which a data-plane collective ran (`RoundStats::synced`).
+    RoundsSynced = 1,
+    /// Accounted per-worker gradient-path upload bits.
+    GradBits = 2,
+    /// Accounted per-worker model/error-path upload bits.
+    ModelBits = 3,
+    /// Dense reference bits (32·d per synced round): the denominator of
+    /// the compressed-bits ratio.
+    DenseRefBits = 4,
+    /// Uploads this worker dropped under the censoring cadence.
+    CensoredUploads = 5,
+    /// Error-reset rounds executed (C1 fired).
+    ErrorResets = 6,
+}
+
+impl Counter {
+    pub const COUNT: usize = 7;
+    pub const ALL: [Counter; Counter::COUNT] = [
+        Counter::StepsTotal,
+        Counter::RoundsSynced,
+        Counter::GradBits,
+        Counter::ModelBits,
+        Counter::DenseRefBits,
+        Counter::CensoredUploads,
+        Counter::ErrorResets,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Counter::StepsTotal => "steps_total",
+            Counter::RoundsSynced => "rounds_synced_total",
+            Counter::GradBits => "grad_bits_total",
+            Counter::ModelBits => "model_bits_total",
+            Counter::DenseRefBits => "dense_ref_bits_total",
+            Counter::CensoredUploads => "censored_uploads_total",
+            Counter::ErrorResets => "error_resets_total",
+        }
+    }
+}
+
+/// Last-value gauges (f64 bit patterns in the registry; shipped absolute,
+/// resolved by sequence number on merge).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Gauge {
+    /// ℓ2 norm of this rank's latest local gradient.
+    GradNorm = 0,
+    /// ℓ2 norm of the residual error immediately before the last reset.
+    ResidualNormPre = 1,
+    /// ℓ2 norm of the residual error immediately after the last reset.
+    ResidualNormPost = 2,
+    /// Live ranks under the current membership epoch.
+    LiveRanks = 3,
+    /// Current membership epoch id.
+    EpochId = 4,
+    /// Censor events absorbed so far (`membership::Elastic`): deaths plus
+    /// deadline misses, mirrored from the control plane each boundary.
+    CensorEvents = 5,
+}
+
+impl Gauge {
+    pub const COUNT: usize = 6;
+    pub const ALL: [Gauge; Gauge::COUNT] = [
+        Gauge::GradNorm,
+        Gauge::ResidualNormPre,
+        Gauge::ResidualNormPost,
+        Gauge::LiveRanks,
+        Gauge::EpochId,
+        Gauge::CensorEvents,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Gauge::GradNorm => "grad_norm",
+            Gauge::ResidualNormPre => "residual_norm_pre",
+            Gauge::ResidualNormPost => "residual_norm_post",
+            Gauge::LiveRanks => "live_ranks",
+            Gauge::EpochId => "epoch_id",
+            Gauge::CensorEvents => "censor_events",
+        }
+    }
+}
+
+// --- the registry -----------------------------------------------------------
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+/// `obs::now_ns` at the moment the registry was enabled (uptime base).
+static ENABLED_AT_NS: AtomicU64 = AtomicU64::new(0);
+static COUNTERS: [AtomicU64; Counter::COUNT] =
+    [const { AtomicU64::new(0) }; Counter::COUNT];
+static GAUGES: [AtomicU64; Gauge::COUNT] = [const { AtomicU64::new(0) }; Gauge::COUNT];
+static HIST_COUNT: AtomicU64 = AtomicU64::new(0);
+static HIST_TOTAL_NS: AtomicU64 = AtomicU64::new(0);
+static HIST_MIN_NS: AtomicU64 = AtomicU64::new(u64::MAX);
+static HIST_MAX_NS: AtomicU64 = AtomicU64::new(0);
+static HIST_BINS: [AtomicU64; BINS] = [const { AtomicU64::new(0) }; BINS];
+/// Mirrored transport [`PeerCounters`], one lane of [`PEER_FIELDS`] words
+/// per remote rank ([`sync_from_peers`] stores absolutes).
+static PEER_LANES: [[AtomicU64; PEER_FIELDS]; MAX_PEERS] =
+    [const { [const { AtomicU64::new(0) }; PEER_FIELDS] }; MAX_PEERS];
+static N_PEERS: AtomicU64 = AtomicU64::new(0);
+
+/// Is metrics recording on?  One relaxed load — the only cost every
+/// instrumentation site pays when the registry is disabled.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn the registry on/off.  Enabling pins the shared observability
+/// epoch (so `obs::now_ns` is valid even when tracing itself stays off)
+/// and records the uptime base.
+pub fn set_enabled(on: bool) {
+    if on {
+        super::recorder::pin_epoch();
+        ENABLED_AT_NS.store(super::now_ns(), Ordering::Relaxed);
+    }
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Milliseconds since the registry was (last) enabled; 0 while disabled.
+pub fn uptime_ms() -> u64 {
+    if !enabled() {
+        return 0;
+    }
+    super::now_ns().saturating_sub(ENABLED_AT_NS.load(Ordering::Relaxed)) / 1_000_000
+}
+
+/// Add `by` to a counter.  No-op (one relaxed load) while disabled.
+#[inline]
+pub fn inc(c: Counter, by: u64) {
+    if !enabled() {
+        return;
+    }
+    COUNTERS[c as usize].fetch_add(by, Ordering::Relaxed);
+}
+
+/// Set a gauge.  No-op (one relaxed load) while disabled.
+#[inline]
+pub fn gauge_set(g: Gauge, v: f64) {
+    if !enabled() {
+        return;
+    }
+    GAUGES[g as usize].store(v.to_bits(), Ordering::Relaxed);
+}
+
+/// Record one step duration into the log2 histogram (bins shared with
+/// [`PhaseStats`]).  No-op (one relaxed load) while disabled.
+#[inline]
+pub fn observe_step_ns(dur_ns: u64) {
+    if !enabled() {
+        return;
+    }
+    HIST_COUNT.fetch_add(1, Ordering::Relaxed);
+    HIST_TOTAL_NS.fetch_add(dur_ns, Ordering::Relaxed);
+    HIST_MIN_NS.fetch_min(dur_ns, Ordering::Relaxed);
+    HIST_MAX_NS.fetch_max(dur_ns, Ordering::Relaxed);
+    HIST_BINS[PhaseStats::bin_index(dur_ns)].fetch_add(1, Ordering::Relaxed);
+}
+
+/// Mirror the transports' per-peer wire counters into the registry
+/// (absolute stores; the transports keep cumulative counts).  Called at
+/// round boundaries, never inside a collective.
+pub fn sync_from_peers(peers: &[PeerCounters]) {
+    if !enabled() {
+        return;
+    }
+    let n = peers.len().min(MAX_PEERS);
+    N_PEERS.store(n as u64, Ordering::Relaxed);
+    for (lane, c) in PEER_LANES.iter().zip(peers.iter().take(n)) {
+        lane[0].store(c.frames_sent, Ordering::Relaxed);
+        lane[1].store(c.payload_bits_sent, Ordering::Relaxed);
+        lane[2].store(c.blocked_send_ns, Ordering::Relaxed);
+        lane[3].store(c.frames_received, Ordering::Relaxed);
+        lane[4].store(c.payload_bits_received, Ordering::Relaxed);
+    }
+}
+
+/// Read the mirrored per-peer counters back out (one slot per remote rank
+/// as of the last [`sync_from_peers`]) — the input `membership::
+/// censor_seed_from_metrics` aggregates over.
+pub fn peer_counters() -> Vec<PeerCounters> {
+    let n = N_PEERS.load(Ordering::Relaxed) as usize;
+    PEER_LANES
+        .iter()
+        .take(n)
+        .map(|lane| PeerCounters {
+            frames_sent: lane[0].load(Ordering::Relaxed),
+            payload_bits_sent: lane[1].load(Ordering::Relaxed),
+            blocked_send_ns: lane[2].load(Ordering::Relaxed),
+            frames_received: lane[3].load(Ordering::Relaxed),
+            payload_bits_received: lane[4].load(Ordering::Relaxed),
+        })
+        .collect()
+}
+
+/// Zero the whole registry (counters, gauges, histogram, peer lanes).
+/// Leaves the enabled flag alone; callers must ensure recording threads
+/// are quiescent (between runs / bench sections).
+pub fn reset() {
+    for c in &COUNTERS {
+        c.store(0, Ordering::Relaxed);
+    }
+    for g in &GAUGES {
+        g.store(0, Ordering::Relaxed);
+    }
+    HIST_COUNT.store(0, Ordering::Relaxed);
+    HIST_TOTAL_NS.store(0, Ordering::Relaxed);
+    HIST_MIN_NS.store(u64::MAX, Ordering::Relaxed);
+    HIST_MAX_NS.store(0, Ordering::Relaxed);
+    for b in &HIST_BINS {
+        b.store(0, Ordering::Relaxed);
+    }
+    for lane in &PEER_LANES {
+        for f in lane {
+            f.store(0, Ordering::Relaxed);
+        }
+    }
+    N_PEERS.store(0, Ordering::Relaxed);
+}
+
+// --- snapshots and deltas ---------------------------------------------------
+
+/// Step-duration histogram section of a snapshot or view: `count`,
+/// `total_ns`, and the bins are deltas/sums; `min_ns`/`max_ns` are
+/// absolutes folded by min/max (`u64::MAX`/0 when empty).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HistDelta {
+    pub count: u64,
+    pub total_ns: u64,
+    pub min_ns: u64,
+    pub max_ns: u64,
+    pub bins: [u64; BINS],
+}
+
+impl HistDelta {
+    pub fn empty() -> HistDelta {
+        HistDelta { count: 0, total_ns: 0, min_ns: u64::MAX, max_ns: 0, bins: [0; BINS] }
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.total_ns as f64 / self.count as f64
+        }
+    }
+
+    /// Histogram quantile with [`PhaseStats`] semantics (bin midpoint of
+    /// the `ceil(q·count)`-th sample, clamped to the observed range).
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = (q * self.count as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, &c) in self.bins.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                let lo = PhaseStats::bin_lo(i);
+                let hi =
+                    if i + 1 < BINS { PhaseStats::bin_lo(i + 1) } else { self.max_ns.max(lo) };
+                return (lo + (hi - lo) / 2).clamp(self.min_ns, self.max_ns);
+            }
+        }
+        self.max_ns
+    }
+}
+
+/// One rank's registry delta since its previous snapshot: counters and
+/// the histogram ship as non-negative deltas (so merged totals never
+/// regress), gauges ship absolute with the sequence number deciding which
+/// snapshot's gauges win a merge.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MetricsSnapshot {
+    pub rank: u32,
+    /// Per-rank monotone sequence number (1, 2, ...).
+    pub seq: u64,
+    pub uptime_ms: u64,
+    pub counters: [u64; Counter::COUNT],
+    pub gauges: [f64; Gauge::COUNT],
+    pub hist: HistDelta,
+    /// Per-peer wire counter deltas, indexed by remote rank.
+    pub peers: Vec<PeerCounters>,
+}
+
+fn peer_delta(cur: &PeerCounters, last: &PeerCounters) -> PeerCounters {
+    PeerCounters {
+        frames_sent: cur.frames_sent.saturating_sub(last.frames_sent),
+        payload_bits_sent: cur.payload_bits_sent.saturating_sub(last.payload_bits_sent),
+        blocked_send_ns: cur.blocked_send_ns.saturating_sub(last.blocked_send_ns),
+        frames_received: cur.frames_received.saturating_sub(last.frames_received),
+        payload_bits_received: cur
+            .payload_bits_received
+            .saturating_sub(last.payload_bits_received),
+    }
+}
+
+fn peer_add(acc: &mut PeerCounters, d: &PeerCounters) {
+    acc.frames_sent += d.frames_sent;
+    acc.payload_bits_sent += d.payload_bits_sent;
+    acc.blocked_send_ns += d.blocked_send_ns;
+    acc.frames_received += d.frames_received;
+    acc.payload_bits_received += d.payload_bits_received;
+}
+
+/// Per-rank shipping state: remembers the registry values at the last
+/// snapshot so each [`Tag::Metrics`] frame carries only the delta.
+/// Owned by the trainer loop — the registry itself stays stateless.
+#[derive(Clone, Debug, Default)]
+pub struct DeltaTracker {
+    seq: u64,
+    counters: [u64; Counter::COUNT],
+    hist_count: u64,
+    hist_total_ns: u64,
+    bins: [u64; BINS],
+    peers: Vec<PeerCounters>,
+}
+
+impl DeltaTracker {
+    pub fn new() -> DeltaTracker {
+        DeltaTracker {
+            seq: 0,
+            counters: [0; Counter::COUNT],
+            hist_count: 0,
+            hist_total_ns: 0,
+            bins: [0; BINS],
+            peers: Vec::new(),
+        }
+    }
+
+    /// Read the registry and produce this rank's next delta snapshot.
+    pub fn snapshot(&mut self, rank: usize) -> MetricsSnapshot {
+        self.seq += 1;
+        let mut counters = [0u64; Counter::COUNT];
+        for (i, out) in counters.iter_mut().enumerate() {
+            let cur = COUNTERS[i].load(Ordering::Relaxed);
+            *out = cur.saturating_sub(self.counters[i]);
+            self.counters[i] = cur;
+        }
+        let gauges: [f64; Gauge::COUNT] =
+            std::array::from_fn(|i| f64::from_bits(GAUGES[i].load(Ordering::Relaxed)));
+        let count = HIST_COUNT.load(Ordering::Relaxed);
+        let total = HIST_TOTAL_NS.load(Ordering::Relaxed);
+        let mut bins = [0u64; BINS];
+        for (i, out) in bins.iter_mut().enumerate() {
+            let cur = HIST_BINS[i].load(Ordering::Relaxed);
+            *out = cur.saturating_sub(self.bins[i]);
+            self.bins[i] = cur;
+        }
+        let hist = HistDelta {
+            count: count.saturating_sub(self.hist_count),
+            total_ns: total.saturating_sub(self.hist_total_ns),
+            min_ns: HIST_MIN_NS.load(Ordering::Relaxed),
+            max_ns: HIST_MAX_NS.load(Ordering::Relaxed),
+            bins,
+        };
+        self.hist_count = count;
+        self.hist_total_ns = total;
+        let cur_peers = peer_counters();
+        self.peers.resize(cur_peers.len(), PeerCounters::default());
+        let peers: Vec<PeerCounters> =
+            cur_peers.iter().zip(self.peers.iter()).map(|(c, l)| peer_delta(c, l)).collect();
+        self.peers = cur_peers;
+        MetricsSnapshot {
+            rank: rank as u32,
+            seq: self.seq,
+            uptime_ms: uptime_ms(),
+            counters,
+            gauges,
+            hist,
+            peers,
+        }
+    }
+}
+
+// --- wire format ------------------------------------------------------------
+
+/// Fixed word count of a snapshot frame before the per-peer lanes:
+/// rank, seq, uptime, counters, gauges, 4 histogram scalars, bins,
+/// peer count.
+const SNAP_FIXED_WORDS: usize = 3 + Counter::COUNT + Gauge::COUNT + 4 + BINS + 1;
+
+/// Serialize a snapshot as a `Tag::Metrics` frame payload.  Every field
+/// is one little-endian u64 word (gauges as f64 bit patterns), so
+/// `bit_len` is exactly `64 · (fixed + 5·n_peers)`.
+pub fn encode_snapshot(s: &MetricsSnapshot) -> WireMsg {
+    let mut words = Vec::with_capacity(SNAP_FIXED_WORDS + PEER_FIELDS * s.peers.len());
+    words.push(s.rank as u64);
+    words.push(s.seq);
+    words.push(s.uptime_ms);
+    words.extend_from_slice(&s.counters);
+    words.extend(s.gauges.iter().map(|g| g.to_bits()));
+    words.push(s.hist.count);
+    words.push(s.hist.total_ns);
+    words.push(s.hist.min_ns);
+    words.push(s.hist.max_ns);
+    words.extend_from_slice(&s.hist.bins);
+    words.push(s.peers.len() as u64);
+    for p in &s.peers {
+        words.push(p.frames_sent);
+        words.push(p.payload_bits_sent);
+        words.push(p.blocked_send_ns);
+        words.push(p.frames_received);
+        words.push(p.payload_bits_received);
+    }
+    let bit_len = words.len() as u64 * 64;
+    WireMsg { words, bit_len }
+}
+
+/// Parse a `Tag::Metrics` frame back into a snapshot, validating the
+/// declared peer count against the frame length.
+pub fn decode_snapshot(m: &WireMsg) -> Result<MetricsSnapshot, String> {
+    let w = &m.words;
+    if m.bit_len % 64 != 0 || w.len() < SNAP_FIXED_WORDS {
+        return Err(format!("metrics frame too short: {} bits", m.bit_len));
+    }
+    let mut i = 0usize;
+    let mut next = || {
+        let v = w[i];
+        i += 1;
+        v
+    };
+    let rank = next() as u32;
+    let seq = next();
+    let uptime_ms = next();
+    let mut counters = [0u64; Counter::COUNT];
+    for c in counters.iter_mut() {
+        *c = next();
+    }
+    let mut gauges = [0f64; Gauge::COUNT];
+    for g in gauges.iter_mut() {
+        *g = f64::from_bits(next());
+    }
+    let count = next();
+    let total_ns = next();
+    let min_ns = next();
+    let max_ns = next();
+    let mut bins = [0u64; BINS];
+    for b in bins.iter_mut() {
+        *b = next();
+    }
+    let n_peers = next() as usize;
+    if n_peers > MAX_PEERS || w.len() != SNAP_FIXED_WORDS + PEER_FIELDS * n_peers {
+        return Err(format!(
+            "metrics frame declares {n_peers} peers but carries {} words",
+            w.len()
+        ));
+    }
+    let mut peers = Vec::with_capacity(n_peers);
+    for _ in 0..n_peers {
+        peers.push(PeerCounters {
+            frames_sent: next(),
+            payload_bits_sent: next(),
+            blocked_send_ns: next(),
+            frames_received: next(),
+            payload_bits_received: next(),
+        });
+    }
+    Ok(MetricsSnapshot {
+        rank,
+        seq,
+        uptime_ms,
+        counters,
+        gauges,
+        hist: HistDelta { count, total_ns, min_ns, max_ns, bins },
+        peers,
+    })
+}
+
+// --- the fleet view ---------------------------------------------------------
+
+/// One rank's merged state inside a [`FleetView`]: counters/histogram are
+/// running sums of the merged deltas, gauges are the values from the
+/// highest-sequence snapshot seen.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RankView {
+    pub seq: u64,
+    pub uptime_ms: u64,
+    pub counters: [u64; Counter::COUNT],
+    pub gauges: [f64; Gauge::COUNT],
+    pub hist: HistDelta,
+    pub peers: Vec<PeerCounters>,
+}
+
+impl RankView {
+    fn empty() -> RankView {
+        RankView {
+            seq: 0,
+            uptime_ms: 0,
+            counters: [0; Counter::COUNT],
+            gauges: [0.0; Gauge::COUNT],
+            hist: HistDelta::empty(),
+            peers: Vec::new(),
+        }
+    }
+
+    pub fn counter(&self, c: Counter) -> u64 {
+        self.counters[c as usize]
+    }
+
+    pub fn gauge(&self, g: Gauge) -> f64 {
+        self.gauges[g as usize]
+    }
+
+    /// Mean steps per second over this rank's uptime.
+    pub fn step_rate(&self) -> f64 {
+        if self.uptime_ms == 0 {
+            0.0
+        } else {
+            self.counter(Counter::StepsTotal) as f64 / (self.uptime_ms as f64 / 1000.0)
+        }
+    }
+
+    /// Mean accounted upload bits per second over this rank's uptime.
+    pub fn bits_per_s(&self) -> f64 {
+        if self.uptime_ms == 0 {
+            0.0
+        } else {
+            (self.counter(Counter::GradBits) + self.counter(Counter::ModelBits)) as f64
+                / (self.uptime_ms as f64 / 1000.0)
+        }
+    }
+
+    /// Total blocked-send nanoseconds across this rank's links — the
+    /// aggregated backpressure gauge the adaptive censor threshold reads.
+    pub fn backpressure_ns(&self) -> u64 {
+        self.peers.iter().map(|p| p.blocked_send_ns).sum()
+    }
+}
+
+/// Rank 0's merged picture of the fleet, fed by [`FleetView::merge`] and
+/// served by the exposition endpoints.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FleetView {
+    /// Job label carried into every Prometheus sample (the optimizer
+    /// name in practice — escaped, since plan names contain punctuation).
+    pub job: String,
+    ranks: Vec<Option<RankView>>,
+}
+
+impl FleetView {
+    pub fn new(job: &str, n: usize) -> FleetView {
+        FleetView { job: job.to_string(), ranks: vec![None; n] }
+    }
+
+    /// Fold one delta snapshot in.  Counter/histogram deltas add, so the
+    /// result is independent of arrival order and associative over
+    /// disjoint snapshot sets; gauges take the highest-`seq` snapshot's
+    /// values (sequence numbers are per-rank monotone, so "latest wins"
+    /// is well-defined without wall clocks).
+    pub fn merge(&mut self, s: &MetricsSnapshot) {
+        let r = s.rank as usize;
+        if r >= self.ranks.len() {
+            self.ranks.resize(r + 1, None);
+        }
+        let v = self.ranks[r].get_or_insert_with(RankView::empty);
+        for (acc, d) in v.counters.iter_mut().zip(s.counters.iter()) {
+            *acc += d;
+        }
+        v.hist.count += s.hist.count;
+        v.hist.total_ns += s.hist.total_ns;
+        v.hist.min_ns = v.hist.min_ns.min(s.hist.min_ns);
+        v.hist.max_ns = v.hist.max_ns.max(s.hist.max_ns);
+        for (acc, d) in v.hist.bins.iter_mut().zip(s.hist.bins.iter()) {
+            *acc += d;
+        }
+        if s.peers.len() > v.peers.len() {
+            v.peers.resize(s.peers.len(), PeerCounters::default());
+        }
+        for (acc, d) in v.peers.iter_mut().zip(s.peers.iter()) {
+            peer_add(acc, d);
+        }
+        if s.seq >= v.seq {
+            v.gauges = s.gauges;
+        }
+        v.seq = v.seq.max(s.seq);
+        v.uptime_ms = v.uptime_ms.max(s.uptime_ms);
+    }
+
+    /// Fold another view in (hierarchical aggregation).  Correct only
+    /// when the two views merged *disjoint* snapshot sets — counters add,
+    /// gauges resolve by sequence number, exactly as [`merge`] would have
+    /// produced from the union.
+    ///
+    /// [`merge`]: FleetView::merge
+    pub fn absorb(&mut self, other: &FleetView) {
+        if other.ranks.len() > self.ranks.len() {
+            self.ranks.resize(other.ranks.len(), None);
+        }
+        for (slot, o) in self.ranks.iter_mut().zip(other.ranks.iter()) {
+            let Some(o) = o else { continue };
+            let v = slot.get_or_insert_with(RankView::empty);
+            for (acc, d) in v.counters.iter_mut().zip(o.counters.iter()) {
+                *acc += d;
+            }
+            v.hist.count += o.hist.count;
+            v.hist.total_ns += o.hist.total_ns;
+            v.hist.min_ns = v.hist.min_ns.min(o.hist.min_ns);
+            v.hist.max_ns = v.hist.max_ns.max(o.hist.max_ns);
+            for (acc, d) in v.hist.bins.iter_mut().zip(o.hist.bins.iter()) {
+                *acc += d;
+            }
+            if o.peers.len() > v.peers.len() {
+                v.peers.resize(o.peers.len(), PeerCounters::default());
+            }
+            for (acc, d) in v.peers.iter_mut().zip(o.peers.iter()) {
+                peer_add(acc, d);
+            }
+            if o.seq >= v.seq {
+                v.gauges = o.gauges;
+            }
+            v.seq = v.seq.max(o.seq);
+            v.uptime_ms = v.uptime_ms.max(o.uptime_ms);
+        }
+    }
+
+    /// Ranks that have reported at least one snapshot, ascending.
+    pub fn ranks(&self) -> impl Iterator<Item = (usize, &RankView)> {
+        self.ranks.iter().enumerate().filter_map(|(r, v)| v.as_ref().map(|v| (r, v)))
+    }
+
+    pub fn rank(&self, r: usize) -> Option<&RankView> {
+        self.ranks.get(r).and_then(|v| v.as_ref())
+    }
+
+    /// Prometheus text exposition (text format 0.0.4): one family block
+    /// per counter/gauge with `job`/`rank` labels, per-peer wire counters
+    /// with an additional `peer` label, and the step-duration summary as
+    /// derived gauges.
+    pub fn prometheus_text(&self) -> String {
+        let job = escape_label(&self.job);
+        let mut s = String::new();
+        for c in Counter::ALL {
+            let _ = writeln!(s, "# TYPE cser_{} counter", c.name());
+            for (r, v) in self.ranks() {
+                let _ = writeln!(
+                    s,
+                    "cser_{}{{job=\"{job}\",rank=\"{r}\"}} {}",
+                    c.name(),
+                    v.counter(c)
+                );
+            }
+        }
+        for g in Gauge::ALL {
+            let _ = writeln!(s, "# TYPE cser_{} gauge", g.name());
+            for (r, v) in self.ranks() {
+                let _ = writeln!(
+                    s,
+                    "cser_{}{{job=\"{job}\",rank=\"{r}\"}} {}",
+                    g.name(),
+                    v.gauge(g)
+                );
+            }
+        }
+        for (name, get) in [
+            ("step_rate", RankView::step_rate as fn(&RankView) -> f64),
+            ("bits_per_s", RankView::bits_per_s),
+            ("step_p50_ns", |v: &RankView| v.hist.quantile(0.50) as f64),
+            ("step_p99_ns", |v: &RankView| v.hist.quantile(0.99) as f64),
+        ] {
+            let _ = writeln!(s, "# TYPE cser_{name} gauge");
+            for (r, v) in self.ranks() {
+                let _ = writeln!(s, "cser_{name}{{job=\"{job}\",rank=\"{r}\"}} {}", get(v));
+            }
+        }
+        for (f, get) in [
+            ("frames_sent", |p: &PeerCounters| p.frames_sent),
+            ("payload_bits_sent", |p: &PeerCounters| p.payload_bits_sent),
+            ("blocked_send_ns", |p: &PeerCounters| p.blocked_send_ns),
+            ("frames_received", |p: &PeerCounters| p.frames_received),
+            ("payload_bits_received", |p: &PeerCounters| p.payload_bits_received),
+        ] {
+            let _ = writeln!(s, "# TYPE cser_peer_{f}_total counter");
+            for (r, v) in self.ranks() {
+                for (peer, p) in v.peers.iter().enumerate() {
+                    if peer == r {
+                        continue; // self slot stays zero by construction
+                    }
+                    let _ = writeln!(
+                        s,
+                        "cser_peer_{f}_total{{job=\"{job}\",rank=\"{r}\",peer=\"{peer}\"}} {}",
+                        get(p)
+                    );
+                }
+            }
+        }
+        s
+    }
+
+    /// The `cser-metrics/v1` JSON document `cser top` polls.
+    pub fn json(&self) -> String {
+        let mut w = JsonWriter::new();
+        w.begin_obj();
+        w.key("schema").str("cser-metrics/v1");
+        w.key("job").str(&self.job);
+        w.key("ranks").begin_arr();
+        for (r, v) in self.ranks() {
+            w.begin_obj();
+            w.key("rank").int(r as i64);
+            w.key("seq").int(v.seq as i64);
+            w.key("uptime_ms").int(v.uptime_ms as i64);
+            w.key("step_rate").num(v.step_rate());
+            w.key("bits_per_s").num(v.bits_per_s());
+            w.key("step_p50_ns").int(v.hist.quantile(0.50) as i64);
+            w.key("step_p99_ns").int(v.hist.quantile(0.99) as i64);
+            w.key("backpressure_ns").int(v.backpressure_ns() as i64);
+            w.key("counters").begin_obj();
+            for c in Counter::ALL {
+                w.key(c.name()).int(v.counter(c) as i64);
+            }
+            w.end_obj();
+            w.key("gauges").begin_obj();
+            for g in Gauge::ALL {
+                w.key(g.name()).num(v.gauge(g));
+            }
+            w.end_obj();
+            w.key("peers").begin_arr();
+            for (peer, p) in v.peers.iter().enumerate() {
+                if peer == r {
+                    continue;
+                }
+                w.begin_obj();
+                w.key("peer").int(peer as i64);
+                w.key("frames_sent").int(p.frames_sent as i64);
+                w.key("payload_bits_sent").int(p.payload_bits_sent as i64);
+                w.key("blocked_send_ns").int(p.blocked_send_ns as i64);
+                w.key("frames_received").int(p.frames_received as i64);
+                w.key("payload_bits_received").int(p.payload_bits_received as i64);
+                w.end_obj();
+            }
+            w.end_arr();
+            w.end_obj();
+        }
+        w.end_arr();
+        w.end_obj();
+        w.finish()
+    }
+}
+
+/// Escape a Prometheus label value: backslash, double quote, newline.
+pub fn escape_label(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for ch in s.chars() {
+        match ch {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+// --- exposition server + poll client ----------------------------------------
+
+/// Serve `view` over `addr` (e.g. `127.0.0.1:9090`) on a detached thread:
+/// `GET /metrics` returns Prometheus text, any other path the
+/// `cser-metrics/v1` JSON.  Minimal HTTP/1.0, connection-per-request —
+/// this is a telemetry tap, not a web server.  Returns the bound address
+/// (port 0 resolves to a real port).  The thread runs until process exit.
+pub fn spawn_exposition_server(
+    addr: &str,
+    view: Arc<Mutex<FleetView>>,
+) -> std::io::Result<std::net::SocketAddr> {
+    let listener = TcpListener::bind(addr)?;
+    let local = listener.local_addr()?;
+    std::thread::Builder::new().name("cser-metrics".into()).spawn(move || {
+        for stream in listener.incoming() {
+            let Ok(mut s) = stream else { continue };
+            let _ = s.set_read_timeout(Some(Duration::from_secs(2)));
+            let mut buf = [0u8; 1024];
+            let n = s.read(&mut buf).unwrap_or(0);
+            let req = String::from_utf8_lossy(&buf[..n]);
+            let path = req.split_whitespace().nth(1).unwrap_or("/json").to_string();
+            let (body, ctype) = {
+                let v = view.lock().expect("metrics view");
+                if path.starts_with("/metrics") {
+                    (v.prometheus_text(), "text/plain; version=0.0.4")
+                } else {
+                    (v.json(), "application/json")
+                }
+            };
+            let _ = write!(
+                s,
+                "HTTP/1.0 200 OK\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\n\
+                 Connection: close\r\n\r\n{body}",
+                body.len()
+            );
+        }
+    })?;
+    Ok(local)
+}
+
+/// One-shot HTTP/1.0 GET against an exposition server; returns the body.
+/// Used by `cser top` and the smoke tests — std sockets only.
+pub fn http_get(addr: &str, path: &str) -> Result<String, String> {
+    let mut s = TcpStream::connect(addr).map_err(|e| format!("connecting {addr}: {e}"))?;
+    let _ = s.set_read_timeout(Some(Duration::from_secs(5)));
+    write!(s, "GET {path} HTTP/1.0\r\nHost: {addr}\r\nConnection: close\r\n\r\n")
+        .map_err(|e| format!("sending request: {e}"))?;
+    let mut buf = String::new();
+    s.read_to_string(&mut buf).map_err(|e| format!("reading response: {e}"))?;
+    match buf.split_once("\r\n\r\n") {
+        Some((_, body)) => Ok(body.to_string()),
+        None => Err("malformed HTTP response (no header terminator)".into()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::json::Json;
+    use crate::util::prop::{forall, Gen};
+
+    fn gen_snapshot(g: &mut Gen, rank: u32, seq: u64) -> MetricsSnapshot {
+        let mut counters = [0u64; Counter::COUNT];
+        for c in counters.iter_mut() {
+            *c = g.rng.next_u64() % 1_000;
+        }
+        let gauges: [f64; Gauge::COUNT] =
+            std::array::from_fn(|_| (g.rng.next_u64() % 4096) as f64 / 8.0);
+        let mut bins = [0u64; BINS];
+        let mut count = 0u64;
+        for b in bins.iter_mut().take(12) {
+            *b = g.rng.next_u64() % 5;
+            count += *b;
+        }
+        let hist = if count == 0 {
+            HistDelta::empty()
+        } else {
+            HistDelta {
+                count,
+                total_ns: count * (1 + g.rng.next_u64() % 100),
+                min_ns: 1 + g.rng.next_u64() % 8,
+                max_ns: 2_048 + g.rng.next_u64() % 100,
+                bins,
+            }
+        };
+        let peers = (0..g.usize_in(1, 5))
+            .map(|_| PeerCounters {
+                frames_sent: g.rng.next_u64() % 50,
+                payload_bits_sent: g.rng.next_u64() % 10_000,
+                blocked_send_ns: g.rng.next_u64() % 1_000,
+                frames_received: g.rng.next_u64() % 50,
+                payload_bits_received: g.rng.next_u64() % 10_000,
+            })
+            .collect();
+        MetricsSnapshot {
+            rank,
+            seq,
+            uptime_ms: seq * (10 + g.rng.next_u64() % 90),
+            counters,
+            gauges,
+            hist,
+            peers,
+        }
+    }
+
+    #[test]
+    fn merge_is_order_independent_associative_and_never_regresses() {
+        forall(120, 0xF1EE7, |g| {
+            let n_ranks = g.usize_in(1, 4);
+            let mut snaps = Vec::new();
+            for r in 0..n_ranks {
+                for seq in 1..=g.usize_in(1, 5) as u64 {
+                    snaps.push(gen_snapshot(g, r as u32, seq));
+                }
+            }
+            // Reference: natural order.
+            let mut a = FleetView::new("t", n_ranks);
+            for s in &snaps {
+                a.merge(s);
+            }
+            // Shuffled order, with the no-regress invariant checked as we
+            // fold: merged counters are running sums of u64 deltas, so no
+            // merge may ever decrease one.
+            let mut order: Vec<usize> = (0..snaps.len()).collect();
+            for i in (1..order.len()).rev() {
+                order.swap(i, g.usize_in(0, i));
+            }
+            let mut b = FleetView::new("t", n_ranks);
+            for &i in &order {
+                let before: Vec<[u64; Counter::COUNT]> =
+                    (0..n_ranks).map(|r| b.rank(r).map_or([0; 7], |v| v.counters)).collect();
+                b.merge(&snaps[i]);
+                for r in 0..n_ranks {
+                    let after = b.rank(r).map_or([0; 7], |v| v.counters);
+                    for k in 0..Counter::COUNT {
+                        prop_assert!(
+                            after[k] >= before[r][k],
+                            "rank {r} counter {k} regressed: {} -> {}",
+                            before[r][k],
+                            after[k]
+                        );
+                    }
+                }
+            }
+            prop_assert!(a == b, "merge must be independent of arrival order");
+            // Associativity over disjoint splits: fold each half, absorb.
+            let cut = g.usize_in(0, snaps.len());
+            let mut left = FleetView::new("t", n_ranks);
+            let mut right = FleetView::new("t", n_ranks);
+            for (i, s) in snaps.iter().enumerate() {
+                if i < cut {
+                    left.merge(s);
+                } else {
+                    right.merge(s);
+                }
+            }
+            left.absorb(&right);
+            prop_assert!(a == left, "absorb(fold(A), fold(B)) must equal fold(A ∪ B)");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn snapshot_wire_roundtrip() {
+        forall(150, 0x3E7A1C5, |g| {
+            let s = gen_snapshot(g, g.usize_in(0, 63) as u32, 1 + g.rng.next_u64() % 100);
+            let m = encode_snapshot(&s);
+            prop_assert!(
+                m.bit_len == m.words.len() as u64 * 64,
+                "metrics frames are word-aligned"
+            );
+            let back = decode_snapshot(&m).map_err(|e| e.to_string())?;
+            prop_assert!(back == s, "wire roundtrip must be exact");
+            // Truncated frames must fail loudly, not decode garbage.
+            let mut bad = m.clone();
+            bad.words.pop();
+            bad.bit_len -= 64;
+            prop_assert!(decode_snapshot(&bad).is_err(), "truncated frame must be rejected");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prometheus_output_escapes_hostile_label_values() {
+        let hostile = "cser{h=2,\"quoted\"}\\\nnewline";
+        let mut view = FleetView::new(hostile, 1);
+        let mut g = Gen::replay(0xE5C, 0);
+        view.merge(&gen_snapshot(&mut g, 0, 1));
+        let text = view.prometheus_text();
+        assert!(
+            text.contains("job=\"cser{h=2,\\\"quoted\\\"}\\\\\\nnewline\""),
+            "label must carry escaped quote/backslash/newline:\n{text}"
+        );
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            assert_eq!(
+                line.matches('\n').count(),
+                0,
+                "no raw newline may survive inside a sample line"
+            );
+            assert!(line.ends_with(|c: char| c.is_ascii_digit()), "sample line: {line}");
+        }
+        // escape_label is involutive-free but must roundtrip the common
+        // cases exactly once.
+        assert_eq!(escape_label("plain"), "plain");
+        assert_eq!(escape_label("a\"b"), "a\\\"b");
+        assert_eq!(escape_label("a\\b"), "a\\\\b");
+        assert_eq!(escape_label("a\nb"), "a\\nb");
+    }
+
+    #[test]
+    fn json_document_carries_schema_and_per_rank_rates() {
+        let mut view = FleetView::new("cser(h=32)", 2);
+        let mut g = Gen::replay(0x15D0C, 0);
+        view.merge(&gen_snapshot(&mut g, 0, 1));
+        view.merge(&gen_snapshot(&mut g, 1, 1));
+        let j = Json::parse(&view.json()).expect("exposition JSON parses");
+        assert_eq!(j.get("schema").unwrap().as_str(), Some("cser-metrics/v1"));
+        let ranks = j.get("ranks").unwrap().as_arr().unwrap();
+        assert_eq!(ranks.len(), 2);
+        for r in ranks {
+            assert!(r.get("step_rate").unwrap().as_f64().is_some());
+            assert!(r.get("counters").unwrap().get("steps_total").is_some());
+            assert!(r.get("gauges").unwrap().get("residual_norm_pre").is_some());
+        }
+    }
+
+    #[test]
+    fn exposition_server_serves_both_formats() {
+        let mut view = FleetView::new("smoke", 1);
+        let mut g = Gen::replay(0x5E4E, 0);
+        view.merge(&gen_snapshot(&mut g, 0, 1));
+        let shared = Arc::new(Mutex::new(view));
+        let addr = spawn_exposition_server("127.0.0.1:0", Arc::clone(&shared))
+            .expect("bind loopback");
+        let addr = addr.to_string();
+        let json = http_get(&addr, "/json").expect("GET /json");
+        let j = Json::parse(&json).expect("served JSON parses");
+        assert_eq!(j.get("schema").unwrap().as_str(), Some("cser-metrics/v1"));
+        let prom = http_get(&addr, "/metrics").expect("GET /metrics");
+        assert!(prom.contains("# TYPE cser_steps_total counter"), "{prom}");
+        assert!(prom.contains("rank=\"0\""), "{prom}");
+    }
+
+    // One registry test only: the statics are process-global, so
+    // concurrent tests toggling the flag would race each other's
+    // assertions (same discipline as `recorder::tests`).
+    #[test]
+    fn metrics_protocol() {
+        assert!(!enabled());
+        // Disabled: every recording call is a no-op.
+        inc(Counter::StepsTotal, 5);
+        gauge_set(Gauge::GradNorm, 1.5);
+        observe_step_ns(100);
+        sync_from_peers(&[PeerCounters { frames_sent: 9, ..Default::default() }]);
+        set_enabled(true);
+        reset();
+        let mut tracker = DeltaTracker::new();
+        let first = tracker.snapshot(3);
+        assert_eq!(first.counters[Counter::StepsTotal as usize], 0, "disabled calls recorded");
+        assert!(first.peers.is_empty(), "disabled sync_from_peers recorded");
+
+        // Enabled: counters add, gauges overwrite, histogram bins fill,
+        // peer lanes mirror the transport counters exactly.
+        inc(Counter::StepsTotal, 2);
+        inc(Counter::StepsTotal, 1);
+        inc(Counter::GradBits, 640);
+        gauge_set(Gauge::ResidualNormPre, 4.0);
+        gauge_set(Gauge::ResidualNormPre, 2.5);
+        observe_step_ns(1_000);
+        observe_step_ns(3_000);
+        let peers = vec![
+            PeerCounters::default(),
+            PeerCounters {
+                frames_sent: 7,
+                payload_bits_sent: 4096,
+                blocked_send_ns: 5_000,
+                frames_received: 6,
+                payload_bits_received: 2048,
+            },
+        ];
+        sync_from_peers(&peers);
+        assert_eq!(peer_counters(), peers, "lanes must roundtrip the transport counters");
+        // Adaptive censoring reads its threshold straight off these lanes.
+        assert_eq!(
+            crate::membership::censor_seed_from_metrics(0.5),
+            crate::membership::censor_seed(&peers, 0.5)
+        );
+        assert!(crate::membership::censor_seed_from_metrics(0.5) > 0.0);
+
+        // Delta shipping: the first snapshot carries everything, the next
+        // only what happened in between; wire roundtrip is exact.
+        let snap = tracker.snapshot(3);
+        assert_eq!(snap.rank, 3);
+        assert_eq!(snap.counters[Counter::StepsTotal as usize], 3);
+        assert_eq!(snap.counters[Counter::GradBits as usize], 640);
+        assert_eq!(snap.gauges[Gauge::ResidualNormPre as usize], 2.5);
+        assert_eq!(snap.hist.count, 2);
+        assert_eq!(snap.hist.total_ns, 4_000);
+        assert_eq!(snap.peers[1].frames_sent, 7);
+        let back = decode_snapshot(&encode_snapshot(&snap)).unwrap();
+        assert_eq!(back, snap);
+
+        inc(Counter::StepsTotal, 4);
+        let snap2 = tracker.snapshot(3);
+        assert_eq!(snap2.seq, snap.seq + 1);
+        assert_eq!(snap2.counters[Counter::StepsTotal as usize], 4, "delta, not total");
+        assert_eq!(snap2.hist.count, 0);
+        assert_eq!(snap2.peers[1].frames_sent, 0, "unchanged lanes ship zero deltas");
+
+        // A fleet view fed both snapshots reconstructs the totals, and
+        // the adaptive-censor input survives the trip.
+        let mut view = FleetView::new("proto", 4);
+        view.merge(&snap);
+        view.merge(&snap2);
+        let v = view.rank(3).expect("rank 3 reported");
+        assert_eq!(v.counter(Counter::StepsTotal), 7);
+        assert_eq!(v.gauge(Gauge::ResidualNormPre), 2.5);
+        assert_eq!(v.peers[1].blocked_send_ns, 5_000);
+        assert!(v.step_rate() >= 0.0);
+
+        set_enabled(false);
+        reset();
+        assert_eq!(peer_counters().len(), 0, "reset clears the peer lanes");
+    }
+}

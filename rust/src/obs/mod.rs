@@ -16,9 +16,13 @@
 //! Submodules: [`phase`] (the taxonomy), [`recorder`] (per-thread
 //! lock-free rings + the `Span` guard), [`stats`] (fixed-bin histogram
 //! folds), [`export`] (per-rank JSONL, merged Chrome trace JSON, the
-//! `cser trace` summary).  Transports keep [`PeerCounters`] — frames,
-//! payload bits, blocked-send time per remote rank — which ride along in
-//! the JSONL meta line.
+//! `cser trace` summary), [`metrics`] (the live telemetry plane: the
+//! run-wide counter/gauge/histogram registry, delta snapshots shipped to
+//! rank 0 as `Tag::Metrics` frames, and the Prometheus/JSON exposition
+//! server behind `cser launch --metrics-addr` / `cser top`).  Transports
+//! keep [`PeerCounters`] — frames, payload bits, blocked-send time per
+//! remote rank — which ride along in the JSONL meta line and are mirrored
+//! into the metrics registry at round boundaries.
 //!
 //! Typical wiring: `set_enabled(true)` + `register_thread("main")` at
 //! run start, `Span::enter(Phase::X)` guards in the hot paths,
@@ -26,6 +30,7 @@
 //! `cser trace summarize --trace <dir>` to merge and summarize.
 
 pub mod export;
+pub mod metrics;
 pub mod phase;
 pub mod recorder;
 pub mod stats;

@@ -159,9 +159,17 @@ pub fn enabled() -> bool {
 /// Turn tracing on/off.  Enabling pins the trace epoch (idempotent).
 pub fn set_enabled(on: bool) {
     if on {
-        let _ = EPOCH.set(Instant::now());
+        pin_epoch();
     }
     ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Pin the shared observability epoch (idempotent).  Tracing and the
+/// metrics registry share one clock so their timestamps compare —
+/// `metrics::set_enabled` calls this too, making [`now_ns`] valid even
+/// when tracing itself stays off.
+pub(crate) fn pin_epoch() {
+    let _ = EPOCH.set(Instant::now());
 }
 
 /// Monotonic nanoseconds since the trace epoch (0 before the first

@@ -28,7 +28,8 @@ pub struct MeshTransport {
     txs: Vec<Option<Sender<Frame>>>,
     rxs: Vec<Option<Receiver<Frame>>>,
     /// Per-peer wire counters, mirroring `TcpTransport::per_peer` so the
-    /// two transports export identical metrics.  Channel sends are
+    /// two transports export identical metrics (both feed
+    /// `obs::metrics::sync_from_peers` the same way).  Channel sends are
     /// unbounded and never block, so `blocked_send_ns` stays zero here —
     /// a structural statement, not a measurement gap.
     pub per_peer: Vec<PeerCounters>,

@@ -123,6 +123,11 @@ pub enum Tag {
     /// Membership view update at a round boundary: epoch id, live mask,
     /// joining rank (`membership::epoch_boundary`).
     Epoch = 8,
+    /// Telemetry delta snapshot shipped to rank 0 every K rounds
+    /// (`obs::metrics::encode_snapshot`).  Control-plane only — a late or
+    /// lost metrics frame never stalls the data plane (stale frames are
+    /// discarded by the per-link round check).
+    Metrics = 9,
 }
 
 impl Tag {
@@ -138,6 +143,7 @@ impl Tag {
             6 => Verdict,
             7 => Flag,
             8 => Epoch,
+            9 => Metrics,
             _ => return None,
         })
     }
@@ -706,6 +712,7 @@ fn ps(
     let msg = match censor {
         Some(tau) if crate::collective::censors(&own, tau) => {
             let _s = obs::Span::enter_arg(Phase::Censor, i as u64);
+            obs::metrics::inc(obs::metrics::Counter::CensoredUploads, 1);
             math::fill(&mut own, 0.0);
             WireMsg { words: Vec::new(), bit_len: 0 }
         }

@@ -80,8 +80,11 @@ pub struct TcpTransport {
     /// stays zero).  Frames and payload bits are always counted — plain
     /// adds on paths that already count aggregates — while
     /// `blocked_send_ns` (time inside the blocking socket write, i.e.
-    /// backpressure) is measured only while `obs` tracing is enabled so
-    /// the disabled path reads no timestamps.
+    /// backpressure) is measured only while `obs` tracing or the
+    /// `obs::metrics` registry is enabled so the disabled path reads no
+    /// timestamps.  The trainer mirrors these into the metrics registry
+    /// at round boundaries (`obs::metrics::sync_from_peers`), which is
+    /// where the adaptive censor threshold reads backpressure from.
     pub per_peer: Vec<PeerCounters>,
 }
 
@@ -200,7 +203,7 @@ impl TcpTransport {
         let io = |e: std::io::Error| {
             TransportError::peer_down(to, format!("sending failed: {e}"))
         };
-        let timed = obs::enabled();
+        let timed = obs::enabled() || obs::metrics::enabled();
         let t0 = if timed { obs::now_ns() } else { 0 };
         write_all_vectored(&mut link.writer, &hdr, &link.wbuf).map_err(io)?;
         if timed {

@@ -14,7 +14,12 @@
 //!   bounded far below one model-sized vector;
 //! * the same engine step with phase tracing ENABLED — the recorder's
 //!   rings are preallocated at registration, so the per-step allocation
-//!   bound must hold unchanged with spans recording.
+//!   bound must hold unchanged with spans recording;
+//! * the same engine step with the metrics registry ENABLED — counters,
+//!   gauges, and the step histogram are static atomic arrays, so enabled
+//!   recording adds **zero** allocations, and a disabled registry costs
+//!   one relaxed atomic load per site (structurally pinned: every record
+//!   fn early-returns on `enabled()`).
 //!
 //! One `#[test]` only: the counters are process-global, so concurrent tests
 //! would pollute each other's windows.
@@ -155,4 +160,51 @@ fn steady_state_hot_paths_do_not_allocate() {
         "traced engine step allocates {per_step_traced} bytes/step (untraced: {per_step}) — \
          span recording must be allocation-free in steady state"
     );
+
+    // ---- metrics registry enabled: recording is allocation-free ----
+    // The registry is static atomic arrays; enabling it must not change the
+    // engine step's allocation bound, and recording into every site kind
+    // (counter, gauge, histogram, peer-lane sync) must allocate nothing.
+    use cser::obs::metrics::{self, Counter, Gauge};
+    metrics::reset();
+    metrics::set_enabled(true);
+    for _ in 0..8 {
+        opt.step(&grads, 0.01); // warmup under the instrumented step path
+    }
+    let (_, bytes_metered) = alloc_during(|| {
+        for _ in 0..steps {
+            opt.step(&grads, 0.01);
+        }
+    });
+    let per_step_metered = bytes_metered / steps;
+    assert!(
+        per_step_metered < (d as u64) * 4 / 8,
+        "metered engine step allocates {per_step_metered} bytes/step (bare: {per_step}) — \
+         metrics instrumentation must be allocation-free in steady state"
+    );
+    let peers = metrics::peer_counters(); // allocated once here, reused below
+    let (allocs_direct, bytes_direct) = alloc_during(|| {
+        for i in 0..1000u64 {
+            metrics::inc(Counter::StepsTotal, 1);
+            metrics::gauge_set(Gauge::GradNorm, i as f64);
+            metrics::observe_step_ns(i * 997);
+            metrics::sync_from_peers(&peers);
+        }
+    });
+    assert_eq!(
+        allocs_direct, 0,
+        "enabled metric recording made {allocs_direct} allocations / {bytes_direct} bytes \
+         in 4000 record calls"
+    );
+    metrics::set_enabled(false);
+    // Disabled registry: the same sites are a relaxed load + early return.
+    let (allocs_off, _) = alloc_during(|| {
+        for i in 0..1000u64 {
+            metrics::inc(Counter::StepsTotal, 1);
+            metrics::gauge_set(Gauge::GradNorm, i as f64);
+            metrics::observe_step_ns(i * 997);
+        }
+    });
+    assert_eq!(allocs_off, 0, "disabled metric sites must not allocate");
+    metrics::reset();
 }
