@@ -58,6 +58,21 @@ pub fn phase_summaries(snaps: &[RingSnapshot]) -> Vec<PhaseSummary> {
         .collect()
 }
 
+/// One membership transition as this rank observed it: which epoch took
+/// force, at which step, and which ranks left / arrived.  A rejoining
+/// rank records its own admission with `evicted == 0`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EpochEvent {
+    /// Epoch id that took force at this boundary.
+    pub epoch: u64,
+    /// Step (sync round) at which the boundary fired.
+    pub step: u64,
+    /// Bitmask of ranks evicted at this boundary.
+    pub evicted: u64,
+    /// Bitmask of ranks admitted at this boundary.
+    pub joined: u64,
+}
+
 /// Elastic-membership summary of one rank's run (`Backend::Tcp` with
 /// `TrainCfg::elastic`; DESIGN.md §8).  `None` on fixed-fleet runs.
 ///
@@ -66,8 +81,12 @@ pub fn phase_summaries(snaps: &[RingSnapshot]) -> Vec<PhaseSummary> {
 /// read from its sockets (the 17-byte frame headers excluded), so on a
 /// parameter-server plan `payload_bits_received` at rank 0 equals the sum
 /// of `payload_bits_sent` over every rank whose frames arrived — censored
-/// rounds and dead peers contribute exactly nothing.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// rounds and dead peers contribute exactly nothing.  `links` refines the
+/// totals per peer (ring-segment ground truth: on a ring plan, entry `p`
+/// balances against peer `p`'s entry for this rank), and `events` records
+/// each membership transition so joins/evictions are attributable per
+/// epoch; both are additive and stay empty on runs that predate them.
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ElasticSummary {
     /// Membership epoch id in force when the run ended.
     pub final_epoch: u64,
@@ -83,6 +102,11 @@ pub struct ElasticSummary {
     pub joins: u64,
     pub payload_bits_sent: u64,
     pub payload_bits_received: u64,
+    /// Every membership transition this rank observed, in order.
+    pub events: Vec<EpochEvent>,
+    /// Per-peer wire counters (index = physical rank; this rank's own
+    /// slot stays zero).  Sums over the slots reproduce the totals above.
+    pub links: Vec<crate::obs::PeerCounters>,
 }
 
 /// A full training run.
@@ -160,6 +184,25 @@ impl RunRecord {
             w.key("joins").int(e.joins as i64);
             w.key("payload_bits_sent").int(e.payload_bits_sent as i64);
             w.key("payload_bits_received").int(e.payload_bits_received as i64);
+            // Additive keys: per-epoch transitions and per-link counters.
+            w.key("events").begin_arr();
+            for ev in &e.events {
+                w.begin_obj();
+                w.key("epoch").int(ev.epoch as i64);
+                w.key("step").int(ev.step as i64);
+                w.key("evicted").int(ev.evicted as i64);
+                w.key("joined").int(ev.joined as i64);
+                w.end_obj();
+            }
+            w.end_arr();
+            for (key, f) in [
+                ("link_bits_sent", (|c: &crate::obs::PeerCounters| c.payload_bits_sent as f64)
+                    as fn(&crate::obs::PeerCounters) -> f64),
+                ("link_bits_received", |c| c.payload_bits_received as f64),
+                ("link_stale_discards", |c| c.stale_discards as f64),
+            ] {
+                w.key(key).nums(&e.links.iter().map(f).collect::<Vec<_>>());
+            }
             w.end_obj();
         }
         for (key, f) in [
@@ -278,14 +321,23 @@ mod tests {
         let j = Json::parse(&r.to_json()).unwrap();
         assert!(j.get("elastic").is_none(), "fixed-fleet records carry no elastic object");
         let mut r = record();
+        let mut links = vec![crate::obs::PeerCounters::default(); 3];
+        links[1].payload_bits_sent = 4096;
+        links[1].payload_bits_received = 12288;
+        links[2].stale_discards = 2;
         r.elastic = Some(ElasticSummary {
             final_epoch: 2,
             live_mask: 0b0111,
             censor_events: 5,
             evictions: 1,
-            joins: 0,
+            joins: 1,
             payload_bits_sent: 4096,
             payload_bits_received: 12288,
+            events: vec![
+                EpochEvent { epoch: 1, step: 16, evicted: 0b1000, joined: 0 },
+                EpochEvent { epoch: 2, step: 32, evicted: 0, joined: 0b0100 },
+            ],
+            links,
         });
         let j = Json::parse(&r.to_json()).unwrap();
         let e = j.get("elastic").unwrap();
@@ -293,9 +345,22 @@ mod tests {
         assert_eq!(e.get("live_mask").unwrap().as_usize(), Some(0b0111));
         assert_eq!(e.get("censor_events").unwrap().as_usize(), Some(5));
         assert_eq!(e.get("evictions").unwrap().as_usize(), Some(1));
-        assert_eq!(e.get("joins").unwrap().as_usize(), Some(0));
+        assert_eq!(e.get("joins").unwrap().as_usize(), Some(1));
         assert_eq!(e.get("payload_bits_sent").unwrap().as_usize(), Some(4096));
         assert_eq!(e.get("payload_bits_received").unwrap().as_usize(), Some(12288));
+        let evs = e.get("events").unwrap().as_arr().unwrap();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].get("epoch").unwrap().as_usize(), Some(1));
+        assert_eq!(evs[0].get("evicted").unwrap().as_usize(), Some(0b1000));
+        assert_eq!(evs[1].get("step").unwrap().as_usize(), Some(32));
+        assert_eq!(evs[1].get("joined").unwrap().as_usize(), Some(0b0100));
+        let sent = e.get("link_bits_sent").unwrap().as_arr().unwrap();
+        assert_eq!(sent.len(), 3);
+        assert_eq!(sent[1].as_f64(), Some(4096.0));
+        let recv = e.get("link_bits_received").unwrap().as_arr().unwrap();
+        assert_eq!(recv[1].as_f64(), Some(12288.0));
+        let stale = e.get("link_stale_discards").unwrap().as_arr().unwrap();
+        assert_eq!(stale[2].as_f64(), Some(2.0));
     }
 
     #[test]

@@ -15,5 +15,5 @@ pub mod metrics;
 pub mod plot;
 pub mod sim_trainer;
 
-pub use metrics::{ElasticSummary, EpochPoint, RunRecord};
+pub use metrics::{ElasticSummary, EpochEvent, EpochPoint, RunRecord};
 pub use sim_trainer::{train_classifier, ChaosSpec, TrainCfg};

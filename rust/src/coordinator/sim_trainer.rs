@@ -140,30 +140,59 @@ impl TrainCfg {
     }
 }
 
-/// Fault-injection plan for elastic TCP runs, parsed from
-/// `--chaos kill:<rank>@<step>,slow:<rank>:<ms>`: `kill` aborts the rank's
-/// process at its `<step>`-th gradient call (the launcher knows the plan
-/// and treats that death as expected), `slow` sleeps before every gradient
-/// to provoke round-deadline censoring.
-#[derive(Clone, Debug, Default, PartialEq, Eq)]
+/// Fault matrix for elastic TCP runs, parsed from a comma-joined
+/// `--chaos` list of directives:
+///
+/// * `kill:<rank>@<step>` — abort the rank's process at its `<step>`-th
+///   gradient call (the launcher knows the plan and treats that death as
+///   expected);
+/// * `slow:<rank>:<ms>` — sleep before every gradient to provoke
+///   round-deadline censoring;
+/// * `drop:<rank>:<prob>` — drop each of the rank's outgoing frames with
+///   probability `<prob>` ∈ [0, 1] ([`crate::transport::FaultTransport`];
+///   dropped frames are unsent *and* unaccounted, so per-link bit balance
+///   holds);
+/// * `delay:<rank>:<ms>:<jitter>` — network-level latency: every outgoing
+///   frame waits `ms + U[0, jitter]` milliseconds before hitting the wire;
+/// * `flap:<rank>@<step>:<downtime_ms>` — kill at `<step>`, then the
+///   launcher automatically respawns the rank with `--join` after
+///   `<downtime_ms>` so it re-enters through the admission path.
+///
+/// Rank 0 is the control plane: `kill`, `drop`, and `flap` on it are
+/// rejected at parse time (workers wait on its frames without a
+/// deadline by design).  [`ChaosSpec::validate`] additionally checks the
+/// plan against the run's step budget at launch.
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct ChaosSpec {
     pub kill: Vec<(usize, u64)>,
     pub slow: Vec<(usize, u64)>,
+    /// `(rank, probability)` per-frame drop faults.
+    pub drop: Vec<(usize, f64)>,
+    /// `(rank, base_ms, jitter_ms)` per-frame send latency.
+    pub delay: Vec<(usize, u64, u64)>,
+    /// `(rank, step, downtime_ms)` kill-then-rejoin cycles.
+    pub flap: Vec<(usize, u64, u64)>,
 }
 
 impl ChaosSpec {
     pub fn parse(s: &str) -> Result<ChaosSpec, String> {
+        fn rank_of(tok: &str, part: &str, evictable: bool) -> Result<usize, String> {
+            let rank: usize = tok.parse().map_err(|_| format!("bad chaos rank in '{part}'"))?;
+            if evictable && rank == 0 {
+                return Err(format!(
+                    "chaos directive '{part}' targets rank 0 — the control plane is not \
+                     evictable and workers wait on its frames without a deadline"
+                ));
+            }
+            Ok(rank)
+        }
         let mut spec = ChaosSpec::default();
         for part in s.split(',').filter(|p| !p.is_empty()) {
             if let Some(rest) = part.strip_prefix("kill:") {
                 let (rank, step) = rest
                     .split_once('@')
                     .ok_or_else(|| format!("bad chaos directive '{part}' (want kill:<rank>@<step>)"))?;
-                let rank: usize =
-                    rank.parse().map_err(|_| format!("bad chaos rank in '{part}'"))?;
-                if rank == 0 {
-                    return Err("chaos cannot kill rank 0 (the control plane is not evictable)".into());
-                }
+                let rank = rank_of(rank, part, true)?;
                 let step = step.parse().map_err(|_| format!("bad chaos step in '{part}'"))?;
                 spec.kill.push((rank, step));
             } else if let Some(rest) = part.strip_prefix("slow:") {
@@ -171,8 +200,46 @@ impl ChaosSpec {
                     .split_once(':')
                     .ok_or_else(|| format!("bad chaos directive '{part}' (want slow:<rank>:<ms>)"))?;
                 spec.slow.push((
-                    rank.parse().map_err(|_| format!("bad chaos rank in '{part}'"))?,
+                    rank_of(rank, part, false)?,
                     ms.parse().map_err(|_| format!("bad chaos delay in '{part}'"))?,
+                ));
+            } else if let Some(rest) = part.strip_prefix("drop:") {
+                let (rank, prob) = rest
+                    .split_once(':')
+                    .ok_or_else(|| format!("bad chaos directive '{part}' (want drop:<rank>:<prob>)"))?;
+                let rank = rank_of(rank, part, true)?;
+                let prob: f64 =
+                    prob.parse().map_err(|_| format!("bad chaos probability in '{part}'"))?;
+                if !(0.0..=1.0).contains(&prob) {
+                    return Err(format!(
+                        "chaos drop probability {prob} in '{part}' is outside [0, 1]"
+                    ));
+                }
+                spec.drop.push((rank, prob));
+            } else if let Some(rest) = part.strip_prefix("delay:") {
+                let mut it = rest.splitn(3, ':');
+                let (Some(rank), Some(ms), Some(jitter)) = (it.next(), it.next(), it.next())
+                else {
+                    return Err(format!(
+                        "bad chaos directive '{part}' (want delay:<rank>:<ms>:<jitter>)"
+                    ));
+                };
+                spec.delay.push((
+                    rank_of(rank, part, false)?,
+                    ms.parse().map_err(|_| format!("bad chaos delay in '{part}'"))?,
+                    jitter.parse().map_err(|_| format!("bad chaos jitter in '{part}'"))?,
+                ));
+            } else if let Some(rest) = part.strip_prefix("flap:") {
+                let (rank, rest) = rest.split_once('@').ok_or_else(|| {
+                    format!("bad chaos directive '{part}' (want flap:<rank>@<step>:<downtime_ms>)")
+                })?;
+                let (step, down) = rest.split_once(':').ok_or_else(|| {
+                    format!("bad chaos directive '{part}' (want flap:<rank>@<step>:<downtime_ms>)")
+                })?;
+                spec.flap.push((
+                    rank_of(rank, part, true)?,
+                    step.parse().map_err(|_| format!("bad chaos step in '{part}'"))?,
+                    down.parse().map_err(|_| format!("bad chaos downtime in '{part}'"))?,
                 ));
             } else {
                 return Err(format!("unknown chaos directive '{part}'"));
@@ -181,9 +248,49 @@ impl ChaosSpec {
         Ok(spec)
     }
 
-    /// The gradient-call index at which `rank` dies, if it is marked.
+    /// Launch-time cross-check against the run's shape: every `kill`/`flap`
+    /// step must land inside the `total_steps` gradient calls the run will
+    /// actually make (a fault beyond the end would silently never fire),
+    /// and each rank may die at most once (one `kill` *or* one `flap`).
+    /// Probability ranges and rank-0 targeting are parse-time errors.
+    pub fn validate(&self, total_steps: u64) -> Result<(), String> {
+        for &(rank, step) in &self.kill {
+            if step >= total_steps {
+                return Err(format!(
+                    "chaos kill:{rank}@{step} never fires — the run makes only \
+                     {total_steps} gradient calls per rank"
+                ));
+            }
+        }
+        for &(rank, step, _) in &self.flap {
+            if step >= total_steps {
+                return Err(format!(
+                    "chaos flap:{rank}@{step} never fires — the run makes only \
+                     {total_steps} gradient calls per rank"
+                ));
+            }
+        }
+        for rank in 0..crate::membership::MAX_RANKS {
+            let deaths = self.kill.iter().filter(|(r, _)| *r == rank).count()
+                + self.flap.iter().filter(|(r, _, _)| *r == rank).count();
+            if deaths > 1 {
+                return Err(format!(
+                    "chaos plan kills rank {rank} {deaths} times — at most one kill or flap \
+                     per rank"
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// The gradient-call index at which `rank` dies, if it is marked
+    /// (`kill` or the kill half of `flap`).
     pub fn kill_step(&self, rank: usize) -> Option<u64> {
-        self.kill.iter().find(|(r, _)| *r == rank).map(|(_, s)| *s)
+        self.kill
+            .iter()
+            .find(|(r, _)| *r == rank)
+            .map(|(_, s)| *s)
+            .or_else(|| self.flap(rank).map(|(s, _)| s))
     }
 
     /// The per-gradient delay injected into `rank`, if it is marked.
@@ -191,9 +298,30 @@ impl ChaosSpec {
         self.slow.iter().find(|(r, _)| *r == rank).map(|(_, m)| *m)
     }
 
+    /// The per-frame drop probability armed on `rank`, if any.
+    pub fn drop_prob(&self, rank: usize) -> Option<f64> {
+        self.drop.iter().find(|(r, _)| *r == rank).map(|(_, p)| *p)
+    }
+
+    /// The `(base_ms, jitter_ms)` send latency armed on `rank`, if any.
+    pub fn delay_ms(&self, rank: usize) -> Option<(u64, u64)> {
+        self.delay.iter().find(|(r, _, _)| *r == rank).map(|(_, m, j)| (*m, *j))
+    }
+
+    /// The `(step, downtime_ms)` flap cycle armed on `rank`, if any.
+    pub fn flap(&self, rank: usize) -> Option<(u64, u64)> {
+        self.flap.iter().find(|(r, _, _)| *r == rank).map(|(_, s, d)| (*s, *d))
+    }
+
     /// Every rank named anywhere in the plan (launch validates them).
     pub fn ranks(&self) -> impl Iterator<Item = usize> + '_ {
-        self.kill.iter().chain(self.slow.iter()).map(|(r, _)| *r)
+        self.kill
+            .iter()
+            .chain(self.slow.iter())
+            .map(|(r, _)| *r)
+            .chain(self.drop.iter().map(|(r, _)| *r))
+            .chain(self.delay.iter().map(|(r, _, _)| *r))
+            .chain(self.flap.iter().map(|(r, _, _)| *r))
     }
 }
 
@@ -709,23 +837,34 @@ fn train_classifier_tcp(
 /// aggregate over the responders and rescale by the live count — instead
 /// of killing the fleet, and membership changes are negotiated at each
 /// epoch boundary through the standing rendezvous [`rendezvous::Session`]:
-/// observed deaths are evicted, and rank 0 admits at most one parked
-/// joiner per boundary (grant = epoch, resume step, live mask, checkpoint
-/// blob; the joiner re-dials the live mesh and every survivor installs the
-/// fresh link).  With `cfg.join` this rank *is* the joiner: it restores
-/// the granted blob bit-exactly and enters the epoch loop at the granted
-/// step.
+/// observed deaths are evicted, and rank 0 admits a *batch* of parked
+/// joiners per boundary — every distinct non-live `CSER-JN2` request
+/// waiting in the grace window is granted in rank order under one epoch
+/// frame (grant = epoch, resume step, live mask, checkpoint blob; each
+/// joiner re-dials the live mesh and every survivor installs the fresh
+/// links in arrival order against the frame's joiner mask).  With
+/// `cfg.join` this rank *is* a joiner: it restores the granted blob
+/// bit-exactly and enters the epoch loop at the granted step.
 ///
-/// Scope limits, by design: ring-routed plans (globally-synchronized
-/// sparse compressors) keep their fail-stop semantics — every collective
-/// here must be parameter-server-shaped for censoring to be sound — and
-/// the bucketed pipeline is not combined with elastic membership.  Rank 0
-/// is the control plane and is not evictable; losing it is terminal.
+/// Ring-routed plans participate fully (DESIGN.md §8): post-boundary
+/// rings are built over the agreed `view_mask`, and a ring that stalls
+/// mid-round (death or deadline miss) falls back to the parameter-server
+/// path *at the same round* and latches the transport degraded until the
+/// next boundary re-forms the ring.  The bucketed pipeline composes too —
+/// each bucket runs the same view-aware collectives, and an aborted
+/// bucket drains the prepare queue instead of wedging it.  Rank 0 is the
+/// control plane and is not evictable; losing it is terminal.
+///
+/// The `--chaos` fault matrix rides this path: `kill`/`flap` panic in
+/// the gradient oracle (unwinding drops the socket, peers observe
+/// `PeerDown`), `slow` sleeps there, and `drop`/`delay` wrap the socket
+/// transport in a [`crate::transport::FaultTransport`] underneath the
+/// membership layer.
 ///
 /// The returned record carries an [`ElasticSummary`]: the final epoch
-/// view plus this rank's ground-truth wire counters, which is what the
-/// `elastic_equiv` tests audit for exact bit accounting under partial
-/// rounds.
+/// view, per-epoch membership events, and this rank's ground-truth
+/// per-link wire counters, which is what the `elastic_equiv` tests audit
+/// for exact bit accounting under partial rounds.
 #[allow(clippy::too_many_arguments)]
 fn train_classifier_tcp_elastic(
     model: &dyn GradModel,
@@ -738,10 +877,6 @@ fn train_classifier_tcp_elastic(
     rank: usize,
 ) -> RunRecord {
     assert_eq!(engine.n(), 1, "a Backend::Tcp engine holds exactly the local rank's worker");
-    assert!(
-        cfg.buckets <= 1,
-        "elastic membership runs the whole-vector sync path (no bucketed pipeline)"
-    );
     let d = engine.dim();
     assert_eq!(d, model.dim());
     trace_begin(cfg);
@@ -753,6 +888,24 @@ fn train_classifier_tcp_elastic(
     let iters_per_epoch = (train.len() / (cfg.batch_per_worker * n)).max(1);
     let mut evictions = 0u64;
     let mut joins = 0u64;
+    let mut events: Vec<super::metrics::EpochEvent> = Vec::new();
+
+    // Network faults (`drop:`/`delay:`) live in a wrapper *under* the
+    // membership layer, so Elastic sees a lossy wire exactly as it would in
+    // production.  Unfaulted ranks wrap too (p = 0, no delay — a pass-
+    // through) so the transport type is uniform across the fleet.
+    let arm_faults = |tp: TcpTransport| {
+        let mut f = crate::transport::FaultTransport::new(tp, cfg.seed ^ ((rank as u64) << 32));
+        if let Some(chaos) = &cfg.chaos {
+            if let Some(p) = chaos.drop_prob(rank) {
+                f = f.with_drop(p);
+            }
+            if let Some((ms, jitter)) = chaos.delay_ms(rank) {
+                f = f.with_delay(ms, jitter);
+            }
+        }
+        f
+    };
 
     let (mut el, mut session, start_epoch) = if cfg.join {
         // ---- the rejoin path: dial back into the running job ----
@@ -768,7 +921,7 @@ fn train_classifier_tcp_elastic(
             .unwrap_or_else(|e| panic!("rank {rank}: wrapping the rejoin mesh: {e}"));
         let view = Epoch::from_mask(grant.epoch, grant.live_mask, n);
         assert!(view.is_live(rank), "the granted view must include the joiner");
-        let mut el = Elastic::with_epoch(tp, view, Some(deadline));
+        let mut el = Elastic::with_epoch(arm_faults(tp), view, Some(deadline));
         // Rank 0's boundary broadcast runs under the granted view, so the
         // admission frame arrives here too; consume it and cross-check the
         // grant against what the survivors were told.
@@ -777,14 +930,23 @@ fn train_classifier_tcp_elastic(
             .unwrap_or_else(|e| panic!("rank {rank}: receiving the admission frame: {e}"));
         let (epoch, joined) = crate::membership::decode_epoch_frame(&m, n)
             .unwrap_or_else(|e| panic!("rank {rank}: decoding the admission frame: {e}"));
-        assert_eq!(joined, Some(rank), "the admission frame must name this rank");
+        assert!(
+            (joined >> rank) & 1 == 1,
+            "the admission frame's joiner mask {joined:#x} must include this rank"
+        );
         assert_eq!(epoch, view, "grant and boundary frame disagree on the view");
-        joins += 1;
+        joins += joined.count_ones() as u64;
+        events.push(super::metrics::EpochEvent {
+            epoch: epoch.id(),
+            step: grant.step,
+            evicted: 0,
+            joined,
+        });
         (el, session, (grant.step / iters_per_epoch as u64) as usize)
     } else {
         let (tp, session) = TcpTransport::connect_v2(rendezvous_addr, rank, n)
             .unwrap_or_else(|e| panic!("joining job at {rendezvous_addr} as rank {rank}/{n}: {e}"));
-        let mut el = Elastic::new(tp, Some(deadline));
+        let mut el = Elastic::new(arm_faults(tp), Some(deadline));
         let mut start_epoch = 0usize;
         if let Some(path) = &cfg.ckpt {
             if path.exists() {
@@ -885,26 +1047,63 @@ fn train_classifier_tcp_elastic(
 
         // ---- the epoch boundary: the only place membership changes ----
         let round = engine.step_count();
-        let mut admit = None;
-        if rank == 0 && el.live_count() < n {
-            // Short-handed: give a restarting rank one deadline window to
-            // park at the rendezvous.  A full fleet skips the poll — the
-            // happy path costs nothing here.
-            match session.poll_join_deadline(deadline) {
-                Ok(Some(req)) if !el.is_live(req.rank) => {
+        let mut admit = 0u64;
+        if rank == 0 && el.pending_down() == 0 && el.live_count() < n {
+            // Short-handed with the pending deaths already flushed: give
+            // restarting ranks one deadline window to park at the
+            // rendezvous, then admit every distinct non-live request as a
+            // batch — granted in rank order under one epoch frame.  A
+            // boundary with deaths still pending evicts first and admits
+            // at the next one (the epoch mask algebra keeps evict and
+            // admit disjoint per transition); a full fleet skips the poll
+            // — the happy path costs nothing here.
+            let mut reqs: Vec<rendezvous::JoinRequest> = Vec::new();
+            let capacity = n - el.live_count();
+            let mut window = deadline;
+            while reqs.len() < capacity {
+                match session.poll_join_deadline(window) {
+                    Ok(Some(req))
+                        if !el.is_live(req.rank)
+                            && !reqs.iter().any(|r| r.rank == req.rank) =>
+                    {
+                        reqs.push(req);
+                        // First parked joiner found: the rest of the batch
+                        // is whatever is already waiting — sweep, don't
+                        // wait another window.
+                        window = Duration::ZERO;
+                    }
+                    Ok(Some(req)) => {
+                        eprintln!(
+                            "warning: rank 0: live or duplicate rank {} asked to join — ignored",
+                            req.rank
+                        );
+                        window = Duration::ZERO;
+                    }
+                    Ok(None) => break,
+                    Err(e) => {
+                        eprintln!("warning: rank 0: join poll failed: {e}");
+                        break;
+                    }
+                }
+            }
+            if !reqs.is_empty() {
+                reqs.sort_by_key(|r| r.rank);
+                let joiners = reqs.iter().fold(0u64, |m, r| m | 1u64 << r.rank);
+                let next =
+                    el.epoch().advance(el.pending_down() & el.epoch().live_mask(), joiners);
+                let blob = Checkpoint::capture_engine(engine).to_bytes();
+                for req in reqs {
                     let j = req.rank;
-                    let next =
-                        el.epoch().advance(el.pending_down() & el.epoch().live_mask(), Some(j));
-                    let blob = Checkpoint::capture_engine(engine).to_bytes();
                     let granted = session
-                        .grant_join(req, next.id(), round, next.live_mask(), &blob)
+                        .grant_join(req, next.id(), round, next.live_mask(), joiners, &blob)
                         .and_then(|()| session.accept_rejoin());
                     match granted {
                         Ok((peer, stream)) if peer == j => {
                             el.inner_mut()
+                                .inner_mut()
                                 .install_link(j, stream)
                                 .unwrap_or_else(|e| panic!("rank 0: relinking rank {j}: {e}"));
-                            admit = Some(j);
+                            admit |= 1u64 << j;
                         }
                         Ok((peer, _)) => eprintln!(
                             "warning: rank 0: rank {peer} re-dialed while rank {j} held the \
@@ -913,14 +1112,9 @@ fn train_classifier_tcp_elastic(
                         Err(e) => eprintln!("warning: rank 0: admitting rank {j} failed: {e}"),
                     }
                 }
-                Ok(Some(req)) => {
-                    eprintln!("warning: rank 0: live rank {} asked to join — ignored", req.rank)
-                }
-                Ok(None) => {}
-                Err(e) => eprintln!("warning: rank 0: join poll failed: {e}"),
             }
         }
-        let mut just_joined = None;
+        let mut just_joined = 0u64;
         if let Some(tr) = el
             .epoch_boundary(round, admit)
             .unwrap_or_else(|e| panic!("rank {rank}: epoch boundary at step {round}: {e}"))
@@ -928,30 +1122,44 @@ fn train_classifier_tcp_elastic(
             evictions += u64::from(tr.evicted.count_ones());
             for r in 0..n {
                 if (tr.evicted >> r) & 1 == 1 {
-                    el.inner_mut().drop_link(r);
+                    el.inner_mut().inner_mut().drop_link(r);
                 }
             }
-            if let Some(j) = tr.joined {
-                joins += 1;
-                just_joined = Some(j);
-                if rank != 0 {
-                    // The joiner re-dialed this rank's data listener when
-                    // the grant arrived; adopt the fresh stream.
+            joins += u64::from(tr.joined.count_ones());
+            just_joined = tr.joined;
+            if tr.joined != 0 && rank != 0 {
+                // Every joiner re-dialed this rank's data listener when its
+                // grant arrived; adopt the fresh streams.  Dials land in
+                // whatever order the joiners raced, so match them against
+                // the frame's mask instead of assuming rank order.
+                let mut expect = tr.joined;
+                while expect != 0 {
                     let (peer, stream) = session.accept_rejoin().unwrap_or_else(|e| {
-                        panic!("rank {rank}: accepting rejoined rank {j}: {e}")
+                        panic!("rank {rank}: accepting rejoined ranks {expect:#x}: {e}")
                     });
-                    assert_eq!(peer, j, "rejoin handshake names the wrong rank");
+                    assert!(
+                        peer < 64 && (expect >> peer) & 1 == 1,
+                        "rejoin handshake from rank {peer} outside the joiner mask {expect:#x}"
+                    );
+                    expect &= !(1u64 << peer);
                     el.inner_mut()
-                        .install_link(j, stream)
-                        .unwrap_or_else(|e| panic!("rank {rank}: relinking rank {j}: {e}"));
+                        .inner_mut()
+                        .install_link(peer, stream)
+                        .unwrap_or_else(|e| panic!("rank {rank}: relinking rank {peer}: {e}"));
                 }
             }
+            events.push(super::metrics::EpochEvent {
+                epoch: tr.epoch.id(),
+                step: round,
+                evicted: tr.evicted,
+                joined: tr.joined,
+            });
         }
 
         // ---- telemetry: ship this boundary's delta snapshot to rank 0,
         // riding the control plane right behind the epoch broadcast ----
         if metrics_on {
-            obs::metrics::sync_from_peers(&el.inner().per_peer);
+            obs::metrics::sync_from_peers(&el.inner().inner().per_peer);
             obs::metrics::gauge_set(obs::metrics::Gauge::LiveRanks, el.live_count() as f64);
             obs::metrics::gauge_set(obs::metrics::Gauge::EpochId, el.epoch().id() as f64);
             obs::metrics::gauge_set(
@@ -969,7 +1177,7 @@ fn train_classifier_tcp_elastic(
                     // The joiner admitted *at* this boundary enters the
                     // loop next epoch and ships nothing yet; pending-down
                     // ranks are dead in all but name.
-                    if r == 0 || Some(r) == just_joined || (pending >> r) & 1 == 1 {
+                    if r == 0 || (just_joined >> r) & 1 == 1 || (pending >> r) & 1 == 1 {
                         continue;
                     }
                     // Inner transport on purpose: a missed metrics frame
@@ -1016,7 +1224,7 @@ fn train_classifier_tcp_elastic(
     let final_view = el.epoch();
     let live_mask = final_view.live_mask() & !el.pending_down();
     let censor_events = el.censor_events();
-    let tp = el.into_inner();
+    let tp = el.into_inner().into_inner();
     metrics_finish(cfg);
     RunRecord {
         name: String::new(),
@@ -1035,6 +1243,8 @@ fn train_classifier_tcp_elastic(
             joins,
             payload_bits_sent: tp.per_peer.iter().map(|p| p.payload_bits_sent).sum(),
             payload_bits_received: tp.per_peer.iter().map(|p| p.payload_bits_received).sum(),
+            events,
+            links: tp.per_peer.clone(),
         }),
     }
 }
@@ -1194,6 +1404,52 @@ mod tests {
             rec_res.points.last().unwrap().cum_bits,
             "bucketed accounting drifted between central and resident"
         );
+    }
+
+    #[test]
+    fn chaos_matrix_parses_and_validates() {
+        let spec = ChaosSpec::parse(
+            "kill:1@5,slow:2:40,drop:3:0.25,delay:2:10:5,flap:4@8:250",
+        )
+        .unwrap();
+        assert_eq!(spec.kill, vec![(1, 5)]);
+        assert_eq!(spec.slow, vec![(2, 40)]);
+        assert_eq!(spec.drop, vec![(3, 0.25)]);
+        assert_eq!(spec.delay, vec![(2, 10, 5)]);
+        assert_eq!(spec.flap, vec![(4, 8, 250)]);
+        assert_eq!(spec.kill_step(1), Some(5));
+        assert_eq!(spec.kill_step(4), Some(8), "flap's kill half counts as a death");
+        assert_eq!(spec.drop_prob(3), Some(0.25));
+        assert_eq!(spec.delay_ms(2), Some((10, 5)));
+        assert_eq!(spec.flap(4), Some((8, 250)));
+        let mut ranks: Vec<usize> = spec.ranks().collect();
+        ranks.sort_unstable();
+        assert_eq!(ranks, vec![1, 2, 2, 3, 4]);
+        // In-budget plans validate; out-of-budget steps are launch errors.
+        spec.validate(10).unwrap();
+        assert!(spec.validate(8).unwrap_err().contains("flap:4@8"));
+        assert!(spec.validate(5).unwrap_err().contains("kill:1@5"));
+        assert!(ChaosSpec::parse("kill:2@3,flap:2@7:100")
+            .unwrap()
+            .validate(10)
+            .unwrap_err()
+            .contains("2 times"));
+    }
+
+    #[test]
+    fn chaos_matrix_rejects_malformed_directives() {
+        // Rank 0 is the control plane: kill/drop/flap on it are refused.
+        assert!(ChaosSpec::parse("kill:0@3").is_err());
+        assert!(ChaosSpec::parse("drop:0:0.5").is_err());
+        assert!(ChaosSpec::parse("flap:0@3:100").is_err());
+        // ... but slow/delay on rank 0 are legal (latency, not loss).
+        assert!(ChaosSpec::parse("slow:0:20,delay:0:5:0").is_ok());
+        // Probability range and shape errors are parse-time.
+        assert!(ChaosSpec::parse("drop:2:1.5").unwrap_err().contains("outside [0, 1]"));
+        assert!(ChaosSpec::parse("drop:2:-0.1").is_err());
+        assert!(ChaosSpec::parse("delay:2:10").is_err(), "delay wants rank:ms:jitter");
+        assert!(ChaosSpec::parse("flap:2@5").is_err(), "flap wants rank@step:downtime");
+        assert!(ChaosSpec::parse("teleport:2@5").is_err());
     }
 
     #[test]

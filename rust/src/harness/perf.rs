@@ -76,6 +76,16 @@
 //! `trace_overhead`, `speedup_vs_reference` is bare median / metered
 //! median; the static-atomic registry puts the target above 0.98 (< 2%
 //! overhead).  `median_ns` is the metered time.
+//!
+//! v6 adds the `ring_partial_participation` entry (kind `collective`): the
+//! same elastic-wrapper comparison on the **ring route** — whole-vector
+//! GRBS psync (shared support ⇒ ring reduce-scatter/all-gather), raw mesh
+//! vs `membership::Elastic`-wrapped, full fleet live.  The elastic ring
+//! rebuilds its schedule from the boundary-agreed view mask each round, so
+//! the happy-path cost is the mask read plus the deadline-aware segment
+//! recvs.  `speedup_vs_reference` is raw ring median / elastic ring
+//! median; same < 2% overhead target as `partial_participation`, and the
+//! accounted bits must match the raw ring exactly.
 
 use crate::collective::bucket::SyncBuckets;
 use crate::compressor::{Compressor, Grbs, TopK};
@@ -94,7 +104,7 @@ use std::sync::mpsc::channel;
 use std::sync::Arc;
 use std::time::Duration;
 
-pub const SCHEMA: &str = "cser-bench-engine/v5";
+pub const SCHEMA: &str = "cser-bench-engine/v6";
 
 #[derive(Debug, Clone)]
 pub struct PerfEntry {
@@ -581,6 +591,108 @@ pub fn run(quick: bool) -> PerfReport {
         median_ns: elastic_ns,
         bits_per_step: bits_elastic as f64,
         speedup_vs_reference: seq_ns / elastic_ns,
+    });
+
+    // ---- elastic membership on the ring route: GRBS whole-vector psync ----
+    // Shared-support compressors take the ring reduce-scatter/all-gather;
+    // the elastic wrapper rebuilds the ring schedule from the boundary-
+    // agreed view mask every round, so with the full fleet live its cost is
+    // that mask read plus deadline-aware segment recvs.  Raw first:
+    let eps = channel_mesh(n_coll);
+    let (rdone_tx, rdone_rx) = channel::<u64>();
+    let mut rcmd_txs = Vec::with_capacity(n_coll);
+    let mut rhandles = Vec::with_capacity(n_coll);
+    for (w, mut tp) in eps.into_iter().enumerate() {
+        let (cmd_tx, cmd_rx) = channel::<u64>(); // round to run; 0 = stop
+        rcmd_txs.push(cmd_tx);
+        let mut v = base[w].clone();
+        let done = rdone_tx.clone();
+        rhandles.push(std::thread::spawn(move || {
+            let c: Arc<dyn Compressor> = Arc::new(Grbs::new(16.0, dc / 1024, 5));
+            let mut scratch = crate::compressor::Scratch::new();
+            while let Ok(round) = cmd_rx.recv() {
+                if round == 0 {
+                    break;
+                }
+                let r = peer::psync_with(&mut tp, &mut v, None, c.as_ref(), round, &mut scratch)
+                    .expect("ring psync");
+                done.send(r.upload_bits_per_worker).expect("bench collector");
+            }
+        }));
+    }
+    let mut bits_ring = 0u64;
+    b.run("psync_ring_grbs_n4", || {
+        round += 1;
+        for tx in &rcmd_txs {
+            tx.send(round).expect("bench worker");
+        }
+        for _ in 0..n_coll {
+            bits_ring = rdone_rx.recv().expect("bench worker");
+        }
+    });
+    let ring_ns = b.results.last().unwrap().median_ns;
+    for tx in &rcmd_txs {
+        tx.send(0).expect("bench worker");
+    }
+    for h in rhandles {
+        h.join().expect("ring bench worker");
+    }
+    // Same workload with every endpoint wrapped in `membership::Elastic`.
+    let eps = channel_mesh(n_coll);
+    let (gdone_tx, gdone_rx) = channel::<u64>();
+    let mut gcmd_txs = Vec::with_capacity(n_coll);
+    let mut ghandles = Vec::with_capacity(n_coll);
+    for (w, tp) in eps.into_iter().enumerate() {
+        let (cmd_tx, cmd_rx) = channel::<u64>(); // round to run; 0 = stop
+        gcmd_txs.push(cmd_tx);
+        let mut v = base[w].clone();
+        let done = gdone_tx.clone();
+        ghandles.push(std::thread::spawn(move || {
+            let c: Arc<dyn Compressor> = Arc::new(Grbs::new(16.0, dc / 1024, 5));
+            let mut scratch = crate::compressor::Scratch::new();
+            let mut el = crate::membership::Elastic::new(tp, Some(Duration::from_secs(5)));
+            while let Ok(round) = cmd_rx.recv() {
+                if round == 0 {
+                    break;
+                }
+                let r = peer::psync_with(&mut el, &mut v, None, c.as_ref(), round, &mut scratch)
+                    .expect("elastic ring psync");
+                done.send(r.upload_bits_per_worker).expect("bench collector");
+            }
+        }));
+    }
+    let mut bits_ring_elastic = 0u64;
+    b.run("psync_ring_elastic_grbs_n4", || {
+        round += 1;
+        for tx in &gcmd_txs {
+            tx.send(round).expect("bench worker");
+        }
+        for _ in 0..n_coll {
+            bits_ring_elastic = gdone_rx.recv().expect("bench worker");
+        }
+    });
+    let ring_elastic_ns = b.results.last().unwrap().median_ns;
+    for tx in &gcmd_txs {
+        tx.send(0).expect("bench worker");
+    }
+    for h in ghandles {
+        h.join().expect("elastic ring bench worker");
+    }
+    // Full fleet, nobody censored: the elastic ring must account exactly
+    // the bits the raw ring accounts.
+    assert_eq!(
+        bits_ring_elastic, bits_ring,
+        "elastic ring happy path must account the same bits as the raw ring"
+    );
+    entries.push(PerfEntry {
+        name: "ring_partial_participation".into(),
+        kind: "collective",
+        d: dc,
+        workers: n_coll,
+        batch: 0,
+        median_ns: ring_elastic_ns,
+        bits_per_step: bits_ring_elastic as f64,
+        speedup_vs_reference: ring_ns / ring_elastic_ns,
     });
 
     // ---- tracing overhead: the CSER engine step, tracing off vs on ----

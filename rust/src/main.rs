@@ -14,14 +14,22 @@
 //! cser train-lm [--preset tiny|small] [--opt cser|sgd|...] [--steps N] ...
 //! cser launch   [--workers N] [--opt ...] [--epochs N] [--ckpt-dir D]
 //!               [--buckets K] [--trace D] [--elastic] [--deadline-ms T]
-//!               [--chaos kill:<r>@<s>,slow:<r>:<ms>]
+//!               [--chaos kill:<r>@<s>,slow:<r>:<ms>,drop:<r>:<p>,
+//!                        delay:<r>:<ms>:<jitter>,flap:<r>@<s>:<down_ms>]
 //!               [--metrics-addr H:P] [--adaptive-tau B]
 //!                                          spawn N worker processes over
 //!                                          loopback TCP, print the RunRecord
-//!                                          (K > 1: bucketed sync pipeline;
+//!                                          (K > 1: bucketed sync pipeline,
+//!                                          composable with --elastic;
 //!                                          --trace: per-rank phase traces;
 //!                                          --elastic/--chaos: epoch-based
-//!                                          membership + fault injection;
+//!                                          membership + fault injection —
+//!                                          drop/delay perturb a rank's sends,
+//!                                          flap kills it at step <s> and the
+//!                                          launcher respawns it with --join
+//!                                          after <down_ms> ms; specs are
+//!                                          validated against the run's step
+//!                                          count before anything spawns;
 //!                                          --metrics-addr: rank 0 serves the
 //!                                          fleet metrics view over HTTP;
 //!                                          --adaptive-tau: censor threshold
@@ -343,13 +351,6 @@ fn worker(args: &Args) -> anyhow::Result<()> {
             .is_some_and(|a| a.ip().is_loopback());
         anyhow::ensure!(loopback, "--chaos is loopback-only ({rendezvous} is not loopback)");
     }
-    if cfg.elastic {
-        anyhow::ensure!(
-            cfg.buckets <= 1,
-            "--elastic runs the whole-vector sync path; drop --buckets"
-        );
-    }
-
     let (train, test, model) = dist_workload();
     let init = cser::models::GradModel::init(&model, cfg.seed);
     // One rank = one worker: the engine holds only this rank's state.
@@ -392,6 +393,14 @@ fn launch(args: &Args) -> anyhow::Result<()> {
         for r in c.ranks() {
             anyhow::ensure!(r < n, "--chaos names rank {r}, but the job has {n} workers");
         }
+        // Reject steps the run will never reach *before* spawning anything:
+        // mirror the workers' step arithmetic over the shared workload so a
+        // mistyped `kill:<r>@<s>` fails in milliseconds, not after a clean
+        // full-length run that never fired the fault.
+        let epochs = args.usize("epochs", 4)?;
+        let batch = args.usize("batch", 16)?;
+        let total_steps = (epochs * (dist_workload().0.len() / (batch * n)).max(1)) as u64;
+        c.validate(total_steps).map_err(|e| anyhow::anyhow!(e))?;
     }
     let addr = cser::transport::rendezvous::free_loopback_addr()
         .map_err(|e| anyhow::anyhow!("reserving a rendezvous port: {e}"))?;
@@ -441,7 +450,60 @@ fn launch(args: &Args) -> anyhow::Result<()> {
     }
 
     let mut failures = Vec::new();
+    // Flap ranks die early and come back: wait those workers out first,
+    // sleep the configured downtime, then respawn each rank with --join so
+    // it re-enters the running job through rank 0's checkpoint grant.  The
+    // respawn drops --chaos — a flapped rank comes back clean (its state
+    // arrives in the grant blob, so --ckpt is unnecessary too).
+    let mut respawned: Vec<(usize, std::process::Child)> = Vec::new();
     for (rank, child) in children.iter_mut() {
+        let Some((_, down_ms)) = chaos.as_ref().and_then(|c| c.flap(*rank)) else { continue };
+        match child.wait() {
+            Ok(status) if status.success() => {
+                failures.push(format!("rank {rank} was marked for a chaos flap but exited cleanly"));
+                continue;
+            }
+            Ok(status) => eprintln!("launch: rank {rank} flapped down as planned ({status})"),
+            Err(e) => {
+                failures.push(format!("rank {rank} unwaitable: {e}"));
+                continue;
+            }
+        }
+        std::thread::sleep(std::time::Duration::from_millis(down_ms));
+        let mut cmd = std::process::Command::new(&exe);
+        cmd.arg("worker")
+            .arg("--rendezvous")
+            .arg(&addr)
+            .arg("--rank")
+            .arg(rank.to_string())
+            .arg("--workers")
+            .arg(n.to_string())
+            .arg("--record")
+            .arg(&records[*rank])
+            .arg("--join")
+            .arg("true")
+            .arg("--elastic")
+            .arg("true");
+        for key in [
+            "opt", "rc1", "rc2", "h", "epochs", "batch", "lr", "beta", "seed", "buckets", "trace",
+            "deadline-ms", "adaptive-tau",
+        ] {
+            if let Some(v) = args.opt_str(key) {
+                cmd.arg(format!("--{key}")).arg(v);
+            }
+        }
+        match cmd.spawn() {
+            Ok(c) => {
+                eprintln!("launch: rank {rank} respawning with --join after {down_ms}ms down");
+                respawned.push((*rank, c));
+            }
+            Err(e) => failures.push(format!("respawning flapped rank {rank}: {e}")),
+        }
+    }
+    for (rank, child) in children.iter_mut() {
+        if chaos.as_ref().is_some_and(|c| c.flap(*rank).is_some()) {
+            continue; // waited (and respawned) above
+        }
         let expected_kill = chaos.as_ref().is_some_and(|c| c.kill_step(*rank).is_some());
         match child.wait() {
             Ok(status) if status.success() => {
@@ -456,6 +518,15 @@ fn launch(args: &Args) -> anyhow::Result<()> {
             }
             Ok(status) => failures.push(format!("rank {rank} exited with {status}")),
             Err(e) => failures.push(format!("rank {rank} unwaitable: {e}")),
+        }
+    }
+    for (rank, mut child) in respawned {
+        match child.wait() {
+            Ok(status) if status.success() => {
+                eprintln!("launch: rank {rank} rejoined and finished cleanly");
+            }
+            Ok(status) => failures.push(format!("respawned rank {rank} exited with {status}")),
+            Err(e) => failures.push(format!("respawned rank {rank} unwaitable: {e}")),
         }
     }
     anyhow::ensure!(failures.is_empty(), "launch failed: {}", failures.join("; "));

@@ -17,9 +17,14 @@
 //! * [`Elastic::epoch_boundary`] is the round-boundary view change: the
 //!   fleet agrees (via the existing [`peer::agree`] control collective)
 //!   whether membership changed, then rank 0 broadcasts the next epoch
-//!   — evictions observed this round, plus at most one admitted joiner —
-//!   as a [`Tag::Epoch`] frame.  Joins and evictions happen *only* here,
-//!   never mid-collective;
+//!   — evictions observed this round, plus the whole batch of admitted
+//!   joiners — as a [`Tag::Epoch`] frame.  Joins and evictions happen
+//!   *only* here, never mid-collective.  The boundary is also where
+//!   ring-routed plans re-form: a mid-round death stalls the ring, the
+//!   survivors redo that round over the parameter-server fallback
+//!   (censored and rescaled like any partial round), and the next
+//!   boundary's agreed view is what the rebuilt ring schedule is derived
+//!   from ([`PeerTransport::view_mask`]);
 //! * [`censor_seed`] derives the censoring cadence's initial threshold
 //!   from the wire backpressure counters ([`PeerCounters`]), tying the
 //!   "transmit only when it matters" rule to observed congestion.
@@ -39,7 +44,8 @@ use std::time::Duration;
 /// Hard cap on elastic fleets: the live view travels as one u64 mask.
 pub const MAX_RANKS: usize = 64;
 
-/// Bit length of a [`Tag::Epoch`] frame: epoch id, live mask, joiner+1.
+/// Bit length of a [`Tag::Epoch`] frame: epoch id, live mask, joiner mask
+/// (zero = no admissions this transition).
 const EPOCH_FRAME_BITS: usize = 192;
 
 /// One epoch's membership view: which of the `n` physical ranks are live.
@@ -94,17 +100,24 @@ impl Epoch {
         (0..self.n).filter(|r| self.is_live(*r))
     }
 
-    /// The successor view: `evict` leaves, `admit` (re)joins, id advances.
-    /// Rank 0 cannot be evicted; the admitted rank must be a known
-    /// physical rank.
-    pub fn advance(&self, evict: u64, admit: Option<usize>) -> Epoch {
+    /// The successor view: the `evict` mask leaves, the `admit` mask
+    /// (re)joins, id advances.  Rank 0 cannot be evicted; admitted ranks
+    /// must be known physical ranks; a rank cannot do both in one
+    /// transition.  Masks make multi-joiner boundaries first-class: one
+    /// transition admits every granted rank under a single epoch id, and
+    /// disjoint evict/admit sets compose commutatively (see the property
+    /// tests below).
+    pub fn advance(&self, evict: u64, admit: u64) -> Epoch {
         assert_eq!(evict & 1, 0, "rank 0 is the control plane and is not evictable");
-        let mut live = self.live & !evict;
-        if let Some(j) = admit {
-            assert!(j < self.n, "admitted rank {j} outside the physical fleet 0..{}", self.n);
-            live |= 1u64 << j;
-        }
-        Epoch { id: self.id + 1, live, n: self.n }
+        let full = if self.n == MAX_RANKS { u64::MAX } else { (1u64 << self.n) - 1 };
+        assert_eq!(
+            admit & !full,
+            0,
+            "admit mask {admit:#x} names ranks outside the physical fleet 0..{}",
+            self.n
+        );
+        assert_eq!(evict & admit, 0, "a rank cannot be evicted and admitted in one transition");
+        Epoch { id: self.id + 1, live: (self.live & !evict) | admit, n: self.n }
     }
 }
 
@@ -116,8 +129,9 @@ pub struct Transition {
     pub epoch: Epoch,
     /// Mask of ranks evicted by this transition.
     pub evicted: u64,
-    /// The rank admitted by this transition, if any.
-    pub joined: Option<usize>,
+    /// Mask of ranks admitted by this transition (zero when none) — a
+    /// boundary grants every parked join request at once, under one epoch.
+    pub joined: u64,
 }
 
 /// A [`PeerTransport`] under elastic membership: censor-don't-crash for
@@ -134,6 +148,12 @@ pub struct Elastic<T: PeerTransport> {
     timeout: Option<Duration>,
     /// Ranks seen dead since the last boundary; evicted at the next one.
     pending_down: u64,
+    /// A ring attempt stalled this epoch (deadline expiry or absorbed
+    /// death mid-cycle).  While set, [`PeerTransport::ring_degraded`]
+    /// routes ring-shaped rounds straight to the parameter-server fallback
+    /// instead of burning a deadline per attempt; every boundary clears it
+    /// (quiet or not), so the re-formed ring gets a fresh try.
+    ring_suspect: bool,
     /// Rounds-censored-total (deaths and deadline misses), for RunRecord
     /// accounting and the harnesses.
     censor_events: u64,
@@ -153,7 +173,7 @@ impl<T: PeerTransport> Elastic<T> {
         if let Some(t) = timeout {
             assert!(t > Duration::ZERO, "round deadline must be positive");
         }
-        Elastic { inner, epoch, timeout, pending_down: 0, censor_events: 0 }
+        Elastic { inner, epoch, timeout, pending_down: 0, ring_suspect: false, censor_events: 0 }
     }
 
     pub fn epoch(&self) -> Epoch {
@@ -185,50 +205,70 @@ impl<T: PeerTransport> Elastic<T> {
     }
 
     /// The round-boundary membership change (DESIGN.md §8).  Every live
-    /// rank calls this at the same `round`; only rank 0 passes `joiner`
-    /// (the rank it granted a rejoin to since the last boundary, its data
-    /// link already installed).  Returns the transition when the view
-    /// changed, `None` on the (overwhelmingly common) quiet boundary —
-    /// whose cost is one flag-bit agree.
+    /// rank calls this at the same `round`; only rank 0 passes a non-zero
+    /// `joiners` mask (every rank it granted a rejoin to since the last
+    /// boundary, their data links already installed — a batch is admitted
+    /// under one epoch frame, in rank order).  Returns the transition when
+    /// the view changed, `None` on the (overwhelmingly common) quiet
+    /// boundary — whose cost is one flag-bit agree.
+    ///
+    /// Every boundary — quiet or not — also clears the ring-stall latch:
+    /// the boundary is the agreement point where ring-routed plans re-form
+    /// their schedule over the (possibly unchanged) live view.
     pub fn epoch_boundary(
         &mut self,
         round: u64,
-        joiner: Option<usize>,
+        joiners: u64,
     ) -> Result<Option<Transition>, TransportError> {
-        if let Some(j) = joiner {
+        if joiners != 0 {
             assert_eq!(self.rank(), 0, "only the control plane admits joiners");
-            assert!(!self.is_live(j), "joiner rank {j} is already live");
+            assert_eq!(
+                joiners & self.epoch.live_mask(),
+                0,
+                "joiner mask {joiners:#x} names already-live ranks"
+            );
         }
-        let changed = peer::agree(self, self.pending_down != 0 || joiner.is_some(), round)?;
+        let changed = peer::agree(self, self.pending_down != 0 || joiners != 0, round)?;
         if !changed {
+            // A stall without an observed death (a slow peer): the view
+            // stands, and the next epoch retries the ring.
+            self.ring_suspect = false;
             return Ok(None);
         }
         let prev = self.epoch;
         if self.rank() == 0 {
             let evicted = self.pending_down & prev.live_mask();
-            self.epoch = prev.advance(evicted, joiner);
+            self.epoch = prev.advance(evicted, joiners);
             self.pending_down = 0;
+            self.ring_suspect = false;
             let mut w = BitWriter::new();
             w.write(self.epoch.id(), 64);
             w.write(self.epoch.live_mask(), 64);
-            w.write(joiner.map_or(0, |j| j as u64 + 1), 64);
+            w.write(joiners, 64);
             // Sent under the *new* view: evicted ranks are skipped (they
-            // are dead), the joiner is included (its link is live).
+            // are dead), joiners are included (their links are live).
             self.broadcast(round, Tag::Epoch, w.finish())?;
-            Ok(Some(Transition { epoch: self.epoch, evicted, joined: joiner }))
+            Ok(Some(Transition { epoch: self.epoch, evicted, joined: joiners }))
         } else {
-            let m = self.recv(0, round, Tag::Epoch)?;
+            // Deadline-less drain-capable receive: leftover ring chunks
+            // from an aborted attempt may sit ahead of the epoch frame.
+            let m = self
+                .inner
+                .recv_deadline(0, round, Tag::Epoch, None)?
+                .ok_or_else(|| TransportError::failed("epoch frame missed with no deadline"))?;
             let (epoch, joined) = decode_epoch_frame(&m, prev.n())?;
             self.epoch = epoch;
             self.pending_down = 0;
+            self.ring_suspect = false;
             let evicted = prev.live_mask() & !epoch.live_mask();
             Ok(Some(Transition { epoch, evicted, joined }))
         }
     }
 }
 
-/// Parse a [`Tag::Epoch`] frame into the view it announces.
-pub fn decode_epoch_frame(m: &WireMsg, n: usize) -> Result<(Epoch, Option<usize>), TransportError> {
+/// Parse a [`Tag::Epoch`] frame into the view it announces and the mask of
+/// ranks this transition admitted (zero when none).
+pub fn decode_epoch_frame(m: &WireMsg, n: usize) -> Result<(Epoch, u64), TransportError> {
     if m.bit_len != EPOCH_FRAME_BITS {
         return Err(TransportError::failed(format!(
             "epoch frame is {} bits, expected {EPOCH_FRAME_BITS}",
@@ -238,23 +278,20 @@ pub fn decode_epoch_frame(m: &WireMsg, n: usize) -> Result<(Epoch, Option<usize>
     let mut r = m.reader();
     let id = r.read(64);
     let live = r.read(64);
-    let joiner = r.read(64);
+    let joined = r.read(64);
     let full = Epoch::full(n).live_mask();
     if live & !full != 0 || live & 1 != 1 {
         return Err(TransportError::failed(format!(
             "epoch frame live mask {live:#x} is invalid for a fleet of {n}"
         )));
     }
-    let joined = match joiner {
-        0 => None,
-        j if (j as usize) <= n => Some(j as usize - 1),
-        j => {
-            return Err(TransportError::failed(format!(
-                "epoch frame admits rank {} outside the fleet of {n}",
-                j - 1
-            )))
-        }
-    };
+    // Every admitted rank must be inside the announced view, inside the
+    // physical fleet, and not rank 0 (the control plane never rejoins).
+    if joined & !full != 0 || joined & 1 != 0 || joined & !live != 0 {
+        return Err(TransportError::failed(format!(
+            "epoch frame joiner mask {joined:#x} is invalid for live view {live:#x}"
+        )));
+    }
     Ok((Epoch::from_mask(id, live, n), joined))
 }
 
@@ -314,6 +351,24 @@ impl<T: PeerTransport> PeerTransport for Elastic<T> {
 
     fn round_timeout(&self) -> Option<Duration> {
         self.timeout
+    }
+
+    fn view_mask(&self) -> u64 {
+        // The *boundary-agreed* view, deliberately ignoring `pending_down`:
+        // a locally-suspected death is asymmetric knowledge until the next
+        // boundary, and ring order must be derived from a mask every
+        // participant shares.
+        self.epoch.live_mask()
+    }
+
+    fn ring_degraded(&self) -> bool {
+        self.ring_suspect || self.pending_down != 0
+    }
+
+    fn on_ring_stall(&mut self) {
+        // Censor accounting happened where the stall was observed (the
+        // deadline miss or the absorbed death); this only latches.
+        self.ring_suspect = true;
     }
 
     fn recv_deadline(
@@ -392,11 +447,11 @@ mod tests {
         assert_eq!(e.id(), 0);
         assert_eq!(e.live_mask(), 0b1111);
         assert_eq!(e.live_count(), 4);
-        let e1 = e.advance(0b1000, None);
+        let e1 = e.advance(0b1000, 0);
         assert_eq!(e1.id(), 1);
         assert!(!e1.is_live(3));
         assert_eq!(e1.live_ranks().collect::<Vec<_>>(), vec![0, 1, 2]);
-        let e2 = e1.advance(0, Some(3));
+        let e2 = e1.advance(0, 0b1000);
         assert_eq!(e2.id(), 2);
         assert_eq!(e2.live_mask(), 0b1111);
         // round-trip through the wire frame
@@ -406,13 +461,105 @@ mod tests {
         w.write(0, 64);
         let (got, joined) = decode_epoch_frame(&w.finish(), 4).unwrap();
         assert_eq!(got, e2);
-        assert_eq!(joined, None);
+        assert_eq!(joined, 0);
     }
 
     #[test]
     #[should_panic(expected = "not evictable")]
     fn rank0_is_not_evictable() {
-        Epoch::full(2).advance(0b01, None);
+        Epoch::full(2).advance(0b01, 0);
+    }
+
+    /// Draw a mask over ranks `1..n` (rank 0 always clear).
+    fn mask_in(g: &mut crate::util::prop::Gen, n: usize) -> u64 {
+        let full = Epoch::full(n).live_mask();
+        g.rng.next_u64() & full & !1
+    }
+
+    #[test]
+    fn prop_epoch_mask_algebra() {
+        use crate::util::prop::{forall, Gen};
+        forall(300, 0xE90C, |g: &mut Gen| {
+            let n = g.usize_in(2, MAX_RANKS + 1);
+            let e = Epoch::from_mask(g.usize_in(0, 1000) as u64, Epoch::full(n).live_mask(), n);
+
+            // Rank 0 survives any legal evict mask.
+            let evict = mask_in(g, n);
+            crate::prop_assert!(
+                e.advance(evict, 0).is_live(0),
+                "n={n} evict={evict:#x}: rank 0 must stay live"
+            );
+
+            // Disjoint evict/admit commute: evict-then-admit equals
+            // admit-then-evict equals the one-transition form (up to the
+            // epoch id, which counts transitions).
+            let admit = mask_in(g, n) & !evict;
+            let ea = e.advance(evict, 0).advance(0, admit);
+            let ae = e.advance(0, admit).advance(evict, 0);
+            let both = e.advance(evict, admit);
+            crate::prop_assert!(
+                ea.live_mask() == ae.live_mask() && ea.live_mask() == both.live_mask(),
+                "n={n} evict={evict:#x} admit={admit:#x}: orders disagree ({:#x} / {:#x} / {:#x})",
+                ea.live_mask(),
+                ae.live_mask(),
+                both.live_mask()
+            );
+
+            // Multi-joiner admission is order-independent: granting the
+            // batch in one frame equals admitting the bits one boundary at
+            // a time, in any order (model: shuffle the bit list).
+            let joiners = mask_in(g, n) & !e.live_mask();
+            let batch = e.advance(0, joiners);
+            let mut bits: Vec<u64> =
+                (1..n as u64).filter(|b| (joiners >> b) & 1 == 1).collect();
+            // deterministic shuffle by rotation
+            if !bits.is_empty() {
+                let rot = g.usize_in(0, bits.len());
+                bits.rotate_left(rot);
+            }
+            let mut seq = e;
+            for b in &bits {
+                seq = seq.advance(0, 1u64 << b);
+            }
+            crate::prop_assert!(
+                seq.live_mask() == batch.live_mask(),
+                "n={n} joiners={joiners:#x}: sequential admission diverged from the batch"
+            );
+
+            // Round-trip through the 192-bit epoch frame, joiner mask
+            // included.
+            let mut w = BitWriter::new();
+            w.write(batch.id(), 64);
+            w.write(batch.live_mask(), 64);
+            w.write(joiners, 64);
+            let (got, joined) = decode_epoch_frame(&w.finish(), n)
+                .map_err(|err| format!("n={n}: frame rejected: {err}"))?;
+            crate::prop_assert!(
+                got == batch && joined == joiners,
+                "n={n}: frame round-trip mangled the view"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn epoch_frame_rejects_malformed_joiner_masks() {
+        let frame = |id: u64, live: u64, joined: u64| {
+            let mut w = BitWriter::new();
+            w.write(id, 64);
+            w.write(live, 64);
+            w.write(joined, 64);
+            w.finish()
+        };
+        // Joiner outside the live view.
+        assert!(decode_epoch_frame(&frame(1, 0b0011, 0b0100), 4).is_err());
+        // Joiner outside the physical fleet.
+        assert!(decode_epoch_frame(&frame(1, 0b1111, 1 << 10), 4).is_err());
+        // Rank 0 can never be a joiner.
+        assert!(decode_epoch_frame(&frame(1, 0b1111, 0b0001), 4).is_err());
+        // A legal batch decodes.
+        let (e, j) = decode_epoch_frame(&frame(3, 0b1111, 0b1100), 4).unwrap();
+        assert_eq!((e.id(), e.live_mask(), j), (3, 0b1111, 0b1100));
     }
 
     #[test]
@@ -431,9 +578,9 @@ mod tests {
                 assert!((mean - 2.0).abs() < 1e-12, "mean over responders, got {mean}");
                 assert_eq!(el.pending_down(), 0b100);
                 assert_eq!(el.live_count(), 2);
-                let tr = el.epoch_boundary(1, None).unwrap().expect("view changed");
+                let tr = el.epoch_boundary(1, 0).unwrap().expect("view changed");
                 assert_eq!(tr.evicted, 0b100);
-                assert_eq!(tr.joined, None);
+                assert_eq!(tr.joined, 0);
                 tr.epoch
             });
             let h1 = s.spawn(move || {
@@ -441,7 +588,7 @@ mod tests {
                 let (mean, stop) = peer::vote(&mut el, 1.0, 1e9, 1).unwrap();
                 assert!(!stop);
                 assert!((mean - 2.0).abs() < 1e-12);
-                let tr = el.epoch_boundary(1, None).unwrap().expect("view changed");
+                let tr = el.epoch_boundary(1, 0).unwrap().expect("view changed");
                 tr.epoch
             });
             let e0 = h0.join().unwrap();
@@ -458,21 +605,21 @@ mod tests {
         let mut t2 = fleet.pop().unwrap();
         let t1 = fleet.pop().unwrap();
         let t0 = fleet.pop().unwrap();
-        let view = Epoch::full(3).advance(0b100, None); // rank 2 out
+        let view = Epoch::full(3).advance(0b100, 0); // rank 2 out
         std::thread::scope(|s| {
             let h0 = s.spawn(move || {
                 let mut el = Elastic::with_epoch(t0, view, None);
-                assert!(el.epoch_boundary(5, None).unwrap().is_none(), "quiet boundary");
-                let tr = el.epoch_boundary(6, Some(2)).unwrap().expect("join");
-                assert_eq!(tr.joined, Some(2));
+                assert!(el.epoch_boundary(5, 0).unwrap().is_none(), "quiet boundary");
+                let tr = el.epoch_boundary(6, 0b100).unwrap().expect("join");
+                assert_eq!(tr.joined, 0b100);
                 assert_eq!(tr.epoch.live_mask(), 0b111);
                 tr.epoch
             });
             let h1 = s.spawn(move || {
                 let mut el = Elastic::with_epoch(t1, view, None);
-                assert!(el.epoch_boundary(5, None).unwrap().is_none());
-                let tr = el.epoch_boundary(6, None).unwrap().expect("join");
-                assert_eq!(tr.joined, Some(2));
+                assert!(el.epoch_boundary(5, 0).unwrap().is_none());
+                let tr = el.epoch_boundary(6, 0).unwrap().expect("join");
+                assert_eq!(tr.joined, 0b100);
                 tr.epoch
             });
             // The joiner is outside the agree (it is not live yet); it
@@ -482,7 +629,7 @@ mod tests {
             let h2 = s.spawn(move || {
                 let m = t2.recv(0, 6, Tag::Epoch).unwrap();
                 let (epoch, joined) = decode_epoch_frame(&m, 3).unwrap();
-                assert_eq!(joined, Some(2));
+                assert_eq!(joined, 0b100);
                 epoch
             });
             let e0 = h0.join().unwrap();

@@ -120,6 +120,7 @@ pub fn write_rank_jsonl(
         w.key("blocked_send_ns").int(c.blocked_send_ns as i64);
         w.key("frames_received").int(c.frames_received as i64);
         w.key("payload_bits_received").int(c.payload_bits_received as i64);
+        w.key("stale_discards").int(c.stale_discards as i64);
         w.end_obj();
     }
     w.end_arr();
@@ -166,6 +167,7 @@ pub fn read_rank_jsonl(path: &Path) -> Result<RankTrace, String> {
                     blocked_send_ns: get_u64(p, "blocked_send_ns"),
                     frames_received: get_u64(p, "frames_received"),
                     payload_bits_received: get_u64(p, "payload_bits_received"),
+                    stale_discards: get_u64(p, "stale_discards"),
                 });
             }
             continue;
@@ -331,6 +333,7 @@ pub fn summary_json(ranks: &[RankTrace], trace_path: Option<&Path>) -> String {
             w.key("blocked_send_ns").int(c.blocked_send_ns as i64);
             w.key("frames_received").int(c.frames_received as i64);
             w.key("payload_bits_received").int(c.payload_bits_received as i64);
+            w.key("stale_discards").int(c.stale_discards as i64);
             w.end_obj();
         }
         w.end_arr();
@@ -399,6 +402,7 @@ mod tests {
                 blocked_send_ns: 12,
                 frames_received: 7,
                 payload_bits_received: 4096,
+                stale_discards: 2,
             }],
         }
     }
@@ -487,6 +491,7 @@ mod tests {
                     blocked_send_ns: 0,
                     frames_received: 2,
                     payload_bits_received: 128,
+                    stale_discards: 0,
                 },
             ];
             let path = write_rank_jsonl(&dir, 1, &snaps, &peers)

@@ -49,7 +49,7 @@ use std::time::Duration;
 pub const MAX_PEERS: usize = 64;
 
 /// Fields per peer lane, in [`PeerCounters`] declaration order.
-const PEER_FIELDS: usize = 5;
+const PEER_FIELDS: usize = 6;
 
 /// Monotone counters.  Static IDs: the discriminant is the storage index,
 /// so recording is a single `fetch_add` into a fixed slot.
@@ -231,6 +231,7 @@ pub fn sync_from_peers(peers: &[PeerCounters]) {
         lane[2].store(c.blocked_send_ns, Ordering::Relaxed);
         lane[3].store(c.frames_received, Ordering::Relaxed);
         lane[4].store(c.payload_bits_received, Ordering::Relaxed);
+        lane[5].store(c.stale_discards, Ordering::Relaxed);
     }
 }
 
@@ -248,6 +249,7 @@ pub fn peer_counters() -> Vec<PeerCounters> {
             blocked_send_ns: lane[2].load(Ordering::Relaxed),
             frames_received: lane[3].load(Ordering::Relaxed),
             payload_bits_received: lane[4].load(Ordering::Relaxed),
+            stale_discards: lane[5].load(Ordering::Relaxed),
         })
         .collect()
 }
@@ -351,6 +353,7 @@ fn peer_delta(cur: &PeerCounters, last: &PeerCounters) -> PeerCounters {
         payload_bits_received: cur
             .payload_bits_received
             .saturating_sub(last.payload_bits_received),
+        stale_discards: cur.stale_discards.saturating_sub(last.stale_discards),
     }
 }
 
@@ -360,6 +363,7 @@ fn peer_add(acc: &mut PeerCounters, d: &PeerCounters) {
     acc.blocked_send_ns += d.blocked_send_ns;
     acc.frames_received += d.frames_received;
     acc.payload_bits_received += d.payload_bits_received;
+    acc.stale_discards += d.stale_discards;
 }
 
 /// Per-rank shipping state: remembers the registry values at the last
@@ -441,7 +445,7 @@ const SNAP_FIXED_WORDS: usize = 3 + Counter::COUNT + Gauge::COUNT + 4 + BINS + 1
 
 /// Serialize a snapshot as a `Tag::Metrics` frame payload.  Every field
 /// is one little-endian u64 word (gauges as f64 bit patterns), so
-/// `bit_len` is exactly `64 · (fixed + 5·n_peers)`.
+/// `bit_len` is exactly `64 · (fixed + 6·n_peers)`.
 pub fn encode_snapshot(s: &MetricsSnapshot) -> WireMsg {
     let mut words = Vec::with_capacity(SNAP_FIXED_WORDS + PEER_FIELDS * s.peers.len());
     words.push(s.rank as u64);
@@ -461,6 +465,7 @@ pub fn encode_snapshot(s: &MetricsSnapshot) -> WireMsg {
         words.push(p.blocked_send_ns);
         words.push(p.frames_received);
         words.push(p.payload_bits_received);
+        words.push(p.stale_discards);
     }
     let bit_len = words.len() as u64 * 64;
     WireMsg { words, bit_len }
@@ -513,6 +518,7 @@ pub fn decode_snapshot(m: &WireMsg) -> Result<MetricsSnapshot, String> {
             blocked_send_ns: next(),
             frames_received: next(),
             payload_bits_received: next(),
+            stale_discards: next(),
         });
     }
     Ok(MetricsSnapshot {
@@ -728,6 +734,7 @@ impl FleetView {
             ("blocked_send_ns", |p: &PeerCounters| p.blocked_send_ns),
             ("frames_received", |p: &PeerCounters| p.frames_received),
             ("payload_bits_received", |p: &PeerCounters| p.payload_bits_received),
+            ("stale_discards", |p: &PeerCounters| p.stale_discards),
         ] {
             let _ = writeln!(s, "# TYPE cser_peer_{f}_total counter");
             for (r, v) in self.ranks() {
@@ -903,6 +910,7 @@ mod tests {
                 blocked_send_ns: g.rng.next_u64() % 1_000,
                 frames_received: g.rng.next_u64() % 50,
                 payload_bits_received: g.rng.next_u64() % 10_000,
+                stale_discards: g.rng.next_u64() % 10,
             })
             .collect();
         MetricsSnapshot {
@@ -1089,6 +1097,7 @@ mod tests {
                 blocked_send_ns: 5_000,
                 frames_received: 6,
                 payload_bits_received: 2048,
+                stale_discards: 3,
             },
         ];
         sync_from_peers(&peers);

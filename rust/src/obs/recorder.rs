@@ -139,6 +139,11 @@ pub struct PeerCounters {
     pub blocked_send_ns: u64,
     pub frames_received: u64,
     pub payload_bits_received: u64,
+    /// Frames from rounds older than the one the receiver was waiting on,
+    /// read and dropped by `recv_deadline`'s stale-frame drain (leftovers
+    /// of censored rounds; their payload bits still count as received —
+    /// they crossed the wire).
+    pub stale_discards: u64,
 }
 
 static ENABLED: AtomicBool = AtomicBool::new(false);

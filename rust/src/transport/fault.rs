@@ -1,0 +1,231 @@
+//! Fault-injecting transport wrapper: the network half of the chaos
+//! matrix.
+//!
+//! [`FaultTransport`] wraps any [`PeerTransport`] and perturbs its *send*
+//! side only:
+//!
+//! * **drop** — each outgoing frame is discarded with probability `p`
+//!   *before* it reaches the inner transport.  A dropped frame is never
+//!   sent and never counted, so per-link bit accounting stays exactly
+//!   balanced (`sent(a→b) == received(b from a)` still holds — the frame
+//!   simply does not exist on the wire).  The receiver's round deadline
+//!   censors the silent peer, which is precisely the production lossy-
+//!   network behavior the elastic membership layer exists to absorb.
+//! * **delay** — each outgoing frame sleeps `ms + U[0, jitter]`
+//!   milliseconds on the sending thread first, modeling a congested or
+//!   distant link.  Because sends on one link are serialized, sustained
+//!   delay backs up the whole rank — intended: that is what a slow NIC
+//!   does.
+//!
+//! Receives pass through untouched: with send-side-only faults and one
+//! seeded RNG per wrapper, a chaos run's fault schedule is a
+//! deterministic function of `(seed, send sequence)` regardless of
+//! receiver timing.  The wrapper composes under
+//! [`crate::membership::Elastic`] (`Elastic<FaultTransport<TcpTransport>>`)
+//! so the membership layer sees faults exactly as it would see a flaky
+//! network: missed deadlines and stalled rings.  Every membership hook
+//! (`view_mask`, `ring_degraded`, `on_ring_stall`, ...) forwards to the
+//! inner transport; the default `broadcast` loop is inherited on purpose
+//! so per-destination drop decisions apply to fan-outs too.
+//!
+//! The chaos CLI forbids `drop:`/`flap:` on rank 0 — rank 0 is the
+//! control plane (epoch frames, aggregate broadcasts), and workers wait
+//! on it without a deadline by design.
+
+use super::peer::{PeerTransport, Tag, TransportError};
+use super::wire::WireMsg;
+use crate::util::rng::Rng;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// A [`PeerTransport`] decorator that drops and/or delays outgoing
+/// frames.  Construct with [`FaultTransport::new`], then chain
+/// [`with_drop`](FaultTransport::with_drop) /
+/// [`with_delay`](FaultTransport::with_delay).
+pub struct FaultTransport<T: PeerTransport> {
+    inner: T,
+    /// Per-frame drop probability in `[0, 1]`; 0 disables.
+    drop_prob: f64,
+    /// `(base_ms, jitter_ms)` pre-send latency; `None` disables.
+    delay: Option<(u64, u64)>,
+    rng: Rng,
+    /// Frames discarded by the drop fault (never reached the inner
+    /// transport).
+    pub dropped_frames: u64,
+    /// Frames that served a delay before being sent.
+    pub delayed_frames: u64,
+}
+
+impl<T: PeerTransport> FaultTransport<T> {
+    /// Wrap `inner` with no faults armed; `seed` fixes the fault
+    /// schedule (use the rank so fleets don't correlate).
+    pub fn new(inner: T, seed: u64) -> FaultTransport<T> {
+        FaultTransport {
+            inner,
+            drop_prob: 0.0,
+            delay: None,
+            rng: Rng::stream(seed, 0xFA17),
+            dropped_frames: 0,
+            delayed_frames: 0,
+        }
+    }
+
+    /// Arm the drop fault.  `p` must already be validated into `[0, 1]`
+    /// (the chaos parser rejects anything else).
+    pub fn with_drop(mut self, p: f64) -> FaultTransport<T> {
+        debug_assert!((0.0..=1.0).contains(&p), "drop probability out of range");
+        self.drop_prob = p;
+        self
+    }
+
+    /// Arm the delay fault: `ms + U[0, jitter_ms]` before every send.
+    pub fn with_delay(mut self, ms: u64, jitter_ms: u64) -> FaultTransport<T> {
+        self.delay = Some((ms, jitter_ms));
+        self
+    }
+
+    pub fn inner(&self) -> &T {
+        &self.inner
+    }
+
+    pub fn inner_mut(&mut self) -> &mut T {
+        &mut self.inner
+    }
+
+    pub fn into_inner(self) -> T {
+        self.inner
+    }
+
+    /// Roll the fault dice for one outgoing frame: `true` means drop it.
+    /// Serving the delay happens here too so drop-and-delay compose the
+    /// way a real lossy slow link does (latency is paid either way).
+    fn faults_swallow_frame(&mut self) -> bool {
+        if let Some((ms, jitter)) = self.delay {
+            let extra = if jitter == 0 { 0 } else { self.rng.below(jitter as usize + 1) as u64 };
+            std::thread::sleep(Duration::from_millis(ms + extra));
+            self.delayed_frames += 1;
+        }
+        if self.drop_prob > 0.0 && self.rng.f64() < self.drop_prob {
+            self.dropped_frames += 1;
+            return true;
+        }
+        false
+    }
+}
+
+impl<T: PeerTransport> PeerTransport for FaultTransport<T> {
+    fn rank(&self) -> usize {
+        self.inner.rank()
+    }
+
+    fn n(&self) -> usize {
+        self.inner.n()
+    }
+
+    fn send(&mut self, to: usize, round: u64, tag: Tag, msg: WireMsg) -> Result<(), TransportError> {
+        if self.faults_swallow_frame() {
+            return Ok(()); // dropped: unsent, unaccounted, invisible
+        }
+        self.inner.send(to, round, tag, msg)
+    }
+
+    // `broadcast` deliberately stays the default per-peer loop so each
+    // destination gets an independent drop roll.
+
+    fn recv(&mut self, from: usize, round: u64, tag: Tag) -> Result<Arc<WireMsg>, TransportError> {
+        self.inner.recv(from, round, tag)
+    }
+
+    fn is_live(&self, rank: usize) -> bool {
+        self.inner.is_live(rank)
+    }
+
+    fn live_count(&self) -> usize {
+        self.inner.live_count()
+    }
+
+    fn on_peer_down(&mut self, rank: usize) -> bool {
+        self.inner.on_peer_down(rank)
+    }
+
+    fn round_timeout(&self) -> Option<Duration> {
+        self.inner.round_timeout()
+    }
+
+    fn recv_deadline(
+        &mut self,
+        from: usize,
+        round: u64,
+        tag: Tag,
+        timeout: Option<Duration>,
+    ) -> Result<Option<Arc<WireMsg>>, TransportError> {
+        self.inner.recv_deadline(from, round, tag, timeout)
+    }
+
+    fn view_mask(&self) -> u64 {
+        self.inner.view_mask()
+    }
+
+    fn ring_degraded(&self) -> bool {
+        self.inner.ring_degraded()
+    }
+
+    fn on_ring_stall(&mut self) {
+        self.inner.on_ring_stall();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::mesh::channel_mesh;
+    use crate::transport::wire::encode_f32s;
+
+    #[test]
+    fn drop_one_swallows_frames_and_the_receiver_censors() {
+        let mut eps = channel_mesh(2);
+        let e0 = eps.remove(0);
+        let mut faulty = FaultTransport::new(eps.remove(0), 7).with_drop(1.0);
+        let mut clean = e0;
+        // p = 1: every send vanishes before the wire; the call still
+        // succeeds from the sender's point of view.
+        faulty.send(0, 3, Tag::Upload, encode_f32s(&[1.0, 2.0])).unwrap();
+        assert_eq!(faulty.dropped_frames, 1);
+        let got = clean
+            .recv_deadline(1, 3, Tag::Upload, Some(Duration::from_millis(20)))
+            .unwrap();
+        assert!(got.is_none(), "a dropped frame must surface as a censoring deadline miss");
+        // p = 0 on the same wrapper: frames flow again.
+        let mut faulty = FaultTransport::new(faulty.into_inner(), 7).with_drop(0.0);
+        faulty.send(0, 4, Tag::Upload, encode_f32s(&[3.0])).unwrap();
+        assert_eq!(faulty.dropped_frames, 0);
+        let got = clean.recv(1, 4, Tag::Upload).unwrap();
+        assert_eq!(got.bit_len, 32);
+    }
+
+    #[test]
+    fn fault_schedule_is_deterministic_in_the_seed() {
+        let rolls = |seed: u64| -> Vec<bool> {
+            let mut eps = channel_mesh(2);
+            let mut f = FaultTransport::new(eps.remove(1), seed).with_drop(0.5);
+            (0..64).map(|_| f.faults_swallow_frame()).collect()
+        };
+        assert_eq!(rolls(11), rolls(11), "same seed, same schedule");
+        assert_ne!(rolls(11), rolls(12), "different seeds must decorrelate");
+        let hits = rolls(11).iter().filter(|&&d| d).count();
+        assert!((16..=48).contains(&hits), "p = 0.5 should drop roughly half, got {hits}/64");
+    }
+
+    #[test]
+    fn membership_hooks_forward_to_the_inner_transport() {
+        let mut eps = channel_mesh(3);
+        let f = FaultTransport::new(eps.remove(1), 0);
+        assert_eq!(f.rank(), 1);
+        assert_eq!(f.n(), 3);
+        assert_eq!(f.view_mask(), 0b111);
+        assert!(!f.ring_degraded());
+        assert_eq!(f.live_count(), 3);
+        assert!(f.is_live(2));
+        assert!(f.round_timeout().is_none());
+    }
+}

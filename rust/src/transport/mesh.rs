@@ -61,6 +61,24 @@ pub fn channel_mesh(n: usize) -> Vec<MeshTransport> {
 }
 
 impl MeshTransport {
+    /// Is this frame stale for a receiver waiting on (`round`, `tag`)?
+    /// Rounds below `round` are leftovers of censored rounds; same-round
+    /// [`Tag::Chunk`] frames against a non-Chunk expectation are leftovers
+    /// of a ring attempt that aborted into the parameter-server fallback
+    /// (Chunk is ring-only, so the mismatch is unambiguous).
+    fn is_stale(frame: &Frame, round: u64, tag: Tag) -> bool {
+        frame.0 < round || (frame.0 == round && frame.1 == Tag::Chunk && tag != Tag::Chunk)
+    }
+
+    /// Count a discarded stale frame: its payload still crossed the
+    /// channel, so its bits count as received — mirroring TCP, where
+    /// `read_frame` counts every frame before the staleness check.
+    fn count_stale(&mut self, from: usize, frame: &Frame) {
+        self.per_peer[from].frames_received += 1;
+        self.per_peer[from].payload_bits_received += frame.2.bit_len;
+        self.per_peer[from].stale_discards += 1;
+    }
+
     fn hangup(&self, peer: usize) -> TransportError {
         TransportError::peer_down(
             peer,
@@ -152,7 +170,8 @@ impl PeerTransport for MeshTransport {
                     .expect("mesh has no self-links")
                     .recv()
                     .map_err(|_| self.hangup(from))?;
-                if frame.0 < round {
+                if Self::is_stale(&frame, round, tag) {
+                    self.count_stale(from, &frame);
                     continue;
                 }
                 return self.validate(from, round, tag, frame).map(Some);
@@ -172,8 +191,8 @@ impl PeerTransport for MeshTransport {
                     return Err(self.hangup(from))
                 }
             };
-            if frame.0 < round {
-                // stale frame from a censored round: discard
+            if Self::is_stale(&frame, round, tag) {
+                self.count_stale(from, &frame);
                 continue;
             }
             return self.validate(from, round, tag, frame).map(Some);

@@ -35,6 +35,7 @@
 //! relative per element; the equivalence tests pin a 1e-4 trajectory
 //! tolerance on training workloads).
 
+pub mod fault;
 pub mod mesh;
 pub mod peer;
 pub mod pipeline;
@@ -43,6 +44,7 @@ pub mod tcp;
 pub mod threaded;
 pub mod wire;
 
+pub use fault::FaultTransport;
 pub use peer::{PeerTransport, Tag, TransportError};
 pub use pipeline::{pipelined_sync, BucketPipeline};
 pub use tcp::TcpTransport;

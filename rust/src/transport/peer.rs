@@ -121,7 +121,7 @@ pub enum Tag {
     /// Boolean agreement frame ([`agree`]).
     Flag = 7,
     /// Membership view update at a round boundary: epoch id, live mask,
-    /// joining rank (`membership::epoch_boundary`).
+    /// joiner mask (`membership::epoch_boundary`).
     Epoch = 8,
     /// Telemetry delta snapshot shipped to rank 0 every K rounds
     /// (`obs::metrics::encode_snapshot`).  Control-plane only — a late or
@@ -207,8 +207,11 @@ pub trait PeerTransport: Send {
     /// [`PeerTransport::recv`] with an optional timeout: `Ok(None)` means
     /// the deadline expired (the caller censors the peer for this round).
     /// Implementations honoring the timeout must also discard stale frames
-    /// from `from` whose round is *lower* than `round` — leftovers from a
-    /// previously censored round.  The default ignores the timeout.
+    /// from `from`: rounds *lower* than `round` (leftovers of censored
+    /// rounds) and same-round [`Tag::Chunk`] frames when `tag` is not
+    /// `Chunk` (leftovers of a ring attempt that aborted into the
+    /// parameter-server fallback — `Chunk` is ring-only, so the mismatch is
+    /// unambiguous).  The default ignores the timeout.
     fn recv_deadline(
         &mut self,
         from: usize,
@@ -219,6 +222,38 @@ pub trait PeerTransport: Send {
         let _ = timeout;
         self.recv(from, round, tag).map(Some)
     }
+
+    /// The agreed membership view as a bitmask over physical ranks: bit `r`
+    /// set means rank `r` participates in ring schedules this epoch.  Every
+    /// participant must report the identical mask (it is what ring order is
+    /// derived from), so elastic transports return the *boundary-agreed*
+    /// view, never a locally-suspected one.  Fixed fleets are fully live;
+    /// fleets wider than 64 ranks saturate the mask and ring callers treat
+    /// the out-of-mask high ranks as live.
+    fn view_mask(&self) -> u64 {
+        if self.n() >= 64 {
+            u64::MAX
+        } else {
+            (1u64 << self.n()) - 1
+        }
+    }
+
+    /// True while the transport believes a ring over the current view
+    /// cannot complete (a death or stall was observed mid-epoch).  Ring-
+    /// routed collectives consult this before each attempt and route the
+    /// round over the parameter-server path instead; the next epoch
+    /// boundary re-forms the ring and clears the latch.  Fixed fleets never
+    /// degrade.
+    fn ring_degraded(&self) -> bool {
+        false
+    }
+
+    /// A ring attempt aborted (recv deadline expired, or a peer death was
+    /// absorbed mid-ring).  Elastic transports latch degraded mode here so
+    /// subsequent rounds skip the doomed attempt instead of burning a full
+    /// deadline each; fixed fleets ignore it — for them the stall already
+    /// surfaced as an error.
+    fn on_ring_stall(&mut self) {}
 }
 
 /// Rank-0 gather receive under partial participation: `Ok(None)` means
@@ -356,7 +391,27 @@ pub(crate) fn run(
         });
     }
     if c.globally_synchronized() && !c.is_dense() {
-        ring(t, mode, v, resid, c, round, scratch)
+        let mut resid = resid;
+        // Ring-routed family.  While the membership layer reports the ring
+        // degraded (a death latched mid-epoch), skip the doomed attempt
+        // entirely; otherwise attempt the ring, and when a mid-cycle stall
+        // aborts it, redo the *same* round over the parameter-server path.
+        // The dead rank cuts the cycle for everyone, so every survivor
+        // falls back together: tags keep the two protocols unambiguous on
+        // the wire (ring frames are Chunk-tagged, leftovers are drained as
+        // stale), live-but-late uploads censor at rank 0's deadline, and
+        // the accounting broadcast keeps reported bits fleet-uniform — the
+        // same censor-and-rescale the PS family always ran.  The shared
+        // support of a globally-synchronized compressor means the PS union
+        // aggregate equals the ring mean over the responders.
+        if !t.ring_degraded() {
+            if let Some(done) =
+                ring(t, mode, v, resid.as_mut().map(|r| &mut **r), c, round, scratch)?
+            {
+                return Ok(done);
+            }
+        }
+        ps(t, mode, v, resid, c, round, None, scratch)
     } else {
         ps(t, mode, v, resid, c, round, None, scratch)
     }
@@ -381,7 +436,12 @@ const RING_SEGMENT_F32S: usize = 8192;
 /// One ring step: send `compact[send]` to `next` while receiving the same
 /// peer-count of segments from `prev` into `compact[recv]`, segment by
 /// segment.  `reduce` accumulates (reduce-scatter) instead of overwriting
-/// (all-gather).  Returns the bits this peer sent.
+/// (all-gather).  Returns the bits this peer sent, or `None` when the
+/// attempt stalled: the recv deadline expired, or a neighbor's death was
+/// absorbed by the membership layer.  A dead rank cuts the cycle, so *no*
+/// survivor can complete the schedule — every one of them stalls at this
+/// round and falls back together (see [`run`]).  Fixed fleets have no
+/// deadline and never absorb deaths, so for them `None` is unreachable.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn ring_exchange(
     t: &mut dyn PeerTransport,
@@ -392,8 +452,9 @@ pub(crate) fn ring_exchange(
     send: (usize, usize),
     recv: (usize, usize),
     reduce: bool,
-) -> Result<u64, TransportError> {
+) -> Result<Option<u64>, TransportError> {
     let seg = RING_SEGMENT_F32S;
+    let timeout = t.round_timeout();
     // Both ends derive the segment count from the chunk length, which both
     // can compute — no count header needed.
     let send_segs = (send.1 - send.0).div_ceil(seg);
@@ -405,12 +466,25 @@ pub(crate) fn ring_exchange(
             let s1 = (s0 + seg).min(send.1);
             let msg = wire::encode_f32s(&compact[s0..s1]);
             bits += msg.bit_len;
-            t.send(next, round, Tag::Chunk, msg)?;
+            match t.send(next, round, Tag::Chunk, msg) {
+                Ok(()) => {}
+                Err(e) => match e.downed_peer() {
+                    Some(r) if t.on_peer_down(r) => return Ok(None),
+                    _ => return Err(e),
+                },
+            }
         }
         if k < recv_segs {
             let r0 = recv.0 + k * seg;
             let r1 = (r0 + seg).min(recv.1);
-            let msg = t.recv(prev, round, Tag::Chunk)?;
+            let msg = match t.recv_deadline(prev, round, Tag::Chunk, timeout) {
+                Ok(Some(m)) => m,
+                Ok(None) => return Ok(None),
+                Err(e) => match e.downed_peer() {
+                    Some(r) if t.on_peer_down(r) => return Ok(None),
+                    _ => return Err(e),
+                },
+            };
             if reduce {
                 wire::decode_f32s_add(&msg, &mut compact[r0..r1])?;
             } else {
@@ -418,7 +492,7 @@ pub(crate) fn ring_exchange(
             }
         }
     }
-    Ok(bits)
+    Ok(Some(bits))
 }
 
 /// Gather `v`'s selected ranges into a compact vector of length `sel.count`.
@@ -427,42 +501,69 @@ pub(crate) fn gather(sel: &Selection, v: &[f32], compact: &mut Vec<f32>) {
     sel.for_each_range(v.len(), |s, e| compact.extend_from_slice(&v[s..e]));
 }
 
+/// Ranks participating in ring schedules under the transport's agreed
+/// view, in ascending rank order — the ring order every participant
+/// derives independently from the identical [`PeerTransport::view_mask`].
+/// Fleets wider than the 64-bit mask treat the high ranks as always live.
+pub(crate) fn ring_members(t: &dyn PeerTransport) -> Vec<usize> {
+    let view = t.view_mask();
+    (0..t.n()).filter(|&r| r >= 64 || (view >> r) & 1 == 1).collect()
+}
+
 /// The ring's data movement for one already-gathered compact vector:
-/// reduce-scatter, all-gather, then the 1/n mean scale — exactly the chunk
-/// schedule and reduction order of the whole-vector path (this *is* the
-/// whole-vector path's core; the bucketed pipeline drives it per bucket).
-/// Returns (reduce-scatter bits sent, all-gather bits sent).
+/// reduce-scatter, all-gather, then the 1/l mean scale over the l live
+/// ranks — exactly the chunk schedule and reduction order of the
+/// whole-vector path (this *is* the whole-vector path's core; the bucketed
+/// pipeline drives it per bucket).  On a fully-live view the schedule is
+/// bit-identical to the historical fixed-fleet ring.  Returns
+/// (reduce-scatter bits sent, all-gather bits sent), or `None` when the
+/// attempt stalled mid-cycle (see [`ring_exchange`]) — `compact` is then
+/// partially reduced garbage and must be discarded by the caller.
 pub(crate) fn ring_rounds(
     t: &mut dyn PeerTransport,
     compact: &mut [f32],
     round: u64,
-) -> Result<(u64, u64), TransportError> {
-    let n = t.n();
+) -> Result<Option<(u64, u64)>, TransportError> {
     let i = t.rank();
     let m = compact.len();
-    let next = (i + 1) % n;
-    let prev = (i + n - 1) % n;
+    let live = ring_members(t);
+    let l = live.len();
+    let pos = live.iter().position(|&r| r == i).ok_or_else(|| {
+        TransportError::failed(format!("rank {i} is outside the agreed ring view"))
+    })?;
+    if l == 1 {
+        // Sole survivor: the ring is this rank alone, the mean of one.
+        return Ok(Some((0, 0)));
+    }
+    let next = live[(pos + 1) % l];
+    let prev = live[(pos + l - 1) % l];
     // Traffic split follows `ring_allreduce_cost`'s convention: `up` = bits
     // sent during reduce-scatter, `down` = bits sent during all-gather.
     let (mut up, mut down) = (0u64, 0u64);
-    // Reduce-scatter: after n-1 steps this peer owns the fully reduced
-    // chunk (i+1) % n.
-    for step in 0..n - 1 {
-        let send = chunk_bounds(m, n, (i + n - step) % n);
-        let recv = chunk_bounds(m, n, (i + n - step - 1) % n);
-        up += ring_exchange(t, compact, next, prev, round, send, recv, true)?;
+    // Reduce-scatter: after l-1 steps this peer owns the fully reduced
+    // chunk (pos+1) % l.
+    for step in 0..l - 1 {
+        let send = chunk_bounds(m, l, (pos + l - step) % l);
+        let recv = chunk_bounds(m, l, (pos + l - step - 1) % l);
+        match ring_exchange(t, compact, next, prev, round, send, recv, true)? {
+            Some(b) => up += b,
+            None => return Ok(None),
+        }
     }
     // All-gather: circulate the completed chunks.
-    for step in 0..n - 1 {
-        let send = chunk_bounds(m, n, (i + 1 + n - step) % n);
-        let recv = chunk_bounds(m, n, (i + n - step) % n);
-        down += ring_exchange(t, compact, next, prev, round, send, recv, false)?;
+    for step in 0..l - 1 {
+        let send = chunk_bounds(m, l, (pos + 1 + l - step) % l);
+        let recv = chunk_bounds(m, l, (pos + l - step) % l);
+        match ring_exchange(t, compact, next, prev, round, send, recv, false)? {
+            Some(b) => down += b,
+            None => return Ok(None),
+        }
     }
-    let inv = 1.0 / n as f32;
+    let inv = 1.0 / l as f32;
     for x in compact.iter_mut() {
         *x *= inv;
     }
-    Ok((up, down))
+    Ok(Some((up, down)))
 }
 
 /// The compression phase of the parameter-server path: select, encode, and
@@ -582,7 +683,13 @@ pub(crate) fn ps_rounds(
         Ok((acct, up, down))
     } else {
         t.send(0, round, Tag::Upload, msg)?;
-        let info = t.recv(0, round, Tag::AggInfo)?;
+        // Deadline-less `recv_deadline` rather than `recv`: same blocking
+        // semantics, but it drains stale frames — after a ring aborts into
+        // this path, leftover same-round Chunk frames may sit ahead of the
+        // control broadcasts on the rank-0 link.
+        let info = t
+            .recv_deadline(0, round, Tag::AggInfo, None)?
+            .ok_or_else(|| TransportError::failed("accounting frame missed with no deadline"))?;
         if info.bit_len != 64 {
             return Err(TransportError::failed(format!(
                 "accounting frame is {} bits, expected 64",
@@ -590,7 +697,9 @@ pub(crate) fn ps_rounds(
             )));
         }
         let acct = info.reader().read(64);
-        let a = t.recv(0, round, Tag::Aggregate)?;
+        let a = t
+            .recv_deadline(0, round, Tag::Aggregate, None)?
+            .ok_or_else(|| TransportError::failed("aggregate frame missed with no deadline"))?;
         let down = a.bit_len;
         if c.is_dense() {
             wire::decode_f32s(&a, agg)?;
@@ -601,6 +710,10 @@ pub(crate) fn ps_rounds(
     }
 }
 
+/// One ring-routed round.  `Ok(None)` means the attempt aborted mid-cycle
+/// (a peer died or stalled): `v` and `resid` are untouched — only the
+/// compact staging buffer saw partial sums — so the caller can redo the
+/// identical round over the parameter-server path.
 fn ring(
     t: &mut dyn PeerTransport,
     mode: Mode,
@@ -609,9 +722,9 @@ fn ring(
     c: &dyn Compressor,
     round: u64,
     scratch: &mut Scratch,
-) -> Result<PsyncRound, TransportError> {
-    let n = t.n();
+) -> Result<Option<PsyncRound>, TransportError> {
     let d = v.len();
+    let l = ring_members(t).len();
     // Globally-synchronized selections ignore both the vector and the worker
     // id, so every peer derives the identical shared support locally.
     let sel = {
@@ -629,12 +742,12 @@ fn ring(
         if mode == Mode::Exchange {
             math::fill(v, 0.0);
         }
-        return Ok(PsyncRound {
+        return Ok(Some(PsyncRound {
             selections: vec![sel],
             upload_bits_per_worker: 0,
             allreduce_compatible: true,
             wire: Some(WireCost { up_bits: 0, down_bits: 0, steps: 0 }),
-        });
+        }));
     }
 
     // The O(d/R) gather buffer lives in the scratch (returned before the
@@ -646,9 +759,16 @@ fn ring(
         let _s = obs::Span::enter(Phase::Encode);
         gather(&sel, v, &mut compact);
     }
-    let (up, down) = {
+    let rr = {
         let _s = obs::Span::enter(Phase::Exchange);
         ring_rounds(t, &mut compact, round)?
+    };
+    let Some((up, down)) = rr else {
+        // Stalled mid-cycle: latch degraded mode (the boundary clears it)
+        // and hand the round back for the parameter-server fallback.
+        t.on_ring_stall();
+        scratch.vb = compact;
+        return Ok(None);
     };
     {
         let _s = obs::Span::enter(Phase::Decode);
@@ -668,12 +788,12 @@ fn ring(
         });
     }
     scratch.vb = compact;
-    Ok(PsyncRound {
+    Ok(Some(PsyncRound {
         selections: vec![sel],
         upload_bits_per_worker: bits,
         allreduce_compatible: true,
-        wire: Some(WireCost { up_bits: up, down_bits: down, steps: 2 * (n as u32 - 1) }),
-    })
+        wire: Some(WireCost { up_bits: up, down_bits: down, steps: 2 * (l as u32 - 1) }),
+    }))
 }
 
 /// Accumulate one decoded message into the running mean and union mask —
@@ -786,7 +906,9 @@ pub fn mean_dense(
         v.copy_from_slice(&out);
     } else {
         t.send(0, round, Tag::Dense, wire::encode_f32s(v))?;
-        let m = t.recv(0, round, Tag::Dense)?;
+        let m = t
+            .recv_deadline(0, round, Tag::Dense, None)?
+            .ok_or_else(|| TransportError::failed("dense mean missed with no deadline"))?;
         wire::decode_f32s(&m, v)?;
     }
     Ok(())
@@ -841,7 +963,9 @@ pub fn vote(
         let mut w = wire::BitWriter::new();
         w.write(loss.to_bits(), 64);
         t.send(0, round, Tag::Loss, w.finish())?;
-        let m = t.recv(0, round, Tag::Verdict)?;
+        let m = t
+            .recv_deadline(0, round, Tag::Verdict, None)?
+            .ok_or_else(|| TransportError::failed("verdict missed with no deadline"))?;
         if m.bit_len != 65 {
             return Err(TransportError::failed(format!(
                 "verdict frame is {} bits, expected 65",
@@ -891,7 +1015,9 @@ pub fn all_equal(
         let mut w = wire::BitWriter::new();
         w.write(value, 64);
         t.send(0, round, Tag::Flag, w.finish())?;
-        let m = t.recv(0, round, Tag::Flag)?;
+        let m = t
+            .recv_deadline(0, round, Tag::Flag, None)?
+            .ok_or_else(|| TransportError::failed("flag missed with no deadline"))?;
         if m.bit_len != 1 {
             return Err(TransportError::failed(format!(
                 "verdict frame is {} bits, expected 1",
@@ -935,7 +1061,9 @@ pub fn agree(t: &mut dyn PeerTransport, flag: bool, round: u64) -> Result<bool, 
         Ok(any)
     } else {
         t.send(0, round, Tag::Flag, bit(flag))?;
-        let m = t.recv(0, round, Tag::Flag)?;
+        let m = t
+            .recv_deadline(0, round, Tag::Flag, None)?
+            .ok_or_else(|| TransportError::failed("flag missed with no deadline"))?;
         if m.bit_len != 1 {
             return Err(TransportError::failed(format!(
                 "flag frame is {} bits, expected 1",
@@ -950,6 +1078,60 @@ pub fn agree(t: &mut dyn PeerTransport, flag: bool, round: u64) -> Result<bool, 
 mod tests {
     use super::*;
     use crate::util::prop::{forall, Gen};
+
+    /// A transport that only answers the view questions — enough to probe
+    /// the ring-order derivation without any wire.
+    struct StubView {
+        rank: usize,
+        n: usize,
+        mask: Option<u64>,
+    }
+
+    impl PeerTransport for StubView {
+        fn rank(&self) -> usize {
+            self.rank
+        }
+        fn n(&self) -> usize {
+            self.n
+        }
+        fn send(
+            &mut self,
+            _to: usize,
+            _round: u64,
+            _tag: Tag,
+            _msg: WireMsg,
+        ) -> Result<(), TransportError> {
+            Err(TransportError::failed("stub"))
+        }
+        fn recv(
+            &mut self,
+            _from: usize,
+            _round: u64,
+            _tag: Tag,
+        ) -> Result<Arc<WireMsg>, TransportError> {
+            Err(TransportError::failed("stub"))
+        }
+        fn view_mask(&self) -> u64 {
+            match self.mask {
+                Some(m) => m,
+                None if self.n >= 64 => u64::MAX,
+                None => (1u64 << self.n) - 1,
+            }
+        }
+    }
+
+    #[test]
+    fn ring_members_follows_the_view() {
+        // Full view: every rank, in order — the historical fixed ring.
+        let t = StubView { rank: 0, n: 4, mask: None };
+        assert_eq!(ring_members(&t), vec![0, 1, 2, 3]);
+        // Masked view: only live bits participate, order preserved.
+        let t = StubView { rank: 0, n: 4, mask: Some(0b1011) };
+        assert_eq!(ring_members(&t), vec![0, 1, 3]);
+        // Wider than the mask: high ranks are treated as always live.
+        let t = StubView { rank: 0, n: 70, mask: None };
+        assert_eq!(ring_members(&t).len(), 70);
+    }
 
     #[test]
     fn prop_chunk_bounds_partition_any_m_n() {

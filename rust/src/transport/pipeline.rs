@@ -25,10 +25,21 @@
 //!
 //! Queue discipline: jobs and results ride two SPSC mpsc channels in
 //! strict bucket order (at most one bucket being prepared while one is on
-//! the wire — the "double buffer").  An exchange error aborts the whole
-//! run, so a pipeline that returned an error must be dropped, not reused
-//! (in-flight results would desynchronize a reuse; the engine's drivers
-//! tear the run down on any `TransportError`).
+//! the wire — the "double buffer").  When an exchange fails mid-round,
+//! [`pipelined_sync`] drains every still-in-flight prepared bucket off
+//! the result queue (recycling its buffers) before propagating the error,
+//! so the prepare thread parks cleanly and the pipeline stays reusable —
+//! an elastic trainer that censors a round and carries on does not wedge
+//! the SPSC queues.
+//!
+//! Elastic views: ring-routed buckets consult the transport's
+//! [`PeerTransport::view_mask`] and [`PeerTransport::ring_degraded`]
+//! exactly like the whole-vector path.  A bucket whose ring stalls
+//! mid-flight (peer death or deadline miss) latches the transport's
+//! degraded flag and re-runs *the same sub-round* as a parameter-server
+//! exchange — tags disambiguate the two shapes on the wire, and the PS
+//! server path censors-and-rescales dead peers, so a censored peer simply
+//! contributes zero to that bucket's mean.
 
 use super::peer::{self, Mode, PeerTransport, TransportError};
 use crate::collective::bucket::{SyncBuckets, SyncInfo};
@@ -175,6 +186,25 @@ impl BucketPipeline {
         }
         Ok(prep)
     }
+
+    /// Pull `in_flight` still-queued prepared buckets off the result
+    /// channel and recycle their buffers, leaving the queues empty and the
+    /// prepare thread parked.  Called on the error path of
+    /// [`pipelined_sync`] so an aborted round (e.g. a censored elastic
+    /// peer) leaves the pipeline reusable for the next one.  A closed
+    /// channel (prepare thread died) just ends the drain — every queued
+    /// result is delivered before `recv` reports the hangup.
+    fn drain(&mut self, in_flight: usize) {
+        for _ in 0..in_flight {
+            let Ok(prep) = self.rx.recv() else { return };
+            match prep.payload {
+                Payload::Ring { compact } => self.spare.push(compact),
+                Payload::Ps { own, .. } => self.spare.push(own),
+                Payload::Empty { buf } => self.spare.push(buf),
+            }
+            self.spare.push(prep.data);
+        }
+    }
 }
 
 impl Default for BucketPipeline {
@@ -235,7 +265,6 @@ fn exchange_bucket(
     spare: &mut Vec<Vec<f32>>,
 ) -> Result<PsyncRound, TransportError> {
     let db = v.len();
-    let n = t.n();
     let bkt = prep.bucket as u64;
     match prep.payload {
         Payload::Empty { buf } => {
@@ -256,35 +285,71 @@ fn exchange_bucket(
             })
         }
         Payload::Ring { mut compact } => {
-            let (up, down) = {
-                let _s = obs::Span::enter_arg(Phase::Exchange, bkt);
-                peer::ring_rounds(t, &mut compact, wire_round)?
+            // A degraded view (pending censor or an earlier stall this
+            // epoch) skips the ring outright; otherwise attempt it and fall
+            // back if it stalls mid-round.  Either way the fallback re-runs
+            // this bucket as a PS exchange at the SAME sub-round — tags
+            // keep the two shapes apart on the wire, and the PS server
+            // censors-and-rescales the dead peer.  `v`/`resid` are still
+            // untouched here (only the compact staging saw partial sums),
+            // so re-preparing from the bucket's saved `data` is exact.
+            if !t.ring_degraded() {
+                let rr = {
+                    let _s = obs::Span::enter_arg(Phase::Exchange, bkt);
+                    peer::ring_rounds(t, &mut compact, wire_round)?
+                };
+                if let Some((up, down)) = rr {
+                    let l = peer::ring_members(&*t).len() as u32;
+                    let _s = obs::Span::enter_arg(Phase::Decode, bkt);
+                    // Residual (v off support) before the mean overwrites
+                    // the selected ranges; v itself was untouched while the
+                    // bucket was in flight.
+                    if let Some(r) = resid {
+                        r.copy_from_slice(v);
+                        prep.sel.for_each_range(db, |s, e| math::fill(&mut r[s..e], 0.0));
+                    }
+                    if mode == Mode::Exchange {
+                        math::fill(v, 0.0);
+                    }
+                    let mut cursor = 0usize;
+                    prep.sel.for_each_range(db, |s, e| {
+                        v[s..e].copy_from_slice(&compact[cursor..cursor + (e - s)]);
+                        cursor += e - s;
+                    });
+                    drop(_s); // Decode span ends; buffer recycling untimed.
+                    spare.push(compact);
+                    spare.push(prep.data);
+                    return Ok(PsyncRound {
+                        selections: vec![prep.sel],
+                        upload_bits_per_worker: prep.bits,
+                        allreduce_compatible: true,
+                        wire: Some(WireCost {
+                            up_bits: up,
+                            down_bits: down,
+                            steps: 2 * (l - 1),
+                        }),
+                    });
+                }
+                t.on_ring_stall();
+            }
+            // Fallback: recycle the ring staging (its partial sums are
+            // abandoned) and re-encode the bucket as a PS upload.
+            compact.clear();
+            let up = peer::ps_prepare(
+                c.as_ref(),
+                Ctx { round: wire_round, worker: t.rank() as u32 },
+                &prep.data,
+                compact,
+                scratch,
+            )?;
+            let ps = Prepared {
+                bucket: prep.bucket,
+                sel: up.sel,
+                bits: up.msg.bit_len,
+                data: prep.data,
+                payload: Payload::Ps { msg: up.msg, own: up.own },
             };
-            let _s = obs::Span::enter_arg(Phase::Decode, bkt);
-            // Residual (v off support) before the mean overwrites the
-            // selected ranges; v itself was untouched while the bucket was
-            // in flight.
-            if let Some(r) = resid {
-                r.copy_from_slice(v);
-                prep.sel.for_each_range(db, |s, e| math::fill(&mut r[s..e], 0.0));
-            }
-            if mode == Mode::Exchange {
-                math::fill(v, 0.0);
-            }
-            let mut cursor = 0usize;
-            prep.sel.for_each_range(db, |s, e| {
-                v[s..e].copy_from_slice(&compact[cursor..cursor + (e - s)]);
-                cursor += e - s;
-            });
-            drop(_s); // Decode span ends here; buffer recycling is untimed.
-            spare.push(compact);
-            spare.push(prep.data);
-            Ok(PsyncRound {
-                selections: vec![prep.sel],
-                upload_bits_per_worker: prep.bits,
-                allreduce_compatible: true,
-                wire: Some(WireCost { up_bits: up, down_bits: down, steps: 2 * (n as u32 - 1) }),
-            })
+            exchange_bucket(t, ps, mode, c, wire_round, v, resid, scratch, spare)
         }
         Payload::Ps { msg, own } => {
             let mut agg = spare.pop().unwrap_or_default();
@@ -409,21 +474,41 @@ pub fn pipelined_sync(
     let ring = c.globally_synchronized() && !c.is_dense();
     let k = buckets.k();
     let mut info = SyncInfo::new();
+    // `in_flight` counts jobs submitted but whose result has not been
+    // pulled off the queue yet.  Every error path drains that many results
+    // before propagating, so the queues end the call empty and the
+    // pipeline can serve the next round (see the module docs).
     submit_job(pipe, buckets, t_round, rank, ring, c, v, 0)?;
+    let mut in_flight = 1usize;
     for b in 0..k {
         if b + 1 < k {
-            submit_job(pipe, buckets, t_round, rank, ring, c, v, b + 1)?;
+            if let Err(e) = submit_job(pipe, buckets, t_round, rank, ring, c, v, b + 1) {
+                pipe.drain(in_flight);
+                return Err(e);
+            }
+            in_flight += 1;
         }
         // Time spent here is the pipeline stalling on its own compression —
         // the complement of the overlap the double buffer exists to win.
         let prep = {
             let _s = obs::Span::enter_arg(Phase::BarrierWait, b as u64);
-            pipe.recv_prepared(b)?
+            pipe.recv_prepared(b)
+        };
+        // `recv_prepared` pulled one result off the queue even when it
+        // reports a desync (a closed-channel error pulled nothing, but then
+        // the drain's own recv fails immediately too — still clean).
+        in_flight -= 1;
+        let prep = match prep {
+            Ok(p) => p,
+            Err(e) => {
+                pipe.drain(in_flight);
+                return Err(e);
+            }
         };
         let (s, e) = buckets.range(b);
         let wire_round = buckets.sub_round(t_round, b);
         let rb = resid.as_deref_mut().map(|r| &mut r[s..e]);
-        let round = exchange_bucket(
+        let round = match exchange_bucket(
             t,
             prep,
             mode,
@@ -433,9 +518,16 @@ pub fn pipelined_sync(
             rb,
             &mut pipe.scratch,
             &mut pipe.spare,
-        )?;
+        ) {
+            Ok(r) => r,
+            Err(e) => {
+                pipe.drain(in_flight);
+                return Err(e);
+            }
+        };
         info.push(s, e, round);
     }
+    debug_assert_eq!(in_flight, 0, "every submitted bucket must be consumed");
     Ok(info)
 }
 

@@ -364,6 +364,11 @@ pub struct JoinGrant {
     /// Bit `r` set ⇔ rank `r` is live in the granted epoch (joiner
     /// included).  Caps elastic jobs at 64 ranks.
     pub live_mask: u64,
+    /// Every rank admitted at this boundary (this rank's bit included).
+    /// Co-joiners cannot be dialed like survivors — nobody is accepting on
+    /// their behalf yet — so [`rejoin`] links joiner pairs directly:
+    /// the higher rank dials, the lower rank accepts.
+    pub joiners: u64,
     pub blob: Vec<u8>,
 }
 
@@ -435,20 +440,25 @@ impl Session {
     }
 
     /// Rank 0, at a round boundary: admit a parked joiner by sending the
-    /// grant (epoch, resume step, live mask, checkpoint blob, peer table).
-    /// The joiner dials the live mesh on receipt; every survivor must pair
-    /// this with an [`Session::accept_rejoin`].
+    /// grant (epoch, resume step, live mask, joiner mask, checkpoint blob,
+    /// peer table).  The joiner dials the live mesh on receipt; every
+    /// survivor must pair this with an [`Session::accept_rejoin`] per
+    /// joiner.  When a batch of joiners is granted under one epoch frame,
+    /// every grant in the batch must carry the identical `joiners` mask —
+    /// it is what tells each joiner which live ranks to link peer-to-peer
+    /// instead of dialing.
     pub fn grant_join(
         &mut self,
         req: JoinRequest,
         epoch: u64,
         step: u64,
         live_mask: u64,
+        joiners: u64,
         blob: &[u8],
     ) -> Result<(), TransportError> {
         let mut s = req.stream;
         s.write_all(GRANT_MAGIC).map_err(|e| io_err("writing join grant", e))?;
-        for v in [epoch, step, live_mask, blob.len() as u64] {
+        for v in [epoch, step, live_mask, joiners, blob.len() as u64] {
             s.write_all(&v.to_le_bytes()).map_err(|e| io_err("writing join grant", e))?;
         }
         s.write_all(blob).map_err(|e| io_err("writing join grant checkpoint", e))?;
@@ -530,6 +540,7 @@ pub fn rejoin(
     let epoch = read_u64(&mut s, "reading grant epoch")?;
     let step = read_u64(&mut s, "reading grant step")?;
     let live_mask = read_u64(&mut s, "reading grant live mask")?;
+    let joiners = read_u64(&mut s, "reading grant joiner mask")?;
     let blob_len = read_u64(&mut s, "reading grant checkpoint length")?;
     if blob_len > MAX_GRANT_BLOB_BYTES {
         return Err(TransportError::failed(format!(
@@ -548,12 +559,18 @@ pub fn rejoin(
         table.push(read_addr(&mut s)?);
     }
 
-    // Re-dial the live mesh: the joiner dials *everyone* (survivors only
-    // ever accept), so the v1 higher-dials-lower rule does not apply here.
+    // Re-dial the live mesh.  Survivors only ever accept, so the joiner
+    // dials every one of them regardless of rank order.  Co-joiners granted
+    // at the same boundary have no survivor accepting for them, so joiner
+    // pairs link directly under the v1 bootstrap convention: the higher
+    // rank dials the lower rank's data listener, the lower rank accepts.
     let mut links: Vec<Option<TcpStream>> = (0..n).map(|_| None).collect();
     for (j, addr) in table.iter().enumerate() {
         if j == rank || (live_mask >> j) & 1 == 0 {
             continue;
+        }
+        if (joiners >> j) & 1 == 1 && j > rank {
+            continue; // higher co-joiner: it dials us below
         }
         let mut p = connect_retry(*addr, &format!("peer {j} (rejoin)"), deadline)?;
         p.write_all(REJOIN_MAGIC).map_err(|e| io_err("rejoin handshaking", e))?;
@@ -561,7 +578,35 @@ pub fn rejoin(
         p.set_nodelay(true).map_err(|e| io_err("socket setup", e))?;
         links[j] = Some(p);
     }
-    let grant = JoinGrant { epoch, step, live_mask, blob };
+    // Accept each higher co-joiner's dial (arrival order — the handshake
+    // names the rank).
+    let mut expect = if rank + 1 >= 64 {
+        0 // shift guard: rank 63 has no higher co-joiners in a 64-bit mask
+    } else {
+        joiners & live_mask & !((1u64 << (rank + 1)) - 1)
+    };
+    while expect != 0 {
+        let mut p = accept_retry(&data, "a co-joiner", deadline)?;
+        p.set_read_timeout(Some(IO_TIMEOUT)).map_err(|e| io_err("socket setup", e))?;
+        let mut magic = [0u8; 8];
+        read_exact(&mut p, &mut magic, "reading co-joiner magic")?;
+        if &magic != REJOIN_MAGIC {
+            return Err(TransportError::failed("data listener contacted by a non-joiner"));
+        }
+        let mut rb = [0u8; 4];
+        read_exact(&mut p, &mut rb, "reading co-joiner rank")?;
+        let peer = u32::from_le_bytes(rb) as usize;
+        if peer >= n || peer <= rank || (expect >> peer) & 1 == 0 {
+            return Err(TransportError::failed(format!(
+                "unexpected co-joiner handshake from rank {peer}"
+            )));
+        }
+        p.set_read_timeout(None).map_err(|e| io_err("socket setup", e))?;
+        p.set_nodelay(true).map_err(|e| io_err("socket setup", e))?;
+        expect &= !(1u64 << peer);
+        links[peer] = Some(p);
+    }
+    let grant = JoinGrant { epoch, step, live_mask, joiners, blob };
     let session = Session { rank, n, rendezvous: None, data: Some(data), table };
     Ok((links, grant, session))
 }
@@ -619,7 +664,7 @@ mod tests {
                     }
                 };
                 assert_eq!(req.rank, 2);
-                sess.grant_join(req, 7, 42, 0b111, b"ckpt").unwrap();
+                sess.grant_join(req, 7, 42, 0b111, 0b100, b"ckpt").unwrap();
                 let (peer, mut s) = sess.accept_rejoin().unwrap();
                 assert_eq!(peer, 2);
                 let mut b = [0u8; 4];
@@ -642,6 +687,7 @@ mod tests {
                 assert_eq!(grant.epoch, 7);
                 assert_eq!(grant.step, 42);
                 assert_eq!(grant.live_mask, 0b111);
+                assert_eq!(grant.joiners, 0b100);
                 assert_eq!(grant.blob, b"ckpt");
                 assert!(links[0].is_some() && links[1].is_some() && links[2].is_none());
                 links[0].as_mut().unwrap().write_all(b"ping").unwrap();
@@ -649,6 +695,74 @@ mod tests {
             r0.join().unwrap();
             r1.join().unwrap();
             r2.join().unwrap();
+        });
+    }
+
+    #[test]
+    fn two_joiners_admitted_under_one_boundary_link_each_other() {
+        // Ranks 2 and 3 both park, rank 0 grants the batch in rank order
+        // under one joiner mask, and the co-joiner pair links directly
+        // (3 dials 2) — the bytes prove the pair shares one socket.
+        let addr = free_loopback_addr().unwrap();
+        let n = 4;
+        std::thread::scope(|scope| {
+            let a0 = addr.clone();
+            let r0 = scope.spawn(move || {
+                let (links, mut sess) = establish_v2(&a0, 0, n).unwrap();
+                drop(links);
+                let mut reqs = Vec::new();
+                while reqs.len() < 2 {
+                    match sess.poll_join().unwrap() {
+                        Some(r) => reqs.push(r),
+                        None => std::thread::sleep(Duration::from_millis(10)),
+                    }
+                }
+                reqs.sort_by_key(|r| r.rank);
+                assert_eq!(reqs.iter().map(|r| r.rank).collect::<Vec<_>>(), vec![2, 3]);
+                for req in reqs {
+                    sess.grant_join(req, 9, 64, 0b1111, 0b1100, b"ck2").unwrap();
+                    let (peer, _s) = sess.accept_rejoin().unwrap();
+                    assert!(peer == 2 || peer == 3);
+                }
+            });
+            let a1 = addr.clone();
+            let r1 = scope.spawn(move || {
+                let (links, mut sess) = establish_v2(&a1, 1, n).unwrap();
+                drop(links);
+                let mut seen = [false; 4];
+                for _ in 0..2 {
+                    let (peer, _s) = sess.accept_rejoin().unwrap();
+                    seen[peer] = true;
+                }
+                assert!(seen[2] && seen[3], "both joiners must re-dial every survivor");
+            });
+            let a2 = addr.clone();
+            let r2 = scope.spawn(move || {
+                let (links, sess) = establish_v2(&a2, 2, n).unwrap();
+                drop(links);
+                drop(sess);
+                let (mut links, grant, _sess) = rejoin(&a2, 2, n).unwrap();
+                assert_eq!((grant.live_mask, grant.joiners), (0b1111, 0b1100));
+                // Survivors dialed, higher co-joiner accepted.
+                assert!(links[0].is_some() && links[1].is_some() && links[3].is_some());
+                let mut b = [0u8; 4];
+                links[3].as_mut().unwrap().read_exact(&mut b).unwrap();
+                assert_eq!(&b, b"pear");
+            });
+            let a3 = addr.clone();
+            let r3 = scope.spawn(move || {
+                let (links, sess) = establish_v2(&a3, 3, n).unwrap();
+                drop(links);
+                drop(sess);
+                let (mut links, grant, _sess) = rejoin(&a3, 3, n).unwrap();
+                assert_eq!((grant.live_mask, grant.joiners), (0b1111, 0b1100));
+                assert!(links[0].is_some() && links[1].is_some() && links[2].is_some());
+                links[2].as_mut().unwrap().write_all(b"pear").unwrap();
+            });
+            r0.join().unwrap();
+            r1.join().unwrap();
+            r2.join().unwrap();
+            r3.join().unwrap();
         });
     }
 }

@@ -259,8 +259,16 @@ impl PeerTransport for TcpTransport {
         timeout: Option<std::time::Duration>,
     ) -> Result<Option<Arc<WireMsg>>, TransportError> {
         let rank = self.rank;
+        // One deadline for the whole call, stale drain included: a peer
+        // that floods stale rounds burns the caller's budget, not the
+        // caller's lifetime.  Each wait gets only the time remaining.
+        let deadline = timeout.map(|t| std::time::Instant::now() + t);
         loop {
-            if let Some(t) = timeout {
+            if let Some(dl) = deadline {
+                let left = dl.saturating_duration_since(std::time::Instant::now());
+                if left.is_zero() {
+                    return Ok(None); // budget exhausted draining stale frames
+                }
                 // The deadline applies only to the *first byte* of the next
                 // frame: once a frame starts arriving the peer is alive, and
                 // timing out a partial read would desynchronize the stream.
@@ -269,7 +277,7 @@ impl PeerTransport for TcpTransport {
                     s.set_read_timeout(d)
                         .map_err(|e| TransportError::failed(format!("setting read timeout: {e}")))
                 };
-                set(link.reader.get_ref(), Some(t))?;
+                set(link.reader.get_ref(), Some(left))?;
                 let arrived = loop {
                     match link.reader.fill_buf() {
                         Ok([]) => {
@@ -301,8 +309,15 @@ impl PeerTransport for TcpTransport {
                 }
             }
             let (r, tg, msg) = self.read_frame(from)?;
-            if r < round {
-                // stale frame from a censored round: discard
+            // Stale frames: rounds below the one we wait on (leftovers of
+            // censored rounds) and same-round ring chunks when we expect a
+            // non-Chunk tag (leftovers of a ring attempt that aborted into
+            // the parameter-server fallback — Chunk is ring-only, so the
+            // mismatch is unambiguous).  Discard, counted — the payload
+            // crossed the wire and the drain is bounded by the deadline
+            // above, so a stale flood surfaces as a censor, never a spin.
+            if r < round || (r == round && tg == Tag::Chunk && tag != Tag::Chunk) {
+                self.per_peer[from].stale_discards += 1;
                 continue;
             }
             if r != round || tg != tag {

@@ -23,11 +23,21 @@
 //! * **Evicted rank rejoins a later epoch**: a chaos-killed rank re-enters
 //!   through rendezvous v2, resumes at the granted epoch boundary, and
 //!   from there reproduces the survivors' curves exactly.
+//! * **Ring re-form**: a ring-routed GRBS fleet losing a rank mid-cycle
+//!   stalls, falls back, evicts at the boundary, re-forms the ring over
+//!   the survivors — and the per-link counters balance exactly across
+//!   every surviving pair, stale drains and fallback included.
+//! * **Elastic bucketing**: `--elastic --buckets k` (formerly rejected) is
+//!   bit-identical to the central bucketed trainer — the same reference
+//!   the whole-vector elastic path is pinned to.
+//! * **Batch admission**: two joiners parked at the rendezvous are granted
+//!   under a *single* epoch frame, and both reproduce the survivors'
+//!   curves on the overlap.
 
-use cser::compressor::{RandK, TopK};
+use cser::compressor::{Grbs, RandK, TopK};
 use cser::coordinator::checkpoint::Checkpoint;
 use cser::coordinator::sim_trainer::{train_classifier, ChaosSpec, TrainCfg};
-use cser::coordinator::{ElasticSummary, RunRecord};
+use cser::coordinator::{ElasticSummary, EpochEvent, RunRecord};
 use cser::data::ClassDataset;
 use cser::engine::{Cadence, CommPlan, ErrorResetEngine};
 use cser::models::{GradModel, Mlp};
@@ -53,6 +63,19 @@ fn quick_cfg(epochs: usize) -> TrainCfg {
 /// the shape censoring (and the whole elastic path) requires.
 fn ps_plan() -> CommPlan {
     CommPlan::cser(Box::new(RandK::new(4.0)), Box::new(TopK::new(4.0)), 2)
+}
+
+/// The ring-routed CSER plan: both compressors are globally-synchronized
+/// GRBS (shared support from a shared seed), so every sync round attempts
+/// the bandwidth-optimal ring schedule instead of the rank-0 star.  874 is
+/// the `Mlp::new(16, 32, 10)` parameter count; ~32-float blocks keep the
+/// block draw meaningful at that size.
+fn ring_plan() -> CommPlan {
+    CommPlan::cser(
+        Box::new(Grbs::with_block_len(4.0, 874, 32, 5)),
+        Box::new(Grbs::with_block_len(4.0, 874, 32, 9)),
+        2,
+    )
 }
 
 /// Plan builders shared by the central and per-rank runs (`n` differs).
@@ -377,5 +400,257 @@ fn evicted_rank_rejoins_a_later_epoch_and_tracks_the_survivors() {
             "epoch {}: joiner accuracy differs from rank 0",
             p.epoch
         );
+    }
+}
+
+#[test]
+fn ring_routed_fleet_survives_a_kill_and_reforms_the_ring() {
+    // Rank 3 dies at gradient call 20 — mid-epoch-1, mid-ring.  The cut
+    // cycle stalls every survivor at that round; they redo it over the
+    // parameter-server fallback (censored, rescaled), run out the epoch
+    // degraded, evict rank 3 at the step-32 boundary, and re-form a
+    // three-rank ring for the rest of the schedule.  Survivor records must
+    // agree bit-for-bit, and the per-link counters must balance exactly
+    // across every surviving pair — through the stalled attempt, the
+    // fallback, and the re-formed ring.
+    let n = 4;
+    let mut cfg = quick_cfg(3);
+    cfg.round_deadline_ms = 300;
+    cfg.chaos = Some(ChaosSpec::parse("kill:3@20").expect("chaos spec"));
+    let mk: Box<MkOpt> =
+        Box::new(|init, n| Box::new(ErrorResetEngine::new(init, n, 0.9, ring_plan())));
+
+    let outcomes = run_elastic(&mk, n, &cfg);
+    assert!(outcomes[3].is_err(), "rank 3 was chaos-killed and must have panicked");
+    let recs: Vec<&RunRecord> = outcomes[..3]
+        .iter()
+        .enumerate()
+        .map(|(r, o)| o.as_ref().unwrap_or_else(|_| panic!("survivor rank {r} panicked")))
+        .collect();
+
+    for (r, rec) in recs.iter().enumerate() {
+        assert!(!rec.diverged, "survivor rank {r} diverged");
+        assert_eq!(rec.points.len(), 3, "survivor rank {r} must finish all epochs");
+        let s = summary(rec);
+        assert_eq!(s.live_mask, 0b0111, "rank {r}: rank 3 must be out of the final view");
+        assert_eq!(s.final_epoch, 1, "rank {r}: exactly one view change");
+        assert_eq!((s.evictions, s.joins), (1, 0), "rank {r}");
+        assert_eq!(
+            s.events,
+            vec![EpochEvent { epoch: 1, step: 32, evicted: 0b1000, joined: 0 }],
+            "rank {r}: the eviction must be the only membership event"
+        );
+        assert_points_eq(rec, recs[0], "ring survivors must agree");
+    }
+    let acc = recs[0].points.last().unwrap().test_acc;
+    assert!(acc > 0.35, "survivors should keep converging (acc {acc})");
+
+    // Somebody observed the death — the cut ring edge or a fallback
+    // deadline; which rank depends on where the cycle broke.
+    let censors: u64 = recs.iter().map(|r| summary(r).censor_events).sum();
+    assert!(censors >= 1, "the death must be on the censor record");
+
+    // Per-link ground truth: across every surviving pair the wire balances
+    // to the bit — chunks of the old 4-ring and the re-formed 3-ring, the
+    // aborted attempt's stale drains, the PS fallback, and the control
+    // frames all included.  (Links touching the dead rank are not
+    // cross-checkable: it left no record.)
+    for (a, ra) in recs.iter().enumerate() {
+        let sa = summary(ra);
+        assert_eq!(sa.links.len(), n, "rank {a}: one counter slot per physical rank");
+        for (b, rb) in recs.iter().enumerate() {
+            if a == b {
+                continue;
+            }
+            let sb = summary(rb);
+            assert_eq!(
+                sa.links[b].payload_bits_sent, sb.links[a].payload_bits_received,
+                "link {a}->{b}: sent and received bits disagree"
+            );
+        }
+    }
+    // The ring actually ran: in a star, ranks 1 and 2 never speak.
+    assert!(
+        summary(recs[1]).links[2].payload_bits_sent > 0,
+        "ring neighbors must have exchanged chunks"
+    );
+}
+
+#[test]
+fn bucketed_elastic_pipeline_matches_the_central_bucketed_reference() {
+    // `--elastic --buckets k` used to be rejected; the bucket pipeline is
+    // now view-aware.  Bucketing changes the compressor schedule
+    // (per-bucket selections), so the pinned parity is against the
+    // *central bucketed* trainer — the same reference the whole-vector
+    // elastic path is pinned to, sliced the same way: every loss,
+    // accuracy, and accounted bit identical, the star perfectly balanced,
+    // zero membership churn.
+    let n = 4;
+    let mut cfg = quick_cfg(3);
+    cfg.buckets = 4;
+    let mk: Box<MkOpt> =
+        Box::new(|init, n| Box::new(ErrorResetEngine::new(init, n, 0.9, ps_plan())));
+
+    let central = run_central(&mk, n, &cfg);
+    assert!(!central.diverged);
+
+    let mut ecfg = cfg.clone();
+    ecfg.elastic = true;
+    let outcomes = run_elastic(&mk, n, &ecfg);
+    let recs: Vec<&RunRecord> = outcomes
+        .iter()
+        .enumerate()
+        .map(|(r, o)| o.as_ref().unwrap_or_else(|_| panic!("rank {r} panicked")))
+        .collect();
+
+    for (r, rec) in recs.iter().enumerate() {
+        assert!(!rec.diverged, "rank {r} diverged");
+        assert_points_eq(rec, &central, "bucketed elastic TCP vs central bucketed trainer");
+        let s = summary(rec);
+        assert_eq!(s.live_mask, 0b1111, "rank {r}: full fleet stays live");
+        assert_eq!(s.final_epoch, 0, "rank {r}: no view change on the happy path");
+        assert_eq!((s.evictions, s.joins, s.censor_events), (0, 0, 0), "rank {r}");
+        assert!(s.events.is_empty(), "rank {r}: quiet boundaries leave no events");
+    }
+
+    // Star balance, link by link: every byte flows through rank 0.
+    let s0 = summary(recs[0]);
+    for r in 1..n {
+        let sr = summary(recs[r]);
+        assert_eq!(
+            s0.links[r].payload_bits_sent, sr.links[0].payload_bits_received,
+            "link 0->{r}: sent and received bits disagree"
+        );
+        assert_eq!(
+            s0.links[r].payload_bits_received, sr.links[0].payload_bits_sent,
+            "link {r}->0: sent and received bits disagree"
+        );
+        for other in 1..n {
+            if other != r {
+                assert_eq!(
+                    sr.links[other].payload_bits_sent, 0,
+                    "rank {r} must not talk to rank {other} in a star"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn two_joiners_are_admitted_at_one_boundary_and_track_the_survivors() {
+    // Ranks 2 and 3 die at the same step; their restarts park at the
+    // rendezvous while the survivors finish the epoch.  The step-32
+    // boundary evicts both (evict and admit stay disjoint per transition);
+    // the next short-handed boundary sweeps the parked queue and admits
+    // *both* under a single epoch frame, in rank order.  Every rank must
+    // report the same lone batch-admission event, and both joiners' curves
+    // must equal the survivors' bit-for-bit on the overlap.
+    let n = 4;
+    let epochs = 8;
+    let addr = free_loopback_addr().expect("loopback port");
+    let mk: Box<MkOpt> =
+        Box::new(|init, n| Box::new(ErrorResetEngine::new(init, n, 0.9, ps_plan())));
+    let mut cfg = quick_cfg(epochs);
+    // Same-step deaths; rank 1 is slowed so the survivors' march to the
+    // admission boundary leaves the restarts a wide parking margin.
+    cfg.chaos = Some(ChaosSpec::parse("kill:2@17,kill:3@17,slow:1:10").expect("chaos spec"));
+
+    fn run_rank(rank: usize, n: usize, mut cfg: TrainCfg, addr: String, mk: &MkOpt) -> RunRecord {
+        let (tr, te, model) = workload();
+        let init = model.init(cfg.seed);
+        cfg.backend = Backend::Tcp { bind: addr, peers: n, rank };
+        let mut opt = mk(&init, 1);
+        train_classifier(&model, &tr, &te, opt.as_mut(), &cfg)
+    }
+
+    let (rec0, rec1, recj2, recj3) = std::thread::scope(|s| {
+        let h0 = {
+            let (cfg, addr, mk) = (cfg.clone(), addr.clone(), &mk);
+            s.spawn(move || run_rank(0, n, cfg, addr, mk))
+        };
+        let h1 = {
+            let (cfg, addr, mk) = (cfg.clone(), addr.clone(), &mk);
+            s.spawn(move || run_rank(1, n, cfg, addr, mk))
+        };
+        let h2 = {
+            let (cfg, addr, mk) = (cfg.clone(), addr.clone(), &mk);
+            s.spawn(move || run_rank(2, n, cfg, addr, mk))
+        };
+        let h3 = {
+            let (cfg, addr, mk) = (cfg.clone(), addr.clone(), &mk);
+            s.spawn(move || run_rank(3, n, cfg, addr, mk))
+        };
+        assert!(h2.join().is_err(), "rank 2 was chaos-killed and must have panicked");
+        assert!(h3.join().is_err(), "rank 3 was chaos-killed and must have panicked");
+        // Both deaths observed: restart both ranks as joiners.  They park
+        // together and must be granted together.
+        let hj2 = {
+            let mut jcfg = quick_cfg(epochs);
+            jcfg.join = true;
+            let (addr, mk) = (addr.clone(), &mk);
+            s.spawn(move || run_rank(2, n, jcfg, addr, mk))
+        };
+        let hj3 = {
+            let mut jcfg = quick_cfg(epochs);
+            jcfg.join = true;
+            let (addr, mk) = (addr.clone(), &mk);
+            s.spawn(move || run_rank(3, n, jcfg, addr, mk))
+        };
+        (
+            h0.join().expect("rank 0 panicked"),
+            h1.join().expect("rank 1 panicked"),
+            hj2.join().expect("joiner 2 panicked"),
+            hj3.join().expect("joiner 3 panicked"),
+        )
+    });
+
+    for (name, rec) in
+        [("rank 0", &rec0), ("rank 1", &rec1), ("joiner 2", &recj2), ("joiner 3", &recj3)]
+    {
+        assert!(!rec.diverged, "{name} diverged");
+        let s = summary(rec);
+        assert_eq!(s.live_mask, 0b1111, "{name}: the final view must be whole again");
+        assert_eq!(s.joins, 2, "{name}: both admissions must be on record");
+        // The batch admission: exactly one event carries a joiner mask,
+        // and it names both ranks under one epoch.
+        let admissions: Vec<&EpochEvent> = s.events.iter().filter(|e| e.joined != 0).collect();
+        assert_eq!(admissions.len(), 1, "{name}: admissions must not split across boundaries");
+        assert_eq!(admissions[0].joined, 0b1100, "{name}: one frame admits both ranks");
+        assert_eq!(admissions[0].evicted, 0, "{name}: evict and admit stay disjoint");
+    }
+
+    let (s0, s1, sj2, sj3) = (summary(&rec0), summary(&rec1), summary(&recj2), summary(&recj3));
+    assert_eq!(s0.evictions, 2, "rank 0 observed both evictions");
+    assert_eq!(s1.evictions, 2, "rank 1 observed both evictions");
+    assert_eq!((sj2.evictions, sj3.evictions), (0, 0), "joiners entered after the evictions");
+    assert_eq!(s0.final_epoch, s1.final_epoch, "survivors must agree on the final view");
+    assert_eq!(s0.final_epoch, sj2.final_epoch, "joiner 2 must land on the survivors' view");
+    assert_eq!(s0.final_epoch, sj3.final_epoch, "joiner 3 must land on the survivors' view");
+    assert!(s0.final_epoch >= 2, "one evicting transition, then one admitting transition");
+
+    assert_eq!(rec0.points.len(), epochs, "rank 0 must run the full schedule");
+    for (name, recj) in [("joiner 2", &recj2), ("joiner 3", &recj3)] {
+        assert!(!recj.points.is_empty(), "{name} must train at least one epoch");
+        let first = recj.points[0].epoch;
+        assert!(
+            (2..=6).contains(&first),
+            "{name} resumed at epoch {first}, expected a boundary shortly after the kills"
+        );
+        assert_eq!(recj.points.last().unwrap().epoch, epochs - 1, "{name} finishes the schedule");
+        for p in &recj.points {
+            let q = &rec0.points[p.epoch];
+            assert_eq!(
+                p.train_loss.to_bits(),
+                q.train_loss.to_bits(),
+                "{name}: epoch {} loss differs from rank 0",
+                p.epoch
+            );
+            assert_eq!(
+                p.test_acc.to_bits(),
+                q.test_acc.to_bits(),
+                "{name}: epoch {} accuracy differs from rank 0",
+                p.epoch
+            );
+        }
     }
 }
