@@ -104,6 +104,10 @@ pub struct ElasticSummary {
     pub payload_bits_received: u64,
     /// Every membership transition this rank observed, in order.
     pub events: Vec<EpochEvent>,
+    /// Every leader handover this rank observed, in order (DESIGN.md
+    /// §10).  Additive: empty on non-failover runs and on records that
+    /// predate the field.
+    pub leader_changes: Vec<crate::membership::LeaderChange>,
     /// Per-peer wire counters (index = physical rank; this rank's own
     /// slot stays zero).  Sums over the slots reproduce the totals above.
     pub links: Vec<crate::obs::PeerCounters>,
@@ -192,6 +196,17 @@ impl RunRecord {
                 w.key("step").int(ev.step as i64);
                 w.key("evicted").int(ev.evicted as i64);
                 w.key("joined").int(ev.joined as i64);
+                w.end_obj();
+            }
+            w.end_arr();
+            // Additive key: leader handovers under --failover.
+            w.key("leader_changes").begin_arr();
+            for lc in &e.leader_changes {
+                w.begin_obj();
+                w.key("step").int(lc.step as i64);
+                w.key("from").int(lc.from as i64);
+                w.key("to").int(lc.to as i64);
+                w.key("generation").int(lc.generation as i64);
                 w.end_obj();
             }
             w.end_arr();
@@ -337,6 +352,12 @@ mod tests {
                 EpochEvent { epoch: 1, step: 16, evicted: 0b1000, joined: 0 },
                 EpochEvent { epoch: 2, step: 32, evicted: 0, joined: 0b0100 },
             ],
+            leader_changes: vec![crate::membership::LeaderChange {
+                step: 16,
+                from: 0,
+                to: 1,
+                generation: 1,
+            }],
             links,
         });
         let j = Json::parse(&r.to_json()).unwrap();
@@ -354,6 +375,12 @@ mod tests {
         assert_eq!(evs[0].get("evicted").unwrap().as_usize(), Some(0b1000));
         assert_eq!(evs[1].get("step").unwrap().as_usize(), Some(32));
         assert_eq!(evs[1].get("joined").unwrap().as_usize(), Some(0b0100));
+        let lcs = e.get("leader_changes").unwrap().as_arr().unwrap();
+        assert_eq!(lcs.len(), 1);
+        assert_eq!(lcs[0].get("step").unwrap().as_usize(), Some(16));
+        assert_eq!(lcs[0].get("from").unwrap().as_usize(), Some(0));
+        assert_eq!(lcs[0].get("to").unwrap().as_usize(), Some(1));
+        assert_eq!(lcs[0].get("generation").unwrap().as_usize(), Some(1));
         let sent = e.get("link_bits_sent").unwrap().as_arr().unwrap();
         assert_eq!(sent.len(), 3);
         assert_eq!(sent[1].as_f64(), Some(4096.0));

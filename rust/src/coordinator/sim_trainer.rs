@@ -111,6 +111,14 @@ pub struct TrainCfg {
     /// Requires a censorable plan (parameter-server-routed C2); implies
     /// `elastic`.  `None` keeps the configured cadence untouched.
     pub adaptive_tau: Option<f32>,
+    /// Control-plane failover (`--failover`, DESIGN.md §10): replicate the
+    /// leader's control state to its deterministic successor (the lowest
+    /// live non-zero rank) each boundary, fence stale frames with leader
+    /// generations, and on the leader's death let the successor assume all
+    /// four leader roles — rendezvous listener, epoch broadcaster, PS
+    /// aggregation, and the fleet metrics merge.  Unlocks rank-0 chaos
+    /// (`kill:0@s`, `drop:0:p`, `flap:0@s:ms`).  Implies `elastic`.
+    pub failover: bool,
 }
 
 impl TrainCfg {
@@ -136,6 +144,7 @@ impl TrainCfg {
             join: false,
             metrics_addr: None,
             adaptive_tau: None,
+            failover: false,
         }
     }
 }
@@ -158,10 +167,13 @@ impl TrainCfg {
 ///   launcher automatically respawns the rank with `--join` after
 ///   `<downtime_ms>` so it re-enters through the admission path.
 ///
-/// Rank 0 is the control plane: `kill`, `drop`, and `flap` on it are
-/// rejected at parse time (workers wait on its frames without a
-/// deadline by design).  [`ChaosSpec::validate`] additionally checks the
-/// plan against the run's step budget at launch.
+/// Without `--failover`, rank 0 is the control plane: `kill`, `drop`, and
+/// `flap` on it are rejected at parse time (workers wait on its frames
+/// without a deadline by design).  With `--failover`
+/// ([`ChaosSpec::parse_with`]), rank-0 faults are unlocked — the
+/// membership layer hands leadership to a deterministic successor
+/// (DESIGN.md §10).  [`ChaosSpec::validate`] additionally checks the plan
+/// against the run's step budget at launch.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct ChaosSpec {
     pub kill: Vec<(usize, u64)>,
@@ -176,16 +188,22 @@ pub struct ChaosSpec {
 
 impl ChaosSpec {
     pub fn parse(s: &str) -> Result<ChaosSpec, String> {
-        fn rank_of(tok: &str, part: &str, evictable: bool) -> Result<usize, String> {
+        ChaosSpec::parse_with(s, false)
+    }
+
+    /// [`ChaosSpec::parse`], with the rank-0 lock keyed on `--failover`:
+    /// a failover run may kill, drop, or flap its leader.
+    pub fn parse_with(s: &str, failover: bool) -> Result<ChaosSpec, String> {
+        let rank_of = |tok: &str, part: &str, evictable: bool| -> Result<usize, String> {
             let rank: usize = tok.parse().map_err(|_| format!("bad chaos rank in '{part}'"))?;
-            if evictable && rank == 0 {
+            if evictable && rank == 0 && !failover {
                 return Err(format!(
-                    "chaos directive '{part}' targets rank 0 — the control plane is not \
-                     evictable and workers wait on its frames without a deadline"
+                    "chaos directive '{part}' targets rank 0 — without --failover the control \
+                     plane is not evictable and workers wait on its frames without a deadline"
                 ));
             }
             Ok(rank)
-        }
+        };
         let mut spec = ChaosSpec::default();
         for part in s.split(',').filter(|p| !p.is_empty()) {
             if let Some(rest) = part.strip_prefix("kill:") {
@@ -462,6 +480,7 @@ pub fn train_classifier(
             || cfg.join
             || cfg.metrics_addr.is_some()
             || cfg.adaptive_tau.is_some()
+            || cfg.failover
         {
             return train_classifier_tcp_elastic(model, train, test, engine, cfg, &bind, peers, rank);
         }
@@ -852,8 +871,18 @@ fn train_classifier_tcp(
 /// path *at the same round* and latches the transport degraded until the
 /// next boundary re-forms the ring.  The bucketed pipeline composes too —
 /// each bucket runs the same view-aware collectives, and an aborted
-/// bucket drains the prepare queue instead of wedging it.  Rank 0 is the
-/// control plane and is not evictable; losing it is terminal.
+/// bucket drains the prepare queue instead of wedging it.  Without
+/// `--failover`, rank 0 is the control plane and is not evictable;
+/// losing it is terminal.  With `--failover` (DESIGN.md §10) the leader
+/// replicates its control state to a deterministic successor every
+/// boundary, stamps frames with a leader generation so a zombie
+/// ex-leader is fenced, and on the leader's death the successor redoes
+/// the interrupted round as PS server and assumes every leader role:
+/// rendezvous listener (re-bound on the advertised address), epoch
+/// broadcaster, PS aggregation, and the fleet metrics merge (seeded
+/// from the replicated snapshot so run-wide counters never regress).
+/// Worker-local residuals are deliberately *not* replicated — error
+/// reset makes them rebuildable state, exactly like any other eviction.
 ///
 /// The `--chaos` fault matrix rides this path: `kill`/`flap` panic in
 /// the gradient oracle (unwinding drops the socket, peers observe
@@ -881,7 +910,7 @@ fn train_classifier_tcp_elastic(
     assert_eq!(d, model.dim());
     trace_begin(cfg);
     let metrics_on = cfg.metrics_addr.is_some() || cfg.adaptive_tau.is_some();
-    let fleet = metrics_begin(cfg, &engine.name(), rank, n_peers);
+    let mut fleet = metrics_begin(cfg, &engine.name(), rank, n_peers);
     let mut tracker = obs::metrics::DeltaTracker::new();
     let n = n_peers;
     let deadline = Duration::from_millis(cfg.round_deadline_ms.max(1));
@@ -921,20 +950,32 @@ fn train_classifier_tcp_elastic(
             .unwrap_or_else(|e| panic!("rank {rank}: wrapping the rejoin mesh: {e}"));
         let view = Epoch::from_mask(grant.epoch, grant.live_mask, n);
         assert!(view.is_live(rank), "the granted view must include the joiner");
-        let mut el = Elastic::with_epoch(arm_faults(tp), view, Some(deadline));
-        // Rank 0's boundary broadcast runs under the granted view, so the
-        // admission frame arrives here too; consume it and cross-check the
-        // grant against what the survivors were told.
+        let mut el = Elastic::with_epoch(arm_faults(tp), view, Some(deadline))
+            .with_failover(cfg.failover)
+            .with_generation(grant.generation);
+        // The leader's boundary broadcast runs under the granted view, so
+        // the admission frame arrives here too; consume it and cross-check
+        // the grant against what the survivors were told.
+        let ldr = el.leader();
         let m = el
-            .recv(0, grant.step, Tag::Epoch)
+            .recv(ldr, grant.step, Tag::Epoch)
             .unwrap_or_else(|e| panic!("rank {rank}: receiving the admission frame: {e}"));
-        let (epoch, joined) = crate::membership::decode_epoch_frame(&m, n)
+        let (gen, epoch, joined) = crate::membership::decode_epoch_frame(&m, n)
             .unwrap_or_else(|e| panic!("rank {rank}: decoding the admission frame: {e}"));
+        assert!(
+            crate::membership::admits_generation(grant.generation, gen),
+            "admission frame generation {gen} is fenced behind the grant's {}",
+            grant.generation
+        );
         assert!(
             (joined >> rank) & 1 == 1,
             "the admission frame's joiner mask {joined:#x} must include this rank"
         );
         assert_eq!(epoch, view, "grant and boundary frame disagree on the view");
+        // Admitting a dead ex-leader back moves leadership at this very
+        // boundary, so the frame may already carry a bumped generation;
+        // adopt it or this rank's own later frames would be fenced.
+        let el = el.with_generation(gen);
         joins += joined.count_ones() as u64;
         events.push(super::metrics::EpochEvent {
             epoch: epoch.id(),
@@ -946,7 +987,7 @@ fn train_classifier_tcp_elastic(
     } else {
         let (tp, session) = TcpTransport::connect_v2(rendezvous_addr, rank, n)
             .unwrap_or_else(|e| panic!("joining job at {rendezvous_addr} as rank {rank}/{n}: {e}"));
-        let mut el = Elastic::new(arm_faults(tp), Some(deadline));
+        let mut el = Elastic::new(arm_faults(tp), Some(deadline)).with_failover(cfg.failover);
         let mut start_epoch = 0usize;
         if let Some(path) = &cfg.ckpt {
             if path.exists() {
@@ -998,6 +1039,14 @@ fn train_classifier_tcp_elastic(
     let mut cum_seconds = 0.0f64;
     let scale = cfg.paper_d as f64 / d as f64;
 
+    // Failover state: the successor's stash of the leader's last replicated
+    // control state, the highest leader generation this rank has acted on
+    // (a bump past it at a boundary means a handover was just agreed), and
+    // the current censoring τ (part of the replicated state).
+    let mut replicated: Option<crate::membership::ControlState> = None;
+    let mut seen_gen = el.generation();
+    let mut current_tau = cfg.adaptive_tau.unwrap_or(0.0);
+
     for epoch in start_epoch..cfg.epochs {
         let frac = epoch as f64 / cfg.epochs as f64;
         let eta = (cfg.lr * (cfg.lr_multiplier)(&cfg.schedule, frac)) as f32;
@@ -1048,7 +1097,11 @@ fn train_classifier_tcp_elastic(
         // ---- the epoch boundary: the only place membership changes ----
         let round = engine.step_count();
         let mut admit = 0u64;
-        if rank == 0 && el.pending_down() == 0 && el.live_count() < n {
+        // The leader entering this boundary: it polls the rendezvous and
+        // grants admissions; everyone else accepts the joiners' re-dials.
+        // Rank 0 always, unless `--failover` already moved leadership.
+        let ldr = el.leader();
+        if rank == ldr && el.pending_down() == 0 && el.live_count() < n {
             // Short-handed with the pending deaths already flushed: give
             // restarting ranks one deadline window to park at the
             // rendezvous, then admit every distinct non-live request as a
@@ -1074,14 +1127,15 @@ fn train_classifier_tcp_elastic(
                     }
                     Ok(Some(req)) => {
                         eprintln!(
-                            "warning: rank 0: live or duplicate rank {} asked to join — ignored",
+                            "warning: rank {rank}: live or duplicate rank {} asked to join — \
+                             ignored",
                             req.rank
                         );
                         window = Duration::ZERO;
                     }
                     Ok(None) => break,
                     Err(e) => {
-                        eprintln!("warning: rank 0: join poll failed: {e}");
+                        eprintln!("warning: rank {rank}: join poll failed: {e}");
                         break;
                     }
                 }
@@ -1095,21 +1149,31 @@ fn train_classifier_tcp_elastic(
                 for req in reqs {
                     let j = req.rank;
                     let granted = session
-                        .grant_join(req, next.id(), round, next.live_mask(), joiners, &blob)
+                        .grant_join(
+                            req,
+                            el.generation(),
+                            next.id(),
+                            round,
+                            next.live_mask(),
+                            joiners,
+                            &blob,
+                        )
                         .and_then(|()| session.accept_rejoin());
                     match granted {
                         Ok((peer, stream)) if peer == j => {
                             el.inner_mut()
                                 .inner_mut()
                                 .install_link(j, stream)
-                                .unwrap_or_else(|e| panic!("rank 0: relinking rank {j}: {e}"));
+                                .unwrap_or_else(|e| panic!("rank {rank}: relinking rank {j}: {e}"));
                             admit |= 1u64 << j;
                         }
                         Ok((peer, _)) => eprintln!(
-                            "warning: rank 0: rank {peer} re-dialed while rank {j} held the \
-                             grant — admission dropped"
+                            "warning: rank {rank}: rank {peer} re-dialed while rank {j} held \
+                             the grant — admission dropped"
                         ),
-                        Err(e) => eprintln!("warning: rank 0: admitting rank {j} failed: {e}"),
+                        Err(e) => {
+                            eprintln!("warning: rank {rank}: admitting rank {j} failed: {e}")
+                        }
                     }
                 }
             }
@@ -1127,7 +1191,7 @@ fn train_classifier_tcp_elastic(
             }
             joins += u64::from(tr.joined.count_ones());
             just_joined = tr.joined;
-            if tr.joined != 0 && rank != 0 {
+            if tr.joined != 0 && rank != ldr {
                 // Every joiner re-dialed this rank's data listener when its
                 // grant arrived; adopt the fresh streams.  Dials land in
                 // whatever order the joiners raced, so match them against
@@ -1156,8 +1220,72 @@ fn train_classifier_tcp_elastic(
             });
         }
 
-        // ---- telemetry: ship this boundary's delta snapshot to rank 0,
-        // riding the control plane right behind the epoch broadcast ----
+        // ---- leader handover: a generation bump at this boundary means
+        // the fleet just agreed a new leader.  If it is this rank, assume
+        // every leader role (DESIGN.md §10): re-bind the rendezvous on the
+        // advertised address so joiners and `cser top` can follow, stand
+        // up the fleet metrics merge seeded from the replicated snapshot,
+        // and resume the dead leader's last agreed censoring τ.  PS
+        // aggregation and the epoch broadcast moved already — every
+        // collective roots at `leader()`. ----
+        let ldr_now = el.leader();
+        if cfg.failover && el.generation() > seen_gen {
+            seen_gen = el.generation();
+            if rank == ldr_now {
+                eprintln!(
+                    "rank {rank}: assuming leadership at generation {} (step {round})",
+                    el.generation()
+                );
+                if let Err(e) = session.assume_rendezvous(rendezvous_addr) {
+                    eprintln!(
+                        "warning: rank {rank}: re-binding rendezvous {rendezvous_addr}: {e}"
+                    );
+                }
+                if metrics_on && fleet.is_none() {
+                    let view = replicated
+                        .as_ref()
+                        .and_then(|cs| match obs::metrics::decode_fleet(&cs.metrics) {
+                            Ok(v) => Some(v),
+                            Err(e) => {
+                                eprintln!("warning: rank {rank}: replicated fleet blob: {e}");
+                                None
+                            }
+                        })
+                        .unwrap_or_else(|| obs::metrics::FleetView::new(&engine.name(), n));
+                    let view = std::sync::Arc::new(Mutex::new(view));
+                    if let Some(addr) = &cfg.metrics_addr {
+                        match obs::metrics::spawn_exposition_server(
+                            addr,
+                            std::sync::Arc::clone(&view),
+                        ) {
+                            Ok(bound) => eprintln!(
+                                "rank {rank}: serving metrics at http://{bound}/ \
+                                 (Prometheus at /metrics)"
+                            ),
+                            Err(e) => eprintln!(
+                                "warning: rank {rank}: binding metrics server at {addr}: {e}"
+                            ),
+                        }
+                    }
+                    fleet = Some(view);
+                }
+                if cfg.adaptive_tau.is_some() {
+                    if let Some(cs) = &replicated {
+                        if cs.tau > 0.0 {
+                            current_tau = cs.tau;
+                            engine.set_cadence(crate::engine::Cadence::Censored {
+                                tau0: cs.tau,
+                                gamma: 1.0,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+
+        // ---- telemetry: ship this boundary's delta snapshot to the
+        // leader, riding the control plane right behind the epoch
+        // broadcast ----
         if metrics_on {
             obs::metrics::sync_from_peers(&el.inner().inner().per_peer);
             obs::metrics::gauge_set(obs::metrics::Gauge::LiveRanks, el.live_count() as f64);
@@ -1167,8 +1295,8 @@ fn train_classifier_tcp_elastic(
                 el.censor_events() as f64,
             );
             let snap = tracker.snapshot(rank);
-            if rank == 0 {
-                let view = fleet.as_ref().expect("rank 0 owns the fleet view");
+            if rank == ldr_now {
+                let view = fleet.as_ref().expect("the leader owns the fleet view");
                 let mut v = view.lock().expect("fleet view");
                 v.merge(&snap);
                 let pending = el.pending_down();
@@ -1177,7 +1305,7 @@ fn train_classifier_tcp_elastic(
                     // The joiner admitted *at* this boundary enters the
                     // loop next epoch and ships nothing yet; pending-down
                     // ranks are dead in all but name.
-                    if r == 0 || (just_joined >> r) & 1 == 1 || (pending >> r) & 1 == 1 {
+                    if r == rank || (just_joined >> r) & 1 == 1 || (pending >> r) & 1 == 1 {
                         continue;
                     }
                     // Inner transport on purpose: a missed metrics frame
@@ -1190,7 +1318,7 @@ fn train_classifier_tcp_elastic(
                         Ok(Some(m)) => match obs::metrics::decode_snapshot(&m) {
                             Ok(s) => v.merge(&s),
                             Err(e) => eprintln!(
-                                "warning: rank 0: metrics frame from rank {r}: {e}"
+                                "warning: rank {rank}: metrics frame from rank {r}: {e}"
                             ),
                         },
                         Ok(None) => {} // missed the window; the next delta covers it
@@ -1198,7 +1326,7 @@ fn train_classifier_tcp_elastic(
                     }
                 }
             } else if let Err(e) =
-                el.send(0, round, Tag::Metrics, obs::metrics::encode_snapshot(&snap))
+                el.send(ldr_now, round, Tag::Metrics, obs::metrics::encode_snapshot(&snap))
             {
                 eprintln!("warning: rank {rank}: shipping metrics snapshot: {e}");
             }
@@ -1217,13 +1345,65 @@ fn train_classifier_tcp_elastic(
                 ),
                 None => crate::membership::censor_seed_from_metrics(base),
             };
+            current_tau = tau;
             engine.set_cadence(crate::engine::Cadence::Censored { tau0: tau, gamma: 1.0 });
+        }
+
+        // ---- control-state replication: the leader ships its epoch
+        // state (generation, view, τ, grant blob, fleet metrics) to its
+        // deterministic successor each boundary, so a later handover
+        // resumes the run where it stood instead of restarting the
+        // control plane cold.  Worker-local residuals are deliberately
+        // absent: error reset makes them rebuildable (DESIGN.md §10). ----
+        if cfg.failover && el.live_count() > 1 {
+            let succ = el.successor();
+            if rank == ldr_now {
+                if let Some(succ) = succ {
+                    let metrics_blob = fleet
+                        .as_ref()
+                        .map(|v| obs::metrics::encode_fleet(&v.lock().expect("fleet view")))
+                        .unwrap_or_default();
+                    let cs = crate::membership::ControlState {
+                        generation: el.generation(),
+                        epoch: el.epoch().id(),
+                        live: el.epoch().live_mask(),
+                        pending_down: el.pending_down(),
+                        parked: 0, // joiners are granted in-boundary, never parked across one
+                        tau: current_tau,
+                        grant_blob: Checkpoint::capture_engine(engine).to_bytes(),
+                        metrics: metrics_blob,
+                    };
+                    let frame = crate::membership::encode_control_state(&cs);
+                    if let Err(e) = el.send(succ, round, Tag::ControlState, frame) {
+                        eprintln!("warning: rank {rank}: replicating control state: {e}");
+                    }
+                }
+            } else if succ == Some(rank) {
+                // Inner transport for the same reason as the metrics path:
+                // a missed replication frame is not a censor event, and a
+                // late one is discarded as stale by the per-link round
+                // check.
+                match el.inner_mut().recv_deadline(
+                    ldr_now,
+                    round,
+                    Tag::ControlState,
+                    Some(deadline),
+                ) {
+                    Ok(Some(m)) => match crate::membership::decode_control_state(&m) {
+                        Ok(cs) => replicated = Some(cs),
+                        Err(e) => eprintln!("warning: rank {rank}: control-state frame: {e}"),
+                    },
+                    Ok(None) => {} // missed the window; the next boundary's supersedes it
+                    Err(_) => {}   // death is the membership plane's problem
+                }
+            }
         }
     }
 
     let final_view = el.epoch();
     let live_mask = final_view.live_mask() & !el.pending_down();
     let censor_events = el.censor_events();
+    let leader_changes = el.leader_changes().to_vec();
     let tp = el.into_inner().into_inner();
     metrics_finish(cfg);
     RunRecord {
@@ -1244,6 +1424,7 @@ fn train_classifier_tcp_elastic(
             payload_bits_sent: tp.per_peer.iter().map(|p| p.payload_bits_sent).sum(),
             payload_bits_received: tp.per_peer.iter().map(|p| p.payload_bits_received).sum(),
             events,
+            leader_changes,
             links: tp.per_peer.clone(),
         }),
     }
@@ -1438,11 +1619,20 @@ mod tests {
 
     #[test]
     fn chaos_matrix_rejects_malformed_directives() {
-        // Rank 0 is the control plane: kill/drop/flap on it are refused.
+        // Rank 0 is the control plane: kill/drop/flap on it are refused
+        // without --failover ...
         assert!(ChaosSpec::parse("kill:0@3").is_err());
         assert!(ChaosSpec::parse("drop:0:0.5").is_err());
         assert!(ChaosSpec::parse("flap:0@3:100").is_err());
-        // ... but slow/delay on rank 0 are legal (latency, not loss).
+        // ... unlocked with it (the successor absorbs the leader's death) ...
+        let spec = ChaosSpec::parse_with("kill:0@3,drop:0:0.5,flap:0@4:100", true).unwrap();
+        assert_eq!(spec.kill, vec![(0, 3)]);
+        assert_eq!(spec.drop, vec![(0, 0.5)]);
+        assert_eq!(spec.flap, vec![(0, 4, 100)]);
+        // ... while shape and range errors stay errors either way.
+        assert!(ChaosSpec::parse_with("drop:0:1.5", true).is_err());
+        // slow/delay on rank 0 are legal even without failover (latency,
+        // not loss).
         assert!(ChaosSpec::parse("slow:0:20,delay:0:5:0").is_ok());
         // Probability range and shape errors are parse-time.
         assert!(ChaosSpec::parse("drop:2:1.5").unwrap_err().contains("outside [0, 1]"));

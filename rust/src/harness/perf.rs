@@ -19,7 +19,7 @@
 //!   "entries": [
 //!     {
 //!       "name": "step_cser",          // unique entry id
-//!       "kind": "optimizer_step",     // "optimizer_step" | "grad" | "train_step" | "collective"
+//!       "kind": "optimizer_step",     // "optimizer_step" | "grad" | "train_step" | "collective" | "membership"
 //!       "d": 1048576,                 // model dimension
 //!       "workers": 8,                 // simulated workers
 //!       "batch": 0,                   // samples per gradient (grad/train_step kinds)
@@ -86,6 +86,17 @@
 //! recvs.  `speedup_vs_reference` is raw ring median / elastic ring
 //! median; same < 2% overhead target as `partial_participation`, and the
 //! accounted bits must match the raw ring exactly.
+//!
+//! v7 adds the `leader_handover` entry (kind `membership`): a 4-rank
+//! `--failover` fleet arriving at an epoch boundary with the leader's
+//! death latched, so the survivors evict rank 0, agree the successor's
+//! view, and bump the leader generation (DESIGN.md §10).  The reference
+//! (`epoch_boundary_quiet_n4`) is the same fleet agreeing "no change";
+//! both samples pay identical per-iteration setup (fresh channel mesh +
+//! threads), so `speedup_vs_reference` = quiet median / handover median
+//! isolates the handover algebra.  CI's tripwire only gates collapse
+//! (ratio > 0.02) — handovers are rare by construction, so the entry
+//! exists to catch accidental quadratic blowups, not to set a budget.
 
 use crate::collective::bucket::SyncBuckets;
 use crate::compressor::{Compressor, Grbs, TopK};
@@ -104,7 +115,7 @@ use std::sync::mpsc::channel;
 use std::sync::Arc;
 use std::time::Duration;
 
-pub const SCHEMA: &str = "cser-bench-engine/v6";
+pub const SCHEMA: &str = "cser-bench-engine/v7";
 
 #[derive(Debug, Clone)]
 pub struct PerfEntry {
@@ -693,6 +704,57 @@ pub fn run(quick: bool) -> PerfReport {
         median_ns: ring_elastic_ns,
         bits_per_step: bits_ring_elastic as f64,
         speedup_vs_reference: ring_ns / ring_elastic_ns,
+    });
+
+    // ---- control-plane failover: the cost of a leader handover ----
+    // Reference: a quiet epoch boundary — the full 4-rank fleet agrees
+    // "no change" and stays on generation 0.  Measured: the same fleet
+    // arriving at the boundary with the leader's death latched
+    // (`--failover` absorbs `PeerDown(0)`), so the survivors evict rank
+    // 0, agree the successor's view, and bump the leader generation.
+    // Both samples pay identical per-iteration setup (fresh channel mesh
+    // + threads), so the ratio isolates the handover algebra itself.
+    let boundary_sample = |kill_leader: bool| {
+        let mut eps = channel_mesh(4);
+        let participants: Vec<_> =
+            if kill_leader { eps.drain(1..).collect() } else { eps.drain(..).collect() };
+        let dead = eps.pop(); // rank 0's endpoint, when killing it
+        let mut handles = Vec::with_capacity(participants.len());
+        for tp in participants {
+            handles.push(std::thread::spawn(move || {
+                let mut el = crate::membership::Elastic::new(tp, Some(Duration::from_secs(5)))
+                    .with_failover(true);
+                if kill_leader {
+                    assert!(el.on_peer_down(0), "--failover must absorb the leader's death");
+                }
+                let tr = el.epoch_boundary(1, 0).expect("bench epoch boundary");
+                if kill_leader {
+                    assert_eq!(tr.expect("handover must transition").evicted, 0b1);
+                    assert_eq!(el.generation(), 1, "a handover must bump the generation");
+                } else {
+                    assert!(tr.is_none(), "a quiet boundary must not transition");
+                    assert_eq!(el.generation(), 0, "a quiet boundary must not bump");
+                }
+            }));
+        }
+        drop(dead);
+        for h in handles {
+            h.join().expect("boundary bench thread");
+        }
+    };
+    b.run("epoch_boundary_quiet_n4", || boundary_sample(false));
+    let quiet_ns = b.results.last().unwrap().median_ns;
+    b.run("leader_handover_n4", || boundary_sample(true));
+    let handover_ns = b.results.last().unwrap().median_ns;
+    entries.push(PerfEntry {
+        name: "leader_handover".into(),
+        kind: "membership",
+        d: 0,
+        workers: 4,
+        batch: 0,
+        median_ns: handover_ns,
+        bits_per_step: 0.0,
+        speedup_vs_reference: quiet_ns / handover_ns,
     });
 
     // ---- tracing overhead: the CSER engine step, tracing off vs on ----

@@ -25,11 +25,14 @@
 //!   with Chrome-trace export and per-peer wire counters, plus the
 //!   run-wide metrics plane — a static lock-free counter/gauge/histogram
 //!   registry whose per-rank delta snapshots ride the epoch boundary to
-//!   rank 0 for Prometheus/JSON exposition and the live `cser top` view;
-//!   both off by default, costing one flag check per site when
+//!   the leader for Prometheus/JSON exposition and the live `cser top`
+//!   view; both off by default, costing one flag check per site when
 //!   disabled), the elastic membership control plane ([`membership`]:
-//!   epoch-based eviction/rejoin and the censoring-rule threshold
-//!   derivations, including the metrics-fed `--adaptive-tau` loop), the
+//!   epoch-based eviction/rejoin, the censoring-rule threshold
+//!   derivations including the metrics-fed `--adaptive-tau` loop, and
+//!   `--failover` leader succession — generation-fenced epoch frames,
+//!   per-boundary control-state replication to the lowest live non-zero
+//!   rank, and takeover of every leader role on its death), the
 //!   network
 //!   cost/accounting substrate ([`network`]), data sharding ([`data`]), a
 //!   fast pure-Rust model zoo for the paper's sweeps ([`models`]), the PJRT

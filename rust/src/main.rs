@@ -14,6 +14,7 @@
 //! cser train-lm [--preset tiny|small] [--opt cser|sgd|...] [--steps N] ...
 //! cser launch   [--workers N] [--opt ...] [--epochs N] [--ckpt-dir D]
 //!               [--buckets K] [--trace D] [--elastic] [--deadline-ms T]
+//!               [--failover]
 //!               [--chaos kill:<r>@<s>,slow:<r>:<ms>,drop:<r>:<p>,
 //!                        delay:<r>:<ms>:<jitter>,flap:<r>@<s>:<down_ms>]
 //!               [--metrics-addr H:P] [--adaptive-tau B]
@@ -30,8 +31,14 @@
 //!                                          after <down_ms> ms; specs are
 //!                                          validated against the run's step
 //!                                          count before anything spawns;
-//!                                          --metrics-addr: rank 0 serves the
-//!                                          fleet metrics view over HTTP;
+//!                                          --failover: replicate leader
+//!                                          state to a deterministic
+//!                                          successor and survive the
+//!                                          leader's death — unlocks rank-0
+//!                                          chaos (kill:0@s etc., DESIGN.md
+//!                                          §10);
+//!                                          --metrics-addr: the leader serves
+//!                                          the fleet metrics view over HTTP;
 //!                                          --adaptive-tau: censor threshold
 //!                                          follows the backpressure gauge)
 //! cser worker   --rendezvous H:P --rank R --workers N [--join] [training flags]
@@ -41,6 +48,9 @@
 //! cser top      --addr H:P [--once] [--interval MS]
 //!                                          refreshing per-rank terminal table
 //!                                          from a --metrics-addr endpoint
+//!                                          (reconnects with capped backoff,
+//!                                          so it rides out a --failover
+//!                                          handover of the endpoint)
 //! cser trace    summarize --trace D [--strict]
 //!                                          merge per-rank traces into a
 //!                                          Chrome trace JSON + print summary
@@ -71,8 +81,8 @@ fn main() {
         "suite", "seeds", "quick", "rc", "preset", "opt", "steps", "workers", "lr", "beta",
         "eval-every", "seed", "artifacts", "h", "rc1", "rc2", "x", "y", "out", "rendezvous",
         "rank", "epochs", "batch", "record", "ckpt", "ckpt-dir", "buckets", "trace", "chaos",
-        "elastic", "deadline-ms", "join", "metrics-addr", "adaptive-tau", "strict", "addr",
-        "once", "interval",
+        "elastic", "deadline-ms", "join", "failover", "metrics-addr", "adaptive-tau", "strict",
+        "addr", "once", "interval",
     ];
     let args = match Args::parse(argv, &known) {
         Ok(a) => a,
@@ -296,9 +306,18 @@ fn dist_train_cfg(args: &Args) -> anyhow::Result<cser::coordinator::TrainCfg> {
     // --chaos (fault injection) and --join (rejoin a running job) imply it.
     cfg.elastic = args.bool("elastic", false)?;
     cfg.round_deadline_ms = args.u64("deadline-ms", 1000)?;
+    // Control-plane failover (DESIGN.md §10): replicate leader state to a
+    // deterministic successor, fence stale generations, and survive the
+    // leader's death.  Implies elastic, and unlocks rank-0 chaos below.
+    cfg.failover = args.bool("failover", false)?;
+    if cfg.failover {
+        cfg.elastic = true;
+    }
     if let Some(spec) = args.opt_str("chaos") {
-        cfg.chaos =
-            Some(cser::coordinator::ChaosSpec::parse(&spec).map_err(|e| anyhow::anyhow!(e))?);
+        cfg.chaos = Some(
+            cser::coordinator::ChaosSpec::parse_with(&spec, cfg.failover)
+                .map_err(|e| anyhow::anyhow!(e))?,
+        );
         cfg.elastic = true;
     }
     cfg.join = args.bool("join", false)?;
@@ -384,9 +403,14 @@ fn launch(args: &Args) -> anyhow::Result<()> {
     anyhow::ensure!(n >= 1, "--workers must be at least 1");
     // With --chaos the named ranks die on purpose (elastic membership keeps
     // the survivors training); parse the plan here so their exits are
-    // expected instead of failing the launch.
+    // expected instead of failing the launch.  --failover unlocks rank-0
+    // directives — the successor keeps the job alive.
+    let failover = args.bool("failover", false)?;
     let chaos = match args.opt_str("chaos") {
-        Some(s) => Some(cser::coordinator::ChaosSpec::parse(&s).map_err(|e| anyhow::anyhow!(e))?),
+        Some(s) => Some(
+            cser::coordinator::ChaosSpec::parse_with(&s, failover)
+                .map_err(|e| anyhow::anyhow!(e))?,
+        ),
         None => None,
     };
     if let Some(c) = &chaos {
@@ -429,7 +453,7 @@ fn launch(args: &Args) -> anyhow::Result<()> {
             .arg(&record);
         for key in [
             "opt", "rc1", "rc2", "h", "epochs", "batch", "lr", "beta", "seed", "buckets", "trace",
-            "chaos", "elastic", "deadline-ms", "metrics-addr", "adaptive-tau",
+            "chaos", "elastic", "deadline-ms", "failover", "metrics-addr", "adaptive-tau",
         ] {
             if let Some(v) = args.opt_str(key) {
                 cmd.arg(format!("--{key}")).arg(v);
@@ -446,8 +470,18 @@ fn launch(args: &Args) -> anyhow::Result<()> {
         records.push(record);
     }
     if let Some(ma) = args.opt_str("metrics-addr") {
-        eprintln!("launch: rank 0 serves metrics at http://{ma}/ — watch with: cser top --addr {ma}");
+        eprintln!(
+            "launch: the leader serves metrics at http://{ma}/ — watch with: cser top --addr {ma}"
+        );
     }
+
+    // A chaos kill or flap unwinds via panic, so a planned death exits with
+    // a *code* (and never a signal).  A signal death — SIGSEGV, SIGKILL,
+    // OOM — is always a real failure, even on a chaos-marked rank, and must
+    // fail the launch naming the rank and signal instead of being folded
+    // into the expected-deaths accounting.
+    use std::os::unix::process::ExitStatusExt;
+    let signal_of = |status: &std::process::ExitStatus| status.signal();
 
     let mut failures = Vec::new();
     // Flap ranks die early and come back: wait those workers out first,
@@ -463,7 +497,13 @@ fn launch(args: &Args) -> anyhow::Result<()> {
                 failures.push(format!("rank {rank} was marked for a chaos flap but exited cleanly"));
                 continue;
             }
-            Ok(status) => eprintln!("launch: rank {rank} flapped down as planned ({status})"),
+            Ok(status) => match signal_of(&status) {
+                Some(sig) => {
+                    failures.push(format!("rank {rank} terminated by signal {sig} ({status})"));
+                    continue;
+                }
+                None => eprintln!("launch: rank {rank} flapped down as planned ({status})"),
+            },
             Err(e) => {
                 failures.push(format!("rank {rank} unwaitable: {e}"));
                 continue;
@@ -513,10 +553,15 @@ fn launch(args: &Args) -> anyhow::Result<()> {
                     ));
                 }
             }
-            Ok(status) if expected_kill => {
-                eprintln!("launch: rank {rank} chaos-killed as planned ({status})");
-            }
-            Ok(status) => failures.push(format!("rank {rank} exited with {status}")),
+            Ok(status) => match signal_of(&status) {
+                Some(sig) => {
+                    failures.push(format!("rank {rank} terminated by signal {sig} ({status})"))
+                }
+                None if expected_kill => {
+                    eprintln!("launch: rank {rank} chaos-killed as planned ({status})")
+                }
+                None => failures.push(format!("rank {rank} exited with {status}")),
+            },
             Err(e) => failures.push(format!("rank {rank} unwaitable: {e}")),
         }
     }
@@ -525,16 +570,30 @@ fn launch(args: &Args) -> anyhow::Result<()> {
             Ok(status) if status.success() => {
                 eprintln!("launch: rank {rank} rejoined and finished cleanly");
             }
-            Ok(status) => failures.push(format!("respawned rank {rank} exited with {status}")),
+            Ok(status) => match signal_of(&status) {
+                Some(sig) => failures
+                    .push(format!("respawned rank {rank} terminated by signal {sig} ({status})")),
+                None => failures.push(format!("respawned rank {rank} exited with {status}")),
+            },
             Err(e) => failures.push(format!("respawned rank {rank} unwaitable: {e}")),
         }
     }
     anyhow::ensure!(failures.is_empty(), "launch failed: {}", failures.join("; "));
 
-    let json = std::fs::read_to_string(&records[0])
-        .map_err(|e| anyhow::anyhow!("reading rank 0's record: {e}"))?;
+    // The canonical record comes from the lowest rank that ran the whole
+    // schedule: chaos-killed ranks never write one, and a flapped rank's
+    // record only covers its post-rejoin epochs.  Without chaos (or with
+    // chaos sparing rank 0) this is rank 0, as before; under
+    // `--failover --chaos kill:0@s` it is the successor's record.
+    let canonical = (0..n)
+        .find(|&r| {
+            chaos.as_ref().is_none_or(|c| c.kill_step(r).is_none() && c.flap(r).is_none())
+        })
+        .unwrap_or(0);
+    let json = std::fs::read_to_string(&records[canonical])
+        .map_err(|e| anyhow::anyhow!("reading rank {canonical}'s record: {e}"))?;
     let parsed = cser::util::json::Json::parse(&json)
-        .map_err(|e| anyhow::anyhow!("rank 0 emitted unparseable RunRecord JSON: {e}"))?;
+        .map_err(|e| anyhow::anyhow!("rank {canonical} emitted unparseable RunRecord JSON: {e}"))?;
     let diverged = parsed.get("diverged").and_then(|j| j.as_bool()).unwrap_or(true);
     anyhow::ensure!(!diverged, "launch run diverged");
     println!("{json}");
@@ -591,10 +650,17 @@ fn trace_cmd(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// Live fleet dashboard: poll the `cser-metrics/v1` endpoint rank 0 serves
-/// under `cser launch --metrics-addr` and render one row per rank.  `--once`
-/// prints a single table and exits (for scripts and CI); otherwise the view
-/// refreshes every `--interval` ms until the endpoint goes away.
+/// Live fleet dashboard: poll the `cser-metrics/v1` endpoint the leader
+/// serves under `cser launch --metrics-addr` and render one row per rank.
+/// `--once` prints a single table and exits (for scripts and CI); otherwise
+/// the view refreshes every `--interval` ms until the endpoint goes away.
+///
+/// Refused connections are retried with the rendezvous dialer's capped
+/// exponential backoff instead of exiting on the first failure: the
+/// endpoint is briefly dark while a `--failover` successor re-binds it
+/// (and at startup while the leader is still coming up).  Only after the
+/// retry budget is exhausted does a dark endpoint mean the run finished
+/// (or, before the first render, that the address is wrong).
 fn top(args: &Args) -> anyhow::Result<()> {
     use cser::util::json::Json;
     let addr = args.opt_str("addr").ok_or_else(|| {
@@ -602,12 +668,26 @@ fn top(args: &Args) -> anyhow::Result<()> {
     })?;
     let once = args.bool("once", false)?;
     let interval = args.u64("interval", 1000)?;
+    let poll_with_backoff = |addr: &str| -> Result<String, String> {
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        let mut attempt = 0u32;
+        loop {
+            match cser::obs::metrics::http_get(addr, "/json") {
+                Ok(b) => return Ok(b),
+                Err(e) if std::time::Instant::now() >= deadline => return Err(e),
+                Err(_) => {
+                    std::thread::sleep(cser::transport::rendezvous::backoff_delay(attempt));
+                    attempt += 1;
+                }
+            }
+        }
+    };
     let mut rendered = false;
     loop {
-        let body = match cser::obs::metrics::http_get(&addr, "/json") {
+        let body = match poll_with_backoff(&addr) {
             Ok(b) => b,
-            // A vanished endpoint after at least one render means the run
-            // finished; before the first render it is a usage error.
+            // An endpoint still dark after the retry budget: past the first
+            // render that means the run finished; before it, a usage error.
             Err(e) if rendered => {
                 println!("cser top: {addr} went away ({e}) — run finished");
                 return Ok(());

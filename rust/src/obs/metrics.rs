@@ -21,13 +21,17 @@
 //! * [`DeltaTracker::snapshot`] turns the registry into a
 //!   [`MetricsSnapshot`] of *deltas* (counters/histogram) and *absolutes*
 //!   (gauges, carried with a per-rank sequence number);
-//! * snapshots travel rank → rank 0 as `Tag::Metrics` frames
+//! * snapshots travel rank → the leader as `Tag::Metrics` frames
 //!   ([`encode_snapshot`]/[`decode_snapshot`]: plain u64 words, so the
 //!   frame is self-describing and byte-exact);
-//! * rank 0 folds them into a [`FleetView`] — counter deltas add (order-
-//!   independent and associative over disjoint snapshot sets; see
+//! * the leader folds them into a [`FleetView`] — counter deltas add
+//!   (order-independent and associative over disjoint snapshot sets; see
 //!   [`FleetView::merge`]/[`FleetView::absorb`]), gauges resolve by
 //!   highest sequence number;
+//! * under `--failover` the whole view is replicated to the leader's
+//!   successor each boundary ([`encode_fleet`]/[`decode_fleet`] inside
+//!   the membership layer's control-state frame), so a handover resumes
+//!   the merged counters instead of restarting them from zero;
 //! * [`spawn_exposition_server`] serves the view over a std
 //!   `TcpListener` as Prometheus text (`GET /metrics`) and as a
 //!   `cser-metrics/v1` JSON document (anything else); `cser top` polls
@@ -803,6 +807,99 @@ impl FleetView {
     }
 }
 
+// --- control-state replication ----------------------------------------------
+
+/// Serialize a [`FleetView`] into the opaque byte blob that rides the
+/// membership layer's `Tag::ControlState` frame (DESIGN.md §10): the job
+/// label, the rank-slot count, a presence mask, and one
+/// [`encode_snapshot`]-format record per reporting rank.  The successor
+/// rebuilds the view with [`decode_fleet`] so run-wide counters never
+/// regress across a leader handover.
+pub fn encode_fleet(view: &FleetView) -> Vec<u8> {
+    let mut out = Vec::new();
+    let job = view.job.as_bytes();
+    out.extend_from_slice(&(job.len() as u64).to_le_bytes());
+    out.extend_from_slice(job);
+    out.extend_from_slice(&(view.ranks.len() as u64).to_le_bytes());
+    let mut mask = 0u64;
+    for (r, _) in view.ranks() {
+        debug_assert!(r < MAX_PEERS, "fleet views are capped at {MAX_PEERS} ranks");
+        mask |= 1u64 << r;
+    }
+    out.extend_from_slice(&mask.to_le_bytes());
+    for (r, v) in view.ranks() {
+        let snap = MetricsSnapshot {
+            rank: r as u32,
+            seq: v.seq,
+            uptime_ms: v.uptime_ms,
+            counters: v.counters,
+            gauges: v.gauges,
+            hist: v.hist.clone(),
+            peers: v.peers.clone(),
+        };
+        let m = encode_snapshot(&snap);
+        out.extend_from_slice(&(m.words.len() as u64).to_le_bytes());
+        for w in &m.words {
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+    }
+    out
+}
+
+fn take_u64(bytes: &[u8], i: &mut usize) -> Result<u64, String> {
+    let end = *i + 8;
+    let b = bytes.get(*i..end).ok_or_else(|| "fleet blob truncated".to_string())?;
+    *i = end;
+    Ok(u64::from_le_bytes(b.try_into().unwrap()))
+}
+
+/// Rebuild a [`FleetView`] from its [`encode_fleet`] blob — the successor's
+/// side of the handover.  Bit-exact: the decoded view compares equal to
+/// the one the dead leader encoded.
+pub fn decode_fleet(bytes: &[u8]) -> Result<FleetView, String> {
+    let mut i = 0usize;
+    let job_len = take_u64(bytes, &mut i)? as usize;
+    if job_len > bytes.len().saturating_sub(i) {
+        return Err(format!("fleet blob declares a {job_len}-byte job label"));
+    }
+    let job = std::str::from_utf8(&bytes[i..i + job_len])
+        .map_err(|_| "fleet job label is not UTF-8".to_string())?
+        .to_string();
+    i += job_len;
+    let n = take_u64(bytes, &mut i)? as usize;
+    if n > MAX_PEERS {
+        return Err(format!("fleet blob declares {n} rank slots (cap {MAX_PEERS})"));
+    }
+    let mask = take_u64(bytes, &mut i)?;
+    let mut view = FleetView { job, ranks: vec![None; n] };
+    for r in 0..MAX_PEERS as u32 {
+        if (mask >> r) & 1 == 0 {
+            continue;
+        }
+        let words = take_u64(bytes, &mut i)? as usize;
+        if words > (bytes.len() - i) / 8 {
+            return Err(format!("fleet blob rank {r} record overruns the blob"));
+        }
+        let mut w = Vec::with_capacity(words);
+        for _ in 0..words {
+            w.push(take_u64(bytes, &mut i)?);
+        }
+        let m = WireMsg { words: w, bit_len: words as u64 * 64 };
+        let snap = decode_snapshot(&m)?;
+        if snap.rank != r {
+            return Err(format!("fleet blob rank {r} record names rank {}", snap.rank));
+        }
+        // Merging into an empty slot reconstructs the rank view exactly:
+        // counters add from zero, gauges are taken (seq >= 0), min/max
+        // fold against the empty sentinels.
+        view.merge(&snap);
+    }
+    if i != bytes.len() {
+        return Err(format!("fleet blob has {} trailing bytes", bytes.len() - i));
+    }
+    Ok(view)
+}
+
 /// Escape a Prometheus label value: backslash, double quote, newline.
 pub fn escape_label(s: &str) -> String {
     let mut out = String::with_capacity(s.len());
@@ -997,6 +1094,29 @@ mod tests {
             bad.words.pop();
             bad.bit_len -= 64;
             prop_assert!(decode_snapshot(&bad).is_err(), "truncated frame must be rejected");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fleet_blob_roundtrip_survives_a_handover() {
+        forall(80, 0xF7EE7, |g| {
+            let n_ranks = g.usize_in(1, 5);
+            let mut view = FleetView::new("handover(h=8)", n_ranks);
+            for r in 0..n_ranks {
+                if g.usize_in(0, 3) == 0 {
+                    continue; // some ranks never reported
+                }
+                for seq in 1..=g.usize_in(1, 3) as u64 {
+                    view.merge(&gen_snapshot(g, r as u32, seq));
+                }
+            }
+            let blob = encode_fleet(&view);
+            let back = decode_fleet(&blob)?;
+            prop_assert!(back == view, "a successor must rebuild the exact view");
+            let mut bad = blob.clone();
+            bad.pop();
+            prop_assert!(decode_fleet(&bad).is_err(), "truncated blob must be rejected");
             Ok(())
         });
     }

@@ -28,9 +28,12 @@
 //! inner transport; the default `broadcast` loop is inherited on purpose
 //! so per-destination drop decisions apply to fan-outs too.
 //!
-//! The chaos CLI forbids `drop:`/`flap:` on rank 0 — rank 0 is the
-//! control plane (epoch frames, aggregate broadcasts), and workers wait
-//! on it without a deadline by design.
+//! Without `--failover` the chaos CLI forbids `drop:`/`flap:`/`kill:`
+//! on rank 0 — rank 0 is the control plane (epoch frames, aggregate
+//! broadcasts), and workers wait on it without a deadline by design.
+//! With `--failover`, rank-0 faults are unlocked: the membership layer
+//! absorbs the leader's death like any other and hands leadership to a
+//! deterministic successor (DESIGN.md §10).
 
 use super::peer::{PeerTransport, Tag, TransportError};
 use super::wire::WireMsg;
@@ -173,6 +176,10 @@ impl<T: PeerTransport> PeerTransport for FaultTransport<T> {
     fn on_ring_stall(&mut self) {
         self.inner.on_ring_stall();
     }
+
+    fn leader(&self) -> usize {
+        self.inner.leader()
+    }
 }
 
 #[cfg(test)]
@@ -227,5 +234,6 @@ mod tests {
         assert_eq!(f.live_count(), 3);
         assert!(f.is_live(2));
         assert!(f.round_timeout().is_none());
+        assert_eq!(f.leader(), 0, "leadership forwards through the fault layer");
     }
 }

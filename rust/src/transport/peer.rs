@@ -20,11 +20,14 @@
 //!   Chunk sums accumulate in ring order ⇒ results match the in-process
 //!   reference up to f32 reduction-order error (documented tolerance).
 //! * **Parameter server** — per-worker supports and dense quantizers:
-//!   every peer uploads its encoded message to rank 0, which decodes in
-//!   **worker order** (bit-identical to the in-process accumulation),
+//!   every peer uploads its encoded message to the leader (rank 0 on a
+//!   fixed fleet, [`PeerTransport::leader`] under failover), which decodes
+//!   in **worker order** (bit-identical to the in-process accumulation),
 //!   broadcasts the union/dense aggregate plus an accounting frame carrying
 //!   the fleet-wide `upload_bits_per_worker`, so every rank reports the
-//!   same accounting the in-process backend would.
+//!   same accounting the in-process backend would.  An absorbed leader
+//!   death re-roots the round on the deterministic successor and redoes
+//!   the exchange (DESIGN.md §10).
 //!
 //! [`vote`] and [`agree`] are the control-plane collectives: the loss-mean
 //! divergence verdict that used to piggyback on the resident rendezvous,
@@ -123,11 +126,16 @@ pub enum Tag {
     /// Membership view update at a round boundary: epoch id, live mask,
     /// joiner mask (`membership::epoch_boundary`).
     Epoch = 8,
-    /// Telemetry delta snapshot shipped to rank 0 every K rounds
+    /// Telemetry delta snapshot shipped to the leader every K rounds
     /// (`obs::metrics::encode_snapshot`).  Control-plane only — a late or
     /// lost metrics frame never stalls the data plane (stale frames are
     /// discarded by the per-link round check).
     Metrics = 9,
+    /// Control-state replication frame: the leader's generation-stamped
+    /// epoch/admission/censoring state, shipped to the deterministic
+    /// successor at every epoch boundary so a leader death hands over
+    /// without regressing run-wide state (`membership::ControlState`).
+    ControlState = 10,
 }
 
 impl Tag {
@@ -144,6 +152,7 @@ impl Tag {
             7 => Flag,
             8 => Epoch,
             9 => Metrics,
+            10 => ControlState,
             _ => return None,
         })
     }
@@ -254,6 +263,29 @@ pub trait PeerTransport: Send {
     /// deadline each; fixed fleets ignore it — for them the stall already
     /// surfaced as an error.
     fn on_ring_stall(&mut self) {}
+
+    /// The rank every rooted collective (parameter server, dense mean,
+    /// vote, agreement) treats as its root this round.  Fixed fleets pin
+    /// rank 0 forever; `membership::Elastic` under `--failover` reports
+    /// the lowest live rank, so after a leader death is absorbed every
+    /// survivor re-roots on the identical deterministic successor.
+    fn leader(&self) -> usize {
+        0
+    }
+}
+
+/// Did `e` take down the leader this collective was rooted on, and does the
+/// transport absorb that death?  When true the caller redoes the whole
+/// attempt: `t.leader()` has already moved to the deterministic successor,
+/// and every survivor observes the same dead root at the same round, so
+/// they all redo together (the leader-stall analogue of the ring stall).
+/// Fixed-fleet transports return false from `on_peer_down`, keeping the
+/// historical fail-stop.
+fn leader_loss_absorbed(t: &mut dyn PeerTransport, e: &TransportError, ldr: usize) -> bool {
+    match e.downed_peer() {
+        Some(r) if r == ldr => t.on_peer_down(r),
+        _ => false,
+    }
 }
 
 /// Rank-0 gather receive under partial participation: `Ok(None)` means
@@ -601,11 +633,19 @@ pub(crate) fn ps_prepare(
 }
 
 /// The exchange phase of the parameter-server path: upload → worker-order
-/// accumulate at rank 0 → accounting + aggregate broadcast.  `own` must be
-/// this worker's decoded `C(v)` (from [`ps_prepare`]); `agg` receives the
-/// decoded union/dense aggregate.  Returns (fleet accounted bits per
-/// worker, up bits, down bits).  Server staging buffers live in `scratch`
-/// (`vb`/`vc`/`mask`).
+/// accumulate at the leader → accounting + aggregate broadcast.  `own`
+/// must be this worker's decoded `C(v)` (from [`ps_prepare`]); `agg`
+/// receives the decoded union/dense aggregate.  Returns (fleet accounted
+/// bits per worker, up bits, down bits).  Server staging buffers live in
+/// `scratch` (`vb`/`vc`/`mask`).
+///
+/// The round is rooted on [`PeerTransport::leader`].  When the leader dies
+/// mid-exchange and the transport absorbs the death (failover), the whole
+/// exchange is redone at the same round rooted on the successor: the
+/// compression phase already ran, so the identical `msg`/`own` re-enter,
+/// and the erstwhile client that finds itself the new leader serves the
+/// redo.  Frames sent to the dead leader die with its sockets, so no stale
+/// frame survives onto a live link.
 pub(crate) fn ps_rounds(
     t: &mut dyn PeerTransport,
     c: &dyn Compressor,
@@ -615,13 +655,33 @@ pub(crate) fn ps_rounds(
     agg: &mut Vec<f32>,
     scratch: &mut Scratch,
 ) -> Result<(u64, u64, u64), TransportError> {
+    loop {
+        let ldr = t.leader();
+        match ps_rounds_at(t, c, round, &msg, own, agg, scratch, ldr) {
+            Err(e) if leader_loss_absorbed(t, &e, ldr) => continue,
+            r => return r,
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn ps_rounds_at(
+    t: &mut dyn PeerTransport,
+    c: &dyn Compressor,
+    round: u64,
+    msg: &WireMsg,
+    own: &[f32],
+    agg: &mut Vec<f32>,
+    scratch: &mut Scratch,
+    ldr: usize,
+) -> Result<(u64, u64, u64), TransportError> {
     let n = t.n();
     let d = own.len();
     let up = msg.bit_len;
     agg.clear();
     agg.resize(d, 0.0);
-    if t.rank() == 0 {
-        // ---- server (rank 0, in its own step) ----
+    if t.rank() == ldr {
+        // ---- server (the leader, in its own step) ----
         // All three O(d) server buffers come from the scratch (returned at
         // the end of the branch; error exits abort the run, so losing the
         // capacity there is moot).
@@ -641,11 +701,16 @@ pub(crate) fn ps_rounds(
         // historical 1/n arithmetic bit-for-bit.
         let live = t.live_count();
         let inv = 1.0 / live as f32;
-        let mut total_up = up;
-        // Accumulate in worker order — the same order as the in-process
-        // backend, so the mean is bit-identical to `collective::exchange_mean`.
-        accumulate(own, inv, &mut mean, &mut mask);
-        for j in 1..n {
+        let mut total_up = 0u64;
+        // Accumulate in worker (rank) order — the same order as the
+        // in-process backend, so the mean is bit-identical to
+        // `collective::exchange_mean` whichever rank serves.
+        for j in 0..n {
+            if j == ldr {
+                total_up += up;
+                accumulate(own, inv, &mut mean, &mut mask);
+                continue;
+            }
             let Some(m) = recv_or_censor(t, j, round, Tag::Upload)? else {
                 continue;
             };
@@ -682,13 +747,13 @@ pub(crate) fn ps_rounds(
         scratch.mask = mask;
         Ok((acct, up, down))
     } else {
-        t.send(0, round, Tag::Upload, msg)?;
+        t.send(ldr, round, Tag::Upload, msg.clone())?;
         // Deadline-less `recv_deadline` rather than `recv`: same blocking
         // semantics, but it drains stale frames — after a ring aborts into
         // this path, leftover same-round Chunk frames may sit ahead of the
-        // control broadcasts on the rank-0 link.
+        // control broadcasts on the leader link.
         let info = t
-            .recv_deadline(0, round, Tag::AggInfo, None)?
+            .recv_deadline(ldr, round, Tag::AggInfo, None)?
             .ok_or_else(|| TransportError::failed("accounting frame missed with no deadline"))?;
         if info.bit_len != 64 {
             return Err(TransportError::failed(format!(
@@ -698,7 +763,7 @@ pub(crate) fn ps_rounds(
         }
         let acct = info.reader().read(64);
         let a = t
-            .recv_deadline(0, round, Tag::Aggregate, None)?
+            .recv_deadline(ldr, round, Tag::Aggregate, None)?
             .ok_or_else(|| TransportError::failed("aggregate frame missed with no deadline"))?;
         let down = a.bit_len;
         if c.is_dense() {
@@ -867,11 +932,14 @@ fn ps(
     })
 }
 
-/// Dense gather → `mean_rows` in worker order at rank 0 → broadcast.  On
-/// return every peer's `v` holds the identical mean, bit-identical to
+/// Dense gather → `mean_rows` in worker order at the leader → broadcast.
+/// On return every peer's `v` holds the identical mean, bit-identical to
 /// `util::math::mean_rows` over the per-worker vectors — this is SGD's
 /// gradient average and the cross-process x̄ evaluation.  Uncharged: callers
-/// account it themselves where it represents paid traffic.
+/// account it themselves where it represents paid traffic.  A mid-gather
+/// leader death absorbed by the transport redoes the round on the
+/// successor (`v` is untouched until the final decode, so the redo
+/// re-encodes the identical input).
 pub fn mean_dense(
     t: &mut dyn PeerTransport,
     v: &mut [f32],
@@ -882,43 +950,71 @@ pub fn mean_dense(
         return Ok(());
     }
     let _s = obs::Span::enter(Phase::BarrierWait);
+    loop {
+        let ldr = t.leader();
+        match mean_dense_at(t, v, round, ldr) {
+            Err(e) if leader_loss_absorbed(t, &e, ldr) => continue,
+            r => return r,
+        }
+    }
+}
+
+fn mean_dense_at(
+    t: &mut dyn PeerTransport,
+    v: &mut [f32],
+    round: u64,
+    ldr: usize,
+) -> Result<(), TransportError> {
+    let n = t.n();
     let d = v.len();
-    if t.rank() == 0 {
+    if t.rank() == ldr {
         // Partial participation: the mean runs over the responders only
-        // (`mean_rows` divides by however many rows arrive).
-        let mut others: Vec<Vec<f32>> = Vec::with_capacity(n - 1);
-        for j in 1..n {
+        // (`mean_rows` divides by however many rows arrive), in rank order
+        // with the leader's own row in its rank slot.
+        let mut rows: Vec<Option<Vec<f32>>> = Vec::with_capacity(n - 1);
+        for j in 0..n {
+            if j == ldr {
+                continue;
+            }
             let Some(m) = recv_or_censor(t, j, round, Tag::Dense)? else {
+                rows.push(None);
                 continue;
             };
             let mut x = vec![0.0f32; d];
             wire::decode_f32s(&m, &mut x)?;
-            others.push(x);
+            rows.push(Some(x));
         }
         let mut out = vec![0.0f32; d];
         {
             let mut refs: Vec<&[f32]> = Vec::with_capacity(n);
-            refs.push(&*v);
-            refs.extend(others.iter().map(|x| x.as_slice()));
+            let mut it = rows.iter();
+            for j in 0..n {
+                if j == ldr {
+                    refs.push(&*v);
+                } else if let Some(Some(x)) = it.next() {
+                    refs.push(x.as_slice());
+                }
+            }
             math::mean_rows(&refs, &mut out);
         }
         t.broadcast(round, Tag::Dense, wire::encode_f32s(&out))?;
         v.copy_from_slice(&out);
     } else {
-        t.send(0, round, Tag::Dense, wire::encode_f32s(v))?;
+        t.send(ldr, round, Tag::Dense, wire::encode_f32s(v))?;
         let m = t
-            .recv_deadline(0, round, Tag::Dense, None)?
+            .recv_deadline(ldr, round, Tag::Dense, None)?
             .ok_or_else(|| TransportError::failed("dense mean missed with no deadline"))?;
         wire::decode_f32s(&m, v)?;
     }
     Ok(())
 }
 
-/// Divergence vote: rank 0 folds every peer's loss into the mean
+/// Divergence vote: the leader folds every peer's loss into the mean
 /// `Σ_j loss_j / n` (worker order, the central trainer's expression) and
 /// broadcasts `(mean, stop)`; `stop` is true when the mean is non-finite or
 /// exceeds `stop_loss`.  Every peer leaves with the same verdict, so the
-/// fleet halts on the same step with no extra barrier.
+/// fleet halts on the same step with no extra barrier.  An absorbed leader
+/// death redoes the vote on the successor.
 pub fn vote(
     t: &mut dyn PeerTransport,
     loss: f64,
@@ -930,14 +1026,36 @@ pub fn vote(
         return Ok((loss, !loss.is_finite() || loss > stop_loss));
     }
     let _s = obs::Span::enter(Phase::BarrierWait);
-    if t.rank() == 0 {
+    loop {
+        let ldr = t.leader();
+        match vote_at(t, loss, stop_loss, round, ldr) {
+            Err(e) if leader_loss_absorbed(t, &e, ldr) => continue,
+            r => return r,
+        }
+    }
+}
+
+fn vote_at(
+    t: &mut dyn PeerTransport,
+    loss: f64,
+    stop_loss: f64,
+    round: u64,
+    ldr: usize,
+) -> Result<(f64, bool), TransportError> {
+    let n = t.n();
+    if t.rank() == ldr {
         // Divide by the live count term-by-term (the central trainer's
         // exact expression on a fully-live fleet); when a live rank still
         // misses the round, rescale so the mean is over the responders.
         let nl = t.live_count();
-        let mut mean = loss / nl as f64;
-        let mut got = 1usize;
-        for j in 1..n {
+        let mut mean = 0f64;
+        let mut got = 0usize;
+        for j in 0..n {
+            if j == ldr {
+                mean += loss / nl as f64;
+                got += 1;
+                continue;
+            }
             let Some(m) = recv_or_censor(t, j, round, Tag::Loss)? else {
                 continue;
             };
@@ -962,9 +1080,9 @@ pub fn vote(
     } else {
         let mut w = wire::BitWriter::new();
         w.write(loss.to_bits(), 64);
-        t.send(0, round, Tag::Loss, w.finish())?;
+        t.send(ldr, round, Tag::Loss, w.finish())?;
         let m = t
-            .recv_deadline(0, round, Tag::Verdict, None)?
+            .recv_deadline(ldr, round, Tag::Verdict, None)?
             .ok_or_else(|| TransportError::failed("verdict missed with no deadline"))?;
         if m.bit_len != 65 {
             return Err(TransportError::failed(format!(
@@ -992,10 +1110,29 @@ pub fn all_equal(
         return Ok(true);
     }
     let _s = obs::Span::enter(Phase::BarrierWait);
-    if t.rank() == 0 {
+    loop {
+        let ldr = t.leader();
+        match all_equal_at(t, value, round, ldr) {
+            Err(e) if leader_loss_absorbed(t, &e, ldr) => continue,
+            r => return r,
+        }
+    }
+}
+
+fn all_equal_at(
+    t: &mut dyn PeerTransport,
+    value: u64,
+    round: u64,
+    ldr: usize,
+) -> Result<bool, TransportError> {
+    let n = t.n();
+    if t.rank() == ldr {
         // Censored ranks abstain: agreement is over the responders.
         let mut same = true;
-        for j in 1..n {
+        for j in 0..n {
+            if j == ldr {
+                continue;
+            }
             let Some(m) = recv_or_censor(t, j, round, Tag::Flag)? else {
                 continue;
             };
@@ -1014,9 +1151,9 @@ pub fn all_equal(
     } else {
         let mut w = wire::BitWriter::new();
         w.write(value, 64);
-        t.send(0, round, Tag::Flag, w.finish())?;
+        t.send(ldr, round, Tag::Flag, w.finish())?;
         let m = t
-            .recv_deadline(0, round, Tag::Flag, None)?
+            .recv_deadline(ldr, round, Tag::Flag, None)?
             .ok_or_else(|| TransportError::failed("flag missed with no deadline"))?;
         if m.bit_len != 1 {
             return Err(TransportError::failed(format!(
@@ -1037,15 +1174,34 @@ pub fn agree(t: &mut dyn PeerTransport, flag: bool, round: u64) -> Result<bool, 
         return Ok(flag);
     }
     let _s = obs::Span::enter(Phase::BarrierWait);
+    loop {
+        let ldr = t.leader();
+        match agree_at(t, flag, round, ldr) {
+            Err(e) if leader_loss_absorbed(t, &e, ldr) => continue,
+            r => return r,
+        }
+    }
+}
+
+fn agree_at(
+    t: &mut dyn PeerTransport,
+    flag: bool,
+    round: u64,
+    ldr: usize,
+) -> Result<bool, TransportError> {
+    let n = t.n();
     let bit = |b: bool| {
         let mut w = wire::BitWriter::new();
         w.write(b as u64, 1);
         w.finish()
     };
-    if t.rank() == 0 {
+    if t.rank() == ldr {
         // Censored ranks abstain from the OR.
         let mut any = flag;
-        for j in 1..n {
+        for j in 0..n {
+            if j == ldr {
+                continue;
+            }
             let Some(m) = recv_or_censor(t, j, round, Tag::Flag)? else {
                 continue;
             };
@@ -1060,9 +1216,9 @@ pub fn agree(t: &mut dyn PeerTransport, flag: bool, round: u64) -> Result<bool, 
         t.broadcast(round, Tag::Flag, bit(any))?;
         Ok(any)
     } else {
-        t.send(0, round, Tag::Flag, bit(flag))?;
+        t.send(ldr, round, Tag::Flag, bit(flag))?;
         let m = t
-            .recv_deadline(0, round, Tag::Flag, None)?
+            .recv_deadline(ldr, round, Tag::Flag, None)?
             .ok_or_else(|| TransportError::failed("flag missed with no deadline"))?;
         if m.bit_len != 1 {
             return Err(TransportError::failed(format!(

@@ -31,13 +31,22 @@
 //!   re-dial the mesh ([`Session::accept_rejoin`]).
 //!
 //! The join protocol is three magic-tagged messages: the joiner registers
-//! with `CSER-JN2` (rank, n, fresh data address), rank 0 answers — at a
+//! with `CSER-JN2` (rank, n, fresh data address), the leader answers — at a
 //! round boundary of its choosing — with a `CSER-GR2` grant carrying the
-//! epoch id, resume step, live mask, checkpoint blob, and refreshed peer
-//! table, and the joiner then dials every live peer's data listener with a
-//! `CSER-HS2` handshake.  Survivors never dial a joiner: the join request
-//! advertises the joiner's *new* listener address, which rank 0 folds into
-//! its authoritative table for any later grants.
+//! leader generation, epoch id, resume step, live mask, checkpoint blob,
+//! and refreshed peer table, and the joiner then dials every live peer's
+//! data listener with a `CSER-HS2` handshake.  Survivors never dial a
+//! joiner: the join request advertises the joiner's *new* listener address,
+//! which the leader folds into its authoritative table for any later
+//! grants.
+//!
+//! Rank 0 hosts the rendezvous at bootstrap, but under `--failover` the
+//! listener is a *role*, not an address owner: when the leader dies, its
+//! deterministic successor re-binds the same advertised address
+//! ([`Session::assume_rendezvous`]) so joiners and `cser top` keep dialing
+//! the address they were launched with (DESIGN.md §10).  Grants are
+//! stamped with the granting leader's generation so a joiner resuming
+//! through a zombie ex-leader is fenced by the membership layer.
 
 use super::peer::TransportError;
 use std::io::{Read, Write};
@@ -76,19 +85,34 @@ pub fn free_loopback_addr() -> std::io::Result<String> {
 }
 
 /// Bind with retry: the rendezvous port comes from an advisory
-/// reservation, so a transient holder (e.g. the reserving socket's own
+/// reservation (or, on failover, from the dead leader's just-released
+/// socket), so a transient holder (e.g. the reserving socket's own
 /// release racing this bind, or TIME_WAIT debris) should be waited out
 /// rather than failing the whole job.
 fn bind_retry(addr: SocketAddr, deadline: Instant) -> Result<TcpListener, TransportError> {
+    let mut attempt = 0u32;
     loop {
         match TcpListener::bind(addr) {
             Ok(l) => return Ok(l),
             Err(e) if e.kind() == std::io::ErrorKind::AddrInUse && Instant::now() < deadline => {
-                std::thread::sleep(Duration::from_millis(50));
+                std::thread::sleep(backoff_delay(attempt));
+                attempt += 1;
             }
-            Err(e) => return Err(io_err(&format!("rank 0 binding rendezvous {addr}"), e)),
+            Err(e) => return Err(io_err(&format!("binding rendezvous {addr}"), e)),
         }
     }
+}
+
+/// Capped exponential backoff with deterministic jitter for control-plane
+/// dials and binds: `25ms * 2^min(attempt, 5)`, capped at 800ms, plus a
+/// jitter of up to a quarter of the base derived by hashing the attempt
+/// number.  No RNG on purpose — retry timing must not perturb seeded chaos
+/// schedules, and two ranks at different attempt counts decorrelate
+/// through the hash anyway.
+pub fn backoff_delay(attempt: u32) -> Duration {
+    let base = (25u64 << attempt.min(5)).min(800);
+    let hashed = (attempt as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 56;
+    Duration::from_millis(base + hashed % (base / 4).max(1))
 }
 
 fn resolve(addr: &str) -> Result<SocketAddr, TransportError> {
@@ -99,6 +123,7 @@ fn resolve(addr: &str) -> Result<SocketAddr, TransportError> {
 }
 
 fn connect_retry(addr: SocketAddr, what: &str, deadline: Instant) -> Result<TcpStream, TransportError> {
+    let mut attempt = 0u32;
     loop {
         match TcpStream::connect_timeout(&addr, Duration::from_millis(500)) {
             Ok(s) => return Ok(s),
@@ -109,7 +134,8 @@ fn connect_retry(addr: SocketAddr, what: &str, deadline: Instant) -> Result<TcpS
                         BOOTSTRAP_TIMEOUT
                     )));
                 }
-                std::thread::sleep(Duration::from_millis(50));
+                std::thread::sleep(backoff_delay(attempt));
+                attempt += 1;
             }
         }
     }
@@ -339,7 +365,9 @@ fn data_bind_ip(rank: usize, rv_addr: SocketAddr) -> IpAddr {
 pub struct Session {
     rank: usize,
     n: usize,
-    /// Rank 0 only: the original rendezvous listener, non-blocking.
+    /// The leader only: the rendezvous listener, non-blocking.  Rank 0
+    /// holds it from bootstrap; a successor acquires it through
+    /// [`Session::assume_rendezvous`] after a handover.
     rendezvous: Option<TcpListener>,
     /// This rank's data listener (absent for single-rank jobs).
     data: Option<TcpListener>,
@@ -359,6 +387,11 @@ pub struct JoinRequest {
 /// where the job is (epoch, step, live mask) and the checkpoint bytes to
 /// resume from bit-exactly.
 pub struct JoinGrant {
+    /// Leader generation of the granting leader (0 until the first
+    /// handover).  The joiner seeds its membership layer with this so a
+    /// grant issued by a zombie ex-leader is fenced at the first epoch
+    /// frame instead of silently forking the view.
+    pub generation: u64,
     pub epoch: u64,
     pub step: u64,
     /// Bit `r` set ⇔ rank `r` is live in the granted epoch (joiner
@@ -381,8 +414,8 @@ impl Session {
         self.n
     }
 
-    /// Rank 0: non-blocking check for a parked joiner.  `Ok(None)` when no
-    /// one is dialing (or this rank does not host the rendezvous).  The
+    /// The leader: non-blocking check for a parked joiner.  `Ok(None)` when
+    /// no one is dialing (or this rank does not host the rendezvous).  The
     /// request's advertised data address replaces the joiner's stale table
     /// entry immediately, so later grants hand out current addresses.
     pub fn poll_join(&mut self) -> Result<Option<JoinRequest>, TransportError> {
@@ -411,7 +444,7 @@ impl Session {
                 self.n
             )));
         }
-        if peer == 0 || peer >= self.n {
+        if peer == self.rank || peer >= self.n {
             return Err(TransportError::failed(format!("invalid join request from rank {peer}")));
         }
         let addr = read_addr(&mut s)?;
@@ -439,17 +472,19 @@ impl Session {
         }
     }
 
-    /// Rank 0, at a round boundary: admit a parked joiner by sending the
-    /// grant (epoch, resume step, live mask, joiner mask, checkpoint blob,
-    /// peer table).  The joiner dials the live mesh on receipt; every
-    /// survivor must pair this with an [`Session::accept_rejoin`] per
-    /// joiner.  When a batch of joiners is granted under one epoch frame,
-    /// every grant in the batch must carry the identical `joiners` mask —
-    /// it is what tells each joiner which live ranks to link peer-to-peer
-    /// instead of dialing.
+    /// The leader, at a round boundary: admit a parked joiner by sending
+    /// the grant (leader generation, epoch, resume step, live mask, joiner
+    /// mask, checkpoint blob, peer table).  The joiner dials the live mesh
+    /// on receipt; every survivor must pair this with an
+    /// [`Session::accept_rejoin`] per joiner.  When a batch of joiners is
+    /// granted under one epoch frame, every grant in the batch must carry
+    /// the identical `joiners` mask — it is what tells each joiner which
+    /// live ranks to link peer-to-peer instead of dialing.
+    #[allow(clippy::too_many_arguments)]
     pub fn grant_join(
         &mut self,
         req: JoinRequest,
+        generation: u64,
         epoch: u64,
         step: u64,
         live_mask: u64,
@@ -458,7 +493,7 @@ impl Session {
     ) -> Result<(), TransportError> {
         let mut s = req.stream;
         s.write_all(GRANT_MAGIC).map_err(|e| io_err("writing join grant", e))?;
-        for v in [epoch, step, live_mask, joiners, blob.len() as u64] {
+        for v in [generation, epoch, step, live_mask, joiners, blob.len() as u64] {
             s.write_all(&v.to_le_bytes()).map_err(|e| io_err("writing join grant", e))?;
         }
         s.write_all(blob).map_err(|e| io_err("writing join grant checkpoint", e))?;
@@ -488,30 +523,46 @@ impl Session {
         let mut rb = [0u8; 4];
         read_exact(&mut s, &mut rb, "reading rejoin rank")?;
         let peer = u32::from_le_bytes(rb) as usize;
-        if peer == 0 || peer >= self.n || peer == self.rank {
+        if peer >= self.n || peer == self.rank {
             return Err(TransportError::failed(format!("invalid rejoin handshake rank {peer}")));
         }
         s.set_read_timeout(None).map_err(|e| io_err("socket setup", e))?;
         s.set_nodelay(true).map_err(|e| io_err("socket setup", e))?;
         Ok((peer, s))
     }
+
+    /// Failover: the deterministic successor takes over the rendezvous
+    /// *role* by re-binding the job's advertised address, freed by the
+    /// dead leader's process exit.  Retries `AddrInUse` with backoff to
+    /// ride out the kernel releasing the old leader's socket.  After this
+    /// returns, [`Session::poll_join`] answers on this rank and joiners /
+    /// `cser top` keep dialing the address they were launched with.
+    pub fn assume_rendezvous(&mut self, addr: &str) -> Result<(), TransportError> {
+        let rv_addr = resolve(addr)?;
+        let l = bind_retry(rv_addr, Instant::now() + BOOTSTRAP_TIMEOUT)?;
+        l.set_nonblocking(true).map_err(|e| io_err("listener setup", e))?;
+        self.rendezvous = Some(l);
+        Ok(())
+    }
 }
 
 /// An evicted (or restarted) rank dials back into a running job: register
-/// at the rendezvous with `CSER-JN2`, wait for rank 0's grant — which only
-/// arrives at a round boundary, so this blocks up to the bootstrap
+/// at the rendezvous with `CSER-JN2`, wait for the leader's grant — which
+/// only arrives at a round boundary, so this blocks up to the bootstrap
 /// deadline — then re-dial every live peer.  Returns the per-peer streams
 /// (indexed by rank, `None` for self and non-live ranks), the grant to
-/// resume from, and this rank's fresh [`Session`].
+/// resume from, and this rank's fresh [`Session`].  Rank 0 itself may
+/// rejoin after a failover handover: the rendezvous address it dials is
+/// then hosted by its successor, and it comes back as an ordinary worker
+/// (leadership returns to it at the next boundary by the lowest-live-rank
+/// rule).
 pub fn rejoin(
     rendezvous: &str,
     rank: usize,
     n: usize,
 ) -> Result<(Vec<Option<TcpStream>>, JoinGrant, Session), TransportError> {
-    if n == 0 || rank == 0 || rank >= n {
-        return Err(TransportError::failed(format!(
-            "rank {rank} cannot rejoin a {n}-worker job (rank 0 hosts the rendezvous and is not evictable)"
-        )));
+    if n == 0 || rank >= n {
+        return Err(TransportError::failed(format!("rank {rank} cannot rejoin a {n}-worker job")));
     }
     let rv_addr = resolve(rendezvous)?;
     let deadline = Instant::now() + BOOTSTRAP_TIMEOUT;
@@ -537,6 +588,7 @@ pub fn rejoin(
     if &magic != GRANT_MAGIC {
         return Err(TransportError::failed("rendezvous answered the join with a non-grant"));
     }
+    let generation = read_u64(&mut s, "reading grant generation")?;
     let epoch = read_u64(&mut s, "reading grant epoch")?;
     let step = read_u64(&mut s, "reading grant step")?;
     let live_mask = read_u64(&mut s, "reading grant live mask")?;
@@ -606,7 +658,7 @@ pub fn rejoin(
         expect &= !(1u64 << peer);
         links[peer] = Some(p);
     }
-    let grant = JoinGrant { epoch, step, live_mask, joiners, blob };
+    let grant = JoinGrant { generation, epoch, step, live_mask, joiners, blob };
     let session = Session { rank, n, rendezvous: None, data: Some(data), table };
     Ok((links, grant, session))
 }
@@ -664,7 +716,7 @@ mod tests {
                     }
                 };
                 assert_eq!(req.rank, 2);
-                sess.grant_join(req, 7, 42, 0b111, 0b100, b"ckpt").unwrap();
+                sess.grant_join(req, 2, 7, 42, 0b111, 0b100, b"ckpt").unwrap();
                 let (peer, mut s) = sess.accept_rejoin().unwrap();
                 assert_eq!(peer, 2);
                 let mut b = [0u8; 4];
@@ -684,6 +736,7 @@ mod tests {
                 drop(links);
                 drop(sess); // rank 2 "dies": its listeners close
                 let (mut links, grant, _sess) = rejoin(&a2, 2, n).unwrap();
+                assert_eq!(grant.generation, 2);
                 assert_eq!(grant.epoch, 7);
                 assert_eq!(grant.step, 42);
                 assert_eq!(grant.live_mask, 0b111);
@@ -691,6 +744,69 @@ mod tests {
                 assert_eq!(grant.blob, b"ckpt");
                 assert!(links[0].is_some() && links[1].is_some() && links[2].is_none());
                 links[0].as_mut().unwrap().write_all(b"ping").unwrap();
+            });
+            r0.join().unwrap();
+            r1.join().unwrap();
+            r2.join().unwrap();
+        });
+    }
+
+    #[test]
+    fn backoff_is_deterministic_capped_and_exponential() {
+        for a in 0..12u32 {
+            let d = backoff_delay(a).as_millis() as u64;
+            let base = (25u64 << a.min(5)).min(800);
+            assert!(d >= base, "attempt {a}: {d}ms under base {base}ms");
+            assert!(d < base + base / 4 + 1, "attempt {a}: {d}ms jitters past base/4");
+            assert_eq!(backoff_delay(a), backoff_delay(a), "retry timing must be deterministic");
+        }
+        assert_eq!((backoff_delay(63).as_millis() as u64) / 100, 8, "capped at 800ms + jitter");
+    }
+
+    #[test]
+    fn a_successor_assumes_the_rendezvous_and_grants_joins() {
+        let addr = free_loopback_addr().unwrap();
+        let n = 3;
+        let (dead_tx, dead_rx) = std::sync::mpsc::channel::<()>();
+        let (ready_tx, ready_rx) = std::sync::mpsc::channel::<()>();
+        std::thread::scope(|scope| {
+            let a0 = addr.clone();
+            let r0 = scope.spawn(move || {
+                let (links, sess) = establish_v2(&a0, 0, n).unwrap();
+                drop(links);
+                drop(sess); // the leader dies: its rendezvous listener closes
+                dead_tx.send(()).unwrap();
+            });
+            let a1 = addr.clone();
+            let r1 = scope.spawn(move || {
+                let (links, mut sess) = establish_v2(&a1, 1, n).unwrap();
+                drop(links);
+                dead_rx.recv().unwrap();
+                // The successor re-binds the job's advertised address and
+                // answers joins from there, stamped with its generation.
+                sess.assume_rendezvous(&a1).unwrap();
+                ready_tx.send(()).unwrap();
+                let req = loop {
+                    match sess.poll_join().unwrap() {
+                        Some(r) => break r,
+                        None => std::thread::sleep(Duration::from_millis(10)),
+                    }
+                };
+                assert_eq!(req.rank, 2);
+                sess.grant_join(req, 1, 4, 17, 0b110, 0b100, b"cs").unwrap();
+                let (peer, _s) = sess.accept_rejoin().unwrap();
+                assert_eq!(peer, 2);
+            });
+            let a2 = addr.clone();
+            let r2 = scope.spawn(move || {
+                let (links, sess) = establish_v2(&a2, 2, n).unwrap();
+                drop(links);
+                drop(sess);
+                ready_rx.recv().unwrap();
+                let (links, grant, _sess) = rejoin(&a2, 2, n).unwrap();
+                assert_eq!(grant.generation, 1, "grants carry the successor's generation");
+                assert_eq!(grant.live_mask, 0b110, "the dead leader is not in the view");
+                assert!(links[0].is_none() && links[1].is_some());
             });
             r0.join().unwrap();
             r1.join().unwrap();
@@ -720,7 +836,7 @@ mod tests {
                 reqs.sort_by_key(|r| r.rank);
                 assert_eq!(reqs.iter().map(|r| r.rank).collect::<Vec<_>>(), vec![2, 3]);
                 for req in reqs {
-                    sess.grant_join(req, 9, 64, 0b1111, 0b1100, b"ck2").unwrap();
+                    sess.grant_join(req, 0, 9, 64, 0b1111, 0b1100, b"ck2").unwrap();
                     let (peer, _s) = sess.accept_rejoin().unwrap();
                     assert!(peer == 2 || peer == 3);
                 }

@@ -33,6 +33,12 @@
 //! * **Batch admission**: two joiners parked at the rendezvous are granted
 //!   under a *single* epoch frame, and both reproduce the survivors'
 //!   curves on the overlap.
+//! * **Leader failover** (DESIGN.md §10): under `--failover`, killing rank
+//!   0 mid-run — on the PS route and on the ring route — hands every
+//!   leader role to rank 1 at the next boundary.  The survivors stay
+//!   mutually bit-identical, record exactly one `LeaderChange`
+//!   (`0 → 1`, generation 1) each, and their per-link wire counters
+//!   balance exactly across the handover.
 
 use cser::compressor::{Grbs, RandK, TopK};
 use cser::coordinator::checkpoint::Checkpoint;
@@ -40,6 +46,7 @@ use cser::coordinator::sim_trainer::{train_classifier, ChaosSpec, TrainCfg};
 use cser::coordinator::{ElasticSummary, EpochEvent, RunRecord};
 use cser::data::ClassDataset;
 use cser::engine::{Cadence, CommPlan, ErrorResetEngine};
+use cser::membership::LeaderChange;
 use cser::models::{GradModel, Mlp};
 use cser::optimizer::DistOptimizer;
 use cser::transport::rendezvous::free_loopback_addr;
@@ -534,6 +541,113 @@ fn bucketed_elastic_pipeline_matches_the_central_bucketed_reference() {
             }
         }
     }
+}
+
+/// Shared assertions for the two leader-kill tests below: rank 0 died as
+/// planned, the survivors finished the schedule mutually bit-identical
+/// over the surviving view, every survivor recorded the same lone
+/// eviction and the same lone `LeaderChange` (`0 → 1`, generation 1), and
+/// the surviving links balance to the bit across the handover.
+fn assert_leader_handover(outcomes: &[Result<RunRecord, ()>], epochs: usize, what: &str) {
+    let n = outcomes.len();
+    assert!(outcomes[0].is_err(), "{what}: rank 0 was chaos-killed and must have panicked");
+    let recs: Vec<(usize, &RunRecord)> = outcomes
+        .iter()
+        .enumerate()
+        .skip(1)
+        .map(|(r, o)| {
+            let rec = o.as_ref().unwrap_or_else(|_| panic!("{what}: survivor rank {r} panicked"));
+            (r, rec)
+        })
+        .collect();
+
+    for &(r, rec) in &recs {
+        assert!(!rec.diverged, "{what}: survivor rank {r} diverged");
+        assert_eq!(rec.points.len(), epochs, "{what}: survivor rank {r} must finish all epochs");
+        let s = summary(rec);
+        assert_eq!(s.live_mask, 0b1110, "{what}: rank {r}: rank 0 must be out of the final view");
+        assert_eq!(s.final_epoch, 1, "{what}: rank {r}: exactly one view change");
+        assert_eq!((s.evictions, s.joins), (1, 0), "{what}: rank {r}");
+        assert_eq!(
+            s.events,
+            vec![EpochEvent { epoch: 1, step: 32, evicted: 0b0001, joined: 0 }],
+            "{what}: rank {r}: the leader's eviction must be the only membership event"
+        );
+        assert_eq!(
+            s.leader_changes,
+            vec![LeaderChange { step: 32, from: 0, to: 1, generation: 1 }],
+            "{what}: rank {r}: exactly one handover, to the lowest live non-zero rank"
+        );
+        assert_points_eq(rec, recs[0].1, "{what}: survivors must agree across the handover");
+    }
+    let acc = recs[0].1.points.last().unwrap().test_acc;
+    assert!(acc > 0.35, "{what}: survivors should keep converging (acc {acc})");
+
+    // Per-link ground truth among the survivors: the interrupted round's
+    // redo, the stale drains, and the post-handover star/ring all balance
+    // to the bit.  (Links touching dead rank 0 left no record to check.)
+    for &(a, ra) in &recs {
+        let sa = summary(ra);
+        assert_eq!(sa.links.len(), n, "{what}: rank {a}: one counter slot per physical rank");
+        for &(b, rb) in &recs {
+            if a == b {
+                continue;
+            }
+            let sb = summary(rb);
+            assert_eq!(
+                sa.links[b].payload_bits_sent, sb.links[a].payload_bits_received,
+                "{what}: link {a}->{b}: sent and received bits disagree"
+            );
+        }
+    }
+}
+
+#[test]
+fn leader_kill_hands_over_on_the_ps_route() {
+    // Rank 0 — the rendezvous host, epoch broadcaster, and PS aggregation
+    // root — dies at gradient call 20, mid-epoch-1.  The survivors' star
+    // rounds error with `PeerDown(0)`, `--failover` absorbs the death and
+    // redoes the interrupted round with rank 1 as PS server, the step-32
+    // boundary evicts rank 0 and bumps the leader generation, and rank 1
+    // carries the fleet to the end of the schedule.
+    let n = 4;
+    let epochs = 3;
+    let mut cfg = quick_cfg(epochs);
+    cfg.failover = true;
+    cfg.chaos = Some(ChaosSpec::parse_with("kill:0@20", true).expect("chaos spec"));
+    let mk: Box<MkOpt> =
+        Box::new(|init, n| Box::new(ErrorResetEngine::new(init, n, 0.9, ps_plan())));
+
+    let outcomes = run_elastic(&mk, n, &cfg);
+    assert_leader_handover(&outcomes, epochs, "ps route");
+}
+
+#[test]
+fn leader_kill_hands_over_on_the_ring_route() {
+    // The same death under ring-routed GRBS: the cut cycle stalls the
+    // survivors mid-round, the PS fallback at the same round discovers the
+    // leader is the casualty and retries rooted at rank 1, the epoch runs
+    // out degraded, and the step-32 boundary evicts rank 0, bumps the
+    // generation, and re-forms a three-rank ring under the new leader.
+    let n = 4;
+    let epochs = 3;
+    let mut cfg = quick_cfg(epochs);
+    cfg.round_deadline_ms = 300;
+    cfg.failover = true;
+    cfg.chaos = Some(ChaosSpec::parse_with("kill:0@20", true).expect("chaos spec"));
+    let mk: Box<MkOpt> =
+        Box::new(|init, n| Box::new(ErrorResetEngine::new(init, n, 0.9, ring_plan())));
+
+    let outcomes = run_elastic(&mk, n, &cfg);
+    assert_leader_handover(&outcomes, epochs, "ring route");
+
+    // The re-formed ring actually ran under the new leader: in a star
+    // rooted at rank 1, ranks 2 and 3 never speak to each other.
+    let recs: Vec<&RunRecord> = outcomes[1..].iter().map(|o| o.as_ref().unwrap()).collect();
+    assert!(
+        summary(recs[1]).links[3].payload_bits_sent > 0,
+        "ring neighbors 2 and 3 must have exchanged chunks after the handover"
+    );
 }
 
 #[test]
